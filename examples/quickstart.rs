@@ -1,0 +1,48 @@
+//! Quickstart: the smallest end-to-end use of the DeltaKWS public API.
+//!
+//! Loads (or trains, on first run) the ΔGRU weights, synthesises one "yes"
+//! utterance, runs it through the full chip twin — fixed-point IIR FEx →
+//! ΔRNN accelerator with near-V_TH SRAM — and prints the decision plus the
+//! chip's headline telemetry (power, energy/decision, latency, sparsity).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once, for training on first use)
+
+use deltakws::chip::KwsChip;
+use deltakws::config::RunConfig;
+use deltakws::util::prng::Pcg;
+use deltakws::{audio, exp, CLASS_LABELS};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig::default();
+
+    // 1. weights: load results/weights.bin or train via PJRT on first run
+    let params = exp::ensure_weights(&cfg)?;
+
+    // 2. one synthetic "yes" utterance, quantised to the chip's 12-bit ADC
+    let mut rng = Pcg::new(2024);
+    let wave = audio::synth_utterance(11, &mut rng); // class 11 == "yes"
+    let audio12 = audio::quantize_12b(&wave);
+
+    // 3. the chip twin at the paper's design point (Δ_TH = 0.2, 10 channels)
+    let mut chip = KwsChip::new(params, cfg.chip_config());
+    let decision = chip.process_utterance(&audio12);
+
+    println!("predicted keyword : {}", CLASS_LABELS[decision.class]);
+    println!("frames processed  : {}", decision.frame_cycles.len());
+
+    // 4. chip telemetry (the paper's Table II metrics)
+    let report = chip.report();
+    println!("power             : {:.2} µW (paper: 5.22 µW)", report.power.total_uw());
+    println!(
+        "energy/decision   : {:.1} nJ (paper: 36.11 nJ)",
+        report.energy_per_decision_nj
+    );
+    println!("computing latency : {:.2} ms (paper: 6.9 ms)", report.latency_ms);
+    println!(
+        "temporal sparsity : {:.0}% combined ({:.0}% input deltas)",
+        report.sparsity * 100.0,
+        report.input_sparsity * 100.0
+    );
+    Ok(())
+}

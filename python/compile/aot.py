@@ -1,0 +1,175 @@
+"""AOT compile path: lower the L2/L1 JAX+Pallas functions to HLO *text*.
+
+Run once by `make artifacts` (from python/: `python -m compile.aot --out-dir
+../artifacts`). The Rust runtime loads these with
+`HloModuleProto::from_text_file` and executes them on the PJRT CPU client.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Emitted artifacts (+ manifest.json recording shapes & argument ABIs):
+
+  fex_coeffs.json     FEx filterbank design (Rust cross-checks its own design)
+  kws_fwd.hlo.txt     single-utterance forward  (Pallas kernel path)
+  kws_fwd_b16.hlo.txt batch-16 forward          (oracle path, vmapped)
+  train_step.hlo.txt  one Adam step, batch 16   (delta-aware, STE)
+  fex_ref.hlo.txt     float IIR FEx reference   (audio -> features)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import fexlib, model
+from .kernels import ref
+
+BATCH = 16
+FRAMES = fexlib.FRAMES_PER_UTT
+AUDIO_SAMPLES = FRAMES * fexlib.FRAME_SAMPLES  # 7936
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    `print_large_constants=True` is load-bearing: the default printer elides
+    array constants as `{...}`, which the consuming parser (xla_extension
+    0.5.1) silently reads as zeros — any model with baked-in weight/coeff
+    constants would compute garbage. `test_aot.py` guards this.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs():
+    return [_spec(model.PARAM_SHAPES[k]) for k in model.PARAM_ORDER]
+
+
+def lower_kws_fwd(use_kernel: bool):
+    fn = functools.partial(model.kws_fwd_flat, use_kernel=use_kernel)
+    args = (*param_specs(), _spec((FRAMES, model.C)), _spec(()))
+    return jax.jit(fn).lower(*args)
+
+
+def lower_kws_fwd_batch(batch: int, use_kernel: bool):
+    fn = functools.partial(model.kws_fwd_batch_flat, use_kernel=use_kernel)
+    args = (*param_specs(), _spec((batch, FRAMES, model.C)), _spec(()))
+    return jax.jit(fn).lower(*args)
+
+
+def lower_train_step(batch: int, use_kernel: bool):
+    fn = functools.partial(model.train_step_flat, use_kernel=use_kernel)
+    args = (
+        *param_specs(),
+        *param_specs(),  # adam m
+        *param_specs(),  # adam v
+        _spec(()),  # step
+        _spec((batch, FRAMES, model.C)),
+        _spec((batch,), jnp.int32),
+        _spec(()),  # delta_th
+        _spec(()),  # lr
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def lower_fex_ref():
+    channels = fexlib.design_filterbank()
+    coeffs = np.array(
+        [[ch.sos[0].b0, ch.sos[0].b2, ch.sos[0].a1, ch.sos[0].a2, 0.0] for ch in channels],
+        dtype=np.float32,
+    )
+    env_k = 2.0 ** (-fexlib.ENV_SHIFT)
+
+    def fn(audio):
+        feats = model.fex_jax(audio, jnp.asarray(coeffs), env_k, FRAMES, fexlib.FRAME_SAMPLES)
+        # flatten: rank-1 outputs have a unique physical layout, so the Rust
+        # side can index [t*16 + c] regardless of XLA's layout choice for
+        # the rank-2 intermediate (observed: XLA picks {0,1} here)
+        return (feats.reshape(-1),)
+
+    return jax.jit(fn).lower(_spec((AUDIO_SAMPLES,)))
+
+
+def write(path: str, text: str) -> int:
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--no-kernel",
+        action="store_true",
+        help="lower everything through the jnp oracle instead of the Pallas kernel",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    out = lambda name: os.path.join(args.out_dir, name)
+
+    manifest: dict = {
+        "frames": FRAMES,
+        "channels": model.C,
+        "hidden": model.H,
+        "classes": model.NUM_CLASSES,
+        "batch": BATCH,
+        "audio_samples": AUDIO_SAMPLES,
+        "param_order": list(model.PARAM_ORDER),
+        "param_shapes": {k: list(v) for k, v in model.PARAM_SHAPES.items()},
+        "train_step_abi": {
+            "args": "5 params, 5 adam_m, 5 adam_v, step, feats[B,T,C], labels[B] s32, delta_th, lr",
+            "results": "5 params, 5 adam_m, 5 adam_v, step, loss",
+        },
+        "artifacts": {},
+    }
+
+    # FEx design (shared single source of truth with the Rust twin).
+    n = write(out("fex_coeffs.json"), fexlib.filterbank_json(fexlib.design_filterbank()))
+    print(f"fex_coeffs.json: {n} bytes")
+
+    jobs = [
+        # (filename, lower_fn, kernel_path_wanted)
+        ("kws_fwd.hlo.txt", lambda uk: lower_kws_fwd(uk), not args.no_kernel),
+        ("kws_fwd_b16.hlo.txt", lambda uk: lower_kws_fwd_batch(BATCH, uk), not args.no_kernel),
+        ("train_step.hlo.txt", lambda uk: lower_train_step(BATCH, uk), not args.no_kernel),
+        ("fex_ref.hlo.txt", lambda uk: lower_fex_ref(), False),
+    ]
+    for name, lower, want_kernel in jobs:
+        use_kernel = want_kernel
+        try:
+            lowered = lower(use_kernel)
+        except Exception as e:  # pragma: no cover — kernel path fallback
+            if not want_kernel:
+                raise
+            print(f"{name}: Pallas path failed to trace ({type(e).__name__}: {e}); "
+                  "falling back to oracle path")
+            use_kernel = False
+            lowered = lower(False)
+        n = write(out(name), to_hlo_text(lowered))
+        manifest["artifacts"][name] = {"bytes": n, "pallas_kernel": use_kernel}
+        print(f"{name}: {n} bytes (pallas={use_kernel})")
+
+    write(out("manifest.json"), json.dumps(manifest, indent=2))
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

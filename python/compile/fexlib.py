@@ -1,0 +1,217 @@
+"""Filter design + float IIR feature-extractor reference for DeltaKWS.
+
+This module is the single source of truth for the FEx *design*: the Mel-spaced
+RBJ band-pass biquad coefficients used by both the JAX float reference
+(`fex_ref.hlo.txt` artifact) and the Rust fixed-point FEx twin. `aot.py` dumps
+the design to ``artifacts/fex_coeffs.json``; the Rust side re-derives the same
+design independently and a cargo test cross-checks the two to ~1e-9.
+
+The paper's FEx is a serial 4th-order IIR band-pass filter bank (two cascaded
+second-order sections per channel) with Mel-scale centre frequencies, an
+envelope detector, log compression and channel-wise offset/scale. We realise
+the 4th-order BPF as a cascade of two *identical* RBJ constant-0dB-peak-gain
+band-pass biquads, which exhibits exactly the hardware-friendly coefficient
+structure the paper exploits (b1 = 0, b2 = -b0), letting half the multipliers
+become bit-shifts/negations.
+
+Frequency plan: the chip supports 16 channels; the paper's 10-channel design
+point covers 516 Hz..4.22 kHz. Our audio substrate is sub-sampled to 8 kHz
+(Nyquist 4 kHz), so we place 16 Mel-spaced centres on [100 Hz, 3.6 kHz] and
+the 10-channel design point keeps the top 10 (centres ~507 Hz..3.6 kHz) —
+same structure, clipped at Nyquist. Documented in DESIGN.md §1.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, asdict
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Frequency plan
+# ---------------------------------------------------------------------------
+
+SAMPLE_RATE = 8_000
+NUM_CHANNELS = 16
+#: index of the first channel in the paper's 10-channel design point
+#: (channel 4 of the 16-channel Mel plan sits at ~552 Hz; paper: 516 Hz)
+DESIGN_CHANNEL_OFFSET = 4
+DESIGN_CHANNELS = 10
+FMIN = 100.0
+FMAX = 3_600.0
+FRAME_SAMPLES = 128  # 16 ms @ 8 kHz
+FRAMES_PER_UTT = 62  # 1 s utterance -> 62 full frames
+
+#: envelope detector leak (1-pole leaky integrator), power of two for hardware
+ENV_SHIFT = 5  # k = 2^-5 = 1/32
+#: log compression input gain: feat = log2(1 + env * 2^LOG_GAIN_SHIFT) / LOG_NORM
+LOG_GAIN_SHIFT = 12
+LOG_NORM = 12.0
+
+
+def mel(f: float) -> float:
+    """Hz -> Mel (O'Shaughnessy)."""
+    return 2595.0 * math.log10(1.0 + f / 700.0)
+
+
+def imel(m: float) -> float:
+    """Mel -> Hz."""
+    return 700.0 * (10.0 ** (m / 2595.0) - 1.0)
+
+
+def mel_centers(n: int = NUM_CHANNELS, fmin: float = FMIN, fmax: float = FMAX) -> np.ndarray:
+    """`n` Mel-spaced centre frequencies on [fmin, fmax], inclusive."""
+    ms = np.linspace(mel(fmin), mel(fmax), n)
+    return np.array([imel(m) for m in ms])
+
+
+# ---------------------------------------------------------------------------
+# RBJ band-pass biquad design
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Biquad:
+    """Normalised biquad: y[n] = b0 x[n] + b1 x[n-1] + b2 x[n-2] - a1 y[n-1] - a2 y[n-2].
+
+    For the RBJ constant-peak-gain band-pass used here, ``b1 == 0`` and
+    ``b2 == -b0`` — the symmetry the chip exploits to drop multipliers.
+    """
+
+    b0: float
+    b1: float
+    b2: float
+    a1: float
+    a2: float
+
+    def as_arrays(self):
+        return np.array([self.b0, self.b1, self.b2]), np.array([1.0, self.a1, self.a2])
+
+
+def rbj_bandpass(f0: float, q: float, fs: float = SAMPLE_RATE) -> Biquad:
+    """RBJ audio-EQ-cookbook band-pass filter, constant 0 dB peak gain."""
+    w0 = 2.0 * math.pi * f0 / fs
+    alpha = math.sin(w0) / (2.0 * q)
+    a0 = 1.0 + alpha
+    return Biquad(
+        b0=alpha / a0,
+        b1=0.0,
+        b2=-alpha / a0,
+        a1=-2.0 * math.cos(w0) / a0,
+        a2=(1.0 - alpha) / a0,
+    )
+
+
+@dataclass
+class Channel:
+    """One FEx channel: 4th-order BPF as two identical cascaded biquads."""
+
+    index: int
+    f0: float
+    q: float
+    sos: list  # [Biquad, Biquad]
+
+
+def channel_qs(centers: np.ndarray) -> np.ndarray:
+    """Per-channel Q from Mel neighbour spacing: BW_c = (f_{c+1} - f_{c-1}) / 2."""
+    n = len(centers)
+    qs = np.empty(n)
+    for i in range(n):
+        lo = centers[i - 1] if i > 0 else centers[0] - (centers[1] - centers[0])
+        hi = centers[i + 1] if i < n - 1 else centers[-1] + (centers[-1] - centers[-2])
+        bw = (hi - lo) / 2.0
+        qs[i] = centers[i] / bw
+    return qs
+
+
+def design_filterbank(
+    n: int = NUM_CHANNELS, fmin: float = FMIN, fmax: float = FMAX, fs: float = SAMPLE_RATE
+) -> list:
+    """The canonical DeltaKWS filter bank: `n` channels of cascaded RBJ BPF pairs."""
+    centers = mel_centers(n, fmin, fmax)
+    qs = channel_qs(centers)
+    out = []
+    for i, (f0, q) in enumerate(zip(centers, qs)):
+        bq = rbj_bandpass(float(f0), float(q), fs)
+        out.append(Channel(index=i, f0=float(f0), q=float(q), sos=[bq, bq]))
+    return out
+
+
+def filterbank_json(channels: list) -> str:
+    """Serialise the design for the Rust cross-check (artifacts/fex_coeffs.json)."""
+    payload = {
+        "sample_rate": SAMPLE_RATE,
+        "num_channels": len(channels),
+        "design_channel_offset": DESIGN_CHANNEL_OFFSET,
+        "design_channels": DESIGN_CHANNELS,
+        "fmin": FMIN,
+        "fmax": FMAX,
+        "env_shift": ENV_SHIFT,
+        "log_gain_shift": LOG_GAIN_SHIFT,
+        "channels": [
+            {
+                "index": c.index,
+                "f0": c.f0,
+                "q": c.q,
+                "sos": [asdict(b) for b in c.sos],
+            }
+            for c in channels
+        ],
+    }
+    return json.dumps(payload, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Float reference FEx (numpy; the jax version lives in model.py for AOT)
+# ---------------------------------------------------------------------------
+
+
+def biquad_filter(x: np.ndarray, bq: Biquad) -> np.ndarray:
+    """Direct-form-I biquad over a 1-D signal (float64 reference)."""
+    y = np.zeros_like(x, dtype=np.float64)
+    x1 = x2 = y1 = y2 = 0.0
+    for i, xn in enumerate(x.astype(np.float64)):
+        yn = bq.b0 * xn + bq.b1 * x1 + bq.b2 * x2 - bq.a1 * y1 - bq.a2 * y2
+        x2, x1 = x1, xn
+        y2, y1 = y1, yn
+        y[i] = yn
+    return y
+
+
+def envelope(y: np.ndarray, shift: int = ENV_SHIFT) -> np.ndarray:
+    """1-pole leaky-integrator envelope of |y|: e += (|y| - e) * 2^-shift."""
+    k = 2.0 ** (-shift)
+    e = np.zeros_like(y)
+    acc = 0.0
+    ay = np.abs(y)
+    for i in range(len(y)):
+        acc += (ay[i] - acc) * k
+        e[i] = acc
+    return e
+
+
+def log_compress(env_val: np.ndarray) -> np.ndarray:
+    """feat = clip(log2(1 + env * 2^12) / 12, 0, 1) — matches the chip's
+    priority-encoder log2 up to LUT interpolation error."""
+    return np.clip(np.log2(1.0 + env_val * (1 << LOG_GAIN_SHIFT)) / LOG_NORM, 0.0, 1.0)
+
+
+def fex_reference(audio: np.ndarray, channels: list | None = None) -> np.ndarray:
+    """Full float FEx: audio [-1,1] (len >= 62*128) -> features [62, n_channels].
+
+    Mirrors the chip pipeline: per channel, 4th-order BPF (two cascaded
+    biquads) -> rectify + leaky envelope -> sample at frame ends -> log2
+    compression -> [0,1] features.
+    """
+    channels = channels if channels is not None else design_filterbank()
+    n_frames = min(FRAMES_PER_UTT, len(audio) // FRAME_SAMPLES)
+    feats = np.zeros((n_frames, len(channels)))
+    for c, ch in enumerate(channels):
+        y = biquad_filter(audio, ch.sos[0])
+        y = biquad_filter(y, ch.sos[1])
+        e = envelope(y)
+        idx = (np.arange(n_frames) + 1) * FRAME_SAMPLES - 1
+        feats[:, c] = log_compress(e[idx])
+    return feats

@@ -1,0 +1,136 @@
+"""L1 Pallas kernels for the DeltaKWS ΔGRU hot spot.
+
+The chip's per-frame hot loop is a pair of delta-gated matrix-vector products
+(the ΔEncoder broadcasts the non-zero delta lanes; each firing lane triggers
+one weight-SRAM row read and 3H MACs spread over 8 MAC lanes). The TPU
+analogue of "skip the SRAM read + MACs for a silent lane" is **block-granular
+HBM→VMEM traffic elision**: tile the weight matrix into row blocks, and skip
+a block's copy+MXU work entirely when every delta lane in the block is silent
+(`pl.when` on a block-any predicate). See DESIGN.md §5 Hardware-Adaptation.
+
+Kernels are authored for `interpret=True` (mandatory on the CPU PJRT plugin —
+real TPU lowering emits Mosaic custom-calls the CPU client cannot execute);
+the BlockSpec schedule is nonetheless written exactly as it would run on a
+TPU, and its VMEM footprint / MXU utilisation is estimated analytically in
+EXPERIMENTS.md §Perf.
+
+`delta_matvec` is wrapped in `jax.custom_vjp` so the *training* graph can use
+the kernel on the forward pass while the backward pass uses the plain-jnp
+transpose (Pallas has no automatic VJP) — the standard kernel/oracle pairing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block size along the delta (input) dimension. 8 matches the chip's
+# 8 MAC lanes; on a real TPU this would be 128 (one sublane tile) with the
+# lane dimension padded — block_d is a parameter so tests sweep it.
+DEFAULT_BLOCK_D = 8
+
+
+def _delta_matvec_kernel(d_ref, w_ref, o_ref):
+    """Grid: (D // block_d,). Accumulates o += d_blk @ w_blk, skipping silent
+    blocks. Grid iteration is sequential, so the read-modify-write of o_ref
+    across steps is safe (TPU 'arbitrary' dimension semantics)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = d_ref[...]  # [1, block_d]
+
+    # The temporal-sparsity payoff: a silent block is neither copied to VMEM
+    # for the MXU nor multiplied. Under interpret mode this is a lax.cond.
+    @pl.when(jnp.any(d != 0.0))
+    def _accumulate():
+        o_ref[...] += jnp.dot(d, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _delta_matvec_pallas(d: jax.Array, w: jax.Array, *, block_d: int = DEFAULT_BLOCK_D):
+    """d [D] @ w [D, M] with block-granular skip of silent delta lanes."""
+    dim, m = w.shape
+    if dim % block_d != 0:
+        pad = block_d - dim % block_d
+        d = jnp.pad(d, (0, pad))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        dim += pad
+    out = pl.pallas_call(
+        _delta_matvec_kernel,
+        grid=(dim // block_d,),
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),
+            pl.BlockSpec((block_d, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        interpret=True,
+    )(d.reshape(1, dim), w)
+    return out[0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def delta_matvec(d: jax.Array, w: jax.Array) -> jax.Array:
+    """Delta-gated mat-vec: forward = Pallas block-skip kernel, backward =
+    jnp transpose (see module docstring). Shapes: d [D], w [D, M] -> [M]."""
+    return _delta_matvec_pallas(d, w)
+
+
+def _dmv_fwd(d, w):
+    return _delta_matvec_pallas(d, w), (d, w)
+
+
+def _dmv_bwd(res, g):
+    d, w = res
+    # d is the *already masked* delta; its silent lanes received no forward
+    # contribution, and STE masking is handled by the caller's thresholder,
+    # so the plain bilinear VJP is exact here.
+    return g @ w.T, jnp.outer(d, g)
+
+
+delta_matvec.defvjp(_dmv_fwd, _dmv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused ΔGRU step built on the kernel
+# ---------------------------------------------------------------------------
+
+
+def delta_gru_step(params, state, x, delta_th, *, thresholder=None):
+    """One ΔGRU timestep using the Pallas kernel for both gated matvecs.
+
+    Identical semantics to `ref.delta_gru_step_ref` (which tests assert);
+    only the matvec implementation differs.
+    """
+    from . import ref  # local import: keep module importable without cycles
+
+    return ref.delta_gru_step_ref(
+        params,
+        state,
+        x,
+        delta_th,
+        thresholder=thresholder or ref.threshold_delta,
+        matvec=delta_matvec,
+    )
+
+
+def vmem_bytes(block_d: int, m: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step of `delta_matvec`:
+    d block + w block + o block (double-buffered w)."""
+    return dtype_bytes * (block_d + 2 * block_d * m + m)
+
+
+def mxu_utilization_estimate(d: int, m: int, block_d: int, fired_fraction: float) -> float:
+    """Estimated MXU utilisation on a real TPU for the block-skip schedule:
+    fraction of 128x128 MXU slots doing useful work, times the fraction of
+    blocks that fire (a block fires if ANY lane in it fires)."""
+    import math
+
+    p_block_fires = 1.0 - (1.0 - fired_fraction) ** block_d
+    useful = (min(block_d, 128) / 128.0) * (min(m, 128) / math.ceil(m / 128.0) / 128.0)
+    return useful * p_block_fires

@@ -1,0 +1,173 @@
+"""Pure-jnp correctness oracles for the DeltaKWS L1 kernels and ΔGRU step.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+chip twin's float reference) are validated against in pytest. Everything here
+is straight-line jax.numpy with no Pallas.
+
+ΔGRU semantics (Neil et al. ICML'17 [10]; Gao et al. FPGA'18 [11]; the model
+the DeltaKWS chip executes):
+
+    dx_t  = x_t     - x_ref   (zeroed where |dx| < Θ; x_ref updated where fired)
+    dh_t  = h_{t-1} - h_ref   (likewise)
+    M_r  += W_xr·dx + W_hr·dh         M_u += W_xu·dx + W_hu·dh
+    M_xc += W_xc·dx                   M_hc += W_hc·dh
+    r = σ(M_r + b_r)      u = σ(M_u + b_u)
+    c = tanh(M_xc + r ⊙ M_hc + b_c)
+    h_t = u ⊙ h_{t-1} + (1-u) ⊙ c
+
+With Θ = 0 and zero-initialised state this is *exactly* a standard GRU
+(reset-after variant with the reset gate applied to the recurrent candidate
+pre-activation), which `gru_step_ref` implements directly; `test_kernel.py`
+checks f32 equivalence.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+H = 64  # paper: 64 ΔGRU neurons
+C = 16  # max FEx channels (model input width; unused channels are zero)
+NUM_CLASSES = 12
+
+
+class GruParams(NamedTuple):
+    """ΔGRU + FC readout parameters.
+
+    w_x : [C, 3H]  input weights, column blocks [r | u | c]
+    w_h : [H, 3H]  recurrent weights, column blocks [r | u | c]
+    b   : [3H]     gate biases, blocks [r | u | c]
+    w_fc: [H, NUM_CLASSES]
+    b_fc: [NUM_CLASSES]
+    """
+
+    w_x: jax.Array
+    w_h: jax.Array
+    b: jax.Array
+    w_fc: jax.Array
+    b_fc: jax.Array
+
+
+class GruState(NamedTuple):
+    """Per-utterance recurrent state (the chip's 0.58 kB state buffer)."""
+
+    x_ref: jax.Array  # [C]  last-fired input values
+    h_ref: jax.Array  # [H]  last-fired hidden values
+    h: jax.Array  # [H]  hidden state
+    m_r: jax.Array  # [H]  accumulated reset-gate pre-activation
+    m_u: jax.Array  # [H]  accumulated update-gate pre-activation
+    m_xc: jax.Array  # [H]  accumulated candidate (input half)
+    m_hc: jax.Array  # [H]  accumulated candidate (recurrent half)
+
+
+def init_state(c: int = C, h: int = H, dtype=jnp.float32) -> GruState:
+    z = lambda n: jnp.zeros((n,), dtype)
+    return GruState(z(c), z(h), z(h), z(h), z(h), z(h), z(h))
+
+
+def threshold_delta(cur: jax.Array, ref: jax.Array, delta_th) -> tuple[jax.Array, jax.Array]:
+    """Delta encoder: (masked delta, updated reference).
+
+    A lane fires iff |cur - ref| >= Θ; fired lanes emit their delta and
+    refresh the reference, silent lanes emit 0 and keep the old reference.
+    """
+    d = cur - ref
+    fire = jnp.abs(d) >= delta_th
+    return jnp.where(fire, d, 0.0), jnp.where(fire, cur, ref)
+
+
+def ste_threshold_delta(cur, ref, delta_th):
+    """Straight-through variant for training: forward = hard threshold,
+    backward = identity on the raw delta (mask treated as constant)."""
+    d = cur - ref
+    fire = jnp.abs(d) >= delta_th
+    hard = jnp.where(fire, d, 0.0)
+    ref_new = jnp.where(fire, cur, ref)
+    return d + jax.lax.stop_gradient(hard - d), ref_new
+
+
+def delta_matvec_ref(d: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for the Pallas delta_matvec kernel: d [D] @ w [D, M] -> [M].
+
+    The masking (zeroing of silent lanes) happens in `threshold_delta`;
+    algebraically the zero lanes contribute nothing, which is exactly the
+    compute/memory traffic the chip (and the Pallas block-skip schedule)
+    elides.
+    """
+    return d @ w
+
+
+def delta_gru_step_ref(
+    params: GruParams,
+    state: GruState,
+    x: jax.Array,
+    delta_th,
+    *,
+    thresholder=threshold_delta,
+    matvec=delta_matvec_ref,
+) -> tuple[GruState, jax.Array, jax.Array]:
+    """One ΔGRU timestep. Returns (new_state, h_t, fired_fraction).
+
+    `matvec` is pluggable so the Pallas kernel can be swapped in for the
+    oracle while every other operation stays identical.
+    """
+    h = state.h.shape[0]
+    dx, x_ref = thresholder(x, state.x_ref, delta_th)
+    dh, h_ref = thresholder(state.h, state.h_ref, delta_th)
+
+    px = matvec(dx, params.w_x)  # [3H]
+    ph = matvec(dh, params.w_h)  # [3H]
+
+    m_r = state.m_r + px[:h] + ph[:h]
+    m_u = state.m_u + px[h : 2 * h] + ph[h : 2 * h]
+    m_xc = state.m_xc + px[2 * h :]
+    m_hc = state.m_hc + ph[2 * h :]
+
+    b = params.b
+    r = jax.nn.sigmoid(m_r + b[:h])
+    u = jax.nn.sigmoid(m_u + b[h : 2 * h])
+    c = jnp.tanh(m_xc + r * m_hc + b[2 * h :])
+    h_new = u * state.h + (1.0 - u) * c
+
+    fired = (jnp.sum(dx != 0.0) + jnp.sum(dh != 0.0)) / (dx.size + dh.size)
+    new_state = GruState(x_ref, h_ref, h_new, m_r, m_u, m_xc, m_hc)
+    return new_state, h_new, fired.astype(x.dtype)
+
+
+def gru_step_ref(params: GruParams, h_prev: jax.Array, x: jax.Array) -> jax.Array:
+    """Standard (dense) GRU step — the Θ=0 equivalence target.
+
+    Reset-after variant matching the Δ formulation: the reset gate scales the
+    *recurrent candidate pre-activation* (W_hc h), not h itself.
+    """
+    hs = h_prev.shape[0]
+    gx = x @ params.w_x
+    gh = h_prev @ params.w_h
+    b = params.b
+    r = jax.nn.sigmoid(gx[:hs] + gh[:hs] + b[:hs])
+    u = jax.nn.sigmoid(gx[hs : 2 * hs] + gh[hs : 2 * hs] + b[hs : 2 * hs])
+    c = jnp.tanh(gx[2 * hs :] + r * gh[2 * hs :] + b[2 * hs :])
+    return u * h_prev + (1.0 - u) * c
+
+
+def kws_forward_ref(
+    params: GruParams, feats: jax.Array, delta_th, *, warmup: int = 4
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle full forward: features [T, C] -> (logits [NUM_CLASSES], sparsity).
+
+    The decision is the mean of per-frame FC logits after `warmup` frames
+    (the chip integrates posteriors the same way); sparsity is the mean
+    fraction of *silent* (skipped) delta lanes over the utterance.
+    """
+    state = init_state(feats.shape[1], params.w_h.shape[0], feats.dtype)
+
+    def step(st, x):
+        st, h, fired = delta_gru_step_ref(params, st, x, delta_th)
+        return st, (h @ params.w_fc + params.b_fc, fired)
+
+    _, (logits_t, fired_t) = jax.lax.scan(step, state, feats)
+    logits = jnp.mean(logits_t[warmup:], axis=0)
+    sparsity = 1.0 - jnp.mean(fired_t)
+    return logits, sparsity

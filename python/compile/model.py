@@ -1,0 +1,269 @@
+"""L2: the DeltaKWS network and its delta-aware training step, in JAX.
+
+This is build-time code only — `aot.py` lowers the functions here to HLO text
+once (`make artifacts`), and the Rust coordinator executes the artifacts
+through PJRT. Python never runs on the request path.
+
+Network (paper Fig. 2b): 16-channel IIR features (10 active at the design
+point) -> Δ-input encoding -> ΔGRU with 64 neurons -> per-frame FC readout
+into 12 GSCD classes, posterior-averaged over the utterance.
+
+Training is *delta-aware*: the forward pass runs the same thresholded delta
+recurrence the chip executes (straight-through gradient through the
+threshold), plus an L1 penalty on the raw deltas that pushes the network
+toward temporal sparsity — the training recipe of the DeltaRNN line of work
+[10,11] that the chip paper builds on.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.delta_gru import delta_matvec
+
+H = ref.H
+C = ref.C
+NUM_CLASSES = ref.NUM_CLASSES
+FRAMES = 62  # 1 s utterance, 16 ms frames
+WARMUP = 4  # frames excluded from the posterior average
+
+#: canonical parameter order for the flat HLO argument list (Rust depends on
+#: this exact order — see rust/src/train/mod.rs)
+PARAM_ORDER = ("w_x", "w_h", "b", "w_fc", "b_fc")
+PARAM_SHAPES = {
+    "w_x": (C, 3 * H),
+    "w_h": (H, 3 * H),
+    "b": (3 * H,),
+    "w_fc": (H, NUM_CLASSES),
+    "b_fc": (NUM_CLASSES,),
+}
+
+
+def init_params(key: jax.Array) -> ref.GruParams:
+    """Glorot-uniform weights, zero biases (update-gate bias +1 for slower
+    state turnover, the usual GRU trick — also raises temporal sparsity)."""
+    kx, kh, kf = jax.random.split(key, 3)
+
+    def glorot(k, shape):
+        fan_in, fan_out = shape[0], shape[1]
+        lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+        return jax.random.uniform(k, shape, jnp.float32, -lim, lim)
+
+    b = jnp.zeros((3 * H,), jnp.float32).at[H : 2 * H].set(1.0)
+    return ref.GruParams(
+        w_x=glorot(kx, (C, 3 * H)),
+        w_h=glorot(kh, (H, 3 * H)),
+        b=b,
+        w_fc=glorot(kf, (H, NUM_CLASSES)),
+        b_fc=jnp.zeros((NUM_CLASSES,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def kws_forward(
+    params: ref.GruParams,
+    feats: jax.Array,  # [T, C]
+    delta_th: jax.Array,  # scalar
+    *,
+    use_kernel: bool = True,
+    ste: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full utterance forward. Returns (logits [12], sparsity, raw_delta_l1).
+
+    `use_kernel=True` routes the two gated matvecs per frame through the
+    Pallas kernel (custom_vjp makes this differentiable); `False` uses the
+    pure-jnp oracle — the two must agree to f32 tolerance (pytest asserts).
+    """
+    matvec = delta_matvec if use_kernel else ref.delta_matvec_ref
+    thresholder = ref.ste_threshold_delta if ste else ref.threshold_delta
+    state = ref.init_state(feats.shape[1], H, feats.dtype)
+
+    def step(st, x):
+        raw_l1 = jnp.sum(jnp.abs(x - st.x_ref)) + jnp.sum(jnp.abs(st.h - st.h_ref))
+        st, h, fired = ref.delta_gru_step_ref(
+            params, st, x, delta_th, thresholder=thresholder, matvec=matvec
+        )
+        return st, (h @ params.w_fc + params.b_fc, fired, raw_l1)
+
+    _, (logits_t, fired_t, raw_l1_t) = jax.lax.scan(step, state, feats)
+    logits = jnp.mean(logits_t[WARMUP:], axis=0)
+    sparsity = 1.0 - jnp.mean(fired_t)
+    return logits, sparsity, jnp.mean(raw_l1_t)
+
+
+def kws_forward_batch(params, feats_b, delta_th, *, use_kernel=True, ste=False):
+    """vmapped utterance forward: feats [B, T, C] -> (logits [B,12], sparsity [B], l1 [B])."""
+    return jax.vmap(
+        lambda f: kws_forward(params, f, delta_th, use_kernel=use_kernel, ste=ste)
+    )(feats_b)
+
+
+# ---------------------------------------------------------------------------
+# Loss + hand-rolled Adam (no optax in this environment)
+# ---------------------------------------------------------------------------
+
+#: weight of the delta-L1 sparsity penalty (DeltaRNN training recipe)
+SPARSITY_BETA = 2e-4
+
+
+def loss_fn(params, feats_b, labels_b, delta_th, *, use_kernel=True):
+    logits, sparsity, raw_l1 = kws_forward_batch(
+        params, feats_b, delta_th, use_kernel=use_kernel, ste=True
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels_b[:, None], axis=1))
+    return ce + SPARSITY_BETA * jnp.mean(raw_l1), (ce, jnp.mean(sparsity))
+
+
+class AdamState(NamedTuple):
+    m: ref.GruParams
+    v: ref.GruParams
+    step: jax.Array  # f32 scalar
+
+
+def init_adam(params: ref.GruParams) -> AdamState:
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(m=z, v=z, step=jnp.zeros((), jnp.float32))
+
+
+ADAM_LR = 3e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 5.0
+
+
+def adam_update(params, grads, opt: AdamState, lr=ADAM_LR):
+    """Adam with global-norm gradient clipping, matching optax defaults."""
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)) + 1e-12
+    )
+    scale = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    step = opt.step + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: ADAM_B1 * m_ + (1 - ADAM_B1) * g, opt.m, grads)
+    v = jax.tree_util.tree_map(lambda v_, g: ADAM_B2 * v_ + (1 - ADAM_B2) * g * g, opt.v, grads)
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + ADAM_EPS),
+        params,
+        m,
+        v,
+    )
+    return new_params, AdamState(m=m, v=v, step=step)
+
+
+def train_step(params, opt: AdamState, feats_b, labels_b, delta_th, lr=ADAM_LR, *, use_kernel=True):
+    """One SGD step. Returns (params', opt', loss, ce, sparsity).
+
+    `lr` is a traced scalar so the Rust trainer can schedule it at runtime
+    (dense pretrain at full rate, delta fine-tune at a reduced rate) without
+    re-lowering the artifact.
+    """
+    (loss, (ce, sparsity)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, feats_b, labels_b, delta_th, use_kernel=use_kernel
+    )
+    params, opt = adam_update(params, grads, opt, lr=lr)
+    return params, opt, loss, ce, sparsity
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers for AOT lowering (stable HLO parameter order)
+# ---------------------------------------------------------------------------
+
+
+def _pack(params: ref.GruParams):
+    return tuple(getattr(params, k) for k in PARAM_ORDER)
+
+
+def _unpack(flat) -> ref.GruParams:
+    return ref.GruParams(**dict(zip(PARAM_ORDER, flat)))
+
+
+def kws_fwd_flat(w_x, w_h, b, w_fc, b_fc, feats, delta_th, *, use_kernel=True):
+    """AOT entry: forward for one utterance. 7 args -> (logits, sparsity)."""
+    logits, sparsity, _ = kws_forward(
+        _unpack((w_x, w_h, b, w_fc, b_fc)), feats, delta_th, use_kernel=use_kernel
+    )
+    return logits, sparsity
+
+
+def kws_fwd_batch_flat(w_x, w_h, b, w_fc, b_fc, feats_b, delta_th, *, use_kernel=True):
+    """AOT entry: batched forward. 7 args -> (logits [B,12], sparsity [B])."""
+    logits, sparsity, _ = kws_forward_batch(
+        _unpack((w_x, w_h, b, w_fc, b_fc)), feats_b, delta_th, use_kernel=use_kernel
+    )
+    return logits, sparsity
+
+
+def train_step_flat(
+    w_x, w_h, b, w_fc, b_fc,
+    m_w_x, m_w_h, m_b, m_w_fc, m_b_fc,
+    v_w_x, v_w_h, v_b, v_w_fc, v_b_fc,
+    step,
+    feats_b, labels_b, delta_th, lr,
+    *, use_kernel=True,
+):
+    """AOT entry: one training step with a fully flattened signature.
+
+    Argument order (20 args) and result order (17 results) are a stable ABI
+    consumed by rust/src/train/mod.rs:
+      args:    5 params, 5 adam-m, 5 adam-v, step, feats [B,T,C],
+               labels [B] i32, delta_th, lr
+      results: 5 params', 5 m', 5 v', step', loss
+    """
+    params = _unpack((w_x, w_h, b, w_fc, b_fc))
+    opt = AdamState(
+        m=_unpack((m_w_x, m_w_h, m_b, m_w_fc, m_b_fc)),
+        v=_unpack((v_w_x, v_w_h, v_b, v_w_fc, v_b_fc)),
+        step=step,
+    )
+    params, opt, loss, _ce, _sp = train_step(
+        params, opt, feats_b, labels_b, delta_th, lr, use_kernel=use_kernel
+    )
+    return (*_pack(params), *_pack(opt.m), *_pack(opt.v), opt.step, loss)
+
+
+# ---------------------------------------------------------------------------
+# Float IIR FEx in jax (for the fex_ref artifact; mirrors fexlib.fex_reference)
+# ---------------------------------------------------------------------------
+
+
+def fex_jax(audio: jax.Array, coeffs: jax.Array, env_k: float, n_frames: int, frame: int):
+    """Vectorised float FEx: audio [N] -> features [n_frames, n_channels].
+
+    coeffs: [n_channels, 5] rows (b0, b2, a1, a2, _pad) — b1 is structurally 0.
+    All channels run their two cascaded biquads + envelope in one lax.scan
+    over samples (state [n_channels, 6]): the serial-pipeline structure of
+    the chip, parallelised across channels.
+    """
+    nch = coeffs.shape[0]
+    b0, b2, a1, a2 = coeffs[:, 0], coeffs[:, 1], coeffs[:, 2], coeffs[:, 3]
+
+    def sample_step(carry, xn):
+        # carry: (x1, x2 scalars shared across channels; y/z biquad states and
+        # envelope per channel). Two cascaded direct-form-I biquads with
+        # identical coefficients, then the leaky-integrator envelope.
+        x1, x2, y1, y2, z1, z2, env = carry
+        y = b0 * xn + b2 * x2 - a1 * y1 - a2 * y2  # b1 == 0 structurally
+        # stage 2: input history is y1/y2 (stage-1 outputs), output history z1/z2
+        z = b0 * y + b2 * y2 - a1 * z1 - a2 * z2
+        env = env + (jnp.abs(z) - env) * env_k
+        return (xn, x1, y, y1, z, z1, env), env
+
+    z0 = jnp.zeros((nch,), jnp.float32)
+    carry0 = (jnp.float32(0), jnp.float32(0), z0, z0, z0, z0, z0)
+    _, env_t = jax.lax.scan(sample_step, carry0, audio)
+    idx = (jnp.arange(n_frames) + 1) * frame - 1
+    env_frames = env_t[idx]  # [n_frames, nch]
+    return jnp.clip(jnp.log2(1.0 + env_frames * 4096.0) / 12.0, 0.0, 1.0)

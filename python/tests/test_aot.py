@@ -1,0 +1,100 @@
+"""AOT artifact integrity: manifest schema, HLO-text well-formedness, and
+ABI stability (the Rust runtime depends on these exact contracts)."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def need_artifacts():
+    if not os.path.exists(os.path.join(ART, "manifest.json")):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+
+
+def load_manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_schema():
+    need_artifacts()
+    m = load_manifest()
+    assert m["frames"] == 62
+    assert m["channels"] == 16
+    assert m["hidden"] == 64
+    assert m["classes"] == 12
+    assert m["batch"] == 16
+    assert m["audio_samples"] == 62 * 128
+    assert m["param_order"] == ["w_x", "w_h", "b", "w_fc", "b_fc"]
+    assert m["param_shapes"]["w_x"] == [16, 192]
+    assert m["param_shapes"]["w_h"] == [64, 192]
+    assert m["param_shapes"]["b"] == [192]
+    assert m["param_shapes"]["w_fc"] == [64, 12]
+    assert m["param_shapes"]["b_fc"] == [12]
+
+
+def test_train_abi_documented():
+    need_artifacts()
+    m = load_manifest()
+    abi = m["train_step_abi"]
+    assert "delta_th, lr" in abi["args"], "ABI drift: rust trainer expects the lr input"
+    assert "loss" in abi["results"]
+
+
+def test_all_artifacts_present_and_hlo_parses():
+    need_artifacts()
+    m = load_manifest()
+    for name, meta in m["artifacts"].items():
+        path = os.path.join(ART, name)
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert len(text) == meta["bytes"], f"{name} size drifted from manifest"
+        # HLO text sanity: module header + ROOT instruction + tuple return
+        assert text.lstrip().startswith("HloModule"), name
+        assert "ROOT" in text, name
+
+
+def test_forward_artifacts_used_pallas_kernel():
+    need_artifacts()
+    m = load_manifest()
+    assert m["artifacts"]["kws_fwd.hlo.txt"]["pallas_kernel"] is True
+    assert m["artifacts"]["train_step.hlo.txt"]["pallas_kernel"] is True
+
+
+def test_fex_coeffs_consistent_with_live_design():
+    need_artifacts()
+    from compile import fexlib
+
+    with open(os.path.join(ART, "fex_coeffs.json")) as f:
+        dumped = json.load(f)
+    live = fexlib.design_filterbank()
+    assert dumped["num_channels"] == len(live)
+    assert dumped["design_channel_offset"] == fexlib.DESIGN_CHANNEL_OFFSET
+    for d, l in zip(dumped["channels"], live):
+        assert abs(d["f0"] - l.f0) < 1e-9
+        assert abs(d["sos"][0]["b0"] - l.sos[0].b0) < 1e-12
+
+
+def test_lowering_is_deterministic():
+    """Re-lowering the single-utterance forward produces identical HLO text
+    (guards against nondeterministic lowering that would break artifact
+    caching)."""
+    need_artifacts()
+    from compile import aot
+
+    t1 = aot.to_hlo_text(aot.lower_kws_fwd(use_kernel=False))
+    t2 = aot.to_hlo_text(aot.lower_kws_fwd(use_kernel=False))
+    assert t1 == t2
+
+
+def test_no_elided_constants_in_artifacts():
+    """The HLO-text printer must not elide array constants ('{...}'): the
+    downstream parser reads elided payloads as zeros (see aot.to_hlo_text)."""
+    need_artifacts()
+    m = load_manifest()
+    for name in m["artifacts"]:
+        text = open(os.path.join(ART, name)).read()
+        assert "constant({...})" not in text, f"{name} has elided constants"

@@ -1,0 +1,163 @@
+"""FEx design + float reference correctness (the contract the Rust
+fixed-point twin is validated against)."""
+
+import json
+import math
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import fexlib, model
+
+
+@pytest.fixture(scope="module")
+def bank():
+    return fexlib.design_filterbank()
+
+
+def test_mel_roundtrip():
+    for f in [100.0, 516.0, 1000.0, 3600.0]:
+        assert fexlib.imel(fexlib.mel(f)) == pytest.approx(f, rel=1e-9)
+
+
+def test_centers_are_mel_spaced_and_monotone(bank):
+    centers = [c.f0 for c in bank]
+    assert len(centers) == 16
+    assert all(a < b for a, b in zip(centers, centers[1:]))
+    mels = [fexlib.mel(f) for f in centers]
+    diffs = [b - a for a, b in zip(mels, mels[1:])]
+    assert max(diffs) - min(diffs) < 1e-6  # uniform in Mel
+
+
+def test_design_point_covers_paper_range(bank):
+    """The 10-channel design point starts around ~500 Hz (paper: 516 Hz)."""
+    off = fexlib.DESIGN_CHANNEL_OFFSET
+    sel = bank[off : off + fexlib.DESIGN_CHANNELS]
+    assert len(sel) == fexlib.DESIGN_CHANNELS
+    assert 400.0 < sel[0].f0 < 650.0
+    assert sel[-1].f0 <= fexlib.SAMPLE_RATE / 2
+
+
+def test_coefficient_symmetry(bank):
+    """The hardware-friendly structure the chip exploits: b1 == 0, b2 == -b0."""
+    for ch in bank:
+        for bq in ch.sos:
+            assert bq.b1 == 0.0
+            assert bq.b2 == pytest.approx(-bq.b0, rel=1e-12)
+
+
+def test_filters_stable(bank):
+    """All poles strictly inside the unit circle."""
+    for ch in bank:
+        for bq in ch.sos:
+            # roots of z^2 + a1 z + a2
+            disc = bq.a1 * bq.a1 - 4.0 * bq.a2
+            if disc >= 0:
+                r = max(abs((-bq.a1 + math.sqrt(disc)) / 2), abs((-bq.a1 - math.sqrt(disc)) / 2))
+            else:
+                r = math.sqrt(bq.a2)  # |complex pole| = sqrt(a2)
+            assert r < 1.0, (ch.index, r)
+
+
+def magnitude(bq: fexlib.Biquad, f: float, fs: float = fexlib.SAMPLE_RATE) -> float:
+    w = 2 * math.pi * f / fs
+    z = complex(math.cos(w), math.sin(w))
+    num = bq.b0 + bq.b1 / z + bq.b2 / z**2
+    den = 1.0 + bq.a1 / z + bq.a2 / z**2
+    return abs(num / den)
+
+
+def test_unit_gain_at_center(bank):
+    """RBJ constant-peak-gain BPF: |H(f0)| == 1 per section."""
+    for ch in bank:
+        assert magnitude(ch.sos[0], ch.f0) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_passband_selectivity(bank):
+    """A tone at channel c's centre is passed >= 6 dB stronger than at the
+    centres two channels away (cascade of two sections)."""
+    for i in [2, 6, 10, 14]:
+        ch = bank[i]
+        g_self = magnitude(ch.sos[0], ch.f0) ** 2
+        for j in [i - 2, i + 2]:
+            if 0 <= j < len(bank):
+                g_other = magnitude(ch.sos[0], bank[j].f0) ** 2
+                assert g_self / max(g_other, 1e-12) > 2.0, (i, j)
+
+
+def test_envelope_of_tone_tracks_amplitude():
+    """Envelope of a steady tone converges near its mean |amplitude|."""
+    t = np.arange(4000) / fexlib.SAMPLE_RATE
+    x = 0.5 * np.sin(2 * math.pi * 1000 * t)
+    env = fexlib.envelope(x)
+    # steady-state mean of |sin| * 0.5 = 0.3183; leaky integrator tracks it
+    assert abs(float(np.mean(env[2000:])) - 0.3183) < 0.05
+
+
+def test_log_compress_range():
+    e = np.array([0.0, 1e-4, 0.01, 0.1, 1.0])
+    f = fexlib.log_compress(e)
+    assert f[0] == 0.0
+    assert np.all(np.diff(f) > 0)
+    assert f[-1] <= 1.0
+
+
+def test_fex_jax_matches_numpy_reference(bank):
+    """The AOT'd jax FEx == the (slow) numpy float64 reference."""
+    rng = np.random.default_rng(0)
+    t = np.arange(fexlib.FRAMES_PER_UTT * fexlib.FRAME_SAMPLES) / fexlib.SAMPLE_RATE
+    audio = (
+        0.4 * np.sin(2 * math.pi * 700 * t) * np.exp(-((t - 0.4) ** 2) / 0.02)
+        + 0.01 * rng.standard_normal(len(t))
+    ).astype(np.float32)
+
+    ref_feats = fexlib.fex_reference(audio.astype(np.float64), bank)
+
+    coeffs = jnp.asarray(
+        [[c.sos[0].b0, c.sos[0].b2, c.sos[0].a1, c.sos[0].a2, 0.0] for c in bank],
+        jnp.float32,
+    )
+    jax_feats = model.fex_jax(
+        jnp.asarray(audio), coeffs, 2.0**-fexlib.ENV_SHIFT,
+        fexlib.FRAMES_PER_UTT, fexlib.FRAME_SAMPLES,
+    )
+    np.testing.assert_allclose(np.asarray(jax_feats), ref_feats, rtol=1e-3, atol=2e-3)
+
+
+def test_feature_response_localised(bank):
+    """A 1 kHz tone burst lights up the channels nearest 1 kHz."""
+    t = np.arange(fexlib.FRAMES_PER_UTT * fexlib.FRAME_SAMPLES) / fexlib.SAMPLE_RATE
+    audio = 0.5 * np.sin(2 * math.pi * 1000 * t)
+    feats = fexlib.fex_reference(audio, bank)
+    mean_per_ch = feats[10:].mean(axis=0)
+    best = int(np.argmax(mean_per_ch))
+    target = int(np.argmin([abs(c.f0 - 1000.0) for c in bank]))
+    assert abs(best - target) <= 1
+
+
+def test_json_dump_roundtrip(bank):
+    payload = json.loads(fexlib.filterbank_json(bank))
+    assert payload["num_channels"] == 16
+    assert payload["sample_rate"] == 8000
+    assert len(payload["channels"]) == 16
+    ch0 = payload["channels"][0]
+    assert ch0["sos"][0]["b1"] == 0.0
+    assert ch0["sos"][0]["b0"] == pytest.approx(bank[0].sos[0].b0)
+
+
+def test_artifact_coeffs_match_design_if_present(bank):
+    """If `make artifacts` has run, the dumped design must equal the live one
+    (guards against stale artifacts after a design change)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "fex_coeffs.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        payload = json.load(f)
+    for ch, live in zip(payload["channels"], bank):
+        assert ch["f0"] == pytest.approx(live.f0, rel=1e-12)
+        assert ch["sos"][0]["a1"] == pytest.approx(live.sos[0].a1, rel=1e-12)

@@ -1,0 +1,145 @@
+"""L2 correctness: KWS model forward/backward, Adam, and the flat AOT ABI."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def synth_batch(seed, batch=4, frames=model.FRAMES):
+    """A toy, learnable batch: each class c gets a sinusoid bump on channel
+    c % C with class-dependent onset — enough temporal structure to learn."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, model.NUM_CLASSES, size=batch)
+    feats = np.zeros((batch, frames, model.C), np.float32)
+    t = np.arange(frames, dtype=np.float32)
+    for i, y in enumerate(labels):
+        ch = y % model.C
+        onset = 10 + (y * 2) % 20
+        bump = np.exp(-0.5 * ((t - onset - 10) / 6.0) ** 2)
+        feats[i, :, ch] += bump
+        feats[i, :, (ch + 3) % model.C] += 0.5 * bump * np.sin(0.3 * t * (1 + y % 3))
+        feats[i] += rng.normal(0, 0.02, size=(frames, model.C)).astype(np.float32)
+    return jnp.asarray(feats), jnp.asarray(labels, jnp.int32)
+
+
+def test_forward_shapes(params):
+    feats = jnp.zeros((model.FRAMES, model.C))
+    logits, sparsity, l1 = model.kws_forward(params, feats, 0.1, use_kernel=False)
+    assert logits.shape == (model.NUM_CLASSES,)
+    assert sparsity.shape == () and l1.shape == ()
+
+
+def test_forward_kernel_vs_oracle(params):
+    feats = jax.random.uniform(jax.random.PRNGKey(1), (model.FRAMES, model.C))
+    lk, sk, _ = model.kws_forward(params, feats, 0.1, use_kernel=True)
+    lr, sr, _ = model.kws_forward(params, feats, 0.1, use_kernel=False)
+    np.testing.assert_allclose(lk, lr, rtol=1e-4, atol=1e-5)
+    assert float(sk) == pytest.approx(float(sr))
+
+
+def test_forward_zero_input_is_fully_sparse(params):
+    """All-zero features never exceed a positive threshold: the ΔGRU does no
+    work at all (the chip's silent-input idle behaviour)."""
+    feats = jnp.zeros((model.FRAMES, model.C))
+    _, sparsity, _ = model.kws_forward(params, feats, 0.05, use_kernel=False)
+    assert float(sparsity) == pytest.approx(1.0)
+
+
+def test_batch_forward_matches_single(params):
+    feats_b, _ = synth_batch(0, batch=3)
+    lb, sb, _ = model.kws_forward_batch(params, feats_b, 0.1, use_kernel=False)
+    for i in range(3):
+        li, si, _ = model.kws_forward(params, feats_b[i], 0.1, use_kernel=False)
+        np.testing.assert_allclose(lb[i], li, rtol=1e-5, atol=1e-6)
+        assert float(sb[i]) == pytest.approx(float(si))
+
+
+def test_loss_decreases_over_training(params):
+    """A few Adam steps on a fixed toy batch must reduce the loss — the
+    delta-aware STE path is actually trainable."""
+    feats_b, labels_b = synth_batch(1, batch=8)
+    opt = model.init_adam(params)
+    p = params
+    step = jax.jit(
+        lambda p_, o_, f_, l_: model.train_step(p_, o_, f_, l_, 0.05, use_kernel=False)
+    )
+    losses = []
+    for _ in range(30):
+        p, opt, loss, _ce, _sp = step(p, opt, feats_b, labels_b)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.85, losses
+    assert losses[-1] < min(losses[:5])  # still descending past warmup
+
+
+def test_gradients_nonzero_through_threshold(params):
+    """STE keeps gradients alive even when most lanes are below Θ."""
+    feats_b, labels_b = synth_batch(2, batch=4)
+    (_, _aux), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, feats_b, labels_b, 0.3, use_kernel=False
+    )
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert total > 0.0
+
+
+def test_adam_step_counter_and_shapes(params):
+    opt = model.init_adam(params)
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    p2, opt2 = model.adam_update(params, grads, opt)
+    assert float(opt2.step) == 1.0
+    for a, b in zip(jax.tree_util.tree_leaves(p2), jax.tree_util.tree_leaves(params)):
+        assert a.shape == b.shape
+        assert not np.allclose(a, b)  # every tensor moved
+
+
+def test_grad_clip_bounds_update(params):
+    """Global-norm clipping: a huge gradient produces a bounded first step
+    (|Δp| <= lr / (sqrt(1-b2) eps-floor) per Adam with bias correction)."""
+    opt = model.init_adam(params)
+    grads = jax.tree_util.tree_map(lambda p: jnp.full_like(p, 1e6), params)
+    p2, _ = model.adam_update(params, grads, opt)
+    max_delta = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree_util.tree_leaves(p2), jax.tree_util.tree_leaves(params))
+    )
+    assert max_delta < 2 * model.ADAM_LR / (1 - model.ADAM_B1) + 1e-6
+
+
+def test_flat_abi_roundtrip(params):
+    """train_step_flat == train_step through the packed/unpacked ABI."""
+    feats_b, labels_b = synth_batch(3, batch=4)
+    opt = model.init_adam(params)
+    p_ref, o_ref, loss_ref, _, _ = model.train_step(
+        params, opt, feats_b, labels_b, 0.1, use_kernel=False
+    )
+    flat_out = model.train_step_flat(
+        *[getattr(params, k) for k in model.PARAM_ORDER],
+        *[getattr(opt.m, k) for k in model.PARAM_ORDER],
+        *[getattr(opt.v, k) for k in model.PARAM_ORDER],
+        opt.step,
+        feats_b,
+        labels_b,
+        0.1,
+        model.ADAM_LR,
+        use_kernel=False,
+    )
+    assert len(flat_out) == 17
+    for i, k in enumerate(model.PARAM_ORDER):
+        np.testing.assert_allclose(flat_out[i], getattr(p_ref, k), rtol=1e-6, atol=1e-7)
+    assert float(flat_out[-1]) == pytest.approx(float(loss_ref), rel=1e-5)
+    assert float(flat_out[-2]) == 1.0  # step incremented
+
+
+def test_update_gate_bias_init(params):
+    """init_params applies the +1 update-gate bias (slow-state prior)."""
+    h = model.H
+    np.testing.assert_array_equal(np.asarray(params.b[h : 2 * h]), 1.0)
+    np.testing.assert_array_equal(np.asarray(params.b[:h]), 0.0)

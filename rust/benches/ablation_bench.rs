@@ -1,0 +1,97 @@
+//! Bench: design-choice ablations DESIGN.md calls out.
+//!
+//! (a) MAC lane count — chip latency & host cost vs parallelism;
+//! (b) ΔFIFO depth — burst absorption (high-water, overflow risk);
+//! (c) Δ-side — gating x only / h only / both at matched threshold;
+//! (d) coarse skip-RNN vs fine-grained ΔRNN at matched feature stream.
+
+mod common;
+
+use deltakws::accel::{AccelConfig, DeltaRnnAccel};
+use deltakws::baseline::SkipRnn;
+use deltakws::energy::SramKind;
+use deltakws::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("ablations");
+    let frames = common::feature_stream(21, 128, 0.3, 60);
+
+    println!("(a) MAC lanes (chip latency is cycles/125kHz; host is wall time):");
+    for lanes in [1usize, 2, 4, 8, 16] {
+        let mut cfg = AccelConfig::design_point().with_delta_th(26);
+        cfg.mac_lanes = lanes;
+        let mut accel = DeltaRnnAccel::new(common::rng_quant(3), cfg, SramKind::NearVth);
+        let mut i = 0usize;
+        b.bench_with_items(&format!("step_frame @ {lanes} lanes"), 1.0, "frames", || {
+            black_box(accel.step_frame(black_box(&frames[i % frames.len()])));
+            i += 1;
+        });
+        println!(
+            "  {lanes:>2} lanes: chip latency {:.2} ms/frame",
+            accel.activity.avg_latency_ms()
+        );
+    }
+
+    println!("\n(b) ΔFIFO depth (burst absorption at 50% firing):");
+    let bursty = common::feature_stream(22, 128, 0.5, 70);
+    for depth in [4usize, 8, 16, 32, 80] {
+        let mut cfg = AccelConfig::design_point().with_delta_th(26);
+        cfg.fifo_depth = depth;
+        let mut accel = DeltaRnnAccel::new(common::rng_quant(4), cfg, SramKind::NearVth);
+        for f in &bursty {
+            accel.step_frame(f);
+        }
+        println!(
+            "  depth {depth:>2}: high-water {:>2}, overflows {}",
+            accel.fifo.high_water, accel.fifo.overflows
+        );
+    }
+
+    println!("\n(c) Δ-side gating at th=0.2:");
+    for (label, thx, thh) in [
+        ("both", Some(51i16), Some(51i16)),
+        ("x only", Some(51), Some(0)),
+        ("h only", Some(0), Some(51)),
+    ] {
+        let mut cfg = AccelConfig::design_point();
+        cfg.delta_th_x_q8 = thx;
+        cfg.delta_th_h_q8 = thh;
+        let mut accel = DeltaRnnAccel::new(common::rng_quant(5), cfg, SramKind::NearVth);
+        for f in &frames {
+            accel.step_frame(f);
+        }
+        let a = accel.activity;
+        println!(
+            "  {label:<7} sparsity {:>5.1}% (x {:>5.1}%, h {:>5.1}%), latency {:.2} ms",
+            a.sparsity() * 100.0,
+            a.input_sparsity() * 100.0,
+            a.hidden_sparsity() * 100.0,
+            a.avg_latency_ms()
+        );
+    }
+
+    println!("\n(d) coarse skip-RNN vs fine ΔRNN (same stream):");
+    let mut delta = DeltaRnnAccel::new(
+        common::rng_quant(6),
+        AccelConfig::design_point().with_delta_th(51),
+        SramKind::NearVth,
+    );
+    for f in &frames {
+        delta.step_frame(f);
+    }
+    let mut skip = SkipRnn::new(common::rng_quant(6), AccelConfig::design_point().active_x, 150);
+    for f in &frames {
+        skip.step_frame(f);
+    }
+    println!(
+        "  ΔRNN   : {:.1}% lane sparsity, {} SRAM reads",
+        delta.activity.sparsity() * 100.0,
+        delta.sram.reads
+    );
+    println!(
+        "  skipRNN: {:.0}% frames skipped, {} SRAM reads",
+        skip.skip_rate() * 100.0,
+        skip.inner.sram.reads
+    );
+    b.finish();
+}

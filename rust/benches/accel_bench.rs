@@ -1,0 +1,61 @@
+//! Bench: the ΔRNN accelerator hot loop in isolation — the L3 profile
+//! target (EXPERIMENTS.md §Perf).
+//!
+//! Separates the frame-step cost by firing level (the hot path's work is
+//! proportional to fired lanes: weight-row streaming + MAC), and measures
+//! the components: encoder-only (all-silent), FC-only floor, and the dense
+//! worst case. Also covers the dense-GRU baseline for the same workload.
+
+mod common;
+
+use deltakws::accel::{AccelConfig, DeltaRnnAccel};
+use deltakws::baseline::DenseGruAccel;
+use deltakws::energy::SramKind;
+use deltakws::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("accel hot path");
+
+    // firing-level sweep: p_move controls how many lanes fire per frame
+    for (label, p_move) in
+        [("all-silent", 0.0), ("13% firing", 0.13), ("50% firing", 0.5), ("dense", 1.0)]
+    {
+        let frames = common::feature_stream(11, 128, p_move, 60);
+        let cfg = AccelConfig::design_point().with_delta_th(26);
+        let mut accel = DeltaRnnAccel::new(common::rng_quant(2), cfg, SramKind::NearVth);
+        // warm the state so "all-silent" is truly silent
+        for f in frames.iter().take(8) {
+            accel.step_frame(f);
+        }
+        let mut i = 0usize;
+        let s = b.bench_with_items(&format!("step_frame {label}"), 1.0, "frames", || {
+            black_box(accel.step_frame(black_box(&frames[i % frames.len()])));
+            i += 1;
+        });
+        let fired = accel.activity.fired_lanes as f64 / accel.activity.frames as f64;
+        println!(
+            "{label:<12} {:>8.2} µs/frame  ({:>9.0} frames/s, avg {fired:.1} lanes fired)",
+            s.mean_ns / 1e3,
+            1e9 / s.mean_ns
+        );
+    }
+
+    // dense baseline: input-independent cost
+    let frames = common::feature_stream(12, 128, 0.3, 60);
+    let mut dense = DenseGruAccel::new(
+        common::rng_quant(2),
+        AccelConfig::design_point().active_x,
+        SramKind::NearVth,
+    );
+    let mut i = 0usize;
+    let s = b.bench_with_items("dense-GRU baseline step", 1.0, "frames", || {
+        black_box(dense.step_frame(black_box(&frames[i % frames.len()])));
+        i += 1;
+    });
+    println!(
+        "dense-GRU     {:>8.2} µs/frame  ({:>9.0} frames/s) — no elision",
+        s.mean_ns / 1e3,
+        1e9 / s.mean_ns
+    );
+    b.finish();
+}

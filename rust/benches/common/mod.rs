@@ -1,0 +1,46 @@
+//! Shared helpers for the bench binaries: deterministic random models and
+//! feature streams with controlled temporal sparsity.
+
+use deltakws::accel::gru::{QuantParams, C};
+use deltakws::util::prng::Pcg;
+
+/// Deterministic random quantised model (weight values don't affect cycle
+/// counts; they do affect firing dynamics, so benches that care drive the
+/// encoder with explicit feature streams instead).
+#[allow(dead_code)]
+pub fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+/// Feature frame stream whose per-frame change rate approximates a target
+/// input sparsity: each frame, every active channel moves by `step` with
+/// probability `p_move` (so Δ_TH just below `step` gates at ~1-p_move).
+#[allow(dead_code)]
+pub fn feature_stream(seed: u64, frames: usize, p_move: f64, step: i16) -> Vec<[i16; C]> {
+    let mut rng = Pcg::new(seed);
+    let mut cur = [60i16; C];
+    let mut out = Vec::with_capacity(frames);
+    for _ in 0..frames {
+        for slot in cur.iter_mut().take(14).skip(4) {
+            if rng.uniform() < p_move {
+                let dir = if rng.uniform() < 0.5 { -1 } else { 1 };
+                *slot = (*slot + dir * step).clamp(0, 255);
+            }
+        }
+        out.push(cur);
+    }
+    out
+}
+
+/// One quantised synthetic-GSCD utterance.
+#[allow(dead_code)]
+pub fn utterance(seed: u64, class: usize) -> Vec<i64> {
+    let mut rng = Pcg::new(seed);
+    let wave = deltakws::audio::synth_utterance(class, &mut rng);
+    deltakws::audio::quantize_12b(&wave)
+}

@@ -1,0 +1,53 @@
+//! Bench: paper Fig. 12 — the Δ_TH sweep on the accelerator hot path.
+//!
+//! Measures simulated-chip metrics (cycles → latency, energy) *and* host
+//! simulation throughput per Δ_TH. The chip-side numbers regenerate the
+//! Fig. 12 trade-off shape; the host-side numbers are the L3 performance
+//! target (EXPERIMENTS.md §Perf: ≥1e5 frames/s/core simulated).
+
+mod common;
+
+use deltakws::accel::{AccelConfig, DeltaRnnAccel};
+use deltakws::energy::{self, calib, SramKind};
+use deltakws::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("delta_sweep (Fig. 12)");
+    let frames = common::feature_stream(7, 256, 0.35, 40);
+
+    println!("chip-side sweep (what the paper measures):");
+    println!(
+        "{:>6} {:>9} {:>10} {:>9} {:>10}",
+        "Δ_TH", "spars%", "lat ms", "E/dec nJ", "frames/s(host)"
+    );
+    for th in [0i16, 13, 26, 38, 51, 77, 102] {
+        let cfg = AccelConfig::design_point().with_delta_th(th);
+        // chip metrics on one pass
+        let mut probe = DeltaRnnAccel::new(common::rng_quant(1), cfg.clone(), SramKind::NearVth);
+        for f in &frames {
+            probe.step_frame(f);
+        }
+        let act = probe.activity;
+        let power = energy::chip_power(&act, calib::FEX_DESIGN_UW, SramKind::NearVth);
+        let energy_nj = energy::energy_per_decision_nj(&power, &act);
+
+        // host throughput at this sparsity level
+        let mut accel = DeltaRnnAccel::new(common::rng_quant(1), cfg, SramKind::NearVth);
+        let mut i = 0;
+        let stats = b.bench_with_items(&format!("step_frame @ th={th}"), 1.0, "frames", || {
+            let r = accel.step_frame(black_box(&frames[i % frames.len()]));
+            black_box(r.cycles);
+            i += 1;
+        });
+        println!(
+            "{:>6.2} {:>9.1} {:>10.3} {:>9.2} {:>10.0}",
+            th as f64 / 256.0,
+            act.sparsity() * 100.0,
+            act.avg_latency_ms(),
+            energy_nj,
+            stats.throughput(1.0),
+        );
+    }
+    println!("\npaper anchors: Δ=0 -> 16.4 ms / 121.2 nJ; Δ=0.2 -> 6.9 ms / 36.11 nJ @ 87% (input) sparsity");
+    b.finish();
+}

@@ -1,0 +1,76 @@
+//! Bench: paper Table II — end-to-end chip twin + serving coordinator.
+//!
+//! Full-pipeline cost (audio -> FEx -> CDC FIFO -> ΔRNN -> decision) at the
+//! two Table II operating points, plus coordinator throughput scaling over
+//! worker count. This is the headline L3 performance artefact for
+//! EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::time::Duration;
+
+use deltakws::chip::{ChipConfig, KwsChip};
+use deltakws::coordinator::{Coordinator, Request};
+use deltakws::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("e2e (Table II)");
+    let utt = common::utterance(11, 11);
+
+    println!("chip twin, full utterance pipeline:");
+    for (label, th) in [("Δ_TH=0", 0i16), ("Δ_TH=0.2", 51)] {
+        let mut chip =
+            KwsChip::new(common::rng_quant(5), ChipConfig::design_point().with_delta_th(th));
+        let s = b.bench_with_items(&format!("process_utterance {label}"), 1.0, "utt", || {
+            black_box(chip.process_utterance(black_box(&utt)));
+        });
+        let rep = chip.report();
+        println!(
+            "  {label:<9} host {:>7.2} ms/utt ({:>5.1} utt/s) | chip: {:.2} ms, {:.1} nJ, {:.0}% sparse",
+            s.mean_ns / 1e6,
+            1e9 / s.mean_ns,
+            rep.latency_ms,
+            rep.energy_per_decision_nj,
+            rep.sparsity * 100.0
+        );
+    }
+
+    println!("\ncoordinator scaling (32 requests, queue 16):");
+    for workers in [1usize, 2, 4] {
+        let coord = Coordinator::new(
+            common::rng_quant(5),
+            ChipConfig::design_point(),
+            workers,
+            16,
+        );
+        let t0 = std::time::Instant::now();
+        let n = 32;
+        let mut submitted = 0;
+        for i in 0..n {
+            let req = Request {
+                id: 0,
+                stream: (i % 8) as u64,
+                audio12: utt.clone(),
+                label: None,
+            };
+            let mut req = req;
+            loop {
+                match coord.submit(req) {
+                    Ok(_) => break,
+                    Err(r) => {
+                        req = r;
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            }
+            submitted += 1;
+        }
+        let got = coord.collect(submitted, Duration::from_secs(120)).len();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  {workers} worker(s): {:.1} utt/s ({got}/{n} in {wall:.2}s)",
+            got as f64 / wall
+        );
+    }
+    b.finish();
+}

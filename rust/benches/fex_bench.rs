@@ -1,0 +1,80 @@
+//! Bench: paper Fig. 6 + Fig. 7 + Table I — the FEx datapath.
+//!
+//! * Fig. 6: per-sample cost vs active channel count (host throughput must
+//!   scale ~linearly with channels, mirroring the chip's gated slots).
+//! * Fig. 7: the three datapath architectures at fixed channels — the
+//!   *numerics* are identical; the model's power/area factors are printed.
+//! * Table I: sustained sample throughput of the bit-accurate FEx
+//!   (real-time factor vs the chip's 8 kHz input).
+
+mod common;
+
+use deltakws::fex::biquad::Arch;
+use deltakws::fex::{area, Fex, FexConfig};
+use deltakws::util::bench::{black_box, Bench};
+use deltakws::util::prng::Pcg;
+
+fn main() {
+    let mut b = Bench::new("fex (Fig. 6 / Fig. 7 / Table I)");
+    // 1 s of pseudo-speech input
+    let mut rng = Pcg::new(3);
+    let audio: Vec<i64> = (0..8000)
+        .map(|i| {
+            let t = i as f64 / 8000.0;
+            let v = 0.4 * (2.0 * std::f64::consts::PI * 700.0 * t).sin()
+                + 0.2 * (2.0 * std::f64::consts::PI * 1800.0 * t).sin()
+                + 0.05 * rng.normal();
+            (v.clamp(-0.999, 0.999) * 2047.0) as i64
+        })
+        .collect();
+
+    println!("Fig. 6 — channel-count scaling (per-sample serial pipeline):");
+    for n in [1usize, 4, 10, 16] {
+        let mut fex = Fex::new(FexConfig::n_channels(Arch::MixedShift, n));
+        let mut i = 0usize;
+        let s = b.bench_with_items(&format!("push_sample @ {n}ch"), 1.0, "samples", || {
+            black_box(fex.push_sample(black_box(audio[i % audio.len()])));
+            i += 1;
+        });
+        println!(
+            "  {n:>2} channels: {:>8.1} ns/sample ({:.0}x real time), model power {:.3} µW",
+            s.mean_ns,
+            1e9 / s.mean_ns / 8000.0,
+            area::power_uw(Arch::MixedShift, n)
+        );
+    }
+
+    println!("\nFig. 7 — datapath architectures (identical numerics, differing cost model):");
+    for (arch, label) in [
+        (Arch::Unified16, "baseline 16b-fraction"),
+        (Arch::Mixed, "12b/8b mixed"),
+        (Arch::MixedShift, "mixed + shift-sub"),
+    ] {
+        let mut fex = Fex::new(FexConfig::n_channels(arch, 10));
+        let mut i = 0usize;
+        b.bench_with_items(&format!("push_sample @ {label}"), 1.0, "samples", || {
+            black_box(fex.push_sample(black_box(audio[i % audio.len()])));
+            i += 1;
+        });
+    }
+    let steps = area::fig7_steps();
+    for (i, label) in ["baseline", "+mixed", "+shift"].iter().enumerate() {
+        println!(
+            "  {label:<10} area x{:.2}  power x{:.2}  (paper: 1/2.6/4.7x area, 1/2.4/5.7x power)",
+            steps[i].1, steps[i].2
+        );
+    }
+
+    println!("\nTable I — whole-utterance featurisation:");
+    let mut fex = Fex::new(FexConfig::design_point());
+    let s = b.bench_with_items("process 1s utterance @ 10ch", 8000.0, "samples", || {
+        fex.reset();
+        black_box(fex.process(black_box(&audio)));
+    });
+    println!(
+        "  {:.2} ms per 1 s utterance -> {:.0}x real time",
+        s.mean_ns / 1e6,
+        1e9 / s.mean_ns
+    );
+    b.finish();
+}

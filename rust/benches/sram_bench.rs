@@ -1,0 +1,61 @@
+//! Bench: the weight-SRAM twin (Fig. 13 context) — read path cost, bank
+//! counter overheads, and the timing-DES generation rate.
+
+mod common;
+
+use deltakws::energy::SramKind;
+use deltakws::sram::timing::{simulate, TimingParams};
+use deltakws::sram::{WeightSram, WORDS};
+use deltakws::util::bench::{black_box, Bench};
+use deltakws::util::prng::Pcg;
+
+fn main() {
+    let mut b = Bench::new("sram");
+
+    let mut sram = WeightSram::new(SramKind::NearVth);
+    for a in 0..WORDS {
+        sram.write_word(a, (a * 7) as u16);
+    }
+
+    // sequential row stream (the MAC array's access pattern: 96-word rows)
+    let mut addr = 0usize;
+    let s = b.bench_with_items("sequential row read (96 words)", 96.0, "words", || {
+        let base = (addr * 96) % (WORDS - 96);
+        let mut acc = 0u32;
+        for w in 0..96 {
+            acc = acc.wrapping_add(sram.read_word(base + w) as u32);
+        }
+        black_box(acc);
+        addr += 1;
+    });
+    println!(
+        "row stream: {:.2} ns/word ({:.0} Mwords/s host)",
+        s.mean_ns / 96.0,
+        96.0 / s.mean_ns * 1e3
+    );
+
+    // random word reads (FC access pattern)
+    let mut rng = Pcg::new(9);
+    let s = b.bench_with_items("random word read", 1.0, "words", || {
+        black_box(sram.read_word(rng.below(WORDS)));
+    });
+    println!("random read: {:.2} ns/word", s.mean_ns);
+
+    // energy accounting consistency
+    let reads_before = sram.reads;
+    sram.read_word(0);
+    assert_eq!(sram.reads, reads_before + 1);
+    println!(
+        "energy so far: {:.1} nJ near-Vth ({} reads)",
+        sram.read_energy_nj(),
+        sram.reads
+    );
+
+    // Fig. 13 timing DES generation
+    let p = TimingParams { skew_ns: 200.0, ..Default::default() };
+    let s = b.bench_with_items("timing DES, 100 cycles", 100.0, "cycles", || {
+        black_box(simulate(black_box(&p), 100));
+    });
+    println!("timing DES: {:.1} ns/cycle simulated", s.mean_ns / 100.0);
+    b.finish();
+}

@@ -1,0 +1,129 @@
+//! ΔEncoder: fixed-point temporal-difference encoder (paper Fig. 3, left).
+//!
+//! For each lane (input feature or hidden-state neuron) the encoder
+//! compares the current Q8.8 value against the lane's *reference* (the
+//! value at its last firing). If |delta| >= Δ_TH the lane **fires**: the
+//! delta is emitted into the ΔFIFO and the reference is refreshed; otherwise
+//! the lane is silent and costs neither MACs nor weight-SRAM reads.
+//!
+//! This is the exact integer counterpart of
+//! `python/compile/kernels/ref.threshold_delta`; with inputs on the Q8.8
+//! grid the two agree bit-for-bit (integration tests assert this via the
+//! float chip reference).
+
+/// Q8.8 activation word.
+pub type Act = i16;
+
+/// One encoded delta event: lane index + Q8.8 delta value (i32: the
+/// difference of two Q8.8 words needs 17 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeltaEvent {
+    pub lane: u16,
+    pub delta: i32,
+}
+
+/// Per-lane delta encoding over a lane group (x-lanes or h-lanes).
+///
+/// `cur` and `refs` must be equal length; fired lanes refresh `refs` in
+/// place and push an event into `out`. Returns the number of fired lanes.
+pub fn encode(cur: &[Act], refs: &mut [Act], delta_th: Act, out: &mut Vec<DeltaEvent>) -> usize {
+    debug_assert_eq!(cur.len(), refs.len());
+    debug_assert!(delta_th >= 0);
+    let mut fired = 0;
+    for (lane, (&c, r)) in cur.iter().zip(refs.iter_mut()).enumerate() {
+        let d = c as i32 - *r as i32; // fits i17, no overflow
+        if d != 0 && d.unsigned_abs() >= delta_th as u32 {
+            out.push(DeltaEvent { lane: lane as u16, delta: d });
+            *r = c;
+            fired += 1;
+        }
+    }
+    fired
+}
+
+/// Like [`encode`] but for Δ_TH = 0 *dense* mode the chip also supports:
+/// every lane emits its full current value against a zero reference —
+/// used by the dense-GRU baseline in `baseline`.
+pub fn encode_dense(cur: &[Act], out: &mut Vec<DeltaEvent>) -> usize {
+    let mut fired = 0;
+    for (lane, &c) in cur.iter().enumerate() {
+        if c != 0 {
+            out.push(DeltaEvent { lane: lane as u16, delta: c as i32 });
+            fired += 1;
+        }
+    }
+    fired
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_on_threshold_crossing() {
+        let cur = [100i16, 50, -100, 0];
+        let mut refs = [0i16, 45, -50, 0];
+        let mut out = Vec::new();
+        // deltas: 100, 5, -50, 0; th = 20 -> lanes 0 and 2 fire
+        let fired = encode(&cur, &mut refs, 20, &mut out);
+        assert_eq!(fired, 2);
+        assert_eq!(
+            out,
+            vec![DeltaEvent { lane: 0, delta: 100 }, DeltaEvent { lane: 2, delta: -50 }]
+        );
+        assert_eq!(refs, [100, 45, -100, 0]); // fired lanes refreshed only
+    }
+
+    #[test]
+    fn threshold_boundary_is_inclusive() {
+        let cur = [20i16, 19];
+        let mut refs = [0i16, 0];
+        let mut out = Vec::new();
+        let fired = encode(&cur, &mut refs, 20, &mut out);
+        assert_eq!(fired, 1);
+        assert_eq!(out[0].lane, 0);
+    }
+
+    #[test]
+    fn zero_threshold_fires_all_changes() {
+        let cur = [1i16, 0, -1, 5];
+        let mut refs = [0i16, 0, 0, 5];
+        let mut out = Vec::new();
+        let fired = encode(&cur, &mut refs, 0, &mut out);
+        assert_eq!(fired, 2); // lanes 0 and 2 changed; lane 1 and 3 identical
+    }
+
+    #[test]
+    fn silent_lane_keeps_old_reference_until_it_fires() {
+        // drift below threshold accumulates; once total drift crosses, the
+        // emitted delta is the FULL accumulated difference
+        let mut refs = [0i16];
+        let mut out = Vec::new();
+        for (t, cur) in [10i16, 19, 27].iter().enumerate() {
+            let fired = encode(&[*cur], &mut refs, 20, &mut out);
+            if t < 2 {
+                assert_eq!(fired, 0, "t={t}");
+            }
+        }
+        assert_eq!(out, vec![DeltaEvent { lane: 0, delta: 27 }]);
+        assert_eq!(refs[0], 27);
+    }
+
+    #[test]
+    fn negative_extreme_no_overflow() {
+        let cur = [i16::MIN];
+        let mut refs = [i16::MAX];
+        let mut out = Vec::new();
+        encode(&cur, &mut refs, 100, &mut out);
+        assert_eq!(out[0].delta, i16::MIN as i32 - i16::MAX as i32); // -65535, no wrap
+    }
+
+    #[test]
+    fn encode_dense_emits_nonzero_values() {
+        let mut out = Vec::new();
+        let fired = encode_dense(&[5i16, 0, -3], &mut out);
+        assert_eq!(fired, 2);
+        assert_eq!(out[0], DeltaEvent { lane: 0, delta: 5 });
+        assert_eq!(out[1], DeltaEvent { lane: 2, delta: -3 });
+    }
+}

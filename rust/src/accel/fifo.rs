@@ -1,0 +1,194 @@
+//! Hardware FIFO models: the ΔFIFOs feeding the MAC lanes and the
+//! asynchronous FIFO crossing the CLK_IIR → CLK_RNN clock-domain boundary.
+//!
+//! Functionally a bounded ring buffer; the twin additionally tracks
+//! high-water mark and overflow events so experiments can size the FIFOs
+//! (the ablation bench sweeps depth) and the coordinator can model
+//! backpressure on the SPI link.
+
+/// Bounded single-clock FIFO (ΔFIFO).
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    buf: std::collections::VecDeque<T>,
+    capacity: usize,
+    /// statistics
+    pub pushes: u64,
+    pub pops: u64,
+    pub overflows: u64,
+    pub high_water: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            buf: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+            pushes: 0,
+            pops: 0,
+            overflows: 0,
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.capacity
+    }
+
+    /// Push; returns `Err(v)` (and counts an overflow) when full — the
+    /// producer must stall, exactly like the hardware handshake.
+    pub fn push(&mut self, v: T) -> Result<(), T> {
+        if self.is_full() {
+            self.overflows += 1;
+            return Err(v);
+        }
+        self.buf.push_back(v);
+        self.pushes += 1;
+        self.high_water = self.high_water.max(self.buf.len());
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        let v = self.buf.pop_front();
+        if v.is_some() {
+            self.pops += 1;
+        }
+        v
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+/// Asynchronous FIFO between two clock domains (FEx → ΔRNN, paper Fig. 1).
+///
+/// The twin does not simulate metastability; it models the *capacity and
+/// ordering* contract plus the gray-code pointer synchronisation latency
+/// (a fixed 2-cycle consumer-side delay before an entry becomes visible),
+/// which is what matters for end-to-end latency accounting.
+#[derive(Debug, Clone)]
+pub struct AsyncFifo<T> {
+    inner: Fifo<(u64, T)>,
+    /// entries become pop-visible 2 consumer clock edges after push
+    sync_delay: u64,
+}
+
+impl<T> AsyncFifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self { inner: Fifo::new(capacity), sync_delay: 2 }
+    }
+
+    /// Push at producer time `t_prod` (in consumer-clock units).
+    pub fn push(&mut self, t_prod: u64, v: T) -> Result<(), T> {
+        self.inner.push((t_prod, v)).map_err(|(_, v)| v)
+    }
+
+    /// Pop an entry that is visible at consumer time `t_cons`.
+    pub fn pop(&mut self, t_cons: u64) -> Option<T> {
+        match self.inner.buf.front() {
+            Some(&(t, _)) if t + self.sync_delay <= t_cons => {
+                self.inner.pops += 1;
+                self.inner.buf.pop_front().map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn overflows(&self) -> u64 {
+        self.inner.overflows
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.inner.high_water
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_preserves_order() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            f.push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn fifo_overflow_rejects_and_counts() {
+        let mut f = Fifo::new(2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.overflows, 1);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.pop(), Some(1)); // contents untouched by the failed push
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        for _ in 0..3 {
+            f.pop();
+        }
+        f.push(9).unwrap();
+        assert_eq!(f.high_water, 5);
+    }
+
+    #[test]
+    fn async_fifo_sync_delay() {
+        let mut f = AsyncFifo::new(4);
+        f.push(10, "a").unwrap();
+        assert_eq!(f.pop(10), None); // not yet synchronised
+        assert_eq!(f.pop(11), None);
+        assert_eq!(f.pop(12), Some("a")); // visible after 2 consumer edges
+    }
+
+    #[test]
+    fn async_fifo_order_across_domains() {
+        let mut f = AsyncFifo::new(8);
+        f.push(0, 1).unwrap();
+        f.push(5, 2).unwrap();
+        assert_eq!(f.pop(100), Some(1));
+        assert_eq!(f.pop(100), Some(2));
+        assert_eq!(f.pop(100), None);
+    }
+
+    #[test]
+    fn async_fifo_capacity() {
+        let mut f = AsyncFifo::new(2);
+        f.push(0, 1).unwrap();
+        f.push(0, 2).unwrap();
+        assert!(f.push(0, 3).is_err());
+        assert_eq!(f.overflows(), 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! MAC array model: 8 multiply-accumulate lanes consuming broadcast delta
+//! events (paper Fig. 3).
+//!
+//! Dataflow: each non-zero delta event is broadcast to all ΔFIFOs; the 8
+//! MAC lanes then walk the fired lane's weight *row* (3H = 192 int8
+//! weights, packed two per 16-bit SRAM word), each lane owning an
+//! interleaved slice of the H = 64 neurons. One event therefore costs
+//! 3H/8 = 24 MAC cycles and 3H/2 = 96 word reads, which is exactly what
+//! the latency/energy calibration assumes (`energy::calib`).
+//!
+//! Numerics: delta (Q8.8, i32) x weight (Q1.6, i8) accumulated at
+//! value-frac 14 into saturating i32 accumulators — the "16b MAC" of the
+//! paper with guard bits.
+
+use crate::fixed;
+
+/// Number of physical MAC lanes on the chip.
+pub const MAC_LANES: usize = 8;
+/// Accumulator width (bits) — saturating.
+pub const ACC_BITS: u32 = 32;
+/// Value fractional bits of the accumulators: Q8.8 delta x Q1.6 weight.
+pub const ACC_FRAC: u32 = 14;
+
+/// Cycle cost of processing one fired delta lane against `targets` gate
+/// pre-activations (3H for the ΔGRU).
+#[inline]
+pub fn cycles_per_event(targets: usize) -> u64 {
+    (targets as u64).div_ceil(MAC_LANES as u64)
+}
+
+/// SRAM word reads for one fired delta lane (2 int8 weights per word).
+#[inline]
+pub fn words_per_event(targets: usize) -> u64 {
+    (targets as u64).div_ceil(2)
+}
+
+/// Multiply-accumulate one broadcast delta into a row of accumulators.
+///
+/// `weights` is the fired lane's weight row (one i8 per target), `acc` the
+/// gate pre-activation memory. Saturating, matching the silicon datapath.
+#[inline]
+pub fn mac_row(delta: i32, weights: &[i8], acc: &mut [i32]) {
+    debug_assert_eq!(weights.len(), acc.len());
+    for (a, &w) in acc.iter_mut().zip(weights.iter()) {
+        let p = delta * w as i32; // Q8.8 x Q1.6 -> frac 14
+        *a = fixed::sat(*a as i64 + p as i64, ACC_BITS) as i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_cost_matches_calibration() {
+        // 3H = 192 targets over 8 lanes = 24 cycles — the calib constant
+        assert_eq!(cycles_per_event(192), crate::energy::calib::CYCLES_PER_LANE);
+        assert_eq!(words_per_event(192), 96);
+    }
+
+    #[test]
+    fn ragged_rows_round_up() {
+        assert_eq!(cycles_per_event(1), 1);
+        assert_eq!(cycles_per_event(9), 2);
+        assert_eq!(words_per_event(3), 2);
+    }
+
+    #[test]
+    fn mac_row_accumulates() {
+        let mut acc = [0i32; 4];
+        mac_row(256, &[64, -64, 1, 0], &mut acc); // delta = 1.0 Q8.8
+        // 1.0 * 1.0 (Q1.6 64) at frac 14 = 16384
+        assert_eq!(acc, [16384, -16384, 256, 0]);
+        mac_row(128, &[64, 64, 64, 64], &mut acc); // += 0.5
+        assert_eq!(acc[0], 16384 + 8192);
+    }
+
+    #[test]
+    fn mac_row_saturates() {
+        let mut acc = [i32::MAX - 10];
+        mac_row(32767, &[127], &mut acc);
+        assert_eq!(acc[0], i32::MAX); // clamps, no wrap
+        let mut acc = [i32::MIN + 10];
+        mac_row(-32768, &[127], &mut acc);
+        assert_eq!(acc[0], i32::MIN);
+    }
+
+    #[test]
+    fn zero_delta_is_identity() {
+        let mut acc = [5i32, -7];
+        mac_row(0, &[127, -128], &mut acc);
+        assert_eq!(acc, [5, -7]);
+    }
+}

@@ -1,0 +1,492 @@
+//! Temporally-sparse ΔRNN accelerator twin (paper Fig. 3).
+//!
+//! Per frame: the **ΔEncoder** thresholds input-feature and hidden-state
+//! deltas; fired events are broadcast through the **ΔFIFOs** to the 8
+//! **MAC** lanes, which stream the fired lane's weight row out of the
+//! near-V_TH **SRAM** (two int8 weights per 16-bit word) and accumulate
+//! into the gate pre-activation memories; the **NLU** applies σ/tanh and
+//! the **State Assembler** commits the new hidden state; a dense **FC**
+//! readout produces the 12-class logits.
+//!
+//! The twin is *functionally bit-accurate* (every arithmetic step defined
+//! in [`gru`], [`nlu`], [`mac`]) and *cycle-approximate*: per-frame cycles =
+//! ΔEncoder pass + 24 cycles per fired lane + NLU/assembly + FC + pipeline
+//! fill, the structural decomposition validated against the paper's
+//! measured latencies in `energy::calib`.
+
+pub mod encoder;
+pub mod fifo;
+pub mod gru;
+pub mod mac;
+pub mod nlu;
+
+use crate::energy::ChipActivity;
+use crate::sram::WeightSram;
+use encoder::DeltaEvent;
+use gru::{QuantParams, StateBuffer, C, G, H, K, WORDS_PER_FC_ROW, WORDS_PER_LANE};
+use nlu::Nlu;
+
+/// Accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// delta threshold on the Q8.8 activation grid (0.2 -> 51)
+    pub delta_th_q8: i16,
+    /// per-side threshold overrides (ablation: Δ on inputs only / hidden
+    /// only). `None` = use `delta_th_q8`.
+    pub delta_th_x_q8: Option<i16>,
+    pub delta_th_h_q8: Option<i16>,
+    /// active input lanes (channel selection; inactive lanes are never
+    /// scanned by the ΔEncoder)
+    pub active_x: [bool; C],
+    /// ΔFIFO depth (events); the silicon uses a small per-MAC FIFO
+    pub fifo_depth: usize,
+    /// MAC lanes (8 on the chip; the ablation bench sweeps this)
+    pub mac_lanes: usize,
+}
+
+impl AccelConfig {
+    /// Paper design point: Δ_TH = 0.2 (51/256), 10 active channels.
+    pub fn design_point() -> Self {
+        let mut active_x = [false; C];
+        for slot in active_x
+            .iter_mut()
+            .skip(crate::fex::design::DESIGN_CHANNEL_OFFSET)
+            .take(crate::fex::design::DESIGN_CHANNELS)
+        {
+            *slot = true;
+        }
+        Self {
+            delta_th_q8: 51,
+            delta_th_x_q8: None,
+            delta_th_h_q8: None,
+            active_x,
+            fifo_depth: 16,
+            mac_lanes: mac::MAC_LANES,
+        }
+    }
+
+    pub fn with_delta_th(mut self, th_q8: i16) -> Self {
+        self.delta_th_q8 = th_q8;
+        self
+    }
+
+    pub fn th_x(&self) -> i16 {
+        self.delta_th_x_q8.unwrap_or(self.delta_th_q8)
+    }
+
+    pub fn th_h(&self) -> i16 {
+        self.delta_th_h_q8.unwrap_or(self.delta_th_q8)
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active_x.iter().filter(|&&a| a).count()
+    }
+}
+
+/// Per-frame result.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameResult {
+    /// FC logits at value fraction 14
+    pub logits: [i64; K],
+    /// fired lanes this frame (x + h)
+    pub fired: usize,
+    /// cycles this frame
+    pub cycles: u64,
+}
+
+/// The ΔRNN accelerator twin.
+pub struct DeltaRnnAccel {
+    pub config: AccelConfig,
+    params: QuantParams,
+    pub sram: WeightSram,
+    state: StateBuffer,
+    nlu: Nlu,
+    /// ΔFIFO high-water / overflow stats (events are drained within the
+    /// frame, so depth matters only for burst analysis)
+    pub fifo: fifo::Fifo<DeltaEvent>,
+    pub activity: ChipActivity,
+    events: Vec<DeltaEvent>,
+}
+
+impl DeltaRnnAccel {
+    /// Build from quantised parameters; loads the weight image into the
+    /// SRAM twin (write energy not counted toward inference).
+    pub fn new(params: QuantParams, config: AccelConfig, kind: crate::energy::SramKind) -> Self {
+        let mut sram = WeightSram::new(kind);
+        sram.load_image(&gru::to_sram_image(&params));
+        sram.reset_counters();
+        let fifo_depth = config.fifo_depth;
+        Self {
+            config,
+            params,
+            sram,
+            state: StateBuffer::default(),
+            nlu: Nlu::new(),
+            fifo: fifo::Fifo::new(fifo_depth),
+            activity: ChipActivity::default(),
+            events: Vec::with_capacity(C + H),
+        }
+    }
+
+    /// Reset recurrent state (between utterances) without clearing counters.
+    pub fn reset_state(&mut self) {
+        self.state.reset();
+        self.fifo.clear();
+    }
+
+    pub fn state(&self) -> &StateBuffer {
+        &self.state
+    }
+
+    /// Process one feature frame (Q8.8 activations per hardware channel
+    /// slot; inactive slots ignored).
+    pub fn step_frame(&mut self, x: &[i16; C]) -> FrameResult {
+        let th_x = self.config.th_x();
+        let th_h = self.config.th_h();
+        self.events.clear();
+
+        // --- ΔEncoder pass: x lanes (active only), then h lanes ---------
+        let mut enc_cycles = 0u64;
+        let mut fired_x = 0usize;
+        for i in 0..C {
+            if !self.config.active_x[i] {
+                continue;
+            }
+            enc_cycles += 1;
+            let d = x[i] as i32 - self.state.x_ref[i] as i32;
+            if d != 0 && d.unsigned_abs() >= th_x as u32 {
+                self.events.push(DeltaEvent { lane: i as u16, delta: d });
+                self.state.x_ref[i] = x[i];
+                fired_x += 1;
+            }
+        }
+        let x_events = self.events.len();
+        let mut fired_h = 0usize;
+        for j in 0..H {
+            enc_cycles += 1;
+            let d = self.state.h[j] as i32 - self.state.h_ref[j] as i32;
+            if d != 0 && d.unsigned_abs() >= th_h as u32 {
+                self.events.push(DeltaEvent { lane: j as u16, delta: d });
+                self.state.h_ref[j] = self.state.h[j];
+                fired_h += 1;
+            }
+        }
+
+        // --- broadcast + MAC: stream weight rows from the SRAM ----------
+        let mut mac_cycles = 0u64;
+        for (idx, ev) in self.events.iter().enumerate() {
+            // ΔFIFO burst tracking (drained at MAC rate within the frame)
+            let _ = self.fifo.push(*ev);
+            let is_x = idx < x_events;
+            let lane = ev.lane as usize;
+            let base = if is_x {
+                gru::BASE_X + lane * WORDS_PER_LANE
+            } else {
+                gru::BASE_H + lane * WORDS_PER_LANE
+            };
+            // walk the 96-word row; two weights per word
+            let mut g = 0usize;
+            for w in 0..WORDS_PER_LANE {
+                let (lo, hi) = self.sram.read_weight_pair(base + w);
+                for wt in [lo, hi] {
+                    let p = ev.delta * wt as i32;
+                    let j = g % H;
+                    match g / H {
+                        0 => self.state.m_r[j] = sat_acc(self.state.m_r[j], p),
+                        1 => self.state.m_u[j] = sat_acc(self.state.m_u[j], p),
+                        _ => {
+                            if is_x {
+                                self.state.m_xc[j] = sat_acc(self.state.m_xc[j], p);
+                            } else {
+                                self.state.m_hc[j] = sat_acc(self.state.m_hc[j], p);
+                            }
+                        }
+                    }
+                    g += 1;
+                }
+            }
+            mac_cycles += (G as u64).div_ceil(self.config.mac_lanes as u64);
+            self.fifo.pop();
+        }
+
+        // --- NLU + state assembly ---------------------------------------
+        gru::assemble_state(&mut self.state, &self.params.b, &self.nlu, self.params.m_frac());
+        let nlu_cycles = H as u64;
+
+        // --- FC readout (dense every frame) -------------------------------
+        let logits =
+            gru::fc_readout(&self.state, &self.params.w_fc, &self.params.b_fc, self.params.w_frac);
+        // count FC SRAM traffic: 64 rows x 6 words
+        for j in 0..H {
+            for w in 0..WORDS_PER_FC_ROW {
+                let _ = self.sram.read_word(gru::BASE_FC + j * WORDS_PER_FC_ROW + w);
+            }
+        }
+        let fc_cycles = (H * K) as u64 / self.config.mac_lanes as u64;
+
+        // --- accounting ----------------------------------------------------
+        let fired = self.events.len();
+        let cycles = enc_cycles + mac_cycles + nlu_cycles + fc_cycles + PIPELINE_FILL;
+        self.activity.frames += 1;
+        self.activity.mac_ops += fired as u64 * G as u64 + (H * K) as u64;
+        self.activity.sram_word_reads =
+            self.sram.reads; // SRAM twin is the source of truth
+        self.activity.rnn_cycles += cycles;
+        self.activity.fired_lanes += fired as u64;
+        self.activity.total_lanes += (self.config.n_active() + H) as u64;
+        self.activity.fired_x += fired_x as u64;
+        self.activity.total_x += self.config.n_active() as u64;
+        self.activity.fired_h += fired_h as u64;
+        self.activity.total_h += H as u64;
+
+        FrameResult { logits, fired, cycles }
+    }
+
+    /// Run a whole utterance of feature frames; returns (class, mean
+    /// logits) using the paper's posterior averaging after `warmup` frames.
+    pub fn classify(&mut self, frames: &[[i16; C]], warmup: usize) -> (usize, [i64; K]) {
+        self.reset_state();
+        let mut acc = [0i64; K];
+        let mut n = 0i64;
+        for (t, f) in frames.iter().enumerate() {
+            let r = self.step_frame(f);
+            if t >= warmup {
+                for k in 0..K {
+                    acc[k] += r.logits[k];
+                }
+                n += 1;
+            }
+        }
+        if n > 0 {
+            for a in acc.iter_mut() {
+                *a /= n;
+            }
+        }
+        let best = (0..K).max_by_key(|&k| acc[k]).unwrap_or(0);
+        (best, acc)
+    }
+}
+
+#[inline]
+fn sat_acc(a: i32, p: i32) -> i32 {
+    crate::fixed::sat(a as i64 + p as i64, mac::ACC_BITS) as i32
+}
+
+/// Fixed pipeline fill/drain cycles per frame (see `energy::calib` docs).
+pub const PIPELINE_FILL: u64 = 40;
+
+/// ΔRNN accelerator area (mm²): NAND2 gate model anchored to the paper's
+/// 0.319 mm² block. 8 MAC lanes (8x16 multipliers + 32b accumulators),
+/// ΔEncoder comparators, ΔFIFOs, NLU LUTs, state buffer (0.58 kB of
+/// flops/latches) and control.
+pub fn area_mm2() -> f64 {
+    // gates: 8 MACs (8x16 mult = 128 FA + 32b acc) + encoder (80 x 17b
+    // compare) + state buffer (4736 bits) + NLU (2 x 257 x 16b ROM-ish) +
+    // FIFOs + control
+    let mac_gates = 8.0 * (8.0 * 16.0 * 5.0 + 32.0 * 5.0);
+    let enc_gates = 80.0 * 17.0 * 2.0;
+    let state_gates = 4736.0 * 4.5;
+    let nlu_gates = 2.0 * 257.0 * 16.0 * 1.2;
+    let fifo_gates = 16.0 * 24.0 * 4.5 * 8.0;
+    let ctrl = 4_000.0;
+    let total = mac_gates + enc_gates + state_gates + nlu_gates + fifo_gates + ctrl;
+    total / GATES_PER_MM2_RNN
+}
+
+/// Effective gate density for the ΔRNN block, anchored at 0.319 mm²
+/// (58.1 kGE / 0.319 mm²; low vs raw 65 nm logic density because the block
+/// is dominated by the sparsely-used state buffer and FIFO flops).
+const GATES_PER_MM2_RNN: f64 = 182_000.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::SramKind;
+
+    fn rng_quant(seed: u64) -> QuantParams {
+        let mut s = seed;
+        let mut next_i8 = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 56) as i8) / 4
+        };
+        let mut q = QuantParams::zeroed();
+        q.w_x.iter_mut().flatten().for_each(|w| *w = next_i8());
+        q.w_h.iter_mut().flatten().for_each(|w| *w = next_i8());
+        q.b.iter_mut().for_each(|w| *w = next_i8() as i16 * 4);
+        q.w_fc.iter_mut().flatten().for_each(|w| *w = next_i8());
+        q
+    }
+
+    fn frame(vals: &[(usize, i16)]) -> [i16; C] {
+        let mut f = [0i16; C];
+        for &(i, v) in vals {
+            f[i] = v;
+        }
+        f
+    }
+
+    #[test]
+    fn zero_input_high_threshold_goes_fully_silent() {
+        // With a high Δ_TH nothing re-fires once the initial bias-driven
+        // transient is absorbed: frames cost only the fixed cycle floor.
+        // (Random *untrained* recurrent weights can limit-cycle at small
+        // thresholds — trained nets are regularised against this — so the
+        // settle guarantee is asserted at a threshold above the cycle
+        // amplitude.)
+        let cfg = AccelConfig::design_point().with_delta_th(1000);
+        let mut acc = DeltaRnnAccel::new(rng_quant(1), cfg, SramKind::NearVth);
+        let zero = [0i16; C];
+        let mut fired_last = usize::MAX;
+        for _ in 0..10 {
+            fired_last = acc.step_frame(&zero).fired;
+        }
+        assert_eq!(fired_last, 0, "accelerator did not settle");
+        let r = acc.step_frame(&zero);
+        assert_eq!(
+            r.cycles,
+            (10 + 64) + 64 + 96 + PIPELINE_FILL,
+            "fixed cycle floor (enc 74 + NLU 64 + FC 96 + fill 40 = calib 274)"
+        );
+        assert_eq!(r.cycles, crate::energy::calib::CYCLES_FIXED);
+    }
+
+    #[test]
+    fn dense_mode_cycle_count_matches_calibration() {
+        // Θ=0 with all lanes changing every frame = the 16.4 ms anchor
+        let cfg = AccelConfig::design_point().with_delta_th(0);
+        let mut acc = DeltaRnnAccel::new(rng_quant(2), cfg, SramKind::NearVth);
+        // alternate two frames that differ on every active lane, with h
+        // evolving -> all 74 lanes fire
+        let fa = frame(&(4..14).map(|i| (i, 100)).collect::<Vec<_>>());
+        let fb = frame(&(4..14).map(|i| (i, -100)).collect::<Vec<_>>());
+        acc.step_frame(&fa);
+        for _ in 0..4 {
+            acc.step_frame(&fb);
+            acc.step_frame(&fa);
+        }
+        let r = acc.step_frame(&fb);
+        // all 10 x lanes fire; h lanes: most fire. cycles close to 2050.
+        assert!(r.fired >= 70, "fired {}", r.fired);
+        assert!(
+            (r.cycles as i64 - 2050).unsigned_abs() < 120,
+            "cycles {} vs calib 2050",
+            r.cycles
+        );
+    }
+
+    #[test]
+    fn sparsity_monotone_in_threshold() {
+        let mk = |th: i16| {
+            let cfg = AccelConfig::design_point().with_delta_th(th);
+            let mut acc = DeltaRnnAccel::new(rng_quant(3), cfg, SramKind::NearVth);
+            // pseudo-speech: slowly-varying ramps
+            for t in 0..40i32 {
+                let f = frame(
+                    &(4..14)
+                        .map(|i| {
+                            (i, ((t * 7 + i as i32 * 13) % 160) as i16)
+                        })
+                        .collect::<Vec<_>>(),
+                );
+                acc.step_frame(&f);
+            }
+            acc.activity.sparsity()
+        };
+        let s0 = mk(0);
+        let s1 = mk(26);
+        let s2 = mk(51);
+        let s3 = mk(102);
+        assert!(s0 <= s1 + 1e-9 && s1 <= s2 + 1e-9 && s2 <= s3 + 1e-9, "{s0} {s1} {s2} {s3}");
+        assert!(s3 > s0, "threshold must create sparsity");
+    }
+
+    #[test]
+    fn sram_reads_proportional_to_fired_lanes() {
+        let cfg = AccelConfig::design_point().with_delta_th(51);
+        let mut acc = DeltaRnnAccel::new(rng_quant(4), cfg, SramKind::NearVth);
+        let f1 = frame(&[(4, 200), (5, 150)]);
+        acc.step_frame(&f1);
+        let fired = acc.activity.fired_lanes;
+        let expected = fired * 96 + 384; // rows + FC
+        assert_eq!(acc.sram.reads, expected, "fired={fired}");
+    }
+
+    #[test]
+    fn classify_is_deterministic_and_resets() {
+        let mut acc =
+            DeltaRnnAccel::new(rng_quant(5), AccelConfig::design_point(), SramKind::NearVth);
+        let utt: Vec<[i16; C]> = (0..20)
+            .map(|t| frame(&[(6, (t * 11 % 200) as i16), (9, (t * 7 % 150) as i16)]))
+            .collect();
+        let (c1, l1) = acc.classify(&utt, 4);
+        let (c2, l2) = acc.classify(&utt, 4);
+        assert_eq!(c1, c2);
+        assert_eq!(l1, l2, "classify must reset state between calls");
+    }
+
+    #[test]
+    fn quantized_accel_matches_functional_float_loosely() {
+        // end-to-end: the accelerator (int8/Q8.8/LUT path) vs the f64
+        // reference on identical (de-quantised) weights; hidden states must
+        // stay close over a short utterance
+        let q = rng_quant(6);
+        let wscale = (1i32 << q.w_frac) as f32;
+        let mut pf = gru::FloatParams::zeros();
+        for i in 0..C {
+            for g in 0..G {
+                pf.w_x[i][g] = q.w_x[i][g] as f32 / wscale;
+            }
+        }
+        for j in 0..H {
+            for g in 0..G {
+                pf.w_h[j][g] = q.w_h[j][g] as f32 / wscale;
+            }
+        }
+        for g in 0..G {
+            pf.b[g] = q.b[g] as f32 / 256.0;
+        }
+        let mut cfg = AccelConfig::design_point().with_delta_th(0);
+        cfg.active_x = [true; C];
+        let mut acc = DeltaRnnAccel::new(q, cfg, SramKind::NearVth);
+        let mut fst = gru::FloatState::new(C);
+        for t in 0..12i32 {
+            let xq: Vec<i16> = (0..C).map(|i| ((t * 17 + i as i32 * 31) % 256) as i16).collect();
+            let xf: Vec<f64> = xq.iter().map(|&v| v as f64 / 256.0).collect();
+            let mut xarr = [0i16; C];
+            xarr.copy_from_slice(&xq);
+            acc.step_frame(&xarr);
+            gru::float_delta_step(&pf, &mut fst, &xf, 0.0);
+            for j in 0..H {
+                let fx = acc.state().h[j] as f64 / 256.0;
+                // Q8.8 state + LUT nonlinearities drift vs f64 through the
+                // recurrent feedback; bound the accumulated error
+                assert!(
+                    (fx - fst.h[j]).abs() < 0.15,
+                    "t={t} j={j}: {fx} vs {}",
+                    fst.h[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn activity_sparsity_fields_consistent() {
+        let mut acc =
+            DeltaRnnAccel::new(rng_quant(7), AccelConfig::design_point(), SramKind::NearVth);
+        for t in 0..10i32 {
+            let f = frame(&[(4, (t * 30) as i16)]);
+            acc.step_frame(&f);
+        }
+        let a = &acc.activity;
+        assert_eq!(a.fired_lanes, a.fired_x + a.fired_h);
+        assert_eq!(a.total_lanes, a.total_x + a.total_h);
+        assert_eq!(a.total_x, 10 * 10); // 10 frames x 10 active channels
+        assert_eq!(a.total_h, 10 * 64);
+    }
+
+    #[test]
+    fn area_anchored() {
+        let a = area_mm2();
+        assert!((a - 0.319).abs() / 0.319 < 0.05, "{a}");
+    }
+}

@@ -1,0 +1,149 @@
+//! NLU: the non-linearity unit — sigmoid/tanh lookup tables with linear
+//! interpolation (paper Fig. 3, the "MAC + NLU" lanes).
+//!
+//! Input: gate pre-activation in Q4.12 (i32, clamped to [-8, 8)).
+//! Tables: 256 entries over [-8, 8) (step 1/16), interpolated linearly on
+//! the 8 fractional bits below the index — one small multiplier in
+//! hardware, same as EdgeDRNN's NLU. Output: Q0.15 for sigmoid (0..32767),
+//! Q1.15 for tanh (-32768..32767).
+
+/// Pre-activation fixed-point format fed to the LUTs.
+pub const PRE_FRAC: u32 = 12; // Q4.12
+const LUT_SIZE: usize = 256;
+/// LUT input step = 16 entries per unit → shift from Q4.12 to index.
+const IDX_SHIFT: u32 = PRE_FRAC - 4; // 2^-4 = 1/16 per entry
+
+/// Sigmoid/tanh LUT pair (one per chip; shared by all 8 MAC lanes).
+#[derive(Debug, Clone)]
+pub struct Nlu {
+    sigmoid: [i32; LUT_SIZE + 1],
+    tanh: [i32; LUT_SIZE + 1],
+}
+
+impl Default for Nlu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Nlu {
+    pub fn new() -> Self {
+        let mut sigmoid = [0i32; LUT_SIZE + 1];
+        let mut tanh = [0i32; LUT_SIZE + 1];
+        for i in 0..=LUT_SIZE {
+            let x = (i as f64 - 128.0) / 16.0; // [-8, 8]
+            sigmoid[i] = ((1.0 / (1.0 + (-x).exp())) * 32768.0).round() as i32;
+            tanh[i] = (x.tanh() * 32767.0).round() as i32;
+        }
+        Self { sigmoid, tanh }
+    }
+
+    #[inline]
+    fn lookup(table: &[i32; LUT_SIZE + 1], pre_q12: i32) -> i32 {
+        // clamp to the covered range [-8, 8)
+        let min = -(8 << PRE_FRAC);
+        let max = (8 << PRE_FRAC) - 1;
+        let x = pre_q12.clamp(min, max) - min; // 0 .. 16*2^12-1
+        let idx = (x >> IDX_SHIFT) as usize;
+        let frac = x & ((1 << IDX_SHIFT) - 1); // 8 bits below the index
+        let a = table[idx];
+        let b = table[idx + 1];
+        a + (((b - a) * frac) >> IDX_SHIFT)
+    }
+
+    /// σ(pre) in Q0.15 (0..=32768).
+    #[inline]
+    pub fn sigmoid_q15(&self, pre_q12: i32) -> i32 {
+        Self::lookup(&self.sigmoid, pre_q12)
+    }
+
+    /// tanh(pre) in Q1.15 (≈ -32767..=32767).
+    #[inline]
+    pub fn tanh_q15(&self, pre_q12: i32) -> i32 {
+        Self::lookup(&self.tanh, pre_q12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q12(x: f64) -> i32 {
+        (x * 4096.0).round() as i32
+    }
+
+    #[test]
+    fn sigmoid_key_points() {
+        let nlu = Nlu::new();
+        assert_eq!(nlu.sigmoid_q15(0), 16384); // σ(0) = 0.5
+        assert!(nlu.sigmoid_q15(q12(7.9)) > 32700); // saturates high
+        assert!(nlu.sigmoid_q15(q12(-8.0)) < 30); // saturates low
+    }
+
+    #[test]
+    fn tanh_key_points() {
+        let nlu = Nlu::new();
+        assert_eq!(nlu.tanh_q15(0), 0);
+        assert!(nlu.tanh_q15(q12(7.9)) > 32700);
+        assert!(nlu.tanh_q15(q12(-7.9)) < -32700);
+    }
+
+    #[test]
+    fn sigmoid_error_bound() {
+        let nlu = Nlu::new();
+        for i in -32000..32000i32 {
+            if i % 37 != 0 {
+                continue;
+            }
+            let x = i as f64 / 4096.0;
+            let expect = 1.0 / (1.0 + (-x).exp());
+            let got = nlu.sigmoid_q15(i) as f64 / 32768.0;
+            assert!((got - expect).abs() < 3e-4, "x={x} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn tanh_error_bound() {
+        let nlu = Nlu::new();
+        for i in -32000..32000i32 {
+            if i % 41 != 0 {
+                continue;
+            }
+            let x = i as f64 / 4096.0;
+            let got = nlu.tanh_q15(i) as f64 / 32767.0;
+            assert!((got - x.tanh()).abs() < 4e-4, "x={x}");
+        }
+    }
+
+    #[test]
+    fn monotone() {
+        let nlu = Nlu::new();
+        let mut ps = i32::MIN;
+        let mut pt = i32::MIN;
+        for i in (-40000..40000).step_by(97) {
+            let s = nlu.sigmoid_q15(i);
+            let t = nlu.tanh_q15(i);
+            assert!(s >= ps && t >= pt, "i={i}");
+            ps = s;
+            pt = t;
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range_without_panic() {
+        let nlu = Nlu::new();
+        assert_eq!(nlu.sigmoid_q15(i32::MAX / 2), nlu.sigmoid_q15(q12(7.9999)));
+        assert_eq!(nlu.tanh_q15(i32::MIN / 2), nlu.tanh_q15(-(8 << PRE_FRAC)));
+    }
+
+    #[test]
+    fn symmetry() {
+        let nlu = Nlu::new();
+        for i in (0..30000).step_by(111) {
+            // tanh odd symmetry (within 1 LSB of table rounding)
+            assert!((nlu.tanh_q15(i) + nlu.tanh_q15(-i)).abs() <= 2);
+            // sigmoid(x) + sigmoid(-x) = 1
+            assert!((nlu.sigmoid_q15(i) + nlu.sigmoid_q15(-i) - 32768).abs() <= 2);
+        }
+    }
+}

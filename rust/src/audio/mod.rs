@@ -1,0 +1,144 @@
+//! Synthetic Google-Speech-Commands substrate.
+//!
+//! The real GSCD download is gated in this environment, so the corpus is
+//! replaced by a formant-synthesised equivalent (see DESIGN.md §1): each of
+//! the paper's 12 classes maps to a phone sequence rendered by
+//! [`synth::render`] with per-utterance speaker randomisation (pitch, rate,
+//! amplitude, vocal-tract scale, onset) plus background noise. "unknown"
+//! draws from a disjoint pool of other words; "silence" is noise only.
+//!
+//! Class order matches `crate::CLASS_LABELS`:
+//! `silence, unknown, down, go, left, no, off, on, right, stop, up, yes`.
+
+pub mod synth;
+
+use crate::util::prng::Pcg;
+use synth::*;
+
+/// Samples per utterance (1 s at 8 kHz).
+pub const UTT_SAMPLES: usize = 8_000;
+
+/// Phone sequence for each keyword class (index into [`crate::CLASS_LABELS`]).
+fn keyword_phones(class: usize, rng: &mut Pcg) -> Vec<Phone> {
+    match crate::CLASS_LABELS[class] {
+        "silence" => vec![],
+        "unknown" => {
+            // disjoint word pool: tree, bed, cat, bird, house, wow, sheila, visual
+            let pool: [&[Phone]; 8] = [
+                &[T, R, IY],
+                &[B, EH, D],
+                &[K, AE, T],
+                &[B, ER, D],
+                &[SH, AH, UW, S],
+                &[W, AA, W],
+                &[SH, IY, L, AH],
+                &[W, IH, SH, UW, AH, L],
+            ];
+            pool[rng.below(pool.len())].to_vec()
+        }
+        "down" => vec![D, AA, UW, N],
+        "go" => vec![G, OW, UW],
+        "left" => vec![L, EH, F, T],
+        "no" => vec![N, OW, UW],
+        "off" => vec![AO, F],
+        "on" => vec![AA, N],
+        "right" => vec![R, AA, IY, T],
+        "stop" => vec![S, T, AA, P],
+        "up" => vec![AH, P],
+        "yes" => vec![Y, EH, S],
+        other => unreachable!("unknown class label {other}"),
+    }
+}
+
+/// Synthesise one utterance for `class` (float samples in [-1, 1]).
+pub fn synth_utterance(class: usize, rng: &mut Pcg) -> Vec<f64> {
+    assert!(class < crate::NUM_CLASSES);
+    let phones = keyword_phones(class, rng);
+    let mut audio = render(&phones, UTT_SAMPLES, rng);
+    if phones.is_empty() {
+        // pure background: noise floor well below speech level
+        let level = rng.range_f64(0.0003, 0.003);
+        for v in audio.iter_mut() {
+            *v = level * rng.normal();
+        }
+    } else {
+        let snr = rng.range_f64(12.0, 30.0);
+        add_noise(&mut audio, snr, rng);
+    }
+    audio
+}
+
+/// Quantise float audio to the chip's 12-bit ADC word (Q1.11).
+pub fn quantize_12b(audio: &[f64]) -> Vec<i64> {
+    audio
+        .iter()
+        .map(|&v| crate::fixed::sat((v * 2048.0).round() as i64, 12))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_classes_synthesise() {
+        for class in 0..crate::NUM_CLASSES {
+            let audio = synth_utterance(class, &mut Pcg::new(42 + class as u64));
+            assert_eq!(audio.len(), UTT_SAMPLES);
+            assert!(audio.iter().all(|v| v.abs() <= 1.0), "class {class} clipped");
+        }
+    }
+
+    #[test]
+    fn silence_is_quiet_speech_is_not() {
+        let sil = synth_utterance(0, &mut Pcg::new(1));
+        let yes = synth_utterance(11, &mut Pcg::new(1));
+        let rms = |a: &[f64]| (a.iter().map(|v| v * v).sum::<f64>() / a.len() as f64).sqrt();
+        assert!(rms(&yes) > 5.0 * rms(&sil), "yes {} sil {}", rms(&yes), rms(&sil));
+        assert!(rms(&sil) > 0.0, "silence must still have a noise floor");
+    }
+
+    #[test]
+    fn unknown_pool_varies() {
+        // different seeds should draw different unknown words (durations differ)
+        let a = synth_utterance(1, &mut Pcg::new(10));
+        let b = synth_utterance(1, &mut Pcg::new(11));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn quantize_range() {
+        let q = quantize_12b(&[-1.0, -0.5, 0.0, 0.5, 0.9995]);
+        assert_eq!(q[0], -2048);
+        assert_eq!(q[1], -1024);
+        assert_eq!(q[2], 0);
+        assert_eq!(q[3], 1024);
+        assert_eq!(q[4], 2047); // saturates at +full-scale
+    }
+
+    #[test]
+    fn classes_are_spectrally_distinct() {
+        // "yes" ends in the /s/ fricative (~3.2 kHz noise); "no" is fully
+        // voiced and low — the 3.2 kHz / 500 Hz energy ratio separates them
+        let mut wins = 0;
+        for seed in 0..8 {
+            let yes = synth_utterance(11, &mut Pcg::new(100 + seed));
+            let no = synth_utterance(5, &mut Pcg::new(100 + seed));
+            let r_yes =
+                synth::band_energy(&yes, 3_200.0) / synth::band_energy(&yes, 500.0).max(1e-12);
+            let r_no =
+                synth::band_energy(&no, 3_200.0) / synth::band_energy(&no, 500.0).max(1e-12);
+            if r_yes > r_no {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 6, "only {wins}/8 seeds separable");
+    }
+
+    #[test]
+    fn deterministic_given_rng_state() {
+        let a = synth_utterance(5, &mut Pcg::new(7));
+        let b = synth_utterance(5, &mut Pcg::new(7));
+        assert_eq!(a, b);
+    }
+}

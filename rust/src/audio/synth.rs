@@ -1,0 +1,301 @@
+//! Formant-synthesis engine: renders keyword utterances as 8 kHz audio.
+//!
+//! Classic source–filter synthesis (Klatt-style, much simplified): a voiced
+//! glottal source (band-limited pulse train with shimmer/jitter) and an
+//! unvoiced noise source are mixed per-phone and shaped by three cascaded
+//! two-pole formant resonators whose centre frequencies glide between
+//! phone targets. Stops insert closure silence + a burst; fricatives are
+//! high-passed noise. This produces exactly the structure a Mel IIR
+//! filter bank + ΔGRU exploits: smooth, class-dependent multi-band
+//! envelope trajectories — the behavioural stand-in for the gated GSCD
+//! download (DESIGN.md §1 substitutions).
+
+use crate::util::prng::Pcg;
+
+pub const FS: f64 = 8_000.0;
+
+/// Voicing mode of a phone.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// voiced, formant-shaped (vowels, nasals, liquids)
+    Voiced,
+    /// unvoiced frication noise, high-pass-ish (s, f, sh)
+    Fricative,
+    /// closure silence followed by a short wide-band burst (p, t, k, b, d, g)
+    Stop,
+    /// silence
+    Sil,
+}
+
+/// One phone segment: formant targets + duration + mode.
+#[derive(Debug, Clone, Copy)]
+pub struct Phone {
+    pub f: [f64; 3],
+    /// nominal duration in ms
+    pub dur_ms: f64,
+    pub mode: Mode,
+    /// relative amplitude
+    pub amp: f64,
+}
+
+impl Phone {
+    pub const fn v(f1: f64, f2: f64, f3: f64, dur_ms: f64) -> Self {
+        Self { f: [f1, f2, f3], dur_ms, mode: Mode::Voiced, amp: 1.0 }
+    }
+
+    pub const fn fric(center: f64, dur_ms: f64) -> Self {
+        Self { f: [center, center * 1.5, center * 2.0], dur_ms, mode: Mode::Fricative, amp: 0.5 }
+    }
+
+    pub const fn stop(dur_ms: f64) -> Self {
+        Self { f: [400.0, 1500.0, 2500.0], dur_ms, mode: Mode::Stop, amp: 0.8 }
+    }
+
+    pub const fn sil(dur_ms: f64) -> Self {
+        Self { f: [0.0, 0.0, 0.0], dur_ms, mode: Mode::Sil, amp: 0.0 }
+    }
+}
+
+// Vowel/consonant formant targets (Hz), adapted for the 4 kHz Nyquist.
+pub const AA: Phone = Phone::v(730.0, 1090.0, 2440.0, 140.0); // f_a_ther
+pub const AE: Phone = Phone::v(660.0, 1720.0, 2410.0, 130.0); // c_a_t
+pub const AH: Phone = Phone::v(640.0, 1190.0, 2390.0, 110.0); // c_u_p
+pub const AO: Phone = Phone::v(570.0, 840.0, 2410.0, 140.0); // _o_ff
+pub const EH: Phone = Phone::v(530.0, 1840.0, 2480.0, 120.0); // l_e_ft
+pub const ER: Phone = Phone::v(490.0, 1350.0, 1690.0, 130.0); // b_ir_d
+pub const IH: Phone = Phone::v(390.0, 1990.0, 2550.0, 100.0); // b_i_t
+pub const IY: Phone = Phone::v(270.0, 2290.0, 3010.0, 120.0); // s_ee_
+pub const UW: Phone = Phone::v(300.0, 870.0, 2240.0, 130.0); // g_o_ (offglide)
+pub const OW: Phone = Phone::v(570.0, 840.0, 2240.0, 130.0); // n_o_
+pub const L: Phone = Phone::v(360.0, 1300.0, 2700.0, 70.0);
+pub const R: Phone = Phone::v(310.0, 1060.0, 1380.0, 80.0);
+pub const W: Phone = Phone::v(290.0, 610.0, 2150.0, 70.0);
+pub const Y: Phone = Phone::v(260.0, 2070.0, 3020.0, 70.0);
+pub const N: Phone = Phone::v(250.0, 1300.0, 2200.0, 80.0);
+pub const M: Phone = Phone::v(250.0, 950.0, 2100.0, 80.0);
+pub const S: Phone = Phone::fric(3200.0, 110.0);
+pub const F: Phone = Phone::fric(2500.0, 100.0);
+pub const SH: Phone = Phone::fric(2200.0, 110.0);
+pub const T: Phone = Phone::stop(60.0);
+pub const K: Phone = Phone::stop(65.0);
+pub const P: Phone = Phone::stop(60.0);
+pub const B: Phone = Phone::stop(55.0);
+pub const D: Phone = Phone::stop(55.0);
+pub const G: Phone = Phone::stop(60.0);
+
+/// Two-pole resonator: H(z) = (1-r) / (1 - 2 r cosθ z⁻¹ + r² z⁻²).
+#[derive(Debug, Clone, Copy, Default)]
+struct Resonator {
+    y1: f64,
+    y2: f64,
+}
+
+impl Resonator {
+    #[inline]
+    fn step(&mut self, x: f64, f: f64, bw: f64) -> f64 {
+        let r = (-std::f64::consts::PI * bw / FS).exp();
+        let theta = 2.0 * std::f64::consts::PI * (f / FS).min(0.49);
+        let a1 = 2.0 * r * theta.cos();
+        let a2 = -r * r;
+        let g = (1.0 - r) * 1.8; // rough gain normalisation
+        let y = g * x + a1 * self.y1 + a2 * self.y2;
+        self.y2 = self.y1;
+        self.y1 = y;
+        y
+    }
+}
+
+/// Render a phone sequence into `n` samples (1 s default), with
+/// speaker-dependent randomisation drawn from `rng`.
+pub fn render(phones: &[Phone], n: usize, rng: &mut Pcg) -> Vec<f64> {
+    let mut out = vec![0.0f64; n];
+    if phones.is_empty() {
+        return out;
+    }
+    // speaker parameters
+    let f0_base = rng.range_f64(95.0, 220.0);
+    let rate = rng.range_f64(0.85, 1.25);
+    let amp = rng.range_f64(0.35, 0.85);
+    let formant_scale = rng.range_f64(0.93, 1.08);
+
+    // total phone duration + random onset within the second
+    let total_ms: f64 = phones.iter().map(|p| p.dur_ms * rate).sum();
+    let total_samples = ((total_ms / 1000.0) * FS) as usize;
+    let max_onset = n.saturating_sub(total_samples + 400);
+    let onset = if max_onset > 0 { rng.below(max_onset.min(2400)) } else { 0 };
+
+    let mut r1 = Resonator::default();
+    let mut r2 = Resonator::default();
+    let mut r3 = Resonator::default();
+    let mut phase = 0.0f64;
+
+    // per-sample phone index + interpolation
+    let mut t = onset;
+    for (pi, ph) in phones.iter().enumerate() {
+        let dur = ((ph.dur_ms * rate / 1000.0) * FS) as usize;
+        let next = phones.get(pi + 1).copied().unwrap_or(*ph);
+        for i in 0..dur {
+            if t >= n {
+                break;
+            }
+            let frac = i as f64 / dur.max(1) as f64;
+            // glide formants toward the next phone in the last 40%
+            let glide = ((frac - 0.6) / 0.4).clamp(0.0, 1.0);
+            let fmt = [
+                (ph.f[0] + (next.f[0] - ph.f[0]) * glide) * formant_scale,
+                (ph.f[1] + (next.f[1] - ph.f[1]) * glide) * formant_scale,
+                (ph.f[2] + (next.f[2] - ph.f[2]) * glide) * formant_scale,
+            ];
+            // segment envelope: quick attack, gentle release
+            let env = (frac * 8.0).min(1.0) * ((1.0 - frac) * 6.0).min(1.0);
+            let sample = match ph.mode {
+                Mode::Sil => 0.0,
+                Mode::Voiced => {
+                    // glottal source: band-limited pulse train with jitter
+                    let f0 = f0_base * (1.0 + 0.02 * (t as f64 * 0.003).sin());
+                    phase += f0 / FS;
+                    if phase >= 1.0 {
+                        phase -= 1.0;
+                    }
+                    // soft pulse: raised-cosine glottal flow derivative
+                    let src = if phase < 0.35 {
+                        ((phase / 0.35) * std::f64::consts::PI).sin().powi(2) * 2.0 - 0.35
+                    } else {
+                        -0.35
+                    } + 0.02 * rng.normal();
+                    let a = r1.step(src, fmt[0], 80.0);
+                    let b = r2.step(a, fmt[1], 110.0);
+                    r3.step(b, fmt[2].min(3_800.0), 170.0) * env * ph.amp
+                }
+                Mode::Fricative => {
+                    let noise = rng.normal();
+                    // high-ish resonance shaping of the noise
+                    let a = r2.step(noise, ph.f[0].min(3_600.0), 500.0);
+                    a * env * ph.amp * 0.8
+                }
+                Mode::Stop => {
+                    // closure for the first 70%, burst after
+                    if frac < 0.7 {
+                        0.0
+                    } else {
+                        let noise = rng.normal();
+                        let a = r2.step(noise, 1_800.0, 900.0);
+                        a * ph.amp * (1.0 - (frac - 0.7) / 0.3) * 1.2
+                    }
+                }
+            };
+            out[t] += sample;
+            t += 1;
+        }
+    }
+
+    // normalise to the target amplitude
+    let peak = out.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-9);
+    for v in out.iter_mut() {
+        *v = (*v / peak) * amp;
+    }
+    out
+}
+
+/// Add background noise at `snr_db` relative to the signal RMS.
+pub fn add_noise(audio: &mut [f64], snr_db: f64, rng: &mut Pcg) {
+    let rms = (audio.iter().map(|v| v * v).sum::<f64>() / audio.len() as f64).sqrt();
+    let noise_rms = (rms.max(1e-5)) / 10f64.powf(snr_db / 20.0);
+    for v in audio.iter_mut() {
+        *v = (*v + noise_rms * rng.normal()).clamp(-0.999, 0.999);
+    }
+}
+
+/// Goertzel band energy (test helper + spectral sanity checks).
+pub fn band_energy(audio: &[f64], f: f64) -> f64 {
+    let w = 2.0 * std::f64::consts::PI * f / FS;
+    let coeff = 2.0 * w.cos();
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    for &x in audio {
+        let s0 = x + coeff * s1 - s2;
+        s2 = s1;
+        s1 = s0;
+    }
+    s1 * s1 + s2 * s2 - coeff * s1 * s2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_deterministic_per_seed() {
+        let phones = [Y, EH, S];
+        let a = render(&phones, 8000, &mut Pcg::new(5));
+        let b = render(&phones, 8000, &mut Pcg::new(5));
+        assert_eq!(a, b);
+        let c = render(&phones, 8000, &mut Pcg::new(6));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn output_bounded() {
+        for seed in 0..5 {
+            let audio = render(&[S, T, AA, P], 8000, &mut Pcg::new(seed));
+            assert!(audio.iter().all(|v| v.abs() <= 1.0));
+            assert!(audio.iter().any(|v| v.abs() > 0.05), "all-silent render");
+        }
+    }
+
+    #[test]
+    fn vowel_formants_show_up_in_spectrum() {
+        // an /iy/ (270, 2290) should have much more 2.2-2.4 kHz energy
+        // relative to 800 Hz than an /ao/ (570, 840)
+        let iy = render(&[IY, IY, IY], 8000, &mut Pcg::new(3));
+        let ao = render(&[AO, AO, AO], 8000, &mut Pcg::new(3));
+        let ratio_iy = band_energy(&iy, 2_290.0) / band_energy(&iy, 840.0).max(1e-9);
+        let ratio_ao = band_energy(&ao, 2_290.0) / band_energy(&ao, 840.0).max(1e-9);
+        assert!(
+            ratio_iy > 4.0 * ratio_ao,
+            "formant contrast too weak: iy {ratio_iy} vs ao {ratio_ao}"
+        );
+    }
+
+    #[test]
+    fn fricative_is_high_frequency() {
+        let s = render(&[S, S, S], 8000, &mut Pcg::new(9));
+        let hi = band_energy(&s, 3_200.0);
+        let lo = band_energy(&s, 400.0);
+        assert!(hi > 3.0 * lo, "fricative spectrum wrong: hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn stop_has_silence_then_burst() {
+        let audio = render(&[AA, T, AA], 8000, &mut Pcg::new(1));
+        // find the quietest 20 ms window — should be well below peak
+        let w = 160;
+        let mut min_rms = f64::MAX;
+        let mut max_rms: f64 = 0.0;
+        let mut i = 0;
+        while i + w < audio.len() {
+            let rms = (audio[i..i + w].iter().map(|v| v * v).sum::<f64>() / w as f64).sqrt();
+            if rms > 1e-6 || max_rms > 0.0 {
+                min_rms = min_rms.min(rms);
+            }
+            max_rms = max_rms.max(rms);
+            i += w / 2;
+        }
+        assert!(max_rms > 10.0 * min_rms.max(1e-9), "no closure dip found");
+    }
+
+    #[test]
+    fn noise_raises_floor() {
+        let mut audio = render(&[N, OW], 8000, &mut Pcg::new(2));
+        let e0: f64 = audio.iter().map(|v| v * v).sum();
+        add_noise(&mut audio, 10.0, &mut Pcg::new(77));
+        let e1: f64 = audio.iter().map(|v| v * v).sum();
+        assert!(e1 > e0 * 1.02);
+        assert!(audio.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn empty_phones_render_silence() {
+        let audio = render(&[], 8000, &mut Pcg::new(0));
+        assert!(audio.iter().all(|&v| v == 0.0));
+    }
+}

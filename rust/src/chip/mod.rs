@@ -1,0 +1,283 @@
+//! Chip top-level: the full DeltaKWS digital twin (paper Fig. 1).
+//!
+//! Wires the SPI front door (12-bit samples in), the serial IIR FEx, the
+//! asynchronous FIFO crossing the CLK_IIR → CLK_RNN domain boundary, the
+//! ΔRNN accelerator with its near-V_TH weight SRAM, and the decision logic
+//! (posterior averaging + argmax). One [`KwsChip`] instance == one chip.
+//!
+//! All activity (FEx visits, MACs, SRAM reads, cycles) aggregates into a
+//! [`ChipActivity`] that [`report`](KwsChip::report) converts into the
+//! paper's headline metrics: power breakdown (Fig. 10), computing latency
+//! and energy/decision vs Δ_TH (Fig. 12), and the Table II row.
+
+use crate::accel::fifo::AsyncFifo;
+use crate::accel::{AccelConfig, DeltaRnnAccel};
+use crate::energy::{self, ChipActivity, PowerBreakdown, SramKind};
+use crate::fex::{Fex, FexConfig, MAX_CHANNELS};
+use crate::accel::gru::QuantParams;
+
+/// Chip configuration: the two block configs + SRAM flavour.
+#[derive(Debug, Clone)]
+pub struct ChipConfig {
+    pub fex: FexConfig,
+    pub accel: AccelConfig,
+    pub sram: SramKind,
+    /// frames excluded from the posterior average
+    pub warmup: usize,
+}
+
+impl ChipConfig {
+    /// Paper design point: 10 channels, MixedShift FEx, Δ_TH = 0.2.
+    pub fn design_point() -> Self {
+        Self {
+            fex: FexConfig::design_point(),
+            accel: AccelConfig::design_point(),
+            sram: SramKind::NearVth,
+            warmup: 4,
+        }
+    }
+
+    pub fn with_delta_th(mut self, th_q8: i16) -> Self {
+        self.accel.delta_th_q8 = th_q8;
+        self
+    }
+
+    /// Keep FEx channel selection and accelerator input lanes consistent.
+    pub fn with_channels(mut self, n: usize) -> Self {
+        self.fex = FexConfig::n_channels(self.fex.arch, n);
+        self.accel.active_x = self.fex.active;
+        self
+    }
+}
+
+/// Per-utterance decision + diagnostics.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub class: usize,
+    pub logits: [i64; crate::NUM_CLASSES],
+    /// per-frame ΔRNN cycles (Fig. 11 latency trace)
+    pub frame_cycles: Vec<u64>,
+    /// per-frame fired lanes
+    pub frame_fired: Vec<usize>,
+    /// feature frames seen (Fig. 11 feature trace), 12-bit values
+    pub feat_trace: Vec<[i64; MAX_CHANNELS]>,
+}
+
+/// The chip twin.
+pub struct KwsChip {
+    pub config: ChipConfig,
+    pub fex: Fex,
+    pub accel: DeltaRnnAccel,
+    /// CLK_IIR -> CLK_RNN crossing (capacity 4 frames, as on-chip)
+    fifo: AsyncFifo<[i16; MAX_CHANNELS]>,
+    /// RNN-clock time cursor (cycles)
+    now: u64,
+}
+
+impl KwsChip {
+    pub fn new(params: QuantParams, config: ChipConfig) -> Self {
+        let fex = Fex::new(config.fex.clone());
+        let accel = DeltaRnnAccel::new(params, config.accel.clone(), config.sram);
+        Self { config, fex, accel, fifo: AsyncFifo::new(4), now: 0 }
+    }
+
+    /// Feed one 1 s utterance (12-bit samples) through the full pipeline.
+    pub fn process_utterance(&mut self, audio12: &[i64]) -> Decision {
+        self.fex.reset();
+        self.accel.reset_state();
+        let mut frame_cycles = Vec::with_capacity(64);
+        let mut frame_fired = Vec::with_capacity(64);
+        let mut feat_trace = Vec::with_capacity(64);
+        let mut acc_logits = [0i64; crate::NUM_CLASSES];
+        let mut counted = 0i64;
+        let mut t = 0usize;
+
+        for &s in audio12 {
+            // SPI front door: one 12-bit word per sample period
+            if let Some(frame) = self.fex.push_sample(s) {
+                feat_trace.push(frame);
+                // 12-bit feature -> Q8.8 activation in [0, 2) across the
+                // CDC FIFO (>>3; see dataset::features_for)
+                let mut q = [0i16; MAX_CHANNELS];
+                for (c, &f) in frame.iter().enumerate() {
+                    q[c] = (f >> 3) as i16;
+                }
+                // producer timestamp in RNN cycles (sample index scaled)
+                let t_prod = self.now + 2;
+                self.fifo
+                    .push(t_prod, q)
+                    .expect("CDC FIFO overflow: accelerator starved");
+                // consumer drains after sync delay
+                while let Some(f) = self.fifo.pop(t_prod + 2) {
+                    let r = self.accel.step_frame(&f);
+                    self.now += r.cycles;
+                    frame_cycles.push(r.cycles);
+                    frame_fired.push(r.fired);
+                    let warm = frame_cycles.len() > self.config.warmup;
+                    if warm {
+                        for (a, l) in acc_logits.iter_mut().zip(r.logits.iter()) {
+                            *a += l;
+                        }
+                        counted += 1;
+                    }
+                }
+            }
+            t += 1;
+        }
+        let _ = t;
+        if counted > 0 {
+            for a in acc_logits.iter_mut() {
+                *a /= counted;
+            }
+        }
+        let class = (0..crate::NUM_CLASSES).max_by_key(|&k| acc_logits[k]).unwrap_or(0);
+        Decision { class, logits: acc_logits, frame_cycles, frame_fired, feat_trace }
+    }
+
+    /// Aggregated activity (accelerator counters + FEx visits).
+    pub fn activity(&self) -> ChipActivity {
+        let mut a = self.accel.activity;
+        a.fex_visits = self.fex.counters.channel_visits;
+        a
+    }
+
+    /// Power breakdown at the current configuration and measured activity.
+    pub fn power(&self) -> PowerBreakdown {
+        let fex_uw = crate::fex::area::power_uw(self.config.fex.arch, self.config.fex.num_active());
+        energy::chip_power(&self.activity(), fex_uw, self.config.sram)
+    }
+
+    /// Full metrics report (one Table II column).
+    pub fn report(&self) -> ChipReport {
+        let activity = self.activity();
+        let power = self.power();
+        ChipReport {
+            power,
+            energy_per_decision_nj: energy::energy_per_decision_nj(&power, &activity),
+            latency_ms: activity.avg_latency_ms(),
+            sparsity: activity.sparsity(),
+            input_sparsity: activity.input_sparsity(),
+            hidden_sparsity: activity.hidden_sparsity(),
+            frames: activity.frames,
+        }
+    }
+}
+
+/// Headline metrics of a run.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipReport {
+    pub power: PowerBreakdown,
+    pub energy_per_decision_nj: f64,
+    pub latency_ms: f64,
+    pub sparsity: f64,
+    pub input_sparsity: f64,
+    pub hidden_sparsity: f64,
+    pub frames: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    use crate::util::prng::Pcg;
+
+    fn rng_quant(seed: u64) -> QuantParams {
+        let mut rng = Pcg::new(seed);
+        let mut q = QuantParams::zeroed();
+        q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+        q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q
+    }
+
+    fn one_utterance(seed: u64) -> Vec<i64> {
+        let mut rng = Pcg::new(seed);
+        let audio = crate::audio::synth_utterance(11, &mut rng);
+        crate::audio::quantize_12b(&audio)
+    }
+
+    #[test]
+    fn utterance_produces_62_frames() {
+        let mut chip = KwsChip::new(rng_quant(1), ChipConfig::design_point());
+        let d = chip.process_utterance(&one_utterance(5));
+        assert_eq!(d.frame_cycles.len(), 62);
+        assert_eq!(d.feat_trace.len(), 62);
+        assert!(d.class < crate::NUM_CLASSES);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut c1 = KwsChip::new(rng_quant(2), ChipConfig::design_point());
+        let mut c2 = KwsChip::new(rng_quant(2), ChipConfig::design_point());
+        let utt = one_utterance(9);
+        let d1 = c1.process_utterance(&utt);
+        let d2 = c2.process_utterance(&utt);
+        assert_eq!(d1.class, d2.class);
+        assert_eq!(d1.logits, d2.logits);
+        assert_eq!(d1.frame_cycles, d2.frame_cycles);
+    }
+
+    #[test]
+    fn higher_threshold_fewer_cycles_lower_energy() {
+        let utt = one_utterance(3);
+        let run = |th: i16| {
+            let mut chip =
+                KwsChip::new(rng_quant(3), ChipConfig::design_point().with_delta_th(th));
+            for _ in 0..4 {
+                chip.process_utterance(&utt);
+            }
+            let r = chip.report();
+            (r.latency_ms, r.energy_per_decision_nj, r.sparsity)
+        };
+        let (lat0, e0, s0) = run(0);
+        let (lat51, e51, s51) = run(51);
+        assert!(s51 > s0, "sparsity {s51} !> {s0}");
+        assert!(lat51 < lat0, "latency {lat51} !< {lat0}");
+        assert!(e51 < e0, "energy {e51} !< {e0}");
+    }
+
+    #[test]
+    fn silent_frames_cost_less_than_active_frames() {
+        // paper Fig. 11: ~40% latency reduction on relatively silent frames
+        let mut chip =
+            KwsChip::new(rng_quant(4), ChipConfig::design_point().with_delta_th(26));
+        let d = chip.process_utterance(&one_utterance(11));
+        let min = *d.frame_cycles.iter().min().unwrap();
+        let max = *d.frame_cycles.iter().max().unwrap();
+        assert!(max as f64 >= 1.3 * min as f64, "no latency dynamic: {min}..{max}");
+    }
+
+    #[test]
+    fn power_breakdown_positive_and_complete() {
+        let mut chip = KwsChip::new(rng_quant(5), ChipConfig::design_point());
+        chip.process_utterance(&one_utterance(1));
+        let p = chip.power();
+        assert!(p.fex_uw > 0.0 && p.rnn_uw > 0.0 && p.sram_uw > 0.0 && p.misc_uw > 0.0);
+        assert!(
+            (p.total_uw() - (p.fex_uw + p.rnn_uw + p.sram_uw + p.misc_uw)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn channel_selection_propagates() {
+        let cfg = ChipConfig::design_point().with_channels(6);
+        assert_eq!(cfg.fex.num_active(), 6);
+        assert_eq!(cfg.accel.n_active(), 6);
+        let mut chip = KwsChip::new(rng_quant(6), cfg);
+        chip.process_utterance(&one_utterance(2));
+        let a = chip.activity();
+        assert_eq!(a.total_x, 62 * 6);
+    }
+
+    #[test]
+    fn foundry_sram_flavour_costs_more() {
+        let utt = one_utterance(7);
+        let mut near = KwsChip::new(rng_quant(7), ChipConfig::design_point());
+        let mut cfg = ChipConfig::design_point();
+        cfg.sram = SramKind::Foundry;
+        let mut foundry = KwsChip::new(rng_quant(7), cfg);
+        near.process_utterance(&utt);
+        foundry.process_utterance(&utt);
+        assert!(foundry.power().sram_uw > 3.0 * near.power().sram_uw);
+    }
+}

@@ -1,0 +1,294 @@
+//! Configuration system: a small INI/TOML-subset parser + typed configs.
+//!
+//! No serde/toml in the vendored dependency set, so the launcher reads a
+//! TOML-subset directly: `[section]` headers, `key = value` pairs with
+//! string / number / bool / flat-array values, `#` comments. This covers
+//! every config the system ships (`configs/*.toml`) — nested tables are
+//! deliberately unsupported to keep config files flat and greppable.
+//!
+//! Typed accessors map the parsed tree onto [`RunConfig`], the single
+//! source of truth the CLI, trainer, experiments and coordinator read.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::chip::ChipConfig;
+use crate::energy::SramKind;
+use crate::fex::biquad::Arch;
+
+/// A parsed flat config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<f64>),
+}
+
+/// Parsed config: section -> key -> value.
+#[derive(Debug, Clone, Default)]
+pub struct Ini {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Ini {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut out = Ini::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = Self::parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value '{}'", lineno + 1, v.trim()))?;
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(out)
+    }
+
+    fn parse_value(s: &str) -> crate::Result<Value> {
+        if let Some(q) = s.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            return Ok(Value::Str(q.to_string()));
+        }
+        if s == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if s == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(inner) = s.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let items: Result<Vec<f64>, _> =
+                inner.split(',').filter(|t| !t.trim().is_empty()).map(|t| t.trim().parse()).collect();
+            return Ok(Value::Arr(items?));
+        }
+        Ok(Value::Num(s.parse()?))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn num(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn str_(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn bool_(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a run needs (CLI flags override file values).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// delta threshold on the Q8.8 grid (paper design point: 51 = 0.2)
+    pub delta_th_q8: i16,
+    /// active FEx/ΔRNN channels
+    pub channels: usize,
+    /// FEx datapath architecture
+    pub arch: Arch,
+    /// SRAM flavour
+    pub sram: SramKind,
+    /// dataset / init seed
+    pub seed: u64,
+    /// training steps and batch
+    pub train_steps: usize,
+    pub batch: usize,
+    /// train-time delta threshold (float, on the [0,1] feature scale)
+    pub train_delta_th: f32,
+    /// number of test utterances for accuracy evaluation
+    pub eval_utterances: usize,
+    /// serving workers
+    pub workers: usize,
+    /// weights image path
+    pub weights: String,
+    /// artifacts directory
+    pub artifacts: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            delta_th_q8: 51,
+            channels: crate::DESIGN_CHANNELS,
+            arch: Arch::MixedShift,
+            sram: SramKind::NearVth,
+            seed: 42,
+            train_steps: 1200,
+            batch: 16,
+            // fine-tune at the deployment threshold (paper design point 0.2)
+            train_delta_th: 0.2,
+            eval_utterances: 256,
+            workers: 2,
+            weights: "results/weights.bin".into(),
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let ini = Ini::parse(&text)?;
+        let mut cfg = Self::default();
+        if let Some(v) = ini.num("chip", "delta_th_q8") {
+            cfg.delta_th_q8 = v as i16;
+        }
+        if let Some(v) = ini.num("chip", "channels") {
+            cfg.channels = v as usize;
+        }
+        if let Some(v) = ini.str_("chip", "arch") {
+            cfg.arch = match v {
+                "unified16" => Arch::Unified16,
+                "mixed" => Arch::Mixed,
+                "mixed_shift" => Arch::MixedShift,
+                other => bail!("unknown arch '{other}'"),
+            };
+        }
+        if let Some(v) = ini.str_("chip", "sram") {
+            cfg.sram = match v {
+                "near_vth" => SramKind::NearVth,
+                "foundry" => SramKind::Foundry,
+                other => bail!("unknown sram '{other}'"),
+            };
+        }
+        if let Some(v) = ini.num("run", "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = ini.num("train", "steps") {
+            cfg.train_steps = v as usize;
+        }
+        if let Some(v) = ini.num("train", "batch") {
+            cfg.batch = v as usize;
+        }
+        if let Some(v) = ini.num("train", "delta_th") {
+            cfg.train_delta_th = v as f32;
+        }
+        if let Some(v) = ini.num("eval", "utterances") {
+            cfg.eval_utterances = v as usize;
+        }
+        if let Some(v) = ini.num("serve", "workers") {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = ini.str_("paths", "weights") {
+            cfg.weights = v.to_string();
+        }
+        if let Some(v) = ini.str_("paths", "artifacts") {
+            cfg.artifacts = v.to_string();
+        }
+        Ok(cfg)
+    }
+
+    /// Materialise the chip configuration at this run's operating point.
+    pub fn chip_config(&self) -> ChipConfig {
+        let mut cfg = ChipConfig::design_point().with_channels(self.channels);
+        cfg.fex.arch = self.arch;
+        cfg.accel.delta_th_q8 = self.delta_th_q8;
+        cfg.sram = self.sram;
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# DeltaKWS run config
+[chip]
+delta_th_q8 = 51
+channels = 10
+arch = "mixed_shift"
+sram = "near_vth"
+
+[run]
+seed = 7
+
+[train]
+steps = 120
+batch = 8
+delta_th = 0.15
+
+[serve]
+workers = 4
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.num("chip", "delta_th_q8"), Some(51.0));
+        assert_eq!(ini.str_("chip", "arch"), Some("mixed_shift"));
+        assert_eq!(ini.num("train", "delta_th"), Some(0.15));
+    }
+
+    #[test]
+    fn run_config_from_text() {
+        let dir = std::env::temp_dir().join("deltakws_cfg_test.toml");
+        std::fs::write(&dir, SAMPLE).unwrap();
+        let cfg = RunConfig::from_file(&dir).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.train_steps, 120);
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.channels, 10);
+        let chip = cfg.chip_config();
+        assert_eq!(chip.accel.delta_th_q8, 51);
+        assert_eq!(chip.fex.num_active(), 10);
+    }
+
+    #[test]
+    fn arrays_and_bools() {
+        let ini = Ini::parse("[a]\nxs = [1, 2, 3.5]\nflag = true\n").unwrap();
+        assert_eq!(ini.get("a", "xs"), Some(&Value::Arr(vec![1.0, 2.0, 3.5])));
+        assert_eq!(ini.bool_("a", "flag"), Some(true));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let ini = Ini::parse("# top\n\n[s]\nk = 1 # trailing\n").unwrap();
+        assert_eq!(ini.num("s", "k"), Some(1.0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Ini::parse("[s]\nno_equals_here\n").is_err());
+        assert!(Ini::parse("[s]\nk = [1, oops]\n").is_err());
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.delta_th_q8, 51);
+        assert_eq!(cfg.channels, 10);
+        let chip = cfg.chip_config();
+        assert_eq!(chip.accel.n_active(), 10);
+    }
+}

@@ -1,0 +1,218 @@
+//! Calibration constants — the *only* fitted numbers in the energy model.
+//!
+//! Everything else in `energy`/`fex`/`accel`/`sram` is counted (events,
+//! cycles, gates). These constants anchor the counted activity to the
+//! paper's measured operating points, and each is derived below from the
+//! paper's own numbers; `tests` re-derive the anchors to guard regressions.
+//!
+//! ## Anchor points (paper Fig. 10/12, Table II)
+//!
+//! | quantity                        | Δ_TH = 0 | Δ_TH = 0.2 |
+//! |---------------------------------|----------|------------|
+//! | total power                     | 7.36 µW  | 5.22 µW    |
+//! | computing latency               | 16.4 ms  | 6.9 ms     |
+//! | energy/decision (= P x latency) | 121.2 nJ | 36.11 nJ   |
+//!
+//! Block powers at the design point (Fig. 10): FEx 1.22 µW (~25%), ΔRNN
+//! ~57% = 2.98 µW, SRAM read 0.93 µW (18%); misc = 5.22 - sum = 0.09 µW.
+//!
+//! ## Latency model (structural)
+//!
+//! cycles/frame = `CYCLES_FIXED` + `CYCLES_PER_LANE` x (fired lanes), with
+//! `CYCLES_PER_LANE` = 3H / 8 MACs = 24 exactly (each fired delta updates
+//! 3H = 192 gate pre-activations spread over 8 MAC lanes), and
+//! `CYCLES_FIXED` = 274 from the dense anchor: 16.4 ms x 125 kHz = 2050 =
+//! F + 24 x 74 → F = 274 (ΔEncoder pass 74 + NLU/assembler 64 + FC 96 +
+//! pipeline fill ~40 — the structural components sum to the fitted value).
+//!
+//! ## Interpreting the sparse anchor
+//!
+//! The paper's sparse-point latency (6.9 ms = 862 cycles) implies
+//! 24.5 fired lanes/frame (862 = 274 + 24 x 24.5), i.e. **67% lane-level
+//! sparsity**, while Fig. 12 reports "87% temporal sparsity". The two are
+//! consistent if the 87% figure is the sparsity of the Δ-*input* stream
+//! (Δx lanes: 87% silent), with hidden-state lanes firing more often —
+//! our twin therefore reports input, hidden and combined sparsity
+//! separately, and the energy split below is derived at the
+//! 24.5-lanes/frame point.
+//!
+//! ## Energy split derivation (two-anchor fit)
+//!
+//! Per-second event counts at 62.5 frames/s, H = 64, 10 input channels,
+//! FC = 768 MACs/frame, weight words = 96/lane + 384 FC:
+//!   dense:  MACs/s = 62.5 x (74x192 + 768) = 936k ; reads/s = 62.5 x (74x96 + 384) = 468k
+//!   sparse: MACs/s = 62.5 x (24.5x192 + 768) = 342k ; reads/s = 62.5 x (24.5x96 + 384) = 171k
+//! ΔP = 7.36 - 5.22 = 2.14 µW over ΔMACs = 594k/s and Δreads = 297k/s.
+//! Splitting with a 65 nm-plausible 2.0 pJ int8x16b MAC:
+//!   594k x 2.0 pJ = 1.19 µW ; remainder 0.95 µW / 297k = 3.2 pJ/word read.
+//! (We round to E_MAC = 2.0 pJ, E_WORD = 3.2 pJ; tests verify the anchors
+//! reproduce to < 3%.) Then at the design point:
+//!   SRAM leak = 0.93 - 171k x 3.2 pJ = 0.38 µW
+//!   ΔRNN static = 2.98 - 342k x 2.0 pJ = 2.30 µW (clock tree, ΔEncoder,
+//!   FIFOs, NLU at 125 kHz)
+
+/// ---- chip-level anchors (paper) -------------------------------------------
+
+/// Total chip power at the Δ_TH = 0.2 design point (µW).
+pub const TOTAL_DESIGN_UW: f64 = 5.22;
+/// Total chip power at Δ_TH = 0 (µW).
+pub const TOTAL_DENSE_UW: f64 = 7.36;
+/// Core clock (Hz).
+pub const CLOCK_HZ: f64 = 125_000.0;
+/// Frames per second (16 ms frame shift).
+pub const FRAMES_PER_S: f64 = 62.5;
+
+/// ---- FEx ------------------------------------------------------------------
+
+/// FEx power at the design point: MixedShift datapath, 10 channels (µW).
+pub const FEX_DESIGN_UW: f64 = 1.22;
+/// FEx control/sequencer floor (µW). Derived from the paper's "10 instead
+/// of 16 channels saves 30%": P16 = 1.22/0.7 = 1.743; linear in active
+/// channels → ctrl = (16 x 1.22 - 10 x 1.743) / 6 = 0.349.
+pub const FEX_CTRL_UW: f64 = 0.349;
+/// Effective 65 nm NAND2-equivalent gate density for the FEx block,
+/// anchored so the MixedShift datapath model = 0.084 mm² (paper Table I).
+/// (Lower than raw-logic density because it folds in RF/wiring overheads.)
+pub const FEX_GATES_PER_MM2: f64 = 287_000.0;
+
+/// ---- ΔRNN accelerator ------------------------------------------------------
+
+/// Energy per int8 x 16b MAC + accumulate, 0.65 V 65 nm (pJ).
+pub const E_MAC_PJ: f64 = 2.0;
+/// ΔRNN static/clocking power at 125 kHz (µW): clock tree, ΔEncoder,
+/// ΔFIFOs, NLU, state assembler.
+pub const RNN_STATIC_UW: f64 = 2.30;
+/// Cycles per frame independent of sparsity (ΔEncoder pass + NLU/state
+/// assembly + FC + pipeline fill). See module docs for the derivation.
+pub const CYCLES_FIXED: u64 = 274;
+/// Cycles per fired delta lane: 3H MACs / 8 MAC lanes = 24.
+pub const CYCLES_PER_LANE: u64 = 24;
+
+/// ---- near-V_TH weight SRAM --------------------------------------------------
+
+/// Energy per 16-bit word read at 0.6 V near-V_TH (pJ).
+pub const E_SRAM_WORD_PJ: f64 = 3.2;
+/// SRAM leakage at 0.6 V with high-V_TH bitcells (µW).
+pub const SRAM_LEAK_UW: f64 = 0.38;
+/// Foundry push-rule 6T comparison point (1.2 V): read energy per word.
+/// Chosen with `SRAM_LEAK_FOUNDRY_UW` so the total read-power ratio at the
+/// design point is the paper's 6.6x (test-asserted).
+pub const E_SRAM_WORD_FOUNDRY_PJ: f64 = 17.6;
+/// Foundry SRAM leakage (low-V_TH, 1.2 V) (µW).
+pub const SRAM_LEAK_FOUNDRY_UW: f64 = 3.1;
+
+/// ---- misc -------------------------------------------------------------------
+
+/// I/O + clock dividers + FIFO CDC (µW), constant.
+pub const MISC_UW: f64 = 0.09;
+
+/// ---- areas (paper Fig. 10 anchors, mm²) -------------------------------------
+
+pub const AREA_FEX_MM2: f64 = 0.084;
+pub const AREA_RNN_MM2: f64 = 0.319;
+pub const AREA_SRAM_MM2: f64 = 0.381;
+pub const AREA_TOTAL_MM2: f64 = 0.78;
+
+/// Derived per-second event counts for the two anchor operating points —
+/// used by tests and by `exp table2` to sanity-print the calibration.
+pub mod anchors {
+    /// fired lanes per frame, dense (10 active input channels + 64 hidden).
+    pub const DENSE_LANES: f64 = 74.0;
+    /// fired lanes per frame at the paper's design point (derived from the
+    /// 6.9 ms latency; see module docs).
+    pub const DESIGN_LANES: f64 = 24.5;
+    /// FC MACs per frame (64 x 12).
+    pub const FC_MACS: f64 = 768.0;
+    /// weight words read per fired lane (3H int8 / 2 per 16b word).
+    pub const WORDS_PER_LANE: f64 = 96.0;
+    /// FC weight words per frame.
+    pub const FC_WORDS: f64 = 384.0;
+
+    pub fn macs_per_s(lanes: f64) -> f64 {
+        super::FRAMES_PER_S * (lanes * 192.0 + FC_MACS)
+    }
+
+    pub fn words_per_s(lanes: f64) -> f64 {
+        super::FRAMES_PER_S * (lanes * WORDS_PER_LANE + FC_WORDS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total_power_uw(lanes: f64) -> f64 {
+        FEX_DESIGN_UW
+            + RNN_STATIC_UW
+            + anchors::macs_per_s(lanes) * E_MAC_PJ * 1e-6
+            + SRAM_LEAK_UW
+            + anchors::words_per_s(lanes) * E_SRAM_WORD_PJ * 1e-6
+            + MISC_UW
+    }
+
+    fn latency_ms(lanes: f64) -> f64 {
+        (CYCLES_FIXED as f64 + CYCLES_PER_LANE as f64 * lanes) / CLOCK_HZ * 1e3
+    }
+
+    #[test]
+    fn dense_anchor_reproduces() {
+        let p = total_power_uw(anchors::DENSE_LANES);
+        assert!((p - TOTAL_DENSE_UW).abs() / TOTAL_DENSE_UW < 0.03, "P_dense = {p}");
+        let l = latency_ms(anchors::DENSE_LANES);
+        assert!((l - 16.4).abs() < 0.1, "latency {l}");
+        let e = p * l; // nJ
+        assert!((e - 121.2).abs() / 121.2 < 0.03, "E/dec {e}");
+    }
+
+    #[test]
+    fn design_anchor_reproduces() {
+        let p = total_power_uw(anchors::DESIGN_LANES);
+        assert!((p - TOTAL_DESIGN_UW).abs() / TOTAL_DESIGN_UW < 0.03, "P_design = {p}");
+        let l = latency_ms(anchors::DESIGN_LANES);
+        assert!((l - 6.9).abs() < 0.1, "latency {l}");
+        let e = p * l;
+        assert!((e - 36.11).abs() / 36.11 < 0.05, "E/dec {e}");
+    }
+
+    #[test]
+    fn design_point_block_breakdown_matches_fig10() {
+        // FEx ~25%, ΔRNN ~57%, SRAM ~18% of 5.22 µW
+        let macs = anchors::macs_per_s(anchors::DESIGN_LANES) * E_MAC_PJ * 1e-6;
+        let rnn = RNN_STATIC_UW + macs;
+        let reads = anchors::words_per_s(anchors::DESIGN_LANES) * E_SRAM_WORD_PJ * 1e-6;
+        let sram = SRAM_LEAK_UW + reads;
+        let total = total_power_uw(anchors::DESIGN_LANES);
+        assert!((FEX_DESIGN_UW / total - 0.25).abs() < 0.05);
+        assert!((rnn / total - 0.57).abs() < 0.05, "rnn share {}", rnn / total);
+        assert!((sram / total - 0.18).abs() < 0.05, "sram share {}", sram / total);
+    }
+
+    #[test]
+    fn foundry_sram_ratio_is_6_6x() {
+        let reads = anchors::words_per_s(anchors::DESIGN_LANES);
+        let near_vth = SRAM_LEAK_UW + reads * E_SRAM_WORD_PJ * 1e-6;
+        let foundry = SRAM_LEAK_FOUNDRY_UW + reads * E_SRAM_WORD_FOUNDRY_PJ * 1e-6;
+        let ratio = foundry / near_vth;
+        assert!((ratio - 6.6).abs() < 0.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn block_areas_sum_to_total() {
+        let sum = AREA_FEX_MM2 + AREA_RNN_MM2 + AREA_SRAM_MM2;
+        assert!((sum - AREA_TOTAL_MM2).abs() < 0.01);
+    }
+
+    #[test]
+    fn latency_reduction_factor_2_4x() {
+        let r = latency_ms(anchors::DENSE_LANES) / latency_ms(anchors::DESIGN_LANES);
+        assert!((r - 2.4).abs() < 0.1, "latency ratio {r}");
+    }
+
+    #[test]
+    fn energy_reduction_factor_3_4x() {
+        let e0 = total_power_uw(anchors::DENSE_LANES) * latency_ms(anchors::DENSE_LANES);
+        let e1 = total_power_uw(anchors::DESIGN_LANES) * latency_ms(anchors::DESIGN_LANES);
+        let r = e0 / e1;
+        assert!((r - 3.4).abs() < 0.25, "energy ratio {r}");
+    }
+}

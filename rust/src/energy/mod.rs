@@ -1,0 +1,252 @@
+//! Event-counting energy/power/area accounting for the whole chip.
+//!
+//! The twins (FEx, ΔRNN accelerator, SRAM) count *events* — MACs, weight
+//! word reads, channel visits, cycles. This module converts counted
+//! activity into power (µW), energy/decision (nJ) and latency (ms) through
+//! the calibrated per-event energies in [`calib`], and gate-count/bitcell
+//! models into block areas (mm²).
+//!
+//! Convention: "energy per decision" follows the paper — total chip power
+//! multiplied by the per-frame *computing latency* (the window in which the
+//! ΔRNN is actually busy), which is how 7.36 µW x 16.4 ms = 121.2 nJ and
+//! 5.22 µW x 6.9 ms = 36.1 nJ arise in Table II.
+
+pub mod calib;
+
+/// Aggregated activity of one simulation run (any number of frames).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChipActivity {
+    /// frames processed
+    pub frames: u64,
+    /// ΔRNN MAC operations, including the FC layer
+    pub mac_ops: u64,
+    /// 16-bit weight words read from the SRAM
+    pub sram_word_reads: u64,
+    /// ΔRNN compute cycles (for latency)
+    pub rnn_cycles: u64,
+    /// fired delta lanes (input + hidden), for sparsity reporting
+    pub fired_lanes: u64,
+    /// total delta lanes examined
+    pub total_lanes: u64,
+    /// fired input (Δx) lanes / total input lanes
+    pub fired_x: u64,
+    pub total_x: u64,
+    /// fired hidden (Δh) lanes / total hidden lanes
+    pub fired_h: u64,
+    pub total_h: u64,
+    /// FEx active-channel visits
+    pub fex_visits: u64,
+}
+
+impl ChipActivity {
+    pub fn merge(&mut self, other: &ChipActivity) {
+        self.frames += other.frames;
+        self.mac_ops += other.mac_ops;
+        self.sram_word_reads += other.sram_word_reads;
+        self.rnn_cycles += other.rnn_cycles;
+        self.fired_lanes += other.fired_lanes;
+        self.total_lanes += other.total_lanes;
+        self.fired_x += other.fired_x;
+        self.total_x += other.total_x;
+        self.fired_h += other.fired_h;
+        self.total_h += other.total_h;
+        self.fex_visits += other.fex_visits;
+    }
+
+    /// Combined temporal sparsity: fraction of silent delta lanes.
+    pub fn sparsity(&self) -> f64 {
+        if self.total_lanes == 0 {
+            return 0.0;
+        }
+        1.0 - self.fired_lanes as f64 / self.total_lanes as f64
+    }
+
+    /// Input-delta (Δx) sparsity — the figure the paper's Fig. 12 tracks.
+    pub fn input_sparsity(&self) -> f64 {
+        if self.total_x == 0 {
+            return 0.0;
+        }
+        1.0 - self.fired_x as f64 / self.total_x as f64
+    }
+
+    /// Hidden-delta (Δh) sparsity.
+    pub fn hidden_sparsity(&self) -> f64 {
+        if self.total_h == 0 {
+            return 0.0;
+        }
+        1.0 - self.fired_h as f64 / self.total_h as f64
+    }
+
+    /// Mean ΔRNN computing latency per frame (ms) at the core clock.
+    pub fn avg_latency_ms(&self) -> f64 {
+        if self.frames == 0 {
+            return 0.0;
+        }
+        self.rnn_cycles as f64 / self.frames as f64 / calib::CLOCK_HZ * 1e3
+    }
+}
+
+/// Power breakdown in µW (paper Fig. 10).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBreakdown {
+    pub fex_uw: f64,
+    pub rnn_uw: f64,
+    pub sram_uw: f64,
+    pub misc_uw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_uw(&self) -> f64 {
+        self.fex_uw + self.rnn_uw + self.sram_uw + self.misc_uw
+    }
+}
+
+/// SRAM flavour for the 6.6x comparison (paper §II-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SramKind {
+    /// the paper's 0.6 V near-V_TH full-custom macro
+    NearVth,
+    /// foundry push-rule 6T at nominal voltage
+    Foundry,
+}
+
+impl SramKind {
+    pub fn word_energy_pj(self) -> f64 {
+        match self {
+            SramKind::NearVth => calib::E_SRAM_WORD_PJ,
+            SramKind::Foundry => calib::E_SRAM_WORD_FOUNDRY_PJ,
+        }
+    }
+
+    pub fn leak_uw(self) -> f64 {
+        match self {
+            SramKind::NearVth => calib::SRAM_LEAK_UW,
+            SramKind::Foundry => calib::SRAM_LEAK_FOUNDRY_UW,
+        }
+    }
+}
+
+/// Convert counted activity into the chip power breakdown.
+///
+/// `fex_power_uw` comes from [`crate::fex::area::power_uw`] (it depends on
+/// the datapath architecture and active channel count, not on audio
+/// content — the serial pipeline runs every sample regardless).
+pub fn chip_power(activity: &ChipActivity, fex_power_uw: f64, sram: SramKind) -> PowerBreakdown {
+    let seconds = activity.frames as f64 / calib::FRAMES_PER_S;
+    if seconds == 0.0 {
+        return PowerBreakdown { fex_uw: fex_power_uw, rnn_uw: 0.0, sram_uw: 0.0, misc_uw: 0.0 };
+    }
+    let mac_uw = activity.mac_ops as f64 * calib::E_MAC_PJ * 1e-6 / seconds;
+    let read_uw = activity.sram_word_reads as f64 * sram.word_energy_pj() * 1e-6 / seconds;
+    PowerBreakdown {
+        fex_uw: fex_power_uw,
+        rnn_uw: calib::RNN_STATIC_UW + mac_uw,
+        sram_uw: sram.leak_uw() + read_uw,
+        misc_uw: calib::MISC_UW,
+    }
+}
+
+/// Energy per decision (nJ), paper convention: total power x mean latency.
+pub fn energy_per_decision_nj(power: &PowerBreakdown, activity: &ChipActivity) -> f64 {
+    power.total_uw() * activity.avg_latency_ms()
+}
+
+/// Chip area report (mm²): FEx from its gate model, ΔRNN from a gate
+/// model, SRAM from a bitcell model — each anchored to the paper (Fig. 10).
+#[derive(Debug, Clone, Copy)]
+pub struct AreaBreakdown {
+    pub fex_mm2: f64,
+    pub rnn_mm2: f64,
+    pub sram_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.fex_mm2 + self.rnn_mm2 + self.sram_mm2
+    }
+
+    /// The chip as built (design-point architecture).
+    pub fn chip() -> Self {
+        Self {
+            fex_mm2: crate::fex::area::area(crate::fex::biquad::Arch::MixedShift).area_mm2(),
+            rnn_mm2: crate::accel::area_mm2(),
+            sram_mm2: crate::sram::area_mm2(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_activity(lanes_per_frame: f64, frames: u64) -> ChipActivity {
+        let lanes = (lanes_per_frame * frames as f64) as u64;
+        ChipActivity {
+            frames,
+            mac_ops: lanes * 192 + frames * 768,
+            sram_word_reads: lanes * 96 + frames * 384,
+            rnn_cycles: frames * calib::CYCLES_FIXED + lanes * calib::CYCLES_PER_LANE,
+            fired_lanes: lanes,
+            total_lanes: frames * 74,
+            fired_x: 0,
+            total_x: frames * 10,
+            fired_h: 0,
+            total_h: frames * 64,
+            fex_visits: frames * 128 * 10,
+        }
+    }
+
+    #[test]
+    fn dense_point_power_and_energy() {
+        let act = synthetic_activity(74.0, 625);
+        let p = chip_power(&act, calib::FEX_DESIGN_UW, SramKind::NearVth);
+        assert!((p.total_uw() - calib::TOTAL_DENSE_UW).abs() < 0.25, "{}", p.total_uw());
+        let e = energy_per_decision_nj(&p, &act);
+        assert!((e - 121.2).abs() / 121.2 < 0.05, "{e}");
+    }
+
+    #[test]
+    fn design_point_power_and_energy() {
+        let act = synthetic_activity(24.5, 625);
+        let p = chip_power(&act, calib::FEX_DESIGN_UW, SramKind::NearVth);
+        assert!((p.total_uw() - calib::TOTAL_DESIGN_UW).abs() < 0.2, "{}", p.total_uw());
+        let e = energy_per_decision_nj(&p, &act);
+        assert!((e - 36.11).abs() / 36.11 < 0.06, "{e}");
+    }
+
+    #[test]
+    fn foundry_sram_costs_6_6x() {
+        let act = synthetic_activity(24.5, 625);
+        let near = chip_power(&act, calib::FEX_DESIGN_UW, SramKind::NearVth).sram_uw;
+        let foundry = chip_power(&act, calib::FEX_DESIGN_UW, SramKind::Foundry).sram_uw;
+        assert!((foundry / near - 6.6).abs() < 0.5, "{}", foundry / near);
+    }
+
+    #[test]
+    fn sparsity_accessors() {
+        let mut act = synthetic_activity(37.0, 10);
+        act.fired_x = 30;
+        act.fired_h = 340;
+        assert!((act.sparsity() - 0.5).abs() < 0.01);
+        assert!((act.input_sparsity() - 0.7).abs() < 0.01);
+        assert!((act.hidden_sparsity() - (1.0 - 340.0 / 640.0)).abs() < 0.01);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let a = synthetic_activity(10.0, 5);
+        let mut b = synthetic_activity(20.0, 7);
+        b.merge(&a);
+        assert_eq!(b.frames, 12);
+        assert_eq!(b.total_lanes, 12 * 74);
+    }
+
+    #[test]
+    fn zero_frames_no_panic() {
+        let act = ChipActivity::default();
+        assert_eq!(act.sparsity(), 0.0);
+        assert_eq!(act.avg_latency_ms(), 0.0);
+        let p = chip_power(&act, 1.0, SramKind::NearVth);
+        assert!(p.total_uw() >= 1.0);
+    }
+}

@@ -1,0 +1,348 @@
+//! FEx filter-bank design: Mel-spaced RBJ band-pass biquads.
+//!
+//! This is an independent re-derivation of the design in
+//! `python/compile/fexlib.py`; `artifacts/fex_coeffs.json` (dumped by the
+//! AOT step) is cross-checked against it in tests, guaranteeing the Rust
+//! fixed-point twin and the JAX float reference filter the *same* bank.
+//!
+//! Design recap: 16 channels, centre frequencies uniformly spaced on the Mel
+//! scale over [100 Hz, 3.6 kHz] (8 kHz input), per-channel Q from Mel
+//! neighbour spacing, each channel a 4th-order BPF realised as two identical
+//! cascaded RBJ constant-peak-gain band-pass sections. The RBJ structure has
+//! `b1 == 0` and `b2 == -b0` — the coefficient symmetry the chip exploits to
+//! replace half the multipliers with shifts/negations (paper §II-C1).
+
+use crate::fixed::QFormat;
+use crate::util::json::Json;
+
+/// Sample rate the bank is designed for.
+pub const SAMPLE_RATE: f64 = 8_000.0;
+/// Full channel count of the reconfigurable FEx.
+pub const NUM_CHANNELS: usize = 16;
+/// First channel of the paper's 10-channel design point (~552 Hz).
+pub const DESIGN_CHANNEL_OFFSET: usize = 4;
+/// Channels at the design point.
+pub const DESIGN_CHANNELS: usize = 10;
+const FMIN: f64 = 100.0;
+const FMAX: f64 = 3_600.0;
+
+/// Float (design-domain) biquad coefficients, normalised (a0 == 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BiquadCoeffs {
+    pub b0: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub a1: f64,
+    pub a2: f64,
+}
+
+impl BiquadCoeffs {
+    /// Magnitude response |H(f)| at frequency `f`.
+    pub fn magnitude(&self, f: f64, fs: f64) -> f64 {
+        let w = 2.0 * std::f64::consts::PI * f / fs;
+        let (re1, im1) = (w.cos(), -w.sin()); // z^-1 on the unit circle
+        let (re2, im2) = (re1 * re1 - im1 * im1, 2.0 * re1 * im1); // z^-2
+        let num_re = self.b0 + self.b1 * re1 + self.b2 * re2;
+        let num_im = self.b1 * im1 + self.b2 * im2;
+        let den_re = 1.0 + self.a1 * re1 + self.a2 * re2;
+        let den_im = self.a1 * im1 + self.a2 * im2;
+        (num_re.hypot(num_im)) / (den_re.hypot(den_im))
+    }
+
+    /// True iff both poles are strictly inside the unit circle.
+    pub fn is_stable(&self) -> bool {
+        // Jury criterion for z^2 + a1 z + a2
+        self.a2 < 1.0 && (self.a1.abs() < 1.0 + self.a2)
+    }
+}
+
+/// One FEx channel: centre frequency, Q, and its two cascaded sections
+/// (identical by construction).
+#[derive(Debug, Clone)]
+pub struct ChannelDesign {
+    pub index: usize,
+    pub f0: f64,
+    pub q: f64,
+    pub sos: [BiquadCoeffs; 2],
+}
+
+/// Hz -> Mel (O'Shaughnessy).
+pub fn mel(f: f64) -> f64 {
+    2595.0 * (1.0 + f / 700.0).log10()
+}
+
+/// Mel -> Hz.
+pub fn imel(m: f64) -> f64 {
+    700.0 * (10f64.powf(m / 2595.0) - 1.0)
+}
+
+/// `n` Mel-spaced centre frequencies on [fmin, fmax], inclusive.
+pub fn mel_centers(n: usize, fmin: f64, fmax: f64) -> Vec<f64> {
+    let (m0, m1) = (mel(fmin), mel(fmax));
+    (0..n)
+        .map(|i| imel(m0 + (m1 - m0) * i as f64 / (n as f64 - 1.0)))
+        .collect()
+}
+
+/// RBJ audio-EQ-cookbook band-pass, constant 0 dB peak gain.
+pub fn rbj_bandpass(f0: f64, q: f64, fs: f64) -> BiquadCoeffs {
+    let w0 = 2.0 * std::f64::consts::PI * f0 / fs;
+    let alpha = w0.sin() / (2.0 * q);
+    let a0 = 1.0 + alpha;
+    BiquadCoeffs {
+        b0: alpha / a0,
+        b1: 0.0,
+        b2: -alpha / a0,
+        a1: -2.0 * w0.cos() / a0,
+        a2: (1.0 - alpha) / a0,
+    }
+}
+
+/// Per-channel Q from Mel neighbour spacing: BW_c = (f_{c+1} - f_{c-1}) / 2.
+pub fn channel_qs(centers: &[f64]) -> Vec<f64> {
+    let n = centers.len();
+    (0..n)
+        .map(|i| {
+            let lo = if i > 0 { centers[i - 1] } else { centers[0] - (centers[1] - centers[0]) };
+            let hi = if i < n - 1 {
+                centers[i + 1]
+            } else {
+                centers[n - 1] + (centers[n - 1] - centers[n - 2])
+            };
+            centers[i] / ((hi - lo) / 2.0)
+        })
+        .collect()
+}
+
+/// The canonical DeltaKWS bank: 16 channels of cascaded RBJ BPF pairs.
+pub fn design_filterbank() -> Vec<ChannelDesign> {
+    let centers = mel_centers(NUM_CHANNELS, FMIN, FMAX);
+    let qs = channel_qs(&centers);
+    centers
+        .iter()
+        .zip(&qs)
+        .enumerate()
+        .map(|(index, (&f0, &q))| {
+            let bq = rbj_bandpass(f0, q, SAMPLE_RATE);
+            ChannelDesign { index, f0, q, sos: [bq, bq] }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Quantisation (mixed precision, paper §II-C3)
+// ---------------------------------------------------------------------------
+
+/// Quantised biquad: raw coefficient words + the formats they are in.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantBiquad {
+    /// numerator gain word (b0; b1 == 0 and b2 == -b0 are structural)
+    pub b0: i64,
+    pub a1: i64,
+    pub a2: i64,
+    pub qb: QFormat,
+    pub qa: QFormat,
+}
+
+impl QuantBiquad {
+    /// Stability-aware quantisation: a2 is quantised first, then a1 is
+    /// clamped strictly inside the Jury triangle (|a1| < 1 + a2) on the
+    /// quantised grid — low-frequency channels sit so close to the triangle
+    /// edge that naive rounding at 8 bits can land *on* it (marginally
+    /// stable), which real filter implementations also guard against.
+    pub fn from_float(c: &BiquadCoeffs, qb: QFormat, qa: QFormat) -> Self {
+        debug_assert_eq!(c.b1, 0.0, "RBJ BPF structure expected");
+        let a2 = qa.quantize(c.a2);
+        let mut a1 = qa.quantize(c.a1);
+        let a1_limit = (1i64 << qa.frac) + a2 - 1; // strict |a1| <= 1+a2-lsb
+        a1 = a1.clamp(-a1_limit, a1_limit);
+        Self { b0: qb.quantize(c.b0), a1, a2, qb, qa }
+    }
+
+    /// Effective float coefficients after quantisation (for analysis).
+    pub fn dequantize(&self) -> BiquadCoeffs {
+        BiquadCoeffs {
+            b0: self.qb.dequantize(self.b0),
+            b1: 0.0,
+            b2: -self.qb.dequantize(self.b0),
+            a1: self.qa.dequantize(self.a1),
+            a2: self.qa.dequantize(self.a2),
+        }
+    }
+}
+
+/// Paper design point: b in 12 bits, a in 8 bits (§II-C3: "12b/8b (b/a)
+/// mixed precision is sufficient").
+pub fn quantize_bank(
+    bank: &[ChannelDesign],
+    qb: QFormat,
+    qa: QFormat,
+) -> Vec<[QuantBiquad; 2]> {
+    bank.iter()
+        .map(|ch| [
+            QuantBiquad::from_float(&ch.sos[0], qb, qa),
+            QuantBiquad::from_float(&ch.sos[1], qb, qa),
+        ])
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Cross-check against the python-dumped design (artifacts/fex_coeffs.json)
+// ---------------------------------------------------------------------------
+
+pub struct CoeffsJson {
+    pub sample_rate: f64,
+    pub num_channels: usize,
+    pub design_channel_offset: usize,
+    pub design_channels: usize,
+    pub channels: Vec<CoeffsJsonChannel>,
+}
+
+pub struct CoeffsJsonChannel {
+    pub index: usize,
+    pub f0: f64,
+    pub q: f64,
+    pub sos: Vec<BiquadCoeffs>,
+}
+
+/// Load the python-side design dump for cross-checking.
+pub fn load_coeffs_json(path: &std::path::Path) -> crate::Result<CoeffsJson> {
+    let text = std::fs::read_to_string(path)?;
+    let j = crate::util::json::parse(&text).map_err(anyhow::Error::msg)?;
+    let field = |o: &Json, k: &str| -> crate::Result<f64> {
+        o.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing numeric field '{k}'"))
+    };
+    let mut channels = Vec::new();
+    for ch in j
+        .get("channels")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing 'channels'"))?
+    {
+        let mut sos = Vec::new();
+        for bq in ch.get("sos").and_then(Json::as_arr).unwrap_or(&[]) {
+            sos.push(BiquadCoeffs {
+                b0: field(bq, "b0")?,
+                b1: field(bq, "b1")?,
+                b2: field(bq, "b2")?,
+                a1: field(bq, "a1")?,
+                a2: field(bq, "a2")?,
+            });
+        }
+        channels.push(CoeffsJsonChannel {
+            index: field(ch, "index")? as usize,
+            f0: field(ch, "f0")?,
+            q: field(ch, "q")?,
+            sos,
+        });
+    }
+    Ok(CoeffsJson {
+        sample_rate: field(&j, "sample_rate")?,
+        num_channels: field(&j, "num_channels")? as usize,
+        design_channel_offset: field(&j, "design_channel_offset")? as usize,
+        design_channels: field(&j, "design_channels")? as usize,
+        channels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::q::formats;
+
+    #[test]
+    fn mel_roundtrip() {
+        for f in [100.0, 516.0, 1000.0, 3600.0] {
+            assert!((imel(mel(f)) - f).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bank_has_16_monotone_centers() {
+        let bank = design_filterbank();
+        assert_eq!(bank.len(), 16);
+        for w in bank.windows(2) {
+            assert!(w[0].f0 < w[1].f0);
+        }
+        assert!((bank[0].f0 - 100.0).abs() < 1e-6);
+        assert!((bank[15].f0 - 3600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn design_point_matches_paper_band() {
+        // paper: 10 channels covering 516 Hz .. 4.22 kHz (we clip at Nyquist)
+        let bank = design_filterbank();
+        let first = &bank[DESIGN_CHANNEL_OFFSET];
+        assert!((400.0..650.0).contains(&first.f0), "{}", first.f0);
+    }
+
+    #[test]
+    fn rbj_structure_symmetry() {
+        for ch in design_filterbank() {
+            for s in &ch.sos {
+                assert_eq!(s.b1, 0.0);
+                assert!((s.b2 + s.b0).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn float_bank_stable_with_unit_center_gain() {
+        for ch in design_filterbank() {
+            for s in &ch.sos {
+                assert!(s.is_stable(), "ch{} unstable", ch.index);
+                assert!((s.magnitude(ch.f0, SAMPLE_RATE) - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_bank_stays_stable() {
+        let bank = design_filterbank();
+        for qpair in quantize_bank(&bank, formats::COEFF_B, formats::COEFF_A) {
+            for q in qpair {
+                assert!(q.dequantize().is_stable());
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_center_gain_stays_near_unity() {
+        // mixed precision must not destroy the passband (paper's accuracy
+        // criterion); allow generous detuning at 8-bit a-coefficients
+        let bank = design_filterbank();
+        let quant = quantize_bank(&bank, formats::COEFF_B, formats::COEFF_A);
+        for (ch, qpair) in bank.iter().zip(&quant) {
+            let deq = qpair[0].dequantize();
+            // peak of the quantised filter (search near f0)
+            let peak = (1..200)
+                .map(|i| deq.magnitude(ch.f0 * 0.5 + ch.f0 * i as f64 / 100.0, SAMPLE_RATE))
+                .fold(0.0f64, f64::max);
+            assert!(peak > 0.5 && peak < 2.0, "ch{} peak {}", ch.index, peak);
+        }
+    }
+
+    #[test]
+    fn cross_check_python_design_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/fex_coeffs.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let json = load_coeffs_json(&path).unwrap();
+        assert_eq!(json.num_channels, NUM_CHANNELS);
+        assert_eq!(json.design_channel_offset, DESIGN_CHANNEL_OFFSET);
+        let bank = design_filterbank();
+        for (js, rs) in json.channels.iter().zip(&bank) {
+            assert!((js.f0 - rs.f0).abs() < 1e-6, "f0 mismatch ch{}", rs.index);
+            assert!((js.q - rs.q).abs() < 1e-9);
+            for (jb, rb) in js.sos.iter().zip(&rs.sos) {
+                assert!((jb.b0 - rb.b0).abs() < 1e-9);
+                assert!((jb.a1 - rb.a1).abs() < 1e-9);
+                assert!((jb.a2 - rb.a2).abs() < 1e-9);
+            }
+        }
+    }
+}

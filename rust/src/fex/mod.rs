@@ -1,0 +1,325 @@
+//! Serial IIR band-pass-filter feature extractor (FEx) — bit-accurate twin.
+//!
+//! Architecture (paper Fig. 4): a *serial pipeline* visits each active
+//! channel once per audio sample at CLK_IIR = 16 x f_s = 128 kHz; each visit
+//! runs the channel's two cascaded biquads and envelope update. At frame
+//! boundaries (16 ms = 128 samples) the envelope is log-compressed,
+//! offset/scale-adjusted and emitted as a 12-bit feature.
+//!
+//! The *reconfiguration control module* (paper §II-C2) selects which of the
+//! 16 channel slots are computed; inactive slots are clock-gated (they cost
+//! neither cycles nor multiplier energy — the source of the 30% power saving
+//! at the 10-channel design point, reproduced in `exp fig6`).
+//!
+//! Event counters (samples, channel visits, multiplier activations, adds,
+//! register-file accesses) feed the calibrated energy model in
+//! [`crate::energy`]; the datapath architecture ([`biquad::Arch`]) selects
+//! the gate-count/power model step of paper Fig. 7.
+
+pub mod area;
+pub mod biquad;
+pub mod design;
+pub mod postproc;
+
+use biquad::{Arch, Cascade};
+use design::{design_filterbank, quantize_bank, ChannelDesign};
+use postproc::{ChannelAdjust, Envelope};
+
+use crate::fixed;
+
+/// Samples per 16 ms frame at 8 kHz.
+pub const FRAME_SAMPLES: usize = 128;
+/// Max channels (hardware slots).
+pub const MAX_CHANNELS: usize = design::NUM_CHANNELS;
+
+/// One frame of FEx output: 12-bit features, one per hardware channel slot
+/// (inactive slots read 0).
+pub type FeatureFrame = [i64; MAX_CHANNELS];
+
+/// FEx configuration: datapath architecture + channel selection + adjusts.
+#[derive(Debug, Clone)]
+pub struct FexConfig {
+    pub arch: Arch,
+    /// active channel mask (reconfiguration control module)
+    pub active: [bool; MAX_CHANNELS],
+    pub adjust: [ChannelAdjust; MAX_CHANNELS],
+}
+
+impl FexConfig {
+    /// The paper's design point: MixedShift datapath, channels 4..14 active
+    /// (10 channels, ~552 Hz .. 3.6 kHz).
+    pub fn design_point() -> Self {
+        let mut active = [false; MAX_CHANNELS];
+        for slot in active
+            .iter_mut()
+            .skip(design::DESIGN_CHANNEL_OFFSET)
+            .take(design::DESIGN_CHANNELS)
+        {
+            *slot = true;
+        }
+        Self { arch: Arch::MixedShift, active, adjust: [ChannelAdjust::default(); MAX_CHANNELS] }
+    }
+
+    /// All 16 channels active.
+    pub fn all_channels(arch: Arch) -> Self {
+        Self {
+            arch,
+            active: [true; MAX_CHANNELS],
+            adjust: [ChannelAdjust::default(); MAX_CHANNELS],
+        }
+    }
+
+    /// `n` active channels for the Fig. 6 sweep. Preference order follows
+    /// the paper's selection (keep the speech-formant band, drop the lowest
+    /// channels first): design band 13..=4 top-down, then 14..15, then
+    /// 3..=0 — so n = 10 reproduces the design point exactly and n = 16
+    /// enables everything.
+    pub fn n_channels(arch: Arch, n: usize) -> Self {
+        assert!((1..=MAX_CHANNELS).contains(&n));
+        let hi = design::DESIGN_CHANNEL_OFFSET + design::DESIGN_CHANNELS; // 14
+        let mut order: Vec<usize> = (design::DESIGN_CHANNEL_OFFSET..hi).rev().collect();
+        order.extend(hi..MAX_CHANNELS);
+        order.extend((0..design::DESIGN_CHANNEL_OFFSET).rev());
+        let mut active = [false; MAX_CHANNELS];
+        for &ch in order.iter().take(n) {
+            active[ch] = true;
+        }
+        Self { arch, active, adjust: [ChannelAdjust::default(); MAX_CHANNELS] }
+    }
+
+    pub fn num_active(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+}
+
+/// Activity counters for the energy/power model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FexCounters {
+    /// audio samples consumed
+    pub samples: u64,
+    /// active channel-slot visits (serial pipeline stages executed)
+    pub channel_visits: u64,
+    /// true multiplier activations in the biquad array
+    pub multiplies: u64,
+    /// adder activations (incl. envelope)
+    pub adds: u64,
+    /// register-file read+write accesses (2 biquad states x 4 words + env)
+    pub rf_accesses: u64,
+    /// frames emitted
+    pub frames: u64,
+}
+
+/// The feature extractor twin.
+pub struct Fex {
+    pub config: FexConfig,
+    bank: Vec<ChannelDesign>,
+    cascades: Vec<Cascade>,
+    envelopes: [Envelope; MAX_CHANNELS],
+    sample_in_frame: usize,
+    pub counters: FexCounters,
+}
+
+impl Fex {
+    pub fn new(config: FexConfig) -> Self {
+        let bank = design_filterbank();
+        let (qb, qa) = config.arch.formats();
+        let quant = quantize_bank(&bank, qb, qa);
+        let cascades = quant.into_iter().map(Cascade::new).collect();
+        Self {
+            config,
+            bank,
+            cascades,
+            envelopes: [Envelope::default(); MAX_CHANNELS],
+            sample_in_frame: 0,
+            counters: FexCounters::default(),
+        }
+    }
+
+    /// Reset all filter/envelope state (between utterances).
+    pub fn reset(&mut self) {
+        for c in &mut self.cascades {
+            c.reset();
+        }
+        for e in &mut self.envelopes {
+            e.reset();
+        }
+        self.sample_in_frame = 0;
+    }
+
+    /// The float design this twin quantised (analysis/plots).
+    pub fn bank(&self) -> &[ChannelDesign] {
+        &self.bank
+    }
+
+    /// Push one 12-bit audio sample (Q1.11). Returns a feature frame every
+    /// `FRAME_SAMPLES` samples.
+    ///
+    /// Hot path: counter updates are hoisted out of the per-channel loop
+    /// (one bulk add per sample instead of five per visit) — EXPERIMENTS.md
+    /// §Perf iteration 1.
+    pub fn push_sample(&mut self, x12: i64) -> Option<FeatureFrame> {
+        debug_assert!(fixed::fits(x12, 12), "input must be 12-bit");
+        // 12-bit ADC word -> Q1.15 internal signal path
+        let x = x12 << 4;
+        let mut visits = 0u64;
+        for ch in 0..MAX_CHANNELS {
+            if !self.config.active[ch] {
+                continue; // clock-gated slot: no cycles, no energy
+            }
+            let y = self.cascades[ch].step(x);
+            self.envelopes[ch].step(y);
+            visits += 1;
+        }
+        // bulk per-visit op counts for the energy model: `multipliers()` is
+        // already the whole-filter (both sections) count
+        self.counters.samples += 1;
+        self.counters.channel_visits += visits;
+        self.counters.multiplies += visits * self.config.arch.multipliers() as u64;
+        self.counters.adds += visits * (2 * 3 + 1); // 3 adds/section + env
+        self.counters.rf_accesses += visits * (2 * 8 + 2); // DF-I RF r/w + env
+        self.sample_in_frame += 1;
+        if self.sample_in_frame == FRAME_SAMPLES {
+            self.sample_in_frame = 0;
+            self.counters.frames += 1;
+            Some(self.emit_frame())
+        } else {
+            None
+        }
+    }
+
+    fn emit_frame(&mut self) -> FeatureFrame {
+        let mut out = [0i64; MAX_CHANNELS];
+        for ch in 0..MAX_CHANNELS {
+            if self.config.active[ch] {
+                let feat = postproc::log_compress(self.envelopes[ch].acc);
+                out[ch] = self.config.adjust[ch].apply(feat);
+            }
+        }
+        out
+    }
+
+    /// Convenience: run a whole utterance (12-bit samples) into frames.
+    pub fn process(&mut self, audio12: &[i64]) -> Vec<FeatureFrame> {
+        audio12.iter().filter_map(|&s| self.push_sample(s)).collect()
+    }
+
+    /// FEx clock frequency implied by the active configuration: the serial
+    /// pipeline needs one cycle per active channel per sample (the paper
+    /// runs 16 slots at 128 kHz; fewer active channels -> gated slots).
+    pub fn clock_hz(&self) -> u64 {
+        8_000 * MAX_CHANNELS as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tone(f: f64, amp: f64, n: usize) -> Vec<i64> {
+        (0..n)
+            .map(|i| {
+                let v = amp * (2.0 * std::f64::consts::PI * f * i as f64 / 8000.0).sin();
+                (v * 2047.0) as i64
+            })
+            .collect()
+    }
+
+    #[test]
+    fn frame_cadence() {
+        let mut fex = Fex::new(FexConfig::design_point());
+        let audio = tone(1000.0, 0.5, FRAME_SAMPLES * 10);
+        let frames = fex.process(&audio);
+        assert_eq!(frames.len(), 10);
+        assert_eq!(fex.counters.frames, 10);
+        assert_eq!(fex.counters.samples, FRAME_SAMPLES as u64 * 10);
+    }
+
+    #[test]
+    fn tone_localises_to_nearest_active_channel() {
+        let mut fex = Fex::new(FexConfig::all_channels(Arch::MixedShift));
+        let audio = tone(1000.0, 0.5, 8000);
+        let frames = fex.process(&audio);
+        let late = frames.last().unwrap();
+        let best = (0..MAX_CHANNELS).max_by_key(|&c| late[c]).unwrap();
+        let target = fex
+            .bank()
+            .iter()
+            .min_by(|a, b| {
+                (a.f0 - 1000.0).abs().partial_cmp(&(b.f0 - 1000.0).abs()).unwrap()
+            })
+            .unwrap()
+            .index;
+        assert!((best as i64 - target as i64).abs() <= 1, "best={best} target={target}");
+    }
+
+    #[test]
+    fn inactive_channels_emit_zero_and_cost_nothing() {
+        let mut cfg = FexConfig::design_point();
+        cfg.active = [false; MAX_CHANNELS];
+        cfg.active[8] = true;
+        let mut fex = Fex::new(cfg);
+        let frames = fex.process(&tone(1200.0, 0.6, 2560));
+        for f in &frames {
+            for (ch, &v) in f.iter().enumerate() {
+                if ch != 8 {
+                    assert_eq!(v, 0);
+                }
+            }
+        }
+        // exactly one channel visit per sample
+        assert_eq!(fex.counters.channel_visits, fex.counters.samples);
+    }
+
+    #[test]
+    fn channel_visits_scale_with_active_count() {
+        for n in [1usize, 4, 10, 16] {
+            let mut fex = Fex::new(FexConfig::n_channels(Arch::MixedShift, n));
+            assert_eq!(fex.config.num_active(), n);
+            fex.process(&tone(800.0, 0.4, 1280));
+            assert_eq!(fex.counters.channel_visits, fex.counters.samples * fex.config.num_active() as u64);
+        }
+    }
+
+    #[test]
+    fn silence_gives_zero_features() {
+        let mut fex = Fex::new(FexConfig::design_point());
+        let frames = fex.process(&vec![0i64; 1280]);
+        for f in frames {
+            assert!(f.iter().all(|&v| v == 0));
+        }
+    }
+
+    #[test]
+    fn louder_tone_larger_feature() {
+        let run = |amp: f64| -> i64 {
+            let mut fex = Fex::new(FexConfig::all_channels(Arch::MixedShift));
+            let frames = fex.process(&tone(1000.0, amp, 4096));
+            *frames.last().unwrap().iter().max().unwrap()
+        };
+        let (soft, loud) = (run(0.05), run(0.8));
+        assert!(loud > soft, "loud={loud} soft={soft}");
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut fex = Fex::new(FexConfig::design_point());
+        fex.process(&tone(700.0, 0.7, 2560));
+        fex.reset();
+        let frames = fex.process(&vec![0i64; FRAME_SAMPLES]);
+        assert!(frames[0].iter().all(|&v| v == 0), "state leaked through reset");
+    }
+
+    #[test]
+    fn design_point_is_ten_channels() {
+        let cfg = FexConfig::design_point();
+        assert_eq!(cfg.num_active(), 10);
+        assert_eq!(cfg.arch, Arch::MixedShift);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_input_asserts_in_debug() {
+        let mut fex = Fex::new(FexConfig::design_point());
+        fex.push_sample(5000); // > 12-bit
+    }
+}

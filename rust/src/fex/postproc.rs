@@ -1,0 +1,193 @@
+//! FEx post-processing: envelope detection, log compression, channel-wise
+//! offset/scale and normalisation (paper Fig. 4's "post-processing unit").
+//!
+//! * Envelope: full-wave rectifier + 1-pole leaky integrator,
+//!   `e += (|y| - e) >> ENV_SHIFT` (shift = 5, i.e. k = 1/32 — a power of
+//!   two so the "multiplier" is a wire shift). Floor shift, as a bare
+//!   hardware shifter truncates.
+//! * Log compression: `feat = log2(1 + e * 2^12) / 12`, with log2 realised
+//!   by priority encoder + linear mantissa interpolation
+//!   ([`crate::fixed::log2_linear`]) — no LUT, no multiplier.
+//! * Channel-wise offset/scale: `feat' = sat((feat - offset) * scale)` with
+//!   scale in Q2.6; identity by default (offset 0, scale 1.0).
+//!
+//! Feature output is a 12-bit unsigned word (0..=4095) normalised so that
+//! 4095 == full-scale; the ΔRNN consumes it as Q0.8 after a 4-bit floor
+//! shift (see `accel`).
+
+use crate::fixed;
+
+/// Envelope leak shift: k = 2^-5 = 1/32.
+pub const ENV_SHIFT: u32 = 5;
+/// Log compression gain: feat = log2(1 + e * 2^LOG_GAIN_SHIFT) / LOG_NORM.
+pub const LOG_GAIN_SHIFT: u32 = 12;
+pub const LOG_NORM: u32 = 12;
+/// Feature word width (paper: 12-bit features).
+pub const FEAT_BITS: u32 = 12;
+pub const FEAT_MAX: i64 = (1 << FEAT_BITS) - 1;
+/// 1/12 in Q15 (x * 2731 >> 15 ≈ x / 12), the constant multiplier the
+/// normaliser uses.
+const INV12_Q15: i64 = 2731;
+
+/// Envelope state: Q1.15 magnitude accumulator per channel (non-negative).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Envelope {
+    pub acc: i64, // Q1.15, >= 0
+}
+
+impl Envelope {
+    /// Update with one Q1.15 filter output sample; returns current envelope.
+    #[inline]
+    pub fn step(&mut self, y: i64) -> i64 {
+        let mag = y.abs(); // full-wave rectifier
+        // leaky integrator with floor shift (hardware truncation). The
+        // (mag - acc) difference may be negative; arithmetic >> floors,
+        // giving the slight downward bias real hardware has.
+        self.acc += (mag - self.acc) >> ENV_SHIFT;
+        debug_assert!(self.acc >= 0);
+        self.acc
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+}
+
+/// Log-compress a Q1.15 envelope value into a 12-bit feature word.
+///
+/// v = 2^15 + (e << LOG_GAIN_SHIFT - 15-bit align) represents
+/// (1 + e * 2^12) in Q15; log2 via priority encoder; normalise by 1/12.
+#[inline]
+pub fn log_compress(env_q15: i64) -> i64 {
+    debug_assert!(env_q15 >= 0);
+    // V = (1 + e * 4096) in Q15: 32768 + env_raw * 4096 = 32768 + (env << 12)
+    let v = (1i64 << 15) + (env_q15 << LOG_GAIN_SHIFT);
+    // log2(V) in Q12, minus the Q15 exponent offset (15 << 12)
+    let log_q12 = fixed::log2_linear(v, 12) - (15 << 12);
+    debug_assert!(log_q12 >= 0);
+    // divide by 12 (constant multiplier), keep 12-bit feature
+    let feat = (log_q12 * INV12_Q15) >> 15;
+    feat.min(FEAT_MAX)
+}
+
+/// Channel-wise offset/scale adjustment (reconfigurable; identity default).
+#[derive(Debug, Clone, Copy)]
+pub struct ChannelAdjust {
+    /// subtracted from the 12-bit feature
+    pub offset: i64,
+    /// Q2.6 scale (64 == 1.0)
+    pub scale_q6: i64,
+}
+
+impl Default for ChannelAdjust {
+    fn default() -> Self {
+        Self { offset: 0, scale_q6: 64 }
+    }
+}
+
+impl ChannelAdjust {
+    /// Apply to a 12-bit feature; result clamped to 0..=4095.
+    #[inline]
+    pub fn apply(&self, feat: i64) -> i64 {
+        (((feat - self.offset) * self.scale_q6) >> 6).clamp(0, FEAT_MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_of_constant_converges_to_it() {
+        let mut e = Envelope::default();
+        let mut last = 0;
+        for _ in 0..500 {
+            last = e.step(16000);
+        }
+        // floor-shift integrator converges to within 2^ENV_SHIFT of target
+        assert!((last - 16000).abs() <= 32, "{last}");
+    }
+
+    #[test]
+    fn envelope_decays_to_zero() {
+        let mut e = Envelope::default();
+        for _ in 0..100 {
+            e.step(20000);
+        }
+        for _ in 0..3000 {
+            e.step(0);
+        }
+        assert_eq!(e.acc, 0);
+    }
+
+    #[test]
+    fn envelope_never_negative() {
+        let mut e = Envelope::default();
+        for y in [-30000i64, 100, -5, 0, 32767, -32768] {
+            let v = e.step(y);
+            assert!(v >= 0);
+        }
+    }
+
+    #[test]
+    fn envelope_rectifies() {
+        let mut ep = Envelope::default();
+        let mut en = Envelope::default();
+        for _ in 0..200 {
+            ep.step(12345);
+            en.step(-12345);
+        }
+        assert_eq!(ep.acc, en.acc);
+    }
+
+    #[test]
+    fn log_compress_zero_is_zero() {
+        assert_eq!(log_compress(0), 0);
+    }
+
+    #[test]
+    fn log_compress_full_scale_near_max() {
+        // e = 1.0 (32767 in Q1.15): log2(1+4096)/12 ≈ 1.0005 → clamps to 4095
+        let f = log_compress(32767);
+        assert!(f >= 4000, "{f}");
+        assert!(f <= FEAT_MAX);
+    }
+
+    #[test]
+    fn log_compress_monotone() {
+        let mut prev = -1;
+        for e in (0..32768).step_by(13) {
+            let f = log_compress(e);
+            assert!(f >= prev, "non-monotone at {e}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn log_compress_matches_float_model() {
+        // against float log2(1 + e*4096)/12, error < interp + quantisation
+        for e_raw in [1i64, 10, 100, 1000, 5000, 20000, 32767] {
+            let e = e_raw as f64 / 32768.0;
+            let expect = ((1.0 + e * 4096.0).log2() / 12.0).min(1.0);
+            let got = log_compress(e_raw) as f64 / 4095.0;
+            assert!((got - expect).abs() < 0.012, "e_raw={e_raw} {got} {expect}");
+        }
+    }
+
+    #[test]
+    fn adjust_identity_default() {
+        let adj = ChannelAdjust::default();
+        for f in [0i64, 1, 100, 4095] {
+            assert_eq!(adj.apply(f), f);
+        }
+    }
+
+    #[test]
+    fn adjust_offset_scale_and_clamp() {
+        let adj = ChannelAdjust { offset: 100, scale_q6: 128 }; // (f-100)*2
+        assert_eq!(adj.apply(100), 0);
+        assert_eq!(adj.apply(150), 100);
+        assert_eq!(adj.apply(50), 0); // clamps below
+        assert_eq!(adj.apply(4095), FEAT_MAX); // clamps above
+    }
+}

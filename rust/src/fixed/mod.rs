@@ -1,0 +1,202 @@
+//! Fixed-point arithmetic substrate shared by the FEx and ΔRNN twins.
+//!
+//! Everything the chip computes is integer arithmetic on narrow
+//! two's-complement words. This module provides the exact primitives the
+//! datapaths are built from — width-parametric saturation, rounding shifts,
+//! saturating multiply-accumulate — together with [`QFormat`], a descriptor
+//! for signed Qm.n formats used to quantise/de-quantise at the float
+//! boundary (filter design, feature logging, weight import).
+//!
+//! Conventions (documented here once, relied on everywhere):
+//! * all raw values are `i64` carrying a two's-complement word of
+//!   `bits <= 48`; the *format* (position of the binary point) is tracked by
+//!   the caller or a [`QFormat`];
+//! * right shifts round **half-away-from-zero** (`round_shift`) where the
+//!   chip has a rounding stage and **floor** (`>>`, arithmetic) where it
+//!   truncates — each call site states which it models;
+//! * overflow always saturates (the chip's datapaths clamp; wrap-around
+//!   would be a functional bug in silicon too).
+
+pub mod q;
+
+pub use q::QFormat;
+
+/// Largest value representable in a signed word of `bits`.
+#[inline]
+pub const fn max_val(bits: u32) -> i64 {
+    (1i64 << (bits - 1)) - 1
+}
+
+/// Smallest (most negative) value representable in a signed word of `bits`.
+#[inline]
+pub const fn min_val(bits: u32) -> i64 {
+    -(1i64 << (bits - 1))
+}
+
+/// Saturate `v` into a signed `bits`-wide word.
+#[inline]
+pub fn sat(v: i64, bits: u32) -> i64 {
+    debug_assert!((2..=63).contains(&bits));
+    v.clamp(min_val(bits), max_val(bits))
+}
+
+/// True iff `v` already fits a signed `bits`-wide word.
+#[inline]
+pub fn fits(v: i64, bits: u32) -> bool {
+    v >= min_val(bits) && v <= max_val(bits)
+}
+
+/// Arithmetic right shift with round-half-away-from-zero.
+///
+/// This is the rounding the chip's post-multiply normalisation stages use:
+/// add half an LSB in the direction of the sign, then floor-shift.
+#[inline]
+pub fn round_shift(v: i64, sh: u32) -> i64 {
+    if sh == 0 {
+        return v;
+    }
+    let half = 1i64 << (sh - 1);
+    if v >= 0 {
+        (v + half) >> sh
+    } else {
+        -((-v + half) >> sh)
+    }
+}
+
+/// Truncating (floor) arithmetic right shift — what a bare wire-shift does.
+#[inline]
+pub fn floor_shift(v: i64, sh: u32) -> i64 {
+    v >> sh
+}
+
+/// Saturating fixed-point multiply: `(a * b) >> sh`, rounded, saturated to
+/// `out_bits`. Matches a `wa x wb` hardware multiplier feeding a rounding
+/// normaliser and a clamp.
+#[inline]
+pub fn mul_shift_sat(a: i64, b: i64, sh: u32, out_bits: u32) -> i64 {
+    sat(round_shift(a * b, sh), out_bits)
+}
+
+/// Saturating add into an `out_bits` accumulator.
+#[inline]
+pub fn add_sat(a: i64, b: i64, out_bits: u32) -> i64 {
+    sat(a + b, out_bits)
+}
+
+/// Count of significant magnitude bits (position of MSB), `v > 0`.
+/// `msb_pos(1) == 0`, `msb_pos(32768) == 15`.
+#[inline]
+pub fn msb_pos(v: i64) -> u32 {
+    debug_assert!(v > 0);
+    63 - v.leading_zeros()
+}
+
+/// Hardware log2 via priority encoder + linear mantissa interpolation.
+///
+/// Input: `v > 0` (integer). Output: `log2(v)` in Q`frac_bits` fixed point.
+/// This is the classic LUT-free log the FEx's compression stage uses; the
+/// max interpolation error is ~0.086 bits, well under the feature LSB.
+#[inline]
+pub fn log2_linear(v: i64, frac_bits: u32) -> i64 {
+    debug_assert!(v > 0);
+    let p = msb_pos(v);
+    let mant = v - (1i64 << p); // v - 2^p, in [0, 2^p)
+    let frac = if p >= frac_bits {
+        mant >> (p - frac_bits)
+    } else {
+        mant << (frac_bits - p)
+    };
+    ((p as i64) << frac_bits) + frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_min_val() {
+        assert_eq!(max_val(8), 127);
+        assert_eq!(min_val(8), -128);
+        assert_eq!(max_val(12), 2047);
+        assert_eq!(min_val(12), -2048);
+        assert_eq!(max_val(16), 32767);
+    }
+
+    #[test]
+    fn sat_clamps_both_sides() {
+        assert_eq!(sat(1000, 8), 127);
+        assert_eq!(sat(-1000, 8), -128);
+        assert_eq!(sat(100, 8), 100);
+        assert_eq!(sat(-128, 8), -128);
+        assert_eq!(sat(127, 8), 127);
+    }
+
+    #[test]
+    fn fits_boundaries() {
+        assert!(fits(127, 8));
+        assert!(!fits(128, 8));
+        assert!(fits(-128, 8));
+        assert!(!fits(-129, 8));
+    }
+
+    #[test]
+    fn round_shift_half_away() {
+        assert_eq!(round_shift(5, 1), 3); // 2.5 -> 3
+        assert_eq!(round_shift(-5, 1), -3); // -2.5 -> -3
+        assert_eq!(round_shift(4, 1), 2);
+        assert_eq!(round_shift(-4, 1), -2);
+        assert_eq!(round_shift(7, 2), 2); // 1.75 -> 2
+        assert_eq!(round_shift(100, 0), 100);
+    }
+
+    #[test]
+    fn floor_shift_truncates_toward_neg_inf() {
+        assert_eq!(floor_shift(5, 1), 2);
+        assert_eq!(floor_shift(-5, 1), -3);
+    }
+
+    #[test]
+    fn mul_shift_sat_basic() {
+        // 0.5 * 0.5 in Q1.14: 8192*8192 >> 14 = 4096
+        assert_eq!(mul_shift_sat(8192, 8192, 14, 16), 4096);
+        // saturation engages
+        assert_eq!(mul_shift_sat(32767, 32767, 14, 16), 32767);
+        assert_eq!(mul_shift_sat(-32768, 32767, 14, 16), -32768);
+    }
+
+    #[test]
+    fn msb_positions() {
+        assert_eq!(msb_pos(1), 0);
+        assert_eq!(msb_pos(2), 1);
+        assert_eq!(msb_pos(3), 1);
+        assert_eq!(msb_pos(32768), 15);
+        assert_eq!(msb_pos((1 << 27) + 5), 27);
+    }
+
+    #[test]
+    fn log2_linear_exact_at_powers() {
+        for p in 0..40u32 {
+            assert_eq!(log2_linear(1i64 << p, 12), (p as i64) << 12);
+        }
+    }
+
+    #[test]
+    fn log2_linear_error_bound() {
+        // linear-interp log2 error <= ~0.086 bits
+        for v in [3i64, 5, 7, 100, 1000, 12345, 99999, 5_000_000] {
+            let approx = log2_linear(v, 12) as f64 / 4096.0;
+            let exact = (v as f64).log2();
+            assert!((approx - exact).abs() < 0.09, "v={v} {approx} {exact}");
+        }
+    }
+
+    #[test]
+    fn log2_linear_monotone() {
+        let mut prev = -1;
+        for v in 1..5000i64 {
+            let l = log2_linear(v, 12);
+            assert!(l >= prev, "non-monotone at {v}");
+            prev = l;
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Signed Qm.n format descriptor: quantisation at the float boundary.
+//!
+//! A [`QFormat`] describes a signed fixed-point word of `bits` total bits
+//! with `frac` fractional bits (so `int = bits - 1 - frac` integer bits).
+//! It is used wherever float values enter or leave the bit-accurate domain:
+//! quantising designed filter coefficients, trained weights, and thresholds,
+//! and de-quantising features/states for logging and comparison against the
+//! float references.
+
+/// A signed fixed-point format: `bits` total, `frac` fractional bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    /// total word width including sign bit (2..=48)
+    pub bits: u32,
+    /// fractional bits (binary point position)
+    pub frac: u32,
+}
+
+impl QFormat {
+    pub const fn new(bits: u32, frac: u32) -> Self {
+        Self { bits, frac }
+    }
+
+    /// The resolution (value of one LSB).
+    pub fn lsb(&self) -> f64 {
+        (self.frac as f64).exp2().recip()
+    }
+
+    /// Largest representable real value.
+    pub fn max_value(&self) -> f64 {
+        super::max_val(self.bits) as f64 * self.lsb()
+    }
+
+    /// Smallest representable real value.
+    pub fn min_value(&self) -> f64 {
+        super::min_val(self.bits) as f64 * self.lsb()
+    }
+
+    /// Quantise a float to the nearest representable raw word (saturating).
+    pub fn quantize(&self, v: f64) -> i64 {
+        let scaled = (v * (self.frac as f64).exp2()).round();
+        super::sat(scaled as i64, self.bits)
+    }
+
+    /// De-quantise a raw word back to float.
+    pub fn dequantize(&self, raw: i64) -> f64 {
+        raw as f64 * self.lsb()
+    }
+
+    /// Round-trip quantisation error for `v` (absolute).
+    pub fn error(&self, v: f64) -> f64 {
+        (self.dequantize(self.quantize(v)) - v).abs()
+    }
+
+    /// Can `v` be represented without saturating?
+    pub fn represents(&self, v: f64) -> bool {
+        v <= self.max_value() && v >= self.min_value()
+    }
+
+    /// The highest-resolution Q format with `bits` total bits that still
+    /// represents ±`max_abs` without saturating (used by the
+    /// mixed-precision coefficient search).
+    pub fn fit(bits: u32, max_abs: f64) -> Self {
+        for frac in (1..bits).rev() {
+            let q = Self { bits, frac };
+            if q.max_value() >= max_abs {
+                return q;
+            }
+        }
+        Self { bits, frac: 0 }
+    }
+}
+
+/// Chip-wide canonical formats (see DESIGN.md §6).
+pub mod formats {
+    use super::QFormat;
+
+    /// Audio input: 12-bit signed, Q1.11, [-1, 1).
+    pub const AUDIO: QFormat = QFormat::new(12, 11);
+    /// FEx internal signal path: 16-bit Q1.15.
+    pub const SIGNAL: QFormat = QFormat::new(16, 15);
+    /// FEx feature output: 12-bit unsigned-range Q0.12-ish (we keep sign bit).
+    pub const FEATURE: QFormat = QFormat::new(13, 12);
+    /// Biquad numerator (b) coefficients: 12-bit, Q0.11 (|b0| < 1).
+    pub const COEFF_B: QFormat = QFormat::new(12, 11);
+    /// Biquad denominator (a) coefficients: 8-bit, Q1.6 (|a1| < 2 strictly,
+    /// since |a1| = 2|cos w0| / (1+alpha) < 2 and |a2| < 1).
+    pub const COEFF_A: QFormat = QFormat::new(8, 6);
+    /// ΔRNN activations / hidden state: 16-bit Q8.8.
+    pub const ACT: QFormat = QFormat::new(16, 8);
+    /// ΔRNN weights: 8-bit, Q1.6.
+    pub const WEIGHT: QFormat = QFormat::new(8, 6);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::formats::*;
+    use super::*;
+
+    #[test]
+    fn lsb_and_ranges() {
+        let q = QFormat::new(12, 11);
+        assert_eq!(q.lsb(), 1.0 / 2048.0);
+        assert!((q.max_value() - (2047.0 / 2048.0)).abs() < 1e-12);
+        assert_eq!(q.min_value(), -1.0);
+    }
+
+    #[test]
+    fn quantize_roundtrip_within_lsb() {
+        let q = QFormat::new(16, 15);
+        for v in [-0.999, -0.5, -0.001, 0.0, 0.3333, 0.9999] {
+            let err = q.error(v);
+            assert!(err <= q.lsb() / 2.0 + 1e-12, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let q = QFormat::new(8, 5); // Q2.5, range [-4, 3.96875]
+        assert_eq!(q.quantize(10.0), 127);
+        assert_eq!(q.quantize(-10.0), -128);
+        assert_eq!(q.dequantize(q.quantize(10.0)), 127.0 / 32.0);
+    }
+
+    #[test]
+    fn fit_picks_highest_resolution() {
+        let q = QFormat::fit(8, 1.93);
+        assert_eq!(q.frac, 6); // Q1.6: max 1.984 >= 1.93
+        let q = QFormat::fit(12, 0.49);
+        assert_eq!(q.frac, 11); // Q0.11: max 0.9995
+        let q = QFormat::fit(8, 7.5);
+        assert_eq!(q.frac, 4); // Q3.4: max 7.9375
+    }
+
+    #[test]
+    fn fit_never_underflows_width() {
+        let q = QFormat::fit(8, 1e9);
+        assert_eq!(q.frac, 0);
+    }
+
+    #[test]
+    fn canonical_formats_sane() {
+        assert!(AUDIO.represents(0.999));
+        assert!(!AUDIO.represents(1.01));
+        assert!(COEFF_A.represents(-1.99));
+        assert!(COEFF_B.represents(0.49));
+        assert!(ACT.represents(127.9));
+        assert!(WEIGHT.represents(1.98));
+        assert_eq!(SIGNAL.quantize(0.5), 16384);
+    }
+
+    #[test]
+    fn dequantize_matches_manual() {
+        assert_eq!(ACT.dequantize(256), 1.0);
+        assert_eq!(ACT.quantize(0.2), 51); // the paper's Δ_TH = 0.2 design point
+        assert_eq!(WEIGHT.dequantize(64), 1.0);
+    }
+}

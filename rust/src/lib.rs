@@ -1,0 +1,86 @@
+//! # DeltaKWS — temporal-sparsity-aware keyword spotting, in software
+//!
+//! A full-system reproduction of *"DeltaKWS: A 65nm 36nJ/Decision Bio-inspired
+//! Temporal-Sparsity-Aware Digital Keyword Spotting IC with 0.6V Near-Threshold
+//! SRAM"* (IEEE TCAS-AI 2024).
+//!
+//! The crate contains a **bit-accurate, cycle-approximate, energy-calibrated
+//! digital twin** of the DeltaKWS chip plus the surrounding system a user
+//! would need to deploy it:
+//!
+//! * [`fixed`] — fixed-point arithmetic substrate (Q-formats, saturation).
+//! * [`fex`] — the serial IIR band-pass-filter feature extractor
+//!   (mixed-precision biquads, shift-replaced multipliers, channel selection).
+//! * [`accel`] — the ΔRNN accelerator: ΔEncoder, ΔFIFOs, 8-lane MAC array,
+//!   non-linearity LUTs and the state assembler, with cycle accounting.
+//! * [`sram`] — the 24 kB near-V_TH weight SRAM model: banking, energy and
+//!   the skew-resistant column-MUX timing (discrete-event simulated).
+//! * [`chip`] — chip top-level: SPI front door, clock dividers, async FIFO
+//!   clock-domain crossing, decision logic.
+//! * [`energy`] — event-counting energy/power and gate-count area models,
+//!   calibrated against the paper's measured breakdown.
+//! * [`audio`] / [`dataset`] — synthetic Google-Speech-Commands-like corpus
+//!   (formant synthesis) used in place of the gated GSCD download.
+//! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) and executes them from Rust; Python is never on the
+//!   request path.
+//! * [`train`] — training driver that runs the AOT `train_step` through PJRT
+//!   and quantises the result into the chip's int8 weight format.
+//! * [`coordinator`] — streaming serving runtime: routes audio streams to a
+//!   pool of chip-twin workers with dynamic batching and backpressure.
+//! * [`baseline`] — the comparison points: dense (non-Δ) accelerator,
+//!   coarse-grained skip-RNN, and an FFT/MFCC FEx cost model.
+//! * [`exp`] — drivers that regenerate every table and figure of the paper.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod accel;
+pub mod audio;
+pub mod baseline;
+pub mod chip;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod energy;
+pub mod exp;
+pub mod fex;
+pub mod fixed;
+pub mod runtime;
+pub mod sram;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, like the binaries).
+pub type Result<T> = anyhow::Result<T>;
+
+/// The 12 GSCD class labels used throughout the crate, in chip output order.
+pub const CLASS_LABELS: [&str; 12] = [
+    "silence", "unknown", "down", "go", "left", "no", "off", "on", "right", "stop", "up", "yes",
+];
+
+/// Number of output classes (12-class GSCD task; 11-class drops "unknown").
+pub const NUM_CLASSES: usize = 12;
+
+/// Hidden size of the ΔGRU layer (paper: 64 neurons).
+pub const HIDDEN: usize = 64;
+
+/// Maximum number of IIR feature channels the FEx supports (paper: 16).
+pub const MAX_CHANNELS: usize = 16;
+
+/// Number of channels at the paper's design point (516 Hz – 4.22 kHz).
+pub const DESIGN_CHANNELS: usize = 10;
+
+/// Audio sample rate after sub-sampling (paper: 8 kHz).
+pub const SAMPLE_RATE: u32 = 8_000;
+
+/// Frame shift and window length (paper Table I: 16 ms / 16 ms).
+pub const FRAME_SHIFT_MS: u32 = 16;
+/// Samples per 16 ms frame at 8 kHz.
+pub const FRAME_SAMPLES: usize = (SAMPLE_RATE as usize * FRAME_SHIFT_MS as usize) / 1000;
+
+/// Frames per 1 s utterance decision window (62 full 16 ms frames).
+pub const FRAMES_PER_DECISION: usize = 1000 / FRAME_SHIFT_MS as usize;
+
+/// ΔRNN / chip core clock at the measured operating point (125 kHz).
+pub const CLOCK_HZ: u64 = 125_000;

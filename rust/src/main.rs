@@ -1,0 +1,308 @@
+//! `deltakws` — launcher CLI for the DeltaKWS system.
+//!
+//! Subcommands (hand-rolled parsing; no clap in the vendored set):
+//!
+//! ```text
+//! deltakws train  [--steps N] [--batch B] [--seed S] [--out weights.bin]
+//! deltakws eval   [--delta-th-q8 T] [--channels N] [--utterances N]
+//! deltakws exp    <fig6|fig7|fig10|fig11|fig12|fig13|table1|table2|ablation|all>
+//! deltakws serve  [--workers N] [--requests N]
+//! deltakws info
+//! ```
+//!
+//! Every subcommand accepts `--config path.toml` (see `configs/`), with
+//! flags overriding file values. `make exp` == `deltakws exp all`.
+
+use anyhow::{bail, Context};
+use deltakws::config::RunConfig;
+use deltakws::dataset::{Dataset, Split};
+use deltakws::runtime::Runtime;
+use deltakws::train::{TrainState, Trainer};
+use deltakws::{chip::KwsChip, coordinator, exp};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> anyhow::Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?
+                    .clone();
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.num::<i16>("delta-th-q8")? {
+        cfg.delta_th_q8 = v;
+    }
+    if let Some(v) = args.num::<usize>("channels")? {
+        cfg.channels = v;
+    }
+    if let Some(v) = args.num::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.num::<usize>("steps")? {
+        cfg.train_steps = v;
+    }
+    if let Some(v) = args.num::<usize>("batch")? {
+        cfg.batch = v;
+    }
+    if let Some(v) = args.num::<usize>("utterances")? {
+        cfg.eval_utterances = v;
+    }
+    if let Some(v) = args.num::<usize>("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get("out") {
+        cfg.weights = v.to_string();
+    }
+    if let Some(v) = args.get("weights") {
+        cfg.weights = v.to_string();
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts = v.to_string();
+    }
+    Ok(cfg)
+}
+
+fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    let cfg = load_config(&args)?;
+
+    match cmd {
+        "train" => cmd_train(&cfg),
+        "eval" => cmd_eval(&cfg),
+        "exp" => {
+            let id = args.positional.first().map(String::as_str).unwrap_or("all");
+            exp::run(id, &cfg)
+        }
+        "serve" => {
+            let requests = args.num::<usize>("requests")?.unwrap_or(32);
+            cmd_serve(&cfg, requests)
+        }
+        "info" => cmd_info(&cfg),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `deltakws help`"),
+    }
+}
+
+fn cmd_train(cfg: &RunConfig) -> anyhow::Result<()> {
+    let rt = Runtime::new(&cfg.artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    // train on exactly the channel selection the chip will deploy with
+    let ds = Dataset::with_fex(cfg.seed, cfg.chip_config().fex.clone());
+    let mut trainer = Trainer::new(&rt, ds, cfg.batch, cfg.train_delta_th)?;
+    let mut state = TrainState::init(&rt, cfg.seed);
+    println!(
+        "training {} steps (batch {}, train Δ_TH {}) ...",
+        cfg.train_steps, cfg.batch, cfg.train_delta_th
+    );
+    trainer.fit(&mut state, cfg.train_steps, true)?;
+    for (split, name) in [(Split::Train, "train"), (Split::Test, "test")] {
+        let (acc, sp) = trainer.evaluate(&state, split, 128, cfg.train_delta_th)?;
+        println!("float {name} accuracy {:.1}%  (sparsity {:.1}%)", acc * 100.0, sp * 100.0);
+    }
+    let q = trainer.export(&state);
+    let clip = deltakws::train::float_params_from_tensors(&state.params).quant_clip_fraction();
+    println!("int8 quantisation clip fraction: {:.3}%", clip * 100.0);
+    deltakws::train::save_weights(std::path::Path::new(&cfg.weights), &q)?;
+    println!("weights saved to {}", cfg.weights);
+    // loss curve dump
+    let mut csv = String::from("step,loss\n");
+    for l in &trainer.log {
+        csv.push_str(&format!("{},{}\n", l.step, l.loss));
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/loss_curve.csv", csv)?;
+    println!("loss curve -> results/loss_curve.csv");
+    Ok(())
+}
+
+fn cmd_eval(cfg: &RunConfig) -> anyhow::Result<()> {
+    let params = exp::ensure_weights(cfg)?;
+    let chip_cfg = cfg.chip_config();
+    let ds = Dataset::with_fex(cfg.seed, chip_cfg.fex.clone());
+    let (acc12, acc11, rep) = exp::chip_accuracy(&params, &chip_cfg, &ds, cfg.eval_utterances);
+    println!(
+        "chip twin @ Δ_TH={:.3}, {} channels, {} test utterances:",
+        cfg.delta_th_q8 as f64 / 256.0,
+        cfg.channels,
+        cfg.eval_utterances
+    );
+    println!("  accuracy       12-class {:.1}%   11-class {:.1}%", acc12 * 100.0, acc11 * 100.0);
+    println!("  energy/decision {:.2} nJ", rep.energy_per_decision_nj);
+    println!("  latency         {:.2} ms", rep.latency_ms);
+    println!(
+        "  sparsity        {:.1}% (x {:.1}%, h {:.1}%)",
+        rep.sparsity * 100.0,
+        rep.input_sparsity * 100.0,
+        rep.hidden_sparsity * 100.0
+    );
+    println!("  power           {:.2} µW", rep.power.total_uw());
+    Ok(())
+}
+
+fn cmd_serve(cfg: &RunConfig, requests: usize) -> anyhow::Result<()> {
+    let params = exp::ensure_weights(cfg)?;
+    println!("starting coordinator with {} chip workers ...", cfg.workers);
+    let coord = coordinator::Coordinator::new(params, cfg.chip_config(), cfg.workers, 16);
+    let ds = Dataset::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    for i in 0..requests {
+        let utt = ds.utterance(Split::Test, i);
+        let req = coordinator::Request {
+            id: 0,
+            stream: (i % 8) as u64,
+            audio12: utt.audio12,
+            label: Some(utt.label),
+        };
+        if coord.submit(req).is_ok() {
+            submitted += 1;
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+    let responses = coord.collect(submitted, std::time::Duration::from_secs(300));
+    let wall = t0.elapsed();
+    let stats = coord.stats();
+    println!(
+        "served {}/{requests} requests in {:.2}s  ({:.1} utt/s)",
+        responses.len(),
+        wall.as_secs_f64(),
+        responses.len() as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "online accuracy {:.1}%  p50 {:.1} ms  p99 {:.1} ms  rejected {}",
+        stats.accuracy() * 100.0,
+        stats.p50_us() as f64 / 1e3,
+        stats.p99_us() as f64 / 1e3,
+        stats.rejected
+    );
+    println!(
+        "simulated chip: {:.1}% sparsity over {} frames",
+        stats.activity.sparsity() * 100.0,
+        stats.activity.frames
+    );
+    Ok(())
+}
+
+fn cmd_info(cfg: &RunConfig) -> anyhow::Result<()> {
+    println!("DeltaKWS digital twin — paper DOI 10.1109/TCASAI.2024.3507694");
+    let a = deltakws::energy::AreaBreakdown::chip();
+    println!(
+        "chip area model: FEx {:.3} + ΔRNN {:.3} + SRAM {:.3} = {:.3} mm² (paper 0.78)",
+        a.fex_mm2,
+        a.rnn_mm2,
+        a.sram_mm2,
+        a.total_mm2()
+    );
+    println!(
+        "design point: Δ_TH = {:.3}, {} channels",
+        cfg.delta_th_q8 as f64 / 256.0,
+        cfg.channels
+    );
+    match Runtime::new(&cfg.artifacts) {
+        Ok(rt) => {
+            println!("artifacts: {} (platform {})", cfg.artifacts, rt.platform());
+            println!(
+                "model: {} frames x {} ch -> GRU-{} -> {} classes (batch {})",
+                rt.manifest.frames,
+                rt.manifest.channels,
+                rt.manifest.hidden,
+                rt.manifest.classes,
+                rt.manifest.batch
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    // quick single-utterance demo if weights exist
+    if std::path::Path::new(&cfg.weights).exists() {
+        let params = deltakws::train::load_weights(std::path::Path::new(&cfg.weights))?;
+        let mut chip = KwsChip::new(params, cfg.chip_config());
+        let ds = Dataset::new(cfg.seed);
+        let utt = ds.utterance(Split::Test, 0);
+        let d = chip.process_utterance(&utt.audio12);
+        println!(
+            "demo: test[0] label '{}' -> predicted '{}'",
+            deltakws::CLASS_LABELS[utt.label],
+            deltakws::CLASS_LABELS[d.class]
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "deltakws — DeltaKWS temporal-sparsity KWS system (TCAS-AI 2024 reproduction)
+
+USAGE: deltakws <command> [flags]
+
+COMMANDS:
+  train     train the ΔGRU via the AOT PJRT train_step artifact
+  eval      evaluate the chip twin on synthetic-GSCD test utterances
+  exp       regenerate paper experiments: fig6 fig7 fig10 fig11 fig12 fig13
+            table1 table2 ablation all
+  serve     run the streaming coordinator demo
+  info      print system/model/area info
+
+FLAGS (all commands):
+  --config path.toml    load a run config (see configs/)
+  --seed N --channels N --delta-th-q8 N --utterances N
+  --steps N --batch N --out FILE --weights FILE --workers N --artifacts DIR"
+    );
+}

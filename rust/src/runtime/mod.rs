@@ -1,0 +1,282 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from Rust. Python never runs on the request path.
+//!
+//! Interchange format is **HLO text** (see `python/compile/aot.py`): jax
+//! >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly. All artifacts are lowered with `return_tuple=True`,
+//! so every execution returns a tuple literal which [`Executable::run`]
+//! decomposes.
+//!
+//! The [`Runtime`] owns one PJRT CPU client; [`Executable`]s are compiled
+//! once at startup (`make artifacts` must have produced `artifacts/`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::{self, Json};
+
+/// Tensor of f32s with shape — the runtime's host-side value type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn to_literal(&self) -> crate::Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> crate::Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        // convert through f32 regardless of source dtype
+        let lit32 = lit.convert(xla::PrimitiveType::F32)?;
+        Ok(Self { shape: dims, data: lit32.to_vec::<f32>()? })
+    }
+}
+
+/// Integer tensor (labels). Converted to s32 literals.
+#[derive(Debug, Clone)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    fn to_literal(&self) -> crate::Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Host value passed to an executable.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    fn to_literal(&self) -> crate::Result<xla::Literal> {
+        match self {
+            Value::F32(t) => t.to_literal(),
+            Value::I32(t) => t.to_literal(),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+/// A compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with positional inputs; returns the decomposed output tuple
+    /// as f32 tensors.
+    pub fn run(&self, inputs: &[Value]) -> crate::Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<crate::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// Artifact manifest (written by aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub frames: usize,
+    pub channels: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub audio_samples: usize,
+    pub param_order: Vec<String>,
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .context("manifest.json missing — run `make artifacts` first")?;
+        let j = json::parse(&text).map_err(anyhow::Error::msg)?;
+        let get = |k: &str| -> crate::Result<usize> {
+            j.get(k).and_then(Json::as_usize).with_context(|| format!("manifest field {k}"))
+        };
+        let order: Vec<String> = j
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .context("param_order")?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        let shapes_obj = j.get("param_shapes").context("param_shapes")?;
+        let mut param_shapes = Vec::new();
+        for name in &order {
+            let dims: Vec<usize> = shapes_obj
+                .get(name)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("shape of {name}"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            param_shapes.push((name.clone(), dims));
+        }
+        Ok(Self {
+            frames: get("frames")?,
+            channels: get("channels")?,
+            hidden: get("hidden")?,
+            classes: get("classes")?,
+            batch: get("batch")?,
+            audio_samples: get("audio_samples")?,
+            param_order: order,
+            param_shapes,
+        })
+    }
+}
+
+/// The PJRT runtime: one CPU client + the compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> crate::Result<Self> {
+        let artifacts_dir = artifacts_dir.into();
+        if !artifacts_dir.join("manifest.json").exists() {
+            bail!(
+                "artifacts not found in {} — run `make artifacts` first",
+                artifacts_dir.display()
+            );
+        }
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts_dir, manifest })
+    }
+
+    /// Default artifacts location: `$CARGO_MANIFEST_DIR/artifacts` when run
+    /// in-tree, else `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        let local = PathBuf::from("artifacts");
+        if local.join("manifest.json").exists() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, name: &str) -> crate::Result<Executable> {
+        let path = self.artifacts_dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = Runtime::default_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = Tensor::zeros(&[4, 5]);
+        assert_eq!(z.data.len(), 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn manifest_loads_if_present() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.frames, 62);
+        assert_eq!(m.channels, 16);
+        assert_eq!(m.hidden, 64);
+        assert_eq!(m.classes, 12);
+        assert_eq!(m.param_order.len(), 5);
+        assert_eq!(m.param_shapes[0].1, vec![16, 192]);
+    }
+
+    // Full execute-path tests live in rust/tests/runtime_integration.rs —
+    // they need the PJRT client, which is slow to spin up per unit test.
+}

@@ -1,0 +1,205 @@
+//! 24 kB near-V_TH weight SRAM twin (paper §II-D, Fig. 8).
+//!
+//! Organisation: 12 banks x 2 kB, 16-bit words (each holding two 8-bit ΔRNN
+//! weights), 10-bit in-bank addresses. The functional model provides
+//! word-addressed read/write with per-bank activity counters; energy comes
+//! from [`crate::energy::calib`] (near-V_TH vs foundry flavours — the 6.6x
+//! read-power comparison), area from the bitcell model below, and the
+//! skew-resistant column-MUX timing from the discrete-event model in
+//! [`timing`] (paper Fig. 13).
+
+pub mod timing;
+
+use crate::energy::SramKind;
+
+/// Total capacity: 24 kB = 12,288 16-bit words.
+pub const WORDS: usize = 12 * 1024;
+/// Banks (2 kB each).
+pub const BANKS: usize = 12;
+/// Words per bank.
+pub const WORDS_PER_BANK: usize = WORDS / BANKS;
+
+/// 65 nm bitcell + periphery area model, anchored at the paper's block
+/// areas: the full-custom near-V_TH macro measures 0.381 mm² for 24 kB and
+/// is "2x larger" than the foundry push-rule macro (§II-D).
+///
+/// 0.381 mm² / 196,608 bits = 1.94 µm²/bit effective; we attribute
+/// 1.43 µm² to the 8T high-V_TH bitcell with pitch-matched 6T WL level
+/// shifters and 35% to periphery (WL drivers, booster, timing generator,
+/// column MUX, I/O level shifters).
+pub const CELL_UM2: f64 = 1.435;
+pub const PERIPHERY_FACTOR: f64 = 1.35;
+/// Foundry push-rule equivalent bit area (µm²) including periphery.
+pub const FOUNDRY_BIT_UM2: f64 = 0.97;
+
+/// Area of the near-V_TH macro (mm²).
+pub fn area_mm2() -> f64 {
+    (WORDS * 16) as f64 * CELL_UM2 * PERIPHERY_FACTOR * 1e-6
+}
+
+/// Area of the foundry comparison macro (mm²).
+pub fn foundry_area_mm2() -> f64 {
+    (WORDS * 16) as f64 * FOUNDRY_BIT_UM2 * 1e-6
+}
+
+/// The weight SRAM twin.
+#[derive(Debug, Clone)]
+pub struct WeightSram {
+    data: Vec<u16>,
+    pub kind: SramKind,
+    /// total word reads / writes
+    pub reads: u64,
+    pub writes: u64,
+    /// per-bank read counters (banking utilisation analysis)
+    pub bank_reads: [u64; BANKS],
+}
+
+impl WeightSram {
+    pub fn new(kind: SramKind) -> Self {
+        Self { data: vec![0; WORDS], kind, reads: 0, writes: 0, bank_reads: [0; BANKS] }
+    }
+
+    /// Bank index of a word address.
+    #[inline]
+    pub fn bank_of(addr: usize) -> usize {
+        addr / WORDS_PER_BANK
+    }
+
+    /// Read one 16-bit word (counted).
+    #[inline]
+    pub fn read_word(&mut self, addr: usize) -> u16 {
+        debug_assert!(addr < WORDS, "SRAM read OOB: {addr}");
+        self.reads += 1;
+        self.bank_reads[Self::bank_of(addr)] += 1;
+        self.data[addr]
+    }
+
+    /// Read two packed int8 weights from one word: (low, high).
+    #[inline]
+    pub fn read_weight_pair(&mut self, addr: usize) -> (i8, i8) {
+        let w = self.read_word(addr);
+        ((w & 0xff) as i8, (w >> 8) as i8)
+    }
+
+    /// Write one word (counted; used by the weight loader).
+    pub fn write_word(&mut self, addr: usize, v: u16) {
+        assert!(addr < WORDS, "SRAM write OOB: {addr}");
+        self.writes += 1;
+        self.data[addr] = v;
+    }
+
+    /// Pack two int8 weights into a word and write it.
+    pub fn write_weight_pair(&mut self, addr: usize, lo: i8, hi: i8) {
+        self.write_word(addr, (lo as u8 as u16) | ((hi as u8 as u16) << 8));
+    }
+
+    /// Bulk-load a weight image starting at word 0.
+    pub fn load_image(&mut self, words: &[u16]) {
+        assert!(words.len() <= WORDS, "image larger than SRAM");
+        for (addr, &w) in words.iter().enumerate() {
+            self.write_word(addr, w);
+        }
+    }
+
+    /// Read energy consumed so far (nJ), by SRAM flavour.
+    pub fn read_energy_nj(&self) -> f64 {
+        self.reads as f64 * self.kind.word_energy_pj() * 1e-3
+    }
+
+    /// Direct (uncounted) access for test/debug inspection.
+    pub fn peek(&self, addr: usize) -> u16 {
+        self.data[addr]
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.reads = 0;
+        self.writes = 0;
+        self.bank_reads = [0; BANKS];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        assert_eq!(WORDS, 12_288); // 24 kB of 16-bit words
+        assert_eq!(WORDS_PER_BANK, 1_024); // 2 kB banks
+    }
+
+    #[test]
+    fn area_anchored_to_paper() {
+        let a = area_mm2();
+        assert!((a - 0.381).abs() / 0.381 < 0.02, "{a}");
+        // paper: "2x larger area than the push-rule foundry SRAM"
+        let ratio = a / foundry_area_mm2();
+        assert!((ratio - 2.0).abs() < 0.1, "{ratio}");
+    }
+
+    #[test]
+    fn rw_roundtrip_and_counters() {
+        let mut s = WeightSram::new(SramKind::NearVth);
+        s.write_word(100, 0xBEEF);
+        assert_eq!(s.read_word(100), 0xBEEF);
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.writes, 1);
+        assert_eq!(s.bank_reads[0], 1);
+    }
+
+    #[test]
+    fn weight_pair_packing_signed() {
+        let mut s = WeightSram::new(SramKind::NearVth);
+        s.write_weight_pair(0, -128, 127);
+        assert_eq!(s.read_weight_pair(0), (-128, 127));
+        s.write_weight_pair(1, -1, 1);
+        assert_eq!(s.read_weight_pair(1), (-1, 1));
+    }
+
+    #[test]
+    fn bank_mapping() {
+        assert_eq!(WeightSram::bank_of(0), 0);
+        assert_eq!(WeightSram::bank_of(1023), 0);
+        assert_eq!(WeightSram::bank_of(1024), 1);
+        assert_eq!(WeightSram::bank_of(WORDS - 1), BANKS - 1);
+    }
+
+    #[test]
+    fn bank_counters_attribute_reads() {
+        let mut s = WeightSram::new(SramKind::NearVth);
+        for addr in [0usize, 1024, 1025, 5000, 12_287] {
+            s.read_word(addr);
+        }
+        assert_eq!(s.bank_reads[0], 1);
+        assert_eq!(s.bank_reads[1], 2);
+        assert_eq!(s.bank_reads[4], 1);
+        assert_eq!(s.bank_reads[11], 1);
+    }
+
+    #[test]
+    fn read_energy_flavours_differ_6_6x_ish() {
+        let mut near = WeightSram::new(SramKind::NearVth);
+        let mut foundry = WeightSram::new(SramKind::Foundry);
+        for a in 0..1000 {
+            near.read_word(a);
+            foundry.read_word(a);
+        }
+        let r = foundry.read_energy_nj() / near.read_energy_nj();
+        assert!(r > 4.0 && r < 7.0, "{r}"); // dynamic-only ratio (5.5x)
+    }
+
+    #[test]
+    fn load_image() {
+        let mut s = WeightSram::new(SramKind::NearVth);
+        s.load_image(&[1, 2, 3]);
+        assert_eq!(s.peek(0), 1);
+        assert_eq!(s.peek(2), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oob_write_panics() {
+        let mut s = WeightSram::new(SramKind::NearVth);
+        s.write_word(WORDS, 0);
+    }
+}

@@ -1,0 +1,371 @@
+//! Training driver: runs the AOT-compiled `train_step` through PJRT.
+//!
+//! The whole learning loop is Rust: synthetic utterances are rendered by
+//! the audio substrate, featurised by the *fixed-point FEx twin* (so the
+//! network trains on exactly the features the chip computes), batched into
+//! tensors, and pushed through the `train_step.hlo.txt` artifact (delta-
+//! aware forward with straight-through thresholding + Adam, lowered once
+//! from JAX — see python/compile/model.py). The resulting float weights are
+//! quantised to the chip's int8/Q8.8 formats and serialised as the SRAM
+//! weight image the accelerator twin loads.
+//!
+//! ABI (python/compile/model.train_step_flat):
+//!   args:    5 params, 5 adam-m, 5 adam-v, step, feats [B,T,C], labels [B] s32, delta_th
+//!   results: 5 params, 5 adam-m, 5 adam-v, step, loss
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::accel::gru::{self, FloatParams, QuantParams};
+use crate::dataset::{Dataset, Split};
+use crate::runtime::{Executable, IntTensor, Runtime, Tensor, Value};
+use crate::util::prng::Pcg;
+
+/// Number of parameter tensors in the canonical order (w_x, w_h, b, w_fc, b_fc).
+pub const N_PARAMS: usize = 5;
+
+/// Base Adam learning rate (dense phase; matches python ADAM_LR).
+pub const BASE_LR: f32 = 3e-3;
+/// Fine-tuning rate once the straight-through Θ is active.
+pub const FINETUNE_LR: f32 = 3e-4;
+
+/// Float training state (host-side mirrors of the device tensors).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: f32,
+}
+
+impl TrainState {
+    /// Glorot-uniform init matching `python/compile/model.init_params`
+    /// (update-gate bias +1).
+    pub fn init(rt: &Runtime, seed: u64) -> Self {
+        let mut rng = Pcg::new(seed);
+        let mut params = Vec::with_capacity(N_PARAMS);
+        for (name, shape) in &rt.manifest.param_shapes {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name == "b" {
+                // zero biases, +1 on the update-gate block
+                let h = rt.manifest.hidden;
+                (0..n).map(|i| if i >= h && i < 2 * h { 1.0 } else { 0.0 }).collect()
+            } else if name.starts_with('b') {
+                vec![0.0; n]
+            } else {
+                let (fan_in, fan_out) = (shape[0] as f64, shape[1] as f64);
+                let lim = (6.0 / (fan_in + fan_out)).sqrt();
+                (0..n).map(|_| rng.range_f64(-lim, lim) as f32).collect()
+            };
+            params.push(Tensor::new(shape.clone(), data));
+        }
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        Self { params, m: zeros.clone(), v: zeros, step: 0.0 }
+    }
+}
+
+/// Per-step record for the loss curve (EXPERIMENTS.md end-to-end run).
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+}
+
+/// The trainer.
+pub struct Trainer {
+    pub dataset: Dataset,
+    pub batch: usize,
+    pub delta_th: f32,
+    train_exe: Executable,
+    fwd_exe: Executable,
+    frames: usize,
+    channels: usize,
+    pub log: Vec<StepLog>,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, dataset: Dataset, batch: usize, delta_th: f32) -> crate::Result<Self> {
+        if batch != rt.manifest.batch {
+            bail!("batch {} != artifact batch {}", batch, rt.manifest.batch);
+        }
+        Ok(Self {
+            dataset,
+            batch,
+            delta_th,
+            train_exe: rt.load("train_step.hlo.txt")?,
+            fwd_exe: rt.load("kws_fwd_b16.hlo.txt")?,
+            frames: rt.manifest.frames,
+            channels: rt.manifest.channels,
+            log: Vec::new(),
+        })
+    }
+
+    /// Assemble a feature/label batch as device tensors. Features are the
+    /// fixed-point FEx twin's Q0.8 outputs rescaled to [0, 1) floats.
+    pub fn batch_tensors(&self, split: Split, start: usize) -> (Tensor, IntTensor) {
+        let seqs = self.dataset.feature_batch(split, start, self.batch);
+        let mut feats = Vec::with_capacity(self.batch * self.frames * self.channels);
+        let mut labels = Vec::with_capacity(self.batch);
+        for s in &seqs {
+            labels.push(s.label as i32);
+            for t in 0..self.frames {
+                let frame = s.feats.get(t).copied().unwrap_or([0i16; 16]);
+                for c in 0..self.channels {
+                    feats.push(frame[c] as f32 / 256.0);
+                }
+            }
+        }
+        (
+            Tensor::new(vec![self.batch, self.frames, self.channels], feats),
+            IntTensor::new(vec![self.batch], labels),
+        )
+    }
+
+    /// One optimisation step at an explicit threshold + learning rate.
+    pub fn step_at(
+        &mut self,
+        state: &mut TrainState,
+        batch_index: usize,
+        delta_th: f32,
+        lr: f32,
+    ) -> crate::Result<f32> {
+        let (feats, labels) = self.batch_tensors(Split::Train, batch_index * self.batch);
+        let mut inputs: Vec<Value> = Vec::with_capacity(20);
+        for t in &state.params {
+            inputs.push(t.clone().into());
+        }
+        for t in &state.m {
+            inputs.push(t.clone().into());
+        }
+        for t in &state.v {
+            inputs.push(t.clone().into());
+        }
+        inputs.push(Tensor::scalar(state.step).into());
+        inputs.push(feats.into());
+        inputs.push(labels.into());
+        inputs.push(Tensor::scalar(delta_th).into());
+        inputs.push(Tensor::scalar(lr).into());
+
+        let out = self.train_exe.run(&inputs)?;
+        if out.len() != 3 * N_PARAMS + 2 {
+            bail!("train_step returned {} tensors, expected {}", out.len(), 3 * N_PARAMS + 2);
+        }
+        state.params = out[..N_PARAMS].to_vec();
+        state.m = out[N_PARAMS..2 * N_PARAMS].to_vec();
+        state.v = out[2 * N_PARAMS..3 * N_PARAMS].to_vec();
+        state.step = out[3 * N_PARAMS].data[0];
+        let loss = out[3 * N_PARAMS + 1].data[0];
+        self.log.push(StepLog { step: state.step as usize, loss });
+        Ok(loss)
+    }
+
+    /// One optimisation step at the trainer's target threshold.
+    pub fn step(&mut self, state: &mut TrainState, batch_index: usize) -> crate::Result<f32> {
+        self.step_at(state, batch_index, self.delta_th, BASE_LR)
+    }
+
+    /// Threshold curriculum (DeltaRNN training recipe): dense pretraining
+    /// for the first 60%, a linear Θ ramp over the next 20%, then
+    /// fine-tuning at the target threshold. Training with the threshold
+    /// active from step 0 stalls (the STE gradient is too noisy before the
+    /// features are linearly separable); fine-tuning at full LR diverges —
+    /// hence the paired LR schedule below.
+    pub fn schedule_th(&self, s: usize, total: usize) -> f32 {
+        let frac = s as f32 / total.max(1) as f32;
+        if frac < 0.6 {
+            0.0
+        } else if frac < 0.8 {
+            self.delta_th * (frac - 0.6) * 5.0
+        } else {
+            self.delta_th
+        }
+    }
+
+    /// LR paired with the Θ curriculum: full rate while dense, 10x lower
+    /// once the straight-through threshold is active.
+    pub fn schedule_lr(&self, s: usize, total: usize) -> f32 {
+        let frac = s as f32 / total.max(1) as f32;
+        if frac < 0.6 {
+            BASE_LR
+        } else {
+            FINETUNE_LR
+        }
+    }
+
+    /// Run `steps` optimisation steps with the threshold/LR curriculum,
+    /// streaming fresh synthetic utterances throughout.
+    pub fn fit(&mut self, state: &mut TrainState, steps: usize, verbose: bool) -> crate::Result<()> {
+        for s in 0..steps {
+            let th = self.schedule_th(s, steps);
+            let lr = self.schedule_lr(s, steps);
+            let loss = self.step_at(state, s, th, lr)?;
+            if verbose && (s < 5 || s % 50 == 0 || s + 1 == steps) {
+                println!("step {s:>4}  loss {loss:.4}  (train Θ = {th:.3}, lr = {lr:.4})");
+            }
+            if !loss.is_finite() {
+                bail!("training diverged at step {s} (loss = {loss})");
+            }
+        }
+        Ok(())
+    }
+
+    /// Float-model accuracy via the batched forward artifact at `delta_th`.
+    pub fn evaluate(
+        &self,
+        state: &TrainState,
+        split: Split,
+        utterances: usize,
+        delta_th: f32,
+    ) -> crate::Result<(f64, f64)> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut sparsity_sum = 0.0f64;
+        let mut start = 0usize;
+        while total < utterances {
+            let (feats, labels) = self.batch_tensors(split, start);
+            start += self.batch;
+            let mut inputs: Vec<Value> =
+                state.params.iter().map(|t| Value::from(t.clone())).collect();
+            inputs.push(feats.into());
+            inputs.push(Tensor::scalar(delta_th).into());
+            let out = self.fwd_exe.run(&inputs)?;
+            let logits = &out[0]; // [B, 12]
+            let sparsity = &out[1]; // [B]
+            for b in 0..self.batch {
+                if total >= utterances {
+                    break;
+                }
+                let row = &logits.data[b * 12..(b + 1) * 12];
+                let pred = (0..12)
+                    .max_by(|&i, &j| row[i].partial_cmp(&row[j]).unwrap())
+                    .unwrap();
+                if pred as i32 == labels.data[b] {
+                    correct += 1;
+                }
+                sparsity_sum += sparsity.data[b] as f64;
+                total += 1;
+            }
+        }
+        Ok((correct as f64 / total as f64, sparsity_sum / total as f64))
+    }
+
+    /// Convert the trained float tensors into chip formats.
+    pub fn export(&self, state: &TrainState) -> QuantParams {
+        gru::quantize_params(&float_params_from_tensors(&state.params))
+    }
+}
+
+/// Reassemble [`FloatParams`] from the canonical tensor list.
+pub fn float_params_from_tensors(params: &[Tensor]) -> FloatParams {
+    assert_eq!(params.len(), N_PARAMS);
+    let (c, g) = (gru::C, gru::G);
+    let h = gru::H;
+    let k = gru::K;
+    let mut p = FloatParams::zeros();
+    for i in 0..c {
+        p.w_x[i].copy_from_slice(&params[0].data[i * g..(i + 1) * g]);
+    }
+    for j in 0..h {
+        p.w_h[j].copy_from_slice(&params[1].data[j * g..(j + 1) * g]);
+    }
+    p.b.copy_from_slice(&params[2].data);
+    for j in 0..h {
+        p.w_fc[j].copy_from_slice(&params[3].data[j * k..(j + 1) * k]);
+    }
+    p.b_fc.copy_from_slice(&params[4].data);
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Weight image persistence (results/weights.bin)
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 8] = b"DKWSWv1\0";
+
+/// Save a quantised model as an SRAM weight image file.
+pub fn save_weights(path: &Path, q: &QuantParams) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let img = gru::to_sram_image(q);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(img.len() as u32).to_le_bytes())?;
+    for w in &img {
+        f.write_all(&w.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a weight image file back into quantised parameters.
+pub fn load_weights(path: &Path) -> crate::Result<QuantParams> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening weights {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad weights magic in {}", path.display());
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len != gru::IMAGE_WORDS {
+        bail!("weight image is {len} words, expected {}", gru::IMAGE_WORDS);
+    }
+    let mut buf = vec![0u8; len * 2];
+    f.read_exact(&mut buf)?;
+    let img: Vec<u16> =
+        buf.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+    Ok(gru::from_sram_image(&img))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_params_roundtrip_layout() {
+        // tensor list -> FloatParams keeps row-major [lane][gate] layout
+        let g = gru::G;
+        let mut t_wx = Tensor::zeros(&[gru::C, g]);
+        t_wx.data[2 * g + 5] = 0.75; // lane 2, gate 5
+        let params = vec![
+            t_wx,
+            Tensor::zeros(&[gru::H, g]),
+            Tensor::zeros(&[g]),
+            Tensor::zeros(&[gru::H, gru::K]),
+            Tensor::zeros(&[gru::K]),
+        ];
+        let p = float_params_from_tensors(&params);
+        assert_eq!(p.w_x[2][5], 0.75);
+        assert_eq!(p.w_x[0][0], 0.0);
+    }
+
+    #[test]
+    fn weights_file_roundtrip() {
+        let mut p = FloatParams::zeros();
+        p.w_x[3][7] = 0.5;
+        p.b[10] = -1.25;
+        p.w_fc[63][11] = -0.5;
+        let q = gru::quantize_params(&p);
+        let path = std::env::temp_dir().join("deltakws_weights_test.bin");
+        save_weights(&path, &q).unwrap();
+        let q2 = load_weights(&path).unwrap();
+        assert_eq!(q.w_x, q2.w_x);
+        assert_eq!(q.b, q2.b);
+        assert_eq!(q.w_fc, q2.w_fc);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let path = std::env::temp_dir().join("deltakws_badmagic.bin");
+        std::fs::write(&path, b"NOTDKWS\0aaaa").unwrap();
+        assert!(load_weights(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    // PJRT-backed Trainer tests live in rust/tests/train_integration.rs.
+}

@@ -1,0 +1,192 @@
+//! Micro-benchmark harness (criterion is not in the vendored set).
+//!
+//! Criterion-like essentials: warmup, calibrated iteration counts, multiple
+//! samples, median/mean/min/p95 statistics, and black_box. Each file under
+//! `rust/benches/` is a `harness = false` binary whose `main` builds a
+//! [`Bench`] and registers closures; `cargo bench` runs them all and prints
+//! one table per bench target (and appends machine-readable lines to
+//! `results/bench.jsonl` when `DELTAKWS_BENCH_JSON=1`).
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimiser from deleting a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One measured statistic set (nanoseconds per iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub p95_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    sample_time: Duration,
+    samples: usize,
+    results: Vec<(String, Stats, Option<(f64, String)>)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // fast mode for CI smoke: DELTAKWS_BENCH_FAST=1
+        let fast = std::env::var("DELTAKWS_BENCH_FAST").is_ok();
+        Self {
+            name: name.to_string(),
+            warmup: Duration::from_millis(if fast { 20 } else { 300 }),
+            sample_time: Duration::from_millis(if fast { 30 } else { 200 }),
+            samples: if fast { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs ONE iteration of the workload.
+    pub fn bench<F: FnMut()>(&mut self, label: &str, f: F) -> Stats {
+        self.bench_with_items(label, 0.0, "", f)
+    }
+
+    /// Time `f` and report `items/s` throughput (e.g. frames, utterances).
+    pub fn bench_with_items<F: FnMut()>(
+        &mut self,
+        label: &str,
+        items_per_iter: f64,
+        unit: &str,
+        mut f: F,
+    ) -> Stats {
+        // warmup + calibration
+        let start = Instant::now();
+        let mut calib_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut sample_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            mean_ns: sample_ns.iter().sum::<f64>() / sample_ns.len() as f64,
+            median_ns: sample_ns[sample_ns.len() / 2],
+            min_ns: sample_ns[0],
+            p95_ns: sample_ns[((sample_ns.len() as f64 * 0.95) as usize).min(sample_ns.len() - 1)],
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        let thr = (items_per_iter > 0.0)
+            .then(|| (stats.throughput(items_per_iter), unit.to_string()));
+        self.results.push((label.to_string(), stats, thr));
+        stats
+    }
+
+    /// Print the report table (and optional JSONL dump).
+    pub fn finish(self) {
+        println!("\n== bench: {} ==", self.name);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}",
+            "case", "median", "mean", "min", "throughput"
+        );
+        let json_dump = std::env::var("DELTAKWS_BENCH_JSON").is_ok();
+        let mut jsonl = String::new();
+        for (label, s, thr) in &self.results {
+            let t = match thr {
+                Some((v, u)) => format!("{} {}/s", human(*v), u),
+                None => "-".to_string(),
+            };
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>14}",
+                label,
+                fmt_ns(s.median_ns),
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.min_ns),
+                t
+            );
+            if json_dump {
+                jsonl.push_str(&format!(
+                    "{{\"bench\":\"{}\",\"case\":\"{}\",\"median_ns\":{:.1},\"mean_ns\":{:.1},\"min_ns\":{:.1}}}\n",
+                    self.name, label, s.median_ns, s.mean_ns, s.min_ns
+                ));
+            }
+        }
+        if json_dump {
+            let _ = std::fs::create_dir_all("results");
+            use std::io::Write;
+            if let Ok(mut f) =
+                std::fs::OpenOptions::new().create(true).append(true).open("results/bench.jsonl")
+            {
+                let _ = f.write_all(jsonl.as_bytes());
+            }
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn human(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("DELTAKWS_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns * 1.5);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(human(2_500_000.0).contains('M'));
+    }
+}

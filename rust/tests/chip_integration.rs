@@ -1,0 +1,159 @@
+//! Integration: the full chip twin + coordinator under realistic load and
+//! injected failures.
+
+use std::time::Duration;
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::chip::{ChipConfig, KwsChip};
+use deltakws::coordinator::{Coordinator, Request};
+use deltakws::dataset::{Dataset, Split};
+use deltakws::util::prng::Pcg;
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+#[test]
+fn end_to_end_dataset_run_with_energy_report() {
+    let ds = Dataset::new(3);
+    let mut chip = KwsChip::new(rng_quant(3), ChipConfig::design_point());
+    for i in 0..8 {
+        let utt = ds.utterance(Split::Test, i);
+        let d = chip.process_utterance(&utt.audio12);
+        assert_eq!(d.frame_cycles.len(), 62);
+    }
+    let rep = chip.report();
+    // sanity envelope around the calibrated design regime
+    assert!(rep.power.total_uw() > 3.0 && rep.power.total_uw() < 10.0, "{:?}", rep.power);
+    assert!(rep.latency_ms > 1.0 && rep.latency_ms < 17.0, "latency {}", rep.latency_ms);
+    assert!(rep.energy_per_decision_nj > 5.0 && rep.energy_per_decision_nj < 130.0);
+    assert!(rep.sparsity > 0.0 && rep.sparsity < 1.0);
+}
+
+#[test]
+fn delta_th_tradeoff_shape_holds_on_real_audio() {
+    // the Fig. 12 *shape*: latency and energy decrease monotonically with
+    // Δ_TH on real (synthetic-GSCD) audio through the full pipeline
+    let ds = Dataset::new(4);
+    let utts: Vec<_> = (0..6).map(|i| ds.utterance(Split::Test, i)).collect();
+    let mut prev_energy = f64::MAX;
+    let mut prev_latency = f64::MAX;
+    for th in [0i16, 26, 51, 102] {
+        let mut chip = KwsChip::new(rng_quant(4), ChipConfig::design_point().with_delta_th(th));
+        for u in &utts {
+            chip.process_utterance(&u.audio12);
+        }
+        let rep = chip.report();
+        assert!(
+            rep.energy_per_decision_nj <= prev_energy * 1.001,
+            "energy rose at th={th}: {} after {prev_energy}",
+            rep.energy_per_decision_nj
+        );
+        assert!(rep.latency_ms <= prev_latency * 1.001, "latency rose at th={th}");
+        prev_energy = rep.energy_per_decision_nj;
+        prev_latency = rep.latency_ms;
+    }
+    // and the span must be material (paper: 3.4x energy, 2.4x latency)
+    // (prev_* now hold the th=102 values)
+    let mut chip0 = KwsChip::new(rng_quant(4), ChipConfig::design_point().with_delta_th(0));
+    for u in &utts {
+        chip0.process_utterance(&u.audio12);
+    }
+    let rep0 = chip0.report();
+    assert!(rep0.energy_per_decision_nj / prev_energy > 1.5, "energy span too small");
+}
+
+#[test]
+fn coordinator_under_load_conserves_requests() {
+    let coord = Coordinator::new(rng_quant(5), ChipConfig::design_point(), 3, 4);
+    let ds = Dataset::new(5);
+    let n = 18;
+    let mut submitted = Vec::new();
+    for i in 0..n {
+        let utt = ds.utterance(Split::Test, i);
+        let mut req = Request {
+            id: 0,
+            stream: (i % 5) as u64,
+            audio12: utt.audio12,
+            label: Some(utt.label),
+        };
+        loop {
+            match coord.submit(req) {
+                Ok(id) => {
+                    submitted.push(id);
+                    break;
+                }
+                Err(r) => {
+                    req = r;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+    let responses = coord.collect(n, Duration::from_secs(300));
+    assert_eq!(responses.len(), n, "lost responses");
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    let mut expected = submitted.clone();
+    expected.sort();
+    assert_eq!(ids, expected, "request ids not conserved");
+}
+
+#[test]
+fn coordinator_survives_worker_stall_mid_run() {
+    let coord = Coordinator::new(rng_quant(6), ChipConfig::design_point(), 2, 8);
+    let ds = Dataset::new(6);
+    // phase 1: normal
+    for i in 0..4 {
+        let utt = ds.utterance(Split::Test, i);
+        coord
+            .submit(Request { id: 0, stream: i as u64, audio12: utt.audio12, label: None })
+            .unwrap();
+    }
+    // phase 2: stall worker 0, keep submitting (must spill or queue)
+    coord.set_stalled(0, true);
+    let mut accepted = 4;
+    for i in 4..10 {
+        let utt = ds.utterance(Split::Test, i);
+        if coord
+            .submit(Request { id: 0, stream: i as u64, audio12: utt.audio12, label: None })
+            .is_ok()
+        {
+            accepted += 1;
+        }
+    }
+    // phase 3: recover
+    std::thread::sleep(Duration::from_millis(50));
+    coord.set_stalled(0, false);
+    let responses = coord.collect(accepted, Duration::from_secs(300));
+    assert_eq!(responses.len(), accepted, "requests lost across a stall");
+}
+
+#[test]
+fn malformed_audio_is_tolerated() {
+    // short, empty and clipped inputs must not panic the chip
+    let mut chip = KwsChip::new(rng_quant(7), ChipConfig::design_point());
+    let d = chip.process_utterance(&[]);
+    assert_eq!(d.frame_cycles.len(), 0);
+    let d = chip.process_utterance(&vec![2047i64; 100]); // sub-frame
+    assert_eq!(d.frame_cycles.len(), 0);
+    let d = chip.process_utterance(&vec![-2048i64; 8000]); // full-scale DC
+    assert_eq!(d.frame_cycles.len(), 62);
+}
+
+#[test]
+fn sram_bank_utilisation_is_balanced_over_model_image() {
+    // the weight image spans banks 0..=8; reads during inference should
+    // touch several banks (no single-bank hotspot)
+    let mut chip = KwsChip::new(rng_quant(8), ChipConfig::design_point().with_delta_th(0));
+    let ds = Dataset::new(8);
+    let utt = ds.utterance(Split::Test, 0);
+    chip.process_utterance(&utt.audio12);
+    let touched = chip.accel.sram.bank_reads.iter().filter(|&&r| r > 0).count();
+    assert!(touched >= 6, "only {touched} banks touched");
+}
