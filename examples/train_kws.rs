@@ -6,12 +6,13 @@
 //!    were AOT-lowered from JAX to HLO text.
 //! 2. **L3 (this binary)**: renders a synthetic-GSCD corpus, featurises it
 //!    with the *fixed-point FEx twin*, runs a few hundred `train_step`s
-//!    through PJRT while logging the loss curve, evaluates the float model,
-//!    quantises to the chip's int8/Q8.8 formats, and finally sweeps Δ_TH on
-//!    the bit-accurate chip twin — reproducing the paper's Fig. 12 trade-off
-//!    on a freshly trained model.
+//!    through the execution backend (native by default; PJRT with
+//!    `--features pjrt` + artifacts) while logging the loss curve, evaluates
+//!    the float model, quantises to the chip's int8/Q8.8 formats, and
+//!    finally sweeps Δ_TH on the bit-accurate chip twin — reproducing the
+//!    paper's Fig. 12 trade-off on a freshly trained model.
 //!
-//! Run: `make artifacts && cargo run --release --example train_kws`
+//! Run: `cargo run --release --example train_kws`
 //! Flags: `-- [steps] [eval_utts]` (defaults 300, 192)
 
 use deltakws::chip::ChipConfig;
@@ -19,8 +20,8 @@ use deltakws::config::RunConfig;
 use deltakws::dataset::{Dataset, Split};
 use deltakws::exp;
 use deltakws::fex::FexConfig;
-use deltakws::runtime::Runtime;
-use deltakws::train::{save_weights, TrainState, Trainer};
+use deltakws::runtime;
+use deltakws::train::{save_weights, Trainer};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -28,13 +29,13 @@ fn main() -> anyhow::Result<()> {
     let eval_utts: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(192);
     let cfg = RunConfig::default();
 
-    // ---- L3 hosts the training loop; compute runs via PJRT ---------------
-    let rt = Runtime::new(&cfg.artifacts)?;
-    println!("PJRT platform: {} | artifacts: {}", rt.platform(), cfg.artifacts);
+    // ---- L3 hosts the training loop; compute runs via the backend --------
+    let backend = runtime::backend_for(&cfg.artifacts)?;
+    println!("execution backend: {} | artifacts: {}", backend.name(), cfg.artifacts);
     // featurise with the deployed channel selection (train/deploy match)
     let train_ds = Dataset::with_fex(cfg.seed, FexConfig::design_point());
-    let mut trainer = Trainer::new(&rt, train_ds, cfg.batch, cfg.train_delta_th)?;
-    let mut state = TrainState::init(&rt, cfg.seed);
+    let mut trainer = Trainer::new(backend, train_ds, cfg.batch, cfg.train_delta_th)?;
+    let mut state = trainer.init_state(cfg.seed);
 
     println!("== phase 1: training ({steps} steps, batch {}) ==", cfg.batch);
     let t0 = std::time::Instant::now();
@@ -57,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     let last = trainer.log.last().map(|l| l.loss).unwrap_or(f32::NAN);
     println!("loss: {first:.3} -> {last:.3}  (results/loss_curve.csv)");
 
-    println!("\n== phase 2: float evaluation (PJRT batched forward) ==");
+    println!("\n== phase 2: float evaluation (backend batched forward) ==");
     for th in [0.0f32, 0.1, 0.2] {
         let (acc, sp) = trainer.evaluate(&state, Split::Test, 128, th)?;
         println!("  Δ_TH={th:.1}: accuracy {:.1}%  sparsity {:.1}%", acc * 100.0, sp * 100.0);

@@ -1,0 +1,83 @@
+//! Bench: the native execution backend — batched forward and the full BPTT
+//! train step. This is the offline-training hot path (EXPERIMENTS.md
+//! §Perf) and the cost model for sizing `deltakws train` runs.
+
+mod common;
+
+use deltakws::runtime::{Backend, IntTensor, NativeBackend, Tensor, TrainState};
+use deltakws::util::bench::{black_box, Bench};
+use deltakws::util::prng::Pcg;
+
+fn random_params(seed: u64, scale: f32) -> Vec<Tensor> {
+    let mut rng = Pcg::new(seed);
+    let shapes: [(usize, usize); 5] = [(16, 192), (64, 192), (1, 192), (64, 12), (1, 12)];
+    shapes
+        .iter()
+        .map(|&(r, c)| {
+            let data: Vec<f32> =
+                (0..r * c).map(|_| (rng.range_f64(-1.0, 1.0) as f32) * scale).collect();
+            Tensor::new(if r == 1 { vec![c] } else { vec![r, c] }, data)
+        })
+        .collect()
+}
+
+fn random_feats(seed: u64, batch: usize) -> Tensor {
+    let mut rng = Pcg::new(seed);
+    let mut data = vec![0f32; batch * 62 * 16];
+    let mut cur = [0.3f32; 16];
+    for v in data.iter_mut() {
+        let c = (rng.below(16), rng.uniform());
+        cur[c.0] = (cur[c.0] + (c.1 as f32 - 0.5) * 0.1).clamp(0.0, 0.99);
+        *v = cur[c.0];
+    }
+    Tensor::new(vec![batch, 62, 16], data)
+}
+
+fn main() {
+    let mut b = Bench::new("execution backend (native)");
+    let backend = NativeBackend::new();
+    let params = random_params(1, 0.15);
+
+    println!("batched forward (62 frames x 16 ch per utterance):");
+    for batch in [1usize, 4, 16] {
+        let feats = random_feats(7, batch);
+        for th in [0.0f32, 0.2] {
+            let s = b.bench_with_items(
+                &format!("forward b={batch} th={th}"),
+                batch as f64,
+                "utt",
+                || {
+                    black_box(backend.forward(black_box(&params), &feats, th).unwrap());
+                },
+            );
+            println!(
+                "  b={batch:<2} th={th:<4} {:>9.2} µs/batch ({:>8.0} utt/s)",
+                s.mean_ns / 1e3,
+                batch as f64 / (s.mean_ns * 1e-9)
+            );
+        }
+    }
+
+    println!("\ntrain step (forward + BPTT + Adam):");
+    for batch in [4usize, 16] {
+        let feats = random_feats(9, batch);
+        let labels =
+            IntTensor::new(vec![batch], (0..batch).map(|i| (i % 12) as i32).collect());
+        let mut state = TrainState::init(backend.manifest(), 3);
+        let s = b.bench_with_items(&format!("train_step b={batch}"), batch as f64, "utt", || {
+            black_box(
+                backend.train_step(&mut state, &feats, &labels, 0.0, 1e-3).unwrap(),
+            );
+        });
+        println!(
+            "  b={batch:<2} {:>9.2} ms/step ({:>8.0} utt/s)",
+            s.mean_ns / 1e6,
+            batch as f64 / (s.mean_ns * 1e-9)
+        );
+    }
+
+    // keep the shared helpers honest even though this bench drives the
+    // backend rather than the chip twin
+    let _ = common::rng_quant(1);
+    b.finish();
+}

@@ -9,15 +9,17 @@
 //! healthy queue.
 //!
 //! Threading: std threads + mpsc (the vendored dependency set has no
-//! tokio); one thread per worker, one router, callers submit through a
-//! cloneable [`Client`]. Ordering within a stream is preserved by pinning
-//! each stream id to a worker (consistent hashing), which also keeps the
-//! per-utterance recurrent state meaningful.
+//! tokio); one thread per worker, one router, callers submit through the
+//! [`Coordinator`] directly or concurrently through cloneable [`Client`]
+//! handles. Ordering within a stream is preserved by pinning each stream id
+//! to a worker (consistent hashing), which also keeps the per-utterance
+//! recurrent state meaningful; the spill path trades that ordering for
+//! availability when the pinned queue is saturated.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -90,24 +92,98 @@ fn percentile(xs: &[u64], p: f64) -> u64 {
     v[((v.len() - 1) as f64 * p) as usize]
 }
 
-struct Worker {
+/// One worker's request lane (the submit-side view).
+struct Lane {
     tx: SyncSender<(Request, Instant)>,
-    handle: Option<JoinHandle<()>>,
+    depth: Arc<AtomicU64>,
     /// failure-injection: worker refuses work while true (tests)
     stalled: Arc<AtomicBool>,
-    depth: Arc<AtomicU64>,
+}
+
+/// Shared routing state: what [`Coordinator::submit`] and every [`Client`]
+/// operate on. Dropping the coordinator drops the lanes' senders, which is
+/// what tells workers to drain and exit.
+struct Router {
+    lanes: Vec<Lane>,
+    stats: Arc<Mutex<Stats>>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    /// Routing: the stream's pinned worker unless its queue is full, then
+    /// least-loaded spill; `Err` when every queue is saturated (global
+    /// backpressure — caller must retry/shed).
+    fn submit(&self, mut req: Request) -> Result<u64, Request> {
+        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = req.id;
+        let now = Instant::now();
+        let pinned = (req.stream as usize) % self.lanes.len();
+        let mut req = match self.try_lane(pinned, req, now) {
+            Ok(()) => return Ok(id),
+            Err(r) => r,
+        };
+        // spill: least-loaded first
+        let mut order: Vec<usize> = (0..self.lanes.len()).filter(|&w| w != pinned).collect();
+        order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
+        for w in order {
+            req = match self.try_lane(w, req, now) {
+                Ok(()) => return Ok(id),
+                Err(r) => r,
+            };
+        }
+        self.stats.lock().unwrap().rejected += 1;
+        Err(req)
+    }
+
+    fn try_lane(&self, w: usize, req: Request, t: Instant) -> Result<(), Request> {
+        match self.lanes[w].tx.try_send((req, t)) {
+            Ok(()) => {
+                self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full((r, _)) | TrySendError::Disconnected((r, _))) => Err(r),
+        }
+    }
+}
+
+/// Cloneable, thread-safe submission handle. Holds only a weak reference:
+/// once the owning [`Coordinator`] is dropped, submissions fail cleanly
+/// (the request is handed back) instead of keeping dead workers alive.
+#[derive(Clone)]
+pub struct Client {
+    router: Weak<Router>,
+}
+
+impl Client {
+    /// Submit a request (same routing/backpressure contract as
+    /// [`Coordinator::submit`]). `Err` means either transient backpressure
+    /// or a dropped pool — retry loops must check [`Client::is_closed`]
+    /// to tell the two apart, or they will spin forever after shutdown.
+    pub fn submit(&self, req: Request) -> Result<u64, Request> {
+        match self.router.upgrade() {
+            Some(router) => router.submit(req),
+            None => Err(req),
+        }
+    }
+
+    /// True once the owning [`Coordinator`] has been dropped: every further
+    /// submit will fail, so a retrying producer should stop.
+    pub fn is_closed(&self) -> bool {
+        self.router.strong_count() == 0
+    }
 }
 
 /// The coordinator: worker pool + router state + stats.
 pub struct Coordinator {
-    workers: Vec<Worker>,
+    /// `Some` until drop; taken first so lane senders close before joining
+    router: Option<Arc<Router>>,
+    handles: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<Stats>>,
     /// kept alive so the response channel survives worker churn
     #[allow(dead_code)]
     resp_tx: SyncSender<Response>,
     pub resp_rx: Receiver<Response>,
     reports: Arc<Mutex<HashMap<usize, ChipReport>>>,
-    next_id: AtomicU64,
 }
 
 impl Coordinator {
@@ -117,7 +193,8 @@ impl Coordinator {
         let stats = Arc::new(Mutex::new(Stats::default()));
         let reports = Arc::new(Mutex::new(HashMap::new()));
         let (resp_tx, resp_rx) = sync_channel::<Response>(n_workers * queue_depth.max(4) * 4);
-        let mut workers = Vec::with_capacity(n_workers);
+        let mut lanes = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let (tx, rx) = sync_channel::<(Request, Instant)>(queue_depth);
             let stalled = Arc::new(AtomicBool::new(false));
@@ -137,44 +214,28 @@ impl Coordinator {
                     })
                     .expect("spawn worker")
             };
-            workers.push(Worker { tx, handle: Some(handle), stalled, depth });
+            lanes.push(Lane { tx, depth, stalled });
+            handles.push(handle);
         }
-        Self { workers, stats, resp_tx, resp_rx, reports, next_id: AtomicU64::new(0) }
+        let router =
+            Arc::new(Router { lanes, stats: Arc::clone(&stats), next_id: AtomicU64::new(0) });
+        Self { router: Some(router), handles, stats, resp_tx, resp_rx, reports }
+    }
+
+    fn router(&self) -> &Router {
+        self.router.as_ref().expect("router alive until drop")
     }
 
     /// Submit a request. Routing: the stream's pinned worker unless its
     /// queue is full, then least-loaded healthy spill; `Err` when every
     /// queue is saturated (global backpressure — caller must retry/shed).
-    pub fn submit(&self, mut req: Request) -> Result<u64, Request> {
-        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let id = req.id;
-        let now = Instant::now();
-        let pinned = (req.stream as usize) % self.workers.len();
-        let mut req = match self.try_worker(pinned, req, now) {
-            Ok(()) => return Ok(id),
-            Err(r) => r,
-        };
-        // spill: least-loaded first
-        let mut order: Vec<usize> = (0..self.workers.len()).filter(|&w| w != pinned).collect();
-        order.sort_by_key(|&w| self.workers[w].depth.load(Ordering::Relaxed));
-        for w in order {
-            req = match self.try_worker(w, req, now) {
-                Ok(()) => return Ok(id),
-                Err(r) => r,
-            };
-        }
-        self.stats.lock().unwrap().rejected += 1;
-        Err(req)
+    pub fn submit(&self, req: Request) -> Result<u64, Request> {
+        self.router().submit(req)
     }
 
-    fn try_worker(&self, w: usize, req: Request, t: Instant) -> Result<(), Request> {
-        match self.workers[w].tx.try_send((req, t)) {
-            Ok(()) => {
-                self.workers[w].depth.fetch_add(1, Ordering::Relaxed);
-                Ok(())
-            }
-            Err(TrySendError::Full((r, _)) | TrySendError::Disconnected((r, _))) => Err(r),
-        }
+    /// A cloneable submission handle for concurrent producers.
+    pub fn client(&self) -> Client {
+        Client { router: Arc::downgrade(self.router.as_ref().expect("router alive")) }
     }
 
     /// Block until `n` responses have been collected (helper for batch runs).
@@ -206,26 +267,21 @@ impl Coordinator {
     /// Failure injection: stall/unstall a worker (its queue still accepts
     /// work until full; the router then spills around it).
     pub fn set_stalled(&self, worker: usize, stalled: bool) {
-        self.workers[worker].stalled.store(stalled, Ordering::SeqCst);
+        self.router().lanes[worker].stalled.store(stalled, Ordering::SeqCst);
     }
 
     pub fn n_workers(&self) -> usize {
-        self.workers.len()
+        self.router().lanes.len()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // close request queues; workers drain and exit
-        for w in &mut self.workers {
-            let (dead_tx, _) = sync_channel(1);
-            let tx = std::mem::replace(&mut w.tx, dead_tx);
-            drop(tx);
-        }
-        for w in &mut self.workers {
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
-            }
+        // close request queues (clients only hold weak refs); workers drain
+        // their queues and exit, then join
+        self.router.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -290,7 +346,7 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    
+
     use crate::util::prng::Pcg;
 
     fn rng_quant(seed: u64) -> QuantParams {
@@ -387,5 +443,20 @@ mod tests {
         assert!(s.accuracy() >= 0.0 && s.accuracy() <= 1.0);
         assert!(s.p50_us() > 0);
         assert!(s.p99_us() >= s.p50_us());
+    }
+
+    #[test]
+    fn client_submits_and_outlives_coordinator_safely() {
+        let coord = Coordinator::new(rng_quant(6), ChipConfig::design_point(), 2, 8);
+        let client = coord.client();
+        client.submit(request(1, 1)).expect("client submit");
+        let responses = coord.collect(1, Duration::from_secs(60));
+        assert_eq!(responses.len(), 1);
+        assert!(!client.is_closed());
+        drop(coord);
+        // the weak handle fails cleanly after the pool is gone, and the
+        // closure is observable so retry loops can stop
+        assert!(client.is_closed());
+        assert!(client.submit(request(1, 2)).is_err());
     }
 }

@@ -6,11 +6,13 @@
 //! the full evaluation section. The experiment index lives in DESIGN.md §3;
 //! measured numbers are recorded in EXPERIMENTS.md.
 //!
-//! All experiments use models trained via the PJRT `train_step` artifact on
-//! the synthetic GSCD substrate and quantised to the chip's int8/Q8.8
-//! formats. Train/deploy channel selections always match: the main model is
-//! trained at the design point's 10 channels, and the Fig. 6 sweep trains
-//! one model per channel configuration (the paper's methodology).
+//! All experiments use models trained via the delta-aware `train_step` of
+//! the active execution backend (native by default, PJRT-artifact-backed
+//! with `--features pjrt`) on the synthetic GSCD substrate and quantised to
+//! the chip's int8/Q8.8 formats. Train/deploy channel selections always
+//! match: the main model is trained at the design point's 10 channels, and
+//! the Fig. 6 sweep trains one model per channel configuration (the paper's
+//! methodology).
 
 use std::path::{Path, PathBuf};
 
@@ -22,8 +24,8 @@ use crate::dataset::{Dataset, Split};
 use crate::energy::SramKind;
 use crate::fex::biquad::Arch;
 use crate::fex::{area as fexarea, FexConfig};
-use crate::runtime::Runtime;
-use crate::train::{self, Trainer, TrainState};
+use crate::runtime;
+use crate::train::{self, Trainer};
 use crate::util::prng::Pcg;
 
 /// Results directory.
@@ -54,10 +56,10 @@ pub fn train_weights(
     steps: usize,
     path: &Path,
 ) -> crate::Result<QuantParams> {
-    let rt = Runtime::new(&cfg.artifacts)?;
+    let backend = runtime::backend_for(&cfg.artifacts)?;
     let ds = Dataset::with_fex(cfg.seed, fex);
-    let mut trainer = Trainer::new(&rt, ds, cfg.batch, cfg.train_delta_th)?;
-    let mut state = TrainState::init(&rt, cfg.seed);
+    let mut trainer = Trainer::new(backend, ds, cfg.batch, cfg.train_delta_th)?;
+    let mut state = trainer.init_state(cfg.seed);
     trainer.fit(&mut state, steps, true)?;
     let (acc, sp) = trainer.evaluate(&state, Split::Test, 128, cfg.train_delta_th)?;
     println!("float model: test acc {:.1}%  sparsity {:.1}%", acc * 100.0, sp * 100.0);
@@ -68,13 +70,16 @@ pub fn train_weights(
 }
 
 /// Load the trained weight image for the run's chip config, or train one
-/// via PJRT if missing.
+/// via the execution backend if missing.
 pub fn ensure_weights(cfg: &RunConfig) -> crate::Result<QuantParams> {
     let path = Path::new(&cfg.weights).to_path_buf();
     if path.exists() {
         return train::load_weights(&path);
     }
-    println!("no weights at {} — training via PJRT ({} steps)...", cfg.weights, cfg.train_steps);
+    println!(
+        "no weights at {} — training ({} steps)...",
+        cfg.weights, cfg.train_steps
+    );
     train_weights(cfg, cfg.chip_config().fex.clone(), cfg.train_steps, &path)
 }
 

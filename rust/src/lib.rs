@@ -21,11 +21,14 @@
 //!   calibrated against the paper's measured breakdown.
 //! * [`audio`] / [`dataset`] — synthetic Google-Speech-Commands-like corpus
 //!   (formant synthesis) used in place of the gated GSCD download.
-//! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
-//!   (HLO text) and executes them from Rust; Python is never on the
-//!   request path.
-//! * [`train`] — training driver that runs the AOT `train_step` through PJRT
-//!   and quantises the result into the chip's int8 weight format.
+//! * [`runtime`] — pluggable execution backend: a pure-Rust native ΔGRU
+//!   forward/backward (the default, zero external dependencies) and, behind
+//!   the `pjrt` feature, the PJRT runtime that loads the AOT-compiled
+//!   JAX/Pallas artifacts (HLO text) and executes them from Rust; Python is
+//!   never on the request path.
+//! * [`train`] — training driver that runs the delta-aware `train_step`
+//!   through the active backend and quantises the result into the chip's
+//!   int8 weight format.
 //! * [`coordinator`] — streaming serving runtime: routes audio streams to a
 //!   pool of chip-twin workers with dynamic batching and backpressure.
 //! * [`baseline`] — the comparison points: dense (non-Δ) accelerator,

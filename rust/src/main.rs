@@ -16,8 +16,8 @@
 use anyhow::{bail, Context};
 use deltakws::config::RunConfig;
 use deltakws::dataset::{Dataset, Split};
-use deltakws::runtime::Runtime;
-use deltakws::train::{TrainState, Trainer};
+use deltakws::runtime;
+use deltakws::train::Trainer;
 use deltakws::{chip::KwsChip, coordinator, exp};
 
 fn main() {
@@ -141,12 +141,12 @@ fn run() -> anyhow::Result<()> {
 }
 
 fn cmd_train(cfg: &RunConfig) -> anyhow::Result<()> {
-    let rt = Runtime::new(&cfg.artifacts)?;
-    println!("PJRT platform: {}", rt.platform());
+    let backend = runtime::backend_for(&cfg.artifacts)?;
+    println!("execution backend: {}", backend.name());
     // train on exactly the channel selection the chip will deploy with
     let ds = Dataset::with_fex(cfg.seed, cfg.chip_config().fex.clone());
-    let mut trainer = Trainer::new(&rt, ds, cfg.batch, cfg.train_delta_th)?;
-    let mut state = TrainState::init(&rt, cfg.seed);
+    let mut trainer = Trainer::new(backend, ds, cfg.batch, cfg.train_delta_th)?;
+    let mut state = trainer.init_state(cfg.seed);
     println!(
         "training {} steps (batch {}, train Δ_TH {}) ...",
         cfg.train_steps, cfg.batch, cfg.train_delta_th
@@ -256,19 +256,16 @@ fn cmd_info(cfg: &RunConfig) -> anyhow::Result<()> {
         cfg.delta_th_q8 as f64 / 256.0,
         cfg.channels
     );
-    match Runtime::new(&cfg.artifacts) {
-        Ok(rt) => {
-            println!("artifacts: {} (platform {})", cfg.artifacts, rt.platform());
+    match runtime::backend_for(&cfg.artifacts) {
+        Ok(backend) => {
+            let m = backend.manifest();
+            println!("execution backend: {}", backend.name());
             println!(
                 "model: {} frames x {} ch -> GRU-{} -> {} classes (batch {})",
-                rt.manifest.frames,
-                rt.manifest.channels,
-                rt.manifest.hidden,
-                rt.manifest.classes,
-                rt.manifest.batch
+                m.frames, m.channels, m.hidden, m.classes, m.batch
             );
         }
-        Err(e) => println!("artifacts: unavailable ({e})"),
+        Err(e) => println!("backend: unavailable ({e})"),
     }
     // quick single-utterance demo if weights exist
     if std::path::Path::new(&cfg.weights).exists() {
@@ -293,7 +290,7 @@ fn print_help() {
 USAGE: deltakws <command> [flags]
 
 COMMANDS:
-  train     train the ΔGRU via the AOT PJRT train_step artifact
+  train     train the ΔGRU (native backend; PJRT artifacts with --features pjrt)
   eval      evaluate the chip twin on synthetic-GSCD test utterances
   exp       regenerate paper experiments: fig6 fig7 fig10 fig11 fig12 fig13
             table1 table2 ablation all

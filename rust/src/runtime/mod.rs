@@ -1,21 +1,35 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
-//! them from Rust. Python never runs on the request path.
+//! Pluggable execution backend: where the float ΔGRU forward/backward runs.
 //!
-//! Interchange format is **HLO text** (see `python/compile/aot.py`): jax
-//! >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
-//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
-//! round-trips cleanly. All artifacts are lowered with `return_tuple=True`,
-//! so every execution returns a tuple literal which [`Executable::run`]
-//! decomposes.
+//! The crate separates *what* is computed (the delta-aware KWS network and
+//! its training step, ABI fixed by `python/compile/model.py`) from *where*
+//! it runs, behind the [`Backend`] trait:
 //!
-//! The [`Runtime`] owns one PJRT CPU client; [`Executable`]s are compiled
-//! once at startup (`make artifacts` must have produced `artifacts/`).
+//! * [`native::NativeBackend`] — pure-Rust implementation of the batched
+//!   ΔGRU forward and the full BPTT training step (straight-through
+//!   threshold gradient + Adam). Zero external dependencies; the default.
+//! * `pjrt::PjrtBackend` (feature `pjrt`) — the original path: loads the
+//!   AOT-compiled JAX/Pallas artifacts (HLO text, `make artifacts`) and
+//!   executes them through a PJRT CPU client. Python is never on the
+//!   request path.
+//!
+//! [`backend_for`] picks PJRT when the feature is enabled *and* artifacts
+//! are present, otherwise the native backend — so `cargo build && cargo
+//! test` work fully offline, and the PJRT path remains a drop-in swap.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{bail, Context};
+use anyhow::Context;
 
 use crate::util::json::{self, Json};
+use crate::util::prng::Pcg;
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Runtime};
 
 /// Tensor of f32s with shape — the runtime's host-side value type.
 #[derive(Debug, Clone, PartialEq)]
@@ -45,28 +59,9 @@ impl Tensor {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
-
-    fn to_literal(&self) -> crate::Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        if self.shape.is_empty() {
-            // scalar: reshape to rank-0
-            Ok(lit.reshape(&[])?)
-        } else {
-            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-            Ok(lit.reshape(&dims)?)
-        }
-    }
-
-    fn from_literal(lit: &xla::Literal) -> crate::Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        // convert through f32 regardless of source dtype
-        let lit32 = lit.convert(xla::PrimitiveType::F32)?;
-        Ok(Self { shape: dims, data: lit32.to_vec::<f32>()? })
-    }
 }
 
-/// Integer tensor (labels). Converted to s32 literals.
+/// Integer tensor (labels).
 #[derive(Debug, Clone)]
 pub struct IntTensor {
     pub shape: Vec<usize>,
@@ -78,28 +73,13 @@ impl IntTensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape, data }
     }
-
-    fn to_literal(&self) -> crate::Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
-    }
 }
 
-/// Host value passed to an executable.
+/// Host value passed to an executable (PJRT argument lists mix both).
 #[derive(Debug, Clone)]
 pub enum Value {
     F32(Tensor),
     I32(IntTensor),
-}
-
-impl Value {
-    fn to_literal(&self) -> crate::Result<xla::Literal> {
-        match self {
-            Value::F32(t) => t.to_literal(),
-            Value::I32(t) => t.to_literal(),
-        }
-    }
 }
 
 impl From<Tensor> for Value {
@@ -114,30 +94,9 @@ impl From<IntTensor> for Value {
     }
 }
 
-/// A compiled artifact.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with positional inputs; returns the decomposed output tuple
-    /// as f32 tensors.
-    pub fn run(&self, inputs: &[Value]) -> crate::Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|v| v.to_literal()).collect::<crate::Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let out = result
-            .first()
-            .and_then(|r| r.first())
-            .context("empty execution result")?
-            .to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
-    }
-}
-
-/// Artifact manifest (written by aot.py).
+/// Model geometry + canonical parameter list. For the PJRT backend this is
+/// read from `artifacts/manifest.json` (written by aot.py); the native
+/// backend synthesises the identical manifest from the crate constants.
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub frames: usize,
@@ -151,6 +110,26 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The in-crate model geometry (`python/compile/model.PARAM_SHAPES`).
+    pub fn native(batch: usize) -> Self {
+        let c = crate::MAX_CHANNELS;
+        let h = crate::HIDDEN;
+        let k = crate::NUM_CLASSES;
+        let order = ["w_x", "w_h", "b", "w_fc", "b_fc"];
+        let shapes: [Vec<usize>; 5] =
+            [vec![c, 3 * h], vec![h, 3 * h], vec![3 * h], vec![h, k], vec![k]];
+        Self {
+            frames: crate::FRAMES_PER_DECISION,
+            channels: c,
+            hidden: h,
+            classes: k,
+            batch,
+            audio_samples: crate::FRAMES_PER_DECISION * crate::FRAME_SAMPLES,
+            param_order: order.iter().map(|s| s.to_string()).collect(),
+            param_shapes: order.iter().map(|s| s.to_string()).zip(shapes).collect(),
+        }
+    }
+
     pub fn load(dir: &Path) -> crate::Result<Self> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .context("manifest.json missing — run `make artifacts` first")?;
@@ -190,68 +169,114 @@ impl Manifest {
     }
 }
 
-/// The PJRT runtime: one CPU client + the compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub artifacts_dir: PathBuf,
-    pub manifest: Manifest,
+/// Float training state: parameters + Adam moments, host-side mirrors of
+/// the (device, for PJRT) tensors.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: f32,
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client and read the artifact manifest.
-    pub fn new(artifacts_dir: impl Into<PathBuf>) -> crate::Result<Self> {
-        let artifacts_dir = artifacts_dir.into();
-        if !artifacts_dir.join("manifest.json").exists() {
-            bail!(
-                "artifacts not found in {} — run `make artifacts` first",
-                artifacts_dir.display()
-            );
+impl TrainState {
+    /// Glorot-uniform init matching `python/compile/model.init_params`
+    /// (update-gate bias +1).
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let mut rng = Pcg::new(seed);
+        let mut params = Vec::with_capacity(manifest.param_shapes.len());
+        for (name, shape) in &manifest.param_shapes {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name == "b" {
+                // zero biases, +1 on the update-gate block
+                let h = manifest.hidden;
+                (0..n).map(|i| if i >= h && i < 2 * h { 1.0 } else { 0.0 }).collect()
+            } else if name.starts_with('b') {
+                vec![0.0; n]
+            } else {
+                let (fan_in, fan_out) = (shape[0] as f64, shape[1] as f64);
+                let lim = (6.0 / (fan_in + fan_out)).sqrt();
+                (0..n).map(|_| rng.range_f64(-lim, lim) as f32).collect()
+            };
+            params.push(Tensor::new(shape.clone(), data));
         }
-        let manifest = Manifest::load(&artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, artifacts_dir, manifest })
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        Self { params, m: zeros.clone(), v: zeros, step: 0.0 }
+    }
+}
+
+/// Batched forward result: logits `[B, classes]` + per-utterance temporal
+/// sparsity `[B]`.
+#[derive(Debug, Clone)]
+pub struct ForwardOut {
+    pub logits: Tensor,
+    pub sparsity: Tensor,
+}
+
+/// Where the float network runs. Implementations must agree on the ABI of
+/// `python/compile/model.py`: the canonical 5-tensor parameter list, the
+/// delta-thresholded forward with posterior averaging after the warmup
+/// frames, and the Adam training step with straight-through thresholding.
+pub trait Backend: Send + Sync {
+    /// Human-readable backend identity (e.g. `native`, `pjrt:Host`).
+    fn name(&self) -> String;
+
+    /// Model geometry and canonical parameter order/shapes.
+    fn manifest(&self) -> &Manifest;
+
+    /// Can this backend run batches of size `b`? (PJRT artifacts are lowered
+    /// at a fixed batch; the native backend takes any.)
+    fn supports_batch(&self, b: usize) -> bool {
+        b == self.manifest().batch
     }
 
-    /// Default artifacts location: `$CARGO_MANIFEST_DIR/artifacts` when run
-    /// in-tree, else `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        let local = PathBuf::from("artifacts");
-        if local.join("manifest.json").exists() {
-            return local;
+    /// Batched utterance forward at threshold `delta_th`:
+    /// feats `[B, T, C]` -> logits `[B, classes]` + sparsity `[B]`.
+    fn forward(&self, params: &[Tensor], feats: &Tensor, delta_th: f32)
+        -> crate::Result<ForwardOut>;
+
+    /// One Adam optimisation step (delta-aware loss = cross-entropy +
+    /// sparsity L1 penalty). Mutates `state` in place; returns the loss.
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        feats: &Tensor,
+        labels: &IntTensor,
+        delta_th: f32,
+        lr: f32,
+    ) -> crate::Result<f32>;
+}
+
+/// Pick an execution backend. With the `pjrt` feature enabled and AOT
+/// artifacts present under `artifacts_dir`, the PJRT path is used; in every
+/// other case (the default build) the pure-Rust native backend runs.
+pub fn backend_for(artifacts_dir: &str) -> crate::Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = Path::new(artifacts_dir);
+        if dir.join("manifest.json").exists() {
+            match pjrt::PjrtBackend::new(dir) {
+                Ok(b) => return Ok(Box::new(b)),
+                Err(e) => {
+                    eprintln!("pjrt backend unavailable ({e:#}); falling back to native");
+                }
+            }
         }
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
-
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, name: &str) -> crate::Result<Executable> {
-        let path = self.artifacts_dir.join(name);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Executable { exe, name: name.to_string() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts_dir;
+    Ok(Box::new(NativeBackend::new()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn artifacts() -> Option<PathBuf> {
-        let dir = Runtime::default_dir();
-        dir.join("manifest.json").exists().then_some(dir)
-    }
-
     #[test]
     fn tensor_shape_checks() {
         let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
         assert_eq!(t.len(), 6);
+        assert!(!t.is_empty());
         let z = Tensor::zeros(&[4, 5]);
         assert_eq!(z.data.len(), 20);
     }
@@ -263,20 +288,53 @@ mod tests {
     }
 
     #[test]
-    fn manifest_loads_if_present() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let m = Manifest::load(&dir).unwrap();
+    fn native_manifest_geometry() {
+        let m = Manifest::native(16);
         assert_eq!(m.frames, 62);
         assert_eq!(m.channels, 16);
         assert_eq!(m.hidden, 64);
         assert_eq!(m.classes, 12);
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.audio_samples, 62 * 128);
         assert_eq!(m.param_order.len(), 5);
         assert_eq!(m.param_shapes[0].1, vec![16, 192]);
+        assert_eq!(m.param_shapes[3].1, vec![64, 12]);
     }
 
-    // Full execute-path tests live in rust/tests/runtime_integration.rs —
-    // they need the PJRT client, which is slow to spin up per unit test.
+    #[test]
+    fn train_state_init_shapes_and_update_gate_bias() {
+        let m = Manifest::native(16);
+        let st = TrainState::init(&m, 42);
+        assert_eq!(st.params.len(), 5);
+        assert_eq!(st.m.len(), 5);
+        assert_eq!(st.v.len(), 5);
+        assert_eq!(st.step, 0.0);
+        // b: zero except +1 on the update-gate block [H, 2H)
+        let b = &st.params[2].data;
+        assert_eq!(b.len(), 192);
+        assert!(b[..64].iter().all(|&v| v == 0.0));
+        assert!(b[64..128].iter().all(|&v| v == 1.0));
+        assert!(b[128..].iter().all(|&v| v == 0.0));
+        // moments start at zero
+        assert!(st.m.iter().all(|t| t.data.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn train_state_init_is_deterministic_per_seed() {
+        let m = Manifest::native(16);
+        let a = TrainState::init(&m, 7);
+        let b = TrainState::init(&m, 7);
+        let c = TrainState::init(&m, 8);
+        assert_eq!(a.params[0].data, b.params[0].data);
+        assert_ne!(a.params[0].data, c.params[0].data);
+    }
+
+    #[test]
+    fn backend_factory_defaults_to_native() {
+        // without artifacts the factory must always fall back to native,
+        // whatever the feature set
+        let b = backend_for("this/dir/does/not/exist").unwrap();
+        assert!(b.name().contains("native"), "{}", b.name());
+        assert!(b.supports_batch(1) && b.supports_batch(64));
+    }
 }

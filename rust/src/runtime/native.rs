@@ -1,0 +1,831 @@
+//! Pure-Rust execution backend: the ΔGRU forward and its full training
+//! step (BPTT through the delta recurrence) with no external runtime.
+//!
+//! Mirrors `python/compile/model.py` + `kernels/ref.py` semantics exactly:
+//!
+//! * forward — per frame, input/hidden deltas are hard-thresholded
+//!   (`|d| >= Θ` fires; fired lanes refresh their reference), fired deltas
+//!   accumulate into the four gate pre-activation memories, gates use the
+//!   reset-after GRU formulation, and the decision is the mean of per-frame
+//!   FC logits after [`WARMUP`] frames;
+//! * loss — softmax cross-entropy over the averaged logits plus
+//!   [`SPARSITY_BETA`] × the mean L1 of the *raw* (pre-threshold) deltas,
+//!   the DeltaRNN sparsity regulariser;
+//! * backward — reverse-time BPTT with the straight-through estimator
+//!   through the threshold (gradient of the masked delta w.r.t. the raw
+//!   delta is identity; the firing mask itself is treated as constant,
+//!   and reference updates route gradients through the fired branch);
+//! * update — Adam with global-norm gradient clipping, matching the
+//!   hyper-parameters in `model.py` (`ADAM_B1/B2/EPS`, `GRAD_CLIP`).
+
+use anyhow::bail;
+
+use super::{Backend, ForwardOut, IntTensor, Manifest, Tensor, TrainState};
+
+/// Frames excluded from the posterior average (model.py `WARMUP`).
+pub const WARMUP: usize = 4;
+/// Weight of the delta-L1 sparsity penalty (model.py `SPARSITY_BETA`).
+pub const SPARSITY_BETA: f32 = 2e-4;
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+const GRAD_CLIP: f32 = 5.0;
+
+/// The native backend. Stateless apart from its manifest; `batch` is only
+/// the *nominal* batch (any batch size executes).
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::with_batch(16)
+    }
+
+    pub fn with_batch(batch: usize) -> Self {
+        Self { manifest: Manifest::native(batch) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Model dimensions derived from the parameter tensors themselves.
+#[derive(Debug, Clone, Copy)]
+struct Dims {
+    c: usize,
+    h: usize,
+    k: usize,
+}
+
+impl Dims {
+    fn g(&self) -> usize {
+        3 * self.h
+    }
+}
+
+fn check_params(params: &[Tensor]) -> crate::Result<Dims> {
+    if params.len() != 5 {
+        bail!("expected 5 parameter tensors (w_x, w_h, b, w_fc, b_fc), got {}", params.len());
+    }
+    let (w_x, w_h, b, w_fc, b_fc) = (&params[0], &params[1], &params[2], &params[3], &params[4]);
+    if w_x.shape.len() != 2 || w_x.shape[1] % 3 != 0 {
+        bail!("w_x must be [C, 3H], got {:?}", w_x.shape);
+    }
+    let c = w_x.shape[0];
+    let h = w_x.shape[1] / 3;
+    if w_h.shape != vec![h, 3 * h] {
+        bail!("w_h must be [{h}, {}], got {:?}", 3 * h, w_h.shape);
+    }
+    if b.data.len() != 3 * h {
+        bail!("b must have {} elements, got {}", 3 * h, b.data.len());
+    }
+    if w_fc.shape.len() != 2 || w_fc.shape[0] != h {
+        bail!("w_fc must be [{h}, K], got {:?}", w_fc.shape);
+    }
+    let k = w_fc.shape[1];
+    if b_fc.data.len() != k {
+        bail!("b_fc must have {k} elements, got {}", b_fc.data.len());
+    }
+    Ok(Dims { c, h, k })
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Everything the backward pass needs from one utterance's forward run.
+struct Tape {
+    /// raw input deltas a_t = x_t - x_ref (flattened [T, C])
+    ax: Vec<f32>,
+    /// raw hidden deltas e_t = h_{t-1} - h_ref ([T, H])
+    eh: Vec<f32>,
+    /// firing masks (|d| >= Θ)
+    fire_x: Vec<bool>,
+    fire_h: Vec<bool>,
+    /// gate activations ([T, H] each)
+    r: Vec<f32>,
+    u: Vec<f32>,
+    cv: Vec<f32>,
+    /// candidate recurrent memory *after* the step-t update ([T, H])
+    m_hc: Vec<f32>,
+    /// hidden trajectory: h_all[t*H..] is h_{t-1}; h_all[(t+1)*H..] is h_t
+    h_all: Vec<f32>,
+    /// mean per-frame raw-delta L1 (the sparsity penalty term)
+    raw_l1_mean: f32,
+    /// averaged FC logits ([K])
+    logits: Vec<f32>,
+    /// fraction of silent lanes
+    sparsity: f32,
+}
+
+/// One utterance forward. `record` controls whether the tape carries the
+/// per-step activations the backward pass needs (training) or only the
+/// outputs (inference).
+fn forward_utt(params: &[Tensor], feats: &[f32], t_frames: usize, d: Dims, delta_th: f32,
+               record: bool) -> Tape {
+    let (c, h, k, g) = (d.c, d.h, d.k, d.g());
+    let w_x = &params[0].data;
+    let w_h = &params[1].data;
+    let b = &params[2].data;
+    let w_fc = &params[3].data;
+    let b_fc = &params[4].data;
+
+    let rec = if record { t_frames } else { 0 };
+    let mut tape = Tape {
+        ax: vec![0.0; rec * c],
+        eh: vec![0.0; rec * h],
+        fire_x: vec![false; rec * c],
+        fire_h: vec![false; rec * h],
+        r: vec![0.0; rec * h],
+        u: vec![0.0; rec * h],
+        cv: vec![0.0; rec * h],
+        m_hc: vec![0.0; rec * h],
+        h_all: vec![0.0; (rec + 1) * h],
+        raw_l1_mean: 0.0,
+        logits: vec![0.0; k],
+        sparsity: 0.0,
+    };
+
+    let mut x_ref = vec![0f32; c];
+    let mut h_ref = vec![0f32; h];
+    let mut hv = vec![0f32; h];
+    // gate pre-activation memories: [m_r | m_u | m_xc | m_hc]
+    let mut m = vec![0f32; 4 * h];
+    let warmup = WARMUP.min(t_frames.saturating_sub(1));
+    let mut fired_frac_sum = 0f64;
+    let mut l1_sum = 0f64;
+    let mut counted = 0usize;
+
+    for t in 0..t_frames {
+        let x = &feats[t * c..(t + 1) * c];
+        let mut fired = 0usize;
+        // --- Δ-encode + accumulate, input side --------------------------
+        for i in 0..c {
+            let a = x[i] - x_ref[i];
+            l1_sum += a.abs() as f64;
+            let fire = a.abs() >= delta_th;
+            if record {
+                tape.ax[t * c + i] = a;
+                tape.fire_x[t * c + i] = fire;
+            }
+            if fire {
+                x_ref[i] = x[i];
+                if a != 0.0 {
+                    fired += 1;
+                    let row = &w_x[i * g..(i + 1) * g];
+                    for j in 0..h {
+                        m[j] += a * row[j];
+                        m[h + j] += a * row[h + j];
+                        m[2 * h + j] += a * row[2 * h + j];
+                    }
+                }
+            }
+        }
+        // --- Δ-encode + accumulate, hidden side -------------------------
+        for l in 0..h {
+            let e = hv[l] - h_ref[l];
+            l1_sum += e.abs() as f64;
+            let fire = e.abs() >= delta_th;
+            if record {
+                tape.eh[t * h + l] = e;
+                tape.fire_h[t * h + l] = fire;
+            }
+            if fire {
+                h_ref[l] = hv[l];
+                if e != 0.0 {
+                    fired += 1;
+                    let row = &w_h[l * g..(l + 1) * g];
+                    for j in 0..h {
+                        m[j] += e * row[j];
+                        m[h + j] += e * row[h + j];
+                        m[3 * h + j] += e * row[2 * h + j];
+                    }
+                }
+            }
+        }
+        // --- gates + state update ---------------------------------------
+        for j in 0..h {
+            let r = sigmoid(m[j] + b[j]);
+            let u = sigmoid(m[h + j] + b[h + j]);
+            let cv = (m[2 * h + j] + r * m[3 * h + j] + b[2 * h + j]).tanh();
+            if record {
+                tape.r[t * h + j] = r;
+                tape.u[t * h + j] = u;
+                tape.cv[t * h + j] = cv;
+                tape.m_hc[t * h + j] = m[3 * h + j];
+            }
+            hv[j] = u * hv[j] + (1.0 - u) * cv;
+        }
+        if record {
+            tape.h_all[(t + 1) * h..(t + 2) * h].copy_from_slice(&hv);
+        }
+        fired_frac_sum += fired as f64 / (c + h) as f64;
+        // --- per-frame FC readout, posterior-averaged -------------------
+        if t >= warmup {
+            for kk in 0..k {
+                let mut l = b_fc[kk];
+                for j in 0..h {
+                    l += hv[j] * w_fc[j * k + kk];
+                }
+                tape.logits[kk] += l;
+            }
+            counted += 1;
+        }
+    }
+    if counted > 0 {
+        for l in tape.logits.iter_mut() {
+            *l /= counted as f32;
+        }
+    }
+    if t_frames > 0 {
+        tape.sparsity = (1.0 - fired_frac_sum / t_frames as f64) as f32;
+        tape.raw_l1_mean = (l1_sum / t_frames as f64) as f32;
+    }
+    tape
+}
+
+/// Cross-entropy over averaged logits: returns (loss, softmax probs).
+fn softmax_ce(logits: &[f32], label: usize) -> (f32, Vec<f32>) {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    let probs: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+    let ce = -(probs[label].max(1e-30)).ln();
+    (ce, probs)
+}
+
+/// Batch loss without gradients (used by the finite-difference tests).
+pub(crate) fn batch_loss(
+    params: &[Tensor],
+    feats: &Tensor,
+    labels: &IntTensor,
+    delta_th: f32,
+) -> crate::Result<f32> {
+    let d = check_params(params)?;
+    let (bsz, t) = (feats.shape[0], feats.shape[1]);
+    let mut ce_sum = 0f32;
+    let mut l1_sum = 0f32;
+    for bi in 0..bsz {
+        let f = &feats.data[bi * t * d.c..(bi + 1) * t * d.c];
+        let tape = forward_utt(params, f, t, d, delta_th, false);
+        let (ce, _) = softmax_ce(&tape.logits, labels.data[bi] as usize);
+        ce_sum += ce;
+        l1_sum += tape.raw_l1_mean;
+    }
+    Ok(ce_sum / bsz as f32 + SPARSITY_BETA * l1_sum / bsz as f32)
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn supports_batch(&self, b: usize) -> bool {
+        b > 0
+    }
+
+    fn forward(&self, params: &[Tensor], feats: &Tensor, delta_th: f32)
+        -> crate::Result<ForwardOut> {
+        let d = check_params(params)?;
+        if feats.shape.len() != 3 || feats.shape[2] != d.c {
+            bail!("feats must be [B, T, {}], got {:?}", d.c, feats.shape);
+        }
+        let (bsz, t) = (feats.shape[0], feats.shape[1]);
+        let mut logits = vec![0f32; bsz * d.k];
+        let mut sparsity = vec![0f32; bsz];
+        for bi in 0..bsz {
+            let f = &feats.data[bi * t * d.c..(bi + 1) * t * d.c];
+            let tape = forward_utt(params, f, t, d, delta_th, false);
+            logits[bi * d.k..(bi + 1) * d.k].copy_from_slice(&tape.logits);
+            sparsity[bi] = tape.sparsity;
+        }
+        Ok(ForwardOut {
+            logits: Tensor::new(vec![bsz, d.k], logits),
+            sparsity: Tensor::new(vec![bsz], sparsity),
+        })
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        feats: &Tensor,
+        labels: &IntTensor,
+        delta_th: f32,
+        lr: f32,
+    ) -> crate::Result<f32> {
+        let d = check_params(&state.params)?;
+        if feats.shape.len() != 3 || feats.shape[2] != d.c {
+            bail!("feats must be [B, T, {}], got {:?}", d.c, feats.shape);
+        }
+        let (bsz, t_frames) = (feats.shape[0], feats.shape[1]);
+        if labels.data.len() != bsz {
+            bail!("labels must have {bsz} entries, got {}", labels.data.len());
+        }
+        let (c, h, k, g) = (d.c, d.h, d.k, d.g());
+        let warmup = WARMUP.min(t_frames.saturating_sub(1));
+        let counted = (t_frames - warmup).max(1);
+        // β / (B·T): raw_l1 enters the loss as β · mean_b mean_t l1_{b,t}
+        let beta_coef = SPARSITY_BETA / (bsz as f32 * t_frames.max(1) as f32);
+
+        // gradient accumulators (canonical parameter order)
+        let mut grads: Vec<Vec<f32>> =
+            state.params.iter().map(|p| vec![0f32; p.data.len()]).collect();
+        let mut loss = 0f32;
+
+        for bi in 0..bsz {
+            let f = &feats.data[bi * t_frames * c..(bi + 1) * t_frames * c];
+            let tape = forward_utt(&state.params, f, t_frames, d, delta_th, true);
+            let label = labels.data[bi] as usize;
+            if label >= k {
+                bail!("label {label} out of range (K = {k})");
+            }
+            let (ce, probs) = softmax_ce(&tape.logits, label);
+            loss += ce / bsz as f32 + SPARSITY_BETA * tape.raw_l1_mean / bsz as f32;
+
+            // d loss / d averaged-logits, then per counted frame
+            let mut glt = vec![0f32; k];
+            for kk in 0..k {
+                let onehot = if kk == label { 1.0 } else { 0.0 };
+                glt[kk] = (probs[kk] - onehot) / (bsz as f32 * counted as f32);
+            }
+            // readout gradients: glt is constant across counted frames
+            let w_fc = &state.params[3].data;
+            let mut h_sum = vec![0f32; h];
+            for t in warmup..t_frames {
+                for j in 0..h {
+                    h_sum[j] += tape.h_all[(t + 1) * h + j];
+                }
+            }
+            for j in 0..h {
+                for kk in 0..k {
+                    grads[3][j * k + kk] += h_sum[j] * glt[kk];
+                }
+            }
+            for kk in 0..k {
+                grads[4][kk] += glt[kk] * counted as f32;
+            }
+            // d loss / d h_t from the readout, identical for all counted t
+            let mut gh_read = vec![0f32; h];
+            for j in 0..h {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += glt[kk] * w_fc[j * k + kk];
+                }
+                gh_read[j] = acc;
+            }
+
+            // ---- reverse-time BPTT -------------------------------------
+            let w_x = &state.params[0].data;
+            let w_h = &state.params[1].data;
+            let mut gh = vec![0f32; h]; // grad w.r.t. h_t
+            let mut ghr = vec![0f32; h]; // grad w.r.t. h_ref after step t
+            let mut gxr = vec![0f32; c]; // grad w.r.t. x_ref after step t
+            let mut gm = vec![0f32; 4 * h]; // grads w.r.t. the memories at t
+            let mut gdx = vec![0f32; c];
+            let mut gdh = vec![0f32; h];
+            for t in (0..t_frames).rev() {
+                if t >= warmup {
+                    for j in 0..h {
+                        gh[j] += gh_read[j];
+                    }
+                }
+                let r = &tape.r[t * h..(t + 1) * h];
+                let u = &tape.u[t * h..(t + 1) * h];
+                let cv = &tape.cv[t * h..(t + 1) * h];
+                let m_hc = &tape.m_hc[t * h..(t + 1) * h];
+                let h_prev = &tape.h_all[t * h..(t + 1) * h];
+                let mut gh_prev = vec![0f32; h];
+                // gates backward; accumulate into the carried memory grads
+                for j in 0..h {
+                    let gu = gh[j] * (h_prev[j] - cv[j]);
+                    let gc = gh[j] * (1.0 - u[j]);
+                    gh_prev[j] = gh[j] * u[j];
+                    let gpre_c = gc * (1.0 - cv[j] * cv[j]);
+                    gm[2 * h + j] += gpre_c;
+                    let gr = gpre_c * m_hc[j];
+                    gm[3 * h + j] += gpre_c * r[j];
+                    grads[2][2 * h + j] += gpre_c;
+                    let gpre_r = gr * r[j] * (1.0 - r[j]);
+                    gm[j] += gpre_r;
+                    grads[2][j] += gpre_r;
+                    let gpre_u = gu * u[j] * (1.0 - u[j]);
+                    gm[h + j] += gpre_u;
+                    grads[2][h + j] += gpre_u;
+                }
+                // delta matvec backward: weight grads + grads on the deltas
+                for i in 0..c {
+                    let fire = tape.fire_x[t * c + i];
+                    let a = tape.ax[t * c + i];
+                    let dxi = if fire { a } else { 0.0 };
+                    let row = &w_x[i * g..(i + 1) * g];
+                    let grow = &mut grads[0][i * g..(i + 1) * g];
+                    let mut acc = 0f32;
+                    for j in 0..h {
+                        acc += gm[j] * row[j] + gm[h + j] * row[h + j]
+                            + gm[2 * h + j] * row[2 * h + j];
+                        if dxi != 0.0 {
+                            grow[j] += dxi * gm[j];
+                            grow[h + j] += dxi * gm[h + j];
+                            grow[2 * h + j] += dxi * gm[2 * h + j];
+                        }
+                    }
+                    gdx[i] = acc;
+                }
+                for l in 0..h {
+                    let fire = tape.fire_h[t * h + l];
+                    let e = tape.eh[t * h + l];
+                    let dhl = if fire { e } else { 0.0 };
+                    let row = &w_h[l * g..(l + 1) * g];
+                    let grow = &mut grads[1][l * g..(l + 1) * g];
+                    let mut acc = 0f32;
+                    for j in 0..h {
+                        acc += gm[j] * row[j] + gm[h + j] * row[h + j]
+                            + gm[3 * h + j] * row[2 * h + j];
+                        if dhl != 0.0 {
+                            grow[j] += dhl * gm[j];
+                            grow[h + j] += dhl * gm[h + j];
+                            grow[2 * h + j] += dhl * gm[3 * h + j];
+                        }
+                    }
+                    gdh[l] = acc;
+                }
+                // thresholds + reference updates (STE: d dx / d a = 1; the
+                // where() on the reference routes through the fired branch)
+                for i in 0..c {
+                    let fire = tape.fire_x[t * c + i];
+                    let sg = beta_coef * sign(tape.ax[t * c + i]);
+                    let keep = if fire { 0.0 } else { gxr[i] };
+                    gxr[i] = keep - gdx[i] - sg;
+                    // (the fired-branch share of gxr routes to x_t: inputs,
+                    // no gradient consumer)
+                }
+                for l in 0..h {
+                    let fire = tape.fire_h[t * h + l];
+                    let sg = beta_coef * sign(tape.eh[t * h + l]);
+                    let pass = if fire { ghr[l] } else { 0.0 };
+                    let keep = if fire { 0.0 } else { ghr[l] };
+                    gh_prev[l] += pass + gdh[l] + sg;
+                    ghr[l] = keep - gdh[l] - sg;
+                }
+                gh.copy_from_slice(&gh_prev);
+            }
+        }
+
+        // ---- global-norm clip + Adam (model.py adam_update) ------------
+        let mut sq = 0f64;
+        for gten in &grads {
+            for &gv in gten {
+                sq += (gv as f64) * (gv as f64);
+            }
+        }
+        let gnorm = (sq + 1e-12).sqrt() as f32;
+        let scale = (GRAD_CLIP / gnorm).min(1.0);
+        let step = state.step + 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(step);
+        let bc2 = 1.0 - ADAM_B2.powf(step);
+        for p in 0..state.params.len() {
+            let gten = &grads[p];
+            let params = &mut state.params[p].data;
+            let m = &mut state.m[p].data;
+            let v = &mut state.v[p].data;
+            for i in 0..params.len() {
+                let gv = gten[i] * scale;
+                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gv;
+                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gv * gv;
+                params[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + ADAM_EPS);
+            }
+        }
+        state.step = step;
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gru::{self, FloatParams};
+    use crate::util::prng::Pcg;
+
+    /// Random full-size parameter tensors + the matching [`FloatParams`].
+    fn random_params(seed: u64, scale: f32) -> (Vec<Tensor>, FloatParams) {
+        let mut rng = Pcg::new(seed);
+        let shapes: [(usize, usize); 5] = [(16, 192), (64, 192), (1, 192), (64, 12), (1, 12)];
+        let mut tensors = Vec::new();
+        for (r, c) in shapes {
+            let data: Vec<f32> =
+                (0..r * c).map(|_| (rng.range_f64(-1.0, 1.0) as f32) * scale).collect();
+            let shape = if r == 1 { vec![c] } else { vec![r, c] };
+            tensors.push(Tensor::new(shape, data));
+        }
+        let p = crate::train::float_params_from_tensors(&tensors);
+        (tensors, p)
+    }
+
+    fn smooth_feats(seed: u64, t: usize) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        let mut feats = vec![0f32; t * 16];
+        let mut cur = [0.3f32; 16];
+        for tt in 0..t {
+            for c in 0..16 {
+                cur[c] = (cur[c] + (rng.uniform() as f32 - 0.5) * 0.2).clamp(0.0, 0.99);
+                feats[tt * 16 + c] = cur[c];
+            }
+        }
+        feats
+    }
+
+    #[test]
+    fn forward_matches_f64_reference_across_thresholds() {
+        // mirror of the old PJRT artifact cross-check, now against the
+        // in-crate f64 oracle: the two implement the same math
+        let backend = NativeBackend::new();
+        let (tensors, p) = random_params(7, 0.15);
+        let feats = smooth_feats(8, 62);
+
+        for delta_th in [0.0f32, 0.1, 0.3] {
+            let out = backend
+                .forward(&tensors, &Tensor::new(vec![1, 62, 16], feats.clone()), delta_th)
+                .unwrap();
+            assert_eq!(out.logits.shape, vec![1, 12]);
+            let sp = out.sparsity.data[0];
+            assert!((0.0..=1.0).contains(&sp), "sparsity {sp}");
+
+            let mut st = gru::FloatState::new(16);
+            let mut acc = [0.0f64; 12];
+            let mut counted = 0;
+            for t in 0..62 {
+                let x: Vec<f64> = (0..16).map(|c| feats[t * 16 + c] as f64).collect();
+                let (hv, _) = gru::float_delta_step(&p, &mut st, &x, delta_th as f64);
+                if t >= WARMUP {
+                    for k in 0..12 {
+                        let mut l = p.b_fc[k] as f64;
+                        for j in 0..64 {
+                            l += hv[j] * p.w_fc[j][k] as f64;
+                        }
+                        acc[k] += l;
+                    }
+                    counted += 1;
+                }
+            }
+            for k in 0..12 {
+                acc[k] /= counted as f64;
+                let got = out.logits.data[k] as f64;
+                assert!(
+                    (got - acc[k]).abs() < 2e-3,
+                    "th={delta_th} logit[{k}]: native {got} vs f64 ref {}",
+                    acc[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_monotone_in_threshold() {
+        let backend = NativeBackend::new();
+        let (tensors, _) = random_params(9, 0.1);
+        let mut rng = Pcg::new(10);
+        let feats: Vec<f32> = (0..62 * 16).map(|_| rng.uniform() as f32 * 0.8).collect();
+        let mut prev = -1.0f32;
+        for th in [0.0f32, 0.05, 0.1, 0.2, 0.4] {
+            let out = backend
+                .forward(&tensors, &Tensor::new(vec![1, 62, 16], feats.clone()), th)
+                .unwrap();
+            let sp = out.sparsity.data[0];
+            assert!(sp >= prev - 1e-6, "sparsity not monotone: {sp} after {prev} at th={th}");
+            prev = sp;
+        }
+        assert!(prev > 0.5, "high threshold should be mostly sparse, got {prev}");
+    }
+
+    #[test]
+    fn batched_forward_matches_per_utterance() {
+        let backend = NativeBackend::new();
+        let (tensors, _) = random_params(11, 0.12);
+        let mut rng = Pcg::new(12);
+        let feats_b: Vec<f32> = (0..3 * 62 * 16).map(|_| rng.uniform() as f32 * 0.7).collect();
+        let out_b = backend
+            .forward(&tensors, &Tensor::new(vec![3, 62, 16], feats_b.clone()), 0.1)
+            .unwrap();
+        for b in 0..3 {
+            let single = feats_b[b * 62 * 16..(b + 1) * 62 * 16].to_vec();
+            let out_s =
+                backend.forward(&tensors, &Tensor::new(vec![1, 62, 16], single), 0.1).unwrap();
+            for k in 0..12 {
+                assert_eq!(out_b.logits.data[b * 12 + k], out_s.logits.data[k], "b={b} k={k}");
+            }
+            assert_eq!(out_b.sparsity.data[b], out_s.sparsity.data[0]);
+        }
+    }
+
+    /// Tiny-model helpers for the finite-difference gradient check.
+    fn tiny_params(seed: u64) -> Vec<Tensor> {
+        let mut rng = Pcg::new(seed);
+        let (c, h, k) = (3usize, 4usize, 2usize);
+        let shapes: [Vec<usize>; 5] =
+            [vec![c, 3 * h], vec![h, 3 * h], vec![3 * h], vec![h, k], vec![k]];
+        shapes
+            .into_iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                let data: Vec<f32> =
+                    (0..n).map(|_| rng.range_f64(-0.4, 0.4) as f32).collect();
+                Tensor::new(s, data)
+            })
+            .collect()
+    }
+
+    fn tiny_batch(seed: u64) -> (Tensor, IntTensor) {
+        let mut rng = Pcg::new(seed);
+        let (bsz, t, c) = (2usize, 6usize, 3usize);
+        let feats: Vec<f32> =
+            (0..bsz * t * c).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+        let labels: Vec<i32> = (0..bsz).map(|_| rng.below(2) as i32).collect();
+        (Tensor::new(vec![bsz, t, c], feats), IntTensor::new(vec![bsz], labels))
+    }
+
+    /// Analytic gradient of one coordinate, extracted by running a single
+    /// Adam step from zero moments at a known learning rate: after one step
+    /// from m=v=0, the update direction is sign(g), so instead we recover
+    /// the raw gradient by differencing the Adam moment: m_1 = (1-β1)·g.
+    fn analytic_grads(params: &[Tensor], feats: &Tensor, labels: &IntTensor, th: f32)
+        -> Vec<Vec<f32>> {
+        let backend = NativeBackend::new();
+        let mut state = TrainState {
+            params: params.to_vec(),
+            m: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            v: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            step: 0.0,
+        };
+        backend.train_step(&mut state, feats, labels, th, 0.0).unwrap();
+        // lr = 0 leaves params untouched; m_1 = (1-β1) · g_clipped. The tiny
+        // model's gradient norm is far below GRAD_CLIP, so clipping is a
+        // no-op and g = m_1 / (1-β1).
+        state
+            .m
+            .iter()
+            .map(|t| t.data.iter().map(|&v| v / (1.0 - ADAM_B1)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_dense() {
+        // Θ = 0: every lane fires, the STE is exact, the loss is smooth —
+        // finite differences must agree with the analytic BPTT gradients.
+        // Only coordinates with |g| > 5e-3 are compared: below that, f32
+        // central-difference noise (loss ulp / 2ε) dominates the signal.
+        let params = tiny_params(3);
+        let (feats, labels) = tiny_batch(4);
+        let grads = analytic_grads(&params, &feats, &labels, 0.0);
+        let eps = 5e-3f32;
+        let mut checked = 0;
+        for p in 0..5 {
+            for i in 0..params[p].data.len() {
+                let ana = grads[p][i];
+                if ana.abs() < 5e-3 {
+                    continue;
+                }
+                let mut plus = params.clone();
+                plus[p].data[i] += eps;
+                let mut minus = params.clone();
+                minus[p].data[i] -= eps;
+                let lp = batch_loss(&plus, &feats, &labels, 0.0).unwrap();
+                let lm = batch_loss(&minus, &feats, &labels, 0.0).unwrap();
+                let num = (lp - lm) / (2.0 * eps);
+                let denom = ana.abs().max(num.abs());
+                assert!(
+                    (num - ana).abs() / denom < 0.1,
+                    "param {p}[{i}]: numeric {num} vs analytic {ana}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 10, "only {checked} coordinates checked");
+    }
+
+    #[test]
+    fn readout_gradients_match_finite_differences_thresholded() {
+        // Θ > 0: the loss is piecewise smooth in the recurrent weights, but
+        // exactly smooth in the readout (w_fc/b_fc never influence firing).
+        let params = tiny_params(13);
+        let (feats, labels) = tiny_batch(14);
+        let th = 0.15f32;
+        let grads = analytic_grads(&params, &feats, &labels, th);
+        let eps = 5e-3f32;
+        let mut checked = 0;
+        for p in [3usize, 4] {
+            for i in 0..params[p].data.len() {
+                let ana = grads[p][i];
+                if ana.abs() < 2e-3 {
+                    continue; // below f32 finite-difference noise
+                }
+                let mut plus = params.clone();
+                plus[p].data[i] += eps;
+                let mut minus = params.clone();
+                minus[p].data[i] -= eps;
+                let lp = batch_loss(&plus, &feats, &labels, th).unwrap();
+                let lm = batch_loss(&minus, &feats, &labels, th).unwrap();
+                let num = (lp - lm) / (2.0 * eps);
+                let denom = ana.abs().max(num.abs());
+                assert!(
+                    (num - ana).abs() / denom < 0.1,
+                    "param {p}[{i}]: numeric {num} vs analytic {ana}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 4, "only {checked} readout coordinates checked");
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_repeated_batch() {
+        let backend = NativeBackend::new();
+        let params = tiny_params(21);
+        let (feats, labels) = tiny_batch(22);
+        let mut state = TrainState {
+            params,
+            m: vec![
+                Tensor::zeros(&[3, 12]),
+                Tensor::zeros(&[4, 12]),
+                Tensor::zeros(&[12]),
+                Tensor::zeros(&[4, 2]),
+                Tensor::zeros(&[2]),
+            ],
+            v: vec![
+                Tensor::zeros(&[3, 12]),
+                Tensor::zeros(&[4, 12]),
+                Tensor::zeros(&[12]),
+                Tensor::zeros(&[4, 2]),
+                Tensor::zeros(&[2]),
+            ],
+            step: 0.0,
+        };
+        let mut losses = Vec::new();
+        for _ in 0..60 {
+            let loss = backend.train_step(&mut state, &feats, &labels, 0.0, 3e-2).unwrap();
+            assert!(loss.is_finite());
+            losses.push(loss);
+        }
+        assert_eq!(state.step, 60.0);
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.5),
+            "no learning on a repeated batch: first {} last {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn train_step_is_deterministic() {
+        let backend = NativeBackend::new();
+        let run = || {
+            let params = tiny_params(31);
+            let (feats, labels) = tiny_batch(32);
+            let mut state = TrainState {
+                m: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+                v: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+                params,
+                step: 0.0,
+            };
+            let mut out = Vec::new();
+            for _ in 0..3 {
+                out.push(backend.train_step(&mut state, &feats, &labels, 0.1, 1e-3).unwrap());
+            }
+            (out, state.params[0].data.clone())
+        };
+        let (l1, p1) = run();
+        let (l2, p2) = run();
+        assert_eq!(l1, l2);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let backend = NativeBackend::new();
+        let params = tiny_params(41);
+        // wrong feature width
+        let feats = Tensor::new(vec![1, 4, 5], vec![0.0; 20]);
+        assert!(backend.forward(&params, &feats, 0.0).is_err());
+        // wrong parameter count
+        let feats = Tensor::new(vec![1, 4, 3], vec![0.0; 12]);
+        assert!(backend.forward(&params[..4], &feats, 0.0).is_err());
+    }
+}

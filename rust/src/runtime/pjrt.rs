@@ -1,0 +1,229 @@
+//! PJRT execution path (feature `pjrt`): loads the AOT-compiled JAX/Pallas
+//! artifacts and executes them from Rust. Python never runs on the request
+//! path.
+//!
+//! Interchange format is **HLO text** (see `python/compile/aot.py`): jax
+//! >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly. All artifacts are lowered with `return_tuple=True`,
+//! so every execution returns a tuple literal which [`Executable::run`]
+//! decomposes.
+//!
+//! The [`Runtime`] owns one PJRT CPU client; [`Executable`]s are compiled
+//! once at startup (`make artifacts` must have produced `artifacts/`).
+//! [`PjrtBackend`] adapts the two model entry points (`kws_fwd_b16`,
+//! `train_step`) to the crate-wide [`Backend`] trait.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use super::{Backend, ForwardOut, IntTensor, Manifest, Tensor, TrainState, Value};
+
+/// Number of parameter tensors in the canonical order (w_x, w_h, b, w_fc, b_fc).
+const N_PARAMS: usize = 5;
+
+fn tensor_to_literal(t: &Tensor) -> crate::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // scalar: reshape to rank-0
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+fn tensor_from_literal(lit: &xla::Literal) -> crate::Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    // convert through f32 regardless of source dtype
+    let lit32 = lit.convert(xla::PrimitiveType::F32)?;
+    Ok(Tensor { shape: dims, data: lit32.to_vec::<f32>()? })
+}
+
+fn int_tensor_to_literal(t: &IntTensor) -> crate::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+fn value_to_literal(v: &Value) -> crate::Result<xla::Literal> {
+    match v {
+        Value::F32(t) => tensor_to_literal(t),
+        Value::I32(t) => int_tensor_to_literal(t),
+    }
+}
+
+/// A compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with positional inputs; returns the decomposed output tuple
+    /// as f32 tensors.
+    pub fn run(&self, inputs: &[Value]) -> crate::Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(value_to_literal).collect::<crate::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts.iter().map(tensor_from_literal).collect()
+    }
+}
+
+/// The PJRT runtime: one CPU client + the compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> crate::Result<Self> {
+        let artifacts_dir = artifacts_dir.into();
+        if !artifacts_dir.join("manifest.json").exists() {
+            bail!(
+                "artifacts not found in {} — run `make artifacts` first",
+                artifacts_dir.display()
+            );
+        }
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts_dir, manifest })
+    }
+
+    /// Default artifacts location: `$CARGO_MANIFEST_DIR/artifacts` when run
+    /// in-tree, else `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        let local = PathBuf::from("artifacts");
+        if local.join("manifest.json").exists() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, name: &str) -> crate::Result<Executable> {
+        let path = self.artifacts_dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// [`Backend`] adapter over the PJRT runtime: the batched forward and the
+/// flat-ABI `train_step` artifact (see `python/compile/model.py` for the
+/// 20-argument / 17-result contract).
+pub struct PjrtBackend {
+    rt: Runtime,
+    fwd: Executable,
+    train: Executable,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> crate::Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let fwd = rt.load("kws_fwd_b16.hlo.txt")?;
+        let train = rt.load("train_step.hlo.txt")?;
+        Ok(Self { rt, fwd, train })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.rt.platform())
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    fn forward(&self, params: &[Tensor], feats: &Tensor, delta_th: f32)
+        -> crate::Result<ForwardOut> {
+        let mut inputs: Vec<Value> = params.iter().map(|t| Value::from(t.clone())).collect();
+        inputs.push(feats.clone().into());
+        inputs.push(Tensor::scalar(delta_th).into());
+        let mut out = self.fwd.run(&inputs)?;
+        if out.len() != 2 {
+            bail!("kws_fwd_b16 returned {} tensors, expected 2", out.len());
+        }
+        let sparsity = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        Ok(ForwardOut { logits, sparsity })
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        feats: &Tensor,
+        labels: &IntTensor,
+        delta_th: f32,
+        lr: f32,
+    ) -> crate::Result<f32> {
+        let mut inputs: Vec<Value> = Vec::with_capacity(20);
+        for t in &state.params {
+            inputs.push(t.clone().into());
+        }
+        for t in &state.m {
+            inputs.push(t.clone().into());
+        }
+        for t in &state.v {
+            inputs.push(t.clone().into());
+        }
+        inputs.push(Tensor::scalar(state.step).into());
+        inputs.push(feats.clone().into());
+        inputs.push(labels.clone().into());
+        inputs.push(Tensor::scalar(delta_th).into());
+        inputs.push(Tensor::scalar(lr).into());
+
+        let out = self.train.run(&inputs)?;
+        if out.len() != 3 * N_PARAMS + 2 {
+            bail!("train_step returned {} tensors, expected {}", out.len(), 3 * N_PARAMS + 2);
+        }
+        state.params = out[..N_PARAMS].to_vec();
+        state.m = out[N_PARAMS..2 * N_PARAMS].to_vec();
+        state.v = out[2 * N_PARAMS..3 * N_PARAMS].to_vec();
+        state.step = out[3 * N_PARAMS].data[0];
+        Ok(out[3 * N_PARAMS + 1].data[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_loads_if_present() {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.frames, 62);
+        assert_eq!(m.channels, 16);
+        assert_eq!(m.hidden, 64);
+        assert_eq!(m.classes, 12);
+        assert_eq!(m.param_order.len(), 5);
+        assert_eq!(m.param_shapes[0].1, vec![16, 192]);
+    }
+
+    // Full execute-path tests live in rust/tests/runtime_integration.rs —
+    // they need the PJRT client, which is slow to spin up per unit test.
+}

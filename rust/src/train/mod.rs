@@ -1,16 +1,19 @@
-//! Training driver: runs the AOT-compiled `train_step` through PJRT.
+//! Training driver: runs the delta-aware `train_step` through a pluggable
+//! execution [`Backend`].
 //!
 //! The whole learning loop is Rust: synthetic utterances are rendered by
 //! the audio substrate, featurised by the *fixed-point FEx twin* (so the
 //! network trains on exactly the features the chip computes), batched into
-//! tensors, and pushed through the `train_step.hlo.txt` artifact (delta-
-//! aware forward with straight-through thresholding + Adam, lowered once
-//! from JAX — see python/compile/model.py). The resulting float weights are
-//! quantised to the chip's int8/Q8.8 formats and serialised as the SRAM
-//! weight image the accelerator twin loads.
+//! tensors, and pushed through the backend's training step (delta-aware
+//! forward with straight-through thresholding + Adam). The default build
+//! uses the pure-Rust [`crate::runtime::NativeBackend`]; with the `pjrt`
+//! feature and AOT artifacts present, the identical step executes as the
+//! lowered `train_step.hlo.txt` (see python/compile/model.py). The
+//! resulting float weights are quantised to the chip's int8/Q8.8 formats
+//! and serialised as the SRAM weight image the accelerator twin loads.
 //!
 //! ABI (python/compile/model.train_step_flat):
-//!   args:    5 params, 5 adam-m, 5 adam-v, step, feats [B,T,C], labels [B] s32, delta_th
+//!   args:    5 params, 5 adam-m, 5 adam-v, step, feats [B,T,C], labels [B] s32, delta_th, lr
 //!   results: 5 params, 5 adam-m, 5 adam-v, step, loss
 
 use std::io::{Read, Write};
@@ -20,8 +23,9 @@ use anyhow::{bail, Context};
 
 use crate::accel::gru::{self, FloatParams, QuantParams};
 use crate::dataset::{Dataset, Split};
-use crate::runtime::{Executable, IntTensor, Runtime, Tensor, Value};
-use crate::util::prng::Pcg;
+use crate::runtime::{Backend, IntTensor, Manifest, Tensor};
+
+pub use crate::runtime::TrainState;
 
 /// Number of parameter tensors in the canonical order (w_x, w_h, b, w_fc, b_fc).
 pub const N_PARAMS: usize = 5;
@@ -31,41 +35,6 @@ pub const BASE_LR: f32 = 3e-3;
 /// Fine-tuning rate once the straight-through Θ is active.
 pub const FINETUNE_LR: f32 = 3e-4;
 
-/// Float training state (host-side mirrors of the device tensors).
-#[derive(Debug, Clone)]
-pub struct TrainState {
-    pub params: Vec<Tensor>,
-    pub m: Vec<Tensor>,
-    pub v: Vec<Tensor>,
-    pub step: f32,
-}
-
-impl TrainState {
-    /// Glorot-uniform init matching `python/compile/model.init_params`
-    /// (update-gate bias +1).
-    pub fn init(rt: &Runtime, seed: u64) -> Self {
-        let mut rng = Pcg::new(seed);
-        let mut params = Vec::with_capacity(N_PARAMS);
-        for (name, shape) in &rt.manifest.param_shapes {
-            let n: usize = shape.iter().product();
-            let data: Vec<f32> = if name == "b" {
-                // zero biases, +1 on the update-gate block
-                let h = rt.manifest.hidden;
-                (0..n).map(|i| if i >= h && i < 2 * h { 1.0 } else { 0.0 }).collect()
-            } else if name.starts_with('b') {
-                vec![0.0; n]
-            } else {
-                let (fan_in, fan_out) = (shape[0] as f64, shape[1] as f64);
-                let lim = (6.0 / (fan_in + fan_out)).sqrt();
-                (0..n).map(|_| rng.range_f64(-lim, lim) as f32).collect()
-            };
-            params.push(Tensor::new(shape.clone(), data));
-        }
-        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
-        Self { params, m: zeros.clone(), v: zeros, step: 0.0 }
-    }
-}
-
 /// Per-step record for the loss curve (EXPERIMENTS.md end-to-end run).
 #[derive(Debug, Clone, Copy)]
 pub struct StepLog {
@@ -73,36 +42,53 @@ pub struct StepLog {
     pub loss: f32,
 }
 
-/// The trainer.
+/// The trainer: dataset + featurisation + the backend's train/eval steps.
 pub struct Trainer {
     pub dataset: Dataset,
     pub batch: usize,
     pub delta_th: f32,
-    train_exe: Executable,
-    fwd_exe: Executable,
+    backend: Box<dyn Backend>,
     frames: usize,
     channels: usize,
     pub log: Vec<StepLog>,
 }
 
 impl Trainer {
-    pub fn new(rt: &Runtime, dataset: Dataset, batch: usize, delta_th: f32) -> crate::Result<Self> {
-        if batch != rt.manifest.batch {
-            bail!("batch {} != artifact batch {}", batch, rt.manifest.batch);
+    pub fn new(
+        backend: Box<dyn Backend>,
+        dataset: Dataset,
+        batch: usize,
+        delta_th: f32,
+    ) -> crate::Result<Self> {
+        if !backend.supports_batch(batch) {
+            bail!(
+                "batch {} unsupported by backend {} (nominal batch {})",
+                batch,
+                backend.name(),
+                backend.manifest().batch
+            );
         }
-        Ok(Self {
-            dataset,
-            batch,
-            delta_th,
-            train_exe: rt.load("train_step.hlo.txt")?,
-            fwd_exe: rt.load("kws_fwd_b16.hlo.txt")?,
-            frames: rt.manifest.frames,
-            channels: rt.manifest.channels,
-            log: Vec::new(),
-        })
+        let frames = backend.manifest().frames;
+        let channels = backend.manifest().channels;
+        Ok(Self { dataset, batch, delta_th, backend, frames, channels, log: Vec::new() })
     }
 
-    /// Assemble a feature/label batch as device tensors. Features are the
+    /// The backend's model geometry.
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
+    /// Backend identity (for logging).
+    pub fn backend_name(&self) -> String {
+        self.backend.name()
+    }
+
+    /// Fresh training state seeded for this backend's geometry.
+    pub fn init_state(&self, seed: u64) -> TrainState {
+        TrainState::init(self.backend.manifest(), seed)
+    }
+
+    /// Assemble a feature/label batch as host tensors. Features are the
     /// fixed-point FEx twin's Q0.8 outputs rescaled to [0, 1) floats.
     pub fn batch_tensors(&self, split: Split, start: usize) -> (Tensor, IntTensor) {
         let seqs = self.dataset.feature_batch(split, start, self.batch);
@@ -132,31 +118,7 @@ impl Trainer {
         lr: f32,
     ) -> crate::Result<f32> {
         let (feats, labels) = self.batch_tensors(Split::Train, batch_index * self.batch);
-        let mut inputs: Vec<Value> = Vec::with_capacity(20);
-        for t in &state.params {
-            inputs.push(t.clone().into());
-        }
-        for t in &state.m {
-            inputs.push(t.clone().into());
-        }
-        for t in &state.v {
-            inputs.push(t.clone().into());
-        }
-        inputs.push(Tensor::scalar(state.step).into());
-        inputs.push(feats.into());
-        inputs.push(labels.into());
-        inputs.push(Tensor::scalar(delta_th).into());
-        inputs.push(Tensor::scalar(lr).into());
-
-        let out = self.train_exe.run(&inputs)?;
-        if out.len() != 3 * N_PARAMS + 2 {
-            bail!("train_step returned {} tensors, expected {}", out.len(), 3 * N_PARAMS + 2);
-        }
-        state.params = out[..N_PARAMS].to_vec();
-        state.m = out[N_PARAMS..2 * N_PARAMS].to_vec();
-        state.v = out[2 * N_PARAMS..3 * N_PARAMS].to_vec();
-        state.step = out[3 * N_PARAMS].data[0];
-        let loss = out[3 * N_PARAMS + 1].data[0];
+        let loss = self.backend.train_step(state, &feats, &labels, delta_th, lr)?;
         self.log.push(StepLog { step: state.step as usize, loss });
         Ok(loss)
     }
@@ -211,7 +173,7 @@ impl Trainer {
         Ok(())
     }
 
-    /// Float-model accuracy via the batched forward artifact at `delta_th`.
+    /// Float-model accuracy via the backend's batched forward at `delta_th`.
     pub fn evaluate(
         &self,
         state: &TrainState,
@@ -223,28 +185,23 @@ impl Trainer {
         let mut total = 0usize;
         let mut sparsity_sum = 0.0f64;
         let mut start = 0usize;
+        let k = self.backend.manifest().classes;
         while total < utterances {
             let (feats, labels) = self.batch_tensors(split, start);
             start += self.batch;
-            let mut inputs: Vec<Value> =
-                state.params.iter().map(|t| Value::from(t.clone())).collect();
-            inputs.push(feats.into());
-            inputs.push(Tensor::scalar(delta_th).into());
-            let out = self.fwd_exe.run(&inputs)?;
-            let logits = &out[0]; // [B, 12]
-            let sparsity = &out[1]; // [B]
+            let out = self.backend.forward(&state.params, &feats, delta_th)?;
             for b in 0..self.batch {
                 if total >= utterances {
                     break;
                 }
-                let row = &logits.data[b * 12..(b + 1) * 12];
-                let pred = (0..12)
+                let row = &out.logits.data[b * k..(b + 1) * k];
+                let pred = (0..k)
                     .max_by(|&i, &j| row[i].partial_cmp(&row[j]).unwrap())
                     .unwrap();
                 if pred as i32 == labels.data[b] {
                     correct += 1;
                 }
-                sparsity_sum += sparsity.data[b] as f64;
+                sparsity_sum += out.sparsity.data[b] as f64;
                 total += 1;
             }
         }
@@ -367,5 +324,13 @@ mod tests {
         std::fs::remove_file(&path).ok();
     }
 
-    // PJRT-backed Trainer tests live in rust/tests/train_integration.rs.
+    #[test]
+    fn trainer_rejects_unsupported_batch() {
+        // nominal-batch backends gate on supports_batch
+        let backend = crate::runtime::backend_for("artifacts").unwrap();
+        let ds = Dataset::new(1);
+        assert!(Trainer::new(backend, ds, 0, 0.1).is_err());
+    }
+
+    // Backend-driven Trainer tests live in rust/tests/train_integration.rs.
 }

@@ -44,13 +44,23 @@ pub struct Bench {
 
 impl Bench {
     pub fn new(name: &str) -> Self {
-        // fast mode for CI smoke: DELTAKWS_BENCH_FAST=1
-        let fast = std::env::var("DELTAKWS_BENCH_FAST").is_ok();
+        // DELTAKWS_BENCH_SMOKE=1: minimal warmup/sample budget so every
+        // bench binary completes in seconds (CI keeps them compiling and
+        // honest); DELTAKWS_BENCH_FAST=1: the older, slightly larger budget.
+        let smoke = std::env::var("DELTAKWS_BENCH_SMOKE").is_ok();
+        let fast = smoke || std::env::var("DELTAKWS_BENCH_FAST").is_ok();
+        let (warmup_ms, sample_ms, samples) = if smoke {
+            (2, 3, 3)
+        } else if fast {
+            (20, 30, 5)
+        } else {
+            (300, 200, 15)
+        };
         Self {
             name: name.to_string(),
-            warmup: Duration::from_millis(if fast { 20 } else { 300 }),
-            sample_time: Duration::from_millis(if fast { 30 } else { 200 }),
-            samples: if fast { 5 } else { 15 },
+            warmup: Duration::from_millis(warmup_ms),
+            sample_time: Duration::from_millis(sample_ms),
+            samples,
             results: Vec::new(),
         }
     }

@@ -1,0 +1,190 @@
+//! Stress: N producer threads × M streams through one `Coordinator`.
+//!
+//! Asserts the serving contract under concurrency and injected failures:
+//! request conservation (every accepted id completes exactly once, and
+//! accepted + rejected == attempts), per-stream ordering on the pinned
+//! path, and backpressure (bounded rejections, no loss) under a stalled
+//! worker. Audio is pre-rendered so the submission phase itself is tight.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::chip::ChipConfig;
+use deltakws::coordinator::{Coordinator, Request};
+use deltakws::util::prng::Pcg;
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+/// Short (sub-second) utterance: enough frames to exercise the chip while
+/// keeping the stress run fast. The chip handles any length.
+fn short_request(stream: u64, seed: u64) -> Request {
+    let mut rng = Pcg::new(seed);
+    let label = (seed % 12) as usize;
+    let audio = deltakws::audio::synth_utterance(label, &mut rng);
+    Request {
+        id: 0,
+        stream,
+        audio12: deltakws::audio::quantize_12b(&audio[..1024]),
+        label: Some(label),
+    }
+}
+
+#[test]
+fn stress_concurrent_producers_conserve_requests() {
+    const THREADS: usize = 4;
+    const STREAMS_PER_THREAD: usize = 2;
+    const REQS_PER_STREAM: usize = 4;
+    const TOTAL: usize = THREADS * STREAMS_PER_THREAD * REQS_PER_STREAM;
+
+    let coord = Coordinator::new(rng_quant(1), ChipConfig::design_point(), 3, 4);
+    let attempts = AtomicUsize::new(0);
+    let accepted = AtomicUsize::new(0);
+
+    // pre-render audio outside the timed/concurrent section
+    let mut work: Vec<Vec<Request>> = Vec::new();
+    for t in 0..THREADS {
+        let mut reqs = Vec::new();
+        for s in 0..STREAMS_PER_THREAD {
+            let stream = (t * STREAMS_PER_THREAD + s) as u64;
+            for r in 0..REQS_PER_STREAM {
+                reqs.push(short_request(stream, (stream * 100 + r as u64) + 1));
+            }
+        }
+        work.push(reqs);
+    }
+
+    std::thread::scope(|scope| {
+        for reqs in work {
+            let client = coord.client();
+            let attempts = &attempts;
+            let accepted = &accepted;
+            scope.spawn(move || {
+                for mut req in reqs {
+                    // retry on backpressure, bail if the pool disappears
+                    loop {
+                        attempts.fetch_add(1, Ordering::Relaxed);
+                        match client.submit(req) {
+                            Ok(_) => {
+                                accepted.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(r) => {
+                                assert!(!client.is_closed(), "pool died mid-run");
+                                req = r;
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let accepted = accepted.load(Ordering::Relaxed);
+    assert_eq!(accepted, TOTAL, "every request must eventually be accepted");
+    let responses = coord.collect(accepted, Duration::from_secs(300));
+    assert_eq!(responses.len(), accepted, "responses lost");
+
+    // conservation: accepted ids are unique and complete exactly once
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), accepted, "duplicate or missing response ids");
+
+    // attempts == accepted + rejected (each failed submit counts once)
+    let stats = coord.stats();
+    assert_eq!(stats.completed, accepted as u64);
+    assert_eq!(
+        attempts.load(Ordering::Relaxed) as u64,
+        accepted as u64 + stats.rejected,
+        "attempt accounting broken: {} attempts, {} accepted, {} rejected",
+        attempts.load(Ordering::Relaxed),
+        accepted,
+        stats.rejected
+    );
+
+    // per-stream ordering: a stream served entirely by one worker went
+    // through a single FIFO, so its ids must arrive in submission order
+    // (the spill path intentionally trades ordering for availability)
+    let mut by_stream: HashMap<u64, Vec<(u64, usize)>> = HashMap::new();
+    for r in &responses {
+        by_stream.entry(r.stream).or_default().push((r.id, r.worker));
+    }
+    let mut pinned_streams = 0;
+    for (stream, seq) in &by_stream {
+        let workers: std::collections::HashSet<usize> =
+            seq.iter().map(|&(_, w)| w).collect();
+        if workers.len() == 1 {
+            pinned_streams += 1;
+            let ordered = seq.windows(2).all(|w| w[0].0 < w[1].0);
+            assert!(ordered, "stream {stream} reordered on its pinned worker: {seq:?}");
+        }
+    }
+    assert!(pinned_streams >= 1, "no stream stayed pinned — ordering never exercised");
+}
+
+#[test]
+fn stress_backpressure_under_stalled_worker() {
+    // one of two workers stalls mid-run: the router must spill, then shed
+    // with clean rejections once both queues are full — and complete every
+    // accepted request after recovery
+    let coord = Coordinator::new(rng_quant(2), ChipConfig::design_point(), 2, 2);
+    coord.set_stalled(0, true);
+
+    let client = coord.client();
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    for i in 0..12 {
+        match client.submit(short_request(0, 50 + i)) {
+            Ok(_) => accepted += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "saturating a stalled pool must reject");
+    assert!(accepted >= 2, "spill around the stalled worker is dead");
+    assert_eq!(coord.stats().rejected, rejected);
+
+    coord.set_stalled(0, false);
+    let responses = coord.collect(accepted as usize, Duration::from_secs(300));
+    assert_eq!(responses.len(), accepted as usize, "accepted requests lost across a stall");
+    let stats = coord.stats();
+    assert_eq!(stats.completed, accepted);
+    assert_eq!(stats.completed + stats.rejected, 12);
+}
+
+#[test]
+fn stress_many_streams_land_on_all_workers() {
+    let coord = Coordinator::new(rng_quant(3), ChipConfig::design_point(), 3, 8);
+    let n = 9usize;
+    std::thread::scope(|scope| {
+        for i in 0..n {
+            let client = coord.client();
+            scope.spawn(move || {
+                let mut req = short_request(i as u64, 200 + i as u64);
+                loop {
+                    match client.submit(req) {
+                        Ok(_) => break,
+                        Err(r) => {
+                            req = r;
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let responses = coord.collect(n, Duration::from_secs(300));
+    assert_eq!(responses.len(), n);
+    let workers: std::collections::HashSet<usize> =
+        responses.iter().map(|r| r.worker).collect();
+    assert_eq!(workers.len(), 3, "9 distinct streams must cover all 3 workers");
+}

@@ -1,33 +1,33 @@
-//! Integration: the PJRT training path — train_step executes, the loss
-//! decreases, and the export chain (float -> int8 image -> accelerator)
-//! holds together. Skips gracefully without artifacts.
+//! Integration: the training path on the default execution backend — the
+//! train step executes, the loss decreases, runs are deterministic under
+//! pinned seeds, and the export chain (float -> int8 image -> accelerator)
+//! holds together. No artifacts or PJRT required.
 
 use deltakws::dataset::{Dataset, Split};
 use deltakws::fex::FexConfig;
-use deltakws::runtime::Runtime;
-use deltakws::train::{float_params_from_tensors, TrainState, Trainer};
+use deltakws::runtime::{Backend, NativeBackend};
+use deltakws::train::{float_params_from_tensors, Trainer};
 
-fn runtime() -> Option<Runtime> {
-    let dir = Runtime::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::new(dir).expect("runtime"))
+/// These suites pin down the *native* backend's training behaviour, so they
+/// construct it directly — running them under `--features pjrt` with
+/// artifacts present must not silently switch the backend under test
+/// (the PJRT path has its own artifact-gated suite).
+fn trainer(seed: u64, batch: usize) -> Trainer {
+    let backend = Box::new(NativeBackend::new());
+    let ds = Dataset::with_fex(seed, FexConfig::all_channels(deltakws::fex::biquad::Arch::MixedShift));
+    Trainer::new(backend, ds, batch, 0.1).expect("trainer")
 }
 
 #[test]
 fn train_step_reduces_loss() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::with_fex(1, FexConfig::all_channels(deltakws::fex::biquad::Arch::MixedShift));
-    let mut trainer = Trainer::new(&rt, ds, 16, 0.1).expect("trainer");
-    let mut state = TrainState::init(&rt, 1);
+    let mut trainer = trainer(1, 8);
+    let mut state = trainer.init_state(1);
 
     // repeat the SAME batch in the dense (Θ=0) curriculum phase: loss must
     // fall fast if gradients flow (STE-thresholded training from scratch
     // stalls by design — that's why fit() uses the curriculum)
     let mut losses = Vec::new();
-    for _ in 0..8 {
+    for _ in 0..6 {
         let loss = trainer
             .step_at(&mut state, 0, 0.0, deltakws::train::BASE_LR)
             .expect("step");
@@ -38,21 +38,41 @@ fn train_step_reduces_loss() {
         losses.last().unwrap() < &(losses[0] * 0.95),
         "no learning on a repeated batch: {losses:?}"
     );
-    assert_eq!(state.step, 8.0);
+    assert_eq!(state.step, 6.0);
+    assert_eq!(trainer.log.len(), 6);
+}
+
+#[test]
+fn training_is_deterministic_under_pinned_seeds() {
+    // same seed -> bit-identical losses and parameters (Pcg-seeded data +
+    // a deterministic backend step); different seed -> different trajectory
+    let run = |seed: u64| {
+        let mut trainer = trainer(seed, 8);
+        let mut state = trainer.init_state(seed);
+        let mut losses = Vec::new();
+        for s in 0..3 {
+            losses.push(trainer.step_at(&mut state, s, 0.0, 1e-3).expect("step"));
+        }
+        (losses, state.params[0].data.clone())
+    };
+    let (l1, p1) = run(5);
+    let (l2, p2) = run(5);
+    assert_eq!(l1, l2, "loss trajectory not deterministic");
+    assert_eq!(p1, p2, "parameters not deterministic");
+    let (l3, _) = run(6);
+    assert_ne!(l1, l3, "different seeds must differ");
 }
 
 #[test]
 fn evaluate_and_export_chain() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::with_fex(2, FexConfig::all_channels(deltakws::fex::biquad::Arch::MixedShift));
-    let mut trainer = Trainer::new(&rt, ds, 16, 0.1).expect("trainer");
-    let mut state = TrainState::init(&rt, 2);
-    for s in 0..4 {
+    let mut trainer = trainer(2, 8);
+    let mut state = trainer.init_state(2);
+    for s in 0..3 {
         trainer.step(&mut state, s).expect("step");
     }
 
     // float eval runs and is bounded
-    let (acc, sp) = trainer.evaluate(&state, Split::Test, 32, 0.1).expect("eval");
+    let (acc, sp) = trainer.evaluate(&state, Split::Test, 16, 0.1).expect("eval");
     assert!((0.0..=1.0).contains(&acc));
     assert!((0.0..=1.0).contains(&sp));
 
@@ -75,37 +95,53 @@ fn evaluate_and_export_chain() {
 fn quantized_chip_agrees_with_float_model_on_trained_weights() {
     // After a few steps, the chip twin and the float forward should agree
     // on most predictions (quantisation is mild for small weights).
-    let Some(rt) = runtime() else { return };
+    let backend = Box::new(NativeBackend::new());
     let ds = Dataset::with_fex(3, FexConfig::design_point());
-    let mut trainer = Trainer::new(&rt, ds, 16, 0.1).expect("trainer");
-    let mut state = TrainState::init(&rt, 3);
-    for s in 0..6 {
+    let mut trainer = Trainer::new(backend, ds, 8, 0.1).expect("trainer");
+    let mut state = trainer.init_state(3);
+    for s in 0..4 {
         trainer.step(&mut state, s).expect("step");
     }
     let q = trainer.export(&state);
-    let fwd = rt.load("kws_fwd_b16.hlo.txt").expect("load fwd");
 
     let (feats, _labels) = trainer.batch_tensors(Split::Test, 64);
-    let mut inputs: Vec<deltakws::runtime::Value> =
-        state.params.iter().map(|t| deltakws::runtime::Value::from(t.clone())).collect();
-    inputs.push(feats.clone().into());
-    inputs.push(deltakws::runtime::Tensor::scalar(0.2f32).into());
-    let out = fwd.run(&inputs).expect("run");
+    let backend2 = NativeBackend::new();
+    let out = backend2.forward(&state.params, &feats, 0.0).expect("forward");
 
+    // dense on both sides (Θ=0): quantisation is the only gap
     let mut chip = deltakws::accel::DeltaRnnAccel::new(
         q,
-        deltakws::accel::AccelConfig::design_point().with_delta_th(51),
+        deltakws::accel::AccelConfig::design_point().with_delta_th(0),
         deltakws::energy::SramKind::NearVth,
     );
-    let seqs = trainer.dataset.feature_batch(Split::Test, 64, 16);
+    let seqs = trainer.dataset.feature_batch(Split::Test, 64, 8);
     let mut agree = 0;
     for (b, seq) in seqs.iter().enumerate() {
-        let row = &out[0].data[b * 12..(b + 1) * 12];
+        let row = &out.logits.data[b * 12..(b + 1) * 12];
         let float_pred = (0..12).max_by(|&i, &j| row[i].partial_cmp(&row[j]).unwrap()).unwrap();
         let (chip_pred, _) = chip.classify(&seq.feats, 4);
         if chip_pred == float_pred {
             agree += 1;
         }
     }
-    assert!(agree >= 10, "chip/float prediction agreement too low: {agree}/16");
+    assert!(agree >= 4, "chip/float prediction agreement too low: {agree}/8");
+}
+
+#[test]
+fn curriculum_schedules_are_well_formed() {
+    let trainer = trainer(4, 8);
+    let total = 100;
+    // dense first, target threshold at the end, monotone non-decreasing
+    assert_eq!(trainer.schedule_th(0, total), 0.0);
+    assert_eq!(trainer.schedule_th(total - 1, total), trainer.delta_th);
+    let mut prev = -1.0f32;
+    for s in 0..total {
+        let th = trainer.schedule_th(s, total);
+        assert!(th >= prev - 1e-6, "Θ schedule not monotone at {s}");
+        assert!(th <= trainer.delta_th + 1e-6);
+        prev = th;
+    }
+    // LR drops when the threshold activates
+    assert_eq!(trainer.schedule_lr(0, total), deltakws::train::BASE_LR);
+    assert_eq!(trainer.schedule_lr(total - 1, total), deltakws::train::FINETUNE_LR);
 }

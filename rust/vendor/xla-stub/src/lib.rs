@@ -1,0 +1,243 @@
+//! API-compatible stub for the `xla` PJRT bindings.
+//!
+//! The real crate links libxla_extension (PJRT CPU client + HLO parsing),
+//! which cannot be vendored in this offline environment. This stub exposes
+//! the exact API surface `deltakws::runtime::pjrt` consumes so the `pjrt`
+//! feature still *compiles*; every entry point that would need the real
+//! runtime returns [`Error::Unavailable`] instead, and the backend factory
+//! falls back to the pure-Rust native backend.
+//!
+//! Host-side [`Literal`] bookkeeping (shape/data/convert) is implemented for
+//! real so unit tests of the conversion layer keep working.
+
+use std::fmt;
+
+/// Stub error: every PJRT-backed operation reports unavailability.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The PJRT runtime is not linked in this build.
+    Unavailable(&'static str),
+    /// Host-side usage error (shape mismatch etc.).
+    Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real PJRT bindings (libxla_extension), \
+                 which are not vendored in this build"
+            ),
+            Error::Usage(msg) => write!(f, "xla stub: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the host-side literal layer understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Marker trait for element types usable with [`Literal::vec1`]/[`Literal::to_vec`].
+pub trait NativeType: Copy {
+    const TY: PrimitiveType;
+    fn to_f32(self) -> f32;
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: PrimitiveType = PrimitiveType::F32;
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl NativeType for i32 {
+    const TY: PrimitiveType = PrimitiveType::S32;
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    fn from_f32(v: f32) -> Self {
+        v as i32
+    }
+}
+
+/// Host-side array shape.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal: flat f32 storage + shape + nominal element type.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            data: data.iter().map(|v| v.to_f32()).collect(),
+            dims: vec![data.len() as i64],
+            ty: T::TY,
+        }
+    }
+
+    /// Reshape (element count must match; rank-0 scalars use `&[]`).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let want = if dims.is_empty() { 1 } else { n };
+        if want as usize != self.data.len() {
+            return Err(Error::Usage(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), ty: self.ty })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal> {
+        Ok(Literal { data: self.data.clone(), dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (execution
+    /// is unavailable), so this only errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple on an execution result"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from text).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT device buffer (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: creation fails, signalling callers to fall back).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[7.0f32]);
+        let s = l.reshape(&[]).unwrap();
+        assert!(s.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn int_literals_convert() {
+        let l = Literal::vec1(&[1i32, -2, 3]);
+        let f = l.convert(PrimitiveType::F32).unwrap();
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn runtime_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Regenerate the checked-in golden vectors for rust/tests/golden_vectors.rs.
+
+The golden paths are *pure integer arithmetic* (the whole point of the
+bit-accurate twin), so this script reproduces them exactly, independent of
+the Rust implementation: PCG-XSH-RR 64/32, the fixed-point DF-I biquad with
+round-half-away-from-zero shifts and saturation, the leaky-integrator
+envelope with floor shift, the priority-encoder log2, and the ΔEncoder.
+
+Run `python3 tools/gen_goldens.py` and paste the printed arrays into
+rust/tests/golden_vectors.rs if the modelled hardware ever changes
+(a deliberate, reviewed event — that is what makes these regression tests).
+"""
+
+M64 = (1 << 64) - 1
+
+
+class Pcg:
+    """PCG-XSH-RR 64/32, bit-exact mirror of rust/src/util/prng.rs."""
+
+    def __init__(self, seed, stream=0xDA3E39CB94B95BDB):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & M64
+        self.next_u32()
+        self.state = (self.state + seed) & M64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) & 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# fixed-point primitives (rust/src/fixed/mod.rs)
+# ---------------------------------------------------------------------------
+
+
+def sat(v, bits):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return max(lo, min(hi, v))
+
+
+def round_shift(v, sh):
+    if sh == 0:
+        return v
+    half = 1 << (sh - 1)
+    if v >= 0:
+        return (v + half) >> sh
+    return -((-v + half) >> sh)
+
+
+def log2_linear(v, frac_bits):
+    assert v > 0
+    p = v.bit_length() - 1
+    mant = v - (1 << p)
+    if p >= frac_bits:
+        frac = mant >> (p - frac_bits)
+    else:
+        frac = mant << (frac_bits - p)
+    return (p << frac_bits) + frac
+
+
+def log_compress(env_q15):
+    v = (1 << 15) + (env_q15 << 12)
+    log_q12 = log2_linear(v, 12) - (15 << 12)
+    feat = (log_q12 * 2731) >> 15
+    return min(feat, 4095)
+
+
+# ---------------------------------------------------------------------------
+# FEx channel pipeline golden (biquad cascade + envelope + log compression)
+# ---------------------------------------------------------------------------
+
+# hand-picked quantised coefficients (Q0.11 b, Q1.6 a), strictly stable:
+# |a1| = 91/64 = 1.422 < 1 + a2 = 1.828, a2 = 53/64 = 0.828 < 1
+B0, A1, A2 = 150, -91, 53
+QB_FRAC, QA_FRAC = 11, 6
+
+
+class FixedBiquad:
+    def __init__(self):
+        self.x1 = self.x2 = self.y1 = self.y2 = 0
+        self.b0, self.a1, self.a2 = B0, A1, A2
+
+    def step(self, x):
+        xd = x - self.x2
+        num = xd * self.b0
+        rec = self.y1 * self.a1 + self.y2 * self.a2
+        acc = sat(round_shift(num, QB_FRAC) - round_shift(rec, QA_FRAC), 32)
+        y = sat(acc, 16)
+        self.x2, self.x1 = self.x1, x
+        self.y2, self.y1 = self.y1, y
+        return y
+
+
+def fex_channel_golden():
+    rng = Pcg(0xFE0)
+    s0, s1 = FixedBiquad(), FixedBiquad()
+    env = 0
+    feats = []
+    for n in range(8000):
+        x12 = (rng.next_u32() >> 20) - 2048  # deterministic 12-bit noise
+        x = x12 << 4  # Q1.11 -> Q1.15
+        y = s1.step(s0.step(x))
+        env += (abs(y) - env) >> 5  # Envelope::step (floor shift)
+        if (n + 1) % 128 == 0:
+            feats.append(log_compress(env))
+    return feats  # 62 frames
+
+
+# ---------------------------------------------------------------------------
+# ΔEncoder golden (rust/src/accel/encoder.rs)
+# ---------------------------------------------------------------------------
+
+
+def encoder_golden():
+    rng = Pcg(0xDE17A)
+    refs = [0] * 16
+    th = 20
+    fired_total = 0
+    h = 0
+    first_events = []
+    for _ in range(40):
+        cur = [rng.next_u32() % 512 for _ in range(16)]
+        for lane in range(16):
+            d = cur[lane] - refs[lane]
+            if d != 0 and abs(d) >= th:
+                refs[lane] = cur[lane]
+                fired_total += 1
+                if len(first_events) < 8:
+                    first_events.append((lane, d))
+                h = (h * 1000003 + (lane * 100000 + (d + 70000))) & M64
+    return fired_total, h, first_events
+
+
+def fmt(xs, per_line=10):
+    lines = []
+    for i in range(0, len(xs), per_line):
+        lines.append(", ".join(str(v) for v in xs[i : i + per_line]))
+    return ",\n    ".join(lines)
+
+
+if __name__ == "__main__":
+    feats = fex_channel_golden()
+    print(f"// FEx channel golden ({len(feats)} frames):")
+    print(f"const FEX_GOLDEN: [i64; {len(feats)}] = [\n    {fmt(feats)},\n];")
+    fired, h, first = encoder_golden()
+    print(f"\n// encoder golden: fired_total={fired} hash=0x{h:016x}")
+    print(f"const ENC_FIRED_TOTAL: usize = {fired};")
+    print(f"const ENC_HASH: u64 = 0x{h:016x};")
+    print(f"const ENC_FIRST_EVENTS: [(u16, i32); {len(first)}] = {first!r};")
