@@ -1,0 +1,85 @@
+//! Streaming-pipeline benchmarks: the always-on hot path.
+//!
+//! Measures the frame-incremental chip API against the batch wrapper, the
+//! full VAD-gated detection pipeline on speech vs silence (the VAD's
+//! simulation-speed win mirrors the silicon's energy win: gated frames
+//! skip the ΔRNN entirely), and the bare detector state machine.
+//!
+//! Run: `cargo bench --bench stream_bench` (DELTAKWS_BENCH_SMOKE=1 for CI).
+
+mod common;
+
+use deltakws::audio::track::{synth_track, TrackConfig};
+use deltakws::chip::{ChipConfig, KwsChip};
+use deltakws::stream::detector::{Detector, DetectorConfig};
+use deltakws::stream::vad::VadConfig;
+use deltakws::stream::{StreamConfig, StreamPipeline};
+use deltakws::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("stream");
+    let utt = common::utterance(5, 11);
+
+    // frame-incremental chip API vs the batch wrapper (same work)
+    let mut chip = KwsChip::new(common::rng_quant(1), ChipConfig::design_point());
+    b.bench_with_items("chip.process_utterance (batch)", 1.0, "utt", || {
+        black_box(chip.process_utterance(black_box(&utt)));
+    });
+    let mut chip2 = KwsChip::new(common::rng_quant(1), ChipConfig::design_point());
+    b.bench_with_items("chip.push_samples+poll (256-sample chunks)", 1.0, "utt", || {
+        chip2.reset();
+        for c in utt.chunks(256) {
+            chip2.push_samples(c);
+            while let Some(f) = chip2.poll_frame() {
+                black_box(f);
+            }
+        }
+    });
+
+    // full pipeline on 2 s of speech-bearing track vs 2 s of near-silence
+    let speech = synth_track(
+        &TrackConfig { duration_s: 2, keywords: 2, fillers: 0, noise: (0.001, 0.002) },
+        3,
+    )
+    .0;
+    let silence = synth_track(
+        &TrackConfig { duration_s: 2, keywords: 0, fillers: 0, noise: (0.001, 0.002) },
+        3,
+    )
+    .0;
+    for (label, audio) in [("speech", &speech), ("silence", &silence)] {
+        let mut pipe =
+            StreamPipeline::new(common::rng_quant(2), StreamConfig::design_point());
+        b.bench_with_items(
+            &format!("pipeline 2 s {label}, vad on"),
+            2.0,
+            "s",
+            || {
+                for c in audio.chunks(256) {
+                    black_box(pipe.push_audio(c));
+                }
+            },
+        );
+    }
+    let mut pipe = StreamPipeline::new(
+        common::rng_quant(2),
+        StreamConfig::design_point().with_vad(VadConfig::disabled()),
+    );
+    b.bench_with_items("pipeline 2 s speech, vad off", 2.0, "s", || {
+        for c in speech.chunks(256) {
+            black_box(pipe.push_audio(c));
+        }
+    });
+
+    // bare wakeword state machine
+    let mut det = Detector::new(DetectorConfig::design_point());
+    let mut t = 0u64;
+    b.bench_with_items("detector.step", 1.0, "frames", || {
+        let mut logits = [0i64; deltakws::NUM_CLASSES];
+        logits[(t % 12) as usize] = (t as i64 * 7919) % 100_000;
+        black_box(det.step(t, &logits, false));
+        t += 1;
+    });
+
+    b.finish();
+}

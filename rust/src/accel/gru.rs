@@ -257,7 +257,7 @@ pub fn from_sram_image(img: &[u16]) -> QuantParams {
 /// ΔGRU state: references, hidden state and the four pre-activation
 /// memories. 64 x 4 x 32b + 64 x 2 x 16b + 16 x 16b ≈ 0.58 kB — matching
 /// the paper's state-buffer annotation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StateBuffer {
     pub x_ref: [i16; C],
     pub h_ref: [i16; H],

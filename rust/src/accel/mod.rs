@@ -138,6 +138,15 @@ impl DeltaRnnAccel {
         &self.state
     }
 
+    /// Account one clock-gated frame (VAD idle): the frame clock advances
+    /// for the energy model — so average power reflects the idle time — but
+    /// no lanes are examined, no MACs run, no SRAM is read and the state
+    /// buffer is untouched.
+    pub fn idle_frame(&mut self) {
+        self.activity.frames += 1;
+        self.activity.gated_frames += 1;
+    }
+
     /// Process one feature frame (Q8.8 activations per hardware channel
     /// slot; inactive slots ignored).
     pub fn step_frame(&mut self, x: &[i16; C]) -> FrameResult {

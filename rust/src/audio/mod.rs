@@ -11,6 +11,7 @@
 //! `silence, unknown, down, go, left, no, off, on, right, stop, up, yes`.
 
 pub mod synth;
+pub mod track;
 
 use crate::util::prng::Pcg;
 use synth::*;
@@ -19,7 +20,7 @@ use synth::*;
 pub const UTT_SAMPLES: usize = 8_000;
 
 /// Phone sequence for each keyword class (index into [`crate::CLASS_LABELS`]).
-fn keyword_phones(class: usize, rng: &mut Pcg) -> Vec<Phone> {
+pub(crate) fn keyword_phones(class: usize, rng: &mut Pcg) -> Vec<Phone> {
     match crate::CLASS_LABELS[class] {
         "silence" => vec![],
         "unknown" => {

@@ -1,0 +1,192 @@
+//! Long-form track synthesis: the always-on workload.
+//!
+//! A *track* is minutes of continuous 8 kHz audio — a background-noise bed
+//! with keywords and "unknown"-word fillers embedded at known offsets —
+//! plus the ground-truth schedule of what was placed where. This is the
+//! stimulus the [`crate::stream`] detection pipeline is scored against
+//! (miss rate, false-accepts/hour, detection latency), mirroring how
+//! always-on KWS ICs are evaluated on continuous audio rather than
+//! pre-segmented clips.
+//!
+//! Determinism contract: the **schedule** is generated from a dedicated
+//! PCG stream using *integer-only* draws, so `tools/gen_goldens.py` can
+//! reproduce it exactly as a checked-in regression vector. Audio rendering
+//! (floats) draws from a second, independent stream and never perturbs the
+//! schedule.
+
+use super::synth::render;
+use super::{keyword_phones, UTT_SAMPLES};
+use crate::util::prng::Pcg;
+
+/// PCG stream id for schedule generation ("schedule" in ASCII).
+pub const TRACK_SCHED_STREAM: u64 = 0x7363_6865_6475_6c65;
+/// PCG stream id for audio rendering ("trackwav" in ASCII).
+pub const TRACK_AUDIO_STREAM: u64 = 0x7472_6163_6b77_6176;
+
+/// Track synthesis parameters.
+#[derive(Debug, Clone)]
+pub struct TrackConfig {
+    /// total track length in seconds
+    pub duration_s: usize,
+    /// embedded keyword count (classes 2..12)
+    pub keywords: usize,
+    /// embedded "unknown"-word fillers (class 1) — detection distractors
+    pub fillers: usize,
+    /// background-noise amplitude range (uniform draw per track)
+    pub noise: (f64, f64),
+}
+
+impl TrackConfig {
+    /// The acceptance workload: 60 s, 20 keywords, 6 fillers.
+    pub fn design_point() -> Self {
+        Self { duration_s: 60, keywords: 20, fillers: 6, noise: (0.001, 0.003) }
+    }
+}
+
+/// One scheduled word: ground truth for the detection metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrackEntry {
+    /// class index (1 = unknown filler, 2..12 = keyword)
+    pub class: usize,
+    /// first sample of the word's 1 s placement window
+    pub onset: usize,
+    /// placement window length in samples (the word starts somewhere
+    /// inside it — the renderer jitters the in-window onset)
+    pub len: usize,
+}
+
+impl TrackEntry {
+    pub fn is_keyword(&self) -> bool {
+        self.class >= 2
+    }
+}
+
+/// Generate the deterministic word schedule for a track. Integer-only PCG
+/// draws (mirrored by `tools/gen_goldens.py`): per word slot, fillers are
+/// placed every `n / fillers`-th slot without consuming randomness;
+/// keywords draw a class; every slot draws an onset jitter.
+pub fn schedule(cfg: &TrackConfig, seed: u64) -> Vec<TrackEntry> {
+    let n = cfg.keywords + cfg.fillers;
+    if n == 0 {
+        return Vec::new(); // pure noise bed (false-accept soak tracks)
+    }
+    let total = cfg.duration_s * crate::SAMPLE_RATE as usize;
+    assert!(n * UTT_SAMPLES <= total, "track too short for {n} words");
+    let span = total / n;
+    let jitter = span - UTT_SAMPLES;
+    let filler_every = if cfg.fillers > 0 { n / cfg.fillers } else { 0 };
+    let mut rng = Pcg::with_stream(seed, TRACK_SCHED_STREAM);
+    let mut out = Vec::with_capacity(n);
+    let mut placed_fillers = 0usize;
+    for i in 0..n {
+        let is_filler =
+            filler_every > 0 && placed_fillers < cfg.fillers && (i + 1) % filler_every == 0;
+        let class = if is_filler {
+            placed_fillers += 1;
+            1
+        } else {
+            2 + rng.below(crate::NUM_CLASSES - 2)
+        };
+        let onset = i * span + if jitter > 0 { rng.below(jitter) } else { 0 };
+        out.push(TrackEntry { class, onset, len: UTT_SAMPLES });
+    }
+    out
+}
+
+/// Render a schedule into float audio: noise bed + each word rendered with
+/// per-word speaker randomisation and mixed in at its scheduled window.
+pub fn render_track(cfg: &TrackConfig, sched: &[TrackEntry], seed: u64) -> Vec<f64> {
+    let total = cfg.duration_s * crate::SAMPLE_RATE as usize;
+    let mut rng = Pcg::with_stream(seed, TRACK_AUDIO_STREAM);
+    let level = rng.range_f64(cfg.noise.0, cfg.noise.1);
+    let mut out = vec![0.0f64; total];
+    for v in out.iter_mut() {
+        *v = level * rng.normal();
+    }
+    for ent in sched {
+        let phones = keyword_phones(ent.class, &mut rng);
+        // render() itself jitters the word's start by up to 2400 samples
+        // inside the `ent.len` buffer (synth.rs "random onset within the
+        // second"), so [onset, onset+len] is a *placement window*, not
+        // the exact word extent — which is why the detection metrics
+        // carry a post-window tolerance
+        let word = render(&phones, ent.len, &mut rng);
+        for (i, &v) in word.iter().enumerate() {
+            let t = ent.onset + i;
+            if t < total {
+                out[t] = (out[t] + v).clamp(-0.999, 0.999);
+            }
+        }
+    }
+    out
+}
+
+/// Schedule + render + quantise in one call: the standard streaming
+/// workload (12-bit samples, ground-truth schedule).
+pub fn synth_track(cfg: &TrackConfig, seed: u64) -> (Vec<i64>, Vec<TrackEntry>) {
+    let sched = schedule(cfg, seed);
+    let audio = render_track(cfg, &sched, seed);
+    (super::quantize_12b(&audio), sched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_well_formed() {
+        let cfg = TrackConfig::design_point();
+        let a = schedule(&cfg, 7);
+        let b = schedule(&cfg, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), cfg.keywords + cfg.fillers);
+        assert_eq!(a.iter().filter(|e| e.is_keyword()).count(), cfg.keywords);
+        assert_eq!(a.iter().filter(|e| e.class == 1).count(), cfg.fillers);
+        // windows are disjoint, in order, and inside the track
+        let total = cfg.duration_s * crate::SAMPLE_RATE as usize;
+        for w in a.windows(2) {
+            assert!(w[0].onset + w[0].len <= w[1].onset, "overlapping windows");
+        }
+        for e in &a {
+            assert!(e.onset + e.len <= total, "window past end of track");
+            assert!((1..crate::NUM_CLASSES).contains(&e.class));
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_schedules() {
+        let cfg = TrackConfig::design_point();
+        assert_ne!(schedule(&cfg, 1), schedule(&cfg, 2));
+    }
+
+    #[test]
+    fn track_audio_is_bounded_and_louder_at_keywords() {
+        let cfg = TrackConfig { duration_s: 8, keywords: 3, fillers: 1, noise: (0.001, 0.002) };
+        let (audio12, sched) = synth_track(&cfg, 42);
+        assert_eq!(audio12.len(), 8 * 8000);
+        assert!(audio12.iter().all(|&v| (-2048..=2047).contains(&v)));
+        // RMS inside scheduled windows must beat the gaps
+        let rms = |lo: usize, hi: usize| {
+            let s: f64 = audio12[lo..hi].iter().map(|&v| (v * v) as f64).sum();
+            (s / (hi - lo) as f64).sqrt()
+        };
+        let mut word_rms = 0.0f64;
+        for e in &sched {
+            word_rms = word_rms.max(rms(e.onset, (e.onset + e.len).min(audio12.len())));
+        }
+        // quietest 400-sample window anywhere = the noise bed
+        let gap_rms = (0..audio12.len() - 400)
+            .step_by(400)
+            .map(|i| rms(i, i + 400))
+            .fold(f64::MAX, f64::min);
+        assert!(word_rms > 3.0 * gap_rms.max(1.0), "words {word_rms} vs gap {gap_rms}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn schedule_rejects_overfull_tracks() {
+        // 5 one-second words cannot fit a 2 s track
+        let cfg = TrackConfig { duration_s: 2, keywords: 5, fillers: 0, noise: (0.001, 0.002) };
+        let _ = schedule(&cfg, 1);
+    }
+}

@@ -5,16 +5,29 @@
 //! ΔRNN accelerator with its near-V_TH weight SRAM, and the decision logic
 //! (posterior averaging + argmax). One [`KwsChip`] instance == one chip.
 //!
+//! The chip is *always-on*: the primary interface is frame-incremental —
+//! [`push_samples`](KwsChip::push_samples) feeds the SPI front door any
+//! number of 12-bit samples (FEx + CDC FIFO run eagerly), and
+//! [`poll_frame`](KwsChip::poll_frame) /
+//! [`skip_frame`](KwsChip::skip_frame) consume the buffered feature frames
+//! one at a time, either driving the ΔRNN or clock-gating it (the VAD path
+//! in [`crate::stream`]). All FEx/biquad, CDC and ΔRNN state persists
+//! across calls indefinitely; [`reset`](KwsChip::reset) restores power-on
+//! state. [`process_utterance`](KwsChip::process_utterance) is a thin
+//! batch wrapper over the incremental path and is bit-exact with it.
+//!
 //! All activity (FEx visits, MACs, SRAM reads, cycles) aggregates into a
 //! [`ChipActivity`] that [`report`](KwsChip::report) converts into the
 //! paper's headline metrics: power breakdown (Fig. 10), computing latency
 //! and energy/decision vs Δ_TH (Fig. 12), and the Table II row.
 
+use std::collections::VecDeque;
+
 use crate::accel::fifo::AsyncFifo;
+use crate::accel::gru::QuantParams;
 use crate::accel::{AccelConfig, DeltaRnnAccel};
 use crate::energy::{self, ChipActivity, PowerBreakdown, SramKind};
-use crate::fex::{Fex, FexConfig, MAX_CHANNELS};
-use crate::accel::gru::QuantParams;
+use crate::fex::{FeatureFrame, Fex, FexConfig, MAX_CHANNELS};
 
 /// Chip configuration: the two block configs + SRAM flavour.
 #[derive(Debug, Clone)]
@@ -63,6 +76,69 @@ pub struct Decision {
     pub feat_trace: Vec<[i64; MAX_CHANNELS]>,
 }
 
+impl Decision {
+    /// Posterior-average a window of frame outputs into a decision (the
+    /// paper's decision logic: mean logits after `warmup` frames, argmax).
+    /// Clock-gated frames contribute their trace entries but neither
+    /// posterior nor warmup progress — warmup exists to skip the ΔRNN's
+    /// transient, which only advances on frames the accelerator ran.
+    pub fn from_frames(frames: &[FrameOut], warmup: usize) -> Self {
+        let mut frame_cycles = Vec::with_capacity(frames.len());
+        let mut frame_fired = Vec::with_capacity(frames.len());
+        let mut feat_trace = Vec::with_capacity(frames.len());
+        let mut acc_logits = [0i64; crate::NUM_CLASSES];
+        let mut counted = 0i64;
+        let mut seen_ungated = 0usize;
+        for f in frames {
+            feat_trace.push(f.feat);
+            frame_cycles.push(f.cycles);
+            frame_fired.push(f.fired);
+            if !f.gated {
+                seen_ungated += 1;
+                if seen_ungated > warmup {
+                    for (a, l) in acc_logits.iter_mut().zip(f.logits.iter()) {
+                        *a += l;
+                    }
+                    counted += 1;
+                }
+            }
+        }
+        if counted > 0 {
+            for a in acc_logits.iter_mut() {
+                *a /= counted;
+            }
+        }
+        let class = (0..crate::NUM_CLASSES).max_by_key(|&k| acc_logits[k]).unwrap_or(0);
+        Decision { class, logits: acc_logits, frame_cycles, frame_fired, feat_trace }
+    }
+}
+
+/// One consumed feature frame: the incremental unit of chip output.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameOut {
+    /// frame index since the last [`KwsChip::reset`]
+    pub index: u64,
+    /// 12-bit FEx features (one per hardware channel slot)
+    pub feat: FeatureFrame,
+    /// FC logits at value fraction `ACT_FRAC + w_frac` (zero when gated)
+    pub logits: [i64; crate::NUM_CLASSES],
+    /// fired delta lanes this frame
+    pub fired: usize,
+    /// ΔRNN cycles this frame (zero when gated)
+    pub cycles: u64,
+    /// true when the ΔRNN was clock-gated for this frame (VAD idle)
+    pub gated: bool,
+}
+
+/// A feature frame buffered between the CDC FIFO and the ΔRNN.
+#[derive(Debug, Clone, Copy)]
+struct PendingFrame {
+    /// 12-bit features (kept for the trace / VAD energy)
+    feat: FeatureFrame,
+    /// Q8.8 activations as popped from the CDC FIFO
+    q: [i16; MAX_CHANNELS],
+}
+
 /// The chip twin.
 pub struct KwsChip {
     pub config: ChipConfig,
@@ -72,30 +148,46 @@ pub struct KwsChip {
     fifo: AsyncFifo<[i16; MAX_CHANNELS]>,
     /// RNN-clock time cursor (cycles)
     now: u64,
+    /// frames through the CDC, not yet consumed by poll/skip
+    pending: VecDeque<PendingFrame>,
+    /// frames consumed since the last reset
+    frame_index: u64,
 }
 
 impl KwsChip {
     pub fn new(params: QuantParams, config: ChipConfig) -> Self {
         let fex = Fex::new(config.fex.clone());
         let accel = DeltaRnnAccel::new(params, config.accel.clone(), config.sram);
-        Self { config, fex, accel, fifo: AsyncFifo::new(4), now: 0 }
+        Self {
+            config,
+            fex,
+            accel,
+            fifo: AsyncFifo::new(4),
+            now: 0,
+            pending: VecDeque::new(),
+            frame_index: 0,
+        }
     }
 
-    /// Feed one 1 s utterance (12-bit samples) through the full pipeline.
-    pub fn process_utterance(&mut self, audio12: &[i64]) -> Decision {
+    /// Reset all recurrent state (FEx biquads/envelopes, ΔRNN references
+    /// and hidden state, buffered frames). Activity counters are *not*
+    /// cleared — they aggregate across the chip's lifetime.
+    pub fn reset(&mut self) {
         self.fex.reset();
         self.accel.reset_state();
-        let mut frame_cycles = Vec::with_capacity(64);
-        let mut frame_fired = Vec::with_capacity(64);
-        let mut feat_trace = Vec::with_capacity(64);
-        let mut acc_logits = [0i64; crate::NUM_CLASSES];
-        let mut counted = 0i64;
-        let mut t = 0usize;
+        self.pending.clear();
+        self.frame_index = 0;
+    }
 
+    /// Feed 12-bit samples through the SPI front door. The FEx and the CDC
+    /// FIFO run eagerly; completed feature frames are buffered until
+    /// [`poll_frame`](Self::poll_frame) / [`skip_frame`](Self::skip_frame)
+    /// consume them. Returns the number of frames that completed.
+    pub fn push_samples(&mut self, audio12: &[i64]) -> usize {
+        let mut added = 0usize;
         for &s in audio12 {
             // SPI front door: one 12-bit word per sample period
             if let Some(frame) = self.fex.push_sample(s) {
-                feat_trace.push(frame);
                 // 12-bit feature -> Q8.8 activation in [0, 2) across the
                 // CDC FIFO (>>3; see dataset::features_for)
                 let mut q = [0i16; MAX_CHANNELS];
@@ -107,31 +199,75 @@ impl KwsChip {
                 self.fifo
                     .push(t_prod, q)
                     .expect("CDC FIFO overflow: accelerator starved");
-                // consumer drains after sync delay
+                // consumer side becomes visible after the 2-cycle sync delay
                 while let Some(f) = self.fifo.pop(t_prod + 2) {
-                    let r = self.accel.step_frame(&f);
-                    self.now += r.cycles;
-                    frame_cycles.push(r.cycles);
-                    frame_fired.push(r.fired);
-                    let warm = frame_cycles.len() > self.config.warmup;
-                    if warm {
-                        for (a, l) in acc_logits.iter_mut().zip(r.logits.iter()) {
-                            *a += l;
-                        }
-                        counted += 1;
-                    }
+                    self.pending.push_back(PendingFrame { feat: frame, q: f });
+                    added += 1;
                 }
             }
-            t += 1;
         }
-        let _ = t;
-        if counted > 0 {
-            for a in acc_logits.iter_mut() {
-                *a /= counted;
-            }
+        added
+    }
+
+    /// Feature frames buffered and ready to consume.
+    pub fn pending_frames(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Peek at the next buffered feature frame without consuming it (the
+    /// VAD reads this to decide between poll and skip).
+    pub fn peek_frame(&self) -> Option<&FeatureFrame> {
+        self.pending.front().map(|p| &p.feat)
+    }
+
+    /// Consume the next buffered frame through the ΔRNN. Returns `None`
+    /// when no complete frame is buffered.
+    pub fn poll_frame(&mut self) -> Option<FrameOut> {
+        let pf = self.pending.pop_front()?;
+        let r = self.accel.step_frame(&pf.q);
+        self.now += r.cycles;
+        let out = FrameOut {
+            index: self.frame_index,
+            feat: pf.feat,
+            logits: r.logits,
+            fired: r.fired,
+            cycles: r.cycles,
+            gated: false,
+        };
+        self.frame_index += 1;
+        Some(out)
+    }
+
+    /// Consume the next buffered frame with the ΔRNN clock-gated: no MACs,
+    /// no SRAM reads, no state mutation — only the energy model's frame
+    /// clock advances (the VAD idle path; paper's sparsity story taken to
+    /// its always-on limit). Returns `None` when nothing is buffered.
+    pub fn skip_frame(&mut self) -> Option<FrameOut> {
+        let pf = self.pending.pop_front()?;
+        self.accel.idle_frame();
+        let out = FrameOut {
+            index: self.frame_index,
+            feat: pf.feat,
+            logits: [0i64; crate::NUM_CLASSES],
+            fired: 0,
+            cycles: 0,
+            gated: true,
+        };
+        self.frame_index += 1;
+        Some(out)
+    }
+
+    /// Feed one 1 s utterance (12-bit samples) through the full pipeline.
+    /// Thin batch wrapper over [`push_samples`](Self::push_samples) /
+    /// [`poll_frame`](Self::poll_frame) — bit-exact with chunked streaming.
+    pub fn process_utterance(&mut self, audio12: &[i64]) -> Decision {
+        self.reset();
+        self.push_samples(audio12);
+        let mut frames = Vec::with_capacity(self.pending.len());
+        while let Some(f) = self.poll_frame() {
+            frames.push(f);
         }
-        let class = (0..crate::NUM_CLASSES).max_by_key(|&k| acc_logits[k]).unwrap_or(0);
-        Decision { class, logits: acc_logits, frame_cycles, frame_fired, feat_trace }
+        Decision::from_frames(&frames, self.config.warmup)
     }
 
     /// Aggregated activity (accelerator counters + FEx visits).
@@ -267,6 +403,76 @@ mod tests {
         chip.process_utterance(&one_utterance(2));
         let a = chip.activity();
         assert_eq!(a.total_x, 62 * 6);
+    }
+
+    #[test]
+    fn chunked_streaming_is_bit_exact_with_batch() {
+        let utt = one_utterance(21);
+        let mut batch = KwsChip::new(rng_quant(8), ChipConfig::design_point());
+        let want = batch.process_utterance(&utt);
+        // feed the same utterance in awkward chunk sizes (prime, tiny, big)
+        for chunk in [1usize, 7, 127, 128, 129, 1000] {
+            let mut stream = KwsChip::new(rng_quant(8), ChipConfig::design_point());
+            stream.reset();
+            let mut frames = Vec::new();
+            for c in utt.chunks(chunk) {
+                stream.push_samples(c);
+                while let Some(f) = stream.poll_frame() {
+                    frames.push(f);
+                }
+            }
+            let got = Decision::from_frames(&frames, stream.config.warmup);
+            assert_eq!(got.class, want.class, "chunk {chunk}");
+            assert_eq!(got.logits, want.logits, "chunk {chunk}");
+            assert_eq!(got.frame_cycles, want.frame_cycles, "chunk {chunk}");
+            assert_eq!(got.frame_fired, want.frame_fired, "chunk {chunk}");
+            assert_eq!(got.feat_trace, want.feat_trace, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn skip_frame_gates_the_rnn_and_counts_idle() {
+        let mut chip = KwsChip::new(rng_quant(9), ChipConfig::design_point());
+        chip.push_samples(&one_utterance(13));
+        assert_eq!(chip.pending_frames(), 62);
+        // run a few frames to build non-trivial hidden state
+        for _ in 0..5 {
+            chip.poll_frame().unwrap();
+        }
+        let before = chip.accel.state().clone();
+        let reads_before = chip.accel.sram.reads;
+        let f = chip.skip_frame().unwrap();
+        assert!(f.gated);
+        assert_eq!(f.cycles, 0);
+        assert_eq!(f.fired, 0);
+        assert_eq!(*chip.accel.state(), before, "gated frame mutated ΔRNN state");
+        assert_eq!(chip.accel.sram.reads, reads_before, "gated frame read SRAM");
+        let a = chip.activity();
+        assert_eq!(a.gated_frames, 1);
+        assert_eq!(a.frames, 6);
+    }
+
+    #[test]
+    fn state_persists_across_push_calls_until_reset() {
+        // two 1 s pushes without reset must differ from two independent
+        // utterances (the recurrent state carries over), and reset restores
+        // the power-on decision
+        let utt = one_utterance(17);
+        let mut chip = KwsChip::new(rng_quant(10), ChipConfig::design_point());
+        let d1 = chip.process_utterance(&utt);
+        // second pass without reset: hidden state warm-started
+        chip.push_samples(&utt);
+        let mut frames = Vec::new();
+        while let Some(f) = chip.poll_frame() {
+            frames.push(f);
+        }
+        let warm = Decision::from_frames(&frames, chip.config.warmup);
+        // the traces must differ somewhere (warm ΔRNN references fire less)
+        assert_ne!(d1.frame_fired, warm.frame_fired, "state did not persist");
+        // reset: bit-exact repeat of the cold decision
+        let d2 = chip.process_utterance(&utt);
+        assert_eq!(d1.logits, d2.logits);
+        assert_eq!(d1.frame_cycles, d2.frame_cycles);
     }
 
     #[test]

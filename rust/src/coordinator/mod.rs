@@ -15,10 +15,20 @@
 //! to a worker (consistent hashing), which also keeps the per-utterance
 //! recurrent state meaningful; the spill path trades that ordering for
 //! availability when the pinned queue is saturated.
+//!
+//! Two kinds of work share the worker lanes:
+//!
+//! * per-utterance [`Request`]s — stateless between requests, spillable;
+//! * long-lived [`StreamSession`]s — open a stream, push audio chunks of
+//!   any size, receive [`StreamEvent`]s asynchronously. A session's
+//!   [`crate::stream::StreamPipeline`] (chip + VAD + wakeword state
+//!   machine) lives on the stream's *pinned* worker for its whole life:
+//!   chunks never spill (the recurrent state is there), so a full pinned
+//!   queue surfaces as backpressure to the producer instead.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -26,6 +36,8 @@ use std::time::{Duration, Instant};
 use crate::accel::gru::QuantParams;
 use crate::chip::{ChipConfig, ChipReport, KwsChip};
 use crate::energy::ChipActivity;
+use crate::stream::detector::DetectionEvent;
+use crate::stream::{StreamConfig, StreamPipeline};
 
 /// One inference request: a 1 s utterance on a logical stream.
 #[derive(Debug, Clone)]
@@ -52,6 +64,22 @@ pub struct Response {
     pub worker: usize,
 }
 
+/// Per-worker serving counters (the per-lane view of routing health:
+/// a worker with high `pinned_full` is a stall hot-spot; high `spilled_in`
+/// means it absorbs other lanes' overflow).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LaneStats {
+    /// utterance requests this worker completed
+    pub completed: u64,
+    /// requests that arrived here by spilling off a full pinned lane
+    pub spilled_in: u64,
+    /// submissions that found this worker's queue full while it was the
+    /// pinned target (each one either spilled elsewhere or was rejected)
+    pub pinned_full: u64,
+    /// streaming audio chunks processed by this worker's sessions
+    pub stream_chunks: u64,
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Default, Clone)]
 pub struct Stats {
@@ -59,10 +87,16 @@ pub struct Stats {
     pub correct: u64,
     pub labelled: u64,
     pub rejected: u64,
+    /// requests accepted by a non-pinned worker (pinned queue was full);
+    /// folded from per-lane atomics by [`Coordinator::stats`]
+    pub spilled: u64,
     /// wall-clock service time distribution (µs)
     pub service_us: Vec<u64>,
     /// merged chip activity across workers
     pub activity: ChipActivity,
+    /// per-worker routing/serving counters (indexed by worker; the
+    /// routing fields are folded in by [`Coordinator::stats`])
+    pub per_worker: Vec<LaneStats>,
 }
 
 impl Stats {
@@ -92,12 +126,51 @@ fn percentile(xs: &[u64], p: f64) -> u64 {
     v[((v.len() - 1) as f64 * p) as usize]
 }
 
+/// One unit of work on a worker lane. Stream jobs are keyed by a unique
+/// *session* id (the stream id only picks the pinned lane), so two
+/// sessions opened on the same stream id coexist instead of clobbering
+/// each other's worker state.
+enum Job {
+    /// a per-utterance inference request (spillable)
+    Utterance(Request, Instant),
+    /// open a streaming session pinned to this worker (`config`: per-
+    /// session VAD/detector tuning, `None` = worker default; `alive` is
+    /// cleared by the client handle so the worker can GC sessions whose
+    /// Close was never deliverable)
+    StreamOpen {
+        session: u64,
+        config: Option<StreamConfig>,
+        events: Sender<StreamEvent>,
+        alive: Arc<AtomicBool>,
+    },
+    /// an audio chunk for an open session
+    StreamData { session: u64, chunk: Vec<i64> },
+    /// close a session (flushes telemetry, emits [`StreamEvent::Closed`])
+    StreamClose { session: u64 },
+}
+
+/// Asynchronous output of a [`StreamSession`].
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// the wakeword state machine confirmed a detection
+    Detection(DetectionEvent),
+    /// final telemetry, emitted exactly once when the session closes
+    Closed { frames: u64, gated_frames: u64 },
+}
+
 /// One worker's request lane (the submit-side view).
 struct Lane {
-    tx: SyncSender<(Request, Instant)>,
+    tx: SyncSender<Job>,
     depth: Arc<AtomicU64>,
     /// failure-injection: worker refuses work while true (tests)
     stalled: Arc<AtomicBool>,
+    /// lock-free routing counters, folded into [`Stats::per_worker`] at
+    /// read time — the submit hot path must not take the stats mutex
+    pinned_full: AtomicU64,
+    spilled_in: AtomicU64,
+    /// chunk counter shared with the worker (the per-chunk streaming hot
+    /// path must not take the stats mutex either)
+    stream_chunks: Arc<AtomicU64>,
 }
 
 /// Shared routing state: what [`Coordinator::submit`] and every [`Client`]
@@ -107,9 +180,15 @@ struct Router {
     lanes: Vec<Lane>,
     stats: Arc<Mutex<Stats>>,
     next_id: AtomicU64,
+    /// unique ids for [`StreamSession`]s (stream ids may repeat)
+    next_session: AtomicU64,
 }
 
 impl Router {
+    fn pinned_lane(&self, stream: u64) -> usize {
+        (stream as usize) % self.lanes.len()
+    }
+
     /// Routing: the stream's pinned worker unless its queue is full, then
     /// least-loaded spill; `Err` when every queue is saturated (global
     /// backpressure — caller must retry/shed).
@@ -117,17 +196,23 @@ impl Router {
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let id = req.id;
         let now = Instant::now();
-        let pinned = (req.stream as usize) % self.lanes.len();
+        let pinned = self.pinned_lane(req.stream);
         let mut req = match self.try_lane(pinned, req, now) {
             Ok(()) => return Ok(id),
-            Err(r) => r,
+            Err(r) => {
+                self.lanes[pinned].pinned_full.fetch_add(1, Ordering::Relaxed);
+                r
+            }
         };
         // spill: least-loaded first
         let mut order: Vec<usize> = (0..self.lanes.len()).filter(|&w| w != pinned).collect();
         order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
         for w in order {
             req = match self.try_lane(w, req, now) {
-                Ok(()) => return Ok(id),
+                Ok(()) => {
+                    self.lanes[w].spilled_in.fetch_add(1, Ordering::Relaxed);
+                    return Ok(id);
+                }
                 Err(r) => r,
             };
         }
@@ -136,12 +221,42 @@ impl Router {
     }
 
     fn try_lane(&self, w: usize, req: Request, t: Instant) -> Result<(), Request> {
-        match self.lanes[w].tx.try_send((req, t)) {
+        match self.lanes[w].tx.try_send(Job::Utterance(req, t)) {
             Ok(()) => {
                 self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
-            Err(TrySendError::Full((r, _)) | TrySendError::Disconnected((r, _))) => Err(r),
+            Err(
+                TrySendError::Full(Job::Utterance(r, _))
+                | TrySendError::Disconnected(Job::Utterance(r, _)),
+            ) => Err(r),
+            Err(_) => unreachable!("utterance job came back as a different variant"),
+        }
+    }
+
+    /// Non-blocking stream-job delivery to the stream's pinned lane (no
+    /// spill: the session state lives there). `Err` hands the job back.
+    fn try_stream_job(&self, stream: u64, job: Job) -> Result<(), Job> {
+        let lane = self.pinned_lane(stream);
+        match self.lanes[lane].tx.try_send(job) {
+            Ok(()) => {
+                self.lanes[lane].depth.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(j) | TrySendError::Disconnected(j)) => Err(j),
+        }
+    }
+
+    /// Blocking stream-job delivery (control messages: open/close). `Err`
+    /// only when the worker pool is gone.
+    fn send_stream_job(&self, stream: u64, job: Job) -> Result<(), Job> {
+        let lane = self.pinned_lane(stream);
+        match self.lanes[lane].tx.send(job) {
+            Ok(()) => {
+                self.lanes[lane].depth.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => Err(e.0),
         }
     }
 }
@@ -173,6 +288,119 @@ impl Client {
     }
 }
 
+/// A long-lived streaming session: the client half of one always-on
+/// detection pipeline living on the stream's pinned worker.
+///
+/// Push 12-bit audio chunks of any size with [`push`](Self::push)
+/// (non-blocking, backpressured) or [`push_blocking`](Self::push_blocking);
+/// detections arrive asynchronously on [`events`](Self::events). Dropping
+/// the session (or calling [`close`](Self::close)) tears down the worker
+/// state and flushes its chip telemetry into the pool [`Stats`].
+pub struct StreamSession {
+    stream: u64,
+    /// unique id keying the worker-side state (stream ids may repeat)
+    session: u64,
+    router: Weak<Router>,
+    /// asynchronous session output ([`StreamEvent`])
+    pub events: Receiver<StreamEvent>,
+    closed: bool,
+    /// cleared on close/drop; the worker GCs sessions with a dead flag
+    alive: Arc<AtomicBool>,
+}
+
+impl StreamSession {
+    pub fn stream_id(&self) -> u64 {
+        self.stream
+    }
+
+    /// Submit an audio chunk (non-blocking). `Err` hands the chunk back:
+    /// the pinned worker's queue is full (backpressure — pace the
+    /// producer) or the pool is gone.
+    pub fn push(&self, audio12: Vec<i64>) -> Result<(), Vec<i64>> {
+        let Some(router) = self.router.upgrade() else {
+            return Err(audio12);
+        };
+        router
+            .try_stream_job(self.stream, Job::StreamData { session: self.session, chunk: audio12 })
+            .map_err(|j| match j {
+                Job::StreamData { chunk, .. } => chunk,
+                _ => unreachable!("data job came back as a different variant"),
+            })
+    }
+
+    /// Submit an audio chunk, blocking while the pinned queue is full.
+    /// `Err` only when the pool is gone.
+    pub fn push_blocking(&self, audio12: Vec<i64>) -> Result<(), Vec<i64>> {
+        let Some(router) = self.router.upgrade() else {
+            return Err(audio12);
+        };
+        router
+            .send_stream_job(self.stream, Job::StreamData { session: self.session, chunk: audio12 })
+            .map_err(|j| match j {
+                Job::StreamData { chunk, .. } => chunk,
+                _ => unreachable!("data job came back as a different variant"),
+            })
+    }
+
+    /// Collect whatever events have arrived so far (non-blocking).
+    pub fn try_events(&self) -> Vec<StreamEvent> {
+        self.events.try_iter().collect()
+    }
+
+    /// Close the session and collect every remaining event, including the
+    /// final [`StreamEvent::Closed`] telemetry marker. Waits (bounded) for
+    /// the worker to acknowledge; use `drop` for a fire-and-forget close.
+    pub fn close(mut self) -> Vec<StreamEvent> {
+        self.send_close(true);
+        let mut out = Vec::new();
+        while let Ok(ev) = self.events.recv_timeout(Duration::from_secs(60)) {
+            let done = matches!(ev, StreamEvent::Closed { .. });
+            out.push(ev);
+            if done {
+                break;
+            }
+        }
+        out
+    }
+
+    /// `blocking` = wait for lane space (explicit [`close`](Self::close));
+    /// the Drop path must never hang, so it retries briefly and then gives
+    /// up — the worker GCs the session when it notices the event channel
+    /// is disconnected (or at pool shutdown).
+    fn send_close(&mut self, blocking: bool) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        // even if the Close below cannot be delivered, the cleared flag
+        // lets the worker GC the session on a later job
+        self.alive.store(false, Ordering::Relaxed);
+        let Some(router) = self.router.upgrade() else {
+            return;
+        };
+        let mut job = Job::StreamClose { session: self.session };
+        if blocking {
+            let _ = router.send_stream_job(self.stream, job);
+            return;
+        }
+        for _ in 0..20 {
+            job = match router.try_stream_job(self.stream, job) {
+                Ok(()) => return,
+                Err(j) => j,
+            };
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+impl Drop for StreamSession {
+    fn drop(&mut self) {
+        // non-blocking: a wedged lane must not hang a destructor; an
+        // undelivered Close is flushed by the worker's shutdown drain
+        self.send_close(false);
+    }
+}
+
 /// The coordinator: worker pool + router state + stats.
 pub struct Coordinator {
     /// `Some` until drop; taken first so lane senders close before joining
@@ -190,15 +418,19 @@ impl Coordinator {
     /// Spawn `n_workers` chip twins, each with its own weight copy.
     pub fn new(params: QuantParams, config: ChipConfig, n_workers: usize, queue_depth: usize) -> Self {
         assert!(n_workers > 0);
-        let stats = Arc::new(Mutex::new(Stats::default()));
+        let stats = Arc::new(Mutex::new(Stats {
+            per_worker: vec![LaneStats::default(); n_workers],
+            ..Stats::default()
+        }));
         let reports = Arc::new(Mutex::new(HashMap::new()));
         let (resp_tx, resp_rx) = sync_channel::<Response>(n_workers * queue_depth.max(4) * 4);
         let mut lanes = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
-            let (tx, rx) = sync_channel::<(Request, Instant)>(queue_depth);
+            let (tx, rx) = sync_channel::<Job>(queue_depth);
             let stalled = Arc::new(AtomicBool::new(false));
             let depth = Arc::new(AtomicU64::new(0));
+            let chunks = Arc::new(AtomicU64::new(0));
             let handle = {
                 let params = params.clone();
                 let config = config.clone();
@@ -207,18 +439,32 @@ impl Coordinator {
                 let resp_tx = resp_tx.clone();
                 let stalled = Arc::clone(&stalled);
                 let depth = Arc::clone(&depth);
+                let chunks = Arc::clone(&chunks);
                 std::thread::Builder::new()
                     .name(format!("chip-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(w, params, config, rx, resp_tx, stats, reports, stalled, depth)
+                        worker_loop(
+                            w, params, config, rx, resp_tx, stats, reports, stalled, depth, chunks,
+                        )
                     })
                     .expect("spawn worker")
             };
-            lanes.push(Lane { tx, depth, stalled });
+            lanes.push(Lane {
+                tx,
+                depth,
+                stalled,
+                pinned_full: AtomicU64::new(0),
+                spilled_in: AtomicU64::new(0),
+                stream_chunks: chunks,
+            });
             handles.push(handle);
         }
-        let router =
-            Arc::new(Router { lanes, stats: Arc::clone(&stats), next_id: AtomicU64::new(0) });
+        let router = Arc::new(Router {
+            lanes,
+            stats: Arc::clone(&stats),
+            next_id: AtomicU64::new(0),
+            next_session: AtomicU64::new(0),
+        });
         Self { router: Some(router), handles, stats, resp_tx, resp_rx, reports }
     }
 
@@ -238,6 +484,57 @@ impl Coordinator {
         Client { router: Arc::downgrade(self.router.as_ref().expect("router alive")) }
     }
 
+    /// Open a long-lived streaming session on `stream`'s pinned worker:
+    /// an always-on detection pipeline (chip + VAD + wakeword state
+    /// machine) whose recurrent state persists until the session closes.
+    /// Stream ids may be reused — each call creates an independent
+    /// session (internally keyed by a unique session id).
+    ///
+    /// Delivery of the open is a control message on the pinned lane: if
+    /// that worker's queue is momentarily full, this call blocks until
+    /// space frees (it does not fail on transient backpressure). If the
+    /// pinned worker has *died* (its lane is disconnected), the returned
+    /// session is already dead: pushes hand the chunk back and the event
+    /// channel is empty — the same recoverable contract as
+    /// [`Client::submit`] after shutdown, instead of a panic.
+    pub fn open_stream(&self, stream: u64) -> StreamSession {
+        self.open_stream_inner(stream, None)
+    }
+
+    /// [`open_stream`](Self::open_stream) with per-session VAD/detector
+    /// tuning (e.g. [`crate::stream::vad::VadConfig::disabled`] for an
+    /// energy A/B stream, or per-microphone detector thresholds).
+    pub fn open_stream_with(&self, stream: u64, config: StreamConfig) -> StreamSession {
+        self.open_stream_inner(stream, Some(config))
+    }
+
+    fn open_stream_inner(&self, stream: u64, config: Option<StreamConfig>) -> StreamSession {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let router = self.router.as_ref().expect("router alive");
+        let session = router.next_session.fetch_add(1, Ordering::Relaxed);
+        let alive = Arc::new(AtomicBool::new(true));
+        let job =
+            Job::StreamOpen { session, config, events: tx, alive: Arc::clone(&alive) };
+        if router.send_stream_job(stream, job).is_err() {
+            return StreamSession {
+                stream,
+                session,
+                router: Weak::new(),
+                events: rx,
+                closed: true,
+                alive,
+            };
+        }
+        StreamSession {
+            stream,
+            session,
+            router: Arc::downgrade(router),
+            events: rx,
+            closed: false,
+            alive,
+        }
+    }
+
     /// Block until `n` responses have been collected (helper for batch runs).
     pub fn collect(&self, n: usize, timeout: Duration) -> Vec<Response> {
         let deadline = Instant::now() + timeout;
@@ -255,8 +552,21 @@ impl Coordinator {
         out
     }
 
+    /// Aggregate statistics snapshot. The per-lane routing counters
+    /// (`pinned_full`, `spilled_in`, and their `spilled` total) live in
+    /// lock-free atomics on the submit path and are folded in here.
     pub fn stats(&self) -> Stats {
-        self.stats.lock().unwrap().clone()
+        let mut s = self.stats.lock().unwrap().clone();
+        let mut spilled = 0;
+        for (w, lane) in self.router().lanes.iter().enumerate() {
+            let sp = lane.spilled_in.load(Ordering::Relaxed);
+            s.per_worker[w].pinned_full = lane.pinned_full.load(Ordering::Relaxed);
+            s.per_worker[w].spilled_in = sp;
+            s.per_worker[w].stream_chunks = lane.stream_chunks.load(Ordering::Relaxed);
+            spilled += sp;
+        }
+        s.spilled = spilled;
+        s
     }
 
     /// Latest per-worker chip reports (power/energy telemetry).
@@ -286,60 +596,136 @@ impl Drop for Coordinator {
     }
 }
 
+/// Worker-side state of one open streaming session.
+struct WorkerSession {
+    pipeline: StreamPipeline,
+    events: Sender<StreamEvent>,
+    /// cleared by the client handle on close/drop
+    alive: Arc<AtomicBool>,
+}
+
+impl WorkerSession {
+    /// Flush final telemetry into the pool stats and notify the client.
+    fn finish(self, stats: &Mutex<Stats>) {
+        let activity = self.pipeline.chip.activity();
+        stats.lock().unwrap().activity.merge(&activity);
+        let _ = self.events.send(StreamEvent::Closed {
+            frames: activity.frames,
+            gated_frames: activity.gated_frames,
+        });
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     index: usize,
     params: QuantParams,
     config: ChipConfig,
-    rx: Receiver<(Request, Instant)>,
+    rx: Receiver<Job>,
     resp_tx: SyncSender<Response>,
     stats: Arc<Mutex<Stats>>,
     reports: Arc<Mutex<HashMap<usize, ChipReport>>>,
     stalled: Arc<AtomicBool>,
     depth: Arc<AtomicU64>,
+    chunks: Arc<AtomicU64>,
 ) {
-    let mut chip = KwsChip::new(params, config);
-    while let Ok((req, enqueued)) = rx.recv() {
+    let mut chip = KwsChip::new(params.clone(), config.clone());
+    let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
+    while let Ok(job) = rx.recv() {
         while stalled.load(Ordering::SeqCst) {
             std::thread::sleep(Duration::from_millis(1));
         }
         depth.fetch_sub(1, Ordering::Relaxed);
-        let decision = chip.process_utterance(&req.audio12);
-        let lat_ms = decision.frame_cycles.iter().sum::<u64>() as f64
-            / decision.frame_cycles.len().max(1) as f64
-            / crate::energy::calib::CLOCK_HZ
-            * 1e3;
-        let correct = req.label.map(|l| l == decision.class);
-        let resp = Response {
-            id: req.id,
-            stream: req.stream,
-            class: decision.class,
-            correct,
-            chip_latency_ms: lat_ms,
-            service: enqueued.elapsed(),
-            worker: index,
-        };
-        {
-            let mut s = stats.lock().unwrap();
-            s.completed += 1;
-            if let Some(c) = correct {
-                s.labelled += 1;
-                if c {
-                    s.correct += 1;
+        match job {
+            Job::Utterance(req, enqueued) => {
+                let decision = chip.process_utterance(&req.audio12);
+                let lat_ms = decision.frame_cycles.iter().sum::<u64>() as f64
+                    / decision.frame_cycles.len().max(1) as f64
+                    / crate::energy::calib::CLOCK_HZ
+                    * 1e3;
+                let correct = req.label.map(|l| l == decision.class);
+                let resp = Response {
+                    id: req.id,
+                    stream: req.stream,
+                    class: decision.class,
+                    correct,
+                    chip_latency_ms: lat_ms,
+                    service: enqueued.elapsed(),
+                    worker: index,
+                };
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.completed += 1;
+                    s.per_worker[index].completed += 1;
+                    if let Some(c) = correct {
+                        s.labelled += 1;
+                        if c {
+                            s.correct += 1;
+                        }
+                    }
+                    s.service_us.push(resp.service.as_micros() as u64);
+                    s.activity.merge(&chip.accel.activity);
+                    // merge replaces per-call; keep only the delta by
+                    // zeroing after merge would double-count — instead
+                    // store the latest snapshot per worker in `reports`
+                    // and rebuild; simpler: reset counters.
+                    chip.accel.activity = ChipActivity::default();
+                    chip.accel.sram.reset_counters();
+                }
+                reports.lock().unwrap().insert(index, chip.report());
+                if resp_tx.send(resp).is_err() {
+                    break;
                 }
             }
-            s.service_us.push(resp.service.as_micros() as u64);
-            s.activity.merge(&chip.accel.activity);
-            // merge replaces per-call; keep only the delta by zeroing after
-            // merge would double-count — instead store the latest snapshot
-            // per worker in `reports` and rebuild; simpler: reset counters.
-            chip.accel.activity = ChipActivity::default();
-            chip.accel.sram.reset_counters();
+            Job::StreamOpen { session, config: stream_cfg, events, alive } => {
+                let cfg =
+                    stream_cfg.unwrap_or_else(|| StreamConfig::for_chip(config.clone()));
+                let pipeline = StreamPipeline::new(params.clone(), cfg);
+                // session ids are unique; a collision would be a router bug,
+                // but never leak the old session's telemetry silently
+                if let Some(old) =
+                    sessions.insert(session, WorkerSession { pipeline, events, alive })
+                {
+                    old.finish(&stats);
+                }
+            }
+            Job::StreamData { session, chunk } => {
+                // chunks for unknown/closed sessions are dropped (a late
+                // push after close is not an error)
+                if let Some(sess) = sessions.get_mut(&session) {
+                    let detections = sess.pipeline.push_audio(&chunk);
+                    chunks.fetch_add(1, Ordering::Relaxed);
+                    for d in detections {
+                        let _ = sess.events.send(StreamEvent::Detection(d));
+                    }
+                }
+            }
+            Job::StreamClose { session } => {
+                if let Some(sess) = sessions.remove(&session) {
+                    sess.finish(&stats);
+                }
+            }
         }
-        reports.lock().unwrap().insert(index, chip.report());
-        if resp_tx.send(resp).is_err() {
-            break;
+        // GC sessions whose client vanished without a deliverable Close
+        // (StreamSession::drop on a saturated lane clears `alive` and
+        // gives up) — otherwise their pipelines would live until pool
+        // shutdown
+        if !sessions.is_empty() {
+            let dead: Vec<u64> = sessions
+                .iter()
+                .filter(|(_, s)| !s.alive.load(Ordering::Relaxed))
+                .map(|(&k, _)| k)
+                .collect();
+            for k in dead {
+                if let Some(sess) = sessions.remove(&k) {
+                    sess.finish(&stats);
+                }
+            }
         }
+    }
+    // pool shutdown with sessions still open: flush their telemetry
+    for (_, sess) in sessions.drain() {
+        sess.finish(&stats);
     }
 }
 
@@ -443,6 +829,130 @@ mod tests {
         assert!(s.accuracy() >= 0.0 && s.accuracy() <= 1.0);
         assert!(s.p50_us() > 0);
         assert!(s.p99_us() >= s.p50_us());
+    }
+
+    #[test]
+    fn per_worker_counters_track_spill_and_rejection() {
+        let coord = Coordinator::new(rng_quant(7), ChipConfig::design_point(), 2, 1);
+        coord.set_stalled(0, true);
+        let mut accepted = 0;
+        for i in 0..6 {
+            if coord.submit(request(0, 40 + i)).is_ok() {
+                accepted += 1;
+            }
+        }
+        coord.set_stalled(0, false);
+        let responses = coord.collect(accepted, Duration::from_secs(60));
+        assert_eq!(responses.len(), accepted);
+        let s = coord.stats();
+        assert_eq!(s.per_worker.len(), 2);
+        assert!(s.per_worker[0].pinned_full >= 1, "pinned-full stalls not visible");
+        assert!(s.spilled >= 1, "no spill counted");
+        assert_eq!(s.spilled, s.per_worker[1].spilled_in, "spill target mismatch");
+        let done: u64 = s.per_worker.iter().map(|w| w.completed).sum();
+        assert_eq!(done, s.completed, "per-worker completions don't sum up");
+    }
+
+    #[test]
+    fn stream_session_lifecycle_and_telemetry() {
+        let coord = Coordinator::new(rng_quant(8), ChipConfig::design_point(), 2, 8);
+        let sess = coord.open_stream(3);
+        let cfg = crate::audio::track::TrackConfig {
+            duration_s: 4,
+            keywords: 2,
+            fillers: 0,
+            noise: (0.001, 0.002),
+        };
+        let (audio12, _) = crate::audio::track::synth_track(&cfg, 9);
+        let n_chunks = audio12.chunks(512).count() as u64;
+        for c in audio12.chunks(512) {
+            sess.push_blocking(c.to_vec()).expect("pool alive");
+        }
+        let events = sess.close();
+        let closed_frames = events.iter().find_map(|e| match e {
+            StreamEvent::Closed { frames, .. } => Some(*frames),
+            _ => None,
+        });
+        assert_eq!(
+            closed_frames,
+            Some((audio12.len() / crate::FRAME_SAMPLES) as u64),
+            "session lost frames"
+        );
+        let s = coord.stats();
+        let chunks: u64 = s.per_worker.iter().map(|w| w.stream_chunks).sum();
+        assert_eq!(chunks, n_chunks);
+        assert!(s.activity.frames >= (audio12.len() / crate::FRAME_SAMPLES) as u64);
+    }
+
+    #[test]
+    fn sessions_and_requests_share_the_pool() {
+        let coord = Coordinator::new(rng_quant(9), ChipConfig::design_point(), 2, 8);
+        let sess = coord.open_stream(0);
+        for i in 0..4 {
+            coord.submit(request(i, i)).unwrap();
+        }
+        sess.push_blocking(vec![0i64; 1280]).unwrap();
+        let responses = coord.collect(4, Duration::from_secs(60));
+        assert_eq!(responses.len(), 4);
+        let events = sess.close();
+        assert!(
+            events.iter().any(|e| matches!(e, StreamEvent::Closed { .. })),
+            "no Closed marker"
+        );
+    }
+
+    #[test]
+    fn open_stream_with_applies_custom_vad_config() {
+        let coord = Coordinator::new(rng_quant(12), ChipConfig::design_point(), 2, 8);
+        let sess = coord.open_stream_with(
+            4,
+            StreamConfig::for_chip(ChipConfig::design_point())
+                .with_vad(crate::stream::vad::VadConfig::disabled()),
+        );
+        // pure silence: the default VAD would gate every frame, a disabled
+        // one must clock the ΔRNN on all 10
+        sess.push_blocking(vec![0i64; 1280]).unwrap();
+        let events = sess.close();
+        let closed = events.iter().find_map(|e| match e {
+            StreamEvent::Closed { frames, gated_frames } => Some((*frames, *gated_frames)),
+            _ => None,
+        });
+        assert_eq!(closed, Some((10, 0)), "disabled VAD must never gate");
+    }
+
+    #[test]
+    fn duplicate_stream_ids_are_independent_sessions() {
+        let coord = Coordinator::new(rng_quant(11), ChipConfig::design_point(), 2, 8);
+        let a = coord.open_stream(5);
+        let b = coord.open_stream(5);
+        a.push_blocking(vec![0i64; 256]).unwrap();
+        b.push_blocking(vec![0i64; 512]).unwrap();
+        let ea = a.close();
+        // closing `a` must not tear down `b`'s worker state
+        b.push_blocking(vec![0i64; 256]).unwrap();
+        let eb = b.close();
+        let frames = |evs: &[StreamEvent]| {
+            evs.iter().find_map(|e| match e {
+                StreamEvent::Closed { frames, .. } => Some(*frames),
+                _ => None,
+            })
+        };
+        assert_eq!(frames(&ea), Some(2), "session a lost frames");
+        assert_eq!(frames(&eb), Some(6), "session b died with a, or lost frames");
+    }
+
+    #[test]
+    fn session_outlives_coordinator_safely() {
+        let coord = Coordinator::new(rng_quant(10), ChipConfig::design_point(), 1, 4);
+        let sess = coord.open_stream(1);
+        sess.push_blocking(vec![0i64; 256]).unwrap();
+        drop(coord);
+        // pool gone: pushes fail cleanly and hand the chunk back
+        let chunk = vec![1i64; 128];
+        assert_eq!(sess.push(chunk.clone()), Err(chunk));
+        // the worker flushed a Closed marker during shutdown
+        let events: Vec<StreamEvent> = sess.events.try_iter().collect();
+        assert!(events.iter().any(|e| matches!(e, StreamEvent::Closed { .. })));
     }
 
     #[test]

@@ -16,8 +16,12 @@ pub mod calib;
 /// Aggregated activity of one simulation run (any number of frames).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ChipActivity {
-    /// frames processed
+    /// frames processed (including clock-gated ones — the frame clock is
+    /// wall time for the power model)
     pub frames: u64,
+    /// frames consumed with the ΔRNN clock-gated (VAD idle; no MACs, no
+    /// SRAM reads, no cycles)
+    pub gated_frames: u64,
     /// ΔRNN MAC operations, including the FC layer
     pub mac_ops: u64,
     /// 16-bit weight words read from the SRAM
@@ -41,6 +45,7 @@ pub struct ChipActivity {
 impl ChipActivity {
     pub fn merge(&mut self, other: &ChipActivity) {
         self.frames += other.frames;
+        self.gated_frames += other.gated_frames;
         self.mac_ops += other.mac_ops;
         self.sram_word_reads += other.sram_word_reads;
         self.rnn_cycles += other.rnn_cycles;
@@ -51,6 +56,15 @@ impl ChipActivity {
         self.fired_h += other.fired_h;
         self.total_h += other.total_h;
         self.fex_visits += other.fex_visits;
+    }
+
+    /// ΔRNN duty cycle: fraction of frames where the accelerator actually
+    /// clocked (1.0 without VAD gating).
+    pub fn duty_cycle(&self) -> f64 {
+        if self.frames == 0 {
+            return 1.0;
+        }
+        1.0 - self.gated_frames as f64 / self.frames as f64
     }
 
     /// Combined temporal sparsity: fraction of silent delta lanes.
@@ -183,6 +197,7 @@ mod tests {
         let lanes = (lanes_per_frame * frames as f64) as u64;
         ChipActivity {
             frames,
+            gated_frames: 0,
             mac_ops: lanes * 192 + frames * 768,
             sram_word_reads: lanes * 96 + frames * 384,
             rnn_cycles: frames * calib::CYCLES_FIXED + lanes * calib::CYCLES_PER_LANE,

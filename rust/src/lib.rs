@@ -29,8 +29,15 @@
 //! * [`train`] — training driver that runs the delta-aware `train_step`
 //!   through the active backend and quantises the result into the chip's
 //!   int8 weight format.
+//! * [`stream`] — always-on streaming detection: frame-incremental chip
+//!   driving, energy-based VAD gating (ΔRNN clock-gated between
+//!   utterances), posterior smoothing + wakeword state machine, and
+//!   continuous-detection metrics (miss rate, false-accepts/hour,
+//!   latency).
 //! * [`coordinator`] — streaming serving runtime: routes audio streams to a
-//!   pool of chip-twin workers with dynamic batching and backpressure.
+//!   pool of chip-twin workers with dynamic batching and backpressure;
+//!   long-lived [`coordinator::StreamSession`]s run the always-on pipeline
+//!   per stream with pinned-worker state locality.
 //! * [`baseline`] — the comparison points: dense (non-Δ) accelerator,
 //!   coarse-grained skip-RNN, and an FFT/MFCC FEx cost model.
 //! * [`exp`] — drivers that regenerate every table and figure of the paper.
@@ -51,6 +58,7 @@ pub mod fex;
 pub mod fixed;
 pub mod runtime;
 pub mod sram;
+pub mod stream;
 pub mod train;
 pub mod util;
 

@@ -1,0 +1,319 @@
+//! Wakeword detection state machine: sliding-window posterior smoothing +
+//! hysteresis + refractory debounce over the chip's per-frame logits.
+//!
+//! ```text
+//!            window full, top is a keyword,
+//!            margin >= margin_q            run == on_frames
+//!   ┌──────┐ ───────────────────────► ┌────────┐ ───────► ┌────────────┐
+//!   │ IDLE │                          │ ARMING │  emit    │ REFRACTORY │
+//!   └──────┘ ◄─────────────────────── └────────┘          └────────────┘
+//!      ▲       margin lost / class flip    │                    │
+//!      │       (run restarts on flip)      │                    │
+//!      └───────────────────────────────────┴──── refractory over┘
+//!              VAD-gated frame: flush window + run from any state
+//! ```
+//!
+//! Smoothing uses *summed* logits over a full `window` frames (no division
+//! — exact integer arithmetic, mirrored by `tools/gen_goldens.py` as a
+//! golden regression vector). A detection is emitted when the same keyword
+//! class holds the smoothed top spot with margin `margin_q` over the
+//! runner-up for `on_frames` consecutive frames; the machine then sleeps
+//! `refractory_frames` (debounce) with the window flushed, so one keyword
+//! occurrence produces one event.
+
+use std::collections::VecDeque;
+
+use crate::NUM_CLASSES;
+
+/// First class index that counts as a wakeword (0 = silence, 1 = unknown).
+pub const FIRST_KEYWORD_CLASS: usize = 2;
+
+/// Detector tuning.
+#[derive(Debug, Clone)]
+pub struct DetectorConfig {
+    /// posterior smoothing window (frames); detection requires a full one
+    pub window: usize,
+    /// required margin between the top keyword and the runner-up, on
+    /// *summed* logits over the window (logit value fraction x window)
+    pub margin_q: i64,
+    /// consecutive qualifying frames to confirm (hysteresis)
+    pub on_frames: u32,
+    /// dead frames after an emission (debounce)
+    pub refractory_frames: u32,
+}
+
+impl DetectorConfig {
+    /// Design point: 8-frame (128 ms) smoothing, 3-frame confirm, 480 ms
+    /// refractory. `margin_q` is 2.0 in posterior units per averaged frame
+    /// (logit fraction 14 → 2.0 * 2^14 * window).
+    pub fn design_point() -> Self {
+        Self { window: 8, margin_q: 2 * (1 << 14) * 8, on_frames: 3, refractory_frames: 30 }
+    }
+}
+
+/// One emitted wakeword detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DetectionEvent {
+    /// detected keyword class (always >= [`FIRST_KEYWORD_CLASS`])
+    pub class: usize,
+    /// frame index at which the detection was confirmed
+    pub frame: u64,
+    /// frame index where the confirming run began (onset estimate)
+    pub onset_frame: u64,
+    /// smoothed margin (summed logits) at confirmation
+    pub margin: i64,
+}
+
+impl DetectionEvent {
+    /// End-of-frame sample index of the confirming frame.
+    pub fn sample(&self) -> u64 {
+        (self.frame + 1) * crate::FRAME_SAMPLES as u64
+    }
+
+    /// Wall-clock time of the confirmation (ms into the stream).
+    pub fn time_ms(&self) -> f64 {
+        (self.frame + 1) as f64 * crate::FRAME_SHIFT_MS as f64
+    }
+}
+
+/// The detection state machine.
+#[derive(Debug, Clone)]
+pub struct Detector {
+    pub config: DetectorConfig,
+    window: VecDeque<[i64; NUM_CLASSES]>,
+    sums: [i64; NUM_CLASSES],
+    /// arming candidate (NUM_CLASSES = none)
+    run_class: usize,
+    run_len: u32,
+    run_start: u64,
+    refractory: u32,
+    /// total events emitted (telemetry)
+    pub emitted: u64,
+}
+
+impl Detector {
+    pub fn new(config: DetectorConfig) -> Self {
+        assert!(config.window > 0 && config.on_frames > 0);
+        let window = VecDeque::with_capacity(config.window + 1);
+        Self {
+            config,
+            window,
+            sums: [0; NUM_CLASSES],
+            run_class: NUM_CLASSES,
+            run_len: 0,
+            run_start: 0,
+            refractory: 0,
+            emitted: 0,
+        }
+    }
+
+    fn flush_window(&mut self) {
+        self.window.clear();
+        self.sums = [0; NUM_CLASSES];
+    }
+
+    fn disarm(&mut self) {
+        self.run_class = NUM_CLASSES;
+        self.run_len = 0;
+    }
+
+    /// Advance one frame. `gated` marks a VAD-idle frame (logits invalid):
+    /// the smoothing window and any arming run are flushed, while the
+    /// refractory countdown still elapses.
+    pub fn step(
+        &mut self,
+        index: u64,
+        logits: &[i64; NUM_CLASSES],
+        gated: bool,
+    ) -> Option<DetectionEvent> {
+        if gated {
+            self.flush_window();
+            self.disarm();
+            if self.refractory > 0 {
+                self.refractory -= 1;
+            }
+            return None;
+        }
+        // slide the window
+        self.window.push_back(*logits);
+        for (s, l) in self.sums.iter_mut().zip(logits.iter()) {
+            *s += l;
+        }
+        if self.window.len() > self.config.window {
+            let old = self.window.pop_front().expect("window non-empty");
+            for (s, l) in self.sums.iter_mut().zip(old.iter()) {
+                *s -= l;
+            }
+        }
+        if self.refractory > 0 {
+            self.refractory -= 1;
+            self.disarm();
+            return None;
+        }
+        if self.window.len() < self.config.window {
+            return None;
+        }
+        // smoothed top class (first maximum) and runner-up
+        let mut best = 0usize;
+        for (k, &v) in self.sums.iter().enumerate().skip(1) {
+            if v > self.sums[best] {
+                best = k;
+            }
+        }
+        let mut second = i64::MIN;
+        for (k, &v) in self.sums.iter().enumerate() {
+            if k != best && v > second {
+                second = v;
+            }
+        }
+        let margin = self.sums[best] - second;
+        if best < FIRST_KEYWORD_CLASS || margin < self.config.margin_q {
+            self.disarm();
+            return None;
+        }
+        if best == self.run_class {
+            self.run_len += 1;
+        } else {
+            self.run_class = best;
+            self.run_len = 1;
+            self.run_start = index;
+        }
+        if self.run_len < self.config.on_frames {
+            return None;
+        }
+        // confirmed: emit, flush, debounce
+        let ev = DetectionEvent { class: best, frame: index, onset_frame: self.run_start, margin };
+        self.refractory = self.config.refractory_frames;
+        self.disarm();
+        self.flush_window();
+        self.emitted += 1;
+        Some(ev)
+    }
+
+    /// Restore power-on state (keeps config, clears telemetry).
+    pub fn reset(&mut self) {
+        self.flush_window();
+        self.disarm();
+        self.refractory = 0;
+        self.emitted = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DetectorConfig {
+        DetectorConfig { window: 4, margin_q: 1000, on_frames: 2, refractory_frames: 6 }
+    }
+
+    fn logits(class: usize, strength: i64) -> [i64; NUM_CLASSES] {
+        let mut l = [0i64; NUM_CLASSES];
+        l[class] = strength;
+        l
+    }
+
+    #[test]
+    fn detects_once_then_debounces() {
+        let mut det = Detector::new(cfg());
+        let mut events = Vec::new();
+        for t in 0..12u64 {
+            if let Some(e) = det.step(t, &logits(5, 5000), false) {
+                events.push(e);
+            }
+        }
+        // window full at t=3, run 1 at t=3, confirmed at t=4; refractory 6
+        // blankets t=5..10; window refilled by t=10... second emit later
+        assert!(!events.is_empty(), "no detection");
+        assert_eq!(events[0].class, 5);
+        assert_eq!(events[0].frame, 4);
+        assert_eq!(events[0].onset_frame, 3);
+        // debounce: no second event within refractory + window refill
+        assert!(events.len() <= 2, "debounce failed: {events:?}");
+        if events.len() == 2 {
+            assert!(events[1].frame >= events[0].frame + 6 + 4);
+        }
+    }
+
+    #[test]
+    fn silence_and_unknown_never_fire() {
+        let mut det = Detector::new(cfg());
+        for t in 0..20u64 {
+            assert!(det.step(t, &logits(0, 9000), false).is_none(), "silence fired");
+        }
+        det.reset();
+        for t in 0..20u64 {
+            assert!(det.step(t, &logits(1, 9000), false).is_none(), "unknown fired");
+        }
+    }
+
+    #[test]
+    fn margin_hysteresis_blocks_ambiguous_frames() {
+        let mut det = Detector::new(cfg());
+        // two classes neck-and-neck: margin stays below margin_q
+        let mut l = [0i64; NUM_CLASSES];
+        l[4] = 5000;
+        l[7] = 4900; // summed margin over 4 frames = 400 < 1000
+        for t in 0..20u64 {
+            assert!(det.step(t, &l, false).is_none(), "ambiguous frames fired");
+        }
+    }
+
+    #[test]
+    fn class_flip_restarts_the_run() {
+        let mut c = cfg();
+        c.on_frames = 3;
+        let mut det = Detector::new(c);
+        // fill window with class 4 (2 qualifying frames), then flip to 9
+        for t in 0..5u64 {
+            assert!(det.step(t, &logits(4, 5000), false).is_none());
+        }
+        // flood with class 9: window still mixed, margin favours 9 only
+        // once it dominates the sums; run must restart from the flip
+        let mut fired_at = None;
+        for t in 5..20u64 {
+            if let Some(e) = det.step(t, &logits(9, 50_000), false) {
+                fired_at = Some((t, e));
+                break;
+            }
+        }
+        let (t, e) = fired_at.expect("flip never fired");
+        assert_eq!(e.class, 9);
+        assert!(e.onset_frame >= 5, "run leaked across the class flip");
+        assert!(t >= 7, "on_frames not honoured after flip: t={t}");
+    }
+
+    #[test]
+    fn gated_frames_flush_the_window() {
+        let mut det = Detector::new(cfg());
+        det.step(0, &logits(5, 5000), false);
+        det.step(1, &logits(5, 5000), false);
+        det.step(2, &logits(5, 5000), false);
+        // VAD closes: window flushed, so the pending near-detection dies
+        assert!(det.step(3, &logits(5, 5000), true).is_none());
+        // needs a full window + on_frames again from scratch
+        assert!(det.step(4, &logits(5, 5000), false).is_none());
+        assert!(det.step(5, &logits(5, 5000), false).is_none());
+        assert!(det.step(6, &logits(5, 5000), false).is_none());
+        assert!(det.step(7, &logits(5, 5000), false).is_none(), "window not flushed");
+        assert!(det.step(8, &logits(5, 5000), false).is_some());
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut det = Detector::new(DetectorConfig::design_point());
+            let mut out = Vec::new();
+            for t in 0..200u64 {
+                let mut l = [0i64; NUM_CLASSES];
+                l[(t % 12) as usize] = (t as i64 * 9973) % 40_000;
+                l[6] = if (40..80).contains(&t) { 300_000 } else { 0 };
+                if let Some(e) = det.step(t, &l, t % 17 == 0) {
+                    out.push(e);
+                }
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+}

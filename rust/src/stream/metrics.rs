@@ -1,0 +1,202 @@
+//! Continuous-detection scoring: miss rate, false-accepts/hour and
+//! detection latency against a ground-truth track schedule.
+//!
+//! These are the metrics always-on KWS ICs are judged by (and that a
+//! per-utterance accuracy number cannot express): a detector that fires
+//! constantly has zero misses and is useless. An emitted
+//! [`DetectionEvent`] *hits* a scheduled keyword when it lands inside the
+//! keyword's placement window (plus a decision-delay tolerance) with the
+//! right class; unmatched events — including right-class events at the
+//! wrong time and anything triggered by a filler word — are false accepts.
+
+use super::detector::DetectionEvent;
+use crate::audio::track::TrackEntry;
+
+/// Default post-window tolerance: the detector needs smoothing-window +
+/// confirm frames after the word ends, plus the renderer jitters word
+/// onset inside its 1 s placement window.
+pub const DEFAULT_TOLERANCE_MS: f64 = 750.0;
+
+/// Samples per millisecond at the 8 kHz front door.
+const SAMPLES_PER_MS: f64 = crate::SAMPLE_RATE as f64 / 1000.0;
+
+/// Aggregate detection score for one track.
+#[derive(Debug, Clone, Default)]
+pub struct TrackScore {
+    /// scheduled keywords (ground-truth positives)
+    pub keywords: usize,
+    pub hits: usize,
+    pub misses: usize,
+    pub false_accepts: usize,
+    /// per-hit latency from the placement-window onset (ms)
+    pub latencies_ms: Vec<f64>,
+    /// scored track length (s)
+    pub duration_s: f64,
+}
+
+impl TrackScore {
+    pub fn miss_rate(&self) -> f64 {
+        if self.keywords == 0 {
+            return 0.0;
+        }
+        self.misses as f64 / self.keywords as f64
+    }
+
+    pub fn false_accepts_per_hour(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.false_accepts as f64 / (self.duration_s / 3600.0)
+    }
+
+    /// Median hit latency (ms); `None` when nothing was detected.
+    pub fn median_latency_ms(&self) -> Option<f64> {
+        if self.latencies_ms.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        Some(v[v.len() / 2])
+    }
+}
+
+/// Score a detection-event stream against the ground-truth schedule.
+///
+/// Greedy matching in event order: each event claims the
+/// **latest-starting** still-unmatched keyword whose window
+/// `[onset, onset + len + tol]` contains the event's confirmation sample
+/// and whose class matches (with the post-window tolerance, consecutive
+/// same-class windows can overlap; the latest-onset candidate is the one
+/// the detector could actually have heard most recently, and attributing
+/// to it keeps the latency numbers honest). Duplicate detections of an
+/// already-claimed keyword count as false accepts (the debounce is
+/// supposed to prevent them).
+pub fn score_track(
+    sched: &[TrackEntry],
+    events: &[DetectionEvent],
+    total_samples: u64,
+    tolerance_ms: f64,
+) -> TrackScore {
+    let tol = (tolerance_ms * SAMPLES_PER_MS) as u64;
+    let mut matched = vec![false; sched.len()];
+    let mut score = TrackScore {
+        keywords: sched.iter().filter(|e| e.is_keyword()).count(),
+        duration_s: total_samples as f64 / crate::SAMPLE_RATE as f64,
+        ..TrackScore::default()
+    };
+    for ev in events {
+        let s = ev.sample();
+        // schedule is onset-sorted: reverse scan finds the latest onset
+        let hit = sched
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(i, ent)| {
+                ent.is_keyword()
+                    && !matched[*i]
+                    && ev.class == ent.class
+                    && s >= ent.onset as u64
+                    && s <= ent.onset as u64 + ent.len as u64 + tol
+            })
+            .map(|(i, _)| i);
+        match hit {
+            Some(i) => {
+                matched[i] = true;
+                score.hits += 1;
+                score
+                    .latencies_ms
+                    .push((s - sched[i].onset as u64) as f64 / SAMPLES_PER_MS);
+            }
+            None => score.false_accepts += 1,
+        }
+    }
+    score.misses = score.keywords - score.hits;
+    score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(class: usize, onset: usize) -> TrackEntry {
+        TrackEntry { class, onset, len: 8000 }
+    }
+
+    /// Event confirmed at sample `s` (frame = s/128 - 1).
+    fn event(class: usize, s: u64) -> DetectionEvent {
+        let frame = s / crate::FRAME_SAMPLES as u64 - 1;
+        DetectionEvent { class, frame, onset_frame: frame, margin: 1 }
+    }
+
+    #[test]
+    fn perfect_run_scores_clean() {
+        let sched = [entry(5, 0), entry(9, 20_000), entry(3, 40_000)];
+        let events =
+            [event(5, 7_936), event(9, 28_032), event(3, 47_872)];
+        let s = score_track(&sched, &events, 60 * 8000, DEFAULT_TOLERANCE_MS);
+        assert_eq!((s.keywords, s.hits, s.misses, s.false_accepts), (3, 3, 0, 0));
+        assert_eq!(s.miss_rate(), 0.0);
+        assert_eq!(s.false_accepts_per_hour(), 0.0);
+        let lat = s.median_latency_ms().unwrap();
+        assert!(lat > 900.0 && lat < 1010.0, "latency {lat}");
+    }
+
+    #[test]
+    fn wrong_class_is_miss_plus_false_accept() {
+        let sched = [entry(5, 0)];
+        let events = [event(7, 7_936)];
+        let s = score_track(&sched, &events, 10 * 8000, DEFAULT_TOLERANCE_MS);
+        assert_eq!((s.hits, s.misses, s.false_accepts), (0, 1, 1));
+        assert_eq!(s.miss_rate(), 1.0);
+    }
+
+    #[test]
+    fn out_of_window_event_is_false_accept() {
+        let sched = [entry(5, 0)];
+        // confirmed 2 s after the window closed
+        let events = [event(5, 8000 + 6000 + 16_000)];
+        let s = score_track(&sched, &events, 60 * 8000, DEFAULT_TOLERANCE_MS);
+        assert_eq!((s.hits, s.false_accepts), (0, 1));
+    }
+
+    #[test]
+    fn overlapping_same_class_windows_attribute_to_latest_onset() {
+        // consecutive same-class windows overlap once the tolerance is
+        // added; a fast detection inside the second window must claim the
+        // second keyword (short latency), not the missed first one
+        let sched = [entry(7, 0), entry(7, 12_000)];
+        let events = [event(7, 13_056)]; // 1056 samples after the 2nd onset
+        let s = score_track(&sched, &events, 60 * 8000, DEFAULT_TOLERANCE_MS);
+        assert_eq!((s.hits, s.misses, s.false_accepts), (1, 1, 0));
+        let lat = s.median_latency_ms().unwrap();
+        assert!(lat < 200.0, "latency attributed to the wrong window: {lat}");
+    }
+
+    #[test]
+    fn duplicate_detection_counts_as_false_accept() {
+        let sched = [entry(5, 0)];
+        let events = [event(5, 7_936), event(5, 8_960)];
+        let s = score_track(&sched, &events, 60 * 8000, DEFAULT_TOLERANCE_MS);
+        assert_eq!((s.hits, s.false_accepts), (1, 1));
+    }
+
+    #[test]
+    fn fillers_are_never_positives() {
+        let sched = [entry(1, 0), entry(5, 20_000)];
+        // detector tricked by the filler word
+        let events = [event(4, 7_936)];
+        let s = score_track(&sched, &events, 60 * 8000, DEFAULT_TOLERANCE_MS);
+        assert_eq!(s.keywords, 1);
+        assert_eq!((s.hits, s.misses, s.false_accepts), (0, 1, 1));
+    }
+
+    #[test]
+    fn fa_per_hour_scales_with_duration() {
+        let sched: [TrackEntry; 0] = [];
+        let events = [event(5, 1_024), event(7, 2_048)];
+        let s = score_track(&sched, &events, 3600 * 8000, DEFAULT_TOLERANCE_MS);
+        assert!((s.false_accepts_per_hour() - 2.0).abs() < 1e-9);
+        assert_eq!(s.miss_rate(), 0.0);
+        assert!(s.median_latency_ms().is_none());
+    }
+}

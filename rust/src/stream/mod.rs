@@ -1,0 +1,209 @@
+//! Always-on streaming detection: the continuous-inference subsystem.
+//!
+//! The chip twin's batch API answers "which keyword is in this 1 s clip?";
+//! this module answers the question the silicon was actually built for:
+//! "wake up when a keyword occurs in an endless audio stream, and spend
+//! (almost) nothing the rest of the time". It layers, over the
+//! frame-incremental [`crate::chip::KwsChip`] API:
+//!
+//! * [`vad`] — an energy-based voice-activity gate that clock-gates the
+//!   ΔRNN between utterances (idle frames reach the energy model through
+//!   [`crate::energy::ChipActivity::gated_frames`]);
+//! * [`detector`] — sliding-window posterior smoothing + a
+//!   hysteresis/refractory wakeword state machine emitting
+//!   [`detector::DetectionEvent`]s with onset estimates;
+//! * [`metrics`] — miss rate, false-accepts/hour and detection latency
+//!   against a ground-truth [`crate::audio::track`] schedule.
+//!
+//! [`StreamPipeline`] is the single-stream composition (one microphone →
+//! one chip); [`crate::coordinator::StreamSession`] hosts many of these on
+//! the worker pool.
+
+pub mod detector;
+pub mod metrics;
+pub mod vad;
+
+use crate::accel::gru::QuantParams;
+use crate::chip::{ChipConfig, ChipReport, KwsChip};
+use detector::{Detector, DetectorConfig, DetectionEvent};
+use vad::{Vad, VadConfig};
+
+/// Full streaming-pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    pub chip: ChipConfig,
+    pub vad: VadConfig,
+    pub detector: DetectorConfig,
+}
+
+impl StreamConfig {
+    /// Paper design-point chip + default VAD/detector tuning.
+    pub fn design_point() -> Self {
+        Self::for_chip(ChipConfig::design_point())
+    }
+
+    /// Default VAD/detector tuning over an explicit chip configuration.
+    pub fn for_chip(chip: ChipConfig) -> Self {
+        Self { chip, vad: VadConfig::design_point(), detector: DetectorConfig::design_point() }
+    }
+
+    pub fn with_vad(mut self, vad: VadConfig) -> Self {
+        self.vad = vad;
+        self
+    }
+
+    pub fn with_detector(mut self, detector: DetectorConfig) -> Self {
+        self.detector = detector;
+        self
+    }
+}
+
+/// One always-on detection pipeline: chip twin + VAD gate + wakeword
+/// state machine. Push arbitrary audio chunks, get detection events out;
+/// all state persists across calls until [`reset`](Self::reset).
+pub struct StreamPipeline {
+    pub chip: KwsChip,
+    pub vad: Vad,
+    pub detector: Detector,
+    /// samples consumed since construction/reset
+    pub samples_in: u64,
+}
+
+impl StreamPipeline {
+    pub fn new(params: QuantParams, config: StreamConfig) -> Self {
+        let StreamConfig { chip, vad, detector } = config;
+        Self {
+            chip: KwsChip::new(params, chip),
+            vad: Vad::new(vad),
+            detector: Detector::new(detector),
+            samples_in: 0,
+        }
+    }
+
+    /// Feed a chunk of 12-bit samples; runs every completed frame through
+    /// VAD → (poll | skip) → detector and returns the detections this
+    /// chunk produced. Chunk size is arbitrary — frame boundaries are
+    /// handled internally and results are invariant to the chunking.
+    pub fn push_audio(&mut self, audio12: &[i64]) -> Vec<DetectionEvent> {
+        self.samples_in += audio12.len() as u64;
+        self.chip.push_samples(audio12);
+        let mut events = Vec::new();
+        while let Some(&feat) = self.chip.peek_frame() {
+            let open = self.vad.step(&feat);
+            let out = if open {
+                self.chip.poll_frame()
+            } else {
+                self.chip.skip_frame()
+            }
+            .expect("peeked frame must be consumable");
+            if let Some(ev) = self.detector.step(out.index, &out.logits, out.gated) {
+                events.push(ev);
+            }
+        }
+        events
+    }
+
+    /// Restore power-on state (keeps weights/config; telemetry counters on
+    /// the chip keep aggregating, VAD/detector telemetry clears).
+    pub fn reset(&mut self) {
+        self.chip.reset();
+        self.vad.reset();
+        self.detector.reset();
+        self.samples_in = 0;
+    }
+
+    /// Chip metrics over everything processed so far.
+    pub fn report(&self) -> ChipReport {
+        self.chip.report()
+    }
+
+    /// Fraction of frames the ΔRNN actually clocked (VAD duty cycle).
+    pub fn duty_cycle(&self) -> f64 {
+        self.chip.activity().duty_cycle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audio::track::{synth_track, TrackConfig};
+    use crate::util::prng::Pcg;
+
+    fn rng_quant(seed: u64) -> QuantParams {
+        let mut rng = Pcg::new(seed);
+        let mut q = QuantParams::zeroed();
+        q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+        q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q
+    }
+
+    #[test]
+    fn pipeline_consumes_all_frames_regardless_of_chunking() {
+        let cfg = TrackConfig { duration_s: 4, keywords: 2, fillers: 0, noise: (0.001, 0.002) };
+        let (audio12, _) = synth_track(&cfg, 11);
+        for chunk in [64usize, 128, 1000] {
+            let mut p = StreamPipeline::new(rng_quant(1), StreamConfig::design_point());
+            for c in audio12.chunks(chunk) {
+                p.push_audio(c);
+            }
+            let a = p.chip.activity();
+            assert_eq!(a.frames, (audio12.len() / 128) as u64, "chunk {chunk}");
+            assert_eq!(p.chip.pending_frames(), 0);
+        }
+    }
+
+    #[test]
+    fn vad_gates_silence_and_passes_speech() {
+        let cfg = TrackConfig { duration_s: 6, keywords: 2, fillers: 0, noise: (0.001, 0.002) };
+        let (audio12, sched) = synth_track(&cfg, 3);
+        let mut p = StreamPipeline::new(rng_quant(2), StreamConfig::design_point());
+        for c in audio12.chunks(256) {
+            p.push_audio(c);
+        }
+        let a = p.chip.activity();
+        assert!(a.gated_frames > 0, "VAD never gated on a mostly-silent track");
+        assert!(
+            a.gated_frames < a.frames,
+            "VAD gated everything including {} keywords",
+            sched.len()
+        );
+        let duty = p.duty_cycle();
+        assert!(duty > 0.05 && duty < 0.95, "implausible duty cycle {duty}");
+    }
+
+    #[test]
+    fn disabled_vad_runs_every_frame() {
+        let cfg = TrackConfig { duration_s: 2, keywords: 1, fillers: 0, noise: (0.001, 0.002) };
+        let (audio12, _) = synth_track(&cfg, 5);
+        let sc = StreamConfig::design_point().with_vad(VadConfig::disabled());
+        let mut p = StreamPipeline::new(rng_quant(3), sc);
+        for c in audio12.chunks(512) {
+            p.push_audio(c);
+        }
+        assert_eq!(p.chip.activity().gated_frames, 0);
+        assert!((p.duty_cycle() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gating_reduces_average_power() {
+        let cfg = TrackConfig { duration_s: 6, keywords: 2, fillers: 0, noise: (0.001, 0.002) };
+        let (audio12, _) = synth_track(&cfg, 7);
+        let run = |vad: VadConfig| {
+            let mut p = StreamPipeline::new(
+                rng_quant(4),
+                StreamConfig::design_point().with_vad(vad),
+            );
+            for c in audio12.chunks(256) {
+                p.push_audio(c);
+            }
+            p.report().power.total_uw()
+        };
+        let gated = run(VadConfig::design_point());
+        let always_on = run(VadConfig::disabled());
+        assert!(
+            gated < always_on,
+            "gating must cut average power: {gated} !< {always_on}"
+        );
+    }
+}

@@ -1,0 +1,241 @@
+//! Energy-based voice-activity detection over FEx feature frames.
+//!
+//! The paper's FEx runs every sample regardless of content (the serial IIR
+//! pipeline is the chip's cheapest block); the expensive parts — ΔRNN MACs
+//! and weight-SRAM reads — are what the Δ-threshold already gates *within*
+//! speech. The VAD extends that story to the always-on limit: between
+//! utterances it clock-gates the ΔRNN entirely, so idle time costs only
+//! FEx + leakage (the energy model sees the gated frames through
+//! [`crate::energy::ChipActivity::gated_frames`]).
+//!
+//! Mechanism: frame energy = sum of the 12-bit log-compressed features.
+//! An adaptive noise floor tracks the minimum (instant down, slow up via a
+//! `floor_shift` EMA); the gate opens when energy rises `margin` above the
+//! floor for `attack_frames` consecutive frames and stays open for
+//! `hangover_frames` after energy drops (so word tails and short pauses
+//! don't chop a keyword). Integer-only arithmetic, deterministic.
+
+use crate::fex::FeatureFrame;
+
+/// VAD tuning.
+#[derive(Debug, Clone)]
+pub struct VadConfig {
+    /// master switch: `false` = gate always open (ΔRNN never gated)
+    pub enabled: bool,
+    /// energy rise above the adaptive noise floor that counts as speech
+    /// (summed 12-bit features over the active channels)
+    pub margin: i64,
+    /// consecutive speech frames required to open the gate
+    pub attack_frames: u32,
+    /// frames the gate stays open after energy falls back to the floor
+    pub hangover_frames: u32,
+    /// noise-floor EMA shift: floor += (energy - floor) >> floor_shift
+    /// when energy is above the floor (larger = slower creep)
+    pub floor_shift: u32,
+}
+
+impl VadConfig {
+    /// Design point: open within one 16 ms frame, hold ~200 ms, floor time
+    /// constant ~2 s.
+    pub fn design_point() -> Self {
+        Self { enabled: true, margin: 3000, attack_frames: 1, hangover_frames: 12, floor_shift: 7 }
+    }
+
+    /// Gate permanently open (for A/B energy comparisons and batch-equiv
+    /// tests).
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::design_point() }
+    }
+}
+
+/// Extra floor-EMA shift while the gate is open (8x slower adaptation):
+/// large enough that speech never closes its own gate, small enough that
+/// a stationary noise step re-arms gating in tens of seconds.
+const OPEN_FLOOR_PENALTY: u32 = 3;
+
+/// The VAD gate.
+#[derive(Debug, Clone)]
+pub struct Vad {
+    pub config: VadConfig,
+    /// adaptive noise floor (negative = unset)
+    floor: i64,
+    above: u32,
+    hang: u32,
+    active: bool,
+    /// telemetry
+    pub frames_active: u64,
+    pub frames_idle: u64,
+}
+
+impl Vad {
+    pub fn new(config: VadConfig) -> Self {
+        Self { config, floor: -1, above: 0, hang: 0, active: false, frames_active: 0, frames_idle: 0 }
+    }
+
+    /// Frame energy: summed 12-bit features (inactive slots read 0).
+    pub fn energy(feat: &FeatureFrame) -> i64 {
+        feat.iter().sum()
+    }
+
+    /// Advance one frame; returns whether the ΔRNN gate is open.
+    pub fn step(&mut self, feat: &FeatureFrame) -> bool {
+        if !self.config.enabled {
+            self.frames_active += 1;
+            return true;
+        }
+        let e = Self::energy(feat);
+        if self.floor < 0 || e < self.floor {
+            self.floor = e; // instant floor drop
+        } else {
+            // asymmetric adaptation: fast-ish creep while the gate is
+            // closed, much slower while it is open — a keyword-length
+            // utterance cannot drag the floor to speech level and cut
+            // itself off, but a *sustained* ambient step (a fan turning
+            // on) still re-arms gating within ~30 s instead of pinning
+            // the ΔRNN duty cycle at 100% forever
+            let shift = if self.active {
+                self.config.floor_shift + OPEN_FLOOR_PENALTY
+            } else {
+                self.config.floor_shift
+            };
+            self.floor += (e - self.floor) >> shift;
+        }
+        let speech = e - self.floor >= self.config.margin;
+        if speech {
+            self.above += 1;
+            if self.above >= self.config.attack_frames {
+                self.active = true;
+                self.hang = self.config.hangover_frames;
+            }
+        } else {
+            self.above = 0;
+            if self.active {
+                if self.hang > 0 {
+                    self.hang -= 1;
+                } else {
+                    self.active = false;
+                }
+            }
+        }
+        if self.active {
+            self.frames_active += 1;
+        } else {
+            self.frames_idle += 1;
+        }
+        self.active
+    }
+
+    /// Restore power-on state (keeps config, clears telemetry).
+    ///
+    /// Note: the authoritative ΔRNN duty cycle lives in
+    /// [`crate::energy::ChipActivity::duty_cycle`] (gated-frame counts);
+    /// `frames_active`/`frames_idle` here are the VAD's own gate
+    /// telemetry for standalone use.
+    pub fn reset(&mut self) {
+        self.floor = -1;
+        self.above = 0;
+        self.hang = 0;
+        self.active = false;
+        self.frames_active = 0;
+        self.frames_idle = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fex::MAX_CHANNELS;
+
+    fn frame(per_channel: i64) -> FeatureFrame {
+        let mut f = [0i64; MAX_CHANNELS];
+        for v in f.iter_mut().take(14).skip(4) {
+            *v = per_channel;
+        }
+        f
+    }
+
+    #[test]
+    fn opens_on_energy_rise_and_holds_hangover() {
+        let mut vad = Vad::new(VadConfig::design_point());
+        // settle the floor on quiet frames
+        for _ in 0..10 {
+            assert!(!vad.step(&frame(100)));
+        }
+        // loud burst opens the gate on the first frame (attack 1)
+        assert!(vad.step(&frame(2000)));
+        // back to quiet: stays open for hangover frames, then closes
+        let hang = vad.config.hangover_frames;
+        for i in 0..hang {
+            assert!(vad.step(&frame(100)), "closed early at hangover frame {i}");
+        }
+        assert!(!vad.step(&frame(100)), "hangover did not expire");
+    }
+
+    #[test]
+    fn adapts_to_noise_floor_level() {
+        // a *constant* high floor must not read as speech
+        let mut vad = Vad::new(VadConfig::design_point());
+        assert!(!vad.step(&frame(2500)), "first frame sets the floor");
+        for _ in 0..20 {
+            assert!(!vad.step(&frame(2500)), "steady state misread as speech");
+        }
+        // but a rise above that floor does
+        assert!(vad.step(&frame(3000)));
+    }
+
+    #[test]
+    fn disabled_vad_never_gates() {
+        let mut vad = Vad::new(VadConfig::disabled());
+        for _ in 0..5 {
+            assert!(vad.step(&frame(0)));
+        }
+        assert_eq!(vad.frames_idle, 0);
+        assert_eq!(vad.frames_active, 5);
+    }
+
+    #[test]
+    fn attack_requires_consecutive_frames() {
+        let mut cfg = VadConfig::design_point();
+        cfg.attack_frames = 3;
+        let mut vad = Vad::new(cfg);
+        for _ in 0..5 {
+            vad.step(&frame(100));
+        }
+        assert!(!vad.step(&frame(2000)), "one frame must not open at attack 3");
+        assert!(!vad.step(&frame(2000)));
+        assert!(vad.step(&frame(2000)), "third consecutive frame opens");
+    }
+
+    #[test]
+    fn floor_adapts_slowly_open_fast_closed() {
+        let mut vad = Vad::new(VadConfig::design_point());
+        for _ in 0..10 {
+            vad.step(&frame(100)); // learn a quiet floor
+        }
+        // a multi-second utterance must stay gated open throughout (the
+        // floor creeps only at the slow open-gate rate) ...
+        for i in 0..300 {
+            assert!(vad.step(&frame(2000)), "gate closed mid-utterance at frame {i}");
+        }
+        // ... but a *sustained* ambient step (fan turns on and stays on)
+        // must eventually re-arm gating instead of pinning the gate open
+        let mut closed = false;
+        for _ in 0..4_000 {
+            if !vad.step(&frame(2000)) {
+                closed = true;
+                break;
+            }
+        }
+        assert!(closed, "gate never re-armed after a stationary noise step");
+    }
+
+    #[test]
+    fn reset_restores_power_on() {
+        let mut vad = Vad::new(VadConfig::design_point());
+        vad.step(&frame(100));
+        vad.step(&frame(4000));
+        vad.reset();
+        assert_eq!(vad.frames_active + vad.frames_idle, 0);
+        assert!(!vad.step(&frame(4000)), "floor must be re-learnt after reset");
+    }
+}

@@ -12,6 +12,7 @@
 use deltakws::accel::encoder::{encode, DeltaEvent};
 use deltakws::accel::gru::{QuantParams, C};
 use deltakws::accel::{AccelConfig, DeltaRnnAccel};
+use deltakws::audio::track::{schedule, TrackConfig};
 use deltakws::baseline::DenseGruAccel;
 use deltakws::dataset::{Dataset, Split};
 use deltakws::energy::SramKind;
@@ -19,6 +20,7 @@ use deltakws::fex::biquad::Cascade;
 use deltakws::fex::design::QuantBiquad;
 use deltakws::fex::postproc::{log_compress, Envelope};
 use deltakws::fixed::QFormat;
+use deltakws::stream::detector::{Detector, DetectorConfig};
 use deltakws::util::prng::Pcg;
 
 // ---------------------------------------------------------------------------
@@ -142,6 +144,106 @@ fn delta_at_zero_threshold_is_bit_exact_dense_on_synth_utterances() {
         }
         // and the Δ path did real event elision bookkeeping meanwhile
         assert_eq!(delta.activity.total_x, 62 * 10);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Long-form track schedule: the streaming workload's ground truth
+// ---------------------------------------------------------------------------
+
+/// Keyword/filler placement for the 60 s design-point track at seed
+/// 0x517EAD (regenerate with `python3 tools/gen_goldens.py`). The schedule
+/// draws are integer-only precisely so this independent oracle exists.
+const TRACK_GOLDEN: [(usize, usize); 26] = [
+    (11, 3941),
+    (10, 25169),
+    (10, 46016),
+    (1, 64863),
+    (7, 80624),
+    (7, 92824),
+    (8, 117100),
+    (1, 138798),
+    (5, 147964),
+    (10, 169660),
+    (9, 185830),
+    (1, 204642),
+    (8, 225362),
+    (7, 244883),
+    (10, 260401),
+    (1, 285733),
+    (7, 298114),
+    (9, 324171),
+    (4, 335211),
+    (1, 359331),
+    (8, 372218),
+    (8, 397487),
+    (9, 410376),
+    (1, 434887),
+    (10, 448630),
+    (8, 469810),
+];
+
+#[test]
+fn track_schedule_matches_golden() {
+    let cfg = TrackConfig { duration_s: 60, keywords: 20, fillers: 6, noise: (0.001, 0.003) };
+    let sched = schedule(&cfg, 0x517EAD);
+    assert_eq!(sched.len(), TRACK_GOLDEN.len(), "schedule length drifted");
+    for (t, (e, &(class, onset))) in sched.iter().zip(TRACK_GOLDEN.iter()).enumerate() {
+        assert_eq!(
+            (e.class, e.onset),
+            (class, onset),
+            "track schedule diverged at entry {t}"
+        );
+        assert_eq!(e.len, 8000);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Wakeword detector state machine: expected detections for a fixed
+//    logit stream (two keyword bursts + one VAD-gated gap)
+// ---------------------------------------------------------------------------
+
+/// (class, confirm frame, onset frame, margin) — the detector's integer
+/// state machine is mirrored in `tools/gen_goldens.py`; each burst fires
+/// once at onset + window-fill + hysteresis and once more after the
+/// refractory window, pinning smoothing, debounce and flush behaviour.
+const DETECTOR_GOLDEN: [(usize, u64, u64, i64); 4] = [
+    (5, 44, 42, 246190),
+    (5, 72, 70, 398549),
+    (9, 124, 122, 243486),
+    (9, 152, 150, 398188),
+];
+
+#[test]
+fn detector_state_machine_matches_golden() {
+    let cfg = DetectorConfig {
+        window: 8,
+        margin_q: 120_000,
+        on_frames: 3,
+        refractory_frames: 25,
+    };
+    let mut det = Detector::new(cfg);
+    let mut rng = Pcg::new(0xDE7EC7);
+    let mut events = Vec::new();
+    for t in 0..200u64 {
+        let mut logits = [0i64; deltakws::NUM_CLASSES];
+        for l in logits.iter_mut() {
+            *l = rng.below(2000) as i64;
+        }
+        if (40..80).contains(&t) {
+            logits[5] += 50_000;
+        }
+        if (120..160).contains(&t) {
+            logits[9] += 50_000;
+        }
+        let gated = (90..100).contains(&t);
+        if let Some(e) = det.step(t, &logits, gated) {
+            events.push((e.class, e.frame, e.onset_frame, e.margin));
+        }
+    }
+    assert_eq!(events.len(), DETECTOR_GOLDEN.len(), "event count drifted: {events:?}");
+    for (i, (got, want)) in events.iter().zip(DETECTOR_GOLDEN.iter()).enumerate() {
+        assert_eq!(got, want, "detector golden diverged at event {i}");
     }
 }
 

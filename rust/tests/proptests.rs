@@ -10,6 +10,7 @@ use deltakws::accel::fifo::Fifo;
 use deltakws::accel::gru::{QuantParams, C, H};
 use deltakws::accel::{AccelConfig, DeltaRnnAccel};
 use deltakws::baseline::DenseGruAccel;
+use deltakws::chip::{ChipConfig, KwsChip};
 use deltakws::energy::SramKind;
 use deltakws::fixed;
 use deltakws::util::check::forall;
@@ -208,6 +209,44 @@ fn prop_delta_events_bounded_by_lanes() {
                 + (n_act + H) as u64 * deltakws::energy::calib::CYCLES_PER_LANE;
             assert!(r.cycles <= max_cycles);
         }
+    });
+}
+
+#[test]
+fn prop_vad_gated_idle_segments_never_mutate_hidden_state() {
+    // the streaming pipeline's functional-safety invariant: however
+    // poll_frame and skip_frame interleave, a gated (VAD-idle) frame must
+    // leave the ΔRNN state buffer and SRAM traffic bit-identical, while
+    // still advancing the energy model's frame clock
+    forall(12, |rng| {
+        let q = arb_quant(rng);
+        let th = rng.below(128) as i16;
+        let mut chip =
+            KwsChip::new(q, ChipConfig::design_point().with_delta_th(th));
+        // random 12-bit audio, 8..24 frames worth
+        let n_samples = 128 * (rng.below(17) + 8);
+        let audio: Vec<i64> = (0..n_samples).map(|_| rng.below(4096) as i64 - 2048).collect();
+        chip.push_samples(&audio);
+        let mut gated_seen = 0u64;
+        while chip.pending_frames() > 0 {
+            if rng.uniform() < 0.5 {
+                let before = chip.accel.state().clone();
+                let reads = chip.accel.sram.reads;
+                let cycles = chip.accel.activity.rnn_cycles;
+                let frames = chip.accel.activity.frames;
+                let f = chip.skip_frame().unwrap();
+                assert!(f.gated && f.cycles == 0 && f.fired == 0);
+                assert_eq!(*chip.accel.state(), before, "gated frame mutated ΔRNN state");
+                assert_eq!(chip.accel.sram.reads, reads, "gated frame read SRAM");
+                assert_eq!(chip.accel.activity.rnn_cycles, cycles, "gated frame cost cycles");
+                assert_eq!(chip.accel.activity.frames, frames + 1, "frame clock stalled");
+                gated_seen += 1;
+            } else {
+                let f = chip.poll_frame().unwrap();
+                assert!(!f.gated);
+            }
+        }
+        assert_eq!(chip.activity().gated_frames, gated_seen);
     });
 }
 

@@ -1,0 +1,156 @@
+//! Streaming-subsystem integration: the acceptance criteria of the
+//! always-on pipeline.
+//!
+//! * streaming ≡ batch: feeding an utterance through `push_samples` /
+//!   `poll_frame` in random-sized chunks reproduces `process_utterance`
+//!   bit for bit — decisions, logits, cycle and feature traces — on 100
+//!   utterances across every class;
+//! * VAD gating is free of functional side effects (gated frames never
+//!   touch the ΔRNN) and strictly cheaper on the energy model;
+//! * coordinator stream sessions conserve audio and deliver detections
+//!   from the pinned worker.
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::accel::{AccelConfig, DeltaRnnAccel};
+use deltakws::energy::SramKind;
+use deltakws::fex::MAX_CHANNELS;
+use deltakws::audio::track::{synth_track, TrackConfig};
+use deltakws::chip::{ChipConfig, Decision, KwsChip};
+use deltakws::coordinator::{Coordinator, StreamEvent};
+use deltakws::dataset::{Dataset, Split};
+use deltakws::stream::vad::VadConfig;
+use deltakws::stream::{StreamConfig, StreamPipeline};
+use deltakws::util::prng::Pcg;
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.b.iter_mut().for_each(|w| *w = (rng.below(512) as i16) - 256);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+#[test]
+fn streaming_equals_batch_bit_exact_on_100_utterances() {
+    let ds = Dataset::new(0xACCE);
+    let mut batch = KwsChip::new(rng_quant(1), ChipConfig::design_point());
+    let mut stream = KwsChip::new(rng_quant(1), ChipConfig::design_point());
+    let mut chunk_rng = Pcg::new(0xC0FFEE);
+    for i in 0..100usize {
+        let utt = ds.utterance(Split::Test, i);
+        let want = batch.process_utterance(&utt.audio12);
+
+        stream.reset();
+        let mut frames = Vec::new();
+        let mut off = 0usize;
+        while off < utt.audio12.len() {
+            // random chunk sizes: 1..=977 samples, crossing frame
+            // boundaries in every possible alignment over 100 utterances
+            let n = (chunk_rng.below(977) + 1).min(utt.audio12.len() - off);
+            stream.push_samples(&utt.audio12[off..off + n]);
+            off += n;
+            while let Some(f) = stream.poll_frame() {
+                frames.push(f);
+            }
+        }
+        let got = Decision::from_frames(&frames, stream.config.warmup);
+
+        assert_eq!(got.class, want.class, "utt {i}: class diverged");
+        assert_eq!(got.logits, want.logits, "utt {i}: logits diverged");
+        assert_eq!(got.frame_cycles, want.frame_cycles, "utt {i}: cycle trace diverged");
+        assert_eq!(got.frame_fired, want.frame_fired, "utt {i}: fired trace diverged");
+        assert_eq!(got.feat_trace, want.feat_trace, "utt {i}: feature trace diverged");
+    }
+}
+
+#[test]
+fn gated_frames_have_no_functional_side_effects() {
+    // skip a 40-frame prefix through the VAD-gate path, then prove the
+    // skipped frames left zero trace on the ΔRNN: a *fresh* accelerator
+    // stepped directly with only the suffix features must reproduce every
+    // suffix logit bit for bit
+    let q = rng_quant(3);
+    let cfg = TrackConfig { duration_s: 2, keywords: 1, fillers: 0, noise: (0.001, 0.002) };
+    let (audio12, _) = synth_track(&cfg, 17);
+
+    let mut gated = KwsChip::new(q.clone(), ChipConfig::design_point());
+    gated.push_samples(&audio12);
+    let state0 = gated.accel.state().clone();
+    for _ in 0..40 {
+        gated.skip_frame().unwrap();
+    }
+    assert_eq!(*gated.accel.state(), state0, "skip_frame mutated the ΔRNN");
+    let mut suffix = Vec::new();
+    while let Some(f) = gated.poll_frame() {
+        suffix.push(f);
+    }
+    assert!(!suffix.is_empty());
+    assert_eq!(gated.activity().gated_frames, 40);
+
+    let mut fresh = DeltaRnnAccel::new(q, AccelConfig::design_point(), SramKind::NearVth);
+    for (t, f) in suffix.iter().enumerate() {
+        let mut qf = [0i16; MAX_CHANNELS];
+        for (c, &v) in f.feat.iter().enumerate() {
+            qf[c] = (v >> 3) as i16;
+        }
+        let r = fresh.step_frame(&qf);
+        assert_eq!(r.logits, f.logits, "suffix frame {t}: gated prefix leaked state");
+    }
+}
+
+#[test]
+fn vad_gating_is_strictly_cheaper_and_functionally_gated() {
+    let cfg = TrackConfig { duration_s: 8, keywords: 2, fillers: 1, noise: (0.001, 0.002) };
+    let (audio12, _) = synth_track(&cfg, 23);
+    let run = |vad: VadConfig| {
+        let mut p = StreamPipeline::new(
+            rng_quant(5),
+            StreamConfig::design_point().with_vad(vad),
+        );
+        for c in audio12.chunks(320) {
+            p.push_audio(c);
+        }
+        let a = p.chip.activity();
+        (a.gated_frames, a.mac_ops, a.sram_word_reads, p.report().power.total_uw())
+    };
+    let (g_gated, g_macs, g_reads, g_power) = run(VadConfig::design_point());
+    let (o_gated, o_macs, o_reads, o_power) = run(VadConfig::disabled());
+    assert_eq!(o_gated, 0);
+    assert!(g_gated > 0, "VAD never gated");
+    assert!(g_macs < o_macs, "gating must elide MACs: {g_macs} !< {o_macs}");
+    assert!(g_reads < o_reads, "gating must elide SRAM reads");
+    assert!(g_power < o_power, "gating must cut average power");
+}
+
+#[test]
+fn coordinator_sessions_detect_on_the_pinned_worker() {
+    // two sessions on a 3-worker pool, interleaved with batch requests:
+    // every chunk of a stream must be processed (frame conservation) and
+    // events must flow back asynchronously
+    let coord = Coordinator::new(rng_quant(7), ChipConfig::design_point(), 3, 8);
+    let cfg = TrackConfig { duration_s: 4, keywords: 2, fillers: 0, noise: (0.001, 0.002) };
+    let (audio12, _) = synth_track(&cfg, 31);
+    let s1 = coord.open_stream(10);
+    let s2 = coord.open_stream(11);
+    for c in audio12.chunks(640) {
+        s1.push_blocking(c.to_vec()).expect("pool alive");
+        s2.push_blocking(c.to_vec()).expect("pool alive");
+    }
+    let frames_expected = (audio12.len() / deltakws::FRAME_SAMPLES) as u64;
+    for sess in [s1, s2] {
+        let events = sess.close();
+        let closed = events.iter().find_map(|e| match e {
+            StreamEvent::Closed { frames, gated_frames } => Some((*frames, *gated_frames)),
+            _ => None,
+        });
+        let (frames, gated) = closed.expect("no Closed marker");
+        assert_eq!(frames, frames_expected, "session lost frames");
+        assert!(gated < frames, "session gated everything");
+    }
+    let stats = coord.stats();
+    let chunks: u64 = stats.per_worker.iter().map(|w| w.stream_chunks).sum();
+    assert_eq!(chunks, 2 * audio12.chunks(640).count() as u64);
+    assert!(stats.activity.frames >= 2 * frames_expected);
+}

@@ -32,6 +32,18 @@ class Pcg:
         rot = old >> 59
         return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) & 0xFFFFFFFF
 
+    def next_u64(self):
+        return (self.next_u32() << 32) | self.next_u32()
+
+    def below(self, n):
+        """Unbiased uniform in [0, n) via rejection (mirror of prng.rs)."""
+        assert n > 0
+        zone = M64 - (M64 % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
 
 # ---------------------------------------------------------------------------
 # fixed-point primitives (rust/src/fixed/mod.rs)
@@ -136,6 +148,135 @@ def encoder_golden():
     return fired_total, h, first_events
 
 
+# ---------------------------------------------------------------------------
+# Long-form track schedule golden (rust/src/audio/track.rs::schedule)
+# ---------------------------------------------------------------------------
+
+TRACK_SCHED_STREAM = 0x7363_6865_6475_6C65  # "schedule"
+SAMPLE_RATE = 8000
+UTT_SAMPLES = 8000
+NUM_CLASSES = 12
+
+
+def track_schedule_golden(duration_s=60, keywords=20, fillers=6, seed=0x517EAD):
+    """Integer-exact mirror of audio::track::schedule at the design point."""
+    n = keywords + fillers
+    total = duration_s * SAMPLE_RATE
+    assert n * UTT_SAMPLES <= total
+    span = total // n
+    jitter = span - UTT_SAMPLES
+    filler_every = n // fillers if fillers > 0 else 0
+    rng = Pcg(seed, TRACK_SCHED_STREAM)
+    out = []
+    placed = 0
+    for i in range(n):
+        is_filler = filler_every > 0 and placed < fillers and (i + 1) % filler_every == 0
+        if is_filler:
+            placed += 1
+            cls = 1
+        else:
+            cls = 2 + rng.below(NUM_CLASSES - 2)
+        onset = i * span + (rng.below(jitter) if jitter > 0 else 0)
+        out.append((cls, onset))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Wakeword detector golden (rust/src/stream/detector.rs)
+# ---------------------------------------------------------------------------
+
+
+class Detector:
+    """Integer-exact mirror of stream::detector::Detector."""
+
+    FIRST_KEYWORD_CLASS = 2
+
+    def __init__(self, window, margin_q, on_frames, refractory_frames):
+        self.cfg_window = window
+        self.margin_q = margin_q
+        self.on_frames = on_frames
+        self.refractory_frames = refractory_frames
+        self.window = []
+        self.sums = [0] * NUM_CLASSES
+        self.run_class = NUM_CLASSES
+        self.run_len = 0
+        self.run_start = 0
+        self.refractory = 0
+
+    def _flush(self):
+        self.window = []
+        self.sums = [0] * NUM_CLASSES
+
+    def _disarm(self):
+        self.run_class = NUM_CLASSES
+        self.run_len = 0
+
+    def step(self, index, logits, gated):
+        if gated:
+            self._flush()
+            self._disarm()
+            if self.refractory > 0:
+                self.refractory -= 1
+            return None
+        self.window.append(list(logits))
+        for k in range(NUM_CLASSES):
+            self.sums[k] += logits[k]
+        if len(self.window) > self.cfg_window:
+            old = self.window.pop(0)
+            for k in range(NUM_CLASSES):
+                self.sums[k] -= old[k]
+        if self.refractory > 0:
+            self.refractory -= 1
+            self._disarm()
+            return None
+        if len(self.window) < self.cfg_window:
+            return None
+        best = 0
+        for k in range(1, NUM_CLASSES):
+            if self.sums[k] > self.sums[best]:
+                best = k
+        second = None
+        for k in range(NUM_CLASSES):
+            if k != best and (second is None or self.sums[k] > second):
+                second = self.sums[k]
+        margin = self.sums[best] - second
+        if best < self.FIRST_KEYWORD_CLASS or margin < self.margin_q:
+            self._disarm()
+            return None
+        if best == self.run_class:
+            self.run_len += 1
+        else:
+            self.run_class = best
+            self.run_len = 1
+            self.run_start = index
+        if self.run_len < self.on_frames:
+            return None
+        ev = (best, index, self.run_start, margin)
+        self.refractory = self.refractory_frames
+        self._disarm()
+        self._flush()
+        return ev
+
+
+def detector_golden():
+    """Drive the detector mirror with a PCG logit stream (two keyword
+    bursts, one VAD-gated gap) and return the emitted events."""
+    det = Detector(window=8, margin_q=120_000, on_frames=3, refractory_frames=25)
+    rng = Pcg(0xDE7EC7)
+    events = []
+    for t in range(200):
+        logits = [rng.below(2000) for _ in range(NUM_CLASSES)]
+        if 40 <= t < 80:
+            logits[5] += 50_000
+        if 120 <= t < 160:
+            logits[9] += 50_000
+        gated = 90 <= t < 100
+        ev = det.step(t, logits, gated)
+        if ev is not None:
+            events.append(ev)
+    return events
+
+
 def fmt(xs, per_line=10):
     lines = []
     for i in range(0, len(xs), per_line):
@@ -152,3 +293,15 @@ if __name__ == "__main__":
     print(f"const ENC_FIRED_TOTAL: usize = {fired};")
     print(f"const ENC_HASH: u64 = 0x{h:016x};")
     print(f"const ENC_FIRST_EVENTS: [(u16, i32); {len(first)}] = {first!r};")
+    sched = track_schedule_golden()
+    print(f"\n// track schedule golden (60 s, 20 keywords + 6 fillers, seed 0x517EAD):")
+    print(f"const TRACK_GOLDEN: [(usize, usize); {len(sched)}] = [")
+    for cls, onset in sched:
+        print(f"    ({cls}, {onset}),")
+    print("];")
+    dets = detector_golden()
+    print(f"\n// detector golden (window 8, margin 120000, on 3, refractory 25):")
+    print(f"const DETECTOR_GOLDEN: [(usize, u64, u64, i64); {len(dets)}] = [")
+    for cls, frame, onset, margin in dets:
+        print(f"    ({cls}, {frame}, {onset}, {margin}),")
+    print("];")
