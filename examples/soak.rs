@@ -1,0 +1,104 @@
+//! Sustained-load soak run: the coordinator under minutes of simulated
+//! audio, with the telemetry guarantees checked live.
+//!
+//! Runs the acceptance workload (≥50k mixed utterance/stream jobs across
+//! ≥4 workers) twice: once with the pre-refactor telemetry cost emulated
+//! alongside (global mutex push + per-completion float rollup at the
+//! pool's completion rate — the baseline), once clean. Prints sustained
+//! decisions/sec for both, the histogram-vs-exact percentile cross-check,
+//! and the flat-memory proof. The clean number is the throughput baseline
+//! later scaling PRs are judged against (README "Soak throughput" table).
+//!
+//! Weights are deterministic-random: load characteristics (frame counts,
+//! cycle counts, queueing) do not depend on model quality.
+//!
+//! Run: `cargo run --release --example soak -- [workers] [utterances] [producers] [streams]`
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::chip::ChipConfig;
+use deltakws::coordinator::soak::{run_soak, SoakConfig, SoakReport};
+use deltakws::util::prng::Pcg;
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+fn print_report(label: &str, r: &SoakReport) {
+    println!("\n== soak: {label} ==");
+    println!(
+        "load       : {} utterances + {} stream chunks ({:.0} s simulated audio) in {:.2} s wall",
+        r.utterances_done,
+        r.chunks_done,
+        r.simulated_audio_s,
+        r.wall.as_secs_f64()
+    );
+    println!("throughput : {:.0} decisions/s sustained", r.decisions_per_sec);
+    println!(
+        "latency    : p50 {:.2} ms / p99 {:.2} ms (histogram)  vs  {:.2} / {:.2} ms exact — {:.2}% off",
+        r.p50_us as f64 / 1e3,
+        r.p99_us as f64 / 1e3,
+        r.exact_p50_us as f64 / 1e3,
+        r.exact_p99_us as f64 / 1e3,
+        r.percentile_rel_err() * 100.0
+    );
+    println!(
+        "telemetry  : {} B at 10% of run, {} B at end (flat ✓); {} producer retries; {} spills",
+        r.telemetry_bytes_early,
+        r.telemetry_bytes_final,
+        r.producer_retries,
+        r.final_stats.spilled
+    );
+    println!(
+        "chip       : {:.1}% temporal sparsity, {:.1}% ΔRNN duty cycle over {} frames",
+        r.final_stats.activity.sparsity() * 100.0,
+        r.final_stats.activity.duty_cycle() * 100.0,
+        r.final_stats.activity.frames
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = SoakConfig::acceptance();
+    if let Some(v) = args.first().and_then(|s| s.parse().ok()) {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get(1).and_then(|s| s.parse().ok()) {
+        cfg.utterances = v;
+    }
+    if let Some(v) = args.get(2).and_then(|s| s.parse().ok()) {
+        cfg.producers = v;
+    }
+    if let Some(v) = args.get(3).and_then(|s| s.parse().ok()) {
+        cfg.streams = v;
+    }
+    println!(
+        "soak: {} workers, {} producers, {} utterances, {} streams x {} chunks",
+        cfg.workers, cfg.producers, cfg.utterances, cfg.streams, cfg.chunks_per_stream
+    );
+
+    // A: pre-refactor telemetry cost emulated alongside (baseline)
+    let mut legacy_cfg = cfg.clone();
+    legacy_cfg.emulate_legacy_telemetry = true;
+    let baseline = run_soak(rng_quant(7), ChipConfig::design_point(), &legacy_cfg);
+    print_report("emulated legacy telemetry (baseline)", &baseline);
+
+    // B: sharded telemetry only (the refactored serving spine)
+    let sharded = run_soak(rng_quant(7), ChipConfig::design_point(), &cfg);
+    print_report("sharded telemetry", &sharded);
+
+    println!(
+        "\nsharded vs baseline: {:.0} vs {:.0} decisions/s ({:+.1}%)",
+        sharded.decisions_per_sec,
+        baseline.decisions_per_sec,
+        (sharded.decisions_per_sec / baseline.decisions_per_sec - 1.0) * 100.0
+    );
+    assert!(
+        sharded.percentile_rel_err() <= 0.05,
+        "histogram percentiles drifted past 5% of exact"
+    );
+}

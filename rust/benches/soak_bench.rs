@@ -1,0 +1,77 @@
+//! Soak/telemetry benchmarks: the contention the sharded refactor removed.
+//!
+//! A/Bs the telemetry record primitives under multi-threaded load — one
+//! lock-free per-thread histogram shard each (the new worker hot path) vs
+//! all threads pushing into a single `Mutex<Vec<u64>>` (the old
+//! `Stats.service_us` pattern) — and runs a micro soak end-to-end for a
+//! sustained decisions/sec figure.
+//!
+//! Run: `cargo bench --bench soak_bench` (DELTAKWS_BENCH_SMOKE=1 for CI).
+
+mod common;
+
+use std::sync::Mutex;
+
+use deltakws::chip::ChipConfig;
+use deltakws::coordinator::soak::{run_soak, SoakConfig};
+use deltakws::util::bench::{black_box, Bench};
+use deltakws::util::hist::AtomicLogHistogram;
+
+const THREADS: usize = 4;
+const RECORDS: u64 = 8_000;
+
+fn main() {
+    let mut b = Bench::new("soak");
+    let total = (THREADS as u64 * RECORDS) as f64;
+
+    b.bench_with_items("record: per-thread atomic histogram shards", total, "rec", || {
+        let shards: Vec<AtomicLogHistogram> =
+            (0..THREADS).map(|_| AtomicLogHistogram::new()).collect();
+        std::thread::scope(|s| {
+            for (t, shard) in shards.iter().enumerate() {
+                s.spawn(move || {
+                    for i in 0..RECORDS {
+                        shard.record((t as u64 * 37 + i * 13) % 100_000);
+                    }
+                });
+            }
+        });
+        black_box(shards.iter().map(|h| h.snapshot().count()).sum::<u64>());
+    });
+
+    b.bench_with_items("record: one contended Mutex<Vec> (legacy)", total, "rec", || {
+        let sink: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let sink = &sink;
+                s.spawn(move || {
+                    for i in 0..RECORDS {
+                        sink.lock().unwrap().push((t as u64 * 37 + i * 13) % 100_000);
+                    }
+                });
+            }
+        });
+        black_box(sink.lock().unwrap().len());
+    });
+
+    // end-to-end micro soak: pool spin-up + mixed load + fold
+    let smoke = std::env::var("DELTAKWS_BENCH_SMOKE").is_ok();
+    let cfg = SoakConfig {
+        utterances: if smoke { 150 } else { 2_000 },
+        chunks_per_stream: if smoke { 20 } else { 200 },
+        ..SoakConfig::quick()
+    };
+    let label = format!(
+        "micro soak: {} utterances, {} workers, {} streams",
+        cfg.utterances, cfg.workers, cfg.streams
+    );
+    b.bench_with_items(&label, cfg.utterances as f64, "dec", || {
+        black_box(run_soak(
+            common::rng_quant(3),
+            ChipConfig::design_point(),
+            &cfg,
+        ));
+    });
+
+    b.finish();
+}

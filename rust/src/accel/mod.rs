@@ -251,24 +251,20 @@ impl DeltaRnnAccel {
         FrameResult { logits, fired, cycles }
     }
 
-    /// Run a whole utterance of feature frames; returns (class, mean
-    /// logits) using the paper's posterior averaging after `warmup` frames.
+    /// Run a whole utterance of feature frames; returns (class, summed
+    /// logits) using the paper's posterior pooling after `warmup` frames.
+    /// Ranks on the sums, matching [`crate::chip::Decision::from_frames`]:
+    /// dividing by the frame count is unnecessary for argmax and its
+    /// truncation biased small negative means into ties.
     pub fn classify(&mut self, frames: &[[i16; C]], warmup: usize) -> (usize, [i64; K]) {
         self.reset_state();
         let mut acc = [0i64; K];
-        let mut n = 0i64;
         for (t, f) in frames.iter().enumerate() {
             let r = self.step_frame(f);
             if t >= warmup {
                 for k in 0..K {
                     acc[k] += r.logits[k];
                 }
-                n += 1;
-            }
-        }
-        if n > 0 {
-            for a in acc.iter_mut() {
-                *a /= n;
             }
         }
         let best = (0..K).max_by_key(|&k| acc[k]).unwrap_or(0);

@@ -67,7 +67,17 @@ impl ChipConfig {
 #[derive(Debug, Clone)]
 pub struct Decision {
     pub class: usize,
+    /// *summed* posterior logits over the counted frames. Ranking happens
+    /// on the sums directly: dividing by the frame count is unnecessary
+    /// for argmax, and the old truncating integer division biased small
+    /// negative means toward zero, collapsing distinct classes into ties.
     pub logits: [i64; crate::NUM_CLASSES],
+    /// ungated post-warmup frames that contributed to the posterior.
+    /// `0` means *no evidence*: every frame was clock-gated or inside the
+    /// warmup window, and `class` is the default 0 — callers must check
+    /// [`has_evidence`](Self::has_evidence) to tell that apart from a
+    /// real class-0 decision.
+    pub counted_frames: u64,
     /// per-frame ΔRNN cycles (Fig. 11 latency trace)
     pub frame_cycles: Vec<u64>,
     /// per-frame fired lanes
@@ -77,8 +87,9 @@ pub struct Decision {
 }
 
 impl Decision {
-    /// Posterior-average a window of frame outputs into a decision (the
-    /// paper's decision logic: mean logits after `warmup` frames, argmax).
+    /// Posterior-accumulate a window of frame outputs into a decision (the
+    /// paper's decision logic: pooled logits after `warmup` frames,
+    /// argmax — ranked on the sums, which order identically to the means).
     /// Clock-gated frames contribute their trace entries but neither
     /// posterior nor warmup progress — warmup exists to skip the ΔRNN's
     /// transient, which only advances on frames the accelerator ran.
@@ -87,7 +98,7 @@ impl Decision {
         let mut frame_fired = Vec::with_capacity(frames.len());
         let mut feat_trace = Vec::with_capacity(frames.len());
         let mut acc_logits = [0i64; crate::NUM_CLASSES];
-        let mut counted = 0i64;
+        let mut counted = 0u64;
         let mut seen_ungated = 0usize;
         for f in frames {
             feat_trace.push(f.feat);
@@ -103,13 +114,28 @@ impl Decision {
                 }
             }
         }
-        if counted > 0 {
-            for a in acc_logits.iter_mut() {
-                *a /= counted;
-            }
+        // no evidence → the documented default class 0 (max_by_key's
+        // last-wins tie-break over all-zero logits would pick class 11)
+        let class = if counted == 0 {
+            0
+        } else {
+            (0..crate::NUM_CLASSES).max_by_key(|&k| acc_logits[k]).unwrap_or(0)
+        };
+        Decision {
+            class,
+            logits: acc_logits,
+            counted_frames: counted,
+            frame_cycles,
+            frame_fired,
+            feat_trace,
         }
-        let class = (0..crate::NUM_CLASSES).max_by_key(|&k| acc_logits[k]).unwrap_or(0);
-        Decision { class, logits: acc_logits, frame_cycles, frame_fired, feat_trace }
+    }
+
+    /// True when at least one ungated post-warmup frame reached the
+    /// posterior — false means `class`/`logits` carry no information
+    /// (all-gated or all-warmup input).
+    pub fn has_evidence(&self) -> bool {
+        self.counted_frames > 0
     }
 }
 
@@ -339,6 +365,62 @@ mod tests {
         assert_eq!(d.frame_cycles.len(), 62);
         assert_eq!(d.feat_trace.len(), 62);
         assert!(d.class < crate::NUM_CLASSES);
+        assert!(d.has_evidence());
+        assert_eq!(d.counted_frames, (62 - chip.config.warmup) as u64);
+    }
+
+    /// Synthetic ungated frame with explicit logits (decision-logic tests).
+    fn frame_with_logits(logits: [i64; crate::NUM_CLASSES]) -> FrameOut {
+        FrameOut {
+            index: 0,
+            feat: [0i64; MAX_CHANNELS],
+            logits,
+            fired: 0,
+            cycles: 1,
+            gated: false,
+        }
+    }
+
+    #[test]
+    fn ranking_on_sums_ignores_truncation_bias() {
+        // four frames whose summed logits are small negatives: class 5
+        // sums to -1 (the true argmax), class 7 to -2, everything else to
+        // -8. The old truncating division by the frame count mapped both
+        // -1/4 and -2/4 to 0, and the tie-break then picked class 7.
+        let mut frames = Vec::new();
+        for t in 0..4 {
+            let mut l = [-2i64; crate::NUM_CLASSES];
+            l[5] = if t == 0 { -1 } else { 0 };
+            l[7] = if t < 2 { -1 } else { 0 };
+            frames.push(frame_with_logits(l));
+        }
+        let d = Decision::from_frames(&frames, 0);
+        assert_eq!(d.logits[5], -1);
+        assert_eq!(d.logits[7], -2);
+        assert_eq!(d.counted_frames, 4);
+        assert_eq!(d.class, 5, "negative-mean truncation flipped the ranking");
+    }
+
+    #[test]
+    fn all_gated_decision_exposes_no_evidence() {
+        let gated = FrameOut {
+            index: 0,
+            feat: [0i64; MAX_CHANNELS],
+            logits: [0i64; crate::NUM_CLASSES],
+            fired: 0,
+            cycles: 0,
+            gated: true,
+        };
+        let d = Decision::from_frames(&[gated; 8], 4);
+        assert_eq!(d.counted_frames, 0);
+        assert!(!d.has_evidence(), "all-gated input must carry no evidence");
+        assert_eq!(d.class, 0);
+        // frames entirely inside the warmup window are no evidence either
+        let warm = frame_with_logits([3i64; crate::NUM_CLASSES]);
+        let d = Decision::from_frames(&[warm; 3], 4);
+        assert_eq!(d.counted_frames, 0);
+        assert!(!d.has_evidence(), "warmup-only input must carry no evidence");
+        assert_eq!(d.logits, [0i64; crate::NUM_CLASSES]);
     }
 
     #[test]

@@ -25,11 +25,25 @@
 //!   machine) lives on the stream's *pinned* worker for its whole life:
 //!   chunks never spill (the recurrent state is there), so a full pinned
 //!   queue surfaces as backpressure to the producer instead.
+//!
+//! Telemetry is contention-free and bounded: the worker hot loop records
+//! only into its own [`telemetry::WorkerShard`] (relaxed counters + a
+//! fixed-size log-bucketed latency histogram — no locks, no allocation,
+//! O(1) memory in the request count), [`Coordinator::stats`] folds the
+//! shards on demand, and chip power/energy reports are published per
+//! epoch / on [`Coordinator::reports`] pull, never per utterance. The
+//! [`soak`] harness drives sustained mixed load against exactly these
+//! guarantees.
+
+pub mod soak;
+pub mod telemetry;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::mpsc::{
+    sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -38,6 +52,8 @@ use crate::chip::{ChipConfig, ChipReport, KwsChip};
 use crate::energy::ChipActivity;
 use crate::stream::detector::DetectionEvent;
 use crate::stream::{StreamConfig, StreamPipeline};
+use crate::util::hist::LogHistogram;
+use telemetry::{WorkerShard, REPORT_EPOCH};
 
 /// One inference request: a 1 s utterance on a logical stream.
 #[derive(Debug, Clone)]
@@ -80,8 +96,11 @@ pub struct LaneStats {
     pub stream_chunks: u64,
 }
 
-/// Aggregate serving statistics.
-#[derive(Debug, Default, Clone)]
+/// Aggregate serving statistics: a point-in-time fold of the per-worker
+/// telemetry shards and the lock-free routing counters. Every field is
+/// fixed-size — the snapshot's memory footprint is independent of how many
+/// requests the pool has served (see [`Stats::telemetry_bytes`]).
+#[derive(Debug, Clone, Default)]
 pub struct Stats {
     pub completed: u64,
     pub correct: u64,
@@ -90,12 +109,14 @@ pub struct Stats {
     /// requests accepted by a non-pinned worker (pinned queue was full);
     /// folded from per-lane atomics by [`Coordinator::stats`]
     pub spilled: u64,
-    /// wall-clock service time distribution (µs)
-    pub service_us: Vec<u64>,
+    /// wall-clock utterance service-time distribution (µs), log-bucketed
+    pub latency: LogHistogram,
+    /// wall-clock stream-chunk service-time distribution (µs)
+    pub chunk_latency: LogHistogram,
     /// merged chip activity across workers
     pub activity: ChipActivity,
-    /// per-worker routing/serving counters (indexed by worker; the
-    /// routing fields are folded in by [`Coordinator::stats`])
+    /// per-worker routing/serving counters (indexed by worker; folded
+    /// from lane atomics + telemetry shards by [`Coordinator::stats`])
     pub per_worker: Vec<LaneStats>,
 }
 
@@ -109,21 +130,39 @@ impl Stats {
     }
 
     pub fn p50_us(&self) -> u64 {
-        percentile(&self.service_us, 0.50)
+        self.latency.percentile(0.50)
     }
 
     pub fn p99_us(&self) -> u64 {
-        percentile(&self.service_us, 0.99)
+        self.latency.percentile(0.99)
+    }
+
+    /// Heap footprint of this telemetry snapshot — constant in the request
+    /// count by construction (histogram bucket arrays + per-worker lane
+    /// table). The soak harness asserts it stays flat under load.
+    pub fn telemetry_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.latency.heap_bytes()
+            + self.chunk_latency.heap_bytes()
+            + self.per_worker.len() * std::mem::size_of::<LaneStats>()
     }
 }
 
-fn percentile(xs: &[u64], p: f64) -> u64 {
+/// Exact percentile of a sample by the exclusive nearest-rank rule with a
+/// round-half-up rank: `rank = ⌊p·(n+1) + ½⌋` clamped to `[1, n]`, 1-based
+/// into the sorted data. p99 of 100 samples is the 100th order statistic —
+/// the previous truncating index `⌊(n-1)·p⌋` returned the 99th, i.e. the
+/// p98 sample. [`LogHistogram::percentile`] uses the same rank rule, so
+/// the two agree to within one bucket's representative-value rounding.
+pub fn percentile(xs: &[u64], p: f64) -> u64 {
     if xs.is_empty() {
         return 0;
     }
     let mut v = xs.to_vec();
     v.sort_unstable();
-    v[((v.len() - 1) as f64 * p) as usize]
+    let n = v.len();
+    let rank = ((p * (n as f64 + 1.0)) + 0.5).floor() as usize;
+    v[rank.clamp(1, n) - 1]
 }
 
 /// One unit of work on a worker lane. Stream jobs are keyed by a unique
@@ -144,9 +183,12 @@ enum Job {
         alive: Arc<AtomicBool>,
     },
     /// an audio chunk for an open session
-    StreamData { session: u64, chunk: Vec<i64> },
+    StreamData { session: u64, chunk: Vec<i64>, enqueued: Instant },
     /// close a session (flushes telemetry, emits [`StreamEvent::Closed`])
     StreamClose { session: u64 },
+    /// publish a fresh chip-report snapshot into the telemetry shard and
+    /// acknowledge (the pull half of [`Coordinator::reports`])
+    PublishReport { ack: Sender<()> },
 }
 
 /// Asynchronous output of a [`StreamSession`].
@@ -165,12 +207,9 @@ struct Lane {
     /// failure-injection: worker refuses work while true (tests)
     stalled: Arc<AtomicBool>,
     /// lock-free routing counters, folded into [`Stats::per_worker`] at
-    /// read time — the submit hot path must not take the stats mutex
+    /// read time — the submit hot path must not take any lock
     pinned_full: AtomicU64,
     spilled_in: AtomicU64,
-    /// chunk counter shared with the worker (the per-chunk streaming hot
-    /// path must not take the stats mutex either)
-    stream_chunks: Arc<AtomicU64>,
 }
 
 /// Shared routing state: what [`Coordinator::submit`] and every [`Client`]
@@ -178,7 +217,11 @@ struct Lane {
 /// what tells workers to drain and exit.
 struct Router {
     lanes: Vec<Lane>,
-    stats: Arc<Mutex<Stats>>,
+    /// per-worker telemetry shards (worker w writes shards[w] only)
+    shards: Vec<Arc<WorkerShard>>,
+    /// submissions rejected with every queue saturated (lock-free; the
+    /// old code took the stats mutex on this path)
+    rejected: AtomicU64,
     next_id: AtomicU64,
     /// unique ids for [`StreamSession`]s (stream ids may repeat)
     next_session: AtomicU64,
@@ -216,7 +259,7 @@ impl Router {
                 Err(r) => r,
             };
         }
-        self.stats.lock().unwrap().rejected += 1;
+        self.rejected.fetch_add(1, Ordering::Relaxed);
         Err(req)
     }
 
@@ -321,7 +364,14 @@ impl StreamSession {
             return Err(audio12);
         };
         router
-            .try_stream_job(self.stream, Job::StreamData { session: self.session, chunk: audio12 })
+            .try_stream_job(
+                self.stream,
+                Job::StreamData {
+                    session: self.session,
+                    chunk: audio12,
+                    enqueued: Instant::now(),
+                },
+            )
             .map_err(|j| match j {
                 Job::StreamData { chunk, .. } => chunk,
                 _ => unreachable!("data job came back as a different variant"),
@@ -335,7 +385,14 @@ impl StreamSession {
             return Err(audio12);
         };
         router
-            .send_stream_job(self.stream, Job::StreamData { session: self.session, chunk: audio12 })
+            .send_stream_job(
+                self.stream,
+                Job::StreamData {
+                    session: self.session,
+                    chunk: audio12,
+                    enqueued: Instant::now(),
+                },
+            )
             .map_err(|j| match j {
                 Job::StreamData { chunk, .. } => chunk,
                 _ => unreachable!("data job came back as a different variant"),
@@ -401,52 +458,40 @@ impl Drop for StreamSession {
     }
 }
 
-/// The coordinator: worker pool + router state + stats.
+/// The coordinator: worker pool + router state + telemetry shards.
 pub struct Coordinator {
     /// `Some` until drop; taken first so lane senders close before joining
     router: Option<Arc<Router>>,
     handles: Vec<JoinHandle<()>>,
-    stats: Arc<Mutex<Stats>>,
     /// kept alive so the response channel survives worker churn
     #[allow(dead_code)]
     resp_tx: SyncSender<Response>,
     pub resp_rx: Receiver<Response>,
-    reports: Arc<Mutex<HashMap<usize, ChipReport>>>,
 }
 
 impl Coordinator {
     /// Spawn `n_workers` chip twins, each with its own weight copy.
     pub fn new(params: QuantParams, config: ChipConfig, n_workers: usize, queue_depth: usize) -> Self {
         assert!(n_workers > 0);
-        let stats = Arc::new(Mutex::new(Stats {
-            per_worker: vec![LaneStats::default(); n_workers],
-            ..Stats::default()
-        }));
-        let reports = Arc::new(Mutex::new(HashMap::new()));
         let (resp_tx, resp_rx) = sync_channel::<Response>(n_workers * queue_depth.max(4) * 4);
         let mut lanes = Vec::with_capacity(n_workers);
+        let mut shards = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let (tx, rx) = sync_channel::<Job>(queue_depth);
             let stalled = Arc::new(AtomicBool::new(false));
             let depth = Arc::new(AtomicU64::new(0));
-            let chunks = Arc::new(AtomicU64::new(0));
+            let shard = Arc::new(WorkerShard::default());
             let handle = {
                 let params = params.clone();
                 let config = config.clone();
-                let stats = Arc::clone(&stats);
-                let reports = Arc::clone(&reports);
                 let resp_tx = resp_tx.clone();
                 let stalled = Arc::clone(&stalled);
                 let depth = Arc::clone(&depth);
-                let chunks = Arc::clone(&chunks);
+                let shard = Arc::clone(&shard);
                 std::thread::Builder::new()
                     .name(format!("chip-worker-{w}"))
-                    .spawn(move || {
-                        worker_loop(
-                            w, params, config, rx, resp_tx, stats, reports, stalled, depth, chunks,
-                        )
-                    })
+                    .spawn(move || worker_loop(w, params, config, rx, resp_tx, shard, stalled, depth))
                     .expect("spawn worker")
             };
             lanes.push(Lane {
@@ -455,17 +500,18 @@ impl Coordinator {
                 stalled,
                 pinned_full: AtomicU64::new(0),
                 spilled_in: AtomicU64::new(0),
-                stream_chunks: chunks,
             });
+            shards.push(shard);
             handles.push(handle);
         }
         let router = Arc::new(Router {
             lanes,
-            stats: Arc::clone(&stats),
+            shards,
+            rejected: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
         });
-        Self { router: Some(router), handles, stats, resp_tx, resp_rx, reports }
+        Self { router: Some(router), handles, resp_tx, resp_rx }
     }
 
     fn router(&self) -> &Router {
@@ -552,26 +598,70 @@ impl Coordinator {
         out
     }
 
-    /// Aggregate statistics snapshot. The per-lane routing counters
-    /// (`pinned_full`, `spilled_in`, and their `spilled` total) live in
-    /// lock-free atomics on the submit path and are folded in here.
+    /// Aggregate statistics snapshot: folds the per-worker telemetry
+    /// shards (counters, latency histograms, chip activity) and the
+    /// lock-free routing counters. Pure read — no worker is interrupted
+    /// and no lock on any hot path is taken.
     pub fn stats(&self) -> Stats {
-        let mut s = self.stats.lock().unwrap().clone();
+        let router = self.router();
+        let mut s = Stats {
+            per_worker: Vec::with_capacity(router.lanes.len()),
+            ..Stats::default()
+        };
         let mut spilled = 0;
-        for (w, lane) in self.router().lanes.iter().enumerate() {
+        for (lane, shard) in router.lanes.iter().zip(router.shards.iter()) {
+            let completed = shard.completed.load(Ordering::Relaxed);
+            s.completed += completed;
+            s.labelled += shard.labelled.load(Ordering::Relaxed);
+            s.correct += shard.correct.load(Ordering::Relaxed);
+            s.latency.merge(&shard.latency.snapshot());
+            s.chunk_latency.merge(&shard.chunk_latency.snapshot());
+            s.activity.merge(&shard.activity.snapshot());
             let sp = lane.spilled_in.load(Ordering::Relaxed);
-            s.per_worker[w].pinned_full = lane.pinned_full.load(Ordering::Relaxed);
-            s.per_worker[w].spilled_in = sp;
-            s.per_worker[w].stream_chunks = lane.stream_chunks.load(Ordering::Relaxed);
             spilled += sp;
+            s.per_worker.push(LaneStats {
+                completed,
+                spilled_in: sp,
+                pinned_full: lane.pinned_full.load(Ordering::Relaxed),
+                stream_chunks: shard.stream_chunks.load(Ordering::Relaxed),
+            });
         }
         s.spilled = spilled;
+        s.rejected = router.rejected.load(Ordering::Relaxed);
         s
     }
 
-    /// Latest per-worker chip reports (power/energy telemetry).
+    /// Latest per-worker chip reports (power/energy telemetry),
+    /// *pull-based*: a publish request is enqueued on every reachable lane
+    /// and acknowledged snapshots are read back (bounded wait). Lanes that
+    /// are full or stalled fall back to their last epoch/idle snapshot —
+    /// reports are never computed on the per-utterance hot path.
     pub fn reports(&self) -> HashMap<usize, ChipReport> {
-        self.reports.lock().unwrap().clone()
+        let router = self.router();
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        let mut pending = 0usize;
+        for lane in &router.lanes {
+            if lane.tx.try_send(Job::PublishReport { ack: ack_tx.clone() }).is_ok() {
+                lane.depth.fetch_add(1, Ordering::Relaxed);
+                pending += 1;
+            }
+        }
+        drop(ack_tx);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pending > 0 {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() || ack_rx.recv_timeout(remaining).is_err() {
+                break;
+            }
+            pending -= 1;
+        }
+        let mut out = HashMap::new();
+        for (w, shard) in router.shards.iter().enumerate() {
+            if let Some(r) = *shard.report.lock().unwrap() {
+                out.insert(w, r);
+            }
+        }
+        out
     }
 
     /// Failure injection: stall/unstall a worker (its queue still accepts
@@ -605,14 +695,23 @@ struct WorkerSession {
 }
 
 impl WorkerSession {
-    /// Flush final telemetry into the pool stats and notify the client.
-    fn finish(self, stats: &Mutex<Stats>) {
+    /// Flush final telemetry into the worker's shard and notify the client.
+    fn finish(mut self, shard: &WorkerShard) {
+        shard.activity.add(&self.pipeline.take_activity_delta());
         let activity = self.pipeline.chip.activity();
-        stats.lock().unwrap().activity.merge(&activity);
         let _ = self.events.send(StreamEvent::Closed {
             frames: activity.frames,
             gated_frames: activity.gated_frames,
         });
+    }
+}
+
+/// Publish a fresh cumulative chip report into the shard's pull slot
+/// (only once the chip has actually processed something — an idle worker
+/// stays absent from [`Coordinator::reports`], as before).
+fn publish_report(shard: &WorkerShard, chip: &KwsChip) {
+    if chip.activity().frames > 0 {
+        *shard.report.lock().unwrap() = Some(chip.report());
     }
 }
 
@@ -623,15 +722,32 @@ fn worker_loop(
     config: ChipConfig,
     rx: Receiver<Job>,
     resp_tx: SyncSender<Response>,
-    stats: Arc<Mutex<Stats>>,
-    reports: Arc<Mutex<HashMap<usize, ChipReport>>>,
+    shard: Arc<WorkerShard>,
     stalled: Arc<AtomicBool>,
     depth: Arc<AtomicU64>,
-    chunks: Arc<AtomicU64>,
 ) {
     let mut chip = KwsChip::new(params.clone(), config.clone());
     let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
-    while let Ok(job) = rx.recv() {
+    // chip activity is flushed into the shard as monotonic deltas — the
+    // chip's own counters are never reset, so its cumulative report stays
+    // meaningful and nothing is double-counted
+    let mut flushed = ChipActivity::default();
+    let mut jobs_since_report = 0u64;
+    'outer: loop {
+        let job = match rx.try_recv() {
+            Ok(j) => j,
+            Err(TryRecvError::Empty) => {
+                // lane drained: publish a fresh report before blocking, so
+                // pull-side reads are never staler than the last idle moment
+                publish_report(&shard, &chip);
+                jobs_since_report = 0;
+                match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => break 'outer,
+                }
+            }
+            Err(TryRecvError::Disconnected) => break 'outer,
+        };
         while stalled.load(Ordering::SeqCst) {
             std::thread::sleep(Duration::from_millis(1));
         }
@@ -653,26 +769,19 @@ fn worker_loop(
                     service: enqueued.elapsed(),
                     worker: index,
                 };
-                {
-                    let mut s = stats.lock().unwrap();
-                    s.completed += 1;
-                    s.per_worker[index].completed += 1;
-                    if let Some(c) = correct {
-                        s.labelled += 1;
-                        if c {
-                            s.correct += 1;
-                        }
+                // hot path: relaxed adds on this worker's own shard — no
+                // lock, no allocation, no report rollup
+                shard.completed.fetch_add(1, Ordering::Relaxed);
+                if let Some(c) = correct {
+                    shard.labelled.fetch_add(1, Ordering::Relaxed);
+                    if c {
+                        shard.correct.fetch_add(1, Ordering::Relaxed);
                     }
-                    s.service_us.push(resp.service.as_micros() as u64);
-                    s.activity.merge(&chip.accel.activity);
-                    // merge replaces per-call; keep only the delta by
-                    // zeroing after merge would double-count — instead
-                    // store the latest snapshot per worker in `reports`
-                    // and rebuild; simpler: reset counters.
-                    chip.accel.activity = ChipActivity::default();
-                    chip.accel.sram.reset_counters();
                 }
-                reports.lock().unwrap().insert(index, chip.report());
+                shard.latency.record(resp.service.as_micros() as u64);
+                let act = chip.activity();
+                shard.activity.add(&act.delta_since(&flushed));
+                flushed = act;
                 if resp_tx.send(resp).is_err() {
                     break;
                 }
@@ -686,15 +795,17 @@ fn worker_loop(
                 if let Some(old) =
                     sessions.insert(session, WorkerSession { pipeline, events, alive })
                 {
-                    old.finish(&stats);
+                    old.finish(&shard);
                 }
             }
-            Job::StreamData { session, chunk } => {
+            Job::StreamData { session, chunk, enqueued } => {
                 // chunks for unknown/closed sessions are dropped (a late
                 // push after close is not an error)
                 if let Some(sess) = sessions.get_mut(&session) {
                     let detections = sess.pipeline.push_audio(&chunk);
-                    chunks.fetch_add(1, Ordering::Relaxed);
+                    shard.stream_chunks.fetch_add(1, Ordering::Relaxed);
+                    shard.chunk_latency.record(enqueued.elapsed().as_micros() as u64);
+                    shard.activity.add(&sess.pipeline.take_activity_delta());
                     for d in detections {
                         let _ = sess.events.send(StreamEvent::Detection(d));
                     }
@@ -702,9 +813,21 @@ fn worker_loop(
             }
             Job::StreamClose { session } => {
                 if let Some(sess) = sessions.remove(&session) {
-                    sess.finish(&stats);
+                    sess.finish(&shard);
                 }
             }
+            Job::PublishReport { ack } => {
+                publish_report(&shard, &chip);
+                jobs_since_report = 0;
+                let _ = ack.send(());
+            }
+        }
+        // bound report staleness under sustained load (a lane that never
+        // drains still publishes every REPORT_EPOCH jobs)
+        jobs_since_report += 1;
+        if jobs_since_report >= REPORT_EPOCH {
+            publish_report(&shard, &chip);
+            jobs_since_report = 0;
         }
         // GC sessions whose client vanished without a deliverable Close
         // (StreamSession::drop on a saturated lane clears `alive` and
@@ -718,15 +841,16 @@ fn worker_loop(
                 .collect();
             for k in dead {
                 if let Some(sess) = sessions.remove(&k) {
-                    sess.finish(&stats);
+                    sess.finish(&shard);
                 }
             }
         }
     }
     // pool shutdown with sessions still open: flush their telemetry
     for (_, sess) in sessions.drain() {
-        sess.finish(&stats);
+        sess.finish(&shard);
     }
+    publish_report(&shard, &chip);
 }
 
 #[cfg(test)]
@@ -752,6 +876,47 @@ mod tests {
     }
 
     #[test]
+    fn percentile_uses_round_half_up_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        // the old truncating index returned v[98] = 99 (the p98 sample)
+        assert_eq!(percentile(&v, 0.99), 100);
+        assert_eq!(percentile(&v, 0.50), 51);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&v, 0.0), 1);
+        // exact small-N: median of an odd-length sample is the middle
+        assert_eq!(percentile(&[5, 1, 3], 0.50), 3);
+        assert_eq!(percentile(&[1, 2, 3, 4, 5], 0.50), 3);
+        assert_eq!(percentile(&[42], 0.99), 42);
+        assert_eq!(percentile(&[], 0.99), 0);
+    }
+
+    #[test]
+    fn histogram_percentile_within_one_bucket_of_exact() {
+        // same rank rule => the histogram lands in exactly the bucket
+        // holding the exact order statistic, so the answers differ only by
+        // the bucket's midpoint rounding (≤ 1/64 relative)
+        let mut rng = Pcg::new(9);
+        let mut hist = LogHistogram::new();
+        let mut sample = Vec::new();
+        for _ in 0..5000 {
+            let v = (rng.below(1 << 16) as u64 + 1) * (1 + rng.below(64) as u64);
+            sample.push(v);
+            hist.record(v);
+        }
+        for p in [0.50, 0.90, 0.99] {
+            let exact = percentile(&sample, p);
+            let approx = hist.percentile(p);
+            assert_eq!(
+                crate::util::hist::bucket_index(exact),
+                crate::util::hist::bucket_index(approx),
+                "p{p}: exact {exact} vs hist {approx} landed in different buckets"
+            );
+            let rel = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel <= 1.0 / 64.0 + 1e-12, "p{p}: rel err {rel}");
+        }
+    }
+
+    #[test]
     fn serves_requests_and_aggregates() {
         let coord =
             Coordinator::new(rng_quant(1), ChipConfig::design_point(), 2, 8);
@@ -764,6 +929,7 @@ mod tests {
         let stats = coord.stats();
         assert_eq!(stats.completed, n as u64);
         assert_eq!(stats.labelled, n as u64);
+        assert_eq!(stats.latency.count(), n as u64);
         assert!(stats.activity.frames >= (n * 62) as u64);
         // no request lost or duplicated
         let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
@@ -832,6 +998,40 @@ mod tests {
     }
 
     #[test]
+    fn stats_memory_is_independent_of_request_count() {
+        let coord = Coordinator::new(rng_quant(13), ChipConfig::design_point(), 2, 8);
+        coord.submit(request(0, 1)).unwrap();
+        coord.collect(1, Duration::from_secs(60));
+        let before = coord.stats().telemetry_bytes();
+        for i in 0..12 {
+            coord.submit(request(i % 3, 60 + i)).unwrap();
+        }
+        coord.collect(12, Duration::from_secs(60));
+        let after = coord.stats();
+        assert_eq!(after.completed, 13);
+        assert_eq!(after.telemetry_bytes(), before, "telemetry grew with requests");
+    }
+
+    #[test]
+    fn reports_are_pull_based_and_fresh() {
+        let coord = Coordinator::new(rng_quant(14), ChipConfig::design_point(), 2, 8);
+        // an idle pool has no reports (no chip has processed anything)
+        assert!(coord.reports().is_empty(), "idle workers must not report");
+        for i in 0..4 {
+            coord.submit(request(i, i)).unwrap();
+        }
+        coord.collect(4, Duration::from_secs(60));
+        let reports = coord.reports();
+        assert!(!reports.is_empty(), "pull returned nothing after work");
+        let frames: u64 = reports.values().map(|r| r.frames).sum();
+        assert_eq!(frames, 4 * 62, "reports must reflect cumulative work");
+        for r in reports.values() {
+            assert!(r.power.total_uw() > 0.0);
+            assert!(r.latency_ms > 0.0, "report computed on zeroed activity");
+        }
+    }
+
+    #[test]
     fn per_worker_counters_track_spill_and_rejection() {
         let coord = Coordinator::new(rng_quant(7), ChipConfig::design_point(), 2, 1);
         coord.set_stalled(0, true);
@@ -881,6 +1081,7 @@ mod tests {
         let s = coord.stats();
         let chunks: u64 = s.per_worker.iter().map(|w| w.stream_chunks).sum();
         assert_eq!(chunks, n_chunks);
+        assert_eq!(s.chunk_latency.count(), n_chunks);
         assert!(s.activity.frames >= (audio12.len() / crate::FRAME_SAMPLES) as u64);
     }
 

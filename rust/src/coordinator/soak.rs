@@ -1,0 +1,343 @@
+//! Sustained-load soak harness for the serving coordinator.
+//!
+//! Drives N producer threads of mixed work — per-utterance [`Request`]s
+//! plus long-lived [`StreamSession`]s pushing audio chunks — through one
+//! [`Coordinator`] for minutes of *simulated* audio, and validates the
+//! telemetry guarantees the sharded refactor makes:
+//!
+//! * **flat memory** — the [`Stats`] snapshot footprint is identical at
+//!   10% of the run and at the end (O(1) telemetry in the request count;
+//!   asserted, not just reported);
+//! * **accurate histograms** — the harness records every response's exact
+//!   service time on the *caller* side (its memory, its choice) and
+//!   cross-checks the log-bucketed histogram's p50/p99 against exact
+//!   percentiles of that sample;
+//! * **sustained throughput** — decisions/sec over the whole run, the
+//!   number later scaling PRs are judged against.
+//!
+//! [`SoakConfig::emulate_legacy_telemetry`] adds an A/B baseline: extra
+//! threads re-impose the pre-refactor per-utterance telemetry cost (one
+//! global mutex push into an unbounded `Vec` plus a float power-rollup per
+//! completion, at the pool's completion rate — the pattern the old
+//! `Mutex<Stats>` + `reports` locks created). It is an *emulation*: the
+//! old code path itself is gone, so the tax is applied by dedicated
+//! contender threads rather than inside the workers.
+//!
+//! Entry points: [`run_soak`] (library), `examples/soak.rs` (CLI),
+//! `benches/soak_bench.rs` (smoke-sized A/B in the bench matrix).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::{percentile, Coordinator, Request, Stats};
+use crate::accel::gru::QuantParams;
+use crate::audio::track::{synth_track, TrackConfig};
+use crate::chip::ChipConfig;
+use crate::util::prng::Pcg;
+
+/// Soak-run shape. `acceptance()` is the ISSUE-3 acceptance workload;
+/// `quick()` keeps integration tests and bench smoke mode fast.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    pub workers: usize,
+    pub producers: usize,
+    /// total utterance requests across all producers
+    pub utterances: u64,
+    /// concurrent long-lived stream sessions
+    pub streams: usize,
+    /// audio chunks each stream session pushes
+    pub chunks_per_stream: u64,
+    /// samples per stream chunk
+    pub chunk_samples: usize,
+    /// samples per utterance (sub-second keeps wall-clock sane while the
+    /// *simulated* audio still adds up to hours)
+    pub utterance_samples: usize,
+    pub queue_depth: usize,
+    pub seed: u64,
+    /// run the pre-refactor telemetry-cost emulation alongside (A/B)
+    pub emulate_legacy_telemetry: bool,
+}
+
+impl SoakConfig {
+    /// ≥50k mixed jobs across ≥4 workers — the acceptance workload.
+    pub fn acceptance() -> Self {
+        Self {
+            workers: 4,
+            producers: 4,
+            utterances: 50_000,
+            streams: 4,
+            chunks_per_stream: 2_000,
+            chunk_samples: 256,
+            utterance_samples: 2_048,
+            queue_depth: 16,
+            seed: 0x50AC,
+            emulate_legacy_telemetry: false,
+        }
+    }
+
+    /// Small but still genuinely mixed/concurrent (integration tests).
+    pub fn quick() -> Self {
+        Self {
+            workers: 4,
+            producers: 2,
+            utterances: 1_200,
+            streams: 2,
+            chunks_per_stream: 150,
+            chunk_samples: 256,
+            utterance_samples: 1_024,
+            queue_depth: 8,
+            seed: 0x50AC,
+            emulate_legacy_telemetry: false,
+        }
+    }
+}
+
+/// Everything a soak run measured.
+#[derive(Debug)]
+pub struct SoakReport {
+    pub utterances_done: u64,
+    pub chunks_done: u64,
+    /// simulated audio fed through the pool (utterances + streams), seconds
+    pub simulated_audio_s: f64,
+    pub wall: Duration,
+    /// sustained utterance decisions per wall-clock second
+    pub decisions_per_sec: f64,
+    /// histogram-answered percentiles (what [`Stats`] serves)
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// exact percentiles from the harness-recorded sample
+    pub exact_p50_us: u64,
+    pub exact_p99_us: u64,
+    /// telemetry snapshot footprint at ~10% of the run and at the end
+    pub telemetry_bytes_early: usize,
+    pub telemetry_bytes_final: usize,
+    pub producer_retries: u64,
+    pub final_stats: Stats,
+}
+
+impl SoakReport {
+    /// Relative disagreement between histogram and exact percentiles
+    /// (the acceptance bound is 5%; the bucket math guarantees ≤ ~1.6%).
+    pub fn percentile_rel_err(&self) -> f64 {
+        let err = |approx: u64, exact: u64| {
+            if exact == 0 {
+                0.0
+            } else {
+                (approx as f64 - exact as f64).abs() / exact as f64
+            }
+        };
+        err(self.p50_us, self.exact_p50_us).max(err(self.p99_us, self.exact_p99_us))
+    }
+}
+
+/// The emulated pre-refactor telemetry cost, per completion: one global
+/// mutex acquisition pushing into an unbounded `Vec` + a float
+/// power/energy rollup (what `chip.report()` recomputed per utterance).
+fn legacy_telemetry_tax(sink: &Mutex<Vec<u64>>, i: u64) {
+    let mut g = sink.lock().unwrap();
+    g.push(i);
+    let frames = std::hint::black_box(g.len() as f64);
+    let mut acc = 0.0f64;
+    for k in 0..16 {
+        acc += (frames * 0.37 + k as f64).sqrt() * 1e-6 / (frames + 1.0);
+    }
+    std::hint::black_box(acc);
+}
+
+/// Run a soak: spawn the pool, drive the mixed load, fold the report.
+/// Panics (harness contract) if responses are lost, the run times out, or
+/// the telemetry snapshot footprint grows with the request count.
+pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> SoakReport {
+    assert!(cfg.workers > 0 && cfg.producers > 0 && cfg.utterances > 0);
+    let coord = Coordinator::new(params, chip, cfg.workers, cfg.queue_depth);
+
+    // pre-rendered utterance pool (audio synthesis off the timed path)
+    let pool: Vec<(Vec<i64>, usize)> = (0..16u64)
+        .map(|i| {
+            let label = (i % crate::NUM_CLASSES as u64) as usize;
+            let mut rng = Pcg::with_stream(cfg.seed, 100 + i);
+            let wave = crate::audio::synth_utterance(label, &mut rng);
+            let mut audio12 = crate::audio::quantize_12b(&wave);
+            audio12.truncate(cfg.utterance_samples);
+            (audio12, label)
+        })
+        .collect();
+    // one shared track buffer the stream sessions loop over
+    let track_cfg =
+        TrackConfig { duration_s: 4, keywords: 2, fillers: 1, noise: (0.001, 0.002) };
+    let (track_audio, _) = synth_track(&track_cfg, cfg.seed);
+
+    let retries = AtomicU64::new(0);
+    let chunks_done = AtomicU64::new(0);
+    // consumer-published completion count (drives the legacy emulation)
+    let completed_pub = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+    let legacy_sink: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+
+    let mut exact_us: Vec<u64> = Vec::with_capacity(cfg.utterances as usize);
+    let mut telemetry_bytes_early = 0usize;
+    let checkpoint = (cfg.utterances / 10).max(1);
+    // stamped by the consumer at the last decision (stream teardown after
+    // the final utterance must not dilute the throughput figure)
+    let mut wall = Duration::ZERO;
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        // stream sessions: one pusher thread per session
+        for st in 0..cfg.streams {
+            let sess = coord.open_stream(st as u64);
+            let track = &track_audio;
+            let chunks_done = &chunks_done;
+            let n = cfg.chunks_per_stream;
+            let chunk = cfg.chunk_samples;
+            s.spawn(move || {
+                let mut off = 0usize;
+                for _ in 0..n {
+                    let end = (off + chunk).min(track.len());
+                    sess.push_blocking(track[off..end].to_vec()).expect("pool alive");
+                    chunks_done.fetch_add(1, Ordering::Relaxed);
+                    off = if end == track.len() { 0 } else { end };
+                }
+                sess.close();
+            });
+        }
+        // utterance producers
+        for p in 0..cfg.producers {
+            let client = coord.client();
+            let pool = &pool;
+            let retries = &retries;
+            let share = cfg.utterances / cfg.producers as u64
+                + u64::from((p as u64) < cfg.utterances % cfg.producers as u64);
+            let streams_span = (cfg.workers * 2) as u64;
+            let p = p as u64;
+            s.spawn(move || {
+                for i in 0..share {
+                    let (audio12, label) = &pool[((p * 7 + i) % 16) as usize];
+                    let mut req = Request {
+                        id: 0,
+                        stream: (p * 3 + i) % streams_span,
+                        audio12: audio12.clone(),
+                        label: Some(*label),
+                    };
+                    loop {
+                        match client.submit(req) {
+                            Ok(_) => break,
+                            Err(r) => {
+                                assert!(!client.is_closed(), "pool died mid-soak");
+                                retries.fetch_add(1, Ordering::Relaxed);
+                                req = r;
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        // pre-refactor telemetry-cost emulation (A/B baseline)
+        if cfg.emulate_legacy_telemetry {
+            for c in 0..cfg.workers as u64 {
+                let completed_pub = &completed_pub;
+                let done = &done;
+                let sink = &legacy_sink;
+                let contenders = cfg.workers as u64;
+                s.spawn(move || {
+                    let mut seen = 0u64;
+                    loop {
+                        let n = completed_pub.load(Ordering::Acquire);
+                        for i in seen..n {
+                            if i % contenders == c {
+                                legacy_telemetry_tax(sink, i);
+                            }
+                        }
+                        seen = n;
+                        if done.load(Ordering::Acquire)
+                            && seen == completed_pub.load(Ordering::Acquire)
+                        {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                });
+            }
+        }
+        // consumer: drain responses, record the exact-sample cross-check
+        let deadline = Instant::now() + Duration::from_secs(1800);
+        while (exact_us.len() as u64) < cfg.utterances {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            assert!(!remaining.is_zero(), "soak timed out draining responses");
+            let resp = coord
+                .resp_rx
+                .recv_timeout(remaining)
+                .expect("soak lost responses: pool wedged or timed out");
+            exact_us.push(resp.service.as_micros() as u64);
+            completed_pub.fetch_add(1, Ordering::Release);
+            if exact_us.len() as u64 == checkpoint {
+                telemetry_bytes_early = coord.stats().telemetry_bytes();
+            }
+        }
+        wall = t0.elapsed();
+        done.store(true, Ordering::Release);
+    });
+
+    let final_stats = coord.stats();
+    assert_eq!(final_stats.completed, cfg.utterances, "completion counter drifted");
+    let telemetry_bytes_final = final_stats.telemetry_bytes();
+    assert_eq!(
+        telemetry_bytes_early, telemetry_bytes_final,
+        "telemetry memory grew with request count"
+    );
+
+    let simulated_audio_s = (cfg.utterances * cfg.utterance_samples as u64
+        + cfg.streams as u64 * cfg.chunks_per_stream * cfg.chunk_samples as u64)
+        as f64
+        / crate::SAMPLE_RATE as f64;
+    SoakReport {
+        utterances_done: cfg.utterances,
+        chunks_done: chunks_done.load(Ordering::Relaxed),
+        simulated_audio_s,
+        wall,
+        decisions_per_sec: cfg.utterances as f64 / wall.as_secs_f64(),
+        p50_us: final_stats.p50_us(),
+        p99_us: final_stats.p99_us(),
+        exact_p50_us: percentile(&exact_us, 0.50),
+        exact_p99_us: percentile(&exact_us, 0.99),
+        telemetry_bytes_early,
+        telemetry_bytes_final,
+        producer_retries: retries.load(Ordering::Relaxed),
+        final_stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng_quant(seed: u64) -> QuantParams {
+        let mut rng = Pcg::new(seed);
+        let mut q = QuantParams::zeroed();
+        q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+        q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q
+    }
+
+    #[test]
+    fn tiny_soak_completes_and_cross_checks() {
+        let cfg = SoakConfig {
+            utterances: 120,
+            chunks_per_stream: 20,
+            workers: 2,
+            producers: 2,
+            streams: 1,
+            ..SoakConfig::quick()
+        };
+        let report = run_soak(rng_quant(1), ChipConfig::design_point(), &cfg);
+        assert_eq!(report.utterances_done, 120);
+        assert_eq!(report.chunks_done, 20);
+        assert!(report.decisions_per_sec > 0.0);
+        assert!(report.percentile_rel_err() <= 0.05, "err {}", report.percentile_rel_err());
+        assert_eq!(report.telemetry_bytes_early, report.telemetry_bytes_final);
+        assert!(report.simulated_audio_s > 15.0);
+    }
+}

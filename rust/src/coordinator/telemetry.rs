@@ -1,0 +1,159 @@
+//! Contention-free telemetry shards for the worker pool.
+//!
+//! PR 2's coordinator pushed every completed utterance into an unbounded
+//! `Vec<u64>` behind one global `Mutex<Stats>` and re-took a second
+//! `reports` lock to store a freshly recomputed `chip.report()` — two
+//! cross-worker lock acquisitions plus a float rollup *per request*, and
+//! memory linear in the request count. This module replaces that with one
+//! [`WorkerShard`] per worker: plain relaxed counters, a fixed-size
+//! log-bucketed latency histogram ([`crate::util::hist`]), and an atomic
+//! mirror of [`ChipActivity`]'s monotonic event counts. Workers touch only
+//! their own shard with relaxed atomics (no locks, no allocation, O(1)
+//! memory); [`super::Coordinator::stats`] folds all shards on demand, the
+//! same read-time-fold discipline the lock-free spill/chunk routing
+//! counters already established.
+//!
+//! Chip reports (power/energy rollups — float math) are *pull-based*: each
+//! worker publishes a [`ChipReport`] snapshot into its shard's report slot
+//! when its lane goes idle, every [`REPORT_EPOCH`] jobs under sustained
+//! load, and on an explicit [`super::Coordinator::reports`] request — never
+//! per utterance. The slot is a `Mutex`, but it is taken once per epoch,
+//! not once per request, and only ever contended by a concurrent reader.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::chip::ChipReport;
+use crate::energy::ChipActivity;
+use crate::util::hist::AtomicLogHistogram;
+
+/// Jobs between periodic report publications under sustained load (the
+/// idle-lane publish keeps reports fresh whenever a worker catches up, so
+/// this only bounds staleness while a lane never drains).
+pub const REPORT_EPOCH: u64 = 64;
+
+/// Atomic mirror of [`ChipActivity`]: one relaxed counter per field.
+/// Writers add monotonic deltas; readers fold a snapshot.
+#[derive(Default)]
+pub struct AtomicActivity {
+    frames: AtomicU64,
+    gated_frames: AtomicU64,
+    mac_ops: AtomicU64,
+    sram_word_reads: AtomicU64,
+    rnn_cycles: AtomicU64,
+    fired_lanes: AtomicU64,
+    total_lanes: AtomicU64,
+    fired_x: AtomicU64,
+    total_x: AtomicU64,
+    fired_h: AtomicU64,
+    total_h: AtomicU64,
+    fex_visits: AtomicU64,
+}
+
+impl AtomicActivity {
+    pub fn add(&self, d: &ChipActivity) {
+        self.frames.fetch_add(d.frames, Ordering::Relaxed);
+        self.gated_frames.fetch_add(d.gated_frames, Ordering::Relaxed);
+        self.mac_ops.fetch_add(d.mac_ops, Ordering::Relaxed);
+        self.sram_word_reads.fetch_add(d.sram_word_reads, Ordering::Relaxed);
+        self.rnn_cycles.fetch_add(d.rnn_cycles, Ordering::Relaxed);
+        self.fired_lanes.fetch_add(d.fired_lanes, Ordering::Relaxed);
+        self.total_lanes.fetch_add(d.total_lanes, Ordering::Relaxed);
+        self.fired_x.fetch_add(d.fired_x, Ordering::Relaxed);
+        self.total_x.fetch_add(d.total_x, Ordering::Relaxed);
+        self.fired_h.fetch_add(d.fired_h, Ordering::Relaxed);
+        self.total_h.fetch_add(d.total_h, Ordering::Relaxed);
+        self.fex_visits.fetch_add(d.fex_visits, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ChipActivity {
+        ChipActivity {
+            frames: self.frames.load(Ordering::Relaxed),
+            gated_frames: self.gated_frames.load(Ordering::Relaxed),
+            mac_ops: self.mac_ops.load(Ordering::Relaxed),
+            sram_word_reads: self.sram_word_reads.load(Ordering::Relaxed),
+            rnn_cycles: self.rnn_cycles.load(Ordering::Relaxed),
+            fired_lanes: self.fired_lanes.load(Ordering::Relaxed),
+            total_lanes: self.total_lanes.load(Ordering::Relaxed),
+            fired_x: self.fired_x.load(Ordering::Relaxed),
+            total_x: self.total_x.load(Ordering::Relaxed),
+            fired_h: self.fired_h.load(Ordering::Relaxed),
+            total_h: self.total_h.load(Ordering::Relaxed),
+            fex_visits: self.fex_visits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One worker's telemetry shard: everything the worker's hot loop records,
+/// single-writer (the owning worker; plus session teardown on the same
+/// thread), many-reader. Fixed size — nothing here grows with traffic.
+#[derive(Default)]
+pub struct WorkerShard {
+    /// utterance requests completed
+    pub completed: AtomicU64,
+    /// completed requests that carried a ground-truth label
+    pub labelled: AtomicU64,
+    /// labelled requests answered correctly
+    pub correct: AtomicU64,
+    /// streaming audio chunks processed by this worker's sessions
+    pub stream_chunks: AtomicU64,
+    /// wall-clock utterance service time (queue + simulation), µs
+    pub latency: AtomicLogHistogram,
+    /// wall-clock stream-chunk service time (queue + simulation), µs
+    pub chunk_latency: AtomicLogHistogram,
+    /// chip activity folded in as monotonic deltas (utterances + sessions)
+    pub activity: AtomicActivity,
+    /// epoch-published chip report snapshot (utterance chip, cumulative);
+    /// locked once per epoch / idle transition / reports() pull
+    pub report: Mutex<Option<ChipReport>>,
+}
+
+impl WorkerShard {
+    /// Fixed heap footprint of this shard's telemetry (histogram buckets).
+    pub fn heap_bytes(&self) -> usize {
+        // both histograms have the same constant bucket-array size
+        2 * crate::util::hist::N_BUCKETS * std::mem::size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_activity_add_snapshot_roundtrip() {
+        let acc = AtomicActivity::default();
+        let a = ChipActivity {
+            frames: 3,
+            gated_frames: 1,
+            mac_ops: 100,
+            sram_word_reads: 50,
+            rnn_cycles: 900,
+            fired_lanes: 7,
+            total_lanes: 74,
+            fired_x: 2,
+            total_x: 10,
+            fired_h: 5,
+            total_h: 64,
+            fex_visits: 3840,
+        };
+        acc.add(&a);
+        acc.add(&a);
+        let s = acc.snapshot();
+        assert_eq!(s.frames, 6);
+        assert_eq!(s.mac_ops, 200);
+        assert_eq!(s.fex_visits, 7680);
+    }
+
+    #[test]
+    fn shard_heap_footprint_is_constant() {
+        let shard = WorkerShard::default();
+        let before = shard.heap_bytes();
+        for i in 0..10_000u64 {
+            shard.completed.fetch_add(1, Ordering::Relaxed);
+            shard.latency.record(i);
+            shard.chunk_latency.record(i * 3);
+        }
+        assert_eq!(shard.heap_bytes(), before, "telemetry grew with traffic");
+    }
+}

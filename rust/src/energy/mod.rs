@@ -58,6 +58,27 @@ impl ChipActivity {
         self.fex_visits += other.fex_visits;
     }
 
+    /// Field-wise difference from an earlier snapshot of the same
+    /// counters. All fields are monotonic event counts, so telemetry can
+    /// flush increments (`current.delta_since(&last_flushed)`) into a
+    /// shared accumulator without ever resetting the source counters.
+    pub fn delta_since(&self, prev: &ChipActivity) -> ChipActivity {
+        ChipActivity {
+            frames: self.frames - prev.frames,
+            gated_frames: self.gated_frames - prev.gated_frames,
+            mac_ops: self.mac_ops - prev.mac_ops,
+            sram_word_reads: self.sram_word_reads - prev.sram_word_reads,
+            rnn_cycles: self.rnn_cycles - prev.rnn_cycles,
+            fired_lanes: self.fired_lanes - prev.fired_lanes,
+            total_lanes: self.total_lanes - prev.total_lanes,
+            fired_x: self.fired_x - prev.fired_x,
+            total_x: self.total_x - prev.total_x,
+            fired_h: self.fired_h - prev.fired_h,
+            total_h: self.total_h - prev.total_h,
+            fex_visits: self.fex_visits - prev.fex_visits,
+        }
+    }
+
     /// ΔRNN duty cycle: fraction of frames where the accelerator actually
     /// clocked (1.0 without VAD gating).
     pub fn duty_cycle(&self) -> f64 {
@@ -254,6 +275,21 @@ mod tests {
         b.merge(&a);
         assert_eq!(b.frames, 12);
         assert_eq!(b.total_lanes, 12 * 74);
+    }
+
+    #[test]
+    fn delta_since_inverts_merge() {
+        let early = synthetic_activity(10.0, 5);
+        let mut late = early;
+        late.merge(&synthetic_activity(20.0, 7));
+        let delta = late.delta_since(&early);
+        assert_eq!(delta.frames, 7);
+        assert_eq!(delta.total_lanes, 7 * 74);
+        let mut rebuilt = early;
+        rebuilt.merge(&delta);
+        assert_eq!(rebuilt.frames, late.frames);
+        assert_eq!(rebuilt.rnn_cycles, late.rnn_cycles);
+        assert_eq!(rebuilt.fex_visits, late.fex_visits);
     }
 
     #[test]

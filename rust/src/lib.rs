@@ -37,7 +37,10 @@
 //! * [`coordinator`] — streaming serving runtime: routes audio streams to a
 //!   pool of chip-twin workers with dynamic batching and backpressure;
 //!   long-lived [`coordinator::StreamSession`]s run the always-on pipeline
-//!   per stream with pinned-worker state locality.
+//!   per stream with pinned-worker state locality. Telemetry is sharded
+//!   per worker (lock-free counters + fixed-size log-bucketed latency
+//!   histograms, O(1) memory in request count) and validated by the
+//!   [`coordinator::soak`] sustained-load harness.
 //! * [`baseline`] — the comparison points: dense (non-Δ) accelerator,
 //!   coarse-grained skip-RNN, and an FFT/MFCC FEx cost model.
 //! * [`exp`] — drivers that regenerate every table and figure of the paper.

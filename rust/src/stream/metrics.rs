@@ -49,14 +49,17 @@ impl TrackScore {
         self.false_accepts as f64 / (self.duration_s / 3600.0)
     }
 
-    /// Median hit latency (ms); `None` when nothing was detected.
+    /// Median hit latency (ms); `None` when nothing was detected. Even
+    /// counts average the two middle elements (`v[len/2]` alone is the
+    /// *upper* median and overstates the latency).
     pub fn median_latency_ms(&self) -> Option<f64> {
         if self.latencies_ms.is_empty() {
             return None;
         }
         let mut v = self.latencies_ms.clone();
         v.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-        Some(v[v.len() / 2])
+        let mid = v.len() / 2;
+        Some(if v.len() % 2 == 0 { (v[mid - 1] + v[mid]) / 2.0 } else { v[mid] })
     }
 }
 
@@ -188,6 +191,28 @@ mod tests {
         let s = score_track(&sched, &events, 60 * 8000, DEFAULT_TOLERANCE_MS);
         assert_eq!(s.keywords, 1);
         assert_eq!((s.hits, s.misses, s.false_accepts), (0, 1, 1));
+    }
+
+    #[test]
+    fn even_count_median_averages_the_two_middles() {
+        let s = TrackScore {
+            keywords: 4,
+            hits: 4,
+            latencies_ms: vec![40.0, 10.0, 30.0, 20.0],
+            duration_s: 60.0,
+            ..TrackScore::default()
+        };
+        // sorted middles are 20 and 30 — the old upper-median returned 30
+        assert_eq!(s.median_latency_ms(), Some(25.0));
+        // odd counts still return the exact middle element
+        let odd = TrackScore {
+            keywords: 3,
+            hits: 3,
+            latencies_ms: vec![9.0, 1.0, 5.0],
+            duration_s: 60.0,
+            ..TrackScore::default()
+        };
+        assert_eq!(odd.median_latency_ms(), Some(5.0));
     }
 
     #[test]

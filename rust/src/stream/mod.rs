@@ -25,6 +25,7 @@ pub mod vad;
 
 use crate::accel::gru::QuantParams;
 use crate::chip::{ChipConfig, ChipReport, KwsChip};
+use crate::energy::ChipActivity;
 use detector::{Detector, DetectorConfig, DetectionEvent};
 use vad::{Vad, VadConfig};
 
@@ -67,6 +68,9 @@ pub struct StreamPipeline {
     pub detector: Detector,
     /// samples consumed since construction/reset
     pub samples_in: u64,
+    /// chip activity already handed out via [`take_activity_delta`]
+    /// (telemetry shards flush increments; chip counters never reset)
+    flushed: ChipActivity,
 }
 
 impl StreamPipeline {
@@ -77,6 +81,7 @@ impl StreamPipeline {
             vad: Vad::new(vad),
             detector: Detector::new(detector),
             samples_in: 0,
+            flushed: ChipActivity::default(),
         }
     }
 
@@ -115,6 +120,17 @@ impl StreamPipeline {
     /// Chip metrics over everything processed so far.
     pub fn report(&self) -> ChipReport {
         self.chip.report()
+    }
+
+    /// Chip activity accumulated since the last call: the telemetry-shard
+    /// flush unit ([`crate::coordinator::telemetry::WorkerShard`] adds
+    /// these monotonic deltas with relaxed atomics instead of re-merging
+    /// the chip's lifetime counters or resetting them).
+    pub fn take_activity_delta(&mut self) -> ChipActivity {
+        let act = self.chip.activity();
+        let delta = act.delta_since(&self.flushed);
+        self.flushed = act;
+        delta
     }
 
     /// Fraction of frames the ΔRNN actually clocked (VAD duty cycle).
@@ -183,6 +199,24 @@ mod tests {
         }
         assert_eq!(p.chip.activity().gated_frames, 0);
         assert!((p.duty_cycle() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn activity_delta_flushes_each_increment_exactly_once() {
+        let mut p = StreamPipeline::new(rng_quant(9), StreamConfig::design_point());
+        p.push_audio(&[0i64; 1280]);
+        let d1 = p.take_activity_delta();
+        assert_eq!(d1.frames, 10);
+        let d2 = p.take_activity_delta();
+        assert_eq!(d2.frames, 0, "same delta handed out twice");
+        p.push_audio(&[0i64; 640]);
+        let d3 = p.take_activity_delta();
+        assert_eq!(d3.frames, 5);
+        let mut total = d1;
+        total.merge(&d2);
+        total.merge(&d3);
+        assert_eq!(total.frames, p.chip.activity().frames);
+        assert_eq!(total.fex_visits, p.chip.activity().fex_visits);
     }
 
     #[test]

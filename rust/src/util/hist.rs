@@ -1,0 +1,287 @@
+//! Fixed-size, integer-only, log-bucketed latency histogram
+//! (HdrHistogram-style), plus a lock-free atomic variant for the
+//! coordinator's per-worker telemetry shards.
+//!
+//! Layout: values `0..32` land in exact unit buckets; every octave above
+//! that is split into 32 linear sub-buckets (5 mantissa bits), so the
+//! relative half-width of any bucket is at most 1/64 (~1.6%) — comfortably
+//! inside the 5% percentile-accuracy budget the serving telemetry promises.
+//! The whole 64-bit value range fits in [`N_BUCKETS`] = 1920 counters, so
+//! memory is O(1) in the number of recorded samples — the property the
+//! coordinator's soak harness asserts under sustained load.
+//!
+//! Percentile queries use the same exclusive nearest-rank / round-half-up
+//! rank rule as [`crate::coordinator::percentile`], so the histogram answer
+//! is the bucket containing exactly the order statistic the exact
+//! computation would return (the two can differ only by the bucket's
+//! representative-value rounding).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Mantissa bits per octave (32 linear sub-buckets).
+pub const SUB_BITS: u32 = 5;
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Total bucket count covering the full `u64` range:
+/// 32 exact unit buckets + 59 octaves x 32 sub-buckets.
+pub const N_BUCKETS: usize = (SUB as usize) * (64 - SUB_BITS as usize + 1);
+
+/// Bucket index of a value (total order preserved across buckets).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let exp = 63 - v.leading_zeros();
+        let mantissa = ((v >> (exp - SUB_BITS)) - SUB) as usize;
+        ((exp - SUB_BITS) as usize + 1) * SUB as usize + mantissa
+    }
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `i` (inverse of
+/// [`bucket_index`]).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    let i = i as u64;
+    if i < SUB {
+        (i, i)
+    } else {
+        let octave = (i >> SUB_BITS) - 1;
+        let shift = octave as u32;
+        let mantissa = i & (SUB - 1);
+        let lo = (SUB + mantissa) << shift;
+        (lo, lo + (1u64 << shift) - 1)
+    }
+}
+
+/// Representative value reported for bucket `i`: the bucket midpoint
+/// (exact for the unit buckets).
+#[inline]
+fn bucket_mid(i: usize) -> u64 {
+    let (lo, hi) = bucket_bounds(i);
+    lo + (hi - lo) / 2
+}
+
+/// Plain (single-writer / snapshot) log-bucketed histogram.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; N_BUCKETS], count: 0, sum: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Percentile by the exclusive nearest-rank rule with a round-half-up
+    /// rank — identical to [`crate::coordinator::percentile`], answered as
+    /// the midpoint of the bucket holding that order statistic.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let n = self.count;
+        let rank = ((p * (n as f64 + 1.0)) + 0.5).floor() as u64;
+        let rank = rank.clamp(1, n);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_mid(i);
+            }
+        }
+        // unreachable: cum reaches self.count
+        bucket_mid(N_BUCKETS - 1)
+    }
+
+    /// Heap footprint of the bucket array — constant by construction; the
+    /// soak harness asserts this does not grow with the request count.
+    pub fn heap_bytes(&self) -> usize {
+        self.counts.len() * std::mem::size_of::<u64>()
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("count", &self.count)
+            .field("mean", &self.mean())
+            .field("p50", &self.percentile(0.50))
+            .field("p99", &self.percentile(0.99))
+            .finish()
+    }
+}
+
+/// Lock-free multi-writer histogram: relaxed per-bucket counters, folded
+/// into a [`LogHistogram`] snapshot at read time. Snapshots taken while
+/// writers are active may be off by in-flight increments (telemetry
+/// semantics); quiescent snapshots are exact.
+pub struct AtomicLogHistogram {
+    counts: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for AtomicLogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicLogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LogHistogram {
+        let counts: Vec<u64> =
+            self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        // derive count/sum-consistent totals from the folded buckets so a
+        // concurrent snapshot is internally consistent for percentiles
+        let count = counts.iter().sum();
+        LogHistogram { counts, count, sum: self.sum.load(Ordering::Relaxed) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn index_and_bounds_roundtrip() {
+        let mut rng = Pcg::new(7);
+        let mut probes: Vec<u64> = (0..200).map(|_| rng.below(1 << 20) as u64).collect();
+        probes.extend([0, 1, 31, 32, 33, 63, 64, 65, 127, 128, u64::MAX / 2, u64::MAX]);
+        for v in probes {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} i={i} [{lo},{hi}]");
+            assert!(i < N_BUCKETS);
+        }
+        // bucket boundaries are contiguous and ordered
+        for i in 1..N_BUCKETS {
+            let (_, prev_hi) = bucket_bounds(i - 1);
+            let (lo, _) = bucket_bounds(i);
+            assert_eq!(lo, prev_hi.wrapping_add(1), "gap/overlap at bucket {i}");
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 3, 7, 7, 31] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.percentile(0.5), 7);
+        assert_eq!(h.percentile(1.0), 31);
+        assert_eq!(h.percentile(0.0), 0);
+    }
+
+    #[test]
+    fn relative_error_bounded_by_bucket_width() {
+        // every bucket's midpoint is within 1/64 of any member value
+        let mut rng = Pcg::new(11);
+        for _ in 0..500 {
+            let v = rng.below(1 << 40) as u64 + 1;
+            let mid = bucket_mid(bucket_index(v));
+            let err = (mid as i128 - v as i128).unsigned_abs() as f64;
+            assert!(err / v as f64 <= 1.0 / 64.0 + 1e-12, "v={v} mid={mid}");
+        }
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(10);
+        b.record(1000);
+        b.record(2000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum(), 3010);
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain() {
+        let mut plain = LogHistogram::new();
+        let atomic = AtomicLogHistogram::new();
+        let mut rng = Pcg::new(3);
+        for _ in 0..2000 {
+            let v = rng.below(1 << 24) as u64;
+            plain.record(v);
+            atomic.record(v);
+        }
+        let snap = atomic.snapshot();
+        assert_eq!(snap.count(), plain.count());
+        assert_eq!(snap.sum(), plain.sum());
+        for p in [0.5, 0.9, 0.99] {
+            assert_eq!(snap.percentile(p), plain.percentile(p));
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = AtomicLogHistogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..5000u64 {
+                        h.record(t * 1000 + i % 700);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.snapshot().count(), 4 * 5000);
+    }
+}

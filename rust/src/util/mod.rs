@@ -8,9 +8,12 @@
 //! * [`prng`] — deterministic PCG32 (audio synthesis, splits, tests);
 //! * [`check`] — property-based-testing harness;
 //! * [`bench`] — criterion-style micro-benchmark runner used by the
-//!   `harness = false` bench binaries.
+//!   `harness = false` bench binaries;
+//! * [`hist`] — fixed-size log-bucketed latency histogram (plain + atomic)
+//!   backing the coordinator's contention-free telemetry shards.
 
 pub mod bench;
 pub mod check;
+pub mod hist;
 pub mod json;
 pub mod prng;

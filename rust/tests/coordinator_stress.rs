@@ -162,6 +162,37 @@ fn stress_backpressure_under_stalled_worker() {
 }
 
 #[test]
+fn soak_sustained_load_keeps_telemetry_flat_and_percentiles_honest() {
+    use deltakws::coordinator::soak::{run_soak, SoakConfig};
+    // scaled-down acceptance workload: mixed utterance + stream jobs from
+    // concurrent producers; run_soak itself asserts the flat-memory
+    // telemetry contract, the cross-checks below pin the rest
+    let cfg = SoakConfig::quick();
+    let report = run_soak(rng_quant(9), ChipConfig::design_point(), &cfg);
+    assert_eq!(report.utterances_done, cfg.utterances);
+    assert_eq!(report.chunks_done, cfg.streams as u64 * cfg.chunks_per_stream);
+    assert_eq!(
+        report.telemetry_bytes_early, report.telemetry_bytes_final,
+        "Stats memory must be independent of request count"
+    );
+    assert!(
+        report.percentile_rel_err() <= 0.05,
+        "histogram percentiles {}% off exact",
+        report.percentile_rel_err() * 100.0
+    );
+    assert!(report.decisions_per_sec > 0.0);
+    let s = &report.final_stats;
+    assert_eq!(s.latency.count(), cfg.utterances, "latency histogram lost samples");
+    assert_eq!(
+        s.chunk_latency.count(),
+        cfg.streams as u64 * cfg.chunks_per_stream,
+        "chunk histogram lost samples"
+    );
+    let done: u64 = s.per_worker.iter().map(|w| w.completed).sum();
+    assert_eq!(done, cfg.utterances, "per-worker completions don't sum up");
+}
+
+#[test]
 fn stress_many_streams_land_on_all_workers() {
     let coord = Coordinator::new(rng_quant(3), ChipConfig::design_point(), 3, 8);
     let n = 9usize;

@@ -125,6 +125,46 @@ fn vad_gating_is_strictly_cheaper_and_functionally_gated() {
 }
 
 #[test]
+fn vad_cold_start_reopens_after_real_silence() {
+    // a track that begins mid-keyword seeds the adaptive noise floor with
+    // speech energy (there was never a quiet frame to learn from). The
+    // pinned contract: whatever happens to that cold first keyword, once
+    // real silence establishes a floor the gate must open again for the
+    // next keyword instead of staying poisoned by the speech-level floor.
+    let mut rng = Pcg::new(41);
+    let utt = deltakws::audio::quantize_12b(&deltakws::audio::synth_utterance(5, &mut rng));
+    let mut p = StreamPipeline::new(rng_quant(11), StreamConfig::design_point());
+
+    // begin mid-keyword: drop the onset, start inside full speech
+    p.push_audio(&utt[2048..]);
+    let cold = p.chip.activity();
+    assert!(cold.frames > 0);
+
+    // 3 s of true silence: the floor drops instantly to the real level
+    let silence = vec![0i64; 3 * 8000];
+    p.push_audio(&silence);
+    let after_silence = p.chip.activity();
+    assert!(
+        after_silence.gated_frames > cold.gated_frames,
+        "sustained silence never gated the ΔRNN"
+    );
+
+    // a second keyword (with onset) must clock the ΔRNN again
+    let mut rng2 = Pcg::new(42);
+    let utt2 = deltakws::audio::quantize_12b(&deltakws::audio::synth_utterance(7, &mut rng2));
+    p.push_audio(&utt2);
+    let end = p.chip.activity();
+    let ungated_before = after_silence.frames - after_silence.gated_frames;
+    let ungated_after = end.frames - end.gated_frames;
+    assert!(
+        ungated_after >= ungated_before + 5,
+        "gate failed to reopen after a cold start: {} -> {} ungated frames",
+        ungated_before,
+        ungated_after
+    );
+}
+
+#[test]
 fn coordinator_sessions_detect_on_the_pinned_worker() {
     // two sessions on a 3-worker pool, interleaved with batch requests:
     // every chunk of a stream must be processed (frame conservation) and
