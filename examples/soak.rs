@@ -9,6 +9,11 @@
 //! and the flat-memory proof. The clean number is the throughput baseline
 //! later scaling PRs are judged against (README "Soak throughput" table).
 //!
+//! Since the serving API v2, the harness runs entirely on the ticket
+//! surface: each producer thread submits through its own `Client` and
+//! claims its own completions — the exact-percentile cross-check doubles
+//! as a mailbox-isolation check at soak scale.
+//!
 //! Weights are deterministic-random: load characteristics (frame counts,
 //! cycle counts, queueing) do not depend on model quality.
 //!
@@ -47,11 +52,13 @@ fn print_report(label: &str, r: &SoakReport) {
         r.percentile_rel_err() * 100.0
     );
     println!(
-        "telemetry  : {} B at 10% of run, {} B at end (flat ✓); {} producer retries; {} spills",
+        "telemetry  : {} B at 10% of run, {} B at end (flat ✓); {} producer retries; \
+         {} spills; {} backpressure rejections",
         r.telemetry_bytes_early,
         r.telemetry_bytes_final,
         r.producer_retries,
-        r.final_stats.spilled
+        r.final_stats.spilled,
+        r.final_stats.rejected_full
     );
     println!(
         "chip       : {:.1}% temporal sparsity, {:.1}% ΔRNN duty cycle over {} frames",

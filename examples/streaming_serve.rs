@@ -2,11 +2,14 @@
 //! pool of chip-twin workers (the paper's host + many-chips deployment).
 //!
 //! Eight logical microphone streams submit utterances concurrently from
-//! multiple *producer threads*, each holding a cloned [`Client`] handle —
-//! exercising the concurrent submission path end-to-end. The router pins
-//! streams to workers (state locality), spills around stalls, and applies
-//! backpressure when saturated; producers retry with backoff and stop
-//! cleanly if the pool disappears. Prints throughput, wall-clock latency
+//! multiple *producer threads*, each holding its own [`Client`] handle with
+//! its own completion mailbox — exercising the v2 ticket surface
+//! end-to-end: every producer claims exactly its own responses (routed by
+//! request id), with zero cross-producer interleaving by construction.
+//! The router pins streams to workers (state locality), spills around
+//! stalls, and applies backpressure when saturated; producers retry on
+//! typed [`SubmitError::QueueFull`] and stop cleanly on
+//! [`SubmitError::Closed`]. Prints throughput, wall-clock latency
 //! percentiles, online accuracy, spill/retry/rejection counts (global and
 //! per worker) and aggregated chip telemetry.
 //!
@@ -15,9 +18,10 @@
 use std::time::{Duration, Instant};
 
 use deltakws::config::RunConfig;
-use deltakws::coordinator::{Coordinator, Request};
+use deltakws::coordinator::{Coordinator, Request, Response, Ticket};
 use deltakws::dataset::{Dataset, Split};
 use deltakws::exp;
+use deltakws::SubmitError;
 
 /// Logical microphone streams the demo simulates.
 const STREAMS: usize = 8;
@@ -36,22 +40,29 @@ fn main() -> anyhow::Result<()> {
         "spawning {workers} chip workers; {producers} producer threads serving \
          {requests} requests over {STREAMS} streams"
     );
-    let coord = Coordinator::new(params, cfg.chip_config(), workers, 16);
+    let coord = Coordinator::builder(params, cfg.chip_config_checked()?)
+        .workers(workers)
+        .queue_depth(16)
+        .build()?;
     let ds = Dataset::new(cfg.seed);
 
     let t0 = Instant::now();
-    // each producer thread owns a cloned Client handle and a disjoint set
-    // of *streams* (stream s belongs to producer s % producers), so every
-    // stream has exactly one writer and sees its requests in submission
-    // order regardless of the producer count
+    // each producer thread owns its own Client handle (own mailbox) and a
+    // disjoint set of *streams* (stream s belongs to producer s % producers),
+    // so every stream has exactly one writer and sees its requests in
+    // submission order regardless of the producer count
     let mut producer_handles = Vec::with_capacity(producers);
     for p in 0..producers {
         let client = coord.client();
         let ds = ds.clone();
         producer_handles.push(std::thread::spawn(move || {
             let mut retries = 0u64;
-            let mut submitted = 0u64;
-            for i in (0..requests).filter(|i| (i % STREAMS) % producers == p) {
+            let mut tickets: Vec<Ticket> = Vec::new();
+            // fixed-backoff retry on typed backpressure; stop submitting
+            // once the pool reports itself Closed, but keep the tickets
+            // already accepted — their responses may have been delivered
+            // before the shutdown and are still claimable below
+            'submit: for i in (0..requests).filter(|i| (i % STREAMS) % producers == p) {
                 let utt = ds.utterance(Split::Test, i);
                 let mut req = Request {
                     id: 0,
@@ -59,38 +70,48 @@ fn main() -> anyhow::Result<()> {
                     audio12: utt.audio12,
                     label: Some(utt.label),
                 };
-                // bounded-backoff retry on backpressure; bail out if the
-                // pool is gone (Client::is_closed tells the two apart)
                 loop {
                     match client.submit(req) {
-                        Ok(_) => {
-                            submitted += 1;
+                        Ok(t) => {
+                            tickets.push(t);
                             break;
                         }
-                        Err(r) => {
-                            if client.is_closed() {
-                                return (submitted, retries);
-                            }
+                        Err(SubmitError::QueueFull(r)) => {
                             retries += 1;
                             req = r;
                             std::thread::sleep(Duration::from_millis(2));
                         }
+                        Err(SubmitError::Closed(_)) => break 'submit,
                     }
                 }
             }
-            (submitted, retries)
+            let submitted = tickets.len() as u64;
+            // claim this producer's own responses — nobody else can
+            let deadline = Instant::now() + Duration::from_secs(600);
+            let mut responses: Vec<Response> = Vec::with_capacity(tickets.len());
+            for t in tickets {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                match t.wait_timeout(remaining) {
+                    Ok(r) => responses.push(r),
+                    Err(e) => {
+                        eprintln!("producer {p}: lost a response: {e}");
+                        break;
+                    }
+                }
+            }
+            (responses, submitted, retries)
         }));
     }
-    // collect concurrently with the producers (the response channel is
-    // bounded; draining it is what keeps the workers moving)
-    let responses = coord.collect(requests, Duration::from_secs(600));
-    let wall = t0.elapsed();
-    let (mut submitted, mut retries) = (0u64, 0u64);
+    let mut responses: Vec<Response> = Vec::with_capacity(requests);
+    let mut submitted = 0u64;
+    let mut retries = 0u64;
     for h in producer_handles {
-        let (s, r) = h.join().expect("producer thread panicked");
+        let (rs, s, r) = h.join().expect("producer thread panicked");
         submitted += s;
         retries += r;
+        responses.extend(rs);
     }
+    let wall = t0.elapsed();
 
     let stats = coord.stats();
     println!("\n== serving report ==");
@@ -100,12 +121,12 @@ fn main() -> anyhow::Result<()> {
         responses.len(),
         wall.as_secs_f64()
     );
-    // `stats.rejected` counts saturated submit *attempts*; the producers
+    // `rejected_full` counts saturated submit *attempts*; the producers
     // retried every one of them, so none of these are dropped requests
     println!(
         "routing    : {} spills; {} submit attempts hit global backpressure \
-         ({retries} producer retries, all eventually accepted)",
-        stats.spilled, stats.rejected
+         ({retries} producer retries, all eventually accepted); {} shutdown rejections",
+        stats.spilled, stats.rejected_full, stats.rejected_closed
     );
     println!(
         "latency    : p50 {:.1} ms   p99 {:.1} ms  (wall-clock, queue + simulation)",
@@ -138,12 +159,21 @@ fn main() -> anyhow::Result<()> {
         );
     }
     // per-stream ordering check (ids are assigned at submission; spills
-    // can reorder service, pinned streams stay ordered)
-    let mut by_stream: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+    // can reorder service, pinned streams stay ordered). Each worker's
+    // completion order is its `worker_seq`; a stream served entirely by
+    // one worker must complete in ascending id order.
+    let mut by_stream: std::collections::HashMap<u64, Vec<&Response>> = Default::default();
     for r in &responses {
-        by_stream.entry(r.stream).or_default().push(r.id);
+        by_stream.entry(r.stream).or_default().push(r);
     }
-    let ordered = by_stream.values().all(|ids| ids.windows(2).all(|w| w[0] < w[1]));
+    let ordered = by_stream.values_mut().all(|rs| {
+        let workers: std::collections::HashSet<usize> = rs.iter().map(|r| r.worker).collect();
+        if workers.len() > 1 {
+            return true; // spilled: ordering intentionally traded away
+        }
+        rs.sort_by_key(|r| r.worker_seq);
+        rs.windows(2).all(|w| w[0].id < w[1].id)
+    });
     println!(
         "stream ordering preserved: {ordered}{}",
         if stats.spilled > 0 { "  (spills may reorder)" } else { "" }

@@ -26,6 +26,9 @@ fn main() -> anyhow::Result<()> {
     let seed: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(42);
     let cfg = RunConfig::default();
     let params = exp::ensure_weights(&cfg)?;
+    // validated chip configuration (serving API v2): out-of-range
+    // channels/Δ_TH surface as a typed error instead of a silent no-op chip
+    let chip_cfg = cfg.chip_config_checked()?;
 
     let tcfg = TrackConfig {
         duration_s,
@@ -42,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     // stream in 32 ms chunks (256 samples), the way a host MCU would feed
     // the SPI front door
     let mut pipe =
-        StreamPipeline::new(params.clone(), StreamConfig::for_chip(cfg.chip_config()));
+        StreamPipeline::new(params.clone(), StreamConfig::for_chip(chip_cfg.clone()));
     let mut events = Vec::new();
     for chunk in audio12.chunks(256) {
         events.extend(pipe.push_audio(chunk));
@@ -84,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     let gated_activity = pipe.chip.activity();
     let mut always_on = StreamPipeline::new(
         params,
-        StreamConfig::for_chip(cfg.chip_config()).with_vad(VadConfig::disabled()),
+        StreamConfig::for_chip(chip_cfg).with_vad(VadConfig::disabled()),
     );
     for chunk in audio12.chunks(256) {
         always_on.push_audio(chunk);

@@ -37,38 +37,29 @@ fn main() {
 
     println!("\ncoordinator scaling (32 requests, queue 16):");
     for workers in [1usize, 2, 4] {
-        let coord = Coordinator::new(
-            common::rng_quant(5),
-            ChipConfig::design_point(),
-            workers,
-            16,
-        );
+        let coord = Coordinator::builder(common::rng_quant(5), ChipConfig::design_point())
+            .workers(workers)
+            .queue_depth(16)
+            .build()
+            .expect("valid bench pool");
         let t0 = std::time::Instant::now();
         let n = 32;
-        let mut submitted = 0;
-        for i in 0..n {
-            let req = Request {
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| Request {
                 id: 0,
                 stream: (i % 8) as u64,
                 audio12: utt.clone(),
                 label: None,
-            };
-            let mut req = req;
-            loop {
-                match coord.submit(req) {
-                    Ok(_) => break,
-                    Err(r) => {
-                        req = r;
-                        std::thread::sleep(Duration::from_micros(200));
-                    }
-                }
-            }
-            submitted += 1;
-        }
-        let got = coord.collect(submitted, Duration::from_secs(120)).len();
+            })
+            .collect();
+        // v2 utterance-benchmark path: batch submission (blocking through
+        // backpressure), ticket-routed responses
+        let batch = coord.submit_batch(reqs).expect("pool alive");
+        let submitted = batch.len();
+        let got = batch.wait_all(Duration::from_secs(120)).len();
         let wall = t0.elapsed().as_secs_f64();
         println!(
-            "  {workers} worker(s): {:.1} utt/s ({got}/{n} in {wall:.2}s)",
+            "  {workers} worker(s): {:.1} utt/s ({got}/{submitted} submitted of {n} in {wall:.2}s)",
             got as f64 / wall
         );
     }

@@ -27,9 +27,20 @@ use crate::accel::fifo::AsyncFifo;
 use crate::accel::gru::QuantParams;
 use crate::accel::{AccelConfig, DeltaRnnAccel};
 use crate::energy::{self, ChipActivity, PowerBreakdown, SramKind};
+use crate::error::Error;
 use crate::fex::{FeatureFrame, Fex, FexConfig, MAX_CHANNELS};
 
+/// Largest Q8.8 Δ-threshold a [`ChipConfig`] accepts: 2.0, the full
+/// scale of the Q8.8 activations the ΔEncoder compares against (features
+/// enter as 12-bit values >>3, i.e. in `[0, 2)`). Thresholds beyond this
+/// can never fire a lane; negative thresholds would fire on no change.
+pub const DELTA_TH_MAX_Q8: i16 = 512;
+
 /// Chip configuration: the two block configs + SRAM flavour.
+///
+/// Construct validated instances with [`ChipConfig::builder`]; the
+/// `with_*` setters are kept for in-range tweaks and clamp out-of-range
+/// values (with a debug assertion) instead of silently mis-deploying.
 #[derive(Debug, Clone)]
 pub struct ChipConfig {
     pub fex: FexConfig,
@@ -50,16 +61,159 @@ impl ChipConfig {
         }
     }
 
+    /// Validating builder, seeded from the design point: rejects channel
+    /// counts outside `1..=16` and Δ-thresholds outside the Q8.8
+    /// activation range with [`Error::InvalidConfig`] instead of
+    /// constructing a chip that silently computes nothing.
+    pub fn builder() -> ChipConfigBuilder {
+        ChipConfigBuilder::new()
+    }
+
+    /// Check the invariants the builder enforces (useful for configs
+    /// assembled field-by-field): at least one active FEx channel, FEx
+    /// and accelerator channel selections consistent, and every
+    /// Δ-threshold (shared and per-side overrides) within
+    /// `0..=`[`DELTA_TH_MAX_Q8`].
+    pub fn validate(&self) -> Result<(), Error> {
+        let n = self.fex.num_active();
+        if n == 0 || n > crate::MAX_CHANNELS {
+            return Err(Error::invalid_config(
+                "channels",
+                format!("active FEx channels must be in 1..={}, got {n}", crate::MAX_CHANNELS),
+            ));
+        }
+        if self.accel.n_active() != n {
+            return Err(Error::invalid_config(
+                "channels",
+                format!(
+                    "FEx selects {n} channels but the accelerator drives {} input lanes",
+                    self.accel.n_active()
+                ),
+            ));
+        }
+        for (name, th) in [
+            ("delta_th_q8", Some(self.accel.delta_th_q8)),
+            ("delta_th_x_q8", self.accel.delta_th_x_q8),
+            ("delta_th_h_q8", self.accel.delta_th_h_q8),
+        ] {
+            if let Some(th) = th {
+                if !(0..=DELTA_TH_MAX_Q8).contains(&th) {
+                    return Err(Error::invalid_config(
+                        "delta_th",
+                        format!("{name} must be in 0..={DELTA_TH_MAX_Q8} (Q8.8), got {th}"),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Set the shared Δ-threshold (Q8.8). Out-of-range values are
+    /// clamped to `0..=`[`DELTA_TH_MAX_Q8`] (debug builds assert); use
+    /// [`ChipConfig::builder`] to get a hard [`Error::InvalidConfig`]
+    /// instead.
     pub fn with_delta_th(mut self, th_q8: i16) -> Self {
-        self.accel.delta_th_q8 = th_q8;
+        debug_assert!(
+            (0..=DELTA_TH_MAX_Q8).contains(&th_q8),
+            "delta_th_q8 {th_q8} outside 0..={DELTA_TH_MAX_Q8}; the release build clamps"
+        );
+        self.accel.delta_th_q8 = th_q8.clamp(0, DELTA_TH_MAX_Q8);
         self
     }
 
     /// Keep FEx channel selection and accelerator input lanes consistent.
+    /// Out-of-range counts are clamped to `1..=16` (debug builds
+    /// assert); use [`ChipConfig::builder`] for a hard error.
     pub fn with_channels(mut self, n: usize) -> Self {
+        debug_assert!(
+            (1..=crate::MAX_CHANNELS).contains(&n),
+            "channels {n} outside 1..={}; the release build clamps",
+            crate::MAX_CHANNELS
+        );
+        let n = n.clamp(1, crate::MAX_CHANNELS);
         self.fex = FexConfig::n_channels(self.fex.arch, n);
         self.accel.active_x = self.fex.active;
         self
+    }
+}
+
+/// Validating builder for [`ChipConfig`] (see [`ChipConfig::builder`]).
+/// Unset knobs keep their [`ChipConfig::design_point`] values.
+#[derive(Debug, Clone)]
+pub struct ChipConfigBuilder {
+    channels: Option<usize>,
+    delta_th_q8: Option<i16>,
+    sram: Option<SramKind>,
+    warmup: Option<usize>,
+}
+
+impl ChipConfigBuilder {
+    fn new() -> Self {
+        Self { channels: None, delta_th_q8: None, sram: None, warmup: None }
+    }
+
+    /// Number of active IIR feature channels (validated `1..=16`); the
+    /// accelerator's input-lane selection follows automatically.
+    pub fn channels(mut self, n: usize) -> Self {
+        self.channels = Some(n);
+        self
+    }
+
+    /// Shared Δ-threshold in Q8.8 (validated `0..=`[`DELTA_TH_MAX_Q8`]).
+    pub fn delta_th_q8(mut self, th: i16) -> Self {
+        self.delta_th_q8 = Some(th);
+        self
+    }
+
+    /// Weight-SRAM flavour (near-V_TH custom vs foundry macro).
+    pub fn sram(mut self, kind: SramKind) -> Self {
+        self.sram = Some(kind);
+        self
+    }
+
+    /// Frames excluded from the posterior average (ΔRNN transient).
+    pub fn warmup(mut self, frames: usize) -> Self {
+        self.warmup = Some(frames);
+        self
+    }
+
+    /// Validate and build. Returns [`Error::InvalidConfig`] naming the
+    /// offending field when a knob is out of range.
+    pub fn build(self) -> Result<ChipConfig, Error> {
+        if let Some(n) = self.channels {
+            if !(1..=crate::MAX_CHANNELS).contains(&n) {
+                return Err(Error::invalid_config(
+                    "channels",
+                    format!("must be in 1..={}, got {n}", crate::MAX_CHANNELS),
+                ));
+            }
+        }
+        if let Some(th) = self.delta_th_q8 {
+            if !(0..=DELTA_TH_MAX_Q8).contains(&th) {
+                return Err(Error::invalid_config(
+                    "delta_th_q8",
+                    format!("must be in 0..={DELTA_TH_MAX_Q8} (Q8.8), got {th}"),
+                ));
+            }
+        }
+        let mut cfg = ChipConfig::design_point();
+        // values are range-checked above, so the setters' debug
+        // assertions cannot fire — reusing them keeps the FEx/accel
+        // channel-sync rule in one place
+        if let Some(n) = self.channels {
+            cfg = cfg.with_channels(n);
+        }
+        if let Some(th) = self.delta_th_q8 {
+            cfg = cfg.with_delta_th(th);
+        }
+        if let Some(kind) = self.sram {
+            cfg.sram = kind;
+        }
+        if let Some(w) = self.warmup {
+            cfg.warmup = w;
+        }
+        cfg.validate()?;
+        Ok(cfg)
     }
 }
 
@@ -474,6 +628,36 @@ mod tests {
         assert!(
             (p.total_uw() - (p.fex_uw + p.rnn_uw + p.sram_uw + p.misc_uw)).abs() < 1e-12
         );
+    }
+
+    #[test]
+    fn config_builder_validates_and_matches_setters() {
+        let cfg = ChipConfig::builder().channels(6).delta_th_q8(26).build().unwrap();
+        assert_eq!(cfg.fex.num_active(), 6);
+        assert_eq!(cfg.accel.n_active(), 6);
+        assert_eq!(cfg.accel.delta_th_q8, 26);
+        // the paper design point passes its own validation
+        assert!(ChipConfig::design_point().validate().is_ok());
+        // the silent-misconfiguration bug: these used to construct chips
+        // that computed nothing (0 channels) or never fired (huge Θ)
+        assert!(ChipConfig::builder().channels(0).build().is_err());
+        assert!(ChipConfig::builder().channels(17).build().is_err());
+        assert!(ChipConfig::builder().delta_th_q8(-1).build().is_err());
+        assert!(ChipConfig::builder().delta_th_q8(DELTA_TH_MAX_Q8 + 1).build().is_err());
+        let err = ChipConfig::builder().channels(99).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig { field: "channels", .. }));
+    }
+
+    #[test]
+    fn validate_catches_field_level_misconfiguration() {
+        // a config assembled field-by-field with inconsistent channel
+        // selections must not validate
+        let mut cfg = ChipConfig::design_point();
+        cfg.accel.active_x = [true; crate::MAX_CHANNELS];
+        assert!(cfg.validate().is_err(), "FEx/accel channel mismatch accepted");
+        let mut cfg = ChipConfig::design_point();
+        cfg.accel.delta_th_h_q8 = Some(DELTA_TH_MAX_Q8 + 100);
+        assert!(cfg.validate().is_err(), "out-of-range per-side Θ accepted");
     }
 
     #[test]

@@ -208,12 +208,26 @@ impl RunConfig {
     }
 
     /// Materialise the chip configuration at this run's operating point.
+    ///
+    /// Panics on out-of-range chip settings; load-time callers (the CLI)
+    /// validate first via [`chip_config_checked`](Self::chip_config_checked)
+    /// so the user sees the typed error instead.
     pub fn chip_config(&self) -> ChipConfig {
-        let mut cfg = ChipConfig::design_point().with_channels(self.channels);
+        self.chip_config_checked().expect("RunConfig chip settings out of range")
+    }
+
+    /// [`chip_config`](Self::chip_config) with builder-grade validation:
+    /// [`Error::InvalidConfig`](crate::error::Error::InvalidConfig) on
+    /// out-of-range channels / Δ-threshold instead of a chip that
+    /// silently computes nothing.
+    pub fn chip_config_checked(&self) -> Result<ChipConfig, crate::error::Error> {
+        let mut cfg = ChipConfig::builder()
+            .channels(self.channels)
+            .delta_th_q8(self.delta_th_q8)
+            .sram(self.sram)
+            .build()?;
         cfg.fex.arch = self.arch;
-        cfg.accel.delta_th_q8 = self.delta_th_q8;
-        cfg.sram = self.sram;
-        cfg
+        Ok(cfg)
     }
 }
 

@@ -1,0 +1,129 @@
+//! Validating builder for the serving [`Coordinator`].
+//!
+//! Replaces the positional `Coordinator::new(params, config, n_workers,
+//! queue_depth)` constructor: the two mandatory inputs (weights + chip
+//! configuration) are builder arguments, everything else is a named,
+//! defaulted, *validated* knob. `build()` returns
+//! [`Error::InvalidConfig`](crate::error::Error::InvalidConfig) instead
+//! of panicking or silently mis-deploying.
+
+#![deny(missing_docs)]
+
+use crate::accel::gru::QuantParams;
+use crate::chip::ChipConfig;
+use crate::error::Error;
+use crate::stream::StreamConfig;
+
+use super::telemetry::REPORT_EPOCH;
+use super::Coordinator;
+
+/// Upper bound on the worker pool size the builder accepts (a guard
+/// against misparsed CLI values spawning thousands of threads, not a
+/// scalability ceiling — raise it when a deployment genuinely needs to).
+pub const MAX_WORKERS: usize = 512;
+
+/// Builder for [`Coordinator`]: worker count, queue depth, the default
+/// [`StreamConfig`] applied to sessions opened without an explicit one,
+/// and the chip-report publication epoch.
+///
+/// ```no_run
+/// # use deltakws::accel::gru::QuantParams;
+/// # use deltakws::chip::ChipConfig;
+/// # use deltakws::coordinator::Coordinator;
+/// # fn params() -> QuantParams { QuantParams::zeroed() }
+/// let coord = Coordinator::builder(params(), ChipConfig::design_point())
+///     .workers(4)
+///     .queue_depth(16)
+///     .build()
+///     .expect("valid serving configuration");
+/// ```
+#[derive(Debug, Clone)]
+pub struct CoordinatorBuilder {
+    params: QuantParams,
+    chip: ChipConfig,
+    workers: usize,
+    queue_depth: usize,
+    default_stream: Option<StreamConfig>,
+    report_epoch: u64,
+}
+
+impl CoordinatorBuilder {
+    pub(crate) fn new(params: QuantParams, chip: ChipConfig) -> Self {
+        Self {
+            params,
+            chip,
+            workers: 4,
+            queue_depth: 16,
+            default_stream: None,
+            report_epoch: REPORT_EPOCH,
+        }
+    }
+
+    /// Number of chip-twin worker threads (default 4; validated
+    /// `1..=`[`MAX_WORKERS`]).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Bounded per-worker job-queue depth — the backpressure knob
+    /// (default 16; validated ≥ 1).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// VAD/detector tuning applied to streaming sessions opened without
+    /// a per-session config (default: [`StreamConfig::for_chip`] over
+    /// the pool's chip configuration).
+    pub fn default_stream(mut self, config: StreamConfig) -> Self {
+        self.default_stream = Some(config);
+        self
+    }
+
+    /// Jobs between periodic chip-report publications under sustained
+    /// load (default [`REPORT_EPOCH`]; validated ≥ 1). Lower values
+    /// bound report staleness tighter at a slightly higher hot-path cost.
+    pub fn report_epoch(mut self, jobs: u64) -> Self {
+        self.report_epoch = jobs;
+        self
+    }
+
+    /// Validate every knob and spawn the worker pool.
+    ///
+    /// # Errors
+    /// [`Error::InvalidConfig`] when the worker count, queue depth or
+    /// report epoch is out of range, or when the chip configuration (or
+    /// the default stream's chip configuration) fails
+    /// [`ChipConfig::validate`].
+    pub fn build(self) -> Result<Coordinator, Error> {
+        if self.workers == 0 || self.workers > MAX_WORKERS {
+            return Err(Error::invalid_config(
+                "workers",
+                format!("must be in 1..={MAX_WORKERS}, got {}", self.workers),
+            ));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::invalid_config("queue_depth", "must be >= 1"));
+        }
+        if self.report_epoch == 0 {
+            return Err(Error::invalid_config("report_epoch", "must be >= 1"));
+        }
+        self.chip.validate()?;
+        let default_stream = match self.default_stream {
+            Some(sc) => {
+                sc.chip.validate()?;
+                sc
+            }
+            None => StreamConfig::for_chip(self.chip.clone()),
+        };
+        Ok(Coordinator::spawn(
+            self.params,
+            self.chip,
+            self.workers,
+            self.queue_depth,
+            default_stream,
+            self.report_epoch,
+        ))
+    }
+}

@@ -8,6 +8,16 @@
 //! router tolerates slow/stalled workers by spilling to the least-loaded
 //! healthy queue.
 //!
+//! **Serving API v2** (see DESIGN.md §9): construction goes through the
+//! validating [`Coordinator::builder`], submission returns a completion
+//! [`Ticket`] delivered through the submitting client's own mailbox
+//! (responses are routed by request id — two concurrent producers can
+//! never steal each other's results), and every failure is a typed error
+//! that still hands the payload back ([`crate::SubmitError`],
+//! [`crate::StreamPushError`], [`crate::WaitError`]). The v1 global
+//! response FIFO survives only as the deprecated
+//! [`Coordinator::collect`] shim over the coordinator's default mailbox.
+//!
 //! Threading: std threads + mpsc (the vendored dependency set has no
 //! tokio); one thread per worker, one router, callers submit through the
 //! [`Coordinator`] directly or concurrently through cloneable [`Client`]
@@ -35,25 +45,32 @@
 //! [`soak`] harness drives sustained mixed load against exactly these
 //! guarantees.
 
+pub mod builder;
 pub mod soak;
 pub mod telemetry;
+pub mod ticket;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Weak};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::accel::gru::QuantParams;
 use crate::chip::{ChipConfig, ChipReport, KwsChip};
 use crate::energy::ChipActivity;
+use crate::error::{StreamPushError, SubmitError};
 use crate::stream::detector::DetectionEvent;
 use crate::stream::{StreamConfig, StreamPipeline};
 use crate::util::hist::LogHistogram;
-use telemetry::{WorkerShard, REPORT_EPOCH};
+use telemetry::WorkerShard;
+use ticket::Mailbox;
+
+pub use builder::CoordinatorBuilder;
+pub use ticket::{Batch, Ticket};
 
 /// One inference request: a 1 s utterance on a logical stream.
 #[derive(Debug, Clone)]
@@ -78,6 +95,10 @@ pub struct Response {
     /// wall-clock service time (queue + simulation)
     pub service: Duration,
     pub worker: usize,
+    /// per-worker completion sequence number: two responses from the
+    /// same worker completed in `worker_seq` order (lets callers verify
+    /// pinned-stream FIFO ordering without a global collection point)
+    pub worker_seq: u64,
 }
 
 /// Per-worker serving counters (the per-lane view of routing health:
@@ -105,7 +126,16 @@ pub struct Stats {
     pub completed: u64,
     pub correct: u64,
     pub labelled: u64,
-    pub rejected: u64,
+    /// submissions rejected with every queue saturated (transient
+    /// backpressure — the producer saw [`SubmitError::QueueFull`] and
+    /// can retry)
+    pub rejected_full: u64,
+    /// submissions rejected with every reachable lane disconnected
+    /// (shutdown race — the producer saw [`SubmitError::Closed`]).
+    /// Post-shutdown rejections from [`Client`] handles outliving the
+    /// pool are only observable by the caller: there is no router left
+    /// to count them.
+    pub rejected_closed: u64,
     /// requests accepted by a non-pinned worker (pinned queue was full);
     /// folded from per-lane atomics by [`Coordinator::stats`]
     pub spilled: u64,
@@ -127,6 +157,11 @@ impl Stats {
         } else {
             self.correct as f64 / self.labelled as f64
         }
+    }
+
+    /// All rejections regardless of cause (backpressure + shutdown).
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_full + self.rejected_closed
     }
 
     pub fn p50_us(&self) -> u64 {
@@ -170,10 +205,16 @@ pub fn percentile(xs: &[u64], p: f64) -> u64 {
 /// sessions opened on the same stream id coexist instead of clobbering
 /// each other's worker state.
 enum Job {
-    /// a per-utterance inference request (spillable)
-    Utterance(Request, Instant),
+    /// a per-utterance inference request (spillable); `reply` is the
+    /// submitting client's mailbox — the completion path delivers there,
+    /// routed by request id, never to a global queue
+    Utterance {
+        req: Request,
+        enqueued: Instant,
+        reply: Weak<Mailbox>,
+    },
     /// open a streaming session pinned to this worker (`config`: per-
-    /// session VAD/detector tuning, `None` = worker default; `alive` is
+    /// session VAD/detector tuning, `None` = pool default; `alive` is
     /// cleared by the client handle so the worker can GC sessions whose
     /// Close was never deliverable)
     StreamOpen {
@@ -200,6 +241,20 @@ pub enum StreamEvent {
     Closed { frames: u64, gated_frames: u64 },
 }
 
+/// Why one lane refused an utterance job (the request rides back).
+enum LaneError {
+    /// lane queue full — another lane (or a later retry) may accept
+    Full(Request),
+    /// lane disconnected — its worker is gone for good
+    Disconnected(Request),
+}
+
+/// Why the pinned lane refused a stream job (the job rides back).
+enum StreamLaneError {
+    Full(Job),
+    Disconnected(Job),
+}
+
 /// One worker's request lane (the submit-side view).
 struct Lane {
     tx: SyncSender<Job>,
@@ -219,12 +274,17 @@ struct Router {
     lanes: Vec<Lane>,
     /// per-worker telemetry shards (worker w writes shards[w] only)
     shards: Vec<Arc<WorkerShard>>,
-    /// submissions rejected with every queue saturated (lock-free; the
-    /// old code took the stats mutex on this path)
-    rejected: AtomicU64,
+    /// submissions rejected with every queue saturated (lock-free)
+    rejected_full: AtomicU64,
+    /// submissions rejected with every reachable lane disconnected
+    rejected_closed: AtomicU64,
     next_id: AtomicU64,
     /// unique ids for [`StreamSession`]s (stream ids may repeat)
     next_session: AtomicU64,
+    /// every mailbox handed out (default + per client), closed at pool
+    /// shutdown so blocked ticket waits resolve to `Closed`. Locked only
+    /// on client creation and shutdown — never on the submit path.
+    mailboxes: Mutex<Vec<Weak<Mailbox>>>,
 }
 
 impl Router {
@@ -233,60 +293,87 @@ impl Router {
     }
 
     /// Routing: the stream's pinned worker unless its queue is full, then
-    /// least-loaded spill; `Err` when every queue is saturated (global
-    /// backpressure — caller must retry/shed).
-    fn submit(&self, mut req: Request) -> Result<u64, Request> {
+    /// least-loaded spill. The request id is registered with `mailbox`
+    /// *before* enqueueing (a fast worker must find the id expected), and
+    /// withdrawn again on rejection. `Err` distinguishes global
+    /// backpressure (`QueueFull`, retryable) from a dead pool (`Closed`).
+    fn submit(&self, mut req: Request, mailbox: &Arc<Mailbox>) -> Result<Ticket, SubmitError> {
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let id = req.id;
+        let stream = req.stream;
+        mailbox.register(id);
+        let reply = Arc::downgrade(mailbox);
         let now = Instant::now();
-        let pinned = self.pinned_lane(req.stream);
-        let mut req = match self.try_lane(pinned, req, now) {
-            Ok(()) => return Ok(id),
-            Err(r) => {
+        let pinned = self.pinned_lane(stream);
+        let mut any_full = false;
+        let mut req = match self.try_lane(pinned, req, now, &reply) {
+            Ok(()) => return Ok(Ticket::new(id, stream, Arc::clone(mailbox))),
+            Err(LaneError::Full(r)) => {
                 self.lanes[pinned].pinned_full.fetch_add(1, Ordering::Relaxed);
+                any_full = true;
                 r
             }
+            Err(LaneError::Disconnected(r)) => r,
         };
         // spill: least-loaded first
         let mut order: Vec<usize> = (0..self.lanes.len()).filter(|&w| w != pinned).collect();
         order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
         for w in order {
-            req = match self.try_lane(w, req, now) {
+            req = match self.try_lane(w, req, now, &reply) {
                 Ok(()) => {
                     self.lanes[w].spilled_in.fetch_add(1, Ordering::Relaxed);
-                    return Ok(id);
+                    return Ok(Ticket::new(id, stream, Arc::clone(mailbox)));
                 }
-                Err(r) => r,
+                Err(LaneError::Full(r)) => {
+                    any_full = true;
+                    r
+                }
+                Err(LaneError::Disconnected(r)) => r,
             };
         }
-        self.rejected.fetch_add(1, Ordering::Relaxed);
-        Err(req)
+        mailbox.unregister(id);
+        if any_full {
+            self.rejected_full.fetch_add(1, Ordering::Relaxed);
+            Err(SubmitError::QueueFull(req))
+        } else {
+            self.rejected_closed.fetch_add(1, Ordering::Relaxed);
+            Err(SubmitError::Closed(req))
+        }
     }
 
-    fn try_lane(&self, w: usize, req: Request, t: Instant) -> Result<(), Request> {
-        match self.lanes[w].tx.try_send(Job::Utterance(req, t)) {
+    fn try_lane(
+        &self,
+        w: usize,
+        req: Request,
+        t: Instant,
+        reply: &Weak<Mailbox>,
+    ) -> Result<(), LaneError> {
+        let job = Job::Utterance { req, enqueued: t, reply: reply.clone() };
+        match self.lanes[w].tx.try_send(job) {
             Ok(()) => {
                 self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
-            Err(
-                TrySendError::Full(Job::Utterance(r, _))
-                | TrySendError::Disconnected(Job::Utterance(r, _)),
-            ) => Err(r),
+            Err(TrySendError::Full(Job::Utterance { req, .. })) => Err(LaneError::Full(req)),
+            Err(TrySendError::Disconnected(Job::Utterance { req, .. })) => {
+                Err(LaneError::Disconnected(req))
+            }
             Err(_) => unreachable!("utterance job came back as a different variant"),
         }
     }
 
     /// Non-blocking stream-job delivery to the stream's pinned lane (no
-    /// spill: the session state lives there). `Err` hands the job back.
-    fn try_stream_job(&self, stream: u64, job: Job) -> Result<(), Job> {
+    /// spill: the session state lives there). `Err` hands the job back
+    /// with the cause.
+    fn try_stream_job(&self, stream: u64, job: Job) -> Result<(), StreamLaneError> {
         let lane = self.pinned_lane(stream);
         match self.lanes[lane].tx.try_send(job) {
             Ok(()) => {
                 self.lanes[lane].depth.fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
-            Err(TrySendError::Full(j) | TrySendError::Disconnected(j)) => Err(j),
+            Err(TrySendError::Full(j)) => Err(StreamLaneError::Full(j)),
+            Err(TrySendError::Disconnected(j)) => Err(StreamLaneError::Disconnected(j)),
         }
     }
 
@@ -304,28 +391,63 @@ impl Router {
     }
 }
 
-/// Cloneable, thread-safe submission handle. Holds only a weak reference:
+/// Cloneable, thread-safe submission handle with its own completion
+/// mailbox: responses to requests submitted through this handle (or its
+/// clones, which share the mailbox) are delivered here only, claimed via
+/// the returned [`Ticket`]s. Holds only a weak reference to the router:
 /// once the owning [`Coordinator`] is dropped, submissions fail cleanly
-/// (the request is handed back) instead of keeping dead workers alive.
+/// with [`SubmitError::Closed`] instead of keeping dead workers alive.
 #[derive(Clone)]
 pub struct Client {
     router: Weak<Router>,
+    mailbox: Arc<Mailbox>,
 }
 
 impl Client {
     /// Submit a request (same routing/backpressure contract as
-    /// [`Coordinator::submit`]). `Err` means either transient backpressure
-    /// or a dropped pool — retry loops must check [`Client::is_closed`]
-    /// to tell the two apart, or they will spin forever after shutdown.
-    pub fn submit(&self, req: Request) -> Result<u64, Request> {
+    /// [`Coordinator::submit`]). `Ok` returns the completion [`Ticket`];
+    /// `Err` hands the request back and names the cause —
+    /// [`SubmitError::QueueFull`] is transient backpressure (retry),
+    /// [`SubmitError::Closed`] is permanent (stop).
+    pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
         match self.router.upgrade() {
-            Some(router) => router.submit(req),
-            None => Err(req),
+            Some(router) => router.submit(req, &self.mailbox),
+            None => Err(SubmitError::Closed(req)),
         }
     }
 
+    /// Submit a whole workload, blocking through transient backpressure
+    /// (bounded-backoff retry on [`SubmitError::QueueFull`]) — the
+    /// utterance-benchmark path. Returns the [`Batch`] of tickets in
+    /// submission order, or [`SubmitError::Closed`] with the first
+    /// undeliverable request once the pool is gone (any tickets already
+    /// obtained are dropped; their responses resolve into the void).
+    pub fn submit_batch<I>(&self, reqs: I) -> Result<Batch, SubmitError>
+    where
+        I: IntoIterator<Item = Request>,
+    {
+        let mut tickets = Vec::new();
+        for mut req in reqs {
+            loop {
+                match self.submit(req) {
+                    Ok(t) => {
+                        tickets.push(t);
+                        break;
+                    }
+                    Err(SubmitError::QueueFull(r)) => {
+                        req = r;
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(e @ SubmitError::Closed(_)) => return Err(e),
+                }
+            }
+        }
+        Ok(Batch::new(tickets))
+    }
+
     /// True once the owning [`Coordinator`] has been dropped: every further
-    /// submit will fail, so a retrying producer should stop.
+    /// submit will fail with [`SubmitError::Closed`], so a retrying
+    /// producer should stop.
     pub fn is_closed(&self) -> bool {
         self.router.strong_count() == 0
     }
@@ -357,11 +479,12 @@ impl StreamSession {
     }
 
     /// Submit an audio chunk (non-blocking). `Err` hands the chunk back:
-    /// the pinned worker's queue is full (backpressure — pace the
-    /// producer) or the pool is gone.
-    pub fn push(&self, audio12: Vec<i64>) -> Result<(), Vec<i64>> {
+    /// [`StreamPushError::Backpressure`] when the pinned worker's queue
+    /// is full (pace the producer and retry),
+    /// [`StreamPushError::Closed`] when the pool is gone.
+    pub fn push(&self, audio12: Vec<i64>) -> Result<(), StreamPushError> {
         let Some(router) = self.router.upgrade() else {
-            return Err(audio12);
+            return Err(StreamPushError::Closed(audio12));
         };
         router
             .try_stream_job(
@@ -372,17 +495,22 @@ impl StreamSession {
                     enqueued: Instant::now(),
                 },
             )
-            .map_err(|j| match j {
-                Job::StreamData { chunk, .. } => chunk,
+            .map_err(|e| match e {
+                StreamLaneError::Full(Job::StreamData { chunk, .. }) => {
+                    StreamPushError::Backpressure(chunk)
+                }
+                StreamLaneError::Disconnected(Job::StreamData { chunk, .. }) => {
+                    StreamPushError::Closed(chunk)
+                }
                 _ => unreachable!("data job came back as a different variant"),
             })
     }
 
     /// Submit an audio chunk, blocking while the pinned queue is full.
-    /// `Err` only when the pool is gone.
-    pub fn push_blocking(&self, audio12: Vec<i64>) -> Result<(), Vec<i64>> {
+    /// `Err` is always [`StreamPushError::Closed`] (the pool is gone).
+    pub fn push_blocking(&self, audio12: Vec<i64>) -> Result<(), StreamPushError> {
         let Some(router) = self.router.upgrade() else {
-            return Err(audio12);
+            return Err(StreamPushError::Closed(audio12));
         };
         router
             .send_stream_job(
@@ -394,7 +522,7 @@ impl StreamSession {
                 },
             )
             .map_err(|j| match j {
-                Job::StreamData { chunk, .. } => chunk,
+                Job::StreamData { chunk, .. } => StreamPushError::Closed(chunk),
                 _ => unreachable!("data job came back as a different variant"),
             })
     }
@@ -443,7 +571,9 @@ impl StreamSession {
         for _ in 0..20 {
             job = match router.try_stream_job(self.stream, job) {
                 Ok(()) => return,
-                Err(j) => j,
+                // the pinned worker is gone: nothing left to close
+                Err(StreamLaneError::Disconnected(_)) => return,
+                Err(StreamLaneError::Full(j)) => j,
             };
             std::thread::sleep(Duration::from_millis(1));
         }
@@ -459,21 +589,40 @@ impl Drop for StreamSession {
 }
 
 /// The coordinator: worker pool + router state + telemetry shards.
+///
+/// Construct with [`Coordinator::builder`]; submit through
+/// [`submit`](Self::submit) / [`submit_batch`](Self::submit_batch) (which
+/// use an internal default [`Client`]) or through per-producer
+/// [`client`](Self::client) handles, and claim responses via the returned
+/// [`Ticket`]s.
 pub struct Coordinator {
     /// `Some` until drop; taken first so lane senders close before joining
     router: Option<Arc<Router>>,
     handles: Vec<JoinHandle<()>>,
-    /// kept alive so the response channel survives worker churn
-    #[allow(dead_code)]
-    resp_tx: SyncSender<Response>,
-    pub resp_rx: Receiver<Response>,
+    /// backs [`Coordinator::submit`] and the deprecated
+    /// [`Coordinator::collect`] shim (its mailbox retains unclaimed
+    /// responses, which is what `collect` drains)
+    default_client: Client,
 }
 
 impl Coordinator {
-    /// Spawn `n_workers` chip twins, each with its own weight copy.
-    pub fn new(params: QuantParams, config: ChipConfig, n_workers: usize, queue_depth: usize) -> Self {
-        assert!(n_workers > 0);
-        let (resp_tx, resp_rx) = sync_channel::<Response>(n_workers * queue_depth.max(4) * 4);
+    /// Start configuring a serving pool over trained weights and a chip
+    /// configuration. See [`CoordinatorBuilder`] for the knobs and their
+    /// validation; `build()` spawns the workers.
+    pub fn builder(params: QuantParams, config: ChipConfig) -> CoordinatorBuilder {
+        CoordinatorBuilder::new(params, config)
+    }
+
+    /// Spawn `n_workers` chip twins, each with its own weight copy
+    /// (validated entry point: [`CoordinatorBuilder::build`]).
+    pub(crate) fn spawn(
+        params: QuantParams,
+        config: ChipConfig,
+        n_workers: usize,
+        queue_depth: usize,
+        default_stream: StreamConfig,
+        report_epoch: u64,
+    ) -> Self {
         let mut lanes = Vec::with_capacity(n_workers);
         let mut shards = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
@@ -485,13 +634,25 @@ impl Coordinator {
             let handle = {
                 let params = params.clone();
                 let config = config.clone();
-                let resp_tx = resp_tx.clone();
+                let default_stream = default_stream.clone();
                 let stalled = Arc::clone(&stalled);
                 let depth = Arc::clone(&depth);
                 let shard = Arc::clone(&shard);
                 std::thread::Builder::new()
                     .name(format!("chip-worker-{w}"))
-                    .spawn(move || worker_loop(w, params, config, rx, resp_tx, shard, stalled, depth))
+                    .spawn(move || {
+                        worker_loop(
+                            w,
+                            params,
+                            config,
+                            default_stream,
+                            report_epoch,
+                            rx,
+                            shard,
+                            stalled,
+                            depth,
+                        )
+                    })
                     .expect("spawn worker")
             };
             lanes.push(Lane {
@@ -507,42 +668,75 @@ impl Coordinator {
         let router = Arc::new(Router {
             lanes,
             shards,
-            rejected: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rejected_closed: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
+            mailboxes: Mutex::new(Vec::new()),
         });
-        Self { router: Some(router), handles, resp_tx, resp_rx }
+        // the default mailbox retains unclaimed responses: that is the
+        // queue the deprecated collect() shim drains
+        let default_mailbox = Mailbox::new(true);
+        router.mailboxes.lock().unwrap().push(Arc::downgrade(&default_mailbox));
+        let default_client =
+            Client { router: Arc::downgrade(&router), mailbox: default_mailbox };
+        Self { router: Some(router), handles, default_client }
     }
 
     fn router(&self) -> &Router {
         self.router.as_ref().expect("router alive until drop")
     }
 
-    /// Submit a request. Routing: the stream's pinned worker unless its
-    /// queue is full, then least-loaded healthy spill; `Err` when every
-    /// queue is saturated (global backpressure — caller must retry/shed).
-    pub fn submit(&self, req: Request) -> Result<u64, Request> {
-        self.router().submit(req)
+    /// Submit a request through the coordinator's default client.
+    /// Routing: the stream's pinned worker unless its queue is full, then
+    /// least-loaded healthy spill; [`SubmitError::QueueFull`] when every
+    /// queue is saturated (global backpressure — retry/shed). The
+    /// returned [`Ticket`] claims exactly this request's [`Response`].
+    pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
+        self.default_client.submit(req)
     }
 
-    /// A cloneable submission handle for concurrent producers.
+    /// [`Client::submit_batch`] on the coordinator's default client:
+    /// submit a whole workload (blocking through backpressure), wait on
+    /// the returned [`Batch`].
+    pub fn submit_batch<I>(&self, reqs: I) -> Result<Batch, SubmitError>
+    where
+        I: IntoIterator<Item = Request>,
+    {
+        self.default_client.submit_batch(reqs)
+    }
+
+    /// A cloneable submission handle for concurrent producers, with its
+    /// own completion mailbox (clones share it; separate `client()`
+    /// calls get isolated mailboxes — responses never cross).
     pub fn client(&self) -> Client {
-        Client { router: Arc::downgrade(self.router.as_ref().expect("router alive")) }
+        let router = self.router.as_ref().expect("router alive");
+        let mailbox = Mailbox::new(false);
+        let mut mailboxes = router.mailboxes.lock().unwrap();
+        // prune entries whose client (and all its tickets) are gone, so a
+        // long-lived pool creating short-lived clients stays bounded
+        mailboxes.retain(|mb| mb.strong_count() > 0);
+        mailboxes.push(Arc::downgrade(&mailbox));
+        drop(mailboxes);
+        Client { router: Arc::downgrade(router), mailbox }
     }
 
     /// Open a long-lived streaming session on `stream`'s pinned worker:
     /// an always-on detection pipeline (chip + VAD + wakeword state
     /// machine) whose recurrent state persists until the session closes.
     /// Stream ids may be reused — each call creates an independent
-    /// session (internally keyed by a unique session id).
+    /// session (internally keyed by a unique session id). Sessions
+    /// opened without an explicit config use the pool's default
+    /// [`StreamConfig`] (a [`CoordinatorBuilder::default_stream`] knob).
     ///
     /// Delivery of the open is a control message on the pinned lane: if
     /// that worker's queue is momentarily full, this call blocks until
     /// space frees (it does not fail on transient backpressure). If the
     /// pinned worker has *died* (its lane is disconnected), the returned
-    /// session is already dead: pushes hand the chunk back and the event
-    /// channel is empty — the same recoverable contract as
-    /// [`Client::submit`] after shutdown, instead of a panic.
+    /// session is already dead: pushes hand the chunk back inside
+    /// [`StreamPushError::Closed`] and the event channel is empty — the
+    /// same recoverable contract as [`Client::submit`] after shutdown,
+    /// instead of a panic.
     pub fn open_stream(&self, stream: u64) -> StreamSession {
         self.open_stream_inner(stream, None)
     }
@@ -550,8 +744,19 @@ impl Coordinator {
     /// [`open_stream`](Self::open_stream) with per-session VAD/detector
     /// tuning (e.g. [`crate::stream::vad::VadConfig::disabled`] for an
     /// energy A/B stream, or per-microphone detector thresholds).
-    pub fn open_stream_with(&self, stream: u64, config: StreamConfig) -> StreamSession {
-        self.open_stream_inner(stream, Some(config))
+    ///
+    /// The session config's chip settings are validated
+    /// ([`ChipConfig::validate`]) before any worker state is created —
+    /// [`Error::InvalidConfig`](crate::error::Error::InvalidConfig)
+    /// instead of a session that silently computes nothing, the same
+    /// contract [`CoordinatorBuilder`] applies to the pool default.
+    pub fn open_stream_with(
+        &self,
+        stream: u64,
+        config: StreamConfig,
+    ) -> Result<StreamSession, crate::error::Error> {
+        config.chip.validate()?;
+        Ok(self.open_stream_inner(stream, Some(config)))
     }
 
     fn open_stream_inner(&self, stream: u64, config: Option<StreamConfig>) -> StreamSession {
@@ -581,21 +786,22 @@ impl Coordinator {
         }
     }
 
-    /// Block until `n` responses have been collected (helper for batch runs).
+    /// Block until `n` responses have been collected from the default
+    /// mailbox's *unclaimed* queue — i.e. responses to
+    /// [`Coordinator::submit`] calls whose [`Ticket`] was dropped.
+    ///
+    /// v1 compatibility shim only: it cannot see responses claimed (or
+    /// claimable) by live tickets or by per-producer [`Client`]
+    /// mailboxes, and the unclaimed queue keeps only the most recent
+    /// [`ticket::UNCLAIMED_CAP`] responses (oldest dropped) if nobody
+    /// collects. New code waits on tickets ([`Ticket::wait_timeout`],
+    /// [`Batch::wait_all`]).
+    #[deprecated(
+        note = "wait on the Ticket returned by submit (or Batch::wait_all); \
+                collect only drains default-mailbox responses whose tickets were dropped"
+    )]
     pub fn collect(&self, n: usize, timeout: Duration) -> Vec<Response> {
-        let deadline = Instant::now() + timeout;
-        let mut out = Vec::with_capacity(n);
-        while out.len() < n {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                break;
-            }
-            match self.resp_rx.recv_timeout(remaining) {
-                Ok(r) => out.push(r),
-                Err(_) => break,
-            }
-        }
-        out
+        self.default_client.mailbox.collect_unclaimed(n, timeout)
     }
 
     /// Aggregate statistics snapshot: folds the per-worker telemetry
@@ -627,7 +833,8 @@ impl Coordinator {
             });
         }
         s.spilled = spilled;
-        s.rejected = router.rejected.load(Ordering::Relaxed);
+        s.rejected_full = router.rejected_full.load(Ordering::Relaxed);
+        s.rejected_closed = router.rejected_closed.load(Ordering::Relaxed);
         s
     }
 
@@ -678,10 +885,22 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         // close request queues (clients only hold weak refs); workers drain
-        // their queues and exit, then join
-        self.router.take();
+        // their queues and exit, then join. The mailbox registry is taken
+        // out first: after the joins no further delivery can happen, so
+        // closing the mailboxes then wakes every blocked ticket wait with
+        // a definitive `Closed` (already-delivered responses stay
+        // claimable).
+        let mailboxes = match self.router.take() {
+            Some(router) => std::mem::take(&mut *router.mailboxes.lock().unwrap()),
+            None => Vec::new(),
+        };
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        for mb in mailboxes {
+            if let Some(mb) = mb.upgrade() {
+                mb.close();
+            }
         }
     }
 }
@@ -720,8 +939,9 @@ fn worker_loop(
     index: usize,
     params: QuantParams,
     config: ChipConfig,
+    default_stream: StreamConfig,
+    report_epoch: u64,
     rx: Receiver<Job>,
-    resp_tx: SyncSender<Response>,
     shard: Arc<WorkerShard>,
     stalled: Arc<AtomicBool>,
     depth: Arc<AtomicU64>,
@@ -733,6 +953,8 @@ fn worker_loop(
     // meaningful and nothing is double-counted
     let mut flushed = ChipActivity::default();
     let mut jobs_since_report = 0u64;
+    // per-worker completion sequence (Response::worker_seq)
+    let mut worker_seq = 0u64;
     'outer: loop {
         let job = match rx.try_recv() {
             Ok(j) => j,
@@ -753,7 +975,7 @@ fn worker_loop(
         }
         depth.fetch_sub(1, Ordering::Relaxed);
         match job {
-            Job::Utterance(req, enqueued) => {
+            Job::Utterance { req, enqueued, reply } => {
                 let decision = chip.process_utterance(&req.audio12);
                 let lat_ms = decision.frame_cycles.iter().sum::<u64>() as f64
                     / decision.frame_cycles.len().max(1) as f64
@@ -768,7 +990,9 @@ fn worker_loop(
                     chip_latency_ms: lat_ms,
                     service: enqueued.elapsed(),
                     worker: index,
+                    worker_seq,
                 };
+                worker_seq += 1;
                 // hot path: relaxed adds on this worker's own shard — no
                 // lock, no allocation, no report rollup
                 shard.completed.fetch_add(1, Ordering::Relaxed);
@@ -782,13 +1006,15 @@ fn worker_loop(
                 let act = chip.activity();
                 shard.activity.add(&act.delta_since(&flushed));
                 flushed = act;
-                if resp_tx.send(resp).is_err() {
-                    break;
+                // completion routing: deliver to the submitting client's
+                // mailbox, keyed by request id. A vanished client (all
+                // tickets and handles dropped) just discards the response.
+                if let Some(mailbox) = reply.upgrade() {
+                    mailbox.deliver(resp);
                 }
             }
             Job::StreamOpen { session, config: stream_cfg, events, alive } => {
-                let cfg =
-                    stream_cfg.unwrap_or_else(|| StreamConfig::for_chip(config.clone()));
+                let cfg = stream_cfg.unwrap_or_else(|| default_stream.clone());
                 let pipeline = StreamPipeline::new(params.clone(), cfg);
                 // session ids are unique; a collision would be a router bug,
                 // but never leak the old session's telemetry silently
@@ -823,9 +1049,9 @@ fn worker_loop(
             }
         }
         // bound report staleness under sustained load (a lane that never
-        // drains still publishes every REPORT_EPOCH jobs)
+        // drains still publishes every `report_epoch` jobs)
         jobs_since_report += 1;
-        if jobs_since_report >= REPORT_EPOCH {
+        if jobs_since_report >= report_epoch {
             publish_report(&shard, &chip);
             jobs_since_report = 0;
         }
@@ -857,6 +1083,7 @@ fn worker_loop(
 mod tests {
     use super::*;
 
+    use crate::error::{StreamPushError, WaitError};
     use crate::util::prng::Pcg;
 
     fn rng_quant(seed: u64) -> QuantParams {
@@ -868,11 +1095,34 @@ mod tests {
         q
     }
 
+    /// Test pool via the v2 builder.
+    fn pool(seed: u64, workers: usize, queue_depth: usize) -> Coordinator {
+        Coordinator::builder(rng_quant(seed), ChipConfig::design_point())
+            .workers(workers)
+            .queue_depth(queue_depth)
+            .build()
+            .expect("valid test pool")
+    }
+
     fn request(stream: u64, seed: u64) -> Request {
         let mut rng = Pcg::new(seed);
         let label = (seed % 12) as usize;
         let audio = crate::audio::synth_utterance(label, &mut rng);
         Request { id: 0, stream, audio12: crate::audio::quantize_12b(&audio), label: Some(label) }
+    }
+
+    /// Wait a set of tickets (bounded), asserting each resolves to its
+    /// own request id.
+    fn wait_all(tickets: Vec<Ticket>) -> Vec<Response> {
+        tickets
+            .into_iter()
+            .map(|t| {
+                let id = t.id();
+                let r = t.wait_timeout(Duration::from_secs(60)).expect("response");
+                assert_eq!(r.id, id, "ticket resolved to a foreign response");
+                r
+            })
+            .collect()
     }
 
     #[test]
@@ -918,13 +1168,13 @@ mod tests {
 
     #[test]
     fn serves_requests_and_aggregates() {
-        let coord =
-            Coordinator::new(rng_quant(1), ChipConfig::design_point(), 2, 8);
+        let coord = pool(1, 2, 8);
         let n = 6;
+        let mut tickets = Vec::new();
         for i in 0..n {
-            coord.submit(request(i as u64, i as u64)).expect("submit");
+            tickets.push(coord.submit(request(i as u64, i as u64)).expect("submit"));
         }
-        let responses = coord.collect(n, Duration::from_secs(60));
+        let responses = wait_all(tickets);
         assert_eq!(responses.len(), n);
         let stats = coord.stats();
         assert_eq!(stats.completed, n as u64);
@@ -939,12 +1189,27 @@ mod tests {
     }
 
     #[test]
+    fn submit_batch_resolves_every_ticket() {
+        let coord = pool(15, 2, 4);
+        let reqs: Vec<Request> = (0..10).map(|i| request(i % 3, 70 + i)).collect();
+        let batch = coord.submit_batch(reqs).expect("pool alive");
+        assert_eq!(batch.len(), 10);
+        assert!(!batch.is_empty());
+        let ids = batch.ids();
+        let responses = batch.wait_all(Duration::from_secs(60));
+        assert_eq!(responses.len(), 10, "batch lost responses");
+        let got: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(got, ids, "wait_all must preserve submission order");
+    }
+
+    #[test]
     fn stream_pinning_is_stable() {
-        let coord = Coordinator::new(rng_quant(2), ChipConfig::design_point(), 3, 8);
+        let coord = pool(2, 3, 8);
+        let mut tickets = Vec::new();
         for _ in 0..4 {
-            coord.submit(request(7, 1)).unwrap();
+            tickets.push(coord.submit(request(7, 1)).unwrap());
         }
-        let responses = coord.collect(4, Duration::from_secs(60));
+        let responses = wait_all(tickets);
         let workers: std::collections::HashSet<usize> =
             responses.iter().map(|r| r.worker).collect();
         assert_eq!(workers.len(), 1, "stream 7 must stay on its pinned worker");
@@ -952,44 +1217,58 @@ mod tests {
 
     #[test]
     fn spills_around_stalled_worker() {
-        let coord = Coordinator::new(rng_quant(3), ChipConfig::design_point(), 2, 1);
+        let coord = pool(3, 2, 1);
         // stall worker 0 (stream 0 pins there), saturate its queue of 1,
         // further submissions must spill to worker 1 and still complete
         coord.set_stalled(0, true);
-        let mut accepted = 0;
+        let mut tickets = Vec::new();
         for i in 0..4 {
-            if coord.submit(request(0, 10 + i)).is_ok() {
-                accepted += 1;
+            if let Ok(t) = coord.submit(request(0, 10 + i)) {
+                tickets.push(t);
             }
         }
-        assert!(accepted >= 2, "spill path dead: {accepted}");
+        assert!(tickets.len() >= 2, "spill path dead: {}", tickets.len());
         coord.set_stalled(0, false);
-        let responses = coord.collect(accepted, Duration::from_secs(60));
+        let accepted = tickets.len();
+        let responses = wait_all(tickets);
         assert_eq!(responses.len(), accepted);
     }
 
     #[test]
-    fn backpressure_rejects_when_saturated() {
-        let coord = Coordinator::new(rng_quant(4), ChipConfig::design_point(), 1, 1);
+    fn backpressure_rejects_with_queue_full_and_request_intact() {
+        let coord = pool(4, 1, 1);
         coord.set_stalled(0, true);
         let mut rejected = 0;
+        let mut tickets = Vec::new();
         for i in 0..6 {
-            if coord.submit(request(i, i)).is_err() {
-                rejected += 1;
+            let req = request(i, i);
+            let audio_len = req.audio12.len();
+            match coord.submit(req) {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    // typed cause + payload handed back intact
+                    assert!(e.is_queue_full(), "saturation must be QueueFull: {e}");
+                    assert_eq!(e.request().audio12.len(), audio_len);
+                    assert_eq!(e.into_request().stream, i);
+                    rejected += 1;
+                }
             }
         }
         assert!(rejected >= 3, "backpressure missing: only {rejected} rejected");
-        assert!(coord.stats().rejected >= 3);
+        let s = coord.stats();
+        assert!(s.rejected_full >= 3);
+        assert_eq!(s.rejected_closed, 0, "a stalled-but-alive pool is not Closed");
         coord.set_stalled(0, false);
     }
 
     #[test]
     fn accuracy_accounting() {
-        let coord = Coordinator::new(rng_quant(5), ChipConfig::design_point(), 2, 8);
+        let coord = pool(5, 2, 8);
+        let mut tickets = Vec::new();
         for i in 0..4 {
-            coord.submit(request(i, i)).unwrap();
+            tickets.push(coord.submit(request(i, i)).unwrap());
         }
-        coord.collect(4, Duration::from_secs(60));
+        wait_all(tickets);
         let s = coord.stats();
         assert_eq!(s.labelled, 4);
         assert!(s.accuracy() >= 0.0 && s.accuracy() <= 1.0);
@@ -999,14 +1278,15 @@ mod tests {
 
     #[test]
     fn stats_memory_is_independent_of_request_count() {
-        let coord = Coordinator::new(rng_quant(13), ChipConfig::design_point(), 2, 8);
-        coord.submit(request(0, 1)).unwrap();
-        coord.collect(1, Duration::from_secs(60));
+        let coord = pool(13, 2, 8);
+        let t = coord.submit(request(0, 1)).unwrap();
+        t.wait_timeout(Duration::from_secs(60)).expect("response");
         let before = coord.stats().telemetry_bytes();
+        let mut tickets = Vec::new();
         for i in 0..12 {
-            coord.submit(request(i % 3, 60 + i)).unwrap();
+            tickets.push(coord.submit(request(i % 3, 60 + i)).unwrap());
         }
-        coord.collect(12, Duration::from_secs(60));
+        wait_all(tickets);
         let after = coord.stats();
         assert_eq!(after.completed, 13);
         assert_eq!(after.telemetry_bytes(), before, "telemetry grew with requests");
@@ -1014,13 +1294,14 @@ mod tests {
 
     #[test]
     fn reports_are_pull_based_and_fresh() {
-        let coord = Coordinator::new(rng_quant(14), ChipConfig::design_point(), 2, 8);
+        let coord = pool(14, 2, 8);
         // an idle pool has no reports (no chip has processed anything)
         assert!(coord.reports().is_empty(), "idle workers must not report");
+        let mut tickets = Vec::new();
         for i in 0..4 {
-            coord.submit(request(i, i)).unwrap();
+            tickets.push(coord.submit(request(i, i)).unwrap());
         }
-        coord.collect(4, Duration::from_secs(60));
+        wait_all(tickets);
         let reports = coord.reports();
         assert!(!reports.is_empty(), "pull returned nothing after work");
         let frames: u64 = reports.values().map(|r| r.frames).sum();
@@ -1033,16 +1314,17 @@ mod tests {
 
     #[test]
     fn per_worker_counters_track_spill_and_rejection() {
-        let coord = Coordinator::new(rng_quant(7), ChipConfig::design_point(), 2, 1);
+        let coord = pool(7, 2, 1);
         coord.set_stalled(0, true);
-        let mut accepted = 0;
+        let mut tickets = Vec::new();
         for i in 0..6 {
-            if coord.submit(request(0, 40 + i)).is_ok() {
-                accepted += 1;
+            if let Ok(t) = coord.submit(request(0, 40 + i)) {
+                tickets.push(t);
             }
         }
         coord.set_stalled(0, false);
-        let responses = coord.collect(accepted, Duration::from_secs(60));
+        let accepted = tickets.len();
+        let responses = wait_all(tickets);
         assert_eq!(responses.len(), accepted);
         let s = coord.stats();
         assert_eq!(s.per_worker.len(), 2);
@@ -1054,8 +1336,49 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_collect_shim_drains_dropped_ticket_responses() {
+        // the v1 pattern: submit through the coordinator, ignore the
+        // return value, drain with collect — still works through the
+        // default mailbox's unclaimed queue
+        let coord = pool(16, 2, 8);
+        for i in 0..3 {
+            let _ = coord.submit(request(i, i)).expect("submit");
+        }
+        let responses = coord.collect(3, Duration::from_secs(60));
+        assert_eq!(responses.len(), 3, "shim lost responses");
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 3);
+        // but it cannot steal a live ticket's response
+        let t = coord.submit(request(0, 9)).expect("submit");
+        let id = t.id();
+        assert!(coord.collect(1, Duration::from_secs(1)).is_empty());
+        assert_eq!(t.wait_timeout(Duration::from_secs(60)).expect("response").id, id);
+    }
+
+    #[test]
+    fn try_take_polls_without_blocking() {
+        let coord = pool(17, 1, 4);
+        let mut ticket = coord.submit(request(0, 3)).expect("submit");
+        // poll until delivered: every miss hands the ticket back
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let resp = loop {
+            ticket = match ticket.try_take() {
+                Ok(r) => break r,
+                Err(WaitError::Timeout(t)) => t,
+                Err(WaitError::Closed) => panic!("pool closed mid-test"),
+            };
+            assert!(Instant::now() < deadline, "response never delivered");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert!(resp.class < crate::NUM_CLASSES);
+    }
+
+    #[test]
     fn stream_session_lifecycle_and_telemetry() {
-        let coord = Coordinator::new(rng_quant(8), ChipConfig::design_point(), 2, 8);
+        let coord = pool(8, 2, 8);
         let sess = coord.open_stream(3);
         let cfg = crate::audio::track::TrackConfig {
             duration_s: 4,
@@ -1087,13 +1410,14 @@ mod tests {
 
     #[test]
     fn sessions_and_requests_share_the_pool() {
-        let coord = Coordinator::new(rng_quant(9), ChipConfig::design_point(), 2, 8);
+        let coord = pool(9, 2, 8);
         let sess = coord.open_stream(0);
+        let mut tickets = Vec::new();
         for i in 0..4 {
-            coord.submit(request(i, i)).unwrap();
+            tickets.push(coord.submit(request(i, i)).unwrap());
         }
         sess.push_blocking(vec![0i64; 1280]).unwrap();
-        let responses = coord.collect(4, Duration::from_secs(60));
+        let responses = wait_all(tickets);
         assert_eq!(responses.len(), 4);
         let events = sess.close();
         assert!(
@@ -1104,12 +1428,19 @@ mod tests {
 
     #[test]
     fn open_stream_with_applies_custom_vad_config() {
-        let coord = Coordinator::new(rng_quant(12), ChipConfig::design_point(), 2, 8);
-        let sess = coord.open_stream_with(
-            4,
-            StreamConfig::for_chip(ChipConfig::design_point())
-                .with_vad(crate::stream::vad::VadConfig::disabled()),
-        );
+        let coord = pool(12, 2, 8);
+        let sess = coord
+            .open_stream_with(
+                4,
+                StreamConfig::for_chip(ChipConfig::design_point())
+                    .with_vad(crate::stream::vad::VadConfig::disabled()),
+            )
+            .expect("valid session config");
+        // an invalid per-session chip config is rejected up front — the
+        // same contract the builder applies to the pool default
+        let mut bad = StreamConfig::for_chip(ChipConfig::design_point());
+        bad.chip.accel.delta_th_q8 = -1;
+        assert!(coord.open_stream_with(5, bad).is_err());
         // pure silence: the default VAD would gate every frame, a disabled
         // one must clock the ΔRNN on all 10
         sess.push_blocking(vec![0i64; 1280]).unwrap();
@@ -1122,8 +1453,52 @@ mod tests {
     }
 
     #[test]
+    fn builder_default_stream_applies_to_plain_open_stream() {
+        // a pool whose *default* session config disables the VAD: a
+        // session opened without per-session tuning inherits it
+        let coord = Coordinator::builder(rng_quant(18), ChipConfig::design_point())
+            .workers(2)
+            .queue_depth(8)
+            .default_stream(
+                StreamConfig::for_chip(ChipConfig::design_point())
+                    .with_vad(crate::stream::vad::VadConfig::disabled()),
+            )
+            .build()
+            .expect("valid pool");
+        let sess = coord.open_stream(2);
+        sess.push_blocking(vec![0i64; 1280]).unwrap();
+        let events = sess.close();
+        let closed = events.iter().find_map(|e| match e {
+            StreamEvent::Closed { frames, gated_frames } => Some((*frames, *gated_frames)),
+            _ => None,
+        });
+        assert_eq!(closed, Some((10, 0)), "pool default stream config ignored");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_pool_shapes() {
+        let q = rng_quant(19);
+        let cfg = ChipConfig::design_point();
+        assert!(Coordinator::builder(q.clone(), cfg.clone()).workers(0).build().is_err());
+        assert!(Coordinator::builder(q.clone(), cfg.clone())
+            .queue_depth(0)
+            .build()
+            .is_err());
+        assert!(Coordinator::builder(q.clone(), cfg.clone())
+            .report_epoch(0)
+            .build()
+            .is_err());
+        let err = Coordinator::builder(q, cfg)
+            .workers(builder::MAX_WORKERS + 1)
+            .build()
+            .err()
+            .expect("oversized pool must be rejected");
+        assert!(matches!(err, crate::Error::InvalidConfig { field: "workers", .. }));
+    }
+
+    #[test]
     fn duplicate_stream_ids_are_independent_sessions() {
-        let coord = Coordinator::new(rng_quant(11), ChipConfig::design_point(), 2, 8);
+        let coord = pool(11, 2, 8);
         let a = coord.open_stream(5);
         let b = coord.open_stream(5);
         a.push_blocking(vec![0i64; 256]).unwrap();
@@ -1144,13 +1519,16 @@ mod tests {
 
     #[test]
     fn session_outlives_coordinator_safely() {
-        let coord = Coordinator::new(rng_quant(10), ChipConfig::design_point(), 1, 4);
+        let coord = pool(10, 1, 4);
         let sess = coord.open_stream(1);
         sess.push_blocking(vec![0i64; 256]).unwrap();
         drop(coord);
-        // pool gone: pushes fail cleanly and hand the chunk back
+        // pool gone: pushes fail cleanly, typed Closed, chunk handed back
         let chunk = vec![1i64; 128];
-        assert_eq!(sess.push(chunk.clone()), Err(chunk));
+        match sess.push(chunk.clone()) {
+            Err(StreamPushError::Closed(c)) => assert_eq!(c, chunk),
+            other => panic!("expected Closed with the chunk back, got {other:?}"),
+        }
         // the worker flushed a Closed marker during shutdown
         let events: Vec<StreamEvent> = sess.events.try_iter().collect();
         assert!(events.iter().any(|e| matches!(e, StreamEvent::Closed { .. })));
@@ -1158,16 +1536,30 @@ mod tests {
 
     #[test]
     fn client_submits_and_outlives_coordinator_safely() {
-        let coord = Coordinator::new(rng_quant(6), ChipConfig::design_point(), 2, 8);
+        let coord = pool(6, 2, 8);
         let client = coord.client();
-        client.submit(request(1, 1)).expect("client submit");
-        let responses = coord.collect(1, Duration::from_secs(60));
-        assert_eq!(responses.len(), 1);
+        let t = client.submit(request(1, 1)).expect("client submit");
+        let resp = t.wait_timeout(Duration::from_secs(60)).expect("response");
+        assert_eq!(resp.stream, 1);
         assert!(!client.is_closed());
+        // a ticket still in flight when the pool dies resolves Closed …
+        let pending = client.submit(request(1, 3)).expect("client submit");
         drop(coord);
-        // the weak handle fails cleanly after the pool is gone, and the
-        // closure is observable so retry loops can stop
         assert!(client.is_closed());
-        assert!(client.submit(request(1, 2)).is_err());
+        // … or claims its response if the shutdown drain completed it
+        match pending.wait_timeout(Duration::from_secs(60)) {
+            Ok(r) => assert_eq!(r.stream, 1),
+            Err(WaitError::Closed) => {}
+            Err(WaitError::Timeout(_)) => panic!("post-shutdown wait must not hang"),
+        }
+        // the weak handle fails cleanly after the pool is gone, with the
+        // typed cause and the request handed back
+        match client.submit(request(1, 2)) {
+            Err(e) => {
+                assert!(e.is_closed());
+                assert_eq!(e.into_request().stream, 1);
+            }
+            Ok(_) => panic!("submit into a dropped pool must fail"),
+        }
     }
 }

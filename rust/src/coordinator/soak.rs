@@ -26,14 +26,16 @@
 //! Entry points: [`run_soak`] (library), `examples/soak.rs` (CLI),
 //! `benches/soak_bench.rs` (smoke-sized A/B in the bench matrix).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::{percentile, Coordinator, Request, Stats};
+use super::{percentile, Coordinator, Request, Stats, Ticket};
 use crate::accel::gru::QuantParams;
 use crate::audio::track::{synth_track, TrackConfig};
 use crate::chip::ChipConfig;
+use crate::error::{SubmitError, WaitError};
 use crate::util::prng::Pcg;
 
 /// Soak-run shape. `acceptance()` is the ISSUE-3 acceptance workload;
@@ -145,12 +147,29 @@ fn legacy_telemetry_tax(sink: &Mutex<Vec<u64>>, i: u64) {
     std::hint::black_box(acc);
 }
 
+/// Claim one soak ticket (bounded), publishing the completion for the
+/// legacy-telemetry emulation and returning the exact service time.
+fn resolve(ticket: Ticket, completed_pub: &AtomicU64) -> u64 {
+    match ticket.wait_timeout(Duration::from_secs(1800)) {
+        Ok(resp) => {
+            completed_pub.fetch_add(1, Ordering::Release);
+            resp.service.as_micros() as u64
+        }
+        Err(WaitError::Timeout(_)) => panic!("soak lost responses: pool wedged or timed out"),
+        Err(WaitError::Closed) => panic!("pool died mid-soak"),
+    }
+}
+
 /// Run a soak: spawn the pool, drive the mixed load, fold the report.
 /// Panics (harness contract) if responses are lost, the run times out, or
 /// the telemetry snapshot footprint grows with the request count.
 pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> SoakReport {
     assert!(cfg.workers > 0 && cfg.producers > 0 && cfg.utterances > 0);
-    let coord = Coordinator::new(params, chip, cfg.workers, cfg.queue_depth);
+    let coord = Coordinator::builder(params, chip)
+        .workers(cfg.workers)
+        .queue_depth(cfg.queue_depth)
+        .build()
+        .expect("valid soak pool configuration");
 
     // pre-rendered utterance pool (audio synthesis off the timed path)
     let pool: Vec<(Vec<i64>, usize)> = (0..16u64)
@@ -178,8 +197,9 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
     let mut exact_us: Vec<u64> = Vec::with_capacity(cfg.utterances as usize);
     let mut telemetry_bytes_early = 0usize;
     let checkpoint = (cfg.utterances / 10).max(1);
-    // stamped by the consumer at the last decision (stream teardown after
-    // the final utterance must not dilute the throughput figure)
+    // stamped once the producers have claimed their last ticket (stream
+    // teardown after the final utterance must not dilute the throughput
+    // figure)
     let mut wall = Duration::ZERO;
 
     let t0 = Instant::now();
@@ -202,16 +222,25 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
                 sess.close();
             });
         }
-        // utterance producers
+        // utterance producers: each owns a Client (its own completion
+        // mailbox) and a sliding window of in-flight tickets — responses
+        // are claimed ticket-by-ticket, never through a shared FIFO, so
+        // the exact-sample cross-check below also exercises the v2
+        // multi-client isolation contract at soak scale
+        let window_cap = (cfg.workers * cfg.queue_depth).max(8);
+        let mut producer_handles = Vec::with_capacity(cfg.producers);
         for p in 0..cfg.producers {
             let client = coord.client();
             let pool = &pool;
             let retries = &retries;
+            let completed_pub = &completed_pub;
             let share = cfg.utterances / cfg.producers as u64
                 + u64::from((p as u64) < cfg.utterances % cfg.producers as u64);
             let streams_span = (cfg.workers * 2) as u64;
             let p = p as u64;
-            s.spawn(move || {
+            producer_handles.push(s.spawn(move || {
+                let mut window: VecDeque<Ticket> = VecDeque::with_capacity(window_cap);
+                let mut samples: Vec<u64> = Vec::with_capacity(share as usize);
                 for i in 0..share {
                     let (audio12, label) = &pool[((p * 7 + i) % 16) as usize];
                     let mut req = Request {
@@ -222,17 +251,28 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
                     };
                     loop {
                         match client.submit(req) {
-                            Ok(_) => break,
-                            Err(r) => {
-                                assert!(!client.is_closed(), "pool died mid-soak");
+                            Ok(t) => {
+                                window.push_back(t);
+                                break;
+                            }
+                            Err(SubmitError::QueueFull(r)) => {
                                 retries.fetch_add(1, Ordering::Relaxed);
                                 req = r;
                                 std::thread::sleep(Duration::from_micros(200));
                             }
+                            Err(SubmitError::Closed(_)) => panic!("pool died mid-soak"),
                         }
                     }
+                    if window.len() >= window_cap {
+                        let t = window.pop_front().expect("non-empty window");
+                        samples.push(resolve(t, completed_pub));
+                    }
                 }
-            });
+                for t in window {
+                    samples.push(resolve(t, completed_pub));
+                }
+                samples
+            }));
         }
         // pre-refactor telemetry-cost emulation (A/B baseline)
         if cfg.emulate_legacy_telemetry {
@@ -261,24 +301,34 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
                 });
             }
         }
-        // consumer: drain responses, record the exact-sample cross-check
-        let deadline = Instant::now() + Duration::from_secs(1800);
-        while (exact_us.len() as u64) < cfg.utterances {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            assert!(!remaining.is_zero(), "soak timed out draining responses");
-            let resp = coord
-                .resp_rx
-                .recv_timeout(remaining)
-                .expect("soak lost responses: pool wedged or timed out");
-            exact_us.push(resp.service.as_micros() as u64);
-            completed_pub.fetch_add(1, Ordering::Release);
-            if exact_us.len() as u64 == checkpoint {
-                telemetry_bytes_early = coord.stats().telemetry_bytes();
+        // telemetry checkpoint at ~10% of the run: the snapshot footprint
+        // must already be at its final (flat) size
+        let poll_deadline = Instant::now() + Duration::from_secs(1800);
+        loop {
+            let snap = coord.stats();
+            if snap.completed >= checkpoint {
+                telemetry_bytes_early = snap.telemetry_bytes();
+                break;
             }
+            assert!(
+                Instant::now() < poll_deadline,
+                "soak stalled before the 10% checkpoint"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // join the producers (each has claimed all of its own tickets);
+        // the wall stamp excludes stream-session teardown, as before
+        for h in producer_handles {
+            exact_us.extend(h.join().expect("soak producer panicked"));
         }
         wall = t0.elapsed();
         done.store(true, Ordering::Release);
     });
+    assert_eq!(
+        exact_us.len() as u64,
+        cfg.utterances,
+        "producers claimed a different number of responses than submitted"
+    );
 
     let final_stats = coord.stats();
     assert_eq!(final_stats.completed, cfg.utterances, "completion counter drifted");

@@ -27,9 +27,11 @@ use crate::chip::ChipReport;
 use crate::energy::ChipActivity;
 use crate::util::hist::AtomicLogHistogram;
 
-/// Jobs between periodic report publications under sustained load (the
-/// idle-lane publish keeps reports fresh whenever a worker catches up, so
-/// this only bounds staleness while a lane never drains).
+/// Default jobs between periodic report publications under sustained
+/// load (the idle-lane publish keeps reports fresh whenever a worker
+/// catches up, so this only bounds staleness while a lane never drains).
+/// Tunable per pool via
+/// [`CoordinatorBuilder::report_epoch`](super::builder::CoordinatorBuilder::report_epoch).
 pub const REPORT_EPOCH: u64 = 64;
 
 /// Atomic mirror of [`ChipActivity`]: one relaxed counter per field.

@@ -1,0 +1,378 @@
+//! Completion tickets and per-client mailboxes.
+//!
+//! The v1 serving API funnelled every [`Response`] into one global FIFO
+//! that `collect(n, timeout)` drained — two concurrent producers silently
+//! stole each other's responses. v2 replaces that with *routed delivery*:
+//!
+//! * every [`Client`](super::Client) owns a **mailbox** (cloned handles
+//!   share it; fresh handles from [`Coordinator::client`](super::Coordinator::client)
+//!   get their own);
+//! * [`Client::submit`](super::Client::submit) registers the request id
+//!   with the mailbox *before* the job is enqueued and returns a
+//!   [`Ticket`] — the worker completion path delivers the response to
+//!   that mailbox only, keyed by id;
+//! * the ticket's [`wait`](Ticket::wait) / [`wait_timeout`](Ticket::wait_timeout)
+//!   / [`try_take`](Ticket::try_take) claim exactly the response for its
+//!   own id. Responses are never interleaved across clients.
+//!
+//! Memory stays bounded by construction: a mailbox holds at most one
+//! response per *live* ticket (dropping a ticket unregisters its id and
+//! discards any already-delivered response), so a fire-and-forget
+//! producer cannot grow the mailbox. The coordinator's internal default
+//! mailbox additionally retains unclaimed responses to back the
+//! deprecated [`Coordinator::collect`](super::Coordinator::collect)
+//! shim — bounded by [`UNCLAIMED_CAP`], oldest dropped first, so even
+//! fire-and-forget use of `Coordinator::submit` with nobody collecting
+//! cannot grow without bound.
+
+#![deny(missing_docs)]
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::Response;
+use crate::error::WaitError;
+
+/// Upper bound on responses the default mailbox retains for the
+/// deprecated `collect` shim. v1 bounded the response channel (workers
+/// blocked when the consumer lagged); the shim must not block workers,
+/// so it bounds by *dropping the oldest* unclaimed response instead —
+/// a deprecated path keeps v1 semantics up to this depth, never an OOM.
+pub const UNCLAIMED_CAP: usize = 4096;
+
+/// Per-client completion mailbox: the delivery target the worker
+/// completion path routes responses into, keyed by request id.
+///
+/// Single mutex + condvar; the lock is taken once per delivery and once
+/// per claim — never on the worker's per-frame hot path, and never
+/// shared across clients.
+#[derive(Debug, Default)]
+pub(crate) struct Mailbox {
+    state: Mutex<MailboxState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct MailboxState {
+    /// ids with a live ticket that has not been resolved yet
+    expected: HashSet<u64>,
+    /// delivered responses awaiting their ticket, keyed by request id
+    ready: HashMap<u64, Response>,
+    /// responses whose ticket was dropped, retained FIFO for the
+    /// deprecated `collect` shim (default mailbox only — empty otherwise)
+    unclaimed: VecDeque<Response>,
+    /// retain unclaimed responses instead of discarding them
+    retain_unclaimed: bool,
+    /// set once the worker pool has shut down (no further deliveries)
+    closed: bool,
+}
+
+impl Mailbox {
+    /// New mailbox. `retain_unclaimed` is only set for the coordinator's
+    /// default mailbox (the deprecated `collect` path); client mailboxes
+    /// discard responses whose ticket is gone, keeping memory bounded by
+    /// the number of live tickets.
+    pub(crate) fn new(retain_unclaimed: bool) -> Arc<Self> {
+        let mb = Mailbox::default();
+        mb.state.lock().unwrap().retain_unclaimed = retain_unclaimed;
+        Arc::new(mb)
+    }
+
+    /// Declare `id` in flight. Must happen *before* the job is enqueued,
+    /// or a fast worker could deliver to an unregistered id.
+    pub(crate) fn register(&self, id: u64) {
+        self.state.lock().unwrap().expected.insert(id);
+    }
+
+    /// Withdraw `id` (failed submit, or its ticket was dropped). An
+    /// already-delivered response is discarded — or moved to the
+    /// unclaimed FIFO on the default mailbox, which is exactly how the
+    /// old `submit-then-collect` pattern keeps working through the shim.
+    pub(crate) fn unregister(&self, id: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.expected.remove(&id);
+        let retained = match s.ready.remove(&id) {
+            Some(resp) if s.retain_unclaimed => {
+                push_unclaimed(&mut s, resp);
+                true
+            }
+            _ => false,
+        };
+        drop(s);
+        if retained {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Worker completion path: deliver a response to this mailbox,
+    /// routed by `resp.id`.
+    pub(crate) fn deliver(&self, resp: Response) {
+        let mut s = self.state.lock().unwrap();
+        if s.expected.remove(&resp.id) {
+            s.ready.insert(resp.id, resp);
+        } else if s.retain_unclaimed {
+            push_unclaimed(&mut s, resp);
+        } else {
+            // no live ticket and no legacy retention: drop the response
+            return;
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Pool shutdown: wake every waiter with the closed flag. Responses
+    /// already delivered stay claimable.
+    pub(crate) fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Drain up to `n` unclaimed responses, waiting at most `timeout`
+    /// (the deprecated `collect` shim; default mailbox only).
+    pub(crate) fn collect_unclaimed(&self, n: usize, timeout: Duration) -> Vec<Response> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        let mut s = self.state.lock().unwrap();
+        loop {
+            while out.len() < n {
+                match s.unclaimed.pop_front() {
+                    Some(r) => out.push(r),
+                    None => break,
+                }
+            }
+            if out.len() >= n || s.closed {
+                return out;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return out;
+            }
+            s = self.cv.wait_timeout(s, remaining).unwrap().0;
+        }
+    }
+}
+
+/// Retain an unclaimed response (default mailbox only), dropping the
+/// oldest once [`UNCLAIMED_CAP`] is reached so the deprecated collect
+/// path can never grow memory without bound.
+fn push_unclaimed(s: &mut MailboxState, resp: Response) {
+    if s.unclaimed.len() >= UNCLAIMED_CAP {
+        s.unclaimed.pop_front();
+    }
+    s.unclaimed.push_back(resp);
+}
+
+/// Handle to one in-flight request: resolves to exactly the [`Response`]
+/// whose id matches, delivered through the submitting client's mailbox —
+/// never another client's (or another ticket's) response.
+///
+/// Claim the response with [`wait`](Self::wait) (blocks until delivery
+/// or pool shutdown), [`wait_timeout`](Self::wait_timeout) (bounded;
+/// hands the ticket back inside [`WaitError::Timeout`] so the wait can
+/// resume), or [`try_take`](Self::try_take) (non-blocking poll).
+///
+/// Dropping a ticket abandons the request's response: the id is
+/// unregistered and the response, if ever delivered, is discarded. The
+/// request itself still executes (and is counted in [`super::Stats`]).
+#[derive(Debug)]
+#[must_use = "dropping a Ticket abandons its response — wait on it or hold it"]
+pub struct Ticket {
+    id: u64,
+    stream: u64,
+    mailbox: Arc<Mailbox>,
+    /// response claimed — Drop must not unregister the id
+    spent: bool,
+}
+
+impl Ticket {
+    pub(crate) fn new(id: u64, stream: u64, mailbox: Arc<Mailbox>) -> Self {
+        Self { id, stream, mailbox, spent: false }
+    }
+
+    /// Request id this ticket resolves (assigned at submission).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Logical stream the request was submitted on.
+    pub fn stream(&self) -> u64 {
+        self.stream
+    }
+
+    /// Block until the response arrives. Returns [`WaitError::Closed`]
+    /// if the pool shuts down first; never times out — prefer
+    /// [`wait_timeout`](Self::wait_timeout) when the pool may stall.
+    pub fn wait(self) -> Result<Response, WaitError> {
+        self.wait_deadline(None)
+    }
+
+    /// Block until the response arrives or `timeout` elapses. On
+    /// timeout the ticket rides back inside [`WaitError::Timeout`]: the
+    /// request is still in flight and a later wait can still claim it.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response, WaitError> {
+        self.wait_deadline(Some(Instant::now() + timeout))
+    }
+
+    /// Non-blocking claim: the response if it has already been
+    /// delivered, otherwise the ticket back inside
+    /// [`WaitError::Timeout`] ([`WaitError::Closed`] once the pool is
+    /// gone and the response can no longer arrive).
+    pub fn try_take(self) -> Result<Response, WaitError> {
+        // a deadline that is already due: one ready/closed check, no wait
+        self.wait_deadline(Some(Instant::now()))
+    }
+
+    fn wait_deadline(mut self, deadline: Option<Instant>) -> Result<Response, WaitError> {
+        let mailbox = Arc::clone(&self.mailbox);
+        let mut s = mailbox.state.lock().unwrap();
+        loop {
+            if let Some(resp) = s.ready.remove(&self.id) {
+                self.spent = true;
+                // release the lock before `self` drops (Drop re-locks)
+                drop(s);
+                return Ok(resp);
+            }
+            if s.closed {
+                drop(s);
+                return Err(WaitError::Closed);
+            }
+            match deadline {
+                Some(d) => {
+                    let remaining = d.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        drop(s);
+                        return Err(WaitError::Timeout(self));
+                    }
+                    s = mailbox.cv.wait_timeout(s, remaining).unwrap().0;
+                }
+                None => {
+                    s = mailbox.cv.wait(s).unwrap();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if !self.spent {
+            self.mailbox.unregister(self.id);
+        }
+    }
+}
+
+/// Tickets for a batch of submissions (see
+/// [`Client::submit_batch`](super::Client::submit_batch)): the
+/// utterance-benchmark shape — submit a workload, then wait for all of
+/// it under one deadline.
+#[derive(Debug)]
+#[must_use = "dropping a Batch abandons every response — wait_all or take the tickets"]
+pub struct Batch {
+    tickets: Vec<Ticket>,
+}
+
+impl Batch {
+    pub(crate) fn new(tickets: Vec<Ticket>) -> Self {
+        Self { tickets }
+    }
+
+    /// Number of in-flight requests in the batch.
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    /// True when the batch holds no tickets.
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+
+    /// The request ids in the batch, in submission order.
+    pub fn ids(&self) -> Vec<u64> {
+        self.tickets.iter().map(Ticket::id).collect()
+    }
+
+    /// Take the individual tickets (to wait them with custom logic).
+    pub fn into_tickets(self) -> Vec<Ticket> {
+        self.tickets
+    }
+
+    /// Wait for every ticket under one shared deadline, best-effort:
+    /// returns the responses that resolved in time (in submission
+    /// order), silently dropping tickets that timed out or were cut off
+    /// by shutdown — the same contract the deprecated
+    /// `collect(n, timeout)` had. Compare `len()` of input and output to
+    /// detect shortfall.
+    pub fn wait_all(self, timeout: Duration) -> Vec<Response> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(self.tickets.len());
+        for t in self.tickets {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            // past the deadline this still claims already-delivered
+            // responses (the ready check precedes the timeout check)
+            if let Ok(resp) = t.wait_timeout(remaining) {
+                out.push(resp);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64) -> Response {
+        Response {
+            id,
+            stream: 0,
+            class: 0,
+            correct: None,
+            chip_latency_ms: 0.0,
+            service: Duration::ZERO,
+            worker: 0,
+            worker_seq: 0,
+        }
+    }
+
+    #[test]
+    fn unclaimed_retention_is_bounded_drop_oldest() {
+        let mb = Mailbox::new(true);
+        for id in 0..(UNCLAIMED_CAP as u64 + 10) {
+            mb.deliver(resp(id));
+        }
+        let got = mb.collect_unclaimed(UNCLAIMED_CAP + 10, Duration::from_millis(1));
+        assert_eq!(got.len(), UNCLAIMED_CAP, "cap not enforced");
+        assert_eq!(got.first().map(|r| r.id), Some(10), "newest dropped instead of oldest");
+        assert_eq!(got.last().map(|r| r.id), Some(UNCLAIMED_CAP as u64 + 9));
+    }
+
+    #[test]
+    fn dropped_ticket_retention_depends_on_mailbox_kind() {
+        // client mailboxes discard an abandoned response outright …
+        let plain = Mailbox::new(false);
+        plain.register(1);
+        plain.deliver(resp(1));
+        plain.unregister(1);
+        assert!(plain.collect_unclaimed(1, Duration::from_millis(1)).is_empty());
+        // … the default mailbox moves it to the collect-shim FIFO
+        let dflt = Mailbox::new(true);
+        dflt.register(2);
+        dflt.deliver(resp(2));
+        dflt.unregister(2);
+        let got = dflt.collect_unclaimed(1, Duration::from_millis(1));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 2);
+    }
+
+    #[test]
+    fn ticket_drop_unregisters_and_late_delivery_is_discarded() {
+        let mb = Mailbox::new(false);
+        mb.register(7);
+        drop(Ticket::new(7, 0, Arc::clone(&mb)));
+        // the worker completes after the ticket is gone: discarded
+        mb.deliver(resp(7));
+        assert!(mb.state.lock().unwrap().ready.is_empty());
+        assert!(mb.state.lock().unwrap().unclaimed.is_empty());
+    }
+}

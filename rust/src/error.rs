@@ -1,0 +1,248 @@
+//! Typed error surface of the serving API (v2).
+//!
+//! Before this module, failure modes were encoded as ad-hoc
+//! `Result<_, payload>` bounces: `Client::submit` returned the rejected
+//! `Request` whether the pool was merely saturated (retry) or gone for
+//! good (stop), and callers had to poll `Client::is_closed` to tell the
+//! two apart. The types here name the cause *and* still hand the payload
+//! back, so a producer can pattern-match once:
+//!
+//! * [`SubmitError`] — why a request submission failed, request inside;
+//! * [`StreamPushError`] — why a streaming chunk push failed, chunk inside;
+//! * [`WaitError`] — why waiting on a completion ticket ended without a
+//!   response (timeouts hand the [`Ticket`](crate::coordinator::Ticket)
+//!   back so the wait can resume);
+//! * [`Error`] — the crate-wide sum of the above plus builder validation
+//!   failures ([`Error::InvalidConfig`]).
+//!
+//! Everything implements [`std::error::Error`], so all variants propagate
+//! through the crate's anyhow-based [`crate::Result`] with `?`.
+
+#![deny(missing_docs)]
+
+use std::fmt;
+
+use crate::coordinator::{Request, Ticket};
+
+/// Crate-wide error type: every typed failure the serving and
+/// construction APIs can report.
+#[derive(Debug)]
+pub enum Error {
+    /// A builder rejected a configuration value (the message names the
+    /// violated constraint; nothing was constructed).
+    InvalidConfig {
+        /// builder field that failed validation
+        field: &'static str,
+        /// human-readable constraint violation
+        message: String,
+    },
+    /// A request submission was rejected (see [`SubmitError`]).
+    Submit(SubmitError),
+    /// A streaming-session push was rejected (see [`StreamPushError`]).
+    StreamPush(StreamPushError),
+    /// Waiting on a completion ticket ended without a response.
+    Wait(WaitError),
+}
+
+impl Error {
+    /// Construct an [`Error::InvalidConfig`] (builder validation helper).
+    pub fn invalid_config(field: &'static str, message: impl Into<String>) -> Self {
+        Error::InvalidConfig { field, message: message.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidConfig { field, message } => {
+                write!(f, "invalid configuration: {field}: {message}")
+            }
+            Error::Submit(e) => write!(f, "{e}"),
+            Error::StreamPush(e) => write!(f, "{e}"),
+            Error::Wait(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::InvalidConfig { .. } => None,
+            Error::Submit(e) => Some(e),
+            Error::StreamPush(e) => Some(e),
+            Error::Wait(e) => Some(e),
+        }
+    }
+}
+
+impl From<SubmitError> for Error {
+    fn from(e: SubmitError) -> Self {
+        Error::Submit(e)
+    }
+}
+
+impl From<StreamPushError> for Error {
+    fn from(e: StreamPushError) -> Self {
+        Error::StreamPush(e)
+    }
+}
+
+impl From<WaitError> for Error {
+    fn from(e: WaitError) -> Self {
+        Error::Wait(e)
+    }
+}
+
+/// Why a [`Request`] submission failed. The rejected request rides along
+/// in every variant — nothing is lost, the caller decides whether to
+/// retry, shed, or re-route.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Every reachable worker queue was full: transient global
+    /// backpressure. Retry (with backoff) or shed load; the pool is
+    /// still alive.
+    QueueFull(Request),
+    /// The coordinator has shut down (or every worker lane is
+    /// disconnected): permanent. Stop retrying.
+    Closed(Request),
+}
+
+impl SubmitError {
+    /// Recover the rejected request (e.g. to resubmit it).
+    pub fn into_request(self) -> Request {
+        match self {
+            SubmitError::QueueFull(r) | SubmitError::Closed(r) => r,
+        }
+    }
+
+    /// Borrow the rejected request.
+    pub fn request(&self) -> &Request {
+        match self {
+            SubmitError::QueueFull(r) | SubmitError::Closed(r) => r,
+        }
+    }
+
+    /// True for transient backpressure (retryable).
+    pub fn is_queue_full(&self) -> bool {
+        matches!(self, SubmitError::QueueFull(_))
+    }
+
+    /// True once the pool is gone (not retryable).
+    pub fn is_closed(&self) -> bool {
+        matches!(self, SubmitError::Closed(_))
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull(r) => {
+                write!(f, "submit rejected: every worker queue full (request {}, stream {})", r.id, r.stream)
+            }
+            SubmitError::Closed(r) => {
+                write!(f, "submit rejected: coordinator closed (request {}, stream {})", r.id, r.stream)
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why a [`StreamSession`](crate::coordinator::StreamSession) chunk push
+/// failed. The chunk rides along in every variant.
+#[derive(Debug)]
+pub enum StreamPushError {
+    /// The session's pinned worker queue is full (stream jobs never
+    /// spill — the recurrent state lives on that worker). Pace the
+    /// producer and retry.
+    Backpressure(Vec<i64>),
+    /// The worker pool is gone (coordinator dropped or pinned worker
+    /// lane disconnected). The session is dead; stop pushing.
+    Closed(Vec<i64>),
+}
+
+impl StreamPushError {
+    /// Recover the rejected audio chunk.
+    pub fn into_chunk(self) -> Vec<i64> {
+        match self {
+            StreamPushError::Backpressure(c) | StreamPushError::Closed(c) => c,
+        }
+    }
+
+    /// Borrow the rejected audio chunk.
+    pub fn chunk(&self) -> &[i64] {
+        match self {
+            StreamPushError::Backpressure(c) | StreamPushError::Closed(c) => c,
+        }
+    }
+
+    /// True for transient pinned-lane backpressure (retryable).
+    pub fn is_backpressure(&self) -> bool {
+        matches!(self, StreamPushError::Backpressure(_))
+    }
+
+    /// True once the pool (or the pinned worker) is gone.
+    pub fn is_closed(&self) -> bool {
+        matches!(self, StreamPushError::Closed(_))
+    }
+}
+
+impl fmt::Display for StreamPushError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamPushError::Backpressure(c) => {
+                write!(f, "stream push rejected: pinned worker queue full ({} samples)", c.len())
+            }
+            StreamPushError::Closed(c) => {
+                write!(f, "stream push rejected: worker pool closed ({} samples)", c.len())
+            }
+        }
+    }
+}
+
+impl std::error::Error for StreamPushError {}
+
+/// Why a [`Ticket`] wait ended without a response.
+#[derive(Debug)]
+pub enum WaitError {
+    /// The deadline expired first. The ticket is handed back so the
+    /// caller can keep waiting — the request is still in flight and the
+    /// response will be held for this ticket when it completes.
+    Timeout(Ticket),
+    /// The coordinator shut down before the response was produced (or
+    /// the response was already taken). Permanent for this ticket.
+    Closed,
+}
+
+impl WaitError {
+    /// Recover the ticket after a timeout (`None` for [`WaitError::Closed`]).
+    pub fn into_ticket(self) -> Option<Ticket> {
+        match self {
+            WaitError::Timeout(t) => Some(t),
+            WaitError::Closed => None,
+        }
+    }
+
+    /// True when the wait merely timed out (the request is still in flight).
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, WaitError::Timeout(_))
+    }
+
+    /// True once the pool shut down without producing the response.
+    pub fn is_closed(&self) -> bool {
+        matches!(self, WaitError::Closed)
+    }
+}
+
+impl fmt::Display for WaitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WaitError::Timeout(t) => {
+                write!(f, "timed out waiting for request {} (stream {})", t.id(), t.stream())
+            }
+            WaitError::Closed => write!(f, "coordinator closed before the response was produced"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}

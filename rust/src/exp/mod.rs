@@ -175,7 +175,7 @@ pub fn fig6(cfg: &RunConfig) -> crate::Result<()> {
     for n in [2usize, 4, 6, 8, 10, 12, 14, 16] {
         // per-configuration model: train/deploy channel selections match
         let params = ensure_weights_for_channels(cfg, n)?;
-        let chip_cfg = ChipConfig::design_point().with_channels(n);
+        let chip_cfg = ChipConfig::builder().channels(n).build()?;
         let ds = Dataset::with_fex(cfg.seed, chip_cfg.fex.clone());
         let (acc, _a11, _rep) = chip_accuracy(&params, &chip_cfg, &ds, cfg.eval_utterances);
         let p = fexarea::power_uw(cfg.arch, n);

@@ -37,10 +37,18 @@
 //! * [`coordinator`] — streaming serving runtime: routes audio streams to a
 //!   pool of chip-twin workers with dynamic batching and backpressure;
 //!   long-lived [`coordinator::StreamSession`]s run the always-on pipeline
-//!   per stream with pinned-worker state locality. Telemetry is sharded
-//!   per worker (lock-free counters + fixed-size log-bucketed latency
-//!   histograms, O(1) memory in request count) and validated by the
-//!   [`coordinator::soak`] sustained-load harness.
+//!   per stream with pinned-worker state locality. The serving API (v2)
+//!   is ticket-based: construction goes through the validating
+//!   [`coordinator::Coordinator::builder`], submission returns a
+//!   completion [`coordinator::Ticket`] routed through per-client
+//!   mailboxes, and failures are typed [`error`]s that hand the payload
+//!   back. Telemetry is sharded per worker (lock-free counters +
+//!   fixed-size log-bucketed latency histograms, O(1) memory in request
+//!   count) and validated by the [`coordinator::soak`] sustained-load
+//!   harness.
+//! * [`error`] — the typed error surface: crate-wide [`Error`] plus
+//!   payload-preserving [`SubmitError`] / [`StreamPushError`] /
+//!   [`WaitError`].
 //! * [`baseline`] — the comparison points: dense (non-Δ) accelerator,
 //!   coarse-grained skip-RNN, and an FFT/MFCC FEx cost model.
 //! * [`exp`] — drivers that regenerate every table and figure of the paper.
@@ -56,6 +64,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod energy;
+pub mod error;
 pub mod exp;
 pub mod fex;
 pub mod fixed;
@@ -65,8 +74,12 @@ pub mod stream;
 pub mod train;
 pub mod util;
 
-/// Crate-wide result type (anyhow-based, like the binaries).
+/// Crate-wide result type (anyhow-based, like the binaries). The typed
+/// serving/builder errors in [`error`] all implement [`std::error::Error`]
+/// and propagate through this with `?`.
 pub type Result<T> = anyhow::Result<T>;
+
+pub use error::{Error, StreamPushError, SubmitError, WaitError};
 
 /// The 12 GSCD class labels used throughout the crate, in chip output order.
 pub const CLASS_LABELS: [&str; 12] = [

@@ -119,6 +119,9 @@ fn run() -> anyhow::Result<()> {
     let cmd = argv[0].as_str();
     let args = Args::parse(&argv[1..])?;
     let cfg = load_config(&args)?;
+    // surface misconfiguration (channels/Δ_TH out of range) as a typed
+    // error up front, before any subcommand trains or deploys on it
+    cfg.chip_config_checked().context("invalid chip configuration")?;
 
     match cmd {
         "train" => cmd_train(&cfg),
@@ -199,39 +202,43 @@ fn cmd_eval(cfg: &RunConfig) -> anyhow::Result<()> {
 fn cmd_serve(cfg: &RunConfig, requests: usize) -> anyhow::Result<()> {
     let params = exp::ensure_weights(cfg)?;
     println!("starting coordinator with {} chip workers ...", cfg.workers);
-    let coord = coordinator::Coordinator::new(params, cfg.chip_config(), cfg.workers, 16);
+    let coord = coordinator::Coordinator::builder(params, cfg.chip_config_checked()?)
+        .workers(cfg.workers)
+        .queue_depth(16)
+        .build()
+        .context("invalid serving configuration")?;
     let ds = Dataset::new(cfg.seed);
     let t0 = std::time::Instant::now();
-    let mut submitted = 0usize;
-    for i in 0..requests {
+    // v2 surface: batch submission (lazy iterator — requests materialise
+    // as they are accepted, blocking through backpressure) and
+    // ticket-routed responses — no global collect
+    let reqs = (0..requests).map(|i| {
         let utt = ds.utterance(Split::Test, i);
-        let req = coordinator::Request {
+        coordinator::Request {
             id: 0,
             stream: (i % 8) as u64,
             audio12: utt.audio12,
             label: Some(utt.label),
-        };
-        if coord.submit(req).is_ok() {
-            submitted += 1;
-        } else {
-            std::thread::sleep(std::time::Duration::from_millis(5));
         }
-    }
-    let responses = coord.collect(submitted, std::time::Duration::from_secs(300));
+    });
+    let batch = coord.submit_batch(reqs).context("worker pool died mid-submit")?;
+    let submitted = batch.len();
+    let responses = batch.wait_all(std::time::Duration::from_secs(300));
     let wall = t0.elapsed();
     let stats = coord.stats();
     println!(
-        "served {}/{requests} requests in {:.2}s  ({:.1} utt/s)",
+        "served {}/{requests} requests ({submitted} submitted) in {:.2}s  ({:.1} utt/s)",
         responses.len(),
         wall.as_secs_f64(),
         responses.len() as f64 / wall.as_secs_f64()
     );
     println!(
-        "online accuracy {:.1}%  p50 {:.1} ms  p99 {:.1} ms  rejected {}",
+        "online accuracy {:.1}%  p50 {:.1} ms  p99 {:.1} ms  rejected {} (backpressure) / {} (closed)",
         stats.accuracy() * 100.0,
         stats.p50_us() as f64 / 1e3,
         stats.p99_us() as f64 / 1e3,
-        stats.rejected
+        stats.rejected_full,
+        stats.rejected_closed
     );
     println!(
         "simulated chip: {:.1}% sparsity over {} frames",

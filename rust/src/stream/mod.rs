@@ -17,7 +17,10 @@
 //!
 //! [`StreamPipeline`] is the single-stream composition (one microphone →
 //! one chip); [`crate::coordinator::StreamSession`] hosts many of these on
-//! the worker pool.
+//! the worker pool (pushes there surface typed
+//! [`crate::StreamPushError`]s that hand the chunk back). Pools apply a
+//! default [`StreamConfig`] to sessions opened without one — a
+//! [`crate::coordinator::CoordinatorBuilder::default_stream`] knob.
 
 pub mod detector;
 pub mod metrics;
@@ -43,7 +46,9 @@ impl StreamConfig {
         Self::for_chip(ChipConfig::design_point())
     }
 
-    /// Default VAD/detector tuning over an explicit chip configuration.
+    /// Default VAD/detector tuning over an explicit chip configuration
+    /// (pair with [`ChipConfig::builder`](crate::chip::ChipConfig::builder)
+    /// for a validated chip).
     pub fn for_chip(chip: ChipConfig) -> Self {
         Self { chip, vad: VadConfig::design_point(), detector: DetectorConfig::design_point() }
     }

@@ -70,10 +70,14 @@ fn delta_th_tradeoff_shape_holds_on_real_audio() {
 
 #[test]
 fn coordinator_under_load_conserves_requests() {
-    let coord = Coordinator::new(rng_quant(5), ChipConfig::design_point(), 3, 4);
+    let coord = Coordinator::builder(rng_quant(5), ChipConfig::design_point())
+        .workers(3)
+        .queue_depth(4)
+        .build()
+        .expect("valid pool");
     let ds = Dataset::new(5);
     let n = 18;
-    let mut submitted = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..n {
         let utt = ds.utterance(Split::Test, i);
         let mut req = Request {
@@ -84,54 +88,60 @@ fn coordinator_under_load_conserves_requests() {
         };
         loop {
             match coord.submit(req) {
-                Ok(id) => {
-                    submitted.push(id);
+                Ok(t) => {
+                    tickets.push(t);
                     break;
                 }
-                Err(r) => {
-                    req = r;
+                Err(e) => {
+                    assert!(e.is_queue_full(), "live pool reported Closed");
+                    req = e.into_request();
                     std::thread::sleep(Duration::from_millis(2));
                 }
             }
         }
     }
-    let responses = coord.collect(n, Duration::from_secs(300));
-    assert_eq!(responses.len(), n, "lost responses");
-    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
-    ids.sort();
-    let mut expected = submitted.clone();
-    expected.sort();
-    assert_eq!(ids, expected, "request ids not conserved");
+    assert_eq!(tickets.len(), n);
+    // conservation, per ticket: each resolves exactly its own request id
+    for t in tickets {
+        let id = t.id();
+        let r = t.wait_timeout(Duration::from_secs(300)).expect("lost response");
+        assert_eq!(r.id, id, "ticket resolved to a foreign response");
+    }
 }
 
 #[test]
 fn coordinator_survives_worker_stall_mid_run() {
-    let coord = Coordinator::new(rng_quant(6), ChipConfig::design_point(), 2, 8);
+    let coord = Coordinator::builder(rng_quant(6), ChipConfig::design_point())
+        .workers(2)
+        .queue_depth(8)
+        .build()
+        .expect("valid pool");
     let ds = Dataset::new(6);
+    let mut tickets = Vec::new();
     // phase 1: normal
     for i in 0..4 {
         let utt = ds.utterance(Split::Test, i);
-        coord
+        let t = coord
             .submit(Request { id: 0, stream: i as u64, audio12: utt.audio12, label: None })
             .unwrap();
+        tickets.push(t);
     }
     // phase 2: stall worker 0, keep submitting (must spill or queue)
     coord.set_stalled(0, true);
-    let mut accepted = 4;
     for i in 4..10 {
         let utt = ds.utterance(Split::Test, i);
-        if coord
+        if let Ok(t) = coord
             .submit(Request { id: 0, stream: i as u64, audio12: utt.audio12, label: None })
-            .is_ok()
         {
-            accepted += 1;
+            tickets.push(t);
         }
     }
-    // phase 3: recover
+    // phase 3: recover — every accepted request must still complete
     std::thread::sleep(Duration::from_millis(50));
     coord.set_stalled(0, false);
-    let responses = coord.collect(accepted, Duration::from_secs(300));
-    assert_eq!(responses.len(), accepted, "requests lost across a stall");
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(300)).expect("request lost across a stall");
+    }
 }
 
 #[test]

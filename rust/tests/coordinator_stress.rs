@@ -1,9 +1,11 @@
 //! Stress: N producer threads × M streams through one `Coordinator`.
 //!
 //! Asserts the serving contract under concurrency and injected failures:
-//! request conservation (every accepted id completes exactly once, and
-//! accepted + rejected == attempts), per-stream ordering on the pinned
-//! path, and backpressure (bounded rejections, no loss) under a stalled
+//! request conservation (every accepted ticket resolves exactly its own
+//! request id, and accepted + rejected == attempts), per-client mailbox
+//! isolation (no cross-producer response theft), per-stream ordering on
+//! the pinned path, and typed backpressure (bounded `QueueFull`
+//! rejections with the request handed back, no loss) under a stalled
 //! worker. Audio is pre-rendered so the submission phase itself is tight.
 
 use std::collections::HashMap;
@@ -12,8 +14,9 @@ use std::time::Duration;
 
 use deltakws::accel::gru::QuantParams;
 use deltakws::chip::ChipConfig;
-use deltakws::coordinator::{Coordinator, Request};
+use deltakws::coordinator::{Coordinator, Request, Response};
 use deltakws::util::prng::Pcg;
+use deltakws::SubmitError;
 
 fn rng_quant(seed: u64) -> QuantParams {
     let mut rng = Pcg::new(seed);
@@ -22,6 +25,14 @@ fn rng_quant(seed: u64) -> QuantParams {
     q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
     q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
     q
+}
+
+fn pool(seed: u64, workers: usize, queue_depth: usize) -> Coordinator {
+    Coordinator::builder(rng_quant(seed), ChipConfig::design_point())
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .build()
+        .expect("valid stress pool")
 }
 
 /// Short (sub-second) utterance: enough frames to exercise the chip while
@@ -45,7 +56,7 @@ fn stress_concurrent_producers_conserve_requests() {
     const REQS_PER_STREAM: usize = 4;
     const TOTAL: usize = THREADS * STREAMS_PER_THREAD * REQS_PER_STREAM;
 
-    let coord = Coordinator::new(rng_quant(1), ChipConfig::design_point(), 3, 4);
+    let coord = pool(1, 3, 4);
     let attempts = AtomicUsize::new(0);
     let accepted = AtomicUsize::new(0);
 
@@ -62,36 +73,55 @@ fn stress_concurrent_producers_conserve_requests() {
         work.push(reqs);
     }
 
+    let mut responses: Vec<Response> = Vec::new();
     std::thread::scope(|scope| {
+        let mut handles = Vec::new();
         for reqs in work {
             let client = coord.client();
             let attempts = &attempts;
             let accepted = &accepted;
-            scope.spawn(move || {
+            handles.push(scope.spawn(move || {
+                let mut tickets = Vec::new();
                 for mut req in reqs {
-                    // retry on backpressure, bail if the pool disappears
+                    // retry on typed backpressure, bail if the pool dies
                     loop {
                         attempts.fetch_add(1, Ordering::Relaxed);
                         match client.submit(req) {
-                            Ok(_) => {
+                            Ok(t) => {
                                 accepted.fetch_add(1, Ordering::Relaxed);
+                                tickets.push(t);
                                 break;
                             }
-                            Err(r) => {
-                                assert!(!client.is_closed(), "pool died mid-run");
-                                req = r;
+                            Err(e) => {
+                                assert!(e.is_queue_full(), "pool died mid-run");
+                                req = e.into_request();
                                 std::thread::sleep(Duration::from_millis(2));
                             }
                         }
                     }
                 }
-            });
+                // every ticket resolves exactly its own request id — the
+                // per-client mailbox cannot hand over foreign responses
+                tickets
+                    .into_iter()
+                    .map(|t| {
+                        let id = t.id();
+                        let r = t
+                            .wait_timeout(Duration::from_secs(300))
+                            .expect("response lost");
+                        assert_eq!(r.id, id, "cross-ticket response leak");
+                        r
+                    })
+                    .collect::<Vec<Response>>()
+            }));
+        }
+        for h in handles {
+            responses.extend(h.join().expect("producer thread panicked"));
         }
     });
 
     let accepted = accepted.load(Ordering::Relaxed);
     assert_eq!(accepted, TOTAL, "every request must eventually be accepted");
-    let responses = coord.collect(accepted, Duration::from_secs(300));
     assert_eq!(responses.len(), accepted, "responses lost");
 
     // conservation: accepted ids are unique and complete exactly once
@@ -100,31 +130,35 @@ fn stress_concurrent_producers_conserve_requests() {
     ids.dedup();
     assert_eq!(ids.len(), accepted, "duplicate or missing response ids");
 
-    // attempts == accepted + rejected (each failed submit counts once)
+    // attempts == accepted + rejected_full (each failed submit counts
+    // once; a live pool under saturation never reports Closed)
     let stats = coord.stats();
     assert_eq!(stats.completed, accepted as u64);
+    assert_eq!(stats.rejected_closed, 0, "live pool produced Closed rejections");
     assert_eq!(
         attempts.load(Ordering::Relaxed) as u64,
-        accepted as u64 + stats.rejected,
-        "attempt accounting broken: {} attempts, {} accepted, {} rejected",
+        accepted as u64 + stats.rejected_full,
+        "attempt accounting broken: {} attempts, {} accepted, {} rejected_full",
         attempts.load(Ordering::Relaxed),
         accepted,
-        stats.rejected
+        stats.rejected_full
     );
 
     // per-stream ordering: a stream served entirely by one worker went
-    // through a single FIFO, so its ids must arrive in submission order
-    // (the spill path intentionally trades ordering for availability)
-    let mut by_stream: HashMap<u64, Vec<(u64, usize)>> = HashMap::new();
+    // through a single FIFO, so its ids must complete in submission order
+    // — visible through the per-worker completion sequence numbers (the
+    // spill path intentionally trades ordering for availability)
+    let mut by_stream: HashMap<u64, Vec<(u64, usize, u64)>> = HashMap::new();
     for r in &responses {
-        by_stream.entry(r.stream).or_default().push((r.id, r.worker));
+        by_stream.entry(r.stream).or_default().push((r.id, r.worker, r.worker_seq));
     }
     let mut pinned_streams = 0;
-    for (stream, seq) in &by_stream {
+    for (stream, seq) in by_stream.iter_mut() {
         let workers: std::collections::HashSet<usize> =
-            seq.iter().map(|&(_, w)| w).collect();
+            seq.iter().map(|&(_, w, _)| w).collect();
         if workers.len() == 1 {
             pinned_streams += 1;
+            seq.sort_by_key(|&(_, _, ws)| ws);
             let ordered = seq.windows(2).all(|w| w[0].0 < w[1].0);
             assert!(ordered, "stream {stream} reordered on its pinned worker: {seq:?}");
         }
@@ -133,32 +167,92 @@ fn stress_concurrent_producers_conserve_requests() {
 }
 
 #[test]
+fn stress_multi_client_ticket_isolation() {
+    // N threads, each with its *own* Client (own mailbox), submitting
+    // interleaved requests that share streams (and therefore workers)
+    // across clients: every ticket must resolve to its own request id
+    // with zero cross-talk — the property the v1 global collect() FIFO
+    // could not provide
+    const CLIENTS: usize = 4;
+    const REQS: usize = 6;
+    let coord = pool(4, 3, 8);
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let client = coord.client();
+            scope.spawn(move || {
+                let mut tickets = Vec::new();
+                for r in 0..REQS {
+                    // deliberately collide streams across clients so all
+                    // clients' requests mix on the same worker queues
+                    let stream = ((c + r) % 3) as u64;
+                    let mut req = short_request(stream, (c * 100 + r) as u64 + 1);
+                    loop {
+                        match client.submit(req) {
+                            Ok(t) => {
+                                tickets.push(t);
+                                break;
+                            }
+                            Err(SubmitError::QueueFull(back)) => {
+                                req = back;
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                            Err(SubmitError::Closed(_)) => panic!("pool died mid-run"),
+                        }
+                    }
+                }
+                for t in tickets {
+                    let id = t.id();
+                    let stream = t.stream();
+                    let resp = t
+                        .wait_timeout(Duration::from_secs(300))
+                        .expect("ticket starved: response stolen or lost");
+                    assert_eq!(resp.id, id, "cross-client response leak");
+                    assert_eq!(resp.stream, stream, "response for a foreign stream");
+                }
+            });
+        }
+    });
+    let stats = coord.stats();
+    assert_eq!(stats.completed, (CLIENTS * REQS) as u64);
+}
+
+#[test]
 fn stress_backpressure_under_stalled_worker() {
     // one of two workers stalls mid-run: the router must spill, then shed
-    // with clean rejections once both queues are full — and complete every
-    // accepted request after recovery
-    let coord = Coordinator::new(rng_quant(2), ChipConfig::design_point(), 2, 2);
+    // with clean typed rejections once both queues are full — and complete
+    // every accepted request after recovery
+    let coord = pool(2, 2, 2);
     coord.set_stalled(0, true);
 
     let client = coord.client();
-    let mut accepted = 0u64;
+    let mut tickets = Vec::new();
     let mut rejected = 0u64;
     for i in 0..12 {
         match client.submit(short_request(0, 50 + i)) {
-            Ok(_) => accepted += 1,
-            Err(_) => rejected += 1,
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                // typed cause: saturation of a live pool is QueueFull,
+                // and the request comes back intact for the retry path
+                assert!(e.is_queue_full(), "live pool reported Closed");
+                assert_eq!(e.request().stream, 0);
+                rejected += 1;
+            }
         }
     }
+    let accepted = tickets.len() as u64;
     assert!(rejected > 0, "saturating a stalled pool must reject");
     assert!(accepted >= 2, "spill around the stalled worker is dead");
-    assert_eq!(coord.stats().rejected, rejected);
+    assert_eq!(coord.stats().rejected_full, rejected);
+    assert_eq!(coord.stats().rejected_closed, 0);
 
     coord.set_stalled(0, false);
-    let responses = coord.collect(accepted as usize, Duration::from_secs(300));
-    assert_eq!(responses.len(), accepted as usize, "accepted requests lost across a stall");
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(300))
+            .expect("accepted request lost across a stall");
+    }
     let stats = coord.stats();
     assert_eq!(stats.completed, accepted);
-    assert_eq!(stats.completed + stats.rejected, 12);
+    assert_eq!(stats.completed + stats.rejected_full, 12);
 }
 
 #[test]
@@ -194,26 +288,35 @@ fn soak_sustained_load_keeps_telemetry_flat_and_percentiles_honest() {
 
 #[test]
 fn stress_many_streams_land_on_all_workers() {
-    let coord = Coordinator::new(rng_quant(3), ChipConfig::design_point(), 3, 8);
+    let coord = pool(3, 3, 8);
     let n = 9usize;
+    let mut responses: Vec<Response> = Vec::new();
     std::thread::scope(|scope| {
+        let mut handles = Vec::new();
         for i in 0..n {
             let client = coord.client();
-            scope.spawn(move || {
+            handles.push(scope.spawn(move || {
                 let mut req = short_request(i as u64, 200 + i as u64);
                 loop {
                     match client.submit(req) {
-                        Ok(_) => break,
-                        Err(r) => {
-                            req = r;
+                        Ok(t) => {
+                            return t
+                                .wait_timeout(Duration::from_secs(300))
+                                .expect("response lost");
+                        }
+                        Err(e) => {
+                            assert!(e.is_queue_full(), "pool died mid-run");
+                            req = e.into_request();
                             std::thread::sleep(Duration::from_millis(2));
                         }
                     }
                 }
-            });
+            }));
+        }
+        for h in handles {
+            responses.push(h.join().expect("producer thread panicked"));
         }
     });
-    let responses = coord.collect(n, Duration::from_secs(300));
     assert_eq!(responses.len(), n);
     let workers: std::collections::HashSet<usize> =
         responses.iter().map(|r| r.worker).collect();

@@ -1,0 +1,235 @@
+//! Serving API v2 integration: tickets, mailboxes, typed errors, builders.
+//!
+//! The acceptance surface of the redesign:
+//! * builder validation — `ChipConfig::builder` / `Coordinator::builder` /
+//!   `RunConfig::chip_config_checked` reject out-of-range knobs with
+//!   `Error::InvalidConfig` (and the legacy `with_*` setters clamp, with a
+//!   debug assertion);
+//! * error paths — queue-full hands the request back intact and is
+//!   retryable; post-shutdown submits report `Closed`; in-flight tickets
+//!   resolve (response or `Closed`) instead of hanging;
+//! * ticket semantics — `wait_timeout` returns the ticket inside
+//!   `Timeout` so the wait can resume; batches resolve in submission
+//!   order.
+
+use std::time::Duration;
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::chip::{ChipConfig, DELTA_TH_MAX_Q8};
+use deltakws::config::RunConfig;
+use deltakws::coordinator::{Coordinator, Request};
+use deltakws::util::prng::Pcg;
+use deltakws::{Error, SubmitError, WaitError};
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+fn short_request(stream: u64, seed: u64) -> Request {
+    let mut rng = Pcg::new(seed);
+    let label = (seed % 12) as usize;
+    let audio = deltakws::audio::synth_utterance(label, &mut rng);
+    Request {
+        id: 0,
+        stream,
+        audio12: deltakws::audio::quantize_12b(&audio[..1024]),
+        label: Some(label),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// builder validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chip_builder_rejects_out_of_range_knobs() {
+    for bad in [0usize, 17, 99] {
+        let err = ChipConfig::builder().channels(bad).build().unwrap_err();
+        assert!(
+            matches!(err, Error::InvalidConfig { field: "channels", .. }),
+            "channels={bad}: wrong error {err}"
+        );
+    }
+    for bad in [-1i16, DELTA_TH_MAX_Q8 + 1, i16::MAX] {
+        let err = ChipConfig::builder().delta_th_q8(bad).build().unwrap_err();
+        assert!(
+            matches!(err, Error::InvalidConfig { field: "delta_th_q8", .. }),
+            "delta_th={bad}: wrong error {err}"
+        );
+    }
+    // boundary values are valid
+    for (ch, th) in [(1usize, 0i16), (16, DELTA_TH_MAX_Q8)] {
+        let cfg = ChipConfig::builder().channels(ch).delta_th_q8(th).build().unwrap();
+        assert_eq!(cfg.fex.num_active(), ch);
+        assert_eq!(cfg.accel.delta_th_q8, th);
+    }
+}
+
+#[test]
+fn run_config_surfaces_invalid_chip_settings() {
+    let mut cfg = RunConfig::default();
+    assert!(cfg.chip_config_checked().is_ok());
+    cfg.channels = 0;
+    assert!(cfg.chip_config_checked().is_err(), "0-channel config accepted");
+    cfg.channels = 10;
+    cfg.delta_th_q8 = -5;
+    assert!(cfg.chip_config_checked().is_err(), "negative Θ accepted");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, should_panic(expected = "channels"))]
+fn legacy_channel_setter_clamps_or_asserts() {
+    // debug builds: the debug assertion fires (should_panic above);
+    // release builds: the value clamps into range instead of silently
+    // configuring a chip with n > 16 "channels"
+    let cfg = ChipConfig::design_point().with_channels(99);
+    assert_eq!(cfg.fex.num_active(), 16);
+    assert!(cfg.validate().is_ok());
+}
+
+#[test]
+#[cfg_attr(debug_assertions, should_panic(expected = "delta_th_q8"))]
+fn legacy_delta_setter_clamps_or_asserts() {
+    let cfg = ChipConfig::design_point().with_delta_th(i16::MAX);
+    assert_eq!(cfg.accel.delta_th_q8, DELTA_TH_MAX_Q8);
+    assert!(cfg.validate().is_ok());
+}
+
+#[test]
+fn coordinator_builder_validates_chip_config_too() {
+    // an invalid chip config assembled by hand is caught at pool build
+    let mut chip = ChipConfig::design_point();
+    chip.accel.delta_th_q8 = -1;
+    let err = Coordinator::builder(rng_quant(1), chip)
+        .build()
+        .err()
+        .expect("invalid chip config must be rejected at pool build");
+    assert!(matches!(err, Error::InvalidConfig { .. }));
+}
+
+// ---------------------------------------------------------------------------
+// error paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queue_full_hands_the_request_back_intact() {
+    let coord = Coordinator::builder(rng_quant(2), ChipConfig::design_point())
+        .workers(1)
+        .queue_depth(1)
+        .build()
+        .unwrap();
+    coord.set_stalled(0, true);
+    let original = short_request(3, 7);
+    let (audio, label) = (original.audio12.clone(), original.label);
+    let mut tickets = Vec::new();
+    let mut req = original;
+    let mut rejections = 0;
+    // saturate: 1 in the worker's hands + 1 queued, then rejection
+    loop {
+        match coord.submit(req) {
+            Ok(t) => {
+                tickets.push(t);
+                req = short_request(3, 7);
+            }
+            Err(e) => {
+                assert!(e.is_queue_full());
+                assert!(!e.is_closed());
+                let back = e.into_request();
+                assert_eq!(back.audio12, audio, "payload mutated in rejection");
+                assert_eq!(back.label, label);
+                rejections += 1;
+                if rejections >= 3 {
+                    break;
+                }
+                req = back; // a rejected request is directly resubmittable
+            }
+        }
+        assert!(tickets.len() < 8, "queue of 1 never saturated");
+    }
+    assert!(coord.stats().rejected_full >= 3);
+    coord.set_stalled(0, false);
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(300)).expect("accepted request lost");
+    }
+}
+
+#[test]
+fn post_shutdown_submit_reports_closed_and_tickets_resolve() {
+    let coord = Coordinator::builder(rng_quant(3), ChipConfig::design_point())
+        .workers(2)
+        .queue_depth(4)
+        .build()
+        .unwrap();
+    let client = coord.client();
+    // a request in flight when the pool drops: the shutdown drain either
+    // completes it (response claimable) or the mailbox closes — the wait
+    // must resolve promptly either way, never hang
+    let pending = client.submit(short_request(0, 11)).expect("live pool");
+    drop(coord);
+    assert!(client.is_closed());
+    match pending.wait_timeout(Duration::from_secs(60)) {
+        Ok(resp) => assert_eq!(resp.stream, 0),
+        Err(WaitError::Closed) => {}
+        Err(WaitError::Timeout(_)) => panic!("post-shutdown wait hung until timeout"),
+    }
+    // further submits: typed Closed, payload intact
+    let original = short_request(1, 12);
+    let audio = original.audio12.clone();
+    match client.submit(original) {
+        Err(SubmitError::Closed(back)) => assert_eq!(back.audio12, audio),
+        Err(SubmitError::QueueFull(_)) => panic!("dead pool reported as backpressure"),
+        Ok(_) => panic!("submit into a dropped pool succeeded"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ticket semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn timeout_hands_the_ticket_back_and_the_wait_resumes() {
+    let coord = Coordinator::builder(rng_quant(4), ChipConfig::design_point())
+        .workers(1)
+        .queue_depth(4)
+        .build()
+        .unwrap();
+    coord.set_stalled(0, true);
+    let ticket = coord.submit(short_request(0, 21)).expect("live pool");
+    let id = ticket.id();
+    // stalled worker: a short wait must time out and return the ticket
+    let ticket = match ticket.wait_timeout(Duration::from_millis(30)) {
+        Err(WaitError::Timeout(t)) => t,
+        other => panic!("expected Timeout with the ticket back, got {other:?}"),
+    };
+    assert_eq!(ticket.id(), id, "a different ticket came back");
+    coord.set_stalled(0, false);
+    // the same ticket still claims the (same) response
+    let resp = ticket.wait_timeout(Duration::from_secs(300)).expect("resumed wait failed");
+    assert_eq!(resp.id, id);
+}
+
+#[test]
+fn batch_waits_resolve_in_submission_order() {
+    let coord = Coordinator::builder(rng_quant(5), ChipConfig::design_point())
+        .workers(2)
+        .queue_depth(4)
+        .build()
+        .unwrap();
+    let reqs: Vec<Request> = (0..8).map(|i| short_request(i % 3, 30 + i)).collect();
+    let batch = coord.submit_batch(reqs).expect("live pool");
+    assert_eq!(batch.len(), 8);
+    let ids = batch.ids();
+    let responses = batch.wait_all(Duration::from_secs(300));
+    assert_eq!(responses.len(), 8, "batch lost responses");
+    let got: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(got, ids, "responses out of submission order");
+    // every response carries its own request's stream
+    for (resp, i) in responses.iter().zip(0u64..) {
+        assert_eq!(resp.stream, i % 3);
+    }
+}

@@ -169,7 +169,11 @@ fn coordinator_sessions_detect_on_the_pinned_worker() {
     // two sessions on a 3-worker pool, interleaved with batch requests:
     // every chunk of a stream must be processed (frame conservation) and
     // events must flow back asynchronously
-    let coord = Coordinator::new(rng_quant(7), ChipConfig::design_point(), 3, 8);
+    let coord = Coordinator::builder(rng_quant(7), ChipConfig::design_point())
+        .workers(3)
+        .queue_depth(8)
+        .build()
+        .expect("valid pool");
     let cfg = TrackConfig { duration_s: 4, keywords: 2, fillers: 0, noise: (0.001, 0.002) };
     let (audio12, _) = synth_track(&cfg, 31);
     let s1 = coord.open_stream(10);
