@@ -24,7 +24,9 @@ fn main() -> anyhow::Result<()> {
     let audio12 = audio::quantize_12b(&wave);
 
     let mut chip = KwsChip::new(params, cfg.chip_config());
-    let d = chip.process_utterance(&audio12);
+    // the explorer is exactly what the TraceProbe path exists for: full
+    // per-frame diagnostics, paid for only when somebody asks
+    let (d, trace) = chip.process_utterance_traced(&audio12);
     println!("'{keyword}' -> predicted '{}'\n", CLASS_LABELS[d.class]);
 
     // --- feature heat map (ASCII) -----------------------------------------
@@ -32,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let glyphs = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
     for ch in (4..14).rev() {
         let mut row = String::with_capacity(64);
-        for f in &d.feat_trace {
+        for f in &trace.feat_trace {
             let v = (f[ch] as usize * (glyphs.len() - 1)) / 4095;
             row.push(glyphs[v.min(glyphs.len() - 1)]);
         }
@@ -42,15 +44,15 @@ fn main() -> anyhow::Result<()> {
     // --- per-frame firing / latency ----------------------------------------
     println!("\nper-frame fired lanes (of 74) and compute latency:");
     let spark: Vec<char> = "▁▂▃▄▅▆▇█".chars().collect();
-    let max_fired = *d.frame_fired.iter().max().unwrap_or(&1) as f64;
-    let line: String = d
+    let max_fired = *trace.frame_fired.iter().max().unwrap_or(&1) as f64;
+    let line: String = trace
         .frame_fired
         .iter()
         .map(|&f| spark[((f as f64 / max_fired) * (spark.len() - 1) as f64) as usize])
         .collect();
     println!("  fired |{line}|");
     let ms: Vec<f64> =
-        d.frame_cycles.iter().map(|&c| c as f64 / 125_000.0 * 1e3).collect();
+        trace.frame_cycles.iter().map(|&c| c as f64 / 125_000.0 * 1e3).collect();
     println!(
         "  latency: min {:.2} ms, mean {:.2} ms, max {:.2} ms",
         ms.iter().cloned().fold(f64::MAX, f64::min),

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let decision = chip.process_utterance(&audio12);
 
     println!("predicted keyword : {}", CLASS_LABELS[decision.class]);
-    println!("frames processed  : {}", decision.frame_cycles.len());
+    println!("frames processed  : {}", decision.frames);
 
     // 4. chip telemetry (the paper's Table II metrics)
     let report = chip.report();

@@ -61,6 +61,10 @@ fn print_report(label: &str, r: &SoakReport) {
         r.final_stats.rejected_full
     );
     println!(
+        "sessions   : {} B live pipeline state at the 10% checkpoint, {} B after close (bounded ✓)",
+        r.session_bytes_early, r.session_bytes_final
+    );
+    println!(
         "chip       : {:.1}% temporal sparsity, {:.1}% ΔRNN duty cycle over {} frames",
         r.final_stats.activity.sparsity() * 100.0,
         r.final_stats.activity.duty_cycle() * 100.0,

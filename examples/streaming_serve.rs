@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
                     stream: (i % STREAMS) as u64,
                     audio12: utt.audio12,
                     label: Some(utt.label),
+                    trace: false,
                 };
                 loop {
                     match client.submit(req) {

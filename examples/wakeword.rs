@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         StreamPipeline::new(params.clone(), StreamConfig::for_chip(chip_cfg.clone()));
     let mut events = Vec::new();
     for chunk in audio12.chunks(256) {
-        events.extend(pipe.push_audio(chunk));
+        events.extend(pipe.push_audio(chunk).expect("32 ms chunks fit the frame buffer"));
     }
 
     let score = score_track(&sched, &events, pipe.samples_in, DEFAULT_TOLERANCE_MS);
@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
         StreamConfig::for_chip(chip_cfg).with_vad(VadConfig::disabled()),
     );
     for chunk in audio12.chunks(256) {
-        always_on.push_audio(chunk);
+        always_on.push_audio(chunk).expect("32 ms chunks fit the frame buffer");
     }
     let on_report = always_on.report();
     println!("\n== always-on energy ==");

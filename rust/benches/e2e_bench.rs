@@ -50,6 +50,7 @@ fn main() {
                 stream: (i % 8) as u64,
                 audio12: utt.clone(),
                 label: None,
+                trace: false,
             })
             .collect();
         // v2 utterance-benchmark path: batch submission (blocking through

@@ -1,0 +1,125 @@
+//! Bench 10 (PR 5 tentpole): the frame hot path, probed vs unprobed.
+//!
+//! A/Bs the lean `NoProbe` datapath against the opt-in `TraceProbe`
+//! instrumentation at three altitudes:
+//!
+//! * **utterance decode** — the full pipeline (FEx → CDC → ΔRNN →
+//!   decision); here the arithmetic dominates, so the probe overhead is
+//!   the *residual* the zero-cost claim must keep small;
+//! * **sparse accel frames** — `step_frame` on a low-motion feature
+//!   stream (the regime the chip lives in), where per-frame bookkeeping
+//!   is proportionally largest inside the accelerator;
+//! * **frame consume + decide** — the layer this PR actually moved:
+//!   folding completed frames into a decision with the lean
+//!   `DecisionAccum` vs materializing the old per-decision traces
+//!   (three Vec pushes incl. a 128-byte feature copy per frame + the
+//!   per-decision allocations). This is the instrumentation tax every
+//!   request used to pay and now only traced requests pay — the
+//!   lean-vs-traced frames/sec ratio here is the headline number
+//!   `tools/bench_report.py` records into BENCH_5.json.
+//!
+//! Run: `cargo bench --bench hotpath_bench` (DELTAKWS_BENCH_SMOKE=1 for CI).
+
+mod common;
+
+use deltakws::chip::{ChipConfig, DecisionAccum, FrameOut, KwsChip};
+use deltakws::probe::{ChipProbe, TraceProbe};
+use deltakws::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("hotpath (probe A/B)");
+    let utts: Vec<Vec<i64>> = (0..8).map(|i| common::utterance(40 + i, (i % 12) as usize)).collect();
+
+    // --- (1) full utterance decode -------------------------------------
+    let mut lean_chip = KwsChip::new(common::rng_quant(9), ChipConfig::design_point());
+    let mut i = 0usize;
+    let s_utt_lean = b.bench_with_items("utterance decode, lean (NoProbe)", 62.0, "frames", || {
+        let u = &utts[i % utts.len()];
+        i += 1;
+        black_box(lean_chip.process_utterance(black_box(u)));
+    });
+    let mut traced_chip = KwsChip::new(common::rng_quant(9), ChipConfig::design_point());
+    let mut j = 0usize;
+    let s_utt_traced =
+        b.bench_with_items("utterance decode, traced (TraceProbe)", 62.0, "frames", || {
+            let u = &utts[j % utts.len()];
+            j += 1;
+            black_box(traced_chip.process_utterance_traced(black_box(u)));
+        });
+
+    // --- (2) sparse accel frames ---------------------------------------
+    // low-motion stream at the design Δ_TH: few lanes fire, the fixed
+    // enc/NLU/FC floor dominates — closest to the chip's idle-speech regime
+    let frames = common::feature_stream(31, 256, 0.05, 60);
+    let mut acc_lean = deltakws::accel::DeltaRnnAccel::new(
+        common::rng_quant(10),
+        deltakws::accel::AccelConfig::design_point(),
+        deltakws::energy::SramKind::NearVth,
+    );
+    let mut k = 0usize;
+    let s_acc_lean = b.bench_with_items("accel.step_frame sparse, lean", 1.0, "frames", || {
+        black_box(acc_lean.step_frame(black_box(&frames[k % frames.len()])));
+        k += 1;
+    });
+    let mut acc_traced = deltakws::accel::DeltaRnnAccel::new(
+        common::rng_quant(10),
+        deltakws::accel::AccelConfig::design_point(),
+        deltakws::energy::SramKind::NearVth,
+    );
+    let mut probe = TraceProbe::default();
+    let mut m = 0usize;
+    let s_acc_traced = b.bench_with_items("accel.step_frame sparse, traced", 1.0, "frames", || {
+        black_box(acc_traced.step_frame_probed(black_box(&frames[m % frames.len()]), &mut probe));
+        m += 1;
+        if probe.trace.len() >= 62 {
+            black_box(probe.take_trace());
+        }
+    });
+
+    // --- (3) frame consume + decide ------------------------------------
+    // the layer this PR moved out of the default path: 62 completed
+    // frames folded into a decision, lean accumulator vs per-decision
+    // trace materialization (what every request used to pay)
+    let window: Vec<FrameOut> = {
+        let mut chip = KwsChip::new(common::rng_quant(9), ChipConfig::design_point());
+        chip.reset();
+        let mut out = Vec::new();
+        chip.push_samples(&utts[0]).expect("utterance fits");
+        while let Some(f) = chip.poll_frame() {
+            out.push(f);
+        }
+        out
+    };
+    let n_frames = window.len() as f64;
+    let s_lean = b.bench_with_items("frame consume+decide, lean accumulator", n_frames, "frames", || {
+        let mut acc = DecisionAccum::new(4);
+        for f in &window {
+            acc.push(black_box(f));
+        }
+        black_box(acc.finish());
+    });
+    let s_traced = b.bench_with_items(
+        "frame consume+decide, traced (per-decision trace)",
+        n_frames,
+        "frames",
+        || {
+            let mut acc = DecisionAccum::new(4);
+            let mut probe = TraceProbe::default();
+            for f in &window {
+                probe.frame_completed(black_box(f));
+                acc.push(black_box(f));
+            }
+            black_box((acc.finish(), probe.take_trace()));
+        },
+    );
+
+    println!("\nprobe overhead (traced time / lean time, same work):");
+    println!("  utterance decode     : {:.2}x", s_utt_traced.mean_ns / s_utt_lean.mean_ns);
+    println!("  sparse accel frames  : {:.2}x", s_acc_traced.mean_ns / s_acc_lean.mean_ns);
+    println!(
+        "  frame consume+decide : {:.2}x  (lean path {:.2}x the traced frames/sec)",
+        s_traced.mean_ns / s_lean.mean_ns,
+        s_traced.mean_ns / s_lean.mean_ns
+    );
+    b.finish();
+}

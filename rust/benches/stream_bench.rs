@@ -29,7 +29,7 @@ fn main() {
     b.bench_with_items("chip.push_samples+poll (256-sample chunks)", 1.0, "utt", || {
         chip2.reset();
         for c in utt.chunks(256) {
-            chip2.push_samples(c);
+            chip2.push_samples(c).expect("chunk fits");
             while let Some(f) = chip2.poll_frame() {
                 black_box(f);
             }
@@ -56,7 +56,7 @@ fn main() {
             "s",
             || {
                 for c in audio.chunks(256) {
-                    black_box(pipe.push_audio(c));
+                    black_box(pipe.push_audio(c).expect("chunk fits"));
                 }
             },
         );
@@ -67,7 +67,7 @@ fn main() {
     );
     b.bench_with_items("pipeline 2 s speech, vad off", 2.0, "s", || {
         for c in speech.chunks(256) {
-            black_box(pipe.push_audio(c));
+            black_box(pipe.push_audio(c).expect("chunk fits"));
         }
     });
 

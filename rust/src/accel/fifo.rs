@@ -1,10 +1,14 @@
 //! Hardware FIFO models: the ΔFIFOs feeding the MAC lanes and the
 //! asynchronous FIFO crossing the CLK_IIR → CLK_RNN clock-domain boundary.
 //!
-//! Functionally a bounded ring buffer; the twin additionally tracks
-//! high-water mark and overflow events so experiments can size the FIFOs
-//! (the ablation bench sweeps depth) and the coordinator can model
-//! backpressure on the SPI link.
+//! Functionally a bounded ring buffer; the twin additionally tracks the
+//! high-water mark (and overflow events, for users that push blindly) so
+//! experiments can size the FIFOs and the coordinator can model
+//! backpressure on the SPI link. The ΔRNN accelerator drains one event
+//! before pushing into a full ring — the hardware's producer stall — so
+//! on that path saturation shows up as `high_water == capacity`, never
+//! as an overflow (the ablation bench sweeps depth against exactly that
+//! signal).
 
 /// Bounded single-clock FIFO (ΔFIFO).
 #[derive(Debug, Clone)]

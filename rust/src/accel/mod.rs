@@ -21,6 +21,7 @@ pub mod mac;
 pub mod nlu;
 
 use crate::energy::ChipActivity;
+use crate::probe::{ChipProbe, NoProbe};
 use crate::sram::WeightSram;
 use encoder::DeltaEvent;
 use gru::{QuantParams, StateBuffer, C, G, H, K, WORDS_PER_FC_ROW, WORDS_PER_LANE};
@@ -101,11 +102,13 @@ pub struct DeltaRnnAccel {
     pub sram: WeightSram,
     state: StateBuffer,
     nlu: Nlu,
-    /// ΔFIFO high-water / overflow stats (events are drained within the
-    /// frame, so depth matters only for burst analysis)
+    /// the ΔFIFO between encoder and MAC array: the *only* per-frame event
+    /// scratch, a fixed ring sized by `fifo_depth` (allocated once at
+    /// construction). The encoder enqueues fired events; when the ring is
+    /// full the MAC array drains one first (the hardware's producer
+    /// stall), so high-water genuinely reflects burst absorption.
     pub fifo: fifo::Fifo<DeltaEvent>,
     pub activity: ChipActivity,
-    events: Vec<DeltaEvent>,
 }
 
 impl DeltaRnnAccel {
@@ -124,7 +127,6 @@ impl DeltaRnnAccel {
             nlu: Nlu::new(),
             fifo: fifo::Fifo::new(fifo_depth),
             activity: ChipActivity::default(),
-            events: Vec::with_capacity(C + H),
         }
     }
 
@@ -148,14 +150,91 @@ impl DeltaRnnAccel {
     }
 
     /// Process one feature frame (Q8.8 activations per hardware channel
-    /// slot; inactive slots ignored).
+    /// slot; inactive slots ignored). Uninstrumented convenience wrapper
+    /// over [`step_frame_probed`](Self::step_frame_probed) with
+    /// [`NoProbe`] — the lean hot path.
+    #[inline]
     pub fn step_frame(&mut self, x: &[i16; C]) -> FrameResult {
+        self.step_frame_probed(x, &mut NoProbe)
+    }
+
+    /// One MAC broadcast: stream the fired lane's weight row out of the
+    /// SRAM and accumulate into the gate pre-activation memories. Returns
+    /// the MAC cycles the broadcast cost.
+    #[inline]
+    fn mac_event<P: ChipProbe>(&mut self, ev: DeltaEvent, is_x: bool, probe: &mut P) -> u64 {
+        let lane = ev.lane as usize;
+        let base = if is_x {
+            gru::BASE_X + lane * WORDS_PER_LANE
+        } else {
+            gru::BASE_H + lane * WORDS_PER_LANE
+        };
+        probe.sram_row_read(base, WORDS_PER_LANE);
+        // walk the 96-word row; two weights per word
+        let mut g = 0usize;
+        for w in 0..WORDS_PER_LANE {
+            let (lo, hi) = self.sram.read_weight_pair(base + w);
+            for wt in [lo, hi] {
+                let p = ev.delta * wt as i32;
+                let j = g % H;
+                match g / H {
+                    0 => self.state.m_r[j] = sat_acc(self.state.m_r[j], p),
+                    1 => self.state.m_u[j] = sat_acc(self.state.m_u[j], p),
+                    _ => {
+                        if is_x {
+                            self.state.m_xc[j] = sat_acc(self.state.m_xc[j], p);
+                        } else {
+                            self.state.m_hc[j] = sat_acc(self.state.m_hc[j], p);
+                        }
+                    }
+                }
+                g += 1;
+            }
+        }
+        (G as u64).div_ceil(self.config.mac_lanes as u64)
+    }
+
+    /// Enqueue one fired event into the ΔFIFO ring; when the ring is full
+    /// the MAC array drains the oldest event first (the hardware stalls
+    /// the encoder instead of dropping). Events are pushed and drained in
+    /// firing order, so the saturating accumulation order — and therefore
+    /// the arithmetic — is identical to an unbounded event list.
+    #[inline]
+    fn enqueue_event<P: ChipProbe>(
+        &mut self,
+        ev: DeltaEvent,
+        is_x: bool,
+        mac_cycles: &mut u64,
+        probe: &mut P,
+    ) {
+        if self.fifo.is_full() {
+            let oldest = self.fifo.pop().expect("full ring has a front");
+            *mac_cycles += self.mac_event(oldest, is_x, probe);
+        }
+        self.fifo.push(ev).expect("ring has space after drain");
+    }
+
+    /// Drain every event buffered in the ΔFIFO through the MAC array.
+    #[inline]
+    fn drain_events<P: ChipProbe>(&mut self, is_x: bool, mac_cycles: &mut u64, probe: &mut P) {
+        while let Some(ev) = self.fifo.pop() {
+            *mac_cycles += self.mac_event(ev, is_x, probe);
+        }
+    }
+
+    /// Process one feature frame with instrumentation hooks. The frame hot
+    /// path is allocation-free: fired events flow through the fixed ΔFIFO
+    /// ring (sized by `fifo_depth`), never through a growable buffer. With
+    /// [`NoProbe`] every hook monomorphizes to nothing; the probed and
+    /// unprobed paths are bit-exact (asserted by the probe-equivalence
+    /// suite).
+    pub fn step_frame_probed<P: ChipProbe>(&mut self, x: &[i16; C], probe: &mut P) -> FrameResult {
         let th_x = self.config.th_x();
         let th_h = self.config.th_h();
-        self.events.clear();
 
-        // --- ΔEncoder pass: x lanes (active only), then h lanes ---------
+        // --- ΔEncoder x pass (active lanes only) + interleaved MAC drain
         let mut enc_cycles = 0u64;
+        let mut mac_cycles = 0u64;
         let mut fired_x = 0usize;
         for i in 0..C {
             if !self.config.active_x[i] {
@@ -164,59 +243,27 @@ impl DeltaRnnAccel {
             enc_cycles += 1;
             let d = x[i] as i32 - self.state.x_ref[i] as i32;
             if d != 0 && d.unsigned_abs() >= th_x as u32 {
-                self.events.push(DeltaEvent { lane: i as u16, delta: d });
                 self.state.x_ref[i] = x[i];
                 fired_x += 1;
+                self.enqueue_event(DeltaEvent { lane: i as u16, delta: d }, true, &mut mac_cycles, probe);
             }
         }
-        let x_events = self.events.len();
+        // all x events broadcast before the first h event, as on-chip
+        self.drain_events(true, &mut mac_cycles, probe);
+
+        // --- ΔEncoder h pass ---------------------------------------------
         let mut fired_h = 0usize;
         for j in 0..H {
             enc_cycles += 1;
             let d = self.state.h[j] as i32 - self.state.h_ref[j] as i32;
             if d != 0 && d.unsigned_abs() >= th_h as u32 {
-                self.events.push(DeltaEvent { lane: j as u16, delta: d });
                 self.state.h_ref[j] = self.state.h[j];
                 fired_h += 1;
+                self.enqueue_event(DeltaEvent { lane: j as u16, delta: d }, false, &mut mac_cycles, probe);
             }
         }
-
-        // --- broadcast + MAC: stream weight rows from the SRAM ----------
-        let mut mac_cycles = 0u64;
-        for (idx, ev) in self.events.iter().enumerate() {
-            // ΔFIFO burst tracking (drained at MAC rate within the frame)
-            let _ = self.fifo.push(*ev);
-            let is_x = idx < x_events;
-            let lane = ev.lane as usize;
-            let base = if is_x {
-                gru::BASE_X + lane * WORDS_PER_LANE
-            } else {
-                gru::BASE_H + lane * WORDS_PER_LANE
-            };
-            // walk the 96-word row; two weights per word
-            let mut g = 0usize;
-            for w in 0..WORDS_PER_LANE {
-                let (lo, hi) = self.sram.read_weight_pair(base + w);
-                for wt in [lo, hi] {
-                    let p = ev.delta * wt as i32;
-                    let j = g % H;
-                    match g / H {
-                        0 => self.state.m_r[j] = sat_acc(self.state.m_r[j], p),
-                        1 => self.state.m_u[j] = sat_acc(self.state.m_u[j], p),
-                        _ => {
-                            if is_x {
-                                self.state.m_xc[j] = sat_acc(self.state.m_xc[j], p);
-                            } else {
-                                self.state.m_hc[j] = sat_acc(self.state.m_hc[j], p);
-                            }
-                        }
-                    }
-                    g += 1;
-                }
-            }
-            mac_cycles += (G as u64).div_ceil(self.config.mac_lanes as u64);
-            self.fifo.pop();
-        }
+        self.drain_events(false, &mut mac_cycles, probe);
+        probe.lanes_fired(fired_x, fired_h);
 
         // --- NLU + state assembly ---------------------------------------
         gru::assemble_state(&mut self.state, &self.params.b, &self.nlu, self.params.m_frac());
@@ -227,6 +274,7 @@ impl DeltaRnnAccel {
             gru::fc_readout(&self.state, &self.params.w_fc, &self.params.b_fc, self.params.w_frac);
         // count FC SRAM traffic: 64 rows x 6 words
         for j in 0..H {
+            probe.sram_row_read(gru::BASE_FC + j * WORDS_PER_FC_ROW, WORDS_PER_FC_ROW);
             for w in 0..WORDS_PER_FC_ROW {
                 let _ = self.sram.read_word(gru::BASE_FC + j * WORDS_PER_FC_ROW + w);
             }
@@ -234,7 +282,7 @@ impl DeltaRnnAccel {
         let fc_cycles = (H * K) as u64 / self.config.mac_lanes as u64;
 
         // --- accounting ----------------------------------------------------
-        let fired = self.events.len();
+        let fired = fired_x + fired_h;
         let cycles = enc_cycles + mac_cycles + nlu_cycles + fc_cycles + PIPELINE_FILL;
         self.activity.frames += 1;
         self.activity.mac_ops += fired as u64 * G as u64 + (H * K) as u64;
@@ -493,5 +541,54 @@ mod tests {
     fn area_anchored() {
         let a = area_mm2();
         assert!((a - 0.319).abs() / 0.319 < 0.05, "{a}");
+    }
+
+    #[test]
+    fn tiny_fifo_ring_is_bit_exact_with_deep_ring() {
+        // the event scratch is the fixed ΔFIFO ring: a depth-1 ring (drain
+        // after every fired lane) must produce the same logits, cycles and
+        // SRAM traffic as the default depth-16 ring, because events drain
+        // in firing order either way
+        let mut deep =
+            DeltaRnnAccel::new(rng_quant(11), AccelConfig::design_point(), SramKind::NearVth);
+        let mut cfg1 = AccelConfig::design_point();
+        cfg1.fifo_depth = 1;
+        let mut shallow = DeltaRnnAccel::new(rng_quant(11), cfg1, SramKind::NearVth);
+        for t in 0..30i32 {
+            let f = frame(
+                &(4..14).map(|i| (i, ((t * 31 + i as i32 * 7) % 200) as i16)).collect::<Vec<_>>(),
+            );
+            let a = deep.step_frame(&f);
+            let b = shallow.step_frame(&f);
+            assert_eq!(a.logits, b.logits, "t={t}");
+            assert_eq!(a.fired, b.fired, "t={t}");
+            assert_eq!(a.cycles, b.cycles, "t={t}");
+        }
+        assert_eq!(deep.sram.reads, shallow.sram.reads);
+        assert_eq!(deep.activity, shallow.activity);
+        // burst absorption is now visible: the deep ring buffers events,
+        // the shallow one stalls at depth 1
+        assert!(deep.fifo.high_water > 1, "deep ring never buffered a burst");
+        assert_eq!(shallow.fifo.high_water, 1);
+    }
+
+    #[test]
+    fn counting_probe_matches_activity_accounting() {
+        use crate::probe::CountingProbe;
+        let mut acc =
+            DeltaRnnAccel::new(rng_quant(12), AccelConfig::design_point(), SramKind::NearVth);
+        let mut probe = CountingProbe::default();
+        for t in 0..12i32 {
+            let f = frame(&[(5, (t * 40) as i16), (9, (t * 23) as i16)]);
+            acc.step_frame_probed(&f, &mut probe);
+        }
+        let a = &acc.activity;
+        assert_eq!(probe.fired_x, a.fired_x);
+        assert_eq!(probe.fired_h, a.fired_h);
+        // every fired lane streams one 96-word row; every frame adds the
+        // 64 FC rows of 6 words
+        assert_eq!(probe.sram_rows, a.fired_lanes + 12 * H as u64);
+        assert_eq!(probe.sram_words, a.fired_lanes * WORDS_PER_LANE as u64 + 12 * (H * WORDS_PER_FC_ROW) as u64);
+        assert_eq!(probe.sram_words, acc.sram.reads);
     }
 }

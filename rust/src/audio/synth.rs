@@ -206,6 +206,25 @@ pub fn add_noise(audio: &mut [f64], snr_db: f64, rng: &mut Pcg) {
     }
 }
 
+/// Deterministic 12-bit test tone: `amp · sin(2π f t)` quantised the same
+/// way the FEx tests always did (`⌊v · 2047⌋`). The shared scratch-corpus
+/// helper for filter/chip tests and benches — one definition instead of a
+/// private tone generator per test module.
+pub fn tone12(freq_hz: f64, amp: f64, n: usize) -> Vec<i64> {
+    (0..n)
+        .map(|i| {
+            let v = amp * (2.0 * std::f64::consts::PI * freq_hz * i as f64 / FS).sin();
+            (v * 2047.0) as i64
+        })
+        .collect()
+}
+
+/// `n` samples of digital silence (12-bit zeros) — the zero-fill corpus
+/// tests used to rebuild with `vec![0i64; …]` at every call site.
+pub fn silence12(n: usize) -> Vec<i64> {
+    vec![0i64; n]
+}
+
 /// Goertzel band energy (test helper + spectral sanity checks).
 pub fn band_energy(audio: &[f64], f: f64) -> f64 {
     let w = 2.0 * std::f64::consts::PI * f / FS;
@@ -297,5 +316,18 @@ mod tests {
     fn empty_phones_render_silence() {
         let audio = render(&[], 8000, &mut Pcg::new(0));
         assert!(audio.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tone12_is_bounded_deterministic_and_periodic() {
+        let t = tone12(1000.0, 0.5, 4000);
+        assert_eq!(t.len(), 4000);
+        assert!(t.iter().all(|&v| v.abs() <= 2047));
+        assert!(t.iter().any(|&v| v != 0), "tone rendered silent");
+        assert_eq!(t, tone12(1000.0, 0.5, 4000));
+        // 1 kHz at 8 kHz: period 8 samples
+        assert_eq!(t[0], t[8]);
+        assert_eq!(t[3], t[11]);
+        assert!(silence12(64).iter().all(|&v| v == 0));
     }
 }

@@ -27,14 +27,31 @@ use crate::accel::fifo::AsyncFifo;
 use crate::accel::gru::QuantParams;
 use crate::accel::{AccelConfig, DeltaRnnAccel};
 use crate::energy::{self, ChipActivity, PowerBreakdown, SramKind};
-use crate::error::Error;
+use crate::error::{ChipError, Error};
 use crate::fex::{FeatureFrame, Fex, FexConfig, MAX_CHANNELS};
+use crate::probe::{ChipProbe, DecisionTrace, NoProbe, TraceProbe};
 
 /// Largest Q8.8 Δ-threshold a [`ChipConfig`] accepts: 2.0, the full
 /// scale of the Q8.8 activations the ΔEncoder compares against (features
 /// enter as 12-bit values >>3, i.e. in `[0, 2)`). Thresholds beyond this
 /// can never fire a lane; negative thresholds would fire on no change.
 pub const DELTA_TH_MAX_Q8: i16 = 512;
+
+/// Capacity (in feature frames) of the staging buffer between the CDC
+/// FIFO and the ΔRNN — the software-side elastic buffer a host driving
+/// the SPI link would provide. 256 frames ≈ 4 s of audio: generous for
+/// any sane chunking, small enough that a producer that never polls is
+/// rejected with [`ChipError::FifoOverflow`] (bounded memory per chip)
+/// instead of growing without limit.
+pub const PENDING_FRAME_CAP: usize = 256;
+
+/// The safe audio-slice size for feeding unbounded input through the
+/// bounded staging buffer: half the buffer's capacity in samples. Feeding
+/// `chunks(SAFE_CHUNK_SAMPLES)` and draining frames between slices can
+/// never trip [`ChipError::FifoOverflow`], whatever the total length —
+/// the single definition both [`KwsChip::process_utterance`] and the
+/// coordinator's worker slicing rely on.
+pub const SAFE_CHUNK_SAMPLES: usize = (PENDING_FRAME_CAP / 2) * crate::FRAME_SAMPLES;
 
 /// Chip configuration: the two block configs + SRAM flavour.
 ///
@@ -217,8 +234,15 @@ impl ChipConfigBuilder {
     }
 }
 
-/// Per-utterance decision + diagnostics.
-#[derive(Debug, Clone)]
+/// Per-utterance decision: the *lean*, fixed-size result of the frame hot
+/// path. `Copy` — no heap, nothing here grows with the frame count.
+///
+/// The per-frame diagnostics the old `Decision` carried unconditionally
+/// (`frame_cycles`/`frame_fired`/`feat_trace`) moved to the opt-in
+/// [`DecisionTrace`], produced by
+/// [`process_utterance_traced`](KwsChip::process_utterance_traced) or any
+/// [`TraceProbe`]-probed drive of the chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Decision {
     pub class: usize,
     /// *summed* posterior logits over the counted frames. Ranking happens
@@ -232,57 +256,26 @@ pub struct Decision {
     /// [`has_evidence`](Self::has_evidence) to tell that apart from a
     /// real class-0 decision.
     pub counted_frames: u64,
-    /// per-frame ΔRNN cycles (Fig. 11 latency trace)
-    pub frame_cycles: Vec<u64>,
-    /// per-frame fired lanes
-    pub frame_fired: Vec<usize>,
-    /// feature frames seen (Fig. 11 feature trace), 12-bit values
-    pub feat_trace: Vec<[i64; MAX_CHANNELS]>,
+    /// total feature frames consumed for this decision (gated + ungated)
+    pub frames: u64,
+    /// frames consumed with the ΔRNN clock-gated (VAD idle path)
+    pub gated_frames: u64,
+    /// summed ΔRNN cycles over all frames (gated frames cost 0); the mean
+    /// chip computing latency is `total_cycles / frames / CLOCK_HZ`
+    pub total_cycles: u64,
 }
 
 impl Decision {
-    /// Posterior-accumulate a window of frame outputs into a decision (the
-    /// paper's decision logic: pooled logits after `warmup` frames,
-    /// argmax — ranked on the sums, which order identically to the means).
-    /// Clock-gated frames contribute their trace entries but neither
-    /// posterior nor warmup progress — warmup exists to skip the ΔRNN's
-    /// transient, which only advances on frames the accelerator ran.
+    /// Posterior-accumulate a window of already-collected frame outputs
+    /// (the paper's decision logic — see [`DecisionAccum`] for the
+    /// incremental form the hot path uses). For the per-frame traces over
+    /// the same window, pair with [`DecisionTrace::from_frames`].
     pub fn from_frames(frames: &[FrameOut], warmup: usize) -> Self {
-        let mut frame_cycles = Vec::with_capacity(frames.len());
-        let mut frame_fired = Vec::with_capacity(frames.len());
-        let mut feat_trace = Vec::with_capacity(frames.len());
-        let mut acc_logits = [0i64; crate::NUM_CLASSES];
-        let mut counted = 0u64;
-        let mut seen_ungated = 0usize;
+        let mut acc = DecisionAccum::new(warmup);
         for f in frames {
-            feat_trace.push(f.feat);
-            frame_cycles.push(f.cycles);
-            frame_fired.push(f.fired);
-            if !f.gated {
-                seen_ungated += 1;
-                if seen_ungated > warmup {
-                    for (a, l) in acc_logits.iter_mut().zip(f.logits.iter()) {
-                        *a += l;
-                    }
-                    counted += 1;
-                }
-            }
+            acc.push(f);
         }
-        // no evidence → the documented default class 0 (max_by_key's
-        // last-wins tie-break over all-zero logits would pick class 11)
-        let class = if counted == 0 {
-            0
-        } else {
-            (0..crate::NUM_CLASSES).max_by_key(|&k| acc_logits[k]).unwrap_or(0)
-        };
-        Decision {
-            class,
-            logits: acc_logits,
-            counted_frames: counted,
-            frame_cycles,
-            frame_fired,
-            feat_trace,
-        }
+        acc.finish()
     }
 
     /// True when at least one ungated post-warmup frame reached the
@@ -290,6 +283,75 @@ impl Decision {
     /// (all-gated or all-warmup input).
     pub fn has_evidence(&self) -> bool {
         self.counted_frames > 0
+    }
+}
+
+/// Incremental decision accumulator: the allocation-free core of the
+/// paper's decision logic. Push every consumed [`FrameOut`], then
+/// [`finish`](Self::finish). Clock-gated frames advance the frame clock
+/// and cycle totals but neither the posterior nor warmup progress —
+/// warmup exists to skip the ΔRNN's transient, which only advances on
+/// frames the accelerator actually ran.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionAccum {
+    warmup: usize,
+    seen_ungated: usize,
+    acc_logits: [i64; crate::NUM_CLASSES],
+    counted: u64,
+    frames: u64,
+    gated: u64,
+    cycles: u64,
+}
+
+impl DecisionAccum {
+    pub fn new(warmup: usize) -> Self {
+        Self {
+            warmup,
+            seen_ungated: 0,
+            acc_logits: [0i64; crate::NUM_CLASSES],
+            counted: 0,
+            frames: 0,
+            gated: 0,
+            cycles: 0,
+        }
+    }
+
+    /// Fold one consumed frame into the running posterior.
+    #[inline]
+    pub fn push(&mut self, f: &FrameOut) {
+        self.frames += 1;
+        self.cycles += f.cycles;
+        if f.gated {
+            self.gated += 1;
+        } else {
+            self.seen_ungated += 1;
+            if self.seen_ungated > self.warmup {
+                for (a, l) in self.acc_logits.iter_mut().zip(f.logits.iter()) {
+                    *a += l;
+                }
+                self.counted += 1;
+            }
+        }
+    }
+
+    /// Argmax over the pooled logits (ranked on the sums, which order
+    /// identically to the means).
+    pub fn finish(&self) -> Decision {
+        // no evidence → the documented default class 0 (max_by_key's
+        // last-wins tie-break over all-zero logits would pick class 11)
+        let class = if self.counted == 0 {
+            0
+        } else {
+            (0..crate::NUM_CLASSES).max_by_key(|&k| self.acc_logits[k]).unwrap_or(0)
+        };
+        Decision {
+            class,
+            logits: self.acc_logits,
+            counted_frames: self.counted,
+            frames: self.frames,
+            gated_frames: self.gated,
+            total_cycles: self.cycles,
+        }
     }
 }
 
@@ -363,7 +425,22 @@ impl KwsChip {
     /// FIFO run eagerly; completed feature frames are buffered until
     /// [`poll_frame`](Self::poll_frame) / [`skip_frame`](Self::skip_frame)
     /// consume them. Returns the number of frames that completed.
-    pub fn push_samples(&mut self, audio12: &[i64]) -> usize {
+    ///
+    /// The frame staging buffer is bounded by [`PENDING_FRAME_CAP`]: a
+    /// push that would complete more frames than the buffer can hold is
+    /// rejected *up front* with [`ChipError::FifoOverflow`] — no sample is
+    /// consumed, so the caller can drain frames and re-push the same
+    /// chunk. (This used to be an `expect` panic: a hostile stream chunk
+    /// could kill a coordinator worker thread.)
+    pub fn push_samples(&mut self, audio12: &[i64]) -> Result<usize, ChipError> {
+        let incoming = (self.fex.frame_fill() + audio12.len()) / crate::FRAME_SAMPLES;
+        if self.pending.len() + incoming > PENDING_FRAME_CAP {
+            return Err(ChipError::FifoOverflow {
+                pending: self.pending.len(),
+                incoming,
+                capacity: PENDING_FRAME_CAP,
+            });
+        }
         let mut added = 0usize;
         for &s in audio12 {
             // SPI front door: one 12-bit word per sample period
@@ -376,9 +453,10 @@ impl KwsChip {
                 }
                 // producer timestamp in RNN cycles (sample index scaled)
                 let t_prod = self.now + 2;
-                self.fifo
-                    .push(t_prod, q)
-                    .expect("CDC FIFO overflow: accelerator starved");
+                // the on-chip CDC FIFO never overflows here: entries sync
+                // within the same push (2-cycle delay) and drain straight
+                // into the (capacity-checked) staging buffer
+                self.fifo.push(t_prod, q).expect("CDC FIFO drained within the push");
                 // consumer side becomes visible after the 2-cycle sync delay
                 while let Some(f) = self.fifo.pop(t_prod + 2) {
                     self.pending.push_back(PendingFrame { feat: frame, q: f });
@@ -386,12 +464,20 @@ impl KwsChip {
                 }
             }
         }
-        added
+        Ok(added)
     }
 
     /// Feature frames buffered and ready to consume.
     pub fn pending_frames(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Heap footprint of the frame staging buffer — bounded by
+    /// [`PENDING_FRAME_CAP`] (plus `VecDeque` growth slack), so per-chip
+    /// memory is O(1) in the audio consumed. The soak harness folds this
+    /// into its per-session memory assertion.
+    pub fn pending_bytes(&self) -> usize {
+        self.pending.capacity() * std::mem::size_of::<PendingFrame>()
     }
 
     /// Peek at the next buffered feature frame without consuming it (the
@@ -400,11 +486,20 @@ impl KwsChip {
         self.pending.front().map(|p| &p.feat)
     }
 
-    /// Consume the next buffered frame through the ΔRNN. Returns `None`
-    /// when no complete frame is buffered.
+    /// Consume the next buffered frame through the ΔRNN (lean [`NoProbe`]
+    /// path). Returns `None` when no complete frame is buffered.
+    #[inline]
     pub fn poll_frame(&mut self) -> Option<FrameOut> {
+        self.poll_frame_probed(&mut NoProbe)
+    }
+
+    /// [`poll_frame`](Self::poll_frame) with instrumentation hooks: the
+    /// probe sees every SRAM row stream and fired-lane count inside the
+    /// accelerator, then the completed [`FrameOut`]. Bit-exact with the
+    /// unprobed path for any probe.
+    pub fn poll_frame_probed<P: ChipProbe>(&mut self, probe: &mut P) -> Option<FrameOut> {
         let pf = self.pending.pop_front()?;
-        let r = self.accel.step_frame(&pf.q);
+        let r = self.accel.step_frame_probed(&pf.q, probe);
         self.now += r.cycles;
         let out = FrameOut {
             index: self.frame_index,
@@ -415,6 +510,7 @@ impl KwsChip {
             gated: false,
         };
         self.frame_index += 1;
+        probe.frame_completed(&out);
         Some(out)
     }
 
@@ -422,7 +518,14 @@ impl KwsChip {
     /// no SRAM reads, no state mutation — only the energy model's frame
     /// clock advances (the VAD idle path; paper's sparsity story taken to
     /// its always-on limit). Returns `None` when nothing is buffered.
+    #[inline]
     pub fn skip_frame(&mut self) -> Option<FrameOut> {
+        self.skip_frame_probed(&mut NoProbe)
+    }
+
+    /// [`skip_frame`](Self::skip_frame) with instrumentation hooks
+    /// (`gate_skipped`, then `frame_completed` with `gated = true`).
+    pub fn skip_frame_probed<P: ChipProbe>(&mut self, probe: &mut P) -> Option<FrameOut> {
         let pf = self.pending.pop_front()?;
         self.accel.idle_frame();
         let out = FrameOut {
@@ -434,20 +537,48 @@ impl KwsChip {
             gated: true,
         };
         self.frame_index += 1;
+        probe.gate_skipped(out.index);
+        probe.frame_completed(&out);
         Some(out)
     }
 
-    /// Feed one 1 s utterance (12-bit samples) through the full pipeline.
-    /// Thin batch wrapper over [`push_samples`](Self::push_samples) /
+    /// Feed one 1 s utterance (12-bit samples) through the full pipeline
+    /// on the lean [`NoProbe`] path: allocation-free per frame, fixed-size
+    /// [`Decision`] out. Thin batch wrapper over
+    /// [`push_samples`](Self::push_samples) /
     /// [`poll_frame`](Self::poll_frame) — bit-exact with chunked streaming.
     pub fn process_utterance(&mut self, audio12: &[i64]) -> Decision {
+        self.process_utterance_probed(audio12, &mut NoProbe)
+    }
+
+    /// [`process_utterance`](Self::process_utterance) plus the per-frame
+    /// diagnostics ([`DecisionTrace`]) the lean decision no longer
+    /// carries: the Fig. 11 cycle/fired/feature traces, reconstructed
+    /// bit-for-bit by a [`TraceProbe`]. Pay the trace cost only here.
+    pub fn process_utterance_traced(&mut self, audio12: &[i64]) -> (Decision, DecisionTrace) {
+        let mut probe = TraceProbe::default();
+        let d = self.process_utterance_probed(audio12, &mut probe);
+        (d, probe.take_trace())
+    }
+
+    /// Run one utterance with an arbitrary probe. Audio is fed in slices
+    /// that stay within [`PENDING_FRAME_CAP`], draining frames between
+    /// slices, so inputs of any length (hours of audio) cannot overflow
+    /// the frame staging buffer.
+    pub fn process_utterance_probed<P: ChipProbe>(
+        &mut self,
+        audio12: &[i64],
+        probe: &mut P,
+    ) -> Decision {
         self.reset();
-        self.push_samples(audio12);
-        let mut frames = Vec::with_capacity(self.pending.len());
-        while let Some(f) = self.poll_frame() {
-            frames.push(f);
+        let mut acc = DecisionAccum::new(self.config.warmup);
+        for piece in audio12.chunks(SAFE_CHUNK_SAMPLES) {
+            self.push_samples(piece).expect("SAFE_CHUNK_SAMPLES fits the frame buffer");
+            while let Some(f) = self.poll_frame_probed(probe) {
+                acc.push(&f);
+            }
         }
-        Decision::from_frames(&frames, self.config.warmup)
+        acc.finish()
     }
 
     /// Aggregated activity (accelerator counters + FEx visits).
@@ -515,9 +646,12 @@ mod tests {
     #[test]
     fn utterance_produces_62_frames() {
         let mut chip = KwsChip::new(rng_quant(1), ChipConfig::design_point());
-        let d = chip.process_utterance(&one_utterance(5));
-        assert_eq!(d.frame_cycles.len(), 62);
-        assert_eq!(d.feat_trace.len(), 62);
+        let (d, trace) = chip.process_utterance_traced(&one_utterance(5));
+        assert_eq!(d.frames, 62);
+        assert_eq!(d.gated_frames, 0);
+        assert_eq!(trace.frame_cycles.len(), 62);
+        assert_eq!(trace.feat_trace.len(), 62);
+        assert_eq!(trace.frame_cycles.iter().sum::<u64>(), d.total_cycles);
         assert!(d.class < crate::NUM_CLASSES);
         assert!(d.has_evidence());
         assert_eq!(d.counted_frames, (62 - chip.config.warmup) as u64);
@@ -582,11 +716,10 @@ mod tests {
         let mut c1 = KwsChip::new(rng_quant(2), ChipConfig::design_point());
         let mut c2 = KwsChip::new(rng_quant(2), ChipConfig::design_point());
         let utt = one_utterance(9);
-        let d1 = c1.process_utterance(&utt);
-        let d2 = c2.process_utterance(&utt);
-        assert_eq!(d1.class, d2.class);
-        assert_eq!(d1.logits, d2.logits);
-        assert_eq!(d1.frame_cycles, d2.frame_cycles);
+        let (d1, t1) = c1.process_utterance_traced(&utt);
+        let (d2, t2) = c2.process_utterance_traced(&utt);
+        assert_eq!(d1, d2);
+        assert_eq!(t1, t2);
     }
 
     #[test]
@@ -613,9 +746,9 @@ mod tests {
         // paper Fig. 11: ~40% latency reduction on relatively silent frames
         let mut chip =
             KwsChip::new(rng_quant(4), ChipConfig::design_point().with_delta_th(26));
-        let d = chip.process_utterance(&one_utterance(11));
-        let min = *d.frame_cycles.iter().min().unwrap();
-        let max = *d.frame_cycles.iter().max().unwrap();
+        let (_, trace) = chip.process_utterance_traced(&one_utterance(11));
+        let min = *trace.frame_cycles.iter().min().unwrap();
+        let max = *trace.frame_cycles.iter().max().unwrap();
         assert!(max as f64 >= 1.3 * min as f64, "no latency dynamic: {min}..{max}");
     }
 
@@ -675,31 +808,29 @@ mod tests {
     fn chunked_streaming_is_bit_exact_with_batch() {
         let utt = one_utterance(21);
         let mut batch = KwsChip::new(rng_quant(8), ChipConfig::design_point());
-        let want = batch.process_utterance(&utt);
+        let (want, want_trace) = batch.process_utterance_traced(&utt);
         // feed the same utterance in awkward chunk sizes (prime, tiny, big)
         for chunk in [1usize, 7, 127, 128, 129, 1000] {
             let mut stream = KwsChip::new(rng_quant(8), ChipConfig::design_point());
             stream.reset();
-            let mut frames = Vec::new();
+            let mut probe = TraceProbe::default();
+            let mut acc = DecisionAccum::new(stream.config.warmup);
             for c in utt.chunks(chunk) {
-                stream.push_samples(c);
-                while let Some(f) = stream.poll_frame() {
-                    frames.push(f);
+                stream.push_samples(c).expect("chunk fits the frame buffer");
+                while let Some(f) = stream.poll_frame_probed(&mut probe) {
+                    acc.push(&f);
                 }
             }
-            let got = Decision::from_frames(&frames, stream.config.warmup);
-            assert_eq!(got.class, want.class, "chunk {chunk}");
-            assert_eq!(got.logits, want.logits, "chunk {chunk}");
-            assert_eq!(got.frame_cycles, want.frame_cycles, "chunk {chunk}");
-            assert_eq!(got.frame_fired, want.frame_fired, "chunk {chunk}");
-            assert_eq!(got.feat_trace, want.feat_trace, "chunk {chunk}");
+            let got = acc.finish();
+            assert_eq!(got, want, "chunk {chunk}");
+            assert_eq!(probe.trace, want_trace, "chunk {chunk}: trace diverged");
         }
     }
 
     #[test]
     fn skip_frame_gates_the_rnn_and_counts_idle() {
         let mut chip = KwsChip::new(rng_quant(9), ChipConfig::design_point());
-        chip.push_samples(&one_utterance(13));
+        chip.push_samples(&one_utterance(13)).expect("utterance fits");
         assert_eq!(chip.pending_frames(), 62);
         // run a few frames to build non-trivial hidden state
         for _ in 0..5 {
@@ -725,20 +856,54 @@ mod tests {
         // the power-on decision
         let utt = one_utterance(17);
         let mut chip = KwsChip::new(rng_quant(10), ChipConfig::design_point());
-        let d1 = chip.process_utterance(&utt);
+        let (d1, t1) = chip.process_utterance_traced(&utt);
         // second pass without reset: hidden state warm-started
-        chip.push_samples(&utt);
-        let mut frames = Vec::new();
-        while let Some(f) = chip.poll_frame() {
-            frames.push(f);
-        }
-        let warm = Decision::from_frames(&frames, chip.config.warmup);
+        chip.push_samples(&utt).expect("utterance fits");
+        let mut probe = TraceProbe::default();
+        while chip.poll_frame_probed(&mut probe).is_some() {}
         // the traces must differ somewhere (warm ΔRNN references fire less)
-        assert_ne!(d1.frame_fired, warm.frame_fired, "state did not persist");
+        assert_ne!(t1.frame_fired, probe.trace.frame_fired, "state did not persist");
         // reset: bit-exact repeat of the cold decision
-        let d2 = chip.process_utterance(&utt);
+        let (d2, t2) = chip.process_utterance_traced(&utt);
         assert_eq!(d1.logits, d2.logits);
-        assert_eq!(d1.frame_cycles, d2.frame_cycles);
+        assert_eq!(t1.frame_cycles, t2.frame_cycles);
+    }
+
+    #[test]
+    fn flooding_without_polling_is_a_typed_error_not_a_panic() {
+        // a producer that never polls used to grow the staging buffer
+        // without bound (and the CDC expect could in principle kill the
+        // thread); now the push is rejected up front, nothing is consumed,
+        // and draining frames makes the same chunk acceptable again
+        let mut chip = KwsChip::new(rng_quant(14), ChipConfig::design_point());
+        let second = vec![0i64; 8000]; // 62 frames per push
+        let mut pushed = 0usize;
+        let err = loop {
+            match chip.push_samples(&second) {
+                Ok(n) => pushed += n,
+                Err(e) => break e,
+            }
+            assert!(pushed <= PENDING_FRAME_CAP, "buffer exceeded its cap");
+        };
+        let ChipError::FifoOverflow { pending, incoming, capacity } = err;
+        assert_eq!(pending, chip.pending_frames());
+        assert_eq!(incoming, 62);
+        assert_eq!(capacity, PENDING_FRAME_CAP);
+        assert!(pending + incoming > PENDING_FRAME_CAP);
+        // nothing was consumed by the rejected push: the frame count is
+        // exactly what the accepted pushes produced
+        assert_eq!(chip.pending_frames(), pushed);
+        // drain some frames -> the same chunk is accepted again
+        for _ in 0..62 {
+            chip.skip_frame().unwrap();
+        }
+        chip.push_samples(&second).expect("drained buffer accepts the chunk again");
+        // memory stays bounded by the cap
+        assert!(
+            chip.pending_bytes() <= 2 * PENDING_FRAME_CAP * std::mem::size_of::<PendingFrame>(),
+            "staging buffer memory unbounded: {} bytes",
+            chip.pending_bytes()
+        );
     }
 
     #[test]

@@ -63,11 +63,18 @@ use crate::accel::gru::QuantParams;
 use crate::chip::{ChipConfig, ChipReport, KwsChip};
 use crate::energy::ChipActivity;
 use crate::error::{StreamPushError, SubmitError};
+use crate::probe::DecisionTrace;
 use crate::stream::detector::DetectionEvent;
 use crate::stream::{StreamConfig, StreamPipeline};
 use crate::util::hist::LogHistogram;
 use telemetry::WorkerShard;
 use ticket::Mailbox;
+
+/// Bound on each stream session's event channel (detections + the final
+/// `Closed` marker). A client that never drains its receiver sheds the
+/// newest detections (counted in [`Stats::stream_events_dropped`]) instead
+/// of growing worker-side memory without limit.
+pub const STREAM_EVENT_CAP: usize = 256;
 
 pub use builder::CoordinatorBuilder;
 pub use ticket::{Batch, Ticket};
@@ -81,15 +88,31 @@ pub struct Request {
     pub audio12: Vec<i64>,
     /// optional ground truth for online accuracy accounting
     pub label: Option<usize>,
+    /// opt this submission into the [`TraceProbe`](crate::probe::TraceProbe)
+    /// instrumentation path: the worker reconstructs the full per-frame
+    /// diagnostics (Fig. 11 cycle/fired/feature traces) and returns them
+    /// in [`Response::trace`]. Default `false` — the worker runs the lean
+    /// [`NoProbe`](crate::probe::NoProbe) hot path and the response stays
+    /// fixed-size.
+    pub trace: bool,
 }
 
-/// Inference result.
+/// Inference result. Lean by default: summed logits, class, counted
+/// frames and cycle totals — fixed-size, nothing per-frame. Per-frame
+/// traces ride along in [`trace`](Self::trace) only when the request
+/// opted in with [`Request::trace`].
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub stream: u64,
     pub class: usize,
     pub correct: Option<bool>,
+    /// summed posterior logits over the counted frames (argmax = `class`)
+    pub logits: [i64; crate::NUM_CLASSES],
+    /// ungated post-warmup frames behind the posterior (0 = no evidence)
+    pub counted_frames: u64,
+    /// total ΔRNN cycles this utterance cost on the chip twin
+    pub chip_cycles: u64,
     /// simulated chip computing latency for this utterance (ms)
     pub chip_latency_ms: f64,
     /// wall-clock service time (queue + simulation)
@@ -99,6 +122,8 @@ pub struct Response {
     /// same worker completed in `worker_seq` order (lets callers verify
     /// pinned-stream FIFO ordering without a global collection point)
     pub worker_seq: u64,
+    /// per-frame diagnostics, present only for `Request { trace: true, … }`
+    pub trace: Option<DecisionTrace>,
 }
 
 /// Per-worker serving counters (the per-lane view of routing health:
@@ -145,6 +170,13 @@ pub struct Stats {
     pub chunk_latency: LogHistogram,
     /// merged chip activity across workers
     pub activity: ChipActivity,
+    /// stream events shed on full session event channels (clients that
+    /// never drain their receivers; see [`STREAM_EVENT_CAP`])
+    pub stream_events_dropped: u64,
+    /// gauge: live per-session pipeline state across all workers, bytes
+    /// (bounded by construction — frame staging buffer + detector window
+    /// per session; 0 once every session is closed)
+    pub session_bytes: u64,
     /// per-worker routing/serving counters (indexed by worker; folded
     /// from lane atomics + telemetry shards by [`Coordinator::stats`])
     pub per_worker: Vec<LaneStats>,
@@ -220,7 +252,7 @@ enum Job {
     StreamOpen {
         session: u64,
         config: Option<StreamConfig>,
-        events: Sender<StreamEvent>,
+        events: SyncSender<StreamEvent>,
         alive: Arc<AtomicBool>,
     },
     /// an audio chunk for an open session
@@ -760,7 +792,8 @@ impl Coordinator {
     }
 
     fn open_stream_inner(&self, stream: u64, config: Option<StreamConfig>) -> StreamSession {
-        let (tx, rx) = std::sync::mpsc::channel();
+        // bounded: a client that never drains cannot grow worker memory
+        let (tx, rx) = sync_channel(STREAM_EVENT_CAP);
         let router = self.router.as_ref().expect("router alive");
         let session = router.next_session.fetch_add(1, Ordering::Relaxed);
         let alive = Arc::new(AtomicBool::new(true));
@@ -823,6 +856,8 @@ impl Coordinator {
             s.latency.merge(&shard.latency.snapshot());
             s.chunk_latency.merge(&shard.chunk_latency.snapshot());
             s.activity.merge(&shard.activity.snapshot());
+            s.stream_events_dropped += shard.events_dropped.load(Ordering::Relaxed);
+            s.session_bytes += shard.session_bytes.load(Ordering::Relaxed);
             let sp = lane.spilled_in.load(Ordering::Relaxed);
             spilled += sp;
             s.per_worker.push(LaneStats {
@@ -908,21 +943,49 @@ impl Drop for Coordinator {
 /// Worker-side state of one open streaming session.
 struct WorkerSession {
     pipeline: StreamPipeline,
-    events: Sender<StreamEvent>,
+    events: SyncSender<StreamEvent>,
     /// cleared by the client handle on close/drop
     alive: Arc<AtomicBool>,
 }
 
 impl WorkerSession {
+    /// Deliver one event without ever blocking the worker: a full channel
+    /// sheds the event (counted), a disconnected one is a vanished client.
+    fn deliver(&self, ev: StreamEvent, shard: &WorkerShard) {
+        if let Err(TrySendError::Full(_)) = self.events.try_send(ev) {
+            shard.events_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Flush final telemetry into the worker's shard and notify the client.
+    /// The `Closed` marker is delivered with a short bounded retry: an
+    /// explicit [`StreamSession::close`] is concurrently draining the
+    /// channel, so space frees almost immediately; a dead or wedged client
+    /// costs the worker at most the retry budget, never a hang.
     fn finish(mut self, shard: &WorkerShard) {
         shard.activity.add(&self.pipeline.take_activity_delta());
         let activity = self.pipeline.chip.activity();
-        let _ = self.events.send(StreamEvent::Closed {
+        let mut ev = StreamEvent::Closed {
             frames: activity.frames,
             gated_frames: activity.gated_frames,
-        });
+        };
+        for _ in 0..50 {
+            ev = match self.events.try_send(ev) {
+                Ok(()) => return,
+                Err(TrySendError::Disconnected(_)) => return,
+                Err(TrySendError::Full(e)) => e,
+            };
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        shard.events_dropped.fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// Refresh the worker's live-session memory gauge (bounded by
+/// construction: each pipeline's state is O(1) in the audio consumed).
+fn publish_session_bytes(shard: &WorkerShard, sessions: &HashMap<u64, WorkerSession>) {
+    let bytes: usize = sessions.values().map(|s| s.pipeline.state_bytes()).sum();
+    shard.session_bytes.store(bytes as u64, Ordering::Relaxed);
 }
 
 /// Publish a fresh cumulative chip report into the shard's pull slot
@@ -976,9 +1039,17 @@ fn worker_loop(
         depth.fetch_sub(1, Ordering::Relaxed);
         match job {
             Job::Utterance { req, enqueued, reply } => {
-                let decision = chip.process_utterance(&req.audio12);
-                let lat_ms = decision.frame_cycles.iter().sum::<u64>() as f64
-                    / decision.frame_cycles.len().max(1) as f64
+                // default: the lean NoProbe hot path — no per-frame
+                // allocation, fixed-size Decision. A request that opted in
+                // (`trace: true`) pays for the TraceProbe reconstruction.
+                let (decision, trace) = if req.trace {
+                    let (d, t) = chip.process_utterance_traced(&req.audio12);
+                    (d, Some(t))
+                } else {
+                    (chip.process_utterance(&req.audio12), None)
+                };
+                let lat_ms = decision.total_cycles as f64
+                    / decision.frames.max(1) as f64
                     / crate::energy::calib::CLOCK_HZ
                     * 1e3;
                 let correct = req.label.map(|l| l == decision.class);
@@ -987,10 +1058,14 @@ fn worker_loop(
                     stream: req.stream,
                     class: decision.class,
                     correct,
+                    logits: decision.logits,
+                    counted_frames: decision.counted_frames,
+                    chip_cycles: decision.total_cycles,
                     chip_latency_ms: lat_ms,
                     service: enqueued.elapsed(),
                     worker: index,
                     worker_seq,
+                    trace,
                 };
                 worker_seq += 1;
                 // hot path: relaxed adds on this worker's own shard — no
@@ -1023,22 +1098,51 @@ fn worker_loop(
                 {
                     old.finish(&shard);
                 }
+                publish_session_bytes(&shard, &sessions);
             }
             Job::StreamData { session, chunk, enqueued } => {
                 // chunks for unknown/closed sessions are dropped (a late
                 // push after close is not an error)
                 if let Some(sess) = sessions.get_mut(&session) {
-                    let detections = sess.pipeline.push_audio(&chunk);
+                    // slice hostile oversized chunks so the pipeline's
+                    // bounded frame buffer can never reject (and the old
+                    // panic path can never kill this worker thread)
+                    let bytes_before = sess.pipeline.state_bytes();
+                    let mut detections = Vec::new();
+                    for piece in chunk.chunks(crate::chip::SAFE_CHUNK_SAMPLES) {
+                        detections.extend(
+                            sess.pipeline
+                                .push_audio(piece)
+                                .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
+                        );
+                    }
                     shard.stream_chunks.fetch_add(1, Ordering::Relaxed);
                     shard.chunk_latency.record(enqueued.elapsed().as_micros() as u64);
                     shard.activity.add(&sess.pipeline.take_activity_delta());
+                    // hot path: update the memory gauge incrementally for
+                    // just this session (O(1), not O(live sessions) — the
+                    // full re-sum runs only on open/close/GC)
+                    let bytes_after = sess.pipeline.state_bytes();
+                    if bytes_after >= bytes_before {
+                        shard
+                            .session_bytes
+                            .fetch_add((bytes_after - bytes_before) as u64, Ordering::Relaxed);
+                    } else {
+                        shard
+                            .session_bytes
+                            .fetch_sub((bytes_before - bytes_after) as u64, Ordering::Relaxed);
+                    }
                     for d in detections {
-                        let _ = sess.events.send(StreamEvent::Detection(d));
+                        sess.deliver(StreamEvent::Detection(d), &shard);
                     }
                 }
             }
             Job::StreamClose { session } => {
                 if let Some(sess) = sessions.remove(&session) {
+                    // gauge first: when the client's close() returns (it
+                    // waits on the Closed marker finish() delivers), the
+                    // session-memory gauge is already consistent
+                    publish_session_bytes(&shard, &sessions);
                     sess.finish(&shard);
                 }
             }
@@ -1065,10 +1169,13 @@ fn worker_loop(
                 .filter(|(_, s)| !s.alive.load(Ordering::Relaxed))
                 .map(|(&k, _)| k)
                 .collect();
-            for k in dead {
-                if let Some(sess) = sessions.remove(&k) {
-                    sess.finish(&shard);
+            if !dead.is_empty() {
+                for k in dead {
+                    if let Some(sess) = sessions.remove(&k) {
+                        sess.finish(&shard);
+                    }
                 }
+                publish_session_bytes(&shard, &sessions);
             }
         }
     }
@@ -1076,6 +1183,7 @@ fn worker_loop(
     for (_, sess) in sessions.drain() {
         sess.finish(&shard);
     }
+    publish_session_bytes(&shard, &sessions);
     publish_report(&shard, &chip);
 }
 
@@ -1108,7 +1216,13 @@ mod tests {
         let mut rng = Pcg::new(seed);
         let label = (seed % 12) as usize;
         let audio = crate::audio::synth_utterance(label, &mut rng);
-        Request { id: 0, stream, audio12: crate::audio::quantize_12b(&audio), label: Some(label) }
+        Request {
+            id: 0,
+            stream,
+            audio12: crate::audio::quantize_12b(&audio),
+            label: Some(label),
+            trace: false,
+        }
     }
 
     /// Wait a set of tickets (bounded), asserting each resolves to its
@@ -1374,6 +1488,88 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         };
         assert!(resp.class < crate::NUM_CLASSES);
+    }
+
+    #[test]
+    fn default_response_is_lean_and_trace_flag_opts_in() {
+        let coord = pool(20, 2, 8);
+        // default: no per-frame payload rides through the mailbox
+        let lean = coord
+            .submit(request(0, 1))
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .expect("response");
+        assert!(lean.trace.is_none(), "untraced request grew a trace");
+        assert!(lean.counted_frames > 0);
+        assert!(lean.chip_cycles > 0);
+        assert_eq!(
+            (0..crate::NUM_CLASSES).max_by_key(|&k| lean.logits[k]).unwrap(),
+            lean.class,
+            "summed logits must rank to the reported class"
+        );
+        // trace: true — the worker reconstructs the Fig. 11 traces
+        let mut req = request(0, 1);
+        req.trace = true;
+        let traced = coord
+            .submit(req)
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .expect("response");
+        let trace = traced.trace.expect("traced request lost its trace");
+        assert_eq!(trace.frame_cycles.len(), 62);
+        assert_eq!(trace.frame_cycles.iter().sum::<u64>(), traced.chip_cycles);
+        // identical audio on the same pinned worker chip: the lean and
+        // traced submissions agree on everything but the trace
+        assert_eq!(traced.class, lean.class);
+        assert_eq!(traced.logits, lean.logits);
+        assert_eq!(traced.counted_frames, lean.counted_frames);
+    }
+
+    #[test]
+    fn flooded_session_backpressures_and_worker_survives() {
+        // ISSUE-5 regression: flooding a session without the worker
+        // polling used to be able to kill the worker thread through the
+        // CDC-FIFO expect. Now the lane applies typed Backpressure, a
+        // hostile oversized chunk is sliced worker-side, and the worker
+        // stays alive for subsequent work.
+        let coord = pool(21, 1, 2);
+        let sess = coord.open_stream(0);
+        coord.set_stalled(0, true);
+        // flood the pinned lane without anything draining
+        let mut backpressured = 0;
+        for _ in 0..64 {
+            match sess.push(vec![0i64; 256]) {
+                Ok(()) => {}
+                Err(StreamPushError::Backpressure(chunk)) => {
+                    assert_eq!(chunk.len(), 256, "chunk not handed back intact");
+                    backpressured += 1;
+                }
+                Err(e) => panic!("flooding a live pool must be Backpressure, not {e}"),
+            }
+        }
+        assert!(backpressured > 0, "flood never hit backpressure");
+        coord.set_stalled(0, false);
+        // a hostile chunk bigger than the chip's whole frame buffer: the
+        // worker slices it instead of dying
+        let monster = vec![0i64; (crate::chip::PENDING_FRAME_CAP + 8) * crate::FRAME_SAMPLES];
+        let monster_frames = (monster.len() / crate::FRAME_SAMPLES) as u64;
+        sess.push_blocking(monster).expect("pool alive");
+        let events = sess.close();
+        let closed = events.iter().find_map(|e| match e {
+            StreamEvent::Closed { frames, .. } => Some(*frames),
+            _ => None,
+        });
+        let frames = closed.expect("worker died: no Closed marker");
+        assert!(frames >= monster_frames, "worker lost the sliced chunk: {frames}");
+        // the worker thread is still serving requests
+        let r = coord
+            .submit(request(0, 2))
+            .expect("worker alive after flood")
+            .wait_timeout(Duration::from_secs(60))
+            .expect("response after flood");
+        assert!(r.class < crate::NUM_CLASSES);
+        // all live sessions closed: the session-memory gauge is back to 0
+        assert_eq!(coord.stats().session_bytes, 0);
     }
 
     #[test]

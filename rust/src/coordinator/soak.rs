@@ -114,6 +114,11 @@ pub struct SoakReport {
     /// telemetry snapshot footprint at ~10% of the run and at the end
     pub telemetry_bytes_early: usize,
     pub telemetry_bytes_final: usize,
+    /// live per-session pipeline memory observed at the ~10% checkpoint
+    /// (bounded: frame staging buffer + detector window per session)
+    pub session_bytes_early: u64,
+    /// per-session memory after every session closed — must be 0
+    pub session_bytes_final: u64,
     pub producer_retries: u64,
     pub final_stats: Stats,
 }
@@ -196,6 +201,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
 
     let mut exact_us: Vec<u64> = Vec::with_capacity(cfg.utterances as usize);
     let mut telemetry_bytes_early = 0usize;
+    let mut session_bytes_early = 0u64;
     let checkpoint = (cfg.utterances / 10).max(1);
     // stamped once the producers have claimed their last ticket (stream
     // teardown after the final utterance must not dilute the throughput
@@ -248,6 +254,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
                         stream: (p * 3 + i) % streams_span,
                         audio12: audio12.clone(),
                         label: Some(*label),
+                        trace: false,
                     };
                     loop {
                         match client.submit(req) {
@@ -308,6 +315,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
             let snap = coord.stats();
             if snap.completed >= checkpoint {
                 telemetry_bytes_early = snap.telemetry_bytes();
+                session_bytes_early = snap.session_bytes;
                 break;
             }
             assert!(
@@ -337,6 +345,19 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
         telemetry_bytes_early, telemetry_bytes_final,
         "telemetry memory grew with request count"
     );
+    // per-session memory is bounded by construction (frame staging buffer
+    // + detector window), never by how much audio flowed through; once
+    // every session closed the gauge must be back to zero
+    assert!(
+        session_bytes_early <= cfg.streams as u64 * MAX_SESSION_STATE_BYTES,
+        "per-session memory grew past its bound: {session_bytes_early} bytes for {} streams",
+        cfg.streams
+    );
+    let session_bytes_final = final_stats.session_bytes;
+    assert_eq!(
+        session_bytes_final, 0,
+        "closed sessions left state on the workers"
+    );
 
     let simulated_audio_s = (cfg.utterances * cfg.utterance_samples as u64
         + cfg.streams as u64 * cfg.chunks_per_stream * cfg.chunk_samples as u64)
@@ -354,10 +375,17 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
         exact_p99_us: percentile(&exact_us, 0.99),
         telemetry_bytes_early,
         telemetry_bytes_final,
+        session_bytes_early,
+        session_bytes_final,
         producer_retries: retries.load(Ordering::Relaxed),
         final_stats,
     }
 }
+
+/// Generous per-session memory ceiling the soak asserts against: the
+/// frame staging buffer ([`crate::chip::PENDING_FRAME_CAP`] frames, with
+/// `VecDeque` growth slack) plus the detector window, rounded way up.
+pub const MAX_SESSION_STATE_BYTES: u64 = 256 * 1024;
 
 #[cfg(test)]
 mod tests {
@@ -388,6 +416,8 @@ mod tests {
         assert!(report.decisions_per_sec > 0.0);
         assert!(report.percentile_rel_err() <= 0.05, "err {}", report.percentile_rel_err());
         assert_eq!(report.telemetry_bytes_early, report.telemetry_bytes_final);
+        assert!(report.session_bytes_early <= MAX_SESSION_STATE_BYTES);
+        assert_eq!(report.session_bytes_final, 0);
         assert!(report.simulated_audio_s > 15.0);
     }
 }

@@ -99,6 +99,15 @@ pub struct WorkerShard {
     pub correct: AtomicU64,
     /// streaming audio chunks processed by this worker's sessions
     pub stream_chunks: AtomicU64,
+    /// stream events dropped because a session's bounded event channel
+    /// was full (a client that never drains its receiver; detections are
+    /// shed newest-first rather than growing worker-side memory)
+    pub events_dropped: AtomicU64,
+    /// gauge: summed [`StreamPipeline::state_bytes`](crate::stream::StreamPipeline::state_bytes)
+    /// over this worker's live sessions, refreshed after every session
+    /// job — the soak harness asserts it stays bounded (and returns to 0
+    /// once sessions close)
+    pub session_bytes: AtomicU64,
     /// wall-clock utterance service time (queue + simulation), µs
     pub latency: AtomicLogHistogram,
     /// wall-clock stream-chunk service time (queue + simulation), µs

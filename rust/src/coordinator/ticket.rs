@@ -328,10 +328,14 @@ mod tests {
             stream: 0,
             class: 0,
             correct: None,
+            logits: [0i64; crate::NUM_CLASSES],
+            counted_frames: 0,
+            chip_cycles: 0,
             chip_latency_ms: 0.0,
             service: Duration::ZERO,
             worker: 0,
             worker_seq: 0,
+            trace: None,
         }
     }
 

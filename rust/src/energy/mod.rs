@@ -14,7 +14,7 @@
 pub mod calib;
 
 /// Aggregated activity of one simulation run (any number of frames).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ChipActivity {
     /// frames processed (including clock-gated ones — the frame clock is
     /// wall time for the power model)

@@ -12,6 +12,11 @@
 //! * [`WaitError`] — why waiting on a completion ticket ended without a
 //!   response (timeouts hand the [`Ticket`](crate::coordinator::Ticket)
 //!   back so the wait can resume);
+//! * [`ChipError`] — why the chip twin itself refused input (CDC FIFO
+//!   backpressure: the caller stopped polling frames). Nothing is
+//!   consumed on rejection, so the same samples can be re-pushed after
+//!   draining; the stream layer surfaces this as
+//!   [`StreamPushError::Backpressure`].
 //! * [`Error`] — the crate-wide sum of the above plus builder validation
 //!   failures ([`Error::InvalidConfig`]).
 //!
@@ -42,6 +47,8 @@ pub enum Error {
     StreamPush(StreamPushError),
     /// Waiting on a completion ticket ended without a response.
     Wait(WaitError),
+    /// The chip twin refused input (see [`ChipError`]).
+    Chip(ChipError),
 }
 
 impl Error {
@@ -60,6 +67,7 @@ impl fmt::Display for Error {
             Error::Submit(e) => write!(f, "{e}"),
             Error::StreamPush(e) => write!(f, "{e}"),
             Error::Wait(e) => write!(f, "{e}"),
+            Error::Chip(e) => write!(f, "{e}"),
         }
     }
 }
@@ -71,7 +79,14 @@ impl std::error::Error for Error {
             Error::Submit(e) => Some(e),
             Error::StreamPush(e) => Some(e),
             Error::Wait(e) => Some(e),
+            Error::Chip(e) => Some(e),
         }
+    }
+}
+
+impl From<ChipError> for Error {
+    fn from(e: ChipError) -> Self {
+        Error::Chip(e)
     }
 }
 
@@ -246,3 +261,41 @@ impl fmt::Display for WaitError {
 }
 
 impl std::error::Error for WaitError {}
+
+/// Why the chip twin refused input. Replaces the old
+/// `expect("CDC FIFO overflow: accelerator starved")` panic in
+/// [`KwsChip::push_samples`](crate::chip::KwsChip::push_samples) — a
+/// hostile stream chunk used to be able to kill a coordinator worker
+/// thread; now the condition is typed, nothing is consumed, and the
+/// caller drains frames (or sheds the chunk) and retries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipError {
+    /// Pushing these samples would complete more feature frames than the
+    /// chip's frame buffer can hold (the CDC-FIFO staging queue between
+    /// the FEx clock domain and the ΔRNN). The caller must consume frames
+    /// via `poll_frame`/`skip_frame` before pushing more. No sample was
+    /// consumed.
+    FifoOverflow {
+        /// feature frames currently buffered and ready to consume
+        pending: usize,
+        /// frames the push would have added on top of `pending`
+        incoming: usize,
+        /// the frame buffer's capacity
+        /// ([`PENDING_FRAME_CAP`](crate::chip::PENDING_FRAME_CAP))
+        capacity: usize,
+    },
+}
+
+impl fmt::Display for ChipError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChipError::FifoOverflow { pending, incoming, capacity } => write!(
+                f,
+                "CDC FIFO overflow: accelerator starved ({pending} frames pending + \
+                 {incoming} incoming > capacity {capacity}); poll/skip frames before pushing"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ChipError {}

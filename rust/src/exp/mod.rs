@@ -267,28 +267,30 @@ pub fn fig11(cfg: &RunConfig) -> crate::Result<()> {
     let audio12 = crate::audio::quantize_12b(&audio);
 
     let mut csv = String::from("frame,th0_cycles,th0_ms,th02_cycles,th02_ms,feat_sum\n");
+    // the Fig. 11 traces come from the opt-in TraceProbe path — the lean
+    // Decision no longer carries per-frame diagnostics
     let run_th = |th: i16| {
         let mut chip = KwsChip::new(params.clone(), cfg.chip_config().with_delta_th(th));
-        chip.process_utterance(&audio12)
+        chip.process_utterance_traced(&audio12)
     };
-    let d0 = run_th(0);
-    let d2 = run_th(51);
+    let (d0, t0) = run_th(0);
+    let (_d2, t2) = run_th(51);
     let ms = |c: u64| c as f64 / crate::energy::calib::CLOCK_HZ * 1e3;
-    for t in 0..d0.frame_cycles.len() {
-        let feat_sum: i64 = d2.feat_trace[t].iter().sum();
+    for t in 0..t0.frame_cycles.len() {
+        let feat_sum: i64 = t2.feat_trace[t].iter().sum();
         csv.push_str(&format!(
             "{t},{},{:.3},{},{:.3},{feat_sum}\n",
-            d0.frame_cycles[t],
-            ms(d0.frame_cycles[t]),
-            d2.frame_cycles[t],
-            ms(d2.frame_cycles[t]),
+            t0.frame_cycles[t],
+            ms(t0.frame_cycles[t]),
+            t2.frame_cycles[t],
+            ms(t2.frame_cycles[t]),
         ));
     }
     // silent vs active frames at the design point
-    let mut sums: Vec<(i64, u64)> = d2
+    let mut sums: Vec<(i64, u64)> = t2
         .feat_trace
         .iter()
-        .zip(&d2.frame_cycles)
+        .zip(&t2.frame_cycles)
         .map(|(f, &c)| (f.iter().sum::<i64>(), c))
         .collect();
     sums.sort_by_key(|&(s, _)| s);
@@ -303,8 +305,8 @@ pub fn fig11(cfg: &RunConfig) -> crate::Result<()> {
     );
     println!(
         "Δ_TH=0 mean latency {:.2} ms; Δ_TH=0.2 mean latency {:.2} ms",
-        ms((d0.frame_cycles.iter().sum::<u64>() / d0.frame_cycles.len() as u64) as u64),
-        ms((d2.frame_cycles.iter().sum::<u64>() / d2.frame_cycles.len() as u64) as u64)
+        ms(d0.total_cycles / d0.frames.max(1)),
+        ms(t2.frame_cycles.iter().sum::<u64>() / t2.frame_cycles.len().max(1) as u64)
     );
     write_result("fig11.csv", &csv);
     // audio waveform for the top panel

@@ -198,9 +198,33 @@ impl Fex {
         out
     }
 
+    /// Samples already absorbed into the current (incomplete) frame —
+    /// `0..FRAME_SAMPLES`. Lets callers predict exactly how many frames a
+    /// pending push will complete (the chip's bounded staging buffer
+    /// rejects oversized pushes up front using this).
+    pub fn frame_fill(&self) -> usize {
+        self.sample_in_frame
+    }
+
+    /// Run a whole utterance (12-bit samples) into caller-provided frame
+    /// scratch — the allocation-free form: `out` is appended to, its
+    /// capacity reused across utterances.
+    pub fn process_into(&mut self, audio12: &[i64], out: &mut Vec<FeatureFrame>) {
+        for &s in audio12 {
+            if let Some(f) = self.push_sample(s) {
+                out.push(f);
+            }
+        }
+    }
+
     /// Convenience: run a whole utterance (12-bit samples) into frames.
+    /// Allocates a fresh `Vec` per call — hot paths use
+    /// [`process_into`](Self::process_into) (or the chip's incremental
+    /// API) instead.
     pub fn process(&mut self, audio12: &[i64]) -> Vec<FeatureFrame> {
-        audio12.iter().filter_map(|&s| self.push_sample(s)).collect()
+        let mut out = Vec::with_capacity(audio12.len() / FRAME_SAMPLES + 1);
+        self.process_into(audio12, &mut out);
+        out
     }
 
     /// FEx clock frequency implied by the active configuration: the serial
@@ -214,15 +238,8 @@ impl Fex {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn tone(f: f64, amp: f64, n: usize) -> Vec<i64> {
-        (0..n)
-            .map(|i| {
-                let v = amp * (2.0 * std::f64::consts::PI * f * i as f64 / 8000.0).sin();
-                (v * 2047.0) as i64
-            })
-            .collect()
-    }
+    // shared scratch corpus (one definition for every filter/chip test)
+    use crate::audio::synth::{silence12, tone12 as tone};
 
     #[test]
     fn frame_cadence() {
@@ -283,10 +300,32 @@ mod tests {
     #[test]
     fn silence_gives_zero_features() {
         let mut fex = Fex::new(FexConfig::design_point());
-        let frames = fex.process(&vec![0i64; 1280]);
+        let frames = fex.process(&silence12(1280));
         for f in frames {
             assert!(f.iter().all(|&v| v == 0));
         }
+    }
+
+    #[test]
+    fn process_into_reuses_scratch_and_matches_process() {
+        let audio = tone(900.0, 0.5, FRAME_SAMPLES * 6);
+        let mut a = Fex::new(FexConfig::design_point());
+        let want = a.process(&audio);
+        let mut b = Fex::new(FexConfig::design_point());
+        let mut scratch: Vec<FeatureFrame> = Vec::new();
+        b.process_into(&audio, &mut scratch);
+        assert_eq!(scratch, want);
+        // the scratch is appended to, capacity reused across utterances
+        let cap = scratch.capacity();
+        scratch.clear();
+        b.reset();
+        b.process_into(&audio, &mut scratch);
+        assert_eq!(scratch, want);
+        assert_eq!(scratch.capacity(), cap, "scratch reallocated on reuse");
+        assert_eq!(b.frame_fill(), 0);
+        // a partial frame leaves its fill visible
+        b.process_into(&audio[..FRAME_SAMPLES + 17], &mut scratch);
+        assert_eq!(b.frame_fill(), 17);
     }
 
     #[test]
@@ -305,7 +344,7 @@ mod tests {
         let mut fex = Fex::new(FexConfig::design_point());
         fex.process(&tone(700.0, 0.7, 2560));
         fex.reset();
-        let frames = fex.process(&vec![0i64; FRAME_SAMPLES]);
+        let frames = fex.process(&silence12(FRAME_SAMPLES));
         assert!(frames[0].iter().all(|&v| v == 0), "state leaked through reset");
     }
 

@@ -46,9 +46,14 @@
 //!   fixed-size log-bucketed latency histograms, O(1) memory in request
 //!   count) and validated by the [`coordinator::soak`] sustained-load
 //!   harness.
+//! * [`probe`] — zero-cost instrumentation layer: the datapath is generic
+//!   over a [`probe::ChipProbe`]; [`probe::NoProbe`] monomorphizes to the
+//!   lean allocation-free hot path and [`probe::TraceProbe`] reconstructs
+//!   the full per-frame diagnostics (Fig. 11 traces) only for callers
+//!   that opt in.
 //! * [`error`] — the typed error surface: crate-wide [`Error`] plus
 //!   payload-preserving [`SubmitError`] / [`StreamPushError`] /
-//!   [`WaitError`].
+//!   [`WaitError`] / [`ChipError`].
 //! * [`baseline`] — the comparison points: dense (non-Δ) accelerator,
 //!   coarse-grained skip-RNN, and an FFT/MFCC FEx cost model.
 //! * [`exp`] — drivers that regenerate every table and figure of the paper.
@@ -68,6 +73,7 @@ pub mod error;
 pub mod exp;
 pub mod fex;
 pub mod fixed;
+pub mod probe;
 pub mod runtime;
 pub mod sram;
 pub mod stream;
@@ -79,7 +85,8 @@ pub mod util;
 /// and propagate through this with `?`.
 pub type Result<T> = anyhow::Result<T>;
 
-pub use error::{Error, StreamPushError, SubmitError, WaitError};
+pub use error::{ChipError, Error, StreamPushError, SubmitError, WaitError};
+pub use probe::{ChipProbe, DecisionTrace, NoProbe, TraceProbe};
 
 /// The 12 GSCD class labels used throughout the crate, in chip output order.
 pub const CLASS_LABELS: [&str; 12] = [

@@ -219,6 +219,7 @@ fn cmd_serve(cfg: &RunConfig, requests: usize) -> anyhow::Result<()> {
             stream: (i % 8) as u64,
             audio12: utt.audio12,
             label: Some(utt.label),
+            trace: false,
         }
     });
     let batch = coord.submit_batch(reqs).context("worker pool died mid-submit")?;

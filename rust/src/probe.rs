@@ -1,0 +1,247 @@
+//! Zero-cost chip instrumentation: the probe layer (DESIGN.md §10).
+//!
+//! The paper's value proposition is that the per-frame path is cheap —
+//! the ΔRNN does only the work the deltas demand. The software twin must
+//! not betray that by interleaving bookkeeping with the datapath, so all
+//! per-frame instrumentation goes through a [`ChipProbe`]: a set of hook
+//! methods the hot loops call at well-defined points. The functional core
+//! ([`crate::accel::DeltaRnnAccel::step_frame_probed`],
+//! [`crate::chip::KwsChip::poll_frame_probed`] and friends) is generic
+//! over the probe, so:
+//!
+//! * [`NoProbe`] — the unit probe. Every hook is an empty default method;
+//!   monomorphization inlines them to nothing, leaving the lean datapath
+//!   with zero instrumentation cost. This is what production paths
+//!   (coordinator workers, stream sessions) run.
+//! * [`TraceProbe`] — reconstructs the full per-frame diagnostics the old
+//!   `Decision` struct used to carry unconditionally (`frame_cycles` /
+//!   `frame_fired` / `feat_trace`, i.e. the Fig. 11 plots) bit-for-bit,
+//!   paying for the `Vec` growth and the 128-byte feature copies only
+//!   when a caller opted in.
+//! * [`CountingProbe`] — cheap scalar counters over every hook; used by
+//!   the equivalence tests to prove the hook cadence matches the
+//!   [`ChipActivity`](crate::energy::ChipActivity) accounting.
+//!
+//! The probe-equivalence suite (`tests/probe_equivalence.rs`) asserts that
+//! the probed and unprobed paths produce identical logits, fired counts
+//! and chip activity on the seeded utterance corpus, and `hotpath_bench`
+//! A/Bs their throughput.
+
+use crate::chip::FrameOut;
+use crate::fex::FeatureFrame;
+
+/// Per-frame instrumentation hooks for the chip datapath.
+///
+/// Every method has an empty default body: implement only the events you
+/// care about. Hooks are called from the innermost loops, so an impl must
+/// be cheap or deliberately opt into its cost (like [`TraceProbe`]).
+pub trait ChipProbe {
+    /// One feature frame was consumed (polled through the ΔRNN or skipped
+    /// with the clock gated). Fires for *every* frame, gated or not, after
+    /// the frame's results are final.
+    #[inline(always)]
+    fn frame_completed(&mut self, _frame: &FrameOut) {}
+
+    /// The ΔEncoder finished scanning a frame: `fired_x` input lanes and
+    /// `fired_h` hidden lanes crossed the Δ-threshold.
+    #[inline(always)]
+    fn lanes_fired(&mut self, _fired_x: usize, _fired_h: usize) {}
+
+    /// A weight row was streamed out of the SRAM (`words` 16-bit words
+    /// starting at `base_word`): one ΔMAC broadcast or one FC row.
+    #[inline(always)]
+    fn sram_row_read(&mut self, _base_word: usize, _words: usize) {}
+
+    /// A frame was consumed with the ΔRNN clock-gated (the VAD idle path).
+    /// Fires before the matching [`frame_completed`](Self::frame_completed).
+    #[inline(always)]
+    fn gate_skipped(&mut self, _index: u64) {}
+}
+
+/// The zero-cost probe: all hooks are the empty defaults, so the generic
+/// datapath monomorphizes to exactly the un-instrumented code.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoProbe;
+
+impl ChipProbe for NoProbe {}
+
+/// Per-frame diagnostic traces (the Fig. 11 raw material), split out of
+/// the old `Decision` struct: three parallel arrays indexed by frame.
+///
+/// Built by [`TraceProbe`]; the lean
+/// [`Decision`](crate::chip::Decision) no longer carries these, so the
+/// default serving path allocates nothing per frame.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DecisionTrace {
+    /// per-frame ΔRNN cycles (Fig. 11 latency trace; 0 for gated frames)
+    pub frame_cycles: Vec<u64>,
+    /// per-frame fired delta lanes (x + h)
+    pub frame_fired: Vec<usize>,
+    /// per-frame 12-bit FEx features (Fig. 11 feature trace)
+    pub feat_trace: Vec<FeatureFrame>,
+}
+
+impl DecisionTrace {
+    /// Append one consumed frame's diagnostics.
+    #[inline]
+    pub fn record(&mut self, frame: &FrameOut) {
+        self.frame_cycles.push(frame.cycles);
+        self.frame_fired.push(frame.fired);
+        self.feat_trace.push(frame.feat);
+    }
+
+    /// Frames recorded so far.
+    pub fn len(&self) -> usize {
+        self.frame_cycles.len()
+    }
+
+    /// True when no frame has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.frame_cycles.is_empty()
+    }
+
+    /// Drop all recorded frames, keeping the allocations for reuse.
+    pub fn clear(&mut self) {
+        self.frame_cycles.clear();
+        self.frame_fired.clear();
+        self.feat_trace.clear();
+    }
+
+    /// Build the traces for a window of already-collected frames (the
+    /// counterpart of [`Decision::from_frames`](crate::chip::Decision::from_frames)).
+    pub fn from_frames(frames: &[FrameOut]) -> Self {
+        let mut t = DecisionTrace {
+            frame_cycles: Vec::with_capacity(frames.len()),
+            frame_fired: Vec::with_capacity(frames.len()),
+            feat_trace: Vec::with_capacity(frames.len()),
+        };
+        for f in frames {
+            t.record(f);
+        }
+        t
+    }
+}
+
+/// The opt-in tracing probe: reconstructs the per-frame traces the
+/// pre-probe `Decision` carried unconditionally, bit-for-bit.
+#[derive(Debug, Clone, Default)]
+pub struct TraceProbe {
+    /// the traces recorded so far (drain with [`Self::take_trace`])
+    pub trace: DecisionTrace,
+}
+
+impl ChipProbe for TraceProbe {
+    #[inline]
+    fn frame_completed(&mut self, frame: &FrameOut) {
+        self.trace.record(frame);
+    }
+}
+
+impl TraceProbe {
+    /// Take the recorded traces, leaving the probe empty for reuse.
+    pub fn take_trace(&mut self) -> DecisionTrace {
+        std::mem::take(&mut self.trace)
+    }
+}
+
+/// A scalar-counter probe over every hook: the cheapest non-trivial probe,
+/// used by tests to pin the hook cadence against the activity counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CountingProbe {
+    /// frames completed (gated + ungated)
+    pub frames: u64,
+    /// gated frames (gate_skipped hook)
+    pub gated: u64,
+    /// fired input lanes summed over frames
+    pub fired_x: u64,
+    /// fired hidden lanes summed over frames
+    pub fired_h: u64,
+    /// SRAM row streams (ΔMAC broadcasts + FC rows)
+    pub sram_rows: u64,
+    /// SRAM words covered by those row streams
+    pub sram_words: u64,
+}
+
+impl ChipProbe for CountingProbe {
+    #[inline]
+    fn frame_completed(&mut self, _frame: &FrameOut) {
+        self.frames += 1;
+    }
+
+    #[inline]
+    fn lanes_fired(&mut self, fired_x: usize, fired_h: usize) {
+        self.fired_x += fired_x as u64;
+        self.fired_h += fired_h as u64;
+    }
+
+    #[inline]
+    fn sram_row_read(&mut self, _base_word: usize, words: usize) {
+        self.sram_rows += 1;
+        self.sram_words += words as u64;
+    }
+
+    #[inline]
+    fn gate_skipped(&mut self, _index: u64) {
+        self.gated += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fex::MAX_CHANNELS;
+
+    fn frame(index: u64, cycles: u64, fired: usize, gated: bool) -> FrameOut {
+        FrameOut {
+            index,
+            feat: [index as i64; MAX_CHANNELS],
+            logits: [0i64; crate::NUM_CLASSES],
+            fired,
+            cycles,
+            gated,
+        }
+    }
+
+    #[test]
+    fn trace_probe_records_every_frame_in_order() {
+        let mut p = TraceProbe::default();
+        for i in 0..5u64 {
+            p.frame_completed(&frame(i, 100 + i, i as usize, false));
+        }
+        assert_eq!(p.trace.len(), 5);
+        assert_eq!(p.trace.frame_cycles, vec![100, 101, 102, 103, 104]);
+        assert_eq!(p.trace.frame_fired, vec![0, 1, 2, 3, 4]);
+        assert_eq!(p.trace.feat_trace[3][0], 3);
+        let t = p.take_trace();
+        assert_eq!(t.len(), 5);
+        assert!(p.trace.is_empty(), "take_trace must leave the probe empty");
+    }
+
+    #[test]
+    fn trace_from_frames_matches_incremental_recording() {
+        let frames: Vec<FrameOut> =
+            (0..8).map(|i| frame(i, i * 7, (i % 3) as usize, i % 2 == 0)).collect();
+        let mut inc = DecisionTrace::default();
+        for f in &frames {
+            inc.record(f);
+        }
+        assert_eq!(inc, DecisionTrace::from_frames(&frames));
+    }
+
+    #[test]
+    fn counting_probe_sums_hooks() {
+        let mut p = CountingProbe::default();
+        p.lanes_fired(3, 10);
+        p.lanes_fired(1, 0);
+        p.sram_row_read(0, 96);
+        p.sram_row_read(96, 96);
+        p.gate_skipped(7);
+        p.frame_completed(&frame(0, 0, 0, true));
+        assert_eq!(p.fired_x, 4);
+        assert_eq!(p.fired_h, 10);
+        assert_eq!(p.sram_rows, 2);
+        assert_eq!(p.sram_words, 192);
+        assert_eq!(p.gated, 1);
+        assert_eq!(p.frames, 1);
+    }
+}

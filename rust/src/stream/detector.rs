@@ -197,6 +197,14 @@ impl Detector {
         self.refractory = 0;
         self.emitted = 0;
     }
+
+    /// Heap footprint of the smoothing window — fixed at construction
+    /// (`window + 1` slots), independent of how many frames have been
+    /// stepped. Folded into
+    /// [`StreamPipeline::state_bytes`](crate::stream::StreamPipeline::state_bytes).
+    pub fn window_bytes(&self) -> usize {
+        self.window.capacity() * std::mem::size_of::<[i64; NUM_CLASSES]>()
+    }
 }
 
 #[cfg(test)]

@@ -29,6 +29,7 @@ pub mod vad;
 use crate::accel::gru::QuantParams;
 use crate::chip::{ChipConfig, ChipReport, KwsChip};
 use crate::energy::ChipActivity;
+use crate::error::StreamPushError;
 use detector::{Detector, DetectorConfig, DetectionEvent};
 use vad::{Vad, VadConfig};
 
@@ -92,11 +93,28 @@ impl StreamPipeline {
 
     /// Feed a chunk of 12-bit samples; runs every completed frame through
     /// VAD → (poll | skip) → detector and returns the detections this
-    /// chunk produced. Chunk size is arbitrary — frame boundaries are
-    /// handled internally and results are invariant to the chunking.
-    pub fn push_audio(&mut self, audio12: &[i64]) -> Vec<DetectionEvent> {
+    /// chunk produced. Chunk sizes up to the chip's staging capacity
+    /// ([`crate::chip::PENDING_FRAME_CAP`] frames ≈ 4 s) are arbitrary —
+    /// frame boundaries are handled internally and results are invariant
+    /// to the chunking.
+    ///
+    /// A chunk too large for the frame buffer is handed back inside
+    /// [`StreamPushError::Backpressure`] with nothing consumed (the
+    /// surfaced form of the chip's typed
+    /// [`ChipError::FifoOverflow`](crate::error::ChipError::FifoOverflow)
+    /// — the old code path panicked instead): split it and push the
+    /// pieces. The coordinator's worker does exactly that, so a hostile
+    /// chunk can no longer kill a worker thread.
+    pub fn push_audio(&mut self, audio12: &[i64]) -> Result<Vec<DetectionEvent>, StreamPushError> {
+        if self.chip.push_samples(audio12).is_err() {
+            // the pipeline drains every frame below, so only an oversized
+            // single chunk can trip the bound — hand it back intact. The
+            // clone is deliberate (and cold): it keeps the error uniform
+            // with the session-push contract, where the payload rides the
+            // error so a retry needs no second copy of the audio.
+            return Err(StreamPushError::Backpressure(audio12.to_vec()));
+        }
         self.samples_in += audio12.len() as u64;
-        self.chip.push_samples(audio12);
         let mut events = Vec::new();
         while let Some(&feat) = self.chip.peek_frame() {
             let open = self.vad.step(&feat);
@@ -110,7 +128,15 @@ impl StreamPipeline {
                 events.push(ev);
             }
         }
-        events
+        Ok(events)
+    }
+
+    /// Bounded per-session state: the heap the pipeline can ever hold,
+    /// independent of how much audio has flowed through it (frame staging
+    /// buffer + detector smoothing window; the VAD is O(1) scalars). The
+    /// soak harness asserts this stays flat on long-lived sessions.
+    pub fn state_bytes(&self) -> usize {
+        self.chip.pending_bytes() + self.detector.window_bytes()
     }
 
     /// Restore power-on state (keeps weights/config; telemetry counters on
@@ -166,7 +192,7 @@ mod tests {
         for chunk in [64usize, 128, 1000] {
             let mut p = StreamPipeline::new(rng_quant(1), StreamConfig::design_point());
             for c in audio12.chunks(chunk) {
-                p.push_audio(c);
+                p.push_audio(c).expect("chunk fits");
             }
             let a = p.chip.activity();
             assert_eq!(a.frames, (audio12.len() / 128) as u64, "chunk {chunk}");
@@ -180,7 +206,7 @@ mod tests {
         let (audio12, sched) = synth_track(&cfg, 3);
         let mut p = StreamPipeline::new(rng_quant(2), StreamConfig::design_point());
         for c in audio12.chunks(256) {
-            p.push_audio(c);
+            p.push_audio(c).expect("chunk fits");
         }
         let a = p.chip.activity();
         assert!(a.gated_frames > 0, "VAD never gated on a mostly-silent track");
@@ -200,7 +226,7 @@ mod tests {
         let sc = StreamConfig::design_point().with_vad(VadConfig::disabled());
         let mut p = StreamPipeline::new(rng_quant(3), sc);
         for c in audio12.chunks(512) {
-            p.push_audio(c);
+            p.push_audio(c).expect("chunk fits");
         }
         assert_eq!(p.chip.activity().gated_frames, 0);
         assert!((p.duty_cycle() - 1.0).abs() < 1e-12);
@@ -209,12 +235,12 @@ mod tests {
     #[test]
     fn activity_delta_flushes_each_increment_exactly_once() {
         let mut p = StreamPipeline::new(rng_quant(9), StreamConfig::design_point());
-        p.push_audio(&[0i64; 1280]);
+        p.push_audio(&[0i64; 1280]).expect("chunk fits");
         let d1 = p.take_activity_delta();
         assert_eq!(d1.frames, 10);
         let d2 = p.take_activity_delta();
         assert_eq!(d2.frames, 0, "same delta handed out twice");
-        p.push_audio(&[0i64; 640]);
+        p.push_audio(&[0i64; 640]).expect("chunk fits");
         let d3 = p.take_activity_delta();
         assert_eq!(d3.frames, 5);
         let mut total = d1;
@@ -222,6 +248,49 @@ mod tests {
         total.merge(&d3);
         assert_eq!(total.frames, p.chip.activity().frames);
         assert_eq!(total.fex_visits, p.chip.activity().fex_visits);
+    }
+
+    #[test]
+    fn oversized_chunk_surfaces_backpressure_with_nothing_consumed() {
+        let mut p = StreamPipeline::new(rng_quant(8), StreamConfig::design_point());
+        // > PENDING_FRAME_CAP frames in one chunk: typed Backpressure, the
+        // chunk handed back intact, no sample consumed (the old path
+        // panicked inside the worker thread here)
+        let monster = vec![0i64; (crate::chip::PENDING_FRAME_CAP + 1) * crate::FRAME_SAMPLES];
+        match p.push_audio(&monster) {
+            Err(crate::error::StreamPushError::Backpressure(c)) => {
+                assert_eq!(c.len(), monster.len());
+            }
+            other => panic!("expected Backpressure, got {other:?}"),
+        }
+        assert_eq!(p.samples_in, 0, "rejected chunk was partially consumed");
+        assert_eq!(p.chip.activity().frames, 0);
+        // split into sane pieces: every frame flows
+        for piece in monster.chunks(1024) {
+            p.push_audio(piece).expect("sliced pieces fit");
+        }
+        assert_eq!(p.chip.activity().frames, (monster.len() / 128) as u64);
+    }
+
+    #[test]
+    fn session_state_stays_flat_on_long_tracks() {
+        // the satellite audit: no per-frame growth survives on a
+        // long-lived pipeline — state_bytes after minutes of audio equals
+        // state_bytes after the first chunks
+        let cfg = TrackConfig { duration_s: 4, keywords: 2, fillers: 1, noise: (0.001, 0.002) };
+        let (audio12, _) = synth_track(&cfg, 19);
+        let mut p = StreamPipeline::new(rng_quant(9), StreamConfig::design_point());
+        for c in audio12.chunks(256).take(8) {
+            p.push_audio(c).expect("chunk fits");
+        }
+        let early = p.state_bytes();
+        for _ in 0..8 {
+            for c in audio12.chunks(256) {
+                p.push_audio(c).expect("chunk fits");
+            }
+        }
+        assert_eq!(p.state_bytes(), early, "per-session memory grew with audio");
+        assert!(early > 0);
     }
 
     #[test]
@@ -234,7 +303,7 @@ mod tests {
                 StreamConfig::design_point().with_vad(vad),
             );
             for c in audio12.chunks(256) {
-                p.push_audio(c);
+                p.push_audio(c).expect("chunk fits");
             }
             p.report().power.total_uw()
         };

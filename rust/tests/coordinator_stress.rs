@@ -46,6 +46,7 @@ fn short_request(stream: u64, seed: u64) -> Request {
         stream,
         audio12: deltakws::audio::quantize_12b(&audio[..1024]),
         label: Some(label),
+        trace: false,
     }
 }
 

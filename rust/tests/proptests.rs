@@ -226,7 +226,7 @@ fn prop_vad_gated_idle_segments_never_mutate_hidden_state() {
         // random 12-bit audio, 8..24 frames worth
         let n_samples = 128 * (rng.below(17) + 8);
         let audio: Vec<i64> = (0..n_samples).map(|_| rng.below(4096) as i64 - 2048).collect();
-        chip.push_samples(&audio);
+        chip.push_samples(&audio).expect("audio fits the frame buffer");
         let mut gated_seen = 0u64;
         while chip.pending_frames() > 0 {
             if rng.uniform() < 0.5 {

@@ -15,9 +15,10 @@ use deltakws::accel::{AccelConfig, DeltaRnnAccel};
 use deltakws::energy::SramKind;
 use deltakws::fex::MAX_CHANNELS;
 use deltakws::audio::track::{synth_track, TrackConfig};
-use deltakws::chip::{ChipConfig, Decision, KwsChip};
+use deltakws::chip::{ChipConfig, DecisionAccum, KwsChip};
 use deltakws::coordinator::{Coordinator, StreamEvent};
 use deltakws::dataset::{Dataset, Split};
+use deltakws::probe::TraceProbe;
 use deltakws::stream::vad::VadConfig;
 use deltakws::stream::{StreamConfig, StreamPipeline};
 use deltakws::util::prng::Pcg;
@@ -40,28 +41,33 @@ fn streaming_equals_batch_bit_exact_on_100_utterances() {
     let mut chunk_rng = Pcg::new(0xC0FFEE);
     for i in 0..100usize {
         let utt = ds.utterance(Split::Test, i);
-        let want = batch.process_utterance(&utt.audio12);
+        let (want, want_trace) = batch.process_utterance_traced(&utt.audio12);
 
         stream.reset();
-        let mut frames = Vec::new();
+        let mut probe = TraceProbe::default();
+        let mut acc = DecisionAccum::new(stream.config.warmup);
         let mut off = 0usize;
         while off < utt.audio12.len() {
             // random chunk sizes: 1..=977 samples, crossing frame
             // boundaries in every possible alignment over 100 utterances
             let n = (chunk_rng.below(977) + 1).min(utt.audio12.len() - off);
-            stream.push_samples(&utt.audio12[off..off + n]);
+            stream
+                .push_samples(&utt.audio12[off..off + n])
+                .expect("chunk fits the frame buffer");
             off += n;
-            while let Some(f) = stream.poll_frame() {
-                frames.push(f);
+            while let Some(f) = stream.poll_frame_probed(&mut probe) {
+                acc.push(&f);
             }
         }
-        let got = Decision::from_frames(&frames, stream.config.warmup);
+        let got = acc.finish();
 
-        assert_eq!(got.class, want.class, "utt {i}: class diverged");
-        assert_eq!(got.logits, want.logits, "utt {i}: logits diverged");
-        assert_eq!(got.frame_cycles, want.frame_cycles, "utt {i}: cycle trace diverged");
-        assert_eq!(got.frame_fired, want.frame_fired, "utt {i}: fired trace diverged");
-        assert_eq!(got.feat_trace, want.feat_trace, "utt {i}: feature trace diverged");
+        // lean decisions agree field-for-field (Decision is Copy + Eq now)
+        assert_eq!(got, want, "utt {i}: decision diverged");
+        // and the TraceProbe reconstructs the batch traces bit for bit
+        let trace = probe.take_trace();
+        assert_eq!(trace.frame_cycles, want_trace.frame_cycles, "utt {i}: cycle trace diverged");
+        assert_eq!(trace.frame_fired, want_trace.frame_fired, "utt {i}: fired trace diverged");
+        assert_eq!(trace.feat_trace, want_trace.feat_trace, "utt {i}: feature trace diverged");
     }
 }
 
@@ -76,7 +82,7 @@ fn gated_frames_have_no_functional_side_effects() {
     let (audio12, _) = synth_track(&cfg, 17);
 
     let mut gated = KwsChip::new(q.clone(), ChipConfig::design_point());
-    gated.push_samples(&audio12);
+    gated.push_samples(&audio12).expect("track fits the frame buffer");
     let state0 = gated.accel.state().clone();
     for _ in 0..40 {
         gated.skip_frame().unwrap();
@@ -110,7 +116,7 @@ fn vad_gating_is_strictly_cheaper_and_functionally_gated() {
             StreamConfig::design_point().with_vad(vad),
         );
         for c in audio12.chunks(320) {
-            p.push_audio(c);
+            p.push_audio(c).expect("chunk fits");
         }
         let a = p.chip.activity();
         (a.gated_frames, a.mac_ops, a.sram_word_reads, p.report().power.total_uw())
@@ -136,13 +142,13 @@ fn vad_cold_start_reopens_after_real_silence() {
     let mut p = StreamPipeline::new(rng_quant(11), StreamConfig::design_point());
 
     // begin mid-keyword: drop the onset, start inside full speech
-    p.push_audio(&utt[2048..]);
+    p.push_audio(&utt[2048..]).expect("chunk fits");
     let cold = p.chip.activity();
     assert!(cold.frames > 0);
 
     // 3 s of true silence: the floor drops instantly to the real level
     let silence = vec![0i64; 3 * 8000];
-    p.push_audio(&silence);
+    p.push_audio(&silence).expect("chunk fits");
     let after_silence = p.chip.activity();
     assert!(
         after_silence.gated_frames > cold.gated_frames,
@@ -152,7 +158,7 @@ fn vad_cold_start_reopens_after_real_silence() {
     // a second keyword (with onset) must clock the ΔRNN again
     let mut rng2 = Pcg::new(42);
     let utt2 = deltakws::audio::quantize_12b(&deltakws::audio::synth_utterance(7, &mut rng2));
-    p.push_audio(&utt2);
+    p.push_audio(&utt2).expect("chunk fits");
     let end = p.chip.activity();
     let ungated_before = after_silence.frames - after_silence.gated_frames;
     let ungated_after = end.frames - end.gated_frames;

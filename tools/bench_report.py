@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Run the bench suite in smoke mode and emit BENCH_5.json.
+
+The first point on the repo's bench trajectory (ISSUE 5 satellite): runs
+`hotpath_bench` (probed-vs-unprobed frame path) and `soak_bench`
+(sustained decisions/sec) with DELTAKWS_BENCH_SMOKE=1 + DELTAKWS_BENCH_JSON=1,
+parses the machine-readable `results/bench.jsonl` the in-crate harness
+appends, and folds the numbers relevant to the probe-layer refactor into
+one JSON artifact:
+
+  {
+    "frames_per_sec": {"lean": ..., "traced": ...},   # consume+decide layer
+    "probe_overhead_x": {...},                         # traced/lean per case
+    "utterance_frames_per_sec": {...},
+    "soak_decisions_per_sec": ...,
+    "cases": {bench: {case: mean_ns}}
+  }
+
+Intended for CI (non-blocking step, artifact upload) and local use:
+
+  python3 tools/bench_report.py --out BENCH_5.json
+  python3 tools/bench_report.py --skip-build   # parse an existing jsonl
+"""
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+
+BENCHES = ["hotpath_bench", "soak_bench"]
+# cargo runs bench binaries with cwd set to the package root (rust/), so
+# the harness's results/bench.jsonl lands there when invoked from the
+# repo root; accept either location (newest wins)
+JSONL_CANDIDATES = [
+    os.path.join("rust", "results", "bench.jsonl"),
+    os.path.join("results", "bench.jsonl"),
+]
+
+
+def find_jsonl():
+    existing = [p for p in JSONL_CANDIDATES if os.path.exists(p)]
+    if not existing:
+        return None
+    return max(existing, key=os.path.getmtime)
+
+
+def run_benches():
+    env = dict(os.environ)
+    env["DELTAKWS_BENCH_SMOKE"] = "1"
+    env["DELTAKWS_BENCH_JSON"] = "1"
+    for bench in BENCHES:
+        print(f"== running {bench} (smoke mode) ==", flush=True)
+        subprocess.run(
+            ["cargo", "bench", "--bench", bench],
+            env=env,
+            check=True,
+        )
+
+
+def parse_jsonl(path):
+    cases = {}
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            cases.setdefault(rec["bench"], {})[rec["case"]] = rec["mean_ns"]
+    return cases
+
+
+def frames_per_sec(mean_ns, frames_per_iter):
+    return frames_per_iter / (mean_ns * 1e-9) if mean_ns else None
+
+
+def build_report(cases):
+    hot = cases.get("hotpath (probe A/B)", {})
+    soak = cases.get("soak", {})
+
+    def ratio(traced_label, lean_label):
+        a, b = hot.get(traced_label), hot.get(lean_label)
+        return round(a / b, 3) if a and b else None
+
+    report = {
+        "schema": "deltakws-bench-report/1",
+        "suite": "smoke",
+        "cases": cases,
+        # the consume+decide layer the probe refactor moved off the
+        # default path: lean accumulator vs per-decision trace
+        "frames_per_sec": {
+            "lean": frames_per_sec(
+                hot.get("frame consume+decide, lean accumulator"), 62.0
+            ),
+            "traced": frames_per_sec(
+                hot.get("frame consume+decide, traced (per-decision trace)"), 62.0
+            ),
+        },
+        "utterance_frames_per_sec": {
+            "lean": frames_per_sec(hot.get("utterance decode, lean (NoProbe)"), 62.0),
+            "traced": frames_per_sec(
+                hot.get("utterance decode, traced (TraceProbe)"), 62.0
+            ),
+        },
+        "probe_overhead_x": {
+            "utterance_decode": ratio(
+                "utterance decode, traced (TraceProbe)",
+                "utterance decode, lean (NoProbe)",
+            ),
+            "sparse_accel_frames": ratio(
+                "accel.step_frame sparse, traced", "accel.step_frame sparse, lean"
+            ),
+            "frame_consume_decide": ratio(
+                "frame consume+decide, traced (per-decision trace)",
+                "frame consume+decide, lean accumulator",
+            ),
+        },
+    }
+    lean = report["frames_per_sec"]["lean"]
+    traced = report["frames_per_sec"]["traced"]
+    if lean and traced:
+        report["lean_speedup_x"] = round(lean / traced, 3)
+
+    # soak decisions/sec: the micro-soak case label embeds its utterance
+    # count ("micro soak: 150 utterances, ...") and times one whole run
+    for label, mean_ns in soak.items():
+        m = re.match(r"micro soak: (\d+) utterances", label)
+        if m and mean_ns:
+            report["soak_decisions_per_sec"] = round(
+                int(m.group(1)) / (mean_ns * 1e-9), 1
+            )
+            break
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_5.json", help="output JSON path")
+    ap.add_argument(
+        "--skip-build",
+        action="store_true",
+        help="parse an existing results/bench.jsonl instead of running cargo bench",
+    )
+    args = ap.parse_args()
+
+    if not args.skip_build:
+        # start from a clean slate so stale lines don't pollute the report
+        for path in JSONL_CANDIDATES:
+            if os.path.exists(path):
+                os.remove(path)
+        run_benches()
+
+    jsonl = find_jsonl()
+    if jsonl is None:
+        print(
+            f"error: none of {JSONL_CANDIDATES} found (did the benches run?)",
+            file=sys.stderr,
+        )
+        return 1
+
+    report = build_report(parse_jsonl(jsonl))
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    ratios = report.get("probe_overhead_x", {})
+    print(f"probe overhead (traced/lean): {ratios}")
+    if "lean_speedup_x" in report:
+        print(f"lean consume+decide speedup: {report['lean_speedup_x']}x")
+    if "soak_decisions_per_sec" in report:
+        print(f"soak decisions/sec: {report['soak_decisions_per_sec']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
