@@ -4,9 +4,16 @@
 //! simulation throughput per Δ_TH. The chip-side numbers regenerate the
 //! Fig. 12 trade-off shape; the host-side numbers are the L3 performance
 //! target (EXPERIMENTS.md §Perf: ≥1e5 frames/s/core simulated).
+//!
+//! PR 6 adds the **speedup-vs-sparsity curve**: the scalar oracle vs the
+//! lane-packed fast datapath vs the 8-session batched stepper across
+//! nominal temporal sparsity points (0/25/50/75/87% of moves gated).
+//! `tools/bench_report.py` parses the `@ s=N` case labels into the
+//! `speedup_vs_sparsity` section of BENCH_N.json.
 
 mod common;
 
+use deltakws::accel::batch::BatchSession;
 use deltakws::accel::{AccelConfig, DeltaRnnAccel};
 use deltakws::energy::{self, calib, SramKind};
 use deltakws::util::bench::{black_box, Bench};
@@ -49,5 +56,80 @@ fn main() {
         );
     }
     println!("\npaper anchors: Δ=0 -> 16.4 ms / 121.2 nJ; Δ=0.2 -> 6.9 ms / 36.11 nJ @ 87% (input) sparsity");
+
+    // --- speedup vs sparsity: scalar oracle / fast datapath / batched ---
+    // nominal sparsity = fraction of frames where an active channel does
+    // NOT move past Δ_TH (step > th, so p_move maps straight to firing)
+    const BATCH: usize = 8;
+    println!("\nhost datapath A/B across temporal sparsity ({BATCH}-session batch):");
+    println!(
+        "{:>7} {:>9} {:>12} {:>12} {:>13} {:>8} {:>9}",
+        "spars%", "measured", "scalar f/s", "simd f/s", "batched f/s", "simd x", "batched x"
+    );
+    for (pct, p_move) in [(0u32, 1.0f64), (25, 0.75), (50, 0.5), (75, 0.25), (87, 0.13)] {
+        let frames = common::feature_stream(900 + pct as u64, 256, p_move, 60);
+        let cfg = AccelConfig::design_point();
+
+        // measured lane sparsity on one metrics pass
+        let mut meter =
+            DeltaRnnAccel::new(common::rng_quant(1), cfg.clone(), SramKind::NearVth);
+        for f in &frames {
+            meter.step_frame(f);
+        }
+        let measured = meter.activity.sparsity() * 100.0;
+
+        let mut scalar = DeltaRnnAccel::new(
+            common::rng_quant(1),
+            cfg.clone().with_simd(false),
+            SramKind::NearVth,
+        );
+        let mut i = 0usize;
+        let s_scalar =
+            b.bench_with_items(&format!("step_frame scalar @ s={pct}"), 1.0, "frames", || {
+                black_box(scalar.step_frame(black_box(&frames[i % frames.len()])));
+                i += 1;
+            });
+
+        let mut fast = DeltaRnnAccel::new(
+            common::rng_quant(1),
+            cfg.clone().with_simd(true),
+            SramKind::NearVth,
+        );
+        let mut j = 0usize;
+        let s_simd =
+            b.bench_with_items(&format!("step_frame simd @ s={pct}"), 1.0, "frames", || {
+                black_box(fast.step_frame(black_box(&frames[j % frames.len()])));
+                j += 1;
+            });
+
+        let mut host =
+            DeltaRnnAccel::new(common::rng_quant(1), cfg.with_simd(true), SramKind::NearVth);
+        let mut sessions = vec![BatchSession::new(); BATCH];
+        let mut t = 0usize;
+        let s_batch = b.bench_with_items(
+            &format!("step_frames_batched x{BATCH} @ s={pct}"),
+            BATCH as f64,
+            "frames",
+            || {
+                let f = &frames[t % frames.len()];
+                for sess in sessions.iter_mut() {
+                    sess.stage(*f);
+                }
+                black_box(host.step_frames_batched(&mut sessions));
+                t += 1;
+            },
+        );
+
+        println!(
+            "{:>7} {:>9.1} {:>12.0} {:>12.0} {:>13.0} {:>7.2}x {:>8.2}x",
+            pct,
+            measured,
+            s_scalar.throughput(1.0),
+            s_simd.throughput(1.0),
+            s_batch.throughput(BATCH as f64),
+            s_scalar.mean_ns / s_simd.mean_ns,
+            s_scalar.mean_ns / (s_batch.mean_ns / BATCH as f64),
+        );
+    }
     b.finish();
 }

@@ -16,7 +16,11 @@
 //!   per-decision allocations). This is the instrumentation tax every
 //!   request used to pay and now only traced requests pay — the
 //!   lean-vs-traced frames/sec ratio here is the headline number
-//!   `tools/bench_report.py` records into BENCH_5.json.
+//!   `tools/bench_report.py` records into the BENCH_N.json report.
+//!
+//! PR 6 adds a fourth altitude: **datapath A/B** — the scalar oracle vs
+//! the lane-packed fast kernels vs the 8-session batched stepper at the
+//! design point, all producing identical bits (`tests/simd_equivalence`).
 //!
 //! Run: `cargo bench --bench hotpath_bench` (DELTAKWS_BENCH_SMOKE=1 for CI).
 
@@ -113,6 +117,48 @@ fn main() {
         },
     );
 
+    // --- (4) datapath A/B: scalar oracle vs lane-packed vs batched ------
+    // design-regime motion (p_move 0.35): the three datapaths do the same
+    // arithmetic bit-for-bit, so any gap here is pure implementation
+    let ab_frames = common::feature_stream(33, 256, 0.35, 60);
+    let mut acc_scalar = deltakws::accel::DeltaRnnAccel::new(
+        common::rng_quant(10),
+        deltakws::accel::AccelConfig::design_point().with_simd(false),
+        deltakws::energy::SramKind::NearVth,
+    );
+    let mut p = 0usize;
+    let s_dp_scalar =
+        b.bench_with_items("step_frame design point, scalar oracle", 1.0, "frames", || {
+            black_box(acc_scalar.step_frame(black_box(&ab_frames[p % ab_frames.len()])));
+            p += 1;
+        });
+    let mut acc_simd = deltakws::accel::DeltaRnnAccel::new(
+        common::rng_quant(10),
+        deltakws::accel::AccelConfig::design_point().with_simd(true),
+        deltakws::energy::SramKind::NearVth,
+    );
+    let mut q = 0usize;
+    let s_dp_simd = b.bench_with_items("step_frame design point, simd", 1.0, "frames", || {
+        black_box(acc_simd.step_frame(black_box(&ab_frames[q % ab_frames.len()])));
+        q += 1;
+    });
+    let mut host = deltakws::accel::DeltaRnnAccel::new(
+        common::rng_quant(10),
+        deltakws::accel::AccelConfig::design_point().with_simd(true),
+        deltakws::energy::SramKind::NearVth,
+    );
+    let mut sessions = vec![deltakws::accel::batch::BatchSession::new(); 8];
+    let mut r = 0usize;
+    let s_dp_batch =
+        b.bench_with_items("step_frames_batched x8, design point", 8.0, "frames", || {
+            let f = &ab_frames[r % ab_frames.len()];
+            for sess in sessions.iter_mut() {
+                sess.stage(*f);
+            }
+            black_box(host.step_frames_batched(&mut sessions));
+            r += 1;
+        });
+
     println!("\nprobe overhead (traced time / lean time, same work):");
     println!("  utterance decode     : {:.2}x", s_utt_traced.mean_ns / s_utt_lean.mean_ns);
     println!("  sparse accel frames  : {:.2}x", s_acc_traced.mean_ns / s_acc_lean.mean_ns);
@@ -120,6 +166,15 @@ fn main() {
         "  frame consume+decide : {:.2}x  (lean path {:.2}x the traced frames/sec)",
         s_traced.mean_ns / s_lean.mean_ns,
         s_traced.mean_ns / s_lean.mean_ns
+    );
+    println!("\ndatapath speedup at the design point (same bits, different kernels):");
+    println!(
+        "  simd / scalar        : {:.2}x",
+        s_dp_scalar.mean_ns / s_dp_simd.mean_ns
+    );
+    println!(
+        "  batched x8 / scalar  : {:.2}x per frame",
+        s_dp_scalar.mean_ns / (s_dp_batch.mean_ns / 8.0)
     );
     b.finish();
 }

@@ -1,0 +1,340 @@
+//! Batched-chip mode: step N independent sessions against a single weight
+//! fetch — the software analog of the chip's amortized SRAM reads.
+//!
+//! A solo accelerator pays one 96-word row fetch per fired lane per
+//! session. When one worker hosts N independent utterances, the weight
+//! image is shared: for each lane, the batched stepper computes every
+//! session's delta first, fetches the row **once** if any session fired,
+//! and broadcasts it to all fired sessions' accumulators. Physical SRAM
+//! traffic (the shared [`super::DeltaRnnAccel::sram`] counters) is
+//! amortized across the batch; each session's [`ChipActivity`] still books
+//! the *logical* reads it would have issued solo, so per-session energy
+//! accounting — and every other activity field — is bit-identical to
+//! running the session alone.
+//!
+//! Equivalence to the solo path is structural: the solo ΔFIFO drains
+//! events in firing order, which is ascending lane order within the x
+//! pass, then ascending within the h pass (`tiny_fifo_ring_is_bit_exact_
+//! with_deep_ring` already pins drain-order invariance). The batched
+//! stepper walks lanes in that same ascending order and applies each fired
+//! row to a session's accumulators immediately, so each session sees the
+//! exact event sequence — and therefore the exact order-dependent
+//! saturation — of its solo run. `tests/simd_equivalence.rs` asserts this
+//! per frame over randomized models.
+
+use super::gru::{self, StateBuffer, C, G, H, K, WORDS_PER_FC_ROW, WORDS_PER_LANE};
+use super::{simd, DeltaRnnAccel, FrameResult, PIPELINE_FILL};
+use crate::energy::ChipActivity;
+
+/// One independent utterance's recurrent state inside a batch: everything
+/// a solo accelerator keeps per stream (state buffer + activity counters),
+/// with the weights/SRAM/NLU shared through the hosting accelerator.
+#[derive(Debug, Clone, Default)]
+pub struct BatchSession {
+    state: StateBuffer,
+    /// per-session activity, identical to a solo run of the same frames
+    pub activity: ChipActivity,
+    /// result of the most recent batched step this session took part in
+    pub last: Option<FrameResult>,
+    staged: Option<[i16; C]>,
+    fired_x: usize,
+    fired_h: usize,
+}
+
+impl BatchSession {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage this session's next feature frame (Q8.8 activations). The
+    /// frame is consumed by the next
+    /// [`DeltaRnnAccel::step_frames_batched`] call; sessions with nothing
+    /// staged sit the step out (ragged utterance lengths).
+    pub fn stage(&mut self, x: [i16; C]) {
+        self.staged = Some(x);
+    }
+
+    pub fn is_staged(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    /// Reset recurrent state between utterances (counters survive).
+    pub fn reset_state(&mut self) {
+        self.state.reset();
+        self.staged = None;
+        self.last = None;
+    }
+
+    pub fn state(&self) -> &StateBuffer {
+        &self.state
+    }
+}
+
+/// Amortization accounting for one batched step.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchFrameStats {
+    /// sessions that consumed a staged frame this step
+    pub stepped: usize,
+    /// word reads actually issued to the shared SRAM (one fetch per fired
+    /// lane + one FC sweep, regardless of how many sessions fired it)
+    pub physical_word_reads: u64,
+    /// word reads the sessions booked logically (solo-equivalent); the
+    /// ratio logical/physical is the batch's SRAM amortization factor
+    pub logical_word_reads: u64,
+}
+
+impl DeltaRnnAccel {
+    /// Step every staged session one frame against a single weight-row
+    /// fetch per fired lane (batched-chip mode, module docs above).
+    ///
+    /// Shares this accelerator's weights, SRAM twin, NLU and config; the
+    /// accelerator's own solo state and activity are untouched (physical
+    /// batch traffic is excluded from solo accounting via the SRAM
+    /// watermark). Per-session results land in [`BatchSession::last`].
+    pub fn step_frames_batched(&mut self, sessions: &mut [BatchSession]) -> BatchFrameStats {
+        let th_x = self.config.th_x();
+        let th_h = self.config.th_h();
+        let phys_before = self.sram.reads;
+        let stepped = sessions.iter().filter(|s| s.staged.is_some()).count();
+        if stepped == 0 {
+            return BatchFrameStats::default();
+        }
+        for sess in sessions.iter_mut().filter(|s| s.staged.is_some()) {
+            sess.fired_x = 0;
+            sess.fired_h = 0;
+        }
+
+        // (session index, delta) pairs for the lane under the broadcast
+        let mut fired: Vec<(usize, i32)> = Vec::with_capacity(sessions.len());
+        // the broadcast buffer: one physical row fetch serves every fired
+        // session (copied out so the SRAM borrow doesn't pin `self`)
+        let mut row = [0u16; WORDS_PER_LANE];
+
+        // --- ΔEncoder x pass: lanes ascending, as the solo FIFO drains
+        for i in 0..C {
+            if !self.config.active_x[i] {
+                continue;
+            }
+            fired.clear();
+            for (s, sess) in sessions.iter_mut().enumerate() {
+                let Some(x) = sess.staged else { continue };
+                let d = x[i] as i32 - sess.state.x_ref[i] as i32;
+                if d != 0 && d.unsigned_abs() >= th_x as u32 {
+                    sess.state.x_ref[i] = x[i];
+                    sess.fired_x += 1;
+                    fired.push((s, d));
+                }
+            }
+            if !fired.is_empty() {
+                row.copy_from_slice(self.sram.read_row(gru::BASE_X + i * WORDS_PER_LANE, WORDS_PER_LANE));
+                for &(s, d) in &fired {
+                    let st = &mut sessions[s].state;
+                    simd::mac_row_packed(d, &row, &mut st.m_r, &mut st.m_u, &mut st.m_xc);
+                }
+            }
+        }
+
+        // --- ΔEncoder h pass (h events only touch the M memories, so the
+        // scan decisions are independent of this frame's earlier drains)
+        for j in 0..H {
+            fired.clear();
+            for (s, sess) in sessions.iter_mut().enumerate() {
+                if sess.staged.is_none() {
+                    continue;
+                }
+                let d = sess.state.h[j] as i32 - sess.state.h_ref[j] as i32;
+                if d != 0 && d.unsigned_abs() >= th_h as u32 {
+                    sess.state.h_ref[j] = sess.state.h[j];
+                    sess.fired_h += 1;
+                    fired.push((s, d));
+                }
+            }
+            if !fired.is_empty() {
+                row.copy_from_slice(self.sram.read_row(gru::BASE_H + j * WORDS_PER_LANE, WORDS_PER_LANE));
+                for &(s, d) in &fired {
+                    let st = &mut sessions[s].state;
+                    simd::mac_row_packed(d, &row, &mut st.m_r, &mut st.m_u, &mut st.m_hc);
+                }
+            }
+        }
+
+        // one physical FC sweep serves the whole batch
+        self.sram.record_row_read(gru::BASE_FC, H * WORDS_PER_FC_ROW);
+
+        // --- per-session NLU/assembly, FC readout and solo-equivalent
+        // accounting
+        let event_cycles = (G as u64).div_ceil(self.config.mac_lanes as u64);
+        let enc_cycles = (self.config.n_active() + H) as u64;
+        let fc_cycles = (H * K) as u64 / self.config.mac_lanes as u64;
+        let mut logical = 0u64;
+        for sess in sessions.iter_mut() {
+            if sess.staged.take().is_none() {
+                continue;
+            }
+            if self.config.use_simd {
+                simd::assemble_state_fast(&mut sess.state, &self.params.b, &self.nlu, self.params.m_frac());
+            } else {
+                gru::assemble_state(&mut sess.state, &self.params.b, &self.nlu, self.params.m_frac());
+            }
+            let logits = gru::fc_readout(
+                &sess.state,
+                &self.params.w_fc,
+                &self.params.b_fc,
+                self.params.w_frac,
+            );
+
+            let fired_lanes = sess.fired_x + sess.fired_h;
+            let cycles = enc_cycles
+                + fired_lanes as u64 * event_cycles
+                + H as u64
+                + fc_cycles
+                + PIPELINE_FILL;
+            let words = fired_lanes as u64 * WORDS_PER_LANE as u64
+                + (H * WORDS_PER_FC_ROW) as u64;
+            logical += words;
+            let a = &mut sess.activity;
+            a.frames += 1;
+            a.mac_ops += fired_lanes as u64 * G as u64 + (H * K) as u64;
+            a.sram_word_reads += words;
+            a.rnn_cycles += cycles;
+            a.fired_lanes += fired_lanes as u64;
+            a.total_lanes += (self.config.n_active() + H) as u64;
+            a.fired_x += sess.fired_x as u64;
+            a.total_x += self.config.n_active() as u64;
+            a.fired_h += sess.fired_h as u64;
+            a.total_h += H as u64;
+            sess.last = Some(FrameResult { logits, fired: fired_lanes, cycles });
+        }
+
+        // exclude the batch's physical traffic from the hosting
+        // accelerator's solo accounting
+        self.sram_seen = self.sram.reads;
+
+        BatchFrameStats {
+            stepped,
+            physical_word_reads: self.sram.reads - phys_before,
+            logical_word_reads: logical,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{AccelConfig, DeltaRnnAccel};
+    use super::*;
+    use crate::energy::SramKind;
+    use crate::util::prng::Pcg;
+
+    fn rng_quant(seed: u64) -> gru::QuantParams {
+        let mut rng = Pcg::new(seed);
+        let mut q = gru::QuantParams::zeroed();
+        q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+        q.b.iter_mut().for_each(|w| *w = (rng.below(256) as i16) - 128);
+        q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q
+    }
+
+    fn stream(seed: u64, frames: usize) -> Vec<[i16; C]> {
+        let mut rng = Pcg::new(seed);
+        let mut cur = [40i16; C];
+        (0..frames)
+            .map(|_| {
+                for slot in cur.iter_mut().take(14).skip(4) {
+                    if rng.uniform() < 0.5 {
+                        *slot = (*slot + (rng.below(120) as i16) - 60).clamp(0, 255);
+                    }
+                }
+                cur
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_frames_match_solo_bit_exact() {
+        let cfg = AccelConfig::design_point();
+        let streams: Vec<Vec<[i16; C]>> = (0..4).map(|s| stream(100 + s, 30)).collect();
+        // solo references
+        let mut solos: Vec<DeltaRnnAccel> = (0..4)
+            .map(|_| DeltaRnnAccel::new(rng_quant(9), cfg.clone(), SramKind::NearVth))
+            .collect();
+        // one batched host
+        let mut host = DeltaRnnAccel::new(rng_quant(9), cfg, SramKind::NearVth);
+        let mut sessions = vec![BatchSession::new(); 4];
+        for t in 0..30 {
+            for (s, sess) in sessions.iter_mut().enumerate() {
+                sess.stage(streams[s][t]);
+            }
+            let stats = host.step_frames_batched(&mut sessions);
+            assert_eq!(stats.stepped, 4);
+            for (s, sess) in sessions.iter().enumerate() {
+                let solo = solos[s].step_frame(&streams[s][t]);
+                let got = sess.last.expect("stepped");
+                assert_eq!(got.logits, solo.logits, "t={t} s={s}");
+                assert_eq!(got.fired, solo.fired, "t={t} s={s}");
+                assert_eq!(got.cycles, solo.cycles, "t={t} s={s}");
+            }
+        }
+        for (s, sess) in sessions.iter().enumerate() {
+            assert_eq!(sess.activity, solos[s].activity, "session {s} activity");
+            assert_eq!(sess.state(), solos[s].state(), "session {s} state");
+        }
+    }
+
+    #[test]
+    fn physical_reads_are_amortized() {
+        let cfg = AccelConfig::design_point();
+        let frames = stream(7, 20);
+        let mut host = DeltaRnnAccel::new(rng_quant(3), cfg, SramKind::NearVth);
+        // identical sessions fire identical lanes -> maximal row sharing
+        let mut sessions = vec![BatchSession::new(); 8];
+        let mut phys = 0u64;
+        let mut logical = 0u64;
+        for f in &frames {
+            for sess in sessions.iter_mut() {
+                sess.stage(*f);
+            }
+            let stats = host.step_frames_batched(&mut sessions);
+            phys += stats.physical_word_reads;
+            logical += stats.logical_word_reads;
+        }
+        // 8 identical sessions read each fired row once instead of 8 times
+        assert_eq!(logical, 8 * phys, "physical={phys} logical={logical}");
+        // the host's own solo accounting must not absorb batch traffic
+        assert_eq!(host.activity.sram_word_reads, 0);
+        assert_eq!(host.activity.frames, 0);
+    }
+
+    #[test]
+    fn ragged_batches_skip_unstaged_sessions() {
+        let cfg = AccelConfig::design_point();
+        let frames = stream(11, 6);
+        let mut host = DeltaRnnAccel::new(rng_quant(5), cfg.clone(), SramKind::NearVth);
+        let mut solo = DeltaRnnAccel::new(rng_quant(5), cfg, SramKind::NearVth);
+        let mut sessions = vec![BatchSession::new(); 2];
+        for (t, f) in frames.iter().enumerate() {
+            sessions[0].stage(*f);
+            // session 1 ran out of frames after t=2
+            if t < 3 {
+                sessions[1].stage(*f);
+            }
+            let stats = host.step_frames_batched(&mut sessions);
+            assert_eq!(stats.stepped, if t < 3 { 2 } else { 1 });
+            let r = solo.step_frame(f);
+            assert_eq!(sessions[0].last.unwrap().logits, r.logits, "t={t}");
+            assert!(!sessions[1].is_staged());
+        }
+        assert_eq!(sessions[0].activity, solo.activity);
+        assert_eq!(sessions[1].activity.frames, 3);
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let mut host =
+            DeltaRnnAccel::new(rng_quant(1), AccelConfig::design_point(), SramKind::NearVth);
+        let before = host.sram.reads;
+        let stats = host.step_frames_batched(&mut []);
+        assert_eq!(stats, BatchFrameStats::default());
+        assert_eq!(host.sram.reads, before);
+    }
+}

@@ -11,6 +11,22 @@
 //! Numerics: delta (Q8.8, i32) x weight (Q1.6, i8) accumulated at
 //! value-frac 14 into saturating i32 accumulators — the "16b MAC" of the
 //! paper with guard bits.
+//!
+//! ## `sat(..., 32)` audit — single-rounding guarantee
+//!
+//! Every 32-bit saturation on the accumulate path (`mac_row` here,
+//! `sat_acc` in [`super`], the NLU input clamps in
+//! [`super::gru::assemble_state`]) clamps an *exact* intermediate:
+//! the delta×weight product is ≤25 bits (17-bit delta × 8-bit weight),
+//! so `acc + p` fits ≤33 bits in the widened `i64` with nothing rounded
+//! or truncated before the single clamp. There is no double-rounding
+//! anywhere in the "16b MAC with guard bits" semantics — one product,
+//! one saturating add per element — which is also why
+//! `i32::saturating_add` in [`super::simd`] is bit-identical to this
+//! oracle. The clamp is per-element and per-event, so *when* a rail is
+//! hit depends on the event order (saturating addition does not
+//! commute); `mac_row_rails_mid_stream` below pins that trajectory
+//! through both rails mid-utterance.
 
 use crate::fixed;
 
@@ -83,6 +99,49 @@ mod tests {
         let mut acc = [i32::MIN + 10];
         mac_row(-32768, &[127], &mut acc);
         assert_eq!(acc[0], i32::MIN);
+    }
+
+    #[test]
+    fn mac_row_rails_mid_stream() {
+        // Drive one accumulator through BOTH saturation rails in the
+        // middle of an event stream (not only at the final element, which
+        // is all `mac_row_saturates` covers): the clamp must engage
+        // mid-utterance and later events must accumulate from the clamped
+        // value, not the unclipped sum — the order-dependent semantics
+        // the FIFO drain order pins.
+        let max_p = 65535 * 127; // largest single-event product
+        let mut acc = [i32::MAX - max_p - 1000];
+
+        // event 1: large positive, lands 1000 short of the +rail
+        mac_row(65535, &[127], &mut acc);
+        assert_eq!(acc[0], i32::MAX - 1000);
+        // event 2: clips at the +rail mid-stream
+        mac_row(65535, &[127], &mut acc);
+        assert_eq!(acc[0], i32::MAX);
+        // event 3: descends from the *clamped* rail, not the unclipped sum
+        mac_row(-64, &[64], &mut acc); // p = -4096
+        assert_eq!(acc[0], i32::MAX - 4096);
+
+        // long negative burst drags it through the -rail mid-stream...
+        for _ in 0..((1u64 << 33) / max_p as u64 + 2) {
+            mac_row(-65535, &[127], &mut acc);
+        }
+        assert_eq!(acc[0], i32::MIN);
+        // ...and recovery again starts from the clamped -rail
+        mac_row(64, &[64], &mut acc); // p = +4096
+        assert_eq!(acc[0], i32::MIN + 4096);
+
+        // order dependence made explicit: +rail-then-negative differs from
+        // the reordered sum (saturating accumulation does not commute)
+        let mut hit_rail = [i32::MAX - 10];
+        mac_row(32767, &[127], &mut hit_rail); // clamps at +rail
+        mac_row(-1, &[64], &mut hit_rail); // then steps down by 64
+        let mut reordered = [i32::MAX - 10];
+        mac_row(-1, &[64], &mut reordered); // down first...
+        mac_row(32767, &[127], &mut reordered); // ...still clamps
+        assert_eq!(hit_rail[0], i32::MAX - 64);
+        assert_eq!(reordered[0], i32::MAX);
+        assert_ne!(hit_rail[0], reordered[0]);
     }
 
     #[test]

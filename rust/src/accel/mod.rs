@@ -14,11 +14,13 @@
 //! fill, the structural decomposition validated against the paper's
 //! measured latencies in `energy::calib`.
 
+pub mod batch;
 pub mod encoder;
 pub mod fifo;
 pub mod gru;
 pub mod mac;
 pub mod nlu;
+pub mod simd;
 
 use crate::energy::ChipActivity;
 use crate::probe::{ChipProbe, NoProbe};
@@ -43,6 +45,11 @@ pub struct AccelConfig {
     pub fifo_depth: usize,
     /// MAC lanes (8 on the chip; the ablation bench sweeps this)
     pub mac_lanes: usize,
+    /// Dispatch the lane-packed fast kernels ([`simd`]) on the hot path
+    /// instead of the scalar oracle. Runtime flag so one binary can A/B
+    /// both datapaths; the `simd` cargo feature only flips the default
+    /// here. Bit-exact either way (`tests/simd_equivalence.rs`).
+    pub use_simd: bool,
 }
 
 impl AccelConfig {
@@ -63,11 +70,18 @@ impl AccelConfig {
             active_x,
             fifo_depth: 16,
             mac_lanes: mac::MAC_LANES,
+            use_simd: cfg!(feature = "simd"),
         }
     }
 
     pub fn with_delta_th(mut self, th_q8: i16) -> Self {
         self.delta_th_q8 = th_q8;
+        self
+    }
+
+    /// Select the fast ([`simd`]) or scalar-oracle datapath.
+    pub fn with_simd(mut self, on: bool) -> Self {
+        self.use_simd = on;
         self
     }
 
@@ -109,6 +123,12 @@ pub struct DeltaRnnAccel {
     /// stall), so high-water genuinely reflects burst absorption.
     pub fifo: fifo::Fifo<DeltaEvent>,
     pub activity: ChipActivity,
+    /// SRAM read-counter watermark for incremental activity accounting:
+    /// each frame folds only `sram.reads - sram_seen` into
+    /// `activity.sram_word_reads`, so solo frames never absorb traffic
+    /// charged elsewhere (the batched stepper advances the watermark past
+    /// its amortized physical fetches and books per-session reads itself).
+    sram_seen: u64,
 }
 
 impl DeltaRnnAccel {
@@ -127,6 +147,7 @@ impl DeltaRnnAccel {
             nlu: Nlu::new(),
             fifo: fifo::Fifo::new(fifo_depth),
             activity: ChipActivity::default(),
+            sram_seen: 0,
         }
     }
 
@@ -170,25 +191,35 @@ impl DeltaRnnAccel {
             gru::BASE_H + lane * WORDS_PER_LANE
         };
         probe.sram_row_read(base, WORDS_PER_LANE);
-        // walk the 96-word row; two weights per word
-        let mut g = 0usize;
-        for w in 0..WORDS_PER_LANE {
-            let (lo, hi) = self.sram.read_weight_pair(base + w);
-            for wt in [lo, hi] {
-                let p = ev.delta * wt as i32;
-                let j = g % H;
-                match g / H {
-                    0 => self.state.m_r[j] = sat_acc(self.state.m_r[j], p),
-                    1 => self.state.m_u[j] = sat_acc(self.state.m_u[j], p),
-                    _ => {
-                        if is_x {
-                            self.state.m_xc[j] = sat_acc(self.state.m_xc[j], p);
-                        } else {
-                            self.state.m_hc[j] = sat_acc(self.state.m_hc[j], p);
+        if self.config.use_simd {
+            // fast path: one counted burst fetch of the packed row, then
+            // the chunked saturating kernel over the three gate segments.
+            // The borrow of `self.sram` and the `&mut` borrows of the
+            // state arrays are disjoint fields, so no copy is needed.
+            let row = self.sram.read_row(base, WORDS_PER_LANE);
+            let m_c = if is_x { &mut self.state.m_xc } else { &mut self.state.m_hc };
+            simd::mac_row_packed(ev.delta, row, &mut self.state.m_r, &mut self.state.m_u, m_c);
+        } else {
+            // scalar oracle: walk the 96-word row; two weights per word
+            let mut g = 0usize;
+            for w in 0..WORDS_PER_LANE {
+                let (lo, hi) = self.sram.read_weight_pair(base + w);
+                for wt in [lo, hi] {
+                    let p = ev.delta * wt as i32;
+                    let j = g % H;
+                    match g / H {
+                        0 => self.state.m_r[j] = sat_acc(self.state.m_r[j], p),
+                        1 => self.state.m_u[j] = sat_acc(self.state.m_u[j], p),
+                        _ => {
+                            if is_x {
+                                self.state.m_xc[j] = sat_acc(self.state.m_xc[j], p);
+                            } else {
+                                self.state.m_hc[j] = sat_acc(self.state.m_hc[j], p);
+                            }
                         }
                     }
+                    g += 1;
                 }
-                g += 1;
             }
         }
         (G as u64).div_ceil(self.config.mac_lanes as u64)
@@ -266,18 +297,29 @@ impl DeltaRnnAccel {
         probe.lanes_fired(fired_x, fired_h);
 
         // --- NLU + state assembly ---------------------------------------
-        gru::assemble_state(&mut self.state, &self.params.b, &self.nlu, self.params.m_frac());
+        if self.config.use_simd {
+            simd::assemble_state_fast(&mut self.state, &self.params.b, &self.nlu, self.params.m_frac());
+        } else {
+            gru::assemble_state(&mut self.state, &self.params.b, &self.nlu, self.params.m_frac());
+        }
         let nlu_cycles = H as u64;
 
         // --- FC readout (dense every frame) -------------------------------
         let logits =
             gru::fc_readout(&self.state, &self.params.w_fc, &self.params.b_fc, self.params.w_frac);
-        // count FC SRAM traffic: 64 rows x 6 words
+        // count FC SRAM traffic: 64 rows x 6 words (probe still sees the
+        // per-row cadence on both paths; the fast path folds the 384
+        // word-counter updates into one contiguous burst record)
         for j in 0..H {
             probe.sram_row_read(gru::BASE_FC + j * WORDS_PER_FC_ROW, WORDS_PER_FC_ROW);
-            for w in 0..WORDS_PER_FC_ROW {
-                let _ = self.sram.read_word(gru::BASE_FC + j * WORDS_PER_FC_ROW + w);
+            if !self.config.use_simd {
+                for w in 0..WORDS_PER_FC_ROW {
+                    let _ = self.sram.read_word(gru::BASE_FC + j * WORDS_PER_FC_ROW + w);
+                }
             }
+        }
+        if self.config.use_simd {
+            self.sram.record_row_read(gru::BASE_FC, H * WORDS_PER_FC_ROW);
         }
         let fc_cycles = (H * K) as u64 / self.config.mac_lanes as u64;
 
@@ -286,8 +328,11 @@ impl DeltaRnnAccel {
         let cycles = enc_cycles + mac_cycles + nlu_cycles + fc_cycles + PIPELINE_FILL;
         self.activity.frames += 1;
         self.activity.mac_ops += fired as u64 * G as u64 + (H * K) as u64;
-        self.activity.sram_word_reads =
-            self.sram.reads; // SRAM twin is the source of truth
+        // SRAM twin is the source of truth: fold in exactly the reads this
+        // frame issued (incremental, not a running assignment, so batched
+        // stepping can charge its amortized traffic separately)
+        self.activity.sram_word_reads += self.sram.reads - self.sram_seen;
+        self.sram_seen = self.sram.reads;
         self.activity.rnn_cycles += cycles;
         self.activity.fired_lanes += fired as u64;
         self.activity.total_lanes += (self.config.n_active() + H) as u64;

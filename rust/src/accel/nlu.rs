@@ -62,6 +62,27 @@ impl Nlu {
     pub fn tanh_q15(&self, pre_q12: i32) -> i32 {
         Self::lookup(&self.tanh, pre_q12)
     }
+
+    /// Slice-mapped sigmoid: `out[j] = sigmoid_q15(pre[j])`. The gather
+    /// stage of the vectorized gate pipeline ([`super::simd`]) — the
+    /// clamp/index/interp arithmetic is the identical scalar [`lookup`],
+    /// so the mapped form is bit-exact with per-element calls.
+    #[inline]
+    pub fn sigmoid_q15_map(&self, pre: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(pre.len(), out.len());
+        for (o, &p) in out.iter_mut().zip(pre.iter()) {
+            *o = Self::lookup(&self.sigmoid, p);
+        }
+    }
+
+    /// Slice-mapped tanh (see [`sigmoid_q15_map`](Self::sigmoid_q15_map)).
+    #[inline]
+    pub fn tanh_q15_map(&self, pre: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(pre.len(), out.len());
+        for (o, &p) in out.iter_mut().zip(pre.iter()) {
+            *o = Self::lookup(&self.tanh, p);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +155,20 @@ mod tests {
         let nlu = Nlu::new();
         assert_eq!(nlu.sigmoid_q15(i32::MAX / 2), nlu.sigmoid_q15(q12(7.9999)));
         assert_eq!(nlu.tanh_q15(i32::MIN / 2), nlu.tanh_q15(-(8 << PRE_FRAC)));
+    }
+
+    #[test]
+    fn mapped_lookups_match_scalar() {
+        let nlu = Nlu::new();
+        let pre: Vec<i32> = (-40000..40000).step_by(973).collect();
+        let mut sig = vec![0; pre.len()];
+        let mut tan = vec![0; pre.len()];
+        nlu.sigmoid_q15_map(&pre, &mut sig);
+        nlu.tanh_q15_map(&pre, &mut tan);
+        for (i, &p) in pre.iter().enumerate() {
+            assert_eq!(sig[i], nlu.sigmoid_q15(p));
+            assert_eq!(tan[i], nlu.tanh_q15(p));
+        }
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Lane-packed fast kernels for the ΔRNN hot path — with the scalar
+//! datapath as the bit-exactness oracle.
+//!
+//! After PR 5 made the frame path allocation-free, profile weight moved
+//! into the scalar Q-format arithmetic itself: the per-event MAC row walk
+//! (192 saturating multiply-accumulates pulled two-weights-per-word out of
+//! the SRAM twin) and the per-gate saturate/round/activation pipeline.
+//! This module provides branchless, chunked implementations of both that
+//! LLVM auto-vectorizes on stable Rust, plus the packed-word row kernel
+//! the burst-read dispatch in [`super::DeltaRnnAccel`] feeds directly.
+//!
+//! ## Why in-row vectorization is bit-exact by construction
+//!
+//! Within one delta event, the broadcast touches 3H = 192 *independent*
+//! accumulators (gate segments r | u | c of the fired lane's row), and
+//! saturation is applied per element. There is no reduction across lanes
+//! inside an event, so any evaluation order over the 192 targets — scalar,
+//! chunked, or 8-wide like the silicon — produces identical bits.
+//!
+//! What is **not** reorderable is the event order: saturating addition is
+//! not associative (`sat(sat(a+b)+c) != sat(sat(a+c)+b)` once a rail is
+//! hit), so the firing order the ΔFIFO drain imposes pins the accumulation
+//! order *across* events. The fast path therefore vectorizes along the row
+//! (within one event) and keeps events strictly in drain order — exactly
+//! the axis split the chip's 8 MAC lanes use.
+//!
+//! ## Numeric equivalence argument
+//!
+//! A delta is the difference of two Q8.8 `i16` values (≤17 significant
+//! bits) and a weight is int8 (≤8 bits), so the product fits in 25 bits —
+//! exact in `i32`. The scalar oracle accumulates via
+//! `fixed::sat(acc as i64 + p as i64, 32)`, which on a 32-bit accumulator
+//! is precisely `i32::saturating_add`: one product, one clamp, no double
+//! rounding (see the audit notes in [`super::mac`]). Every kernel here
+//! uses that identity, asserted element-for-element by the unit tests
+//! below and end-to-end by `tests/simd_equivalence.rs`.
+
+use super::gru::{StateBuffer, ACT_FRAC, G, H, WORDS_PER_LANE};
+use super::nlu::{Nlu, PRE_FRAC};
+use crate::fixed;
+
+/// Saturate an i64 into the 32-bit MAC accumulator width. Branchless
+/// (`clamp` compiles to min/max); identical to `fixed::sat(v, 32)`.
+#[inline(always)]
+pub fn sat32(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Fast counterpart of [`super::mac::mac_row`]: multiply-accumulate one
+/// broadcast delta into a row of saturating i32 accumulators.
+///
+/// `i32::saturating_add(delta * w)` is bit-identical to the oracle's
+/// widen-to-i64 + clamp (the 25-bit product can't overflow the multiply),
+/// and the loop body is branchless so LLVM unrolls/vectorizes it.
+#[inline]
+pub fn mac_row_fast(delta: i32, weights: &[i8], acc: &mut [i32]) {
+    debug_assert_eq!(weights.len(), acc.len());
+    for (a, &w) in acc.iter_mut().zip(weights.iter()) {
+        *a = a.saturating_add(delta * w as i32);
+    }
+}
+
+/// Apply one broadcast delta event to the three gate segments of a fired
+/// lane's *packed* 96-word SRAM row (targets `2w`/`2w+1` in the low/high
+/// byte of word `w`; segment layout `[r | u | c]`, 32 words each).
+///
+/// This is the kernel the burst-read dispatch feeds: the row arrives as
+/// one `&[u16]` fetch instead of 96 counted word reads, and the unpack +
+/// multiply + saturating accumulate runs chunked over each segment. `m_c`
+/// is `m_xc` for x-side events and `m_hc` for h-side events.
+#[inline]
+pub fn mac_row_packed(
+    delta: i32,
+    row: &[u16],
+    m_r: &mut [i32; H],
+    m_u: &mut [i32; H],
+    m_c: &mut [i32; H],
+) {
+    debug_assert_eq!(row.len(), WORDS_PER_LANE);
+    mac_segment(delta, &row[..H / 2], m_r);
+    mac_segment(delta, &row[H / 2..H], m_u);
+    mac_segment(delta, &row[H..], m_c);
+}
+
+/// One 32-word gate segment: unpack two int8 weights per word and
+/// saturating-accumulate into the H-target segment.
+#[inline]
+fn mac_segment(delta: i32, words: &[u16], acc: &mut [i32; H]) {
+    debug_assert_eq!(words.len() * 2, acc.len());
+    for (pair, &w) in acc.chunks_exact_mut(2).zip(words.iter()) {
+        let lo = (w & 0xff) as i8 as i32;
+        let hi = (w >> 8) as i8 as i32;
+        pair[0] = pair[0].saturating_add(delta * lo);
+        pair[1] = pair[1].saturating_add(delta * hi);
+    }
+}
+
+/// Fast counterpart of [`super::gru::assemble_state`]: the per-gate
+/// saturate/round/activation pipeline restructured from one
+/// 64-iteration scalar loop into five passes over stack arrays —
+/// branchless clamp/shift passes (vectorizable) separated from the two
+/// LUT gather passes (inherently scalar). Every element computes the
+/// exact expression of the oracle, so the restructuring is bit-exact;
+/// it wins by keeping each pass's working set in registers/L1 and
+/// letting the clamp passes vectorize.
+pub fn assemble_state_fast(st: &mut StateBuffer, b: &[i16; G], nlu: &Nlu, m_frac: u32) {
+    let b_shift = m_frac - ACT_FRAC;
+    let nlu_shift = m_frac - PRE_FRAC;
+
+    // pass 1: r/u pre-activations, normalised to Q4.12 and clamped
+    let mut pre_r = [0i32; H];
+    let mut pre_u = [0i32; H];
+    for j in 0..H {
+        pre_r[j] = sat32((st.m_r[j] as i64 + ((b[j] as i64) << b_shift)) >> nlu_shift);
+        pre_u[j] = sat32((st.m_u[j] as i64 + ((b[H + j] as i64) << b_shift)) >> nlu_shift);
+    }
+
+    // pass 2: sigmoid gathers (Q0.15)
+    let mut r = [0i32; H];
+    let mut u = [0i32; H];
+    nlu.sigmoid_q15_map(&pre_r, &mut r);
+    nlu.sigmoid_q15_map(&pre_u, &mut u);
+
+    // pass 3: candidate pre-activation c_pre = m_xc + r ⊙ m_hc + b_c
+    let mut pre_c = [0i32; H];
+    for j in 0..H {
+        let rm = ((r[j] as i64) * (st.m_hc[j] as i64)) >> 15;
+        pre_c[j] =
+            sat32((st.m_xc[j] as i64 + rm + ((b[2 * H + j] as i64) << b_shift)) >> nlu_shift);
+    }
+
+    // pass 4: tanh gather (Q1.15)
+    let mut cv = [0i32; H];
+    nlu.tanh_q15_map(&pre_c, &mut cv);
+
+    // pass 5: h' = u ⊙ h + (1-u) ⊙ c, renormalised to Q8.8
+    for j in 0..H {
+        let uh = (u[j] as i64 * st.h[j] as i64) >> 15;
+        let uc = ((32768 - u[j]) as i64 * cv[j] as i64) >> (30 - ACT_FRAC);
+        st.h[j] = fixed::sat(uh + uc, 16) as i16;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{gru, mac};
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn rng_row(rng: &mut Pcg) -> [i8; G] {
+        let mut row = [0i8; G];
+        for w in row.iter_mut() {
+            *w = (rng.below(256) as i64 - 128) as i8;
+        }
+        row
+    }
+
+    fn pack_row(row: &[i8; G]) -> Vec<u16> {
+        (0..WORDS_PER_LANE)
+            .map(|w| (row[2 * w] as u8 as u16) | ((row[2 * w + 1] as u8 as u16) << 8))
+            .collect()
+    }
+
+    #[test]
+    fn sat32_matches_fixed_sat() {
+        for v in [0i64, 1, -1, i32::MAX as i64, i32::MIN as i64, i64::MAX, i64::MIN, 1 << 40] {
+            assert_eq!(sat32(v) as i64, fixed::sat(v, mac::ACC_BITS), "v={v}");
+        }
+    }
+
+    #[test]
+    fn mac_row_fast_matches_oracle_including_rails() {
+        let mut rng = Pcg::new(0x51D0);
+        for case in 0..200 {
+            let row = rng_row(&mut rng);
+            let delta = rng.below(131071) as i32 - 65535; // full 17-bit range
+            let mut a = [0i32; G];
+            let mut b = [0i32; G];
+            // bias some accumulators near the rails so saturation engages
+            for j in 0..G {
+                a[j] = match rng.below(4) {
+                    0 => i32::MAX - rng.below(1 << 20) as i32,
+                    1 => i32::MIN + rng.below(1 << 20) as i32,
+                    _ => rng.below(1 << 24) as i32 - (1 << 23),
+                };
+                b[j] = a[j];
+            }
+            mac::mac_row(delta, &row, &mut a);
+            mac_row_fast(delta, &row, &mut b);
+            assert_eq!(a, b, "case {case}");
+        }
+    }
+
+    #[test]
+    fn packed_row_matches_unpacked_segments() {
+        let mut rng = Pcg::new(0xBEEF);
+        for _ in 0..100 {
+            let row = rng_row(&mut rng);
+            let packed = pack_row(&row);
+            let delta = rng.below(131071) as i32 - 65535;
+            // oracle: scalar mac_row per gate segment of the unpacked row
+            let mut m_r = [7i32; H];
+            let mut m_u = [-9i32; H];
+            let mut m_c = [i32::MAX - 3; H];
+            let (mut f_r, mut f_u, mut f_c) = (m_r, m_u, m_c);
+            mac::mac_row(delta, &row[..H], &mut m_r);
+            mac::mac_row(delta, &row[H..2 * H], &mut m_u);
+            mac::mac_row(delta, &row[2 * H..], &mut m_c);
+            mac_row_packed(delta, &packed, &mut f_r, &mut f_u, &mut f_c);
+            assert_eq!(m_r, f_r);
+            assert_eq!(m_u, f_u);
+            assert_eq!(m_c, f_c);
+        }
+    }
+
+    #[test]
+    fn assemble_fast_matches_oracle() {
+        let nlu = Nlu::new();
+        let mut rng = Pcg::new(0xA55E);
+        for m_frac in [14u32, 15, 16, 17] {
+            for _ in 0..50 {
+                let mut st = StateBuffer::default();
+                let mut b = [0i16; G];
+                for v in b.iter_mut() {
+                    *v = (rng.below(65536) as i64 - 32768) as i16;
+                }
+                for j in 0..H {
+                    st.h[j] = (rng.below(65536) as i64 - 32768) as i16;
+                    // span moderate values and both rails
+                    let draw = |rng: &mut Pcg| match rng.below(5) {
+                        0 => i32::MAX,
+                        1 => i32::MIN,
+                        _ => rng.below(1 << 26) as i32 - (1 << 25),
+                    };
+                    st.m_r[j] = draw(&mut rng);
+                    st.m_u[j] = draw(&mut rng);
+                    st.m_xc[j] = draw(&mut rng);
+                    st.m_hc[j] = draw(&mut rng);
+                }
+                let mut fast = st.clone();
+                gru::assemble_state(&mut st, &b, &nlu, m_frac);
+                assemble_state_fast(&mut fast, &b, &nlu, m_frac);
+                assert_eq!(st, fast, "m_frac={m_frac}");
+            }
+        }
+    }
+}

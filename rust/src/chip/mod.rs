@@ -486,6 +486,18 @@ impl KwsChip {
         self.pending.front().map(|p| &p.feat)
     }
 
+    /// Pop the next buffered frame's Q8.8 activations *without* driving
+    /// the ΔRNN — the batched-chip path: feature extraction still runs on
+    /// this chip (FEx counters advance as usual), but the RNN step happens
+    /// through [`crate::accel::DeltaRnnAccel::step_frames_batched`]
+    /// against a [`crate::accel::batch::BatchSession`], amortizing one
+    /// weight fetch across every session on the worker.
+    pub fn pop_frame_activations(&mut self) -> Option<[i16; MAX_CHANNELS]> {
+        let pf = self.pending.pop_front()?;
+        self.frame_index += 1;
+        Some(pf.q)
+    }
+
     /// Consume the next buffered frame through the ΔRNN (lean [`NoProbe`]
     /// path). Returns `None` when no complete frame is buffered.
     #[inline]

@@ -26,9 +26,16 @@
 //! recurrent state meaningful; the spill path trades that ordering for
 //! availability when the pinned queue is saturated.
 //!
-//! Two kinds of work share the worker lanes:
+//! Three kinds of work share the worker lanes:
 //!
 //! * per-utterance [`Request`]s — stateless between requests, spillable;
+//! * *fused* request groups ([`Client::submit_fused`]) — a whole batch of
+//!   independent utterances routed to ONE worker as a single job, served
+//!   through the batched-chip path
+//!   ([`crate::accel::DeltaRnnAccel::step_frames_batched`]): every fired
+//!   weight row is fetched once per frame for the whole group instead of
+//!   once per request. Deliberately ignores stream pinning — co-locating
+//!   the group is the point — and always runs the lean (untraced) path;
 //! * long-lived [`StreamSession`]s — open a stream, push audio chunks of
 //!   any size, receive [`StreamEvent`]s asynchronously. A session's
 //!   [`crate::stream::StreamPipeline`] (chip + VAD + wakeword state
@@ -59,8 +66,11 @@ use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::accel::batch::BatchSession;
 use crate::accel::gru::QuantParams;
-use crate::chip::{ChipConfig, ChipReport, KwsChip};
+use crate::chip::{
+    ChipConfig, ChipReport, DecisionAccum, FrameOut, KwsChip, SAFE_CHUNK_SAMPLES,
+};
 use crate::energy::ChipActivity;
 use crate::error::{StreamPushError, SubmitError};
 use crate::probe::DecisionTrace;
@@ -170,6 +180,9 @@ pub struct Stats {
     pub chunk_latency: LogHistogram,
     /// merged chip activity across workers
     pub activity: ChipActivity,
+    /// fused request groups served through the batched-chip path
+    /// (their member requests are counted individually in `completed`)
+    pub fused_batches: u64,
     /// stream events shed on full session event channels (clients that
     /// never drain their receivers; see [`STREAM_EVENT_CAP`])
     pub stream_events_dropped: u64,
@@ -245,6 +258,15 @@ enum Job {
         enqueued: Instant,
         reply: Weak<Mailbox>,
     },
+    /// a fused group of independent utterances served in lockstep through
+    /// the batched-chip path (one weight-row fetch per fired lane per
+    /// frame for the whole group); routed as one unit to one worker,
+    /// lean-only (`Request::trace` is ignored)
+    UtteranceBatch {
+        reqs: Vec<Request>,
+        enqueued: Instant,
+        reply: Weak<Mailbox>,
+    },
     /// open a streaming session pinned to this worker (`config`: per-
     /// session VAD/detector tuning, `None` = pool default; `alive` is
     /// cleared by the client handle so the worker can GC sessions whose
@@ -285,6 +307,13 @@ enum LaneError {
 enum StreamLaneError {
     Full(Job),
     Disconnected(Job),
+}
+
+/// Why every lane refused a fused request group (the group rides back
+/// intact so [`Client::submit_fused`] can retry it whole).
+enum FusedLaneError {
+    Full(Vec<Request>),
+    Disconnected(Vec<Request>),
 }
 
 /// One worker's request lane (the submit-side view).
@@ -394,6 +423,59 @@ impl Router {
         }
     }
 
+    /// Route a whole request group to ONE lane as a single fused job.
+    /// Ids are assigned and registered with `mailbox` before enqueueing
+    /// (same invariant as [`submit`](Self::submit)); rejection withdraws
+    /// every id and hands the group back intact. Lane choice is
+    /// least-loaded first: a fused group deliberately ignores per-stream
+    /// pinning, since amortizing the weight fetch requires co-locating
+    /// the whole group on one worker.
+    fn submit_fused(
+        &self,
+        mut reqs: Vec<Request>,
+        mailbox: &Arc<Mailbox>,
+    ) -> Result<Batch, FusedLaneError> {
+        for req in reqs.iter_mut() {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            mailbox.register(req.id);
+        }
+        let meta: Vec<(u64, u64)> = reqs.iter().map(|r| (r.id, r.stream)).collect();
+        let reply = Arc::downgrade(mailbox);
+        let now = Instant::now();
+        let mut order: Vec<usize> = (0..self.lanes.len()).collect();
+        order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
+        let mut any_full = false;
+        for w in order {
+            let job = Job::UtteranceBatch { reqs, enqueued: now, reply: reply.clone() };
+            reqs = match self.lanes[w].tx.try_send(job) {
+                Ok(()) => {
+                    self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
+                    let tickets = meta
+                        .iter()
+                        .map(|&(id, stream)| Ticket::new(id, stream, Arc::clone(mailbox)))
+                        .collect();
+                    return Ok(Batch::new(tickets));
+                }
+                Err(TrySendError::Full(Job::UtteranceBatch { reqs, .. })) => {
+                    any_full = true;
+                    reqs
+                }
+                Err(TrySendError::Disconnected(Job::UtteranceBatch { reqs, .. })) => reqs,
+                Err(_) => unreachable!("fused job came back as a different variant"),
+            };
+        }
+        for &(id, _) in &meta {
+            mailbox.unregister(id);
+        }
+        if any_full {
+            self.rejected_full.fetch_add(1, Ordering::Relaxed);
+            Err(FusedLaneError::Full(reqs))
+        } else {
+            self.rejected_closed.fetch_add(1, Ordering::Relaxed);
+            Err(FusedLaneError::Disconnected(reqs))
+        }
+    }
+
     /// Non-blocking stream-job delivery to the stream's pinned lane (no
     /// spill: the session state lives there). `Err` hands the job back
     /// with the cause.
@@ -475,6 +557,39 @@ impl Client {
             }
         }
         Ok(Batch::new(tickets))
+    }
+
+    /// Submit a whole request group as ONE fused job: a single worker
+    /// steps every utterance in lockstep through the batched-chip path
+    /// ([`crate::accel::DeltaRnnAccel::step_frames_batched`]), fetching
+    /// each fired weight row once per frame for the whole group. Each
+    /// request still gets its own [`Response`] (bit-identical decision to
+    /// a solo submit), claimed through the returned [`Batch`] of tickets
+    /// in submission order.
+    ///
+    /// Contract differences from [`submit_batch`](Self::submit_batch):
+    /// the group ignores per-stream worker pinning (co-location is the
+    /// point) and always runs lean — [`Request::trace`] is ignored and
+    /// [`Response::trace`] is `None`. Blocks through transient
+    /// backpressure (the whole group retries as a unit); on a dead pool
+    /// returns [`SubmitError::Closed`] with the first request.
+    pub fn submit_fused(&self, mut reqs: Vec<Request>) -> Result<Batch, SubmitError> {
+        if reqs.is_empty() {
+            return Ok(Batch::new(Vec::new()));
+        }
+        loop {
+            let Some(router) = self.router.upgrade() else {
+                return Err(SubmitError::Closed(reqs.remove(0)));
+            };
+            reqs = match router.submit_fused(reqs, &self.mailbox) {
+                Ok(batch) => return Ok(batch),
+                Err(FusedLaneError::Full(r)) => r,
+                Err(FusedLaneError::Disconnected(mut r)) => {
+                    return Err(SubmitError::Closed(r.remove(0)));
+                }
+            };
+            std::thread::sleep(Duration::from_micros(200));
+        }
     }
 
     /// True once the owning [`Coordinator`] has been dropped: every further
@@ -738,6 +853,13 @@ impl Coordinator {
         self.default_client.submit_batch(reqs)
     }
 
+    /// [`Client::submit_fused`] on the coordinator's default client:
+    /// one worker serves the whole group through the batched-chip path,
+    /// amortizing every weight-row fetch across the group's utterances.
+    pub fn submit_fused_batch(&self, reqs: Vec<Request>) -> Result<Batch, SubmitError> {
+        self.default_client.submit_fused(reqs)
+    }
+
     /// A cloneable submission handle for concurrent producers, with its
     /// own completion mailbox (clones share it; separate `client()`
     /// calls get isolated mailboxes — responses never cross).
@@ -856,6 +978,7 @@ impl Coordinator {
             s.latency.merge(&shard.latency.snapshot());
             s.chunk_latency.merge(&shard.chunk_latency.snapshot());
             s.activity.merge(&shard.activity.snapshot());
+            s.fused_batches += shard.fused_batches.load(Ordering::Relaxed);
             s.stream_events_dropped += shard.events_dropped.load(Ordering::Relaxed);
             s.session_bytes += shard.session_bytes.load(Ordering::Relaxed);
             let sp = lane.spilled_in.load(Ordering::Relaxed);
@@ -1088,6 +1211,106 @@ fn worker_loop(
                     mailbox.deliver(resp);
                 }
             }
+            Job::UtteranceBatch { reqs, enqueued, reply } => {
+                shard.fused_batches.fetch_add(1, Ordering::Relaxed);
+                // phase 1 — FEx, per request: the feature front end is
+                // recurrent per utterance, so each request's audio runs
+                // through this worker's chip solo. Frames are popped as
+                // raw Q8.8 activations (`pop_frame_activations`) instead
+                // of being stepped, leaving the ΔRNN work for phase 2.
+                let mut frames: Vec<Vec<[i16; crate::MAX_CHANNELS]>> =
+                    Vec::with_capacity(reqs.len());
+                for req in &reqs {
+                    chip.reset();
+                    let mut fr = Vec::new();
+                    for piece in req.audio12.chunks(SAFE_CHUNK_SAMPLES) {
+                        chip.push_samples(piece)
+                            .expect("SAFE_CHUNK_SAMPLES fits the frame buffer");
+                        while let Some(q) = chip.pop_frame_activations() {
+                            fr.push(q);
+                        }
+                    }
+                    frames.push(fr);
+                }
+                // phase 2 — ΔRNN, batched: every request steps in
+                // lockstep against a single weight-row fetch per fired
+                // lane. Each session's decision and activity are
+                // bit-identical to a solo run (accel::batch module docs).
+                let mut sessions: Vec<BatchSession> =
+                    (0..reqs.len()).map(|_| BatchSession::new()).collect();
+                let mut accums: Vec<DecisionAccum> = (0..reqs.len())
+                    .map(|_| DecisionAccum::new(chip.config.warmup))
+                    .collect();
+                let max_t = frames.iter().map(|f| f.len()).max().unwrap_or(0);
+                for t in 0..max_t {
+                    for (sess, fr) in sessions.iter_mut().zip(frames.iter()) {
+                        if let Some(&q) = fr.get(t) {
+                            sess.stage(q);
+                        }
+                    }
+                    chip.accel.step_frames_batched(&mut sessions);
+                    for ((sess, fr), acc) in
+                        sessions.iter().zip(frames.iter()).zip(accums.iter_mut())
+                    {
+                        if t >= fr.len() {
+                            continue;
+                        }
+                        let r = sess.last.expect("staged session stepped");
+                        acc.push(&FrameOut {
+                            index: t as u64,
+                            feat: [0i64; crate::MAX_CHANNELS],
+                            logits: r.logits,
+                            fired: r.fired,
+                            cycles: r.cycles,
+                            gated: false,
+                        });
+                    }
+                }
+                // phase 3 — per-request responses and telemetry. The RNN
+                // side of the activity is booked from each session (the
+                // host accel's solo counters were untouched); the FEx
+                // side flushes through the usual chip-activity delta.
+                for (req, (sess, acc)) in
+                    reqs.into_iter().zip(sessions.iter().zip(accums.iter()))
+                {
+                    let decision = acc.finish();
+                    let lat_ms = decision.total_cycles as f64
+                        / decision.frames.max(1) as f64
+                        / crate::energy::calib::CLOCK_HZ
+                        * 1e3;
+                    let correct = req.label.map(|l| l == decision.class);
+                    let resp = Response {
+                        id: req.id,
+                        stream: req.stream,
+                        class: decision.class,
+                        correct,
+                        logits: decision.logits,
+                        counted_frames: decision.counted_frames,
+                        chip_cycles: decision.total_cycles,
+                        chip_latency_ms: lat_ms,
+                        service: enqueued.elapsed(),
+                        worker: index,
+                        worker_seq,
+                        trace: None,
+                    };
+                    worker_seq += 1;
+                    shard.completed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(c) = correct {
+                        shard.labelled.fetch_add(1, Ordering::Relaxed);
+                        if c {
+                            shard.correct.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    shard.latency.record(resp.service.as_micros() as u64);
+                    shard.activity.add(&sess.activity);
+                    if let Some(mailbox) = reply.upgrade() {
+                        mailbox.deliver(resp);
+                    }
+                }
+                let act = chip.activity();
+                shard.activity.add(&act.delta_since(&flushed));
+                flushed = act;
+            }
             Job::StreamOpen { session, config: stream_cfg, events, alive } => {
                 let cfg = stream_cfg.unwrap_or_else(|| default_stream.clone());
                 let pipeline = StreamPipeline::new(params.clone(), cfg);
@@ -1314,6 +1537,55 @@ mod tests {
         assert_eq!(responses.len(), 10, "batch lost responses");
         let got: Vec<u64> = responses.iter().map(|r| r.id).collect();
         assert_eq!(got, ids, "wait_all must preserve submission order");
+    }
+
+    #[test]
+    fn fused_batch_matches_solo_submissions() {
+        let coord = pool(21, 2, 8);
+        let reqs: Vec<Request> = (0..5).map(|i| request(i, 40 + i)).collect();
+        let solo = coord
+            .submit_batch(reqs.clone())
+            .expect("pool alive")
+            .wait_all(Duration::from_secs(60));
+        let fused = coord
+            .submit_fused_batch(reqs)
+            .expect("pool alive")
+            .wait_all(Duration::from_secs(60));
+        assert_eq!(solo.len(), 5);
+        assert_eq!(fused.len(), 5);
+        for (a, b) in solo.iter().zip(fused.iter()) {
+            // the fused path must produce bit-identical decisions
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(a.counted_frames, b.counted_frames);
+            assert_eq!(a.chip_cycles, b.chip_cycles);
+            assert_eq!(a.correct, b.correct);
+            assert!(b.trace.is_none(), "fused path is lean-only");
+        }
+        // one fused group, on one worker, every member counted
+        let workers: std::collections::HashSet<usize> =
+            fused.iter().map(|r| r.worker).collect();
+        assert_eq!(workers.len(), 1, "fused group must stay on one worker");
+        let stats = coord.stats();
+        assert_eq!(stats.fused_batches, 1);
+        assert_eq!(stats.completed, 10);
+        assert_eq!(stats.labelled, 10);
+        // per-session activity booked solo-equivalently: both passes over
+        // the same 5 utterances contribute the same frame count
+        assert_eq!(stats.activity.frames % 2, 0);
+    }
+
+    #[test]
+    fn fused_batch_empty_and_closed_contracts() {
+        let coord = pool(22, 1, 4);
+        let empty = coord.submit_fused_batch(Vec::new()).expect("empty group is fine");
+        assert_eq!(empty.len(), 0);
+        let client = coord.client();
+        drop(coord);
+        match client.submit_fused(vec![request(0, 1)]) {
+            Err(SubmitError::Closed(r)) => assert_eq!(r.stream, 0),
+            other => panic!("expected Closed, got {:?}", other.map(|b| b.len())),
+        }
     }
 
     #[test]

@@ -99,6 +99,9 @@ pub struct WorkerShard {
     pub correct: AtomicU64,
     /// streaming audio chunks processed by this worker's sessions
     pub stream_chunks: AtomicU64,
+    /// fused request groups served through the batched-chip path (each
+    /// group's requests are also counted individually in `completed`)
+    pub fused_batches: AtomicU64,
     /// stream events dropped because a session's bounded event channel
     /// was full (a client that never drains its receiver; detections are
     /// shed newest-first rather than growing worker-side memory)

@@ -50,17 +50,24 @@ pub fn fits(v: i64, bits: u32) -> bool {
 ///
 /// This is the rounding the chip's post-multiply normalisation stages use:
 /// add half an LSB in the direction of the sign, then floor-shift.
+///
+/// Total over all of `i64`, not just the documented ≤48-bit domain: the
+/// negative branch runs on a widened i128 magnitude, because negating an
+/// `i64` near `i64::MIN` (the old `-((-v + half) >> sh)`) overflows —
+/// a debug panic / release wrap-around for inputs the datapaths can
+/// legally produce at the top of the guard-bit range. For `sh >= 1` the
+/// result magnitude is at most `2^62 + 1`, so the narrowing cast back is
+/// exact.
 #[inline]
 pub fn round_shift(v: i64, sh: u32) -> i64 {
+    debug_assert!(sh <= 63, "round_shift by {sh}");
     if sh == 0 {
         return v;
     }
-    let half = 1i64 << (sh - 1);
-    if v >= 0 {
-        (v + half) >> sh
-    } else {
-        -((-v + half) >> sh)
-    }
+    let half = 1i128 << (sh - 1);
+    let wide = v as i128;
+    let r = if wide >= 0 { (wide + half) >> sh } else { -((-wide + half) >> sh) };
+    r as i64
 }
 
 /// Truncating (floor) arithmetic right shift — what a bare wire-shift does.
@@ -147,6 +154,71 @@ mod tests {
         assert_eq!(round_shift(-4, 1), -2);
         assert_eq!(round_shift(7, 2), 2); // 1.75 -> 2
         assert_eq!(round_shift(100, 0), 100);
+    }
+
+    #[test]
+    fn round_shift_total_at_i64_min() {
+        // the exact boundary the pre-fix negate-first implementation
+        // overflowed on (`-i64::MIN` does not exist): these used to panic
+        // in debug builds and wrap in release
+        assert_eq!(round_shift(i64::MIN, 0), i64::MIN);
+        assert_eq!(round_shift(i64::MIN, 1), -(1i64 << 62));
+        assert_eq!(round_shift(i64::MIN + 1, 1), -(1i64 << 62));
+        assert_eq!(round_shift(i64::MIN, 8), -(1i64 << 55));
+        assert_eq!(round_shift(i64::MIN, 62), -2);
+        assert_eq!(round_shift(i64::MIN, 63), -1);
+        // positive rail for symmetry: (2^63 - 1 + half) >> sh rounds up
+        assert_eq!(round_shift(i64::MAX, 1), 1i64 << 62);
+        assert_eq!(round_shift(i64::MAX, 63), 1);
+        // documented 48-bit domain edges stay exact
+        assert_eq!(round_shift(min_val(48), 14), -(1i64 << 33));
+        assert_eq!(round_shift(max_val(48), 14), 1i64 << 33);
+    }
+
+    /// Independent i128 reference: round-half-away-from-zero is
+    /// sign(v) * floor((|v| + 2^(sh-1)) / 2^sh), computed on unsigned
+    /// magnitudes so no edge of `(v, sh)` can overflow.
+    fn round_shift_ref(v: i64, sh: u32) -> i64 {
+        if sh == 0 {
+            return v;
+        }
+        let mag = (v as i128).unsigned_abs();
+        let r = ((mag + (1u128 << (sh - 1))) >> sh) as i64;
+        if v < 0 {
+            -r
+        } else {
+            r
+        }
+    }
+
+    #[test]
+    fn round_shift_matches_i128_reference_on_edges() {
+        use crate::util::check::forall;
+        let edges: [i64; 12] = [
+            i64::MIN,
+            i64::MIN + 1,
+            min_val(48),
+            min_val(48) + 1,
+            -1,
+            0,
+            1,
+            max_val(48) - 1,
+            max_val(48),
+            i64::MAX - 1,
+            i64::MAX,
+            -(1i64 << 33),
+        ];
+        forall(64, |rng| {
+            // half the cases pin v to a domain edge, half draw uniformly;
+            // sh sweeps the full legal 0..=63 range either way
+            let v = if rng.uniform() < 0.5 {
+                edges[rng.below(edges.len() as u64) as usize]
+            } else {
+                rng.next_u64() as i64
+            };
+            let sh = rng.below(64) as u32;
+            assert_eq!(round_shift(v, sh), round_shift_ref(v, sh), "v={v} sh={sh}");
+        });
     }
 
     #[test]

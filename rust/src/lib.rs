@@ -13,6 +13,12 @@
 //!   (mixed-precision biquads, shift-replaced multipliers, channel selection).
 //! * [`accel`] — the ΔRNN accelerator: ΔEncoder, ΔFIFOs, 8-lane MAC array,
 //!   non-linearity LUTs and the state assembler, with cycle accounting.
+//!   Three bit-exact datapaths serve the same frame step: the scalar
+//!   oracle (reference semantics), the lane-packed fast kernels
+//!   ([`accel::simd`], runtime-selected via `AccelConfig::use_simd`; the
+//!   `simd` cargo feature only flips the `design_point()` default), and
+//!   the multi-session batched stepper ([`accel::batch`]) that amortizes
+//!   one weight-row fetch per fired lane across N sessions.
 //! * [`sram`] — the 24 kB near-V_TH weight SRAM model: banking, energy and
 //!   the skew-resistant column-MUX timing (discrete-event simulated).
 //! * [`chip`] — chip top-level: SPI front door, clock dividers, async FIFO

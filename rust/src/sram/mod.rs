@@ -81,6 +81,33 @@ impl WeightSram {
         ((w & 0xff) as i8, (w >> 8) as i8)
     }
 
+    /// Count a contiguous burst of `words` reads starting at `base` without
+    /// touching the data array: the per-word and per-bank counters end up
+    /// exactly as if [`read_word`](Self::read_word) had walked the span.
+    /// This is the accounting half of the row-burst path the vectorized
+    /// MAC kernels use (one counter update per row instead of 96).
+    pub fn record_row_read(&mut self, base: usize, words: usize) {
+        debug_assert!(base + words <= WORDS, "SRAM burst OOB: {base}+{words}");
+        self.reads += words as u64;
+        let mut addr = base;
+        let end = base + words;
+        while addr < end {
+            let bank = Self::bank_of(addr);
+            let span = end.min((bank + 1) * WORDS_PER_BANK) - addr;
+            self.bank_reads[bank] += span as u64;
+            addr += span;
+        }
+    }
+
+    /// Read a contiguous row burst: counts like `words` single reads (see
+    /// [`record_row_read`](Self::record_row_read)) and returns the word
+    /// slice for lane-packed consumption.
+    #[inline]
+    pub fn read_row(&mut self, base: usize, words: usize) -> &[u16] {
+        self.record_row_read(base, words);
+        &self.data[base..base + words]
+    }
+
     /// Write one word (counted; used by the weight loader).
     pub fn write_word(&mut self, addr: usize, v: u16) {
         assert!(addr < WORDS, "SRAM write OOB: {addr}");
@@ -162,6 +189,23 @@ mod tests {
         assert_eq!(WeightSram::bank_of(1023), 0);
         assert_eq!(WeightSram::bank_of(1024), 1);
         assert_eq!(WeightSram::bank_of(WORDS - 1), BANKS - 1);
+    }
+
+    #[test]
+    fn row_burst_counts_like_single_reads() {
+        let mut a = WeightSram::new(SramKind::NearVth);
+        let mut b = WeightSram::new(SramKind::NearVth);
+        for addr in 0..WORDS {
+            a.write_word(addr, (addr % 65536) as u16);
+            b.write_word(addr, (addr % 65536) as u16);
+        }
+        // a bank-straddling burst (1000..1100 crosses the 1024 boundary)
+        let row: Vec<u16> = a.read_row(1000, 100).to_vec();
+        for (i, addr) in (1000..1100).enumerate() {
+            assert_eq!(row[i], b.read_word(addr));
+        }
+        assert_eq!(a.reads, b.reads);
+        assert_eq!(a.bank_reads, b.bank_reads);
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! SIMD/batched acceptance (PR 6 tentpole): the lane-packed fast kernels
+//! and the batched-chip stepper are the *same* datapath as the scalar
+//! oracle — bit for bit, including order-dependent saturation.
+//!
+//! * randomized `step_frame` equivalence: scalar vs fast datapath over
+//!   random `QuantParams` (all weight fractions), Θ at zero / the design
+//!   point / beyond full scale, asserting per-frame results, final state,
+//!   activity counters and SRAM traffic;
+//! * saturation-heavy extremes: all-±127 weight rows driven with
+//!   full-scale alternating inputs, asserting the NLU input clamp
+//!   actually engaged while the datapaths stayed identical;
+//! * ΔFIFO interleavings: depth-1 vs deep rings on the fast datapath
+//!   (the scalar pair is pinned by the accel unit tests);
+//! * batched vs solo: `step_frames_batched` on a SIMD host against
+//!   scalar solo accelerators — scalar == SIMD == batched in one place;
+//! * the chip-level acceptance sweep: 100 seeded utterances through a
+//!   scalar chip, a SIMD chip, and the batched-chip path (FEx on-chip,
+//!   ΔRNN via `BatchSession` groups), asserting every `Decision` and the
+//!   aggregate `ChipActivity` are identical.
+
+use deltakws::accel::batch::BatchSession;
+use deltakws::accel::gru::{QuantParams, C};
+use deltakws::accel::{AccelConfig, DeltaRnnAccel};
+use deltakws::chip::{ChipConfig, DecisionAccum, FrameOut, KwsChip};
+use deltakws::dataset::{Dataset, Split};
+use deltakws::energy::{ChipActivity, SramKind};
+use deltakws::util::check::forall;
+use deltakws::util::prng::Pcg;
+use deltakws::MAX_CHANNELS;
+
+/// Fully randomized model: weights over the whole int8 range, biases over
+/// the whole int16 range, every supported weight fraction.
+fn rng_quant_rand(rng: &mut Pcg) -> QuantParams {
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(256) as i64 - 128) as i8);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(256) as i64 - 128) as i8);
+    q.b.iter_mut().for_each(|w| *w = (rng.below(65536) as i64 - 32768) as i16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(256) as i64 - 128) as i8);
+    q.b_fc.iter_mut().for_each(|w| *w = (rng.below(65536) as i64 - 32768) as i16);
+    q.w_frac = 6 + rng.below(4) as u32;
+    q
+}
+
+/// Moderate trained-looking model (the chip-level sweep).
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.b.iter_mut().for_each(|w| *w = (rng.below(512) as i16) - 256);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+/// Random feature-frame stream on the chip's Q8.8 activation grid.
+fn stream(rng: &mut Pcg, frames: usize, p_move: f64, step: i16) -> Vec<[i16; C]> {
+    let mut cur = [60i16; C];
+    (0..frames)
+        .map(|_| {
+            for slot in cur.iter_mut().take(14).skip(4) {
+                if rng.uniform() < p_move {
+                    let d = (rng.below(2 * step as u64 + 1) as i16) - step;
+                    *slot = (*slot + d).clamp(0, 511);
+                }
+            }
+            cur
+        })
+        .collect()
+}
+
+fn pair(q: &QuantParams, cfg: &AccelConfig) -> (DeltaRnnAccel, DeltaRnnAccel) {
+    (
+        DeltaRnnAccel::new(q.clone(), cfg.clone().with_simd(false), SramKind::NearVth),
+        DeltaRnnAccel::new(q.clone(), cfg.clone().with_simd(true), SramKind::NearVth),
+    )
+}
+
+/// Step both datapaths through the same frames, asserting bit-exact
+/// per-frame results and identical final state/telemetry.
+fn assert_lockstep(
+    scalar: &mut DeltaRnnAccel,
+    simd: &mut DeltaRnnAccel,
+    frames: &[[i16; C]],
+    tag: &str,
+) {
+    for (t, f) in frames.iter().enumerate() {
+        let a = scalar.step_frame(f);
+        let b = simd.step_frame(f);
+        assert_eq!(a.logits, b.logits, "{tag}: logits diverged at frame {t}");
+        assert_eq!(a.fired, b.fired, "{tag}: fired diverged at frame {t}");
+        assert_eq!(a.cycles, b.cycles, "{tag}: cycles diverged at frame {t}");
+    }
+    assert_eq!(scalar.state(), simd.state(), "{tag}: final state diverged");
+    assert_eq!(scalar.activity, simd.activity, "{tag}: activity diverged");
+    assert_eq!(scalar.sram.reads, simd.sram.reads, "{tag}: SRAM reads diverged");
+    assert_eq!(
+        scalar.sram.bank_reads, simd.sram.bank_reads,
+        "{tag}: per-bank SRAM traffic diverged"
+    );
+}
+
+#[test]
+fn randomized_models_step_frame_bit_exact() {
+    forall(24, |rng| {
+        let q = rng_quant_rand(rng);
+        // Θ = 0 (everything fires), the design point, and beyond the
+        // activation full scale (nothing ever fires)
+        let th = [0i16, 51, 1024][rng.below(3) as usize];
+        let cfg = AccelConfig::design_point().with_delta_th(th);
+        let (mut scalar, mut simd) = pair(&q, &cfg);
+        let frames = stream(rng, 40, 0.4, 60);
+        assert_lockstep(&mut scalar, &mut simd, &frames, &format!("th={th}"));
+    });
+}
+
+#[test]
+fn saturation_heavy_extreme_weights_bit_exact() {
+    // all-±127 rows + full-scale alternating inputs: every event lands the
+    // largest representable product and the gate pre-activations blow past
+    // the NLU's Q4.12 input clamp in both directions
+    let mut q = QuantParams::zeroed();
+    for (i, row) in q.w_x.iter_mut().enumerate() {
+        row.iter_mut().for_each(|w| *w = if i % 2 == 0 { 127 } else { -128 });
+    }
+    for (j, row) in q.w_h.iter_mut().enumerate() {
+        row.iter_mut().for_each(|w| *w = if j % 2 == 0 { 127 } else { -128 });
+    }
+    q.b.iter_mut().enumerate().for_each(|(g, b)| *b = if g % 2 == 0 { 32767 } else { -32768 });
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = 127);
+    let m_frac = q.m_frac();
+    let cfg = AccelConfig::design_point().with_delta_th(0);
+    let (mut scalar, mut simd) = pair(&q, &cfg);
+    // swing the full i16 range so every delta is ~2^16 (the accel-level
+    // input is not clamped to the chip's 9-bit feature grid)
+    let mut clamp_hit = (false, false);
+    for t in 0..60 {
+        let v: i16 = if t % 2 == 0 { 32767 } else { -32768 };
+        let x = [v; C];
+        let a = scalar.step_frame(&x);
+        let b = simd.step_frame(&x);
+        assert_eq!(a.logits, b.logits, "frame {t}");
+        assert_eq!((a.fired, a.cycles), (b.fired, b.cycles), "frame {t}");
+        // NLU input clamp engages once |m| >> nlu_shift exceeds Q4.12
+        let rail = 8i64 << m_frac;
+        for &m in scalar.state().m_r.iter() {
+            clamp_hit.0 |= m as i64 >= rail;
+            clamp_hit.1 |= m as i64 <= -rail;
+        }
+    }
+    assert_eq!(scalar.state(), simd.state());
+    assert_eq!(scalar.activity, simd.activity);
+    assert!(clamp_hit.0 && clamp_hit.1, "NLU clamp never engaged on both rails: {clamp_hit:?}");
+}
+
+#[test]
+fn fifo_interleavings_bit_exact_on_fast_path() {
+    // depth-1 vs deep ΔFIFO rings on the *fast* datapath: the drain-order
+    // invariance the scalar accel tests pin must survive vectorization
+    forall(8, |rng| {
+        let q = rng_quant_rand(rng);
+        let mut tiny_cfg = AccelConfig::design_point().with_simd(true);
+        tiny_cfg.fifo_depth = 1;
+        let mut deep_cfg = AccelConfig::design_point().with_simd(true);
+        deep_cfg.fifo_depth = 64;
+        let mut tiny = DeltaRnnAccel::new(q.clone(), tiny_cfg, SramKind::NearVth);
+        let mut deep = DeltaRnnAccel::new(q, deep_cfg, SramKind::NearVth);
+        for (t, f) in stream(rng, 30, 0.5, 80).iter().enumerate() {
+            let a = tiny.step_frame(f);
+            let b = deep.step_frame(f);
+            assert_eq!(a.logits, b.logits, "frame {t}");
+            assert_eq!(a.cycles, b.cycles, "frame {t}");
+        }
+        assert_eq!(tiny.state(), deep.state());
+    });
+}
+
+#[test]
+fn batched_host_matches_scalar_solos() {
+    // scalar == SIMD == batched in one assertion chain: the batched host
+    // runs the fast kernels, the solo references run the scalar oracle
+    forall(6, |rng| {
+        let q = rng_quant_rand(rng);
+        let cfg = AccelConfig::design_point();
+        let n = 1 + rng.below(5) as usize;
+        let streams: Vec<Vec<[i16; C]>> =
+            (0..n).map(|_| stream(rng, 25, 0.4, 60)).collect();
+        let mut host =
+            DeltaRnnAccel::new(q.clone(), cfg.clone().with_simd(true), SramKind::NearVth);
+        let mut solos: Vec<DeltaRnnAccel> = (0..n)
+            .map(|_| DeltaRnnAccel::new(q.clone(), cfg.clone().with_simd(false), SramKind::NearVth))
+            .collect();
+        let mut sessions = vec![BatchSession::new(); n];
+        for t in 0..25 {
+            for (sess, st) in sessions.iter_mut().zip(streams.iter()) {
+                sess.stage(st[t]);
+            }
+            let stats = host.step_frames_batched(&mut sessions);
+            assert_eq!(stats.stepped, n);
+            assert!(stats.physical_word_reads <= stats.logical_word_reads);
+            for (s, sess) in sessions.iter().enumerate() {
+                let solo = solos[s].step_frame(&streams[s][t]);
+                let got = sess.last.expect("stepped");
+                assert_eq!(got.logits, solo.logits, "t={t} s={s}");
+                assert_eq!((got.fired, got.cycles), (solo.fired, solo.cycles), "t={t} s={s}");
+            }
+        }
+        for (s, sess) in sessions.iter().enumerate() {
+            assert_eq!(sess.state(), solos[s].state(), "session {s}");
+            assert_eq!(sess.activity, solos[s].activity, "session {s}");
+        }
+    });
+}
+
+#[test]
+fn hundred_utterances_scalar_simd_batched_chip_equivalence() {
+    const GROUP: usize = 4;
+    let ds = Dataset::new(0x51D6);
+    let q = rng_quant(1);
+    let mut scalar_cfg = ChipConfig::design_point();
+    scalar_cfg.accel.use_simd = false;
+    let mut simd_cfg = ChipConfig::design_point();
+    simd_cfg.accel.use_simd = true;
+    let mut scalar_chip = KwsChip::new(q.clone(), scalar_cfg);
+    let mut simd_chip = KwsChip::new(q.clone(), simd_cfg.clone());
+    // FEx front end + batch host for the batched-chip path
+    let mut batch_chip = KwsChip::new(q, simd_cfg);
+    let mut sessions = vec![BatchSession::new(); GROUP];
+
+    for group in 0..(100 / GROUP) {
+        // per-utterance frames through the batch chip's FEx
+        let mut frames: Vec<Vec<[i16; MAX_CHANNELS]>> = Vec::with_capacity(GROUP);
+        let mut decisions = Vec::with_capacity(GROUP);
+        for g in 0..GROUP {
+            let i = group * GROUP + g;
+            let utt = ds.utterance(Split::Test, i);
+            let d_scalar = scalar_chip.process_utterance(&utt.audio12);
+            let d_simd = simd_chip.process_utterance(&utt.audio12);
+            assert_eq!(d_scalar, d_simd, "utt {i}: SIMD decision diverged");
+            decisions.push(d_scalar);
+            batch_chip.reset();
+            let mut fr = Vec::new();
+            for piece in utt.audio12.chunks(deltakws::chip::SAFE_CHUNK_SAMPLES) {
+                batch_chip.push_samples(piece).expect("chunk fits");
+                while let Some(qf) = batch_chip.pop_frame_activations() {
+                    fr.push(qf);
+                }
+            }
+            frames.push(fr);
+        }
+        // lockstep ΔRNN over the group (counters survive reset_state)
+        for sess in sessions.iter_mut() {
+            sess.reset_state();
+        }
+        let mut accums: Vec<DecisionAccum> =
+            (0..GROUP).map(|_| DecisionAccum::new(batch_chip.config.warmup)).collect();
+        let max_t = frames.iter().map(|f| f.len()).max().unwrap_or(0);
+        for t in 0..max_t {
+            for (sess, fr) in sessions.iter_mut().zip(frames.iter()) {
+                if let Some(&qf) = fr.get(t) {
+                    sess.stage(qf);
+                }
+            }
+            batch_chip.accel.step_frames_batched(&mut sessions);
+            for ((sess, fr), acc) in sessions.iter().zip(frames.iter()).zip(accums.iter_mut()) {
+                if t >= fr.len() {
+                    continue;
+                }
+                let r = sess.last.expect("staged session stepped");
+                acc.push(&FrameOut {
+                    index: t as u64,
+                    feat: [0i64; MAX_CHANNELS],
+                    logits: r.logits,
+                    fired: r.fired,
+                    cycles: r.cycles,
+                    gated: false,
+                });
+            }
+        }
+        for (g, acc) in accums.iter().enumerate() {
+            let i = group * GROUP + g;
+            assert_eq!(acc.finish(), decisions[g], "utt {i}: batched decision diverged");
+        }
+    }
+
+    // aggregate telemetry: scalar == SIMD, and the batched split
+    // (on-chip FEx + per-session RNN accounting) re-assembles to the same
+    // ChipActivity as a solo chip
+    let scalar_act = scalar_chip.activity();
+    assert_eq!(scalar_act, simd_chip.activity(), "SIMD chip activity diverged");
+    let mut batched_act: ChipActivity = batch_chip.activity();
+    for sess in &sessions {
+        batched_act.merge(&sess.activity);
+    }
+    assert_eq!(scalar_act, batched_act, "batched activity accounting diverged");
+    assert!(scalar_act.frames >= 100 * 62, "sweep too short: {}", scalar_act.frames);
+}

@@ -1,35 +1,45 @@
 #!/usr/bin/env python3
-"""Run the bench suite in smoke mode and emit BENCH_5.json.
+"""Run the bench suite in smoke mode and emit BENCH_<N>.json.
 
-The first point on the repo's bench trajectory (ISSUE 5 satellite): runs
-`hotpath_bench` (probed-vs-unprobed frame path) and `soak_bench`
-(sustained decisions/sec) with DELTAKWS_BENCH_SMOKE=1 + DELTAKWS_BENCH_JSON=1,
-parses the machine-readable `results/bench.jsonl` the in-crate harness
-appends, and folds the numbers relevant to the probe-layer refactor into
-one JSON artifact:
+One point on the repo's bench trajectory per PR (`ls BENCH_*.json` shows
+the history). Runs `hotpath_bench` (probed-vs-unprobed frame path +
+scalar/simd/batched datapath A/B), `delta_sweep` (Fig. 12 sweep + the
+speedup-vs-sparsity curve) and `soak_bench` (sustained decisions/sec)
+with DELTAKWS_BENCH_SMOKE=1 + DELTAKWS_BENCH_JSON=1, parses the
+machine-readable `results/bench.jsonl` the in-crate harness appends, and
+folds the relevant numbers into one JSON artifact:
 
   {
     "frames_per_sec": {"lean": ..., "traced": ...},   # consume+decide layer
     "probe_overhead_x": {...},                         # traced/lean per case
     "utterance_frames_per_sec": {...},
+    "datapath_speedup_x": {"simd": ..., "batched": ...},
+    "speedup_vs_sparsity": [{"sparsity_pct": 0, "simd_speedup_x": ...}, ...],
     "soak_decisions_per_sec": ...,
-    "cases": {bench: {case: mean_ns}}
+    "cases": {bench: {case: mean_ns}},
+    "baseline": {"path": ..., "ratios": {...}}         # vs BENCH_<N-1>.json
   }
 
-Intended for CI (non-blocking step, artifact upload) and local use:
+The issue number is derived automatically (max N among existing
+BENCH_*.json in the working directory — i.e. refresh the newest point)
+unless pinned with --issue; the baseline defaults to BENCH_<N-1>.json
+when present. Intended for CI (non-blocking step, artifact upload) and
+local use:
 
-  python3 tools/bench_report.py --out BENCH_5.json
-  python3 tools/bench_report.py --skip-build   # parse an existing jsonl
+  python3 tools/bench_report.py                  # auto: BENCH_<N>.json
+  python3 tools/bench_report.py --issue 6        # pin the trajectory point
+  python3 tools/bench_report.py --skip-build     # parse an existing jsonl
 """
 
 import argparse
+import glob
 import json
 import os
 import re
 import subprocess
 import sys
 
-BENCHES = ["hotpath_bench", "soak_bench"]
+BENCHES = ["hotpath_bench", "delta_sweep", "soak_bench"]
 # cargo runs bench binaries with cwd set to the package root (rust/), so
 # the harness's results/bench.jsonl lands there when invoked from the
 # repo root; accept either location (newest wins)
@@ -37,6 +47,30 @@ JSONL_CANDIDATES = [
     os.path.join("rust", "results", "bench.jsonl"),
     os.path.join("results", "bench.jsonl"),
 ]
+# first PR that committed a bench artifact (fallback when none exist yet;
+# PR 5's report only lived as a CI artifact)
+FIRST_ISSUE = 6
+
+SPARSITY_RE = re.compile(r"step_frame (scalar|simd) @ s=(\d+)")
+BATCHED_RE = re.compile(r"step_frames_batched x(\d+) @ s=(\d+)")
+
+
+def existing_issues():
+    """Trajectory points already committed: BENCH_<N>.json in cwd."""
+    out = []
+    for path in glob.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(path))
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def resolve_issue(arg):
+    if arg != "auto":
+        return int(arg)
+    issues = existing_issues()
+    # refresh the newest committed point; fall back to the first artifact
+    return issues[-1] if issues else FIRST_ISSUE
 
 
 def find_jsonl():
@@ -46,17 +80,16 @@ def find_jsonl():
     return max(existing, key=os.path.getmtime)
 
 
-def run_benches():
+def run_benches(features):
     env = dict(os.environ)
     env["DELTAKWS_BENCH_SMOKE"] = "1"
     env["DELTAKWS_BENCH_JSON"] = "1"
     for bench in BENCHES:
         print(f"== running {bench} (smoke mode) ==", flush=True)
-        subprocess.run(
-            ["cargo", "bench", "--bench", bench],
-            env=env,
-            check=True,
-        )
+        cmd = ["cargo", "bench", "--bench", bench]
+        if features:
+            cmd += ["--features", features]
+        subprocess.run(cmd, env=env, check=True)
 
 
 def parse_jsonl(path):
@@ -75,8 +108,43 @@ def frames_per_sec(mean_ns, frames_per_iter):
     return frames_per_iter / (mean_ns * 1e-9) if mean_ns else None
 
 
-def build_report(cases):
+def sparsity_curve(sweep_cases):
+    """Fold the `@ s=N` labels into one row per sparsity point."""
+    points = {}
+
+    def point(pct):
+        return points.setdefault(int(pct), {"sparsity_pct": int(pct)})
+
+    for label, mean_ns in sweep_cases.items():
+        m = SPARSITY_RE.fullmatch(label)
+        if m and mean_ns:
+            kind, pct = m.group(1), m.group(2)
+            p = point(pct)
+            p[f"{kind}_mean_ns"] = mean_ns
+            p[f"{kind}_frames_per_sec"] = frames_per_sec(mean_ns, 1.0)
+            continue
+        m = BATCHED_RE.fullmatch(label)
+        if m and mean_ns:
+            n, pct = int(m.group(1)), m.group(2)
+            p = point(pct)
+            # mean_ns is per iteration = per n frames; report per-frame
+            p["batch_sessions"] = n
+            p["batched_mean_ns_per_frame"] = mean_ns / n
+            p["batched_frames_per_sec"] = frames_per_sec(mean_ns, float(n))
+    for p in points.values():
+        scalar = p.get("scalar_mean_ns")
+        if scalar and p.get("simd_mean_ns"):
+            p["simd_speedup_x"] = round(scalar / p["simd_mean_ns"], 3)
+        if scalar and p.get("batched_mean_ns_per_frame"):
+            p["batched_speedup_x"] = round(
+                scalar / p["batched_mean_ns_per_frame"], 3
+            )
+    return [points[k] for k in sorted(points)]
+
+
+def build_report(cases, issue):
     hot = cases.get("hotpath (probe A/B)", {})
+    sweep = cases.get("delta_sweep (Fig. 12)", {})
     soak = cases.get("soak", {})
 
     def ratio(traced_label, lean_label):
@@ -84,8 +152,9 @@ def build_report(cases):
         return round(a / b, 3) if a and b else None
 
     report = {
-        "schema": "deltakws-bench-report/1",
+        "schema": "deltakws-bench-report/2",
         "suite": "smoke",
+        "issue": issue,
         "cases": cases,
         # the consume+decide layer the probe refactor moved off the
         # default path: lean accumulator vs per-decision trace
@@ -116,7 +185,22 @@ def build_report(cases):
                 "frame consume+decide, lean accumulator",
             ),
         },
+        # scalar oracle vs fast kernels vs batched stepper, same bits
+        "datapath_speedup_x": {
+            "simd": ratio(
+                "step_frame design point, scalar oracle",
+                "step_frame design point, simd",
+            ),
+            "batched_per_frame": None,
+        },
+        "speedup_vs_sparsity": sparsity_curve(sweep),
     }
+    dp_scalar = hot.get("step_frame design point, scalar oracle")
+    dp_batch = hot.get("step_frames_batched x8, design point")
+    if dp_scalar and dp_batch:
+        report["datapath_speedup_x"]["batched_per_frame"] = round(
+            dp_scalar / (dp_batch / 8.0), 3
+        )
     lean = report["frames_per_sec"]["lean"]
     traced = report["frames_per_sec"]["traced"]
     if lean and traced:
@@ -134,9 +218,58 @@ def build_report(cases):
     return report
 
 
+def diff_baseline(report, baseline_path):
+    """Non-fatal comparison against the previous trajectory point."""
+    try:
+        with open(baseline_path, encoding="utf-8") as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"baseline {baseline_path} unreadable ({e}); skipping diff")
+        return None
+
+    def pick(rep, *keys):
+        cur = rep
+        for k in keys:
+            if not isinstance(cur, dict) or cur.get(k) is None:
+                return None
+            cur = cur[k]
+        return cur if isinstance(cur, (int, float)) else None
+
+    tracked = {
+        "frames_per_sec.lean": ("frames_per_sec", "lean"),
+        "utterance_frames_per_sec.lean": ("utterance_frames_per_sec", "lean"),
+        "soak_decisions_per_sec": ("soak_decisions_per_sec",),
+    }
+    ratios = {}
+    for name, keys in tracked.items():
+        now, then = pick(report, *keys), pick(base, *keys)
+        if now and then:
+            ratios[name] = round(now / then, 3)
+    diff = {"path": baseline_path, "ratios": ratios}
+    print(f"vs baseline {baseline_path}: "
+          + ", ".join(f"{k} {v}x" for k, v in ratios.items()))
+    return diff
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_5.json", help="output JSON path")
+    ap.add_argument(
+        "--issue",
+        default="auto",
+        help="trajectory point N for BENCH_<N>.json (default: newest committed)",
+    )
+    ap.add_argument("--out", default=None, help="output JSON path (overrides --issue)")
+    ap.add_argument(
+        "--baseline",
+        default="auto",
+        help="previous BENCH_*.json to diff against "
+        "(default: BENCH_<N-1>.json when present; 'none' to disable)",
+    )
+    ap.add_argument(
+        "--features",
+        default="",
+        help="cargo feature list for the bench builds (e.g. 'simd')",
+    )
     ap.add_argument(
         "--skip-build",
         action="store_true",
@@ -144,12 +277,15 @@ def main():
     )
     args = ap.parse_args()
 
+    issue = resolve_issue(args.issue)
+    out = args.out or f"BENCH_{issue}.json"
+
     if not args.skip_build:
         # start from a clean slate so stale lines don't pollute the report
         for path in JSONL_CANDIDATES:
             if os.path.exists(path):
                 os.remove(path)
-        run_benches()
+        run_benches(args.features)
 
     jsonl = find_jsonl()
     if jsonl is None:
@@ -159,15 +295,35 @@ def main():
         )
         return 1
 
-    report = build_report(parse_jsonl(jsonl))
-    with open(args.out, "w", encoding="utf-8") as f:
+    report = build_report(parse_jsonl(jsonl), issue)
+
+    baseline = args.baseline
+    if baseline == "auto":
+        candidate = f"BENCH_{issue - 1}.json"
+        baseline = candidate if os.path.exists(candidate) else "none"
+    if baseline != "none":
+        diff = diff_baseline(report, baseline)
+        if diff:
+            report["baseline"] = diff
+
+    with open(out, "w", encoding="utf-8") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"wrote {args.out}")
+    print(f"wrote {out}")
     ratios = report.get("probe_overhead_x", {})
     print(f"probe overhead (traced/lean): {ratios}")
     if "lean_speedup_x" in report:
         print(f"lean consume+decide speedup: {report['lean_speedup_x']}x")
+    dp = report.get("datapath_speedup_x", {})
+    if dp.get("simd"):
+        print(f"datapath speedup: simd {dp['simd']}x, "
+              f"batched {dp.get('batched_per_frame')}x per frame")
+    curve = report.get("speedup_vs_sparsity", [])
+    if curve:
+        pts = ", ".join(
+            f"{p['sparsity_pct']}%: {p.get('simd_speedup_x', '?')}x" for p in curve
+        )
+        print(f"simd speedup vs sparsity: {pts}")
     if "soak_decisions_per_sec" in report:
         print(f"soak decisions/sec: {report['soak_decisions_per_sec']}")
     return 0
