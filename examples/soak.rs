@@ -22,6 +22,7 @@
 use deltakws::accel::gru::QuantParams;
 use deltakws::chip::ChipConfig;
 use deltakws::coordinator::soak::{run_soak, SoakConfig, SoakReport};
+use deltakws::obs::MetricsSnapshot;
 use deltakws::util::prng::Pcg;
 
 fn rng_quant(seed: u64) -> QuantParams {
@@ -70,6 +71,12 @@ fn print_report(label: &str, r: &SoakReport) {
         r.final_stats.activity.duty_cycle() * 100.0,
         r.final_stats.activity.frames
     );
+    println!(
+        "steady     : {:.0} decisions/s / {:.0} chunks/s over the warmed-up window ({:.1} s)",
+        r.steady.decisions_per_sec(),
+        r.steady.chunks_per_sec(),
+        r.steady.elapsed_us as f64 / 1e6
+    );
 }
 
 fn main() {
@@ -112,4 +119,16 @@ fn main() {
         sharded.percentile_rel_err() <= 0.05,
         "histogram percentiles drifted past 5% of exact"
     );
+
+    // exposition artifact: the clean run's final stats as a schema-stable
+    // metrics snapshot (CI validates it with
+    // `tools/bench_report.py --validate-metrics`, and bench_report.py
+    // ingests it into the BENCH_<n>.json report)
+    let snap = MetricsSnapshot::from_stats(&sharded.final_stats);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/soak_metrics.json", format!("{}\n", snap.to_json()))
+        .expect("write soak metrics json");
+    std::fs::write("results/soak_metrics.prom", snap.to_prometheus())
+        .expect("write soak metrics prom");
+    println!("metrics snapshot -> results/soak_metrics.json / results/soak_metrics.prom");
 }

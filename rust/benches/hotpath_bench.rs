@@ -22,11 +22,19 @@
 //! the lane-packed fast kernels vs the 8-session batched stepper at the
 //! design point, all producing identical bits (`tests/simd_equivalence`).
 //!
+//! PR 7 adds a fifth: **flight-recorder A/B** — the same utterance decode
+//! through a `RecorderProbe` feeding an enabled ring (counter folding +
+//! one FrameBatch/Decision event per utterance), quantifying the
+//! observability tax relative to the lean path. The lean case itself is
+//! unchanged — its frames/sec tracks that the recorder stayed opt-in.
+//!
 //! Run: `cargo bench --bench hotpath_bench` (DELTAKWS_BENCH_SMOKE=1 for CI).
 
 mod common;
 
 use deltakws::chip::{ChipConfig, DecisionAccum, FrameOut, KwsChip};
+use deltakws::obs::recorder::{EventKind, FlightRecorder, RecorderConfig, RecorderProbe};
+use deltakws::obs::TraceId;
 use deltakws::probe::{ChipProbe, TraceProbe};
 use deltakws::util::bench::{black_box, Bench};
 
@@ -159,8 +167,35 @@ fn main() {
             r += 1;
         });
 
+    // --- (5) flight-recorder A/B ---------------------------------------
+    // the same full decode through an enabled recorder: RecorderProbe
+    // folds the per-frame hooks into counters and the ring sees one
+    // FrameBatch + one Decision per utterance — the worker-loop pattern
+    let rec = FlightRecorder::new(RecorderConfig::default());
+    let mut rec_chip = KwsChip::new(common::rng_quant(9), ChipConfig::design_point());
+    let mut v = 0usize;
+    let s_utt_rec = b.bench_with_items(
+        "utterance decode, recorder (RecorderProbe+ring)",
+        62.0,
+        "frames",
+        || {
+            let u = &utts[v % utts.len()];
+            v += 1;
+            let trace = TraceId(v as u64);
+            let mut rp = RecorderProbe::new(&rec, 0, trace);
+            let d = rec_chip.process_utterance_probed(black_box(u), &mut rp);
+            rp.flush_frame_batch();
+            rec.record(0, trace, EventKind::Decision { class: d.class as u8, service_us: 0 });
+            black_box(d);
+        },
+    );
+
     println!("\nprobe overhead (traced time / lean time, same work):");
     println!("  utterance decode     : {:.2}x", s_utt_traced.mean_ns / s_utt_lean.mean_ns);
+    println!(
+        "  recorder decode      : {:.2}x  (RecorderProbe + ring vs lean)",
+        s_utt_rec.mean_ns / s_utt_lean.mean_ns
+    );
     println!("  sparse accel frames  : {:.2}x", s_acc_traced.mean_ns / s_acc_lean.mean_ns);
     println!(
         "  frame consume+decide : {:.2}x  (lean path {:.2}x the traced frames/sec)",

@@ -12,6 +12,7 @@
 use crate::accel::gru::QuantParams;
 use crate::chip::ChipConfig;
 use crate::error::Error;
+use crate::obs::recorder::RecorderConfig;
 use crate::stream::StreamConfig;
 
 use super::telemetry::REPORT_EPOCH;
@@ -45,6 +46,7 @@ pub struct CoordinatorBuilder {
     queue_depth: usize,
     default_stream: Option<StreamConfig>,
     report_epoch: u64,
+    recorder: Option<RecorderConfig>,
 }
 
 impl CoordinatorBuilder {
@@ -56,6 +58,7 @@ impl CoordinatorBuilder {
             queue_depth: 16,
             default_stream: None,
             report_epoch: REPORT_EPOCH,
+            recorder: None,
         }
     }
 
@@ -89,6 +92,17 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Attach a per-worker flight recorder (default: none — the lean
+    /// hot path stays probe-free). Each worker gets its own bounded
+    /// event ring sized by [`RecorderConfig::capacity`]; the config's
+    /// anomaly rules freeze post-mortem dumps readable through
+    /// [`Coordinator::flight_dumps`](super::Coordinator::flight_dumps).
+    /// Validated: capacity and dump capacity ≥ 1.
+    pub fn recorder(mut self, config: RecorderConfig) -> Self {
+        self.recorder = Some(config);
+        self
+    }
+
     /// Validate every knob and spawn the worker pool.
     ///
     /// # Errors
@@ -109,6 +123,14 @@ impl CoordinatorBuilder {
         if self.report_epoch == 0 {
             return Err(Error::invalid_config("report_epoch", "must be >= 1"));
         }
+        if let Some(rec) = &self.recorder {
+            if rec.capacity == 0 {
+                return Err(Error::invalid_config("recorder.capacity", "must be >= 1"));
+            }
+            if rec.dump_cap == 0 {
+                return Err(Error::invalid_config("recorder.dump_cap", "must be >= 1"));
+            }
+        }
         self.chip.validate()?;
         let default_stream = match self.default_stream {
             Some(sc) => {
@@ -124,6 +146,7 @@ impl CoordinatorBuilder {
             self.queue_depth,
             default_stream,
             self.report_epoch,
+            self.recorder,
         ))
     }
 }

@@ -73,6 +73,11 @@ use crate::chip::{
 };
 use crate::energy::ChipActivity;
 use crate::error::{StreamPushError, SubmitError};
+use crate::obs::metrics::{MetricsRegistry, MetricsSnapshot};
+use crate::obs::recorder::{
+    EventKind, FlightDump, FlightRecorder, RecorderConfig, RecorderProbe, RecorderStats,
+};
+use crate::obs::TraceId;
 use crate::probe::DecisionTrace;
 use crate::stream::detector::DetectionEvent;
 use crate::stream::{StreamConfig, StreamPipeline};
@@ -134,6 +139,9 @@ pub struct Response {
     pub worker_seq: u64,
     /// per-frame diagnostics, present only for `Request { trace: true, … }`
     pub trace: Option<DecisionTrace>,
+    /// request-scoped trace id minted at submit — matches the flight
+    /// recorder's events for this utterance (see [`crate::obs`])
+    pub trace_id: TraceId,
 }
 
 /// Per-worker serving counters (the per-lane view of routing health:
@@ -193,6 +201,10 @@ pub struct Stats {
     /// per-worker routing/serving counters (indexed by worker; folded
     /// from lane atomics + telemetry shards by [`Coordinator::stats`])
     pub per_worker: Vec<LaneStats>,
+    /// monotonic capture timestamp ([`crate::obs::monotonic_us`]), stamped
+    /// by [`Coordinator::stats`]; what makes two snapshots comparable via
+    /// [`Stats::delta_since`]
+    pub captured_us: u64,
 }
 
 impl Stats {
@@ -226,6 +238,92 @@ impl Stats {
             + self.chunk_latency.heap_bytes()
             + self.per_worker.len() * std::mem::size_of::<LaneStats>()
     }
+
+    /// Streaming audio chunks processed pool-wide (folded from the
+    /// per-worker lanes).
+    pub fn stream_chunks(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.stream_chunks).sum()
+    }
+
+    /// Counter movement between an earlier snapshot (`prev`) and this one,
+    /// for rate computation — decisions/sec, drops/sec — without
+    /// re-deriving rates by hand from wall clocks. Counters use saturating
+    /// subtraction, so comparing snapshots from different pools degrades
+    /// to zeros instead of underflowing.
+    pub fn delta_since(&self, prev: &Stats) -> StatsDelta {
+        StatsDelta {
+            elapsed_us: self.captured_us.saturating_sub(prev.captured_us),
+            completed: self.completed.saturating_sub(prev.completed),
+            rejected_full: self.rejected_full.saturating_sub(prev.rejected_full),
+            rejected_closed: self.rejected_closed.saturating_sub(prev.rejected_closed),
+            spilled: self.spilled.saturating_sub(prev.spilled),
+            fused_batches: self.fused_batches.saturating_sub(prev.fused_batches),
+            stream_events_dropped: self
+                .stream_events_dropped
+                .saturating_sub(prev.stream_events_dropped),
+            stream_chunks: self.stream_chunks().saturating_sub(prev.stream_chunks()),
+            frames: self.activity.frames.saturating_sub(prev.activity.frames),
+        }
+    }
+}
+
+/// Counter movement between two [`Stats`] snapshots
+/// ([`Stats::delta_since`]): the rates window the metrics exposition
+/// reports, and what the soak harness uses for its steady-state
+/// decisions/sec figure.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsDelta {
+    /// wall-clock span between the two captures, µs (0 ⇒ every rate is 0)
+    pub elapsed_us: u64,
+    /// utterance decisions completed in the window
+    pub completed: u64,
+    /// backpressure rejections in the window
+    pub rejected_full: u64,
+    /// closed-pool rejections in the window
+    pub rejected_closed: u64,
+    /// spilled submissions in the window
+    pub spilled: u64,
+    /// fused batches served in the window
+    pub fused_batches: u64,
+    /// stream events shed in the window
+    pub stream_events_dropped: u64,
+    /// stream chunks processed in the window
+    pub stream_chunks: u64,
+    /// chip frames consumed in the window
+    pub frames: u64,
+}
+
+impl StatsDelta {
+    fn per_sec(count: u64, elapsed_us: u64) -> f64 {
+        if elapsed_us == 0 {
+            0.0
+        } else {
+            count as f64 * 1e6 / elapsed_us as f64
+        }
+    }
+
+    /// Utterance decisions per second over the window.
+    pub fn decisions_per_sec(&self) -> f64 {
+        Self::per_sec(self.completed, self.elapsed_us)
+    }
+
+    /// Losses per second: rejections (both causes) + shed stream events.
+    pub fn drops_per_sec(&self) -> f64 {
+        Self::per_sec(
+            self.rejected_full + self.rejected_closed + self.stream_events_dropped,
+            self.elapsed_us,
+        )
+    }
+
+    /// Stream chunks per second over the window.
+    pub fn chunks_per_sec(&self) -> f64 {
+        Self::per_sec(self.stream_chunks, self.elapsed_us)
+    }
+
+    /// Chip frames per second over the window.
+    pub fn frames_per_sec(&self) -> f64 {
+        Self::per_sec(self.frames, self.elapsed_us)
+    }
 }
 
 /// Exact percentile of a sample by the exclusive nearest-rank rule with a
@@ -255,15 +353,17 @@ enum Job {
     /// routed by request id, never to a global queue
     Utterance {
         req: Request,
+        trace: TraceId,
         enqueued: Instant,
         reply: Weak<Mailbox>,
     },
     /// a fused group of independent utterances served in lockstep through
     /// the batched-chip path (one weight-row fetch per fired lane per
     /// frame for the whole group); routed as one unit to one worker,
-    /// lean-only (`Request::trace` is ignored)
+    /// lean-only (`Request::trace` is ignored); `traces` parallels `reqs`
     UtteranceBatch {
         reqs: Vec<Request>,
+        traces: Vec<TraceId>,
         enqueued: Instant,
         reply: Weak<Mailbox>,
     },
@@ -273,6 +373,7 @@ enum Job {
     /// Close was never deliverable)
     StreamOpen {
         session: u64,
+        trace: TraceId,
         config: Option<StreamConfig>,
         events: SyncSender<StreamEvent>,
         alive: Arc<AtomicBool>,
@@ -286,13 +387,27 @@ enum Job {
     PublishReport { ack: Sender<()> },
 }
 
-/// Asynchronous output of a [`StreamSession`].
+/// Asynchronous output of a [`StreamSession`]. Every event carries the
+/// session's [`TraceId`] (minted at open), correlating it with the flight
+/// recorder's timeline for that session.
 #[derive(Debug, Clone)]
 pub enum StreamEvent {
     /// the wakeword state machine confirmed a detection
-    Detection(DetectionEvent),
+    Detection {
+        /// the session's trace id
+        trace: TraceId,
+        /// the detection itself
+        event: DetectionEvent,
+    },
     /// final telemetry, emitted exactly once when the session closes
-    Closed { frames: u64, gated_frames: u64 },
+    Closed {
+        /// the session's trace id
+        trace: TraceId,
+        /// total frames the session's chip consumed
+        frames: u64,
+        /// frames consumed with the ΔRNN clock-gated
+        gated_frames: u64,
+    },
 }
 
 /// Why one lane refused an utterance job (the request rides back).
@@ -342,6 +457,13 @@ struct Router {
     next_id: AtomicU64,
     /// unique ids for [`StreamSession`]s (stream ids may repeat)
     next_session: AtomicU64,
+    /// request-scoped trace ids (starts at 1; 0 is [`TraceId::NONE`])
+    next_trace: AtomicU64,
+    /// per-worker flight recorders (disabled singletons unless the pool
+    /// was built with [`CoordinatorBuilder::recorder`]). Submit-side
+    /// events land on the *pinned* lane's ring; worker-side events on the
+    /// executing lane's.
+    recorders: Vec<Arc<FlightRecorder>>,
     /// every mailbox handed out (default + per client), closed at pool
     /// shutdown so blocked ticket waits resolve to `Closed`. Locked only
     /// on client creation and shutdown — never on the submit path.
@@ -351,6 +473,10 @@ struct Router {
 impl Router {
     fn pinned_lane(&self, stream: u64) -> usize {
         (stream as usize) % self.lanes.len()
+    }
+
+    fn mint_trace(&self) -> TraceId {
+        TraceId(self.next_trace.fetch_add(1, Ordering::Relaxed))
     }
 
     /// Routing: the stream's pinned worker unless its queue is full, then
@@ -366,8 +492,10 @@ impl Router {
         let reply = Arc::downgrade(mailbox);
         let now = Instant::now();
         let pinned = self.pinned_lane(stream);
+        let trace = self.mint_trace();
+        self.recorders[pinned].record(pinned as u32, trace, EventKind::Submit);
         let mut any_full = false;
-        let mut req = match self.try_lane(pinned, req, now, &reply) {
+        let mut req = match self.try_lane(pinned, req, trace, now, &reply) {
             Ok(()) => return Ok(Ticket::new(id, stream, Arc::clone(mailbox))),
             Err(LaneError::Full(r)) => {
                 self.lanes[pinned].pinned_full.fetch_add(1, Ordering::Relaxed);
@@ -380,7 +508,7 @@ impl Router {
         let mut order: Vec<usize> = (0..self.lanes.len()).filter(|&w| w != pinned).collect();
         order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
         for w in order {
-            req = match self.try_lane(w, req, now, &reply) {
+            req = match self.try_lane(w, req, trace, now, &reply) {
                 Ok(()) => {
                     self.lanes[w].spilled_in.fetch_add(1, Ordering::Relaxed);
                     return Ok(Ticket::new(id, stream, Arc::clone(mailbox)));
@@ -395,6 +523,7 @@ impl Router {
         mailbox.unregister(id);
         if any_full {
             self.rejected_full.fetch_add(1, Ordering::Relaxed);
+            self.recorders[pinned].record(pinned as u32, trace, EventKind::Backpressure);
             Err(SubmitError::QueueFull(req))
         } else {
             self.rejected_closed.fetch_add(1, Ordering::Relaxed);
@@ -406,10 +535,11 @@ impl Router {
         &self,
         w: usize,
         req: Request,
+        trace: TraceId,
         t: Instant,
         reply: &Weak<Mailbox>,
     ) -> Result<(), LaneError> {
-        let job = Job::Utterance { req, enqueued: t, reply: reply.clone() };
+        let job = Job::Utterance { req, trace, enqueued: t, reply: reply.clone() };
         match self.lanes[w].tx.try_send(job) {
             Ok(()) => {
                 self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
@@ -435,9 +565,11 @@ impl Router {
         mut reqs: Vec<Request>,
         mailbox: &Arc<Mailbox>,
     ) -> Result<Batch, FusedLaneError> {
+        let mut traces = Vec::with_capacity(reqs.len());
         for req in reqs.iter_mut() {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
             mailbox.register(req.id);
+            traces.push(self.mint_trace());
         }
         let meta: Vec<(u64, u64)> = reqs.iter().map(|r| (r.id, r.stream)).collect();
         let reply = Arc::downgrade(mailbox);
@@ -446,7 +578,12 @@ impl Router {
         order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
         let mut any_full = false;
         for w in order {
-            let job = Job::UtteranceBatch { reqs, enqueued: now, reply: reply.clone() };
+            let job = Job::UtteranceBatch {
+                reqs,
+                traces: traces.clone(),
+                enqueued: now,
+                reply: reply.clone(),
+            };
             reqs = match self.lanes[w].tx.try_send(job) {
                 Ok(()) => {
                     self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
@@ -612,6 +749,8 @@ pub struct StreamSession {
     stream: u64,
     /// unique id keying the worker-side state (stream ids may repeat)
     session: u64,
+    /// trace id minted at open; stamped on every event this session emits
+    trace: TraceId,
     router: Weak<Router>,
     /// asynchronous session output ([`StreamEvent`])
     pub events: Receiver<StreamEvent>,
@@ -623,6 +762,13 @@ pub struct StreamSession {
 impl StreamSession {
     pub fn stream_id(&self) -> u64 {
         self.stream
+    }
+
+    /// The session's [`TraceId`] (minted at open): matches the `trace`
+    /// field on every [`StreamEvent`] it emits and on the flight
+    /// recorder's events for this session.
+    pub fn trace_id(&self) -> TraceId {
+        self.trace
     }
 
     /// Submit an audio chunk (non-blocking). `Err` hands the chunk back:
@@ -644,6 +790,12 @@ impl StreamSession {
             )
             .map_err(|e| match e {
                 StreamLaneError::Full(Job::StreamData { chunk, .. }) => {
+                    let lane = router.pinned_lane(self.stream);
+                    router.recorders[lane].record(
+                        lane as u32,
+                        self.trace,
+                        EventKind::Backpressure,
+                    );
                     StreamPushError::Backpressure(chunk)
                 }
                 StreamLaneError::Disconnected(Job::StreamData { chunk, .. }) => {
@@ -750,6 +902,9 @@ pub struct Coordinator {
     /// [`Coordinator::collect`] shim (its mailbox retains unclaimed
     /// responses, which is what `collect` drains)
     default_client: Client,
+    /// metrics-snapshot folder (sequence + previous snapshot for rates);
+    /// locked only inside [`Coordinator::metrics`], never on a hot path
+    registry: Mutex<MetricsRegistry>,
 }
 
 impl Coordinator {
@@ -769,15 +924,21 @@ impl Coordinator {
         queue_depth: usize,
         default_stream: StreamConfig,
         report_epoch: u64,
+        recorder: Option<RecorderConfig>,
     ) -> Self {
         let mut lanes = Vec::with_capacity(n_workers);
         let mut shards = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
+        let mut recorders = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let (tx, rx) = sync_channel::<Job>(queue_depth);
             let stalled = Arc::new(AtomicBool::new(false));
             let depth = Arc::new(AtomicU64::new(0));
             let shard = Arc::new(WorkerShard::default());
+            let rec = Arc::new(match &recorder {
+                Some(cfg) => FlightRecorder::new(cfg.clone()),
+                None => FlightRecorder::disabled(),
+            });
             let handle = {
                 let params = params.clone();
                 let config = config.clone();
@@ -785,6 +946,7 @@ impl Coordinator {
                 let stalled = Arc::clone(&stalled);
                 let depth = Arc::clone(&depth);
                 let shard = Arc::clone(&shard);
+                let rec = Arc::clone(&rec);
                 std::thread::Builder::new()
                     .name(format!("chip-worker-{w}"))
                     .spawn(move || {
@@ -798,6 +960,7 @@ impl Coordinator {
                             shard,
                             stalled,
                             depth,
+                            rec,
                         )
                     })
                     .expect("spawn worker")
@@ -811,6 +974,7 @@ impl Coordinator {
             });
             shards.push(shard);
             handles.push(handle);
+            recorders.push(rec);
         }
         let router = Arc::new(Router {
             lanes,
@@ -819,6 +983,8 @@ impl Coordinator {
             rejected_closed: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
+            next_trace: AtomicU64::new(1),
+            recorders,
             mailboxes: Mutex::new(Vec::new()),
         });
         // the default mailbox retains unclaimed responses: that is the
@@ -827,7 +993,12 @@ impl Coordinator {
         router.mailboxes.lock().unwrap().push(Arc::downgrade(&default_mailbox));
         let default_client =
             Client { router: Arc::downgrade(&router), mailbox: default_mailbox };
-        Self { router: Some(router), handles, default_client }
+        Self {
+            router: Some(router),
+            handles,
+            default_client,
+            registry: Mutex::new(MetricsRegistry::new()),
+        }
     }
 
     fn router(&self) -> &Router {
@@ -918,13 +1089,17 @@ impl Coordinator {
         let (tx, rx) = sync_channel(STREAM_EVENT_CAP);
         let router = self.router.as_ref().expect("router alive");
         let session = router.next_session.fetch_add(1, Ordering::Relaxed);
+        let trace = router.mint_trace();
+        let lane = router.pinned_lane(stream);
+        router.recorders[lane].record(lane as u32, trace, EventKind::Submit);
         let alive = Arc::new(AtomicBool::new(true));
         let job =
-            Job::StreamOpen { session, config, events: tx, alive: Arc::clone(&alive) };
+            Job::StreamOpen { session, trace, config, events: tx, alive: Arc::clone(&alive) };
         if router.send_stream_job(stream, job).is_err() {
             return StreamSession {
                 stream,
                 session,
+                trace,
                 router: Weak::new(),
                 events: rx,
                 closed: true,
@@ -934,6 +1109,7 @@ impl Coordinator {
         StreamSession {
             stream,
             session,
+            trace,
             router: Arc::downgrade(router),
             events: rx,
             closed: false,
@@ -993,7 +1169,42 @@ impl Coordinator {
         s.spilled = spilled;
         s.rejected_full = router.rejected_full.load(Ordering::Relaxed);
         s.rejected_closed = router.rejected_closed.load(Ordering::Relaxed);
+        s.captured_us = crate::obs::monotonic_us();
         s
+    }
+
+    /// Versioned metrics snapshot for exposition: folds [`Coordinator::stats`]
+    /// and the flight-recorder counters through the coordinator's
+    /// [`MetricsRegistry`], which stamps a monotonically increasing sequence
+    /// number and computes rates against the previously folded snapshot.
+    /// Serialize with [`MetricsSnapshot::to_prometheus`] /
+    /// [`MetricsSnapshot::to_json`].
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let stats = self.stats();
+        let rec = self.recorder_stats();
+        self.registry.lock().unwrap().fold(stats, rec)
+    }
+
+    /// Aggregate flight-recorder counters across workers, or `None` when the
+    /// pool was built without a recorder (the lean default).
+    pub fn recorder_stats(&self) -> Option<RecorderStats> {
+        let router = self.router();
+        let mut merged = RecorderStats::default();
+        let mut any = false;
+        for rec in &router.recorders {
+            if rec.is_enabled() {
+                merged.merge(&rec.stats());
+                any = true;
+            }
+        }
+        any.then_some(merged)
+    }
+
+    /// Drain every worker's frozen post-mortem [`FlightDump`]s (oldest
+    /// first per worker). Empty when no anomaly rule has fired since the
+    /// last drain, or when the pool has no recorder.
+    pub fn flight_dumps(&self) -> Vec<FlightDump> {
+        self.router().recorders.iter().flat_map(|r| r.take_dumps()).collect()
     }
 
     /// Latest per-worker chip reports (power/energy telemetry),
@@ -1069,15 +1280,24 @@ struct WorkerSession {
     events: SyncSender<StreamEvent>,
     /// cleared by the client handle on close/drop
     alive: Arc<AtomicBool>,
+    /// session-scoped trace id, stamped on every recorder event and
+    /// every [`StreamEvent`] this session emits
+    trace: TraceId,
+    /// last observed VAD gate state, threaded across chunks so the
+    /// recorder emits gate open/close transitions (not per-frame noise)
+    last_gated: Option<bool>,
 }
 
 impl WorkerSession {
     /// Deliver one event without ever blocking the worker: a full channel
     /// sheds the event (counted), a disconnected one is a vanished client.
-    fn deliver(&self, ev: StreamEvent, shard: &WorkerShard) {
+    /// Returns `true` when the event was shed.
+    fn deliver(&self, ev: StreamEvent, shard: &WorkerShard) -> bool {
         if let Err(TrySendError::Full(_)) = self.events.try_send(ev) {
             shard.events_dropped.fetch_add(1, Ordering::Relaxed);
+            return true;
         }
+        false
     }
 
     /// Flush final telemetry into the worker's shard and notify the client.
@@ -1085,10 +1305,12 @@ impl WorkerSession {
     /// explicit [`StreamSession::close`] is concurrently draining the
     /// channel, so space frees almost immediately; a dead or wedged client
     /// costs the worker at most the retry budget, never a hang.
-    fn finish(mut self, shard: &WorkerShard) {
+    fn finish(mut self, shard: &WorkerShard, recorder: &FlightRecorder, worker: u32) {
+        recorder.record(worker, self.trace, EventKind::SessionClose);
         shard.activity.add(&self.pipeline.take_activity_delta());
         let activity = self.pipeline.chip.activity();
         let mut ev = StreamEvent::Closed {
+            trace: self.trace,
             frames: activity.frames,
             gated_frames: activity.gated_frames,
         };
@@ -1131,6 +1353,7 @@ fn worker_loop(
     shard: Arc<WorkerShard>,
     stalled: Arc<AtomicBool>,
     depth: Arc<AtomicU64>,
+    recorder: Arc<FlightRecorder>,
 ) {
     let mut chip = KwsChip::new(params.clone(), config.clone());
     let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
@@ -1161,13 +1384,23 @@ fn worker_loop(
         }
         depth.fetch_sub(1, Ordering::Relaxed);
         match job {
-            Job::Utterance { req, enqueued, reply } => {
+            Job::Utterance { req, trace, enqueued, reply } => {
+                if recorder.is_enabled() {
+                    let queued_us = enqueued.elapsed().as_micros() as u64;
+                    recorder.record(index as u32, trace, EventKind::Dequeue { queued_us });
+                }
                 // default: the lean NoProbe hot path — no per-frame
                 // allocation, fixed-size Decision. A request that opted in
-                // (`trace: true`) pays for the TraceProbe reconstruction.
-                let (decision, trace) = if req.trace {
+                // (`trace: true`) pays for the TraceProbe reconstruction;
+                // an enabled flight recorder rides the same probe seam.
+                let (decision, diag) = if req.trace {
                     let (d, t) = chip.process_utterance_traced(&req.audio12);
                     (d, Some(t))
+                } else if recorder.is_enabled() {
+                    let mut rp = RecorderProbe::new(&recorder, index as u32, trace);
+                    let d = chip.process_utterance_probed(&req.audio12, &mut rp);
+                    rp.flush_frame_batch();
+                    (d, None)
                 } else {
                     (chip.process_utterance(&req.audio12), None)
                 };
@@ -1188,9 +1421,18 @@ fn worker_loop(
                     service: enqueued.elapsed(),
                     worker: index,
                     worker_seq,
-                    trace,
+                    trace: diag,
+                    trace_id: trace,
                 };
                 worker_seq += 1;
+                recorder.record(
+                    index as u32,
+                    trace,
+                    EventKind::Decision {
+                        class: decision.class as u8,
+                        service_us: resp.service.as_micros() as u64,
+                    },
+                );
                 // hot path: relaxed adds on this worker's own shard — no
                 // lock, no allocation, no report rollup
                 shard.completed.fetch_add(1, Ordering::Relaxed);
@@ -1211,8 +1453,16 @@ fn worker_loop(
                     mailbox.deliver(resp);
                 }
             }
-            Job::UtteranceBatch { reqs, enqueued, reply } => {
+            Job::UtteranceBatch { reqs, traces, enqueued, reply } => {
                 shard.fused_batches.fetch_add(1, Ordering::Relaxed);
+                if recorder.is_enabled() {
+                    let queued_us = enqueued.elapsed().as_micros() as u64;
+                    recorder.record(
+                        index as u32,
+                        traces.first().copied().unwrap_or(TraceId::NONE),
+                        EventKind::Dequeue { queued_us },
+                    );
+                }
                 // phase 1 — FEx, per request: the feature front end is
                 // recurrent per utterance, so each request's audio runs
                 // through this worker's chip solo. Frames are popped as
@@ -1270,8 +1520,10 @@ fn worker_loop(
                 // side of the activity is booked from each session (the
                 // host accel's solo counters were untouched); the FEx
                 // side flushes through the usual chip-activity delta.
-                for (req, (sess, acc)) in
-                    reqs.into_iter().zip(sessions.iter().zip(accums.iter()))
+                for ((req, trace), (sess, acc)) in reqs
+                    .into_iter()
+                    .zip(traces)
+                    .zip(sessions.iter().zip(accums.iter()))
                 {
                     let decision = acc.finish();
                     let lat_ms = decision.total_cycles as f64
@@ -1292,8 +1544,17 @@ fn worker_loop(
                         worker: index,
                         worker_seq,
                         trace: None,
+                        trace_id: trace,
                     };
                     worker_seq += 1;
+                    recorder.record(
+                        index as u32,
+                        trace,
+                        EventKind::Decision {
+                            class: decision.class as u8,
+                            service_us: resp.service.as_micros() as u64,
+                        },
+                    );
                     shard.completed.fetch_add(1, Ordering::Relaxed);
                     if let Some(c) = correct {
                         shard.labelled.fetch_add(1, Ordering::Relaxed);
@@ -1311,15 +1572,17 @@ fn worker_loop(
                 shard.activity.add(&act.delta_since(&flushed));
                 flushed = act;
             }
-            Job::StreamOpen { session, config: stream_cfg, events, alive } => {
+            Job::StreamOpen { session, trace, config: stream_cfg, events, alive } => {
                 let cfg = stream_cfg.unwrap_or_else(|| default_stream.clone());
                 let pipeline = StreamPipeline::new(params.clone(), cfg);
+                recorder.record(index as u32, trace, EventKind::SessionOpen);
                 // session ids are unique; a collision would be a router bug,
                 // but never leak the old session's telemetry silently
-                if let Some(old) =
-                    sessions.insert(session, WorkerSession { pipeline, events, alive })
-                {
-                    old.finish(&shard);
+                if let Some(old) = sessions.insert(
+                    session,
+                    WorkerSession { pipeline, events, alive, trace, last_gated: None },
+                ) {
+                    old.finish(&shard, &recorder, index as u32);
                 }
                 publish_session_bytes(&shard, &sessions);
             }
@@ -1327,17 +1590,45 @@ fn worker_loop(
                 // chunks for unknown/closed sessions are dropped (a late
                 // push after close is not an error)
                 if let Some(sess) = sessions.get_mut(&session) {
+                    if recorder.is_enabled() {
+                        let queued_us = enqueued.elapsed().as_micros() as u64;
+                        recorder.record(
+                            index as u32,
+                            sess.trace,
+                            EventKind::Dequeue { queued_us },
+                        );
+                    }
                     // slice hostile oversized chunks so the pipeline's
                     // bounded frame buffer can never reject (and the old
                     // panic path can never kill this worker thread)
                     let bytes_before = sess.pipeline.state_bytes();
                     let mut detections = Vec::new();
-                    for piece in chunk.chunks(crate::chip::SAFE_CHUNK_SAMPLES) {
-                        detections.extend(
-                            sess.pipeline
-                                .push_audio(piece)
-                                .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
+                    if recorder.is_enabled() {
+                        // recorder path: ride the probe seam so frame
+                        // batches and gate transitions land in the ring
+                        let mut rp = RecorderProbe::with_gate_state(
+                            &recorder,
+                            index as u32,
+                            sess.trace,
+                            sess.last_gated,
                         );
+                        for piece in chunk.chunks(crate::chip::SAFE_CHUNK_SAMPLES) {
+                            detections.extend(
+                                sess.pipeline
+                                    .push_audio_probed(piece, &mut rp)
+                                    .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
+                            );
+                        }
+                        sess.last_gated = rp.gate_state();
+                        rp.flush_frame_batch();
+                    } else {
+                        for piece in chunk.chunks(crate::chip::SAFE_CHUNK_SAMPLES) {
+                            detections.extend(
+                                sess.pipeline
+                                    .push_audio(piece)
+                                    .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
+                            );
+                        }
                     }
                     shard.stream_chunks.fetch_add(1, Ordering::Relaxed);
                     shard.chunk_latency.record(enqueued.elapsed().as_micros() as u64);
@@ -1356,7 +1647,21 @@ fn worker_loop(
                             .fetch_sub((bytes_before - bytes_after) as u64, Ordering::Relaxed);
                     }
                     for d in detections {
-                        sess.deliver(StreamEvent::Detection(d), &shard);
+                        recorder.record(
+                            index as u32,
+                            sess.trace,
+                            EventKind::Detection { class: d.class as u8 },
+                        );
+                        if sess.deliver(
+                            StreamEvent::Detection { trace: sess.trace, event: d },
+                            &shard,
+                        ) {
+                            recorder.record(
+                                index as u32,
+                                sess.trace,
+                                EventKind::EventDropped,
+                            );
+                        }
                     }
                 }
             }
@@ -1366,7 +1671,7 @@ fn worker_loop(
                     // waits on the Closed marker finish() delivers), the
                     // session-memory gauge is already consistent
                     publish_session_bytes(&shard, &sessions);
-                    sess.finish(&shard);
+                    sess.finish(&shard, &recorder, index as u32);
                 }
             }
             Job::PublishReport { ack } => {
@@ -1395,7 +1700,7 @@ fn worker_loop(
             if !dead.is_empty() {
                 for k in dead {
                     if let Some(sess) = sessions.remove(&k) {
-                        sess.finish(&shard);
+                        sess.finish(&shard, &recorder, index as u32);
                     }
                 }
                 publish_session_bytes(&shard, &sessions);
@@ -1404,7 +1709,7 @@ fn worker_loop(
     }
     // pool shutdown with sessions still open: flush their telemetry
     for (_, sess) in sessions.drain() {
-        sess.finish(&shard);
+        sess.finish(&shard, &recorder, index as u32);
     }
     publish_session_bytes(&shard, &sessions);
     publish_report(&shard, &chip);
@@ -1914,7 +2219,7 @@ mod tests {
         sess.push_blocking(vec![0i64; 1280]).unwrap();
         let events = sess.close();
         let closed = events.iter().find_map(|e| match e {
-            StreamEvent::Closed { frames, gated_frames } => Some((*frames, *gated_frames)),
+            StreamEvent::Closed { frames, gated_frames, .. } => Some((*frames, *gated_frames)),
             _ => None,
         });
         assert_eq!(closed, Some((10, 0)), "disabled VAD must never gate");
@@ -1937,7 +2242,7 @@ mod tests {
         sess.push_blocking(vec![0i64; 1280]).unwrap();
         let events = sess.close();
         let closed = events.iter().find_map(|e| match e {
-            StreamEvent::Closed { frames, gated_frames } => Some((*frames, *gated_frames)),
+            StreamEvent::Closed { frames, gated_frames, .. } => Some((*frames, *gated_frames)),
             _ => None,
         });
         assert_eq!(closed, Some((10, 0)), "pool default stream config ignored");

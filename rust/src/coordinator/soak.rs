@@ -31,7 +31,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::{percentile, Coordinator, Request, Stats, Ticket};
+use super::{percentile, Coordinator, Request, Stats, StatsDelta, Ticket};
 use crate::accel::gru::QuantParams;
 use crate::audio::track::{synth_track, TrackConfig};
 use crate::chip::ChipConfig;
@@ -120,6 +120,11 @@ pub struct SoakReport {
     /// per-session memory after every session closed — must be 0
     pub session_bytes_final: u64,
     pub producer_retries: u64,
+    /// counter movement from the ~10% checkpoint to the end of the run
+    /// ([`Stats::delta_since`]): the *steady-state* rates window, excluding
+    /// pool spin-up — `steady.decisions_per_sec()` is the warmed-up
+    /// throughput figure the metrics exposition reports
+    pub steady: StatsDelta,
     pub final_stats: Stats,
 }
 
@@ -202,6 +207,8 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
     let mut exact_us: Vec<u64> = Vec::with_capacity(cfg.utterances as usize);
     let mut telemetry_bytes_early = 0usize;
     let mut session_bytes_early = 0u64;
+    // full checkpoint snapshot: the steady-rate window's left edge
+    let mut early_stats = Stats::default();
     let checkpoint = (cfg.utterances / 10).max(1);
     // stamped once the producers have claimed their last ticket (stream
     // teardown after the final utterance must not dilute the throughput
@@ -316,6 +323,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
             if snap.completed >= checkpoint {
                 telemetry_bytes_early = snap.telemetry_bytes();
                 session_bytes_early = snap.session_bytes;
+                early_stats = snap;
                 break;
             }
             assert!(
@@ -378,6 +386,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
         session_bytes_early,
         session_bytes_final,
         producer_retries: retries.load(Ordering::Relaxed),
+        steady: final_stats.delta_since(&early_stats),
         final_stats,
     }
 }
@@ -414,6 +423,8 @@ mod tests {
         assert_eq!(report.utterances_done, 120);
         assert_eq!(report.chunks_done, 20);
         assert!(report.decisions_per_sec > 0.0);
+        assert!(report.steady.decisions_per_sec() > 0.0, "steady-rate window empty");
+        assert!(report.steady.completed <= report.utterances_done);
         assert!(report.percentile_rel_err() <= 0.05, "err {}", report.percentile_rel_err());
         assert_eq!(report.telemetry_bytes_early, report.telemetry_bytes_final);
         assert!(report.session_bytes_early <= MAX_SESSION_STATE_BYTES);

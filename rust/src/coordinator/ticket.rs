@@ -336,6 +336,7 @@ mod tests {
             worker: 0,
             worker_seq: 0,
             trace: None,
+            trace_id: crate::obs::TraceId::NONE,
         }
     }
 

@@ -57,6 +57,14 @@
 //!   lean allocation-free hot path and [`probe::TraceProbe`] reconstructs
 //!   the full per-frame diagnostics (Fig. 11 traces) only for callers
 //!   that opt in.
+//! * [`obs`] — observability: [`obs::MetricsRegistry`] folds serving
+//!   stats into versioned snapshots (Prometheus-style text + JSON via
+//!   [`coordinator::Coordinator::metrics`]); a per-worker flight recorder
+//!   ([`obs::FlightRecorder`] + [`obs::RecorderProbe`]) keeps a bounded
+//!   ring of submit/dequeue/gate/decision/backpressure events that
+//!   anomaly rules freeze into post-mortem [`obs::FlightDump`]s; and
+//!   request-scoped [`obs::TraceId`]s stamp every event, response and
+//!   stream event so one utterance is reconstructable end to end.
 //! * [`error`] — the typed error surface: crate-wide [`Error`] plus
 //!   payload-preserving [`SubmitError`] / [`StreamPushError`] /
 //!   [`WaitError`] / [`ChipError`].
@@ -79,6 +87,7 @@ pub mod error;
 pub mod exp;
 pub mod fex;
 pub mod fixed;
+pub mod obs;
 pub mod probe;
 pub mod runtime;
 pub mod sram;
@@ -92,6 +101,7 @@ pub mod util;
 pub type Result<T> = anyhow::Result<T>;
 
 pub use error::{ChipError, Error, StreamPushError, SubmitError, WaitError};
+pub use obs::TraceId;
 pub use probe::{ChipProbe, DecisionTrace, NoProbe, TraceProbe};
 
 /// The 12 GSCD class labels used throughout the crate, in chip output order.

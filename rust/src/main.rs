@@ -6,7 +6,8 @@
 //! deltakws train  [--steps N] [--batch B] [--seed S] [--out weights.bin]
 //! deltakws eval   [--delta-th-q8 T] [--channels N] [--utterances N]
 //! deltakws exp    <fig6|fig7|fig10|fig11|fig12|fig13|table1|table2|ablation|all>
-//! deltakws serve  [--workers N] [--requests N]
+//! deltakws serve  [--workers N] [--requests N] [--metrics-out BASE]
+//!                 [--metrics-interval-s S]
 //! deltakws info
 //! ```
 //!
@@ -24,6 +25,49 @@ fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// SIGUSR1 → "dump a metrics snapshot now" (std-only: no signal crate in
+/// the vendored set). The handler only flips an atomic flag; the serve
+/// loop's watcher thread does the actual capture and file writes.
+#[cfg(unix)]
+mod sigusr1 {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    const SIGUSR1: i32 = 10;
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    const SIGUSR1: i32 = 30;
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn handler(_sig: i32) {
+        REQUESTED.store(true, Ordering::Relaxed);
+    }
+
+    /// Install the handler (idempotent; best-effort).
+    pub fn install() {
+        unsafe {
+            signal(SIGUSR1, handler as extern "C" fn(i32) as usize);
+        }
+    }
+
+    /// True once per delivered signal (consumes the request).
+    pub fn take() -> bool {
+        REQUESTED.swap(false, Ordering::Relaxed)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigusr1 {
+    pub fn install() {}
+    pub fn take() -> bool {
+        false
     }
 }
 
@@ -132,7 +176,10 @@ fn run() -> anyhow::Result<()> {
         }
         "serve" => {
             let requests = args.num::<usize>("requests")?.unwrap_or(32);
-            cmd_serve(&cfg, requests)
+            let metrics_out =
+                args.get("metrics-out").unwrap_or("results/serve_metrics").to_string();
+            let metrics_interval_s = args.num::<u64>("metrics-interval-s")?.unwrap_or(0);
+            cmd_serve(&cfg, requests, &metrics_out, metrics_interval_s)
         }
         "info" => cmd_info(&cfg),
         "help" | "--help" | "-h" => {
@@ -199,7 +246,28 @@ fn cmd_eval(cfg: &RunConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(cfg: &RunConfig, requests: usize) -> anyhow::Result<()> {
+/// Capture one metrics snapshot and write both expositions next to each
+/// other: `<base>.json` and `<base>.prom`.
+fn dump_metrics(coord: &coordinator::Coordinator, base: &str) -> anyhow::Result<()> {
+    let snap = coord.metrics();
+    if let Some(dir) = std::path::Path::new(base).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(format!("{base}.json"), format!("{}\n", snap.to_json()))?;
+    std::fs::write(format!("{base}.prom"), snap.to_prometheus())?;
+    println!(
+        "metrics snapshot #{} -> {base}.json / {base}.prom  ({} decisions)",
+        snap.seq, snap.stats.completed
+    );
+    Ok(())
+}
+
+fn cmd_serve(
+    cfg: &RunConfig,
+    requests: usize,
+    metrics_out: &str,
+    metrics_interval_s: u64,
+) -> anyhow::Result<()> {
     let params = exp::ensure_weights(cfg)?;
     println!("starting coordinator with {} chip workers ...", cfg.workers);
     let coord = coordinator::Coordinator::builder(params, cfg.chip_config_checked()?)
@@ -207,26 +275,54 @@ fn cmd_serve(cfg: &RunConfig, requests: usize) -> anyhow::Result<()> {
         .queue_depth(16)
         .build()
         .context("invalid serving configuration")?;
+    sigusr1::install();
+    println!("metrics: SIGUSR1 dumps to {metrics_out}.json/.prom (interval {metrics_interval_s}s; 0 = signal-only)");
     let ds = Dataset::new(cfg.seed);
     let t0 = std::time::Instant::now();
-    // v2 surface: batch submission (lazy iterator — requests materialise
-    // as they are accepted, blocking through backpressure) and
-    // ticket-routed responses — no global collect
-    let reqs = (0..requests).map(|i| {
-        let utt = ds.utterance(Split::Test, i);
-        coordinator::Request {
-            id: 0,
-            stream: (i % 8) as u64,
-            audio12: utt.audio12,
-            label: Some(utt.label),
-            trace: false,
-        }
-    });
-    let batch = coord.submit_batch(reqs).context("worker pool died mid-submit")?;
-    let submitted = batch.len();
-    let responses = batch.wait_all(std::time::Duration::from_secs(300));
+    let done = std::sync::atomic::AtomicBool::new(false);
+    let (responses, submitted) = std::thread::scope(|s| {
+        // watcher: polls the signal flag (and the optional interval clock)
+        // while the workload runs; every trigger snapshots the live pool
+        s.spawn(|| {
+            let interval = std::time::Duration::from_secs(metrics_interval_s);
+            let mut last = std::time::Instant::now();
+            while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                let interval_due = metrics_interval_s > 0 && last.elapsed() >= interval;
+                if sigusr1::take() || interval_due {
+                    last = std::time::Instant::now();
+                    if let Err(e) = dump_metrics(&coord, metrics_out) {
+                        eprintln!("metrics dump failed: {e:#}");
+                    }
+                }
+            }
+        });
+        // v2 surface: batch submission (lazy iterator — requests
+        // materialise as they are accepted, blocking through
+        // backpressure) and ticket-routed responses — no global collect
+        let reqs = (0..requests).map(|i| {
+            let utt = ds.utterance(Split::Test, i);
+            coordinator::Request {
+                id: 0,
+                stream: (i % 8) as u64,
+                audio12: utt.audio12,
+                label: Some(utt.label),
+                trace: false,
+            }
+        });
+        let r = coord
+            .submit_batch(reqs)
+            .context("worker pool died mid-submit")
+            .map(|batch| {
+                let submitted = batch.len();
+                (batch.wait_all(std::time::Duration::from_secs(300)), submitted)
+            });
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+        r
+    })?;
     let wall = t0.elapsed();
     let stats = coord.stats();
+    dump_metrics(&coord, metrics_out)?;
     println!(
         "served {}/{requests} requests ({submitted} submitted) in {:.2}s  ({:.1} utt/s)",
         responses.len(),

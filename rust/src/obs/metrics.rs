@@ -1,0 +1,371 @@
+//! Metrics exposition: fold [`Stats`] into a versioned snapshot and
+//! serialize it as Prometheus-style text and JSON (DESIGN.md §12).
+//!
+//! [`MetricsRegistry`] is the stateful folder
+//! ([`Coordinator::metrics`](crate::coordinator::Coordinator::metrics)
+//! holds one): each [`fold`](MetricsRegistry::fold) bumps the snapshot
+//! sequence number and, from the second fold on, attaches a
+//! [`StatsDelta`] computed against the previous snapshot so rates
+//! (decisions/sec, drops/sec) come straight off the exposition instead of
+//! being re-derived by hand. [`MetricsSnapshot::from_stats`] is the
+//! stateless one-shot for harnesses that already hold a [`Stats`].
+//!
+//! The serialized field names, label sets and histogram bucket layout are
+//! a **stable schema** ([`METRICS_SCHEMA`]), pinned by
+//! `tests/obs_exposition.rs` and validated in CI by
+//! `tools/bench_report.py --validate-metrics` against the soak run's
+//! emitted snapshot.
+
+use crate::coordinator::{Stats, StatsDelta};
+use crate::util::hist::LogHistogram;
+use crate::util::json::Json;
+
+use super::recorder::RecorderStats;
+
+/// Schema tag stamped on every snapshot (bump on any breaking change to
+/// field names, label sets or bucket layout).
+pub const METRICS_SCHEMA: &str = "deltakws-metrics/1";
+
+/// `le` bounds (µs) for the exposed latency histograms. All powers of two
+/// ≥ 32, i.e. exact [`LogHistogram`] bucket boundaries, so the cumulative
+/// counts from [`LogHistogram::count_below`] are exact — with one
+/// documented skew: `le="N"` here means *strictly below* N µs (Prometheus
+/// proper is inclusive; at an exact boundary the difference is only the
+/// samples equal to N).
+pub const LATENCY_LE_US: [u64; 8] =
+    [128, 512, 2_048, 8_192, 32_768, 131_072, 524_288, 2_097_152];
+
+/// One versioned, self-describing metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// snapshot sequence number within the owning registry (1-based;
+    /// 0 for stateless [`from_stats`](Self::from_stats) snapshots)
+    pub seq: u64,
+    /// the folded serving statistics (timestamped via
+    /// [`Stats::captured_us`])
+    pub stats: Stats,
+    /// flight-recorder totals; `None` when the pool has no recorder
+    pub recorder: Option<RecorderStats>,
+    /// rates window vs the registry's previous snapshot; `None` on the
+    /// first fold and for stateless snapshots
+    pub rates: Option<StatsDelta>,
+}
+
+impl MetricsSnapshot {
+    /// Stateless snapshot straight from a [`Stats`] (no sequence, no
+    /// recorder section, no rates) — what `examples/soak.rs` emits.
+    pub fn from_stats(stats: &Stats) -> Self {
+        MetricsSnapshot { seq: 0, stats: stats.clone(), recorder: None, rates: None }
+    }
+
+    /// Prometheus-style text exposition. Metric names, label sets and the
+    /// `le` sequence are schema-stable (see [`METRICS_SCHEMA`]).
+    pub fn to_prometheus(&self) -> String {
+        let s = &self.stats;
+        let a = &s.activity;
+        let mut out = String::with_capacity(4096);
+
+        counter_u64(&mut out, "deltakws_metrics_seq", "gauge", self.seq);
+        counter_u64(&mut out, "deltakws_metrics_captured_us", "gauge", s.captured_us);
+
+        counter_u64(&mut out, "deltakws_completed_total", "counter", s.completed);
+        counter_u64(&mut out, "deltakws_labelled_total", "counter", s.labelled);
+        counter_u64(&mut out, "deltakws_correct_total", "counter", s.correct);
+        gauge_f64(&mut out, "deltakws_accuracy", s.accuracy());
+
+        type_line(&mut out, "deltakws_rejected_total", "counter");
+        labeled_u64(&mut out, "deltakws_rejected_total", "cause", "queue_full", s.rejected_full);
+        labeled_u64(&mut out, "deltakws_rejected_total", "cause", "closed", s.rejected_closed);
+
+        counter_u64(&mut out, "deltakws_spilled_total", "counter", s.spilled);
+        counter_u64(&mut out, "deltakws_fused_batches_total", "counter", s.fused_batches);
+        counter_u64(
+            &mut out,
+            "deltakws_stream_events_dropped_total",
+            "counter",
+            s.stream_events_dropped,
+        );
+        counter_u64(&mut out, "deltakws_session_bytes", "gauge", s.session_bytes);
+
+        counter_u64(&mut out, "deltakws_chip_frames_total", "counter", a.frames);
+        counter_u64(&mut out, "deltakws_chip_gated_frames_total", "counter", a.gated_frames);
+        counter_u64(&mut out, "deltakws_chip_mac_ops_total", "counter", a.mac_ops);
+        counter_u64(
+            &mut out,
+            "deltakws_chip_sram_word_reads_total",
+            "counter",
+            a.sram_word_reads,
+        );
+        counter_u64(&mut out, "deltakws_chip_rnn_cycles_total", "counter", a.rnn_cycles);
+        counter_u64(&mut out, "deltakws_chip_fired_lanes_total", "counter", a.fired_lanes);
+        counter_u64(&mut out, "deltakws_chip_scanned_lanes_total", "counter", a.total_lanes);
+        counter_u64(&mut out, "deltakws_chip_fex_visits_total", "counter", a.fex_visits);
+        gauge_f64(&mut out, "deltakws_chip_sparsity", a.sparsity());
+        gauge_f64(&mut out, "deltakws_chip_duty_cycle", a.duty_cycle());
+
+        type_line(&mut out, "deltakws_worker_completed_total", "counter");
+        for (w, lane) in s.per_worker.iter().enumerate() {
+            labeled_worker(&mut out, "deltakws_worker_completed_total", w, lane.completed);
+        }
+        type_line(&mut out, "deltakws_worker_spilled_in_total", "counter");
+        for (w, lane) in s.per_worker.iter().enumerate() {
+            labeled_worker(&mut out, "deltakws_worker_spilled_in_total", w, lane.spilled_in);
+        }
+        type_line(&mut out, "deltakws_worker_pinned_full_total", "counter");
+        for (w, lane) in s.per_worker.iter().enumerate() {
+            labeled_worker(&mut out, "deltakws_worker_pinned_full_total", w, lane.pinned_full);
+        }
+        type_line(&mut out, "deltakws_worker_stream_chunks_total", "counter");
+        for (w, lane) in s.per_worker.iter().enumerate() {
+            labeled_worker(&mut out, "deltakws_worker_stream_chunks_total", w, lane.stream_chunks);
+        }
+
+        histogram(&mut out, "deltakws_latency_us", &s.latency);
+        histogram(&mut out, "deltakws_chunk_latency_us", &s.chunk_latency);
+
+        if let Some(r) = &self.recorder {
+            counter_u64(&mut out, "deltakws_recorder_events_total", "counter", r.events);
+            counter_u64(&mut out, "deltakws_flight_dumps_total", "counter", r.dumps_taken);
+            counter_u64(
+                &mut out,
+                "deltakws_flight_dumps_dropped_total",
+                "counter",
+                r.dumps_dropped,
+            );
+            counter_u64(&mut out, "deltakws_flight_dumps_held", "gauge", r.dumps_held);
+        }
+
+        if let Some(d) = &self.rates {
+            counter_u64(&mut out, "deltakws_rate_window_us", "gauge", d.elapsed_us);
+            gauge_f64(&mut out, "deltakws_decisions_per_sec", d.decisions_per_sec());
+            gauge_f64(&mut out, "deltakws_drops_per_sec", d.drops_per_sec());
+            gauge_f64(&mut out, "deltakws_stream_chunks_per_sec", d.chunks_per_sec());
+            gauge_f64(&mut out, "deltakws_chip_frames_per_sec", d.frames_per_sec());
+        }
+        out
+    }
+
+    /// JSON exposition (same schema family as the text form; key sets are
+    /// pinned by the golden tests). `recorder` / `rates` serialize as
+    /// `null` when absent so the document shape is constant.
+    pub fn to_json(&self) -> Json {
+        let s = &self.stats;
+        let a = &s.activity;
+        Json::obj(vec![
+            ("schema", Json::str(METRICS_SCHEMA)),
+            ("seq", jnum(self.seq)),
+            ("captured_us", jnum(s.captured_us)),
+            (
+                "counters",
+                Json::obj(vec![
+                    ("completed", jnum(s.completed)),
+                    ("correct", jnum(s.correct)),
+                    ("labelled", jnum(s.labelled)),
+                    ("rejected_full", jnum(s.rejected_full)),
+                    ("rejected_closed", jnum(s.rejected_closed)),
+                    ("spilled", jnum(s.spilled)),
+                    ("fused_batches", jnum(s.fused_batches)),
+                    ("stream_events_dropped", jnum(s.stream_events_dropped)),
+                ]),
+            ),
+            (
+                "gauges",
+                Json::obj(vec![
+                    ("accuracy", Json::num(s.accuracy())),
+                    ("session_bytes", jnum(s.session_bytes)),
+                    ("telemetry_bytes", jnum(s.telemetry_bytes() as u64)),
+                ]),
+            ),
+            (
+                "activity",
+                Json::obj(vec![
+                    ("frames", jnum(a.frames)),
+                    ("gated_frames", jnum(a.gated_frames)),
+                    ("mac_ops", jnum(a.mac_ops)),
+                    ("sram_word_reads", jnum(a.sram_word_reads)),
+                    ("rnn_cycles", jnum(a.rnn_cycles)),
+                    ("fired_lanes", jnum(a.fired_lanes)),
+                    ("total_lanes", jnum(a.total_lanes)),
+                    ("fired_x", jnum(a.fired_x)),
+                    ("total_x", jnum(a.total_x)),
+                    ("fired_h", jnum(a.fired_h)),
+                    ("total_h", jnum(a.total_h)),
+                    ("fex_visits", jnum(a.fex_visits)),
+                    ("sparsity", Json::num(a.sparsity())),
+                    ("duty_cycle", Json::num(a.duty_cycle())),
+                ]),
+            ),
+            ("latency_us", hist_json(&s.latency)),
+            ("chunk_latency_us", hist_json(&s.chunk_latency)),
+            (
+                "per_worker",
+                Json::arr(s.per_worker.iter().enumerate().map(|(w, lane)| {
+                    Json::obj(vec![
+                        ("worker", jnum(w as u64)),
+                        ("completed", jnum(lane.completed)),
+                        ("spilled_in", jnum(lane.spilled_in)),
+                        ("pinned_full", jnum(lane.pinned_full)),
+                        ("stream_chunks", jnum(lane.stream_chunks)),
+                    ])
+                })),
+            ),
+            (
+                "recorder",
+                match &self.recorder {
+                    Some(r) => Json::obj(vec![
+                        ("events", jnum(r.events)),
+                        ("dumps_taken", jnum(r.dumps_taken)),
+                        ("dumps_dropped", jnum(r.dumps_dropped)),
+                        ("dumps_held", jnum(r.dumps_held)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "rates",
+                match &self.rates {
+                    Some(d) => Json::obj(vec![
+                        ("elapsed_us", jnum(d.elapsed_us)),
+                        ("decisions_per_sec", Json::num(d.decisions_per_sec())),
+                        ("drops_per_sec", Json::num(d.drops_per_sec())),
+                        ("chunks_per_sec", Json::num(d.chunks_per_sec())),
+                        ("frames_per_sec", Json::num(d.frames_per_sec())),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Stateful snapshot folder: owns the sequence counter and the previous
+/// [`Stats`] so consecutive folds expose rates via
+/// [`Stats::delta_since`].
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    seq: u64,
+    prev: Option<Stats>,
+}
+
+impl MetricsRegistry {
+    /// A registry with no history (first fold yields `rates: None`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one stats capture (plus optional recorder totals) into the
+    /// next versioned snapshot.
+    pub fn fold(&mut self, stats: Stats, recorder: Option<RecorderStats>) -> MetricsSnapshot {
+        self.seq += 1;
+        let rates = self.prev.as_ref().map(|prev| stats.delta_since(prev));
+        let snap =
+            MetricsSnapshot { seq: self.seq, stats: stats.clone(), recorder, rates };
+        self.prev = Some(stats);
+        snap
+    }
+}
+
+#[inline]
+fn jnum(v: u64) -> Json {
+    Json::num(v as f64)
+}
+
+/// Stable float formatting shared by both expositions: integral values
+/// print as integers (the [`Json`] writer's rule).
+fn fmt_f64(v: f64) -> String {
+    Json::Num(v).to_string()
+}
+
+fn type_line(out: &mut String, name: &str, kind: &str) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn counter_u64(out: &mut String, name: &str, kind: &str, v: u64) {
+    type_line(out, name, kind);
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&v.to_string());
+    out.push('\n');
+}
+
+fn gauge_f64(out: &mut String, name: &str, v: f64) {
+    type_line(out, name, "gauge");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&fmt_f64(v));
+    out.push('\n');
+}
+
+fn labeled_u64(out: &mut String, name: &str, label: &str, value: &str, v: u64) {
+    out.push_str(&format!("{name}{{{label}=\"{value}\"}} {v}\n"));
+}
+
+fn labeled_worker(out: &mut String, name: &str, worker: usize, v: u64) {
+    out.push_str(&format!("{name}{{worker=\"{worker}\"}} {v}\n"));
+}
+
+fn histogram(out: &mut String, name: &str, h: &LogHistogram) {
+    type_line(out, name, "histogram");
+    for le in LATENCY_LE_US {
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {}\n", h.count_below(le)));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
+}
+
+fn hist_json(h: &LogHistogram) -> Json {
+    let mut buckets: Vec<Json> = LATENCY_LE_US
+        .iter()
+        .map(|&le| Json::obj(vec![("le", jnum(le)), ("count", jnum(h.count_below(le)))]))
+        .collect();
+    // `le: null` is the +Inf bucket
+    buckets.push(Json::obj(vec![("le", Json::Null), ("count", jnum(h.count()))]));
+    Json::obj(vec![
+        ("count", jnum(h.count())),
+        ("sum", jnum(h.sum())),
+        ("mean", Json::num(h.mean())),
+        ("p50", jnum(h.percentile(0.50))),
+        ("p90", jnum(h.percentile(0.90))),
+        ("p99", jnum(h.percentile(0.99))),
+        ("buckets", Json::arr(buckets)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_sequences_and_rates() {
+        let mut reg = MetricsRegistry::new();
+        let s1 = Stats { captured_us: 1_000_000, completed: 100, ..Stats::default() };
+        let first = reg.fold(s1, None);
+        assert_eq!(first.seq, 1);
+        assert!(first.rates.is_none(), "no previous snapshot on the first fold");
+
+        let s2 = Stats { captured_us: 3_000_000, completed: 500, ..Stats::default() };
+        let second = reg.fold(s2, None);
+        assert_eq!(second.seq, 2);
+        let d = second.rates.expect("second fold has a rates window");
+        assert_eq!(d.elapsed_us, 2_000_000);
+        assert_eq!(d.completed, 400);
+        assert!((d.decisions_per_sec() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stateless_snapshot_has_no_seq_or_rates() {
+        let snap = MetricsSnapshot::from_stats(&Stats::default());
+        assert_eq!(snap.seq, 0);
+        assert!(snap.recorder.is_none());
+        assert!(snap.rates.is_none());
+        let text = snap.to_prometheus();
+        assert!(!text.contains("deltakws_decisions_per_sec"));
+        assert!(!text.contains("deltakws_recorder_events_total"));
+        assert_eq!(snap.to_json().get("rates"), Some(&Json::Null));
+    }
+}

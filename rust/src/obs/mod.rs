@@ -1,0 +1,109 @@
+//! Observability: metrics exposition, flight recorder, request tracing
+//! (DESIGN.md §12).
+//!
+//! The paper's story is told in counters — temporal sparsity %, gated
+//! frames, SRAM reads, nJ/decision — and the serving layer's story is told
+//! in latencies, queue depths and admission decisions. Until this module
+//! those numbers lived in internal structs
+//! ([`WorkerShard`](crate::coordinator::telemetry::WorkerShard),
+//! [`ChipActivity`](crate::energy::ChipActivity), the log-bucketed
+//! histograms) with no exposition surface, no event timeline, and no way
+//! to answer "why did *this* utterance produce a false accept at minute 43
+//! of a soak?". Three layers fix that:
+//!
+//! * [`metrics`] — [`MetricsRegistry`] folds a [`Stats`](crate::coordinator::Stats)
+//!   snapshot (plus optional recorder totals) into a versioned
+//!   [`MetricsSnapshot`], serialized as Prometheus-style text and JSON.
+//!   [`Coordinator::metrics`](crate::coordinator::Coordinator::metrics) is
+//!   the pool-level entry point; `deltakws serve` dumps snapshots on
+//!   SIGUSR1 / an interval, `examples/soak.rs` at exit.
+//! * [`recorder`] — a bounded per-worker ring of structured [`Event`]s
+//!   (submit, dequeue, frame-batch, gate edges, decision, backpressure,
+//!   drop) with monotonic timestamps, recorded through [`RecorderProbe`]
+//!   (composing the zero-cost [`ChipProbe`](crate::probe::ChipProbe)
+//!   hooks) plus coordinator-level hooks. An [`AnomalyRule`] freezes the
+//!   ring into a post-mortem [`FlightDump`] when it fires.
+//! * [`TraceId`] — request-scoped tracing: minted at submit / stream-open,
+//!   carried through the job queue and session state, stamped on every
+//!   recorder event and on
+//!   [`Response`](crate::coordinator::Response) /
+//!   [`StreamEvent`](crate::coordinator::StreamEvent), so one utterance's
+//!   life is reconstructable end to end across lanes.
+//!
+//! The lean path stays lean: a pool built without
+//! [`CoordinatorBuilder::recorder`](crate::coordinator::CoordinatorBuilder::recorder)
+//! runs the same monomorphized `NoProbe` datapath as before (bit-exact,
+//! allocation-free), paying only one predictable `enabled` branch per
+//! *job* — never per frame. `hotpath_bench` A/Bs the recorder tax.
+
+pub mod metrics;
+pub mod recorder;
+
+pub use metrics::{MetricsRegistry, MetricsSnapshot, LATENCY_LE_US, METRICS_SCHEMA};
+pub use recorder::{
+    AnomalyRule, Event, EventKind, FlightDump, FlightRecorder, RecorderConfig, RecorderProbe,
+    RecorderStats,
+};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Request-scoped trace id: minted once per submission / stream open by
+/// the router, stamped on every recorder [`Event`] and on the request's
+/// [`Response`](crate::coordinator::Response) (or the session's
+/// [`StreamEvent`](crate::coordinator::StreamEvent)s), so the flight
+/// recorder's timeline can be filtered down to one utterance's life.
+///
+/// `0` is reserved as the [`NONE`](Self::NONE) sentinel (events not tied
+/// to any request); minted ids start at 1 and are unique per pool.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// "No request": the id stamped on events outside any request scope.
+    pub const NONE: TraceId = TraceId(0);
+
+    /// True for the [`NONE`](Self::NONE) sentinel.
+    pub fn is_none(&self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Monotonic microseconds since this process first asked for the time
+/// (lazily-initialized epoch). One shared timebase for every recorder
+/// ring and every [`Stats::captured_us`](crate::coordinator::Stats::captured_us)
+/// stamp, so timestamps are comparable across workers and across
+/// snapshots — which is what makes
+/// [`Stats::delta_since`](crate::coordinator::Stats::delta_since) rates
+/// and cross-lane event correlation meaningful.
+pub fn monotonic_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_id_none_sentinel() {
+        assert!(TraceId::NONE.is_none());
+        assert!(TraceId::default().is_none());
+        assert!(!TraceId(1).is_none());
+        assert_eq!(TraceId(42).to_string(), "t42");
+    }
+
+    #[test]
+    fn monotonic_us_never_goes_backwards() {
+        let a = monotonic_us();
+        let b = monotonic_us();
+        assert!(b >= a);
+    }
+}

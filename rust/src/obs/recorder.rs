@@ -1,0 +1,622 @@
+//! Flight recorder: bounded per-worker event rings with anomaly-triggered
+//! post-mortem dumps (DESIGN.md §12).
+//!
+//! Each worker owns one [`FlightRecorder`]: a fixed-capacity ring of
+//! [`Event`]s stamped with [`monotonic_us`] timestamps and the request's
+//! [`TraceId`]. Coordinator-level hooks record queue-shaped events
+//! (submit, dequeue, decision, backpressure, drop); chip-level activity is
+//! folded through [`RecorderProbe`], which composes the zero-cost
+//! [`ChipProbe`] hooks into per-batch counters and gate-edge events — the
+//! ring sees one [`EventKind::FrameBatch`] per utterance/chunk, never
+//! per-frame traffic.
+//!
+//! When an [`AnomalyRule`] matches a freshly-recorded event (a wakeword
+//! fire, a latency excursion, a backpressure burst), the ring is frozen
+//! into a [`FlightDump`] — the last-N-events post-mortem for "why did
+//! *this* utterance misbehave?" — retrievable via
+//! [`Coordinator::flight_dumps`](crate::coordinator::Coordinator::flight_dumps).
+//!
+//! A recorder built with [`FlightRecorder::disabled`] (the default for
+//! pools that never call
+//! [`CoordinatorBuilder::recorder`](crate::coordinator::CoordinatorBuilder::recorder))
+//! reduces every [`record`](FlightRecorder::record) to one predictable
+//! branch: the lean path stays allocation-free and lock-free.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::{monotonic_us, TraceId};
+use crate::chip::FrameOut;
+use crate::probe::{ChipProbe, CountingProbe};
+
+/// Default ring capacity (events retained per worker).
+pub const DEFAULT_RING_CAPACITY: usize = 256;
+
+/// Default bound on frozen dumps held per worker before oldest-first drop.
+pub const DEFAULT_DUMP_CAP: usize = 8;
+
+/// What happened, with the event-specific payload inline.
+///
+/// Variants are `Copy` and small by design: the ring stores events by
+/// value, so recording never allocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request (or stream open) was accepted into a lane by the router.
+    Submit,
+    /// A worker picked the job off its lane after `queued_us` in the queue.
+    Dequeue {
+        /// microseconds the job spent queued before the worker saw it
+        queued_us: u64,
+    },
+    /// Per-frame probe counters folded over one utterance / audio chunk.
+    FrameBatch {
+        /// frames consumed (gated + ungated)
+        frames: u32,
+        /// frames consumed with the ΔRNN clock-gated
+        gated: u32,
+        /// fired Δ-lanes (input + hidden) summed over the batch
+        fired: u32,
+    },
+    /// The VAD opened the ΔRNN clock gate (idle → active edge).
+    GateOpen,
+    /// The VAD closed the gate (active → idle edge).
+    GateClose,
+    /// An utterance decision completed.
+    Decision {
+        /// winning class index
+        class: u8,
+        /// enqueue-to-decision service time in microseconds
+        service_us: u64,
+    },
+    /// The wakeword state machine fired on a streaming session.
+    Detection {
+        /// detected class index
+        class: u8,
+    },
+    /// A submission or stream push was refused with the queue saturated.
+    Backpressure,
+    /// A stream event was shed on a full per-session channel.
+    EventDropped,
+    /// A streaming session opened on this worker.
+    SessionOpen,
+    /// A streaming session closed (client close, GC or shutdown).
+    SessionClose,
+}
+
+/// One recorded event: ring sequence number, monotonic timestamp, the
+/// request's trace id, the owning worker, and the [`EventKind`] payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// per-recorder monotonic sequence number (never reused)
+    pub seq: u64,
+    /// [`monotonic_us`] timestamp (shared process timebase)
+    pub at_us: u64,
+    /// the request this event belongs to ([`TraceId::NONE`] if none)
+    pub trace: TraceId,
+    /// worker index that recorded the event
+    pub worker: u32,
+    /// what happened
+    pub kind: EventKind,
+}
+
+/// Condition that freezes the ring into a [`FlightDump`] when a
+/// just-recorded event matches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnomalyRule {
+    /// A [`Decision`](EventKind::Decision) or
+    /// [`Detection`](EventKind::Detection) for this class — e.g. a
+    /// wakeword fire, or an always-suspicious class.
+    DecisionClass {
+        /// class index to trip on
+        class: usize,
+    },
+    /// A [`Decision`](EventKind::Decision) whose service time exceeded
+    /// `us` — the p99-excursion trigger.
+    LatencyAboveUs {
+        /// service-time threshold in microseconds (strictly above trips)
+        us: u64,
+    },
+    /// At least `count` [`Backpressure`](EventKind::Backpressure) events
+    /// (including the current one) within the trailing `window_us`
+    /// microseconds still held by the ring — the QueueFull-burst trigger.
+    BackpressureBurst {
+        /// backpressure events required within the window
+        count: usize,
+        /// trailing window in microseconds
+        window_us: u64,
+    },
+}
+
+/// Flight-recorder configuration, passed to
+/// [`CoordinatorBuilder::recorder`](crate::coordinator::CoordinatorBuilder::recorder).
+#[derive(Debug, Clone)]
+pub struct RecorderConfig {
+    /// ring capacity in events per worker (must be ≥ 1)
+    pub capacity: usize,
+    /// frozen dumps held per worker before oldest-first drop (must be ≥ 1)
+    pub dump_cap: usize,
+    /// anomaly rules evaluated against every recorded event
+    pub rules: Vec<AnomalyRule>,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        RecorderConfig {
+            capacity: DEFAULT_RING_CAPACITY,
+            dump_cap: DEFAULT_DUMP_CAP,
+            rules: Vec::new(),
+        }
+    }
+}
+
+impl RecorderConfig {
+    /// Add an anomaly rule (builder-style).
+    pub fn dump_on(mut self, rule: AnomalyRule) -> Self {
+        self.rules.push(rule);
+        self
+    }
+}
+
+/// A frozen post-mortem: the ring contents at the moment `rule` matched
+/// `trigger`, oldest event first.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    /// the rule that fired
+    pub rule: AnomalyRule,
+    /// the event that tripped it (also the last entry of `events`)
+    pub trigger: Event,
+    /// ring contents at freeze time, oldest first
+    pub events: Vec<Event>,
+}
+
+impl FlightDump {
+    /// The subset of events belonging to one request, oldest first — the
+    /// trace-correlated timeline for the offending utterance.
+    pub fn events_for(&self, trace: TraceId) -> Vec<Event> {
+        self.events.iter().filter(|e| e.trace == trace).copied().collect()
+    }
+}
+
+/// Folded recorder totals, exposed through the metrics snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecorderStats {
+    /// events recorded since startup (including ones the ring evicted)
+    pub events: u64,
+    /// dumps frozen by anomaly rules
+    pub dumps_taken: u64,
+    /// frozen dumps discarded oldest-first at the dump cap
+    pub dumps_dropped: u64,
+    /// dumps currently held (un-drained)
+    pub dumps_held: u64,
+}
+
+impl RecorderStats {
+    /// Fold another recorder's totals into this one (per-worker → pool).
+    pub fn merge(&mut self, other: &RecorderStats) {
+        self.events += other.events;
+        self.dumps_taken += other.dumps_taken;
+        self.dumps_dropped += other.dumps_dropped;
+        self.dumps_held += other.dumps_held;
+    }
+}
+
+struct Inner {
+    ring: VecDeque<Event>,
+    seq: u64,
+    events: u64,
+    dumps: VecDeque<FlightDump>,
+    dumps_taken: u64,
+    dumps_dropped: u64,
+}
+
+/// One worker's bounded event ring plus its frozen dumps.
+///
+/// The mutex is uncontended in practice — each worker records onto its own
+/// recorder; readers ([`stats`](Self::stats) / [`take_dumps`](Self::take_dumps))
+/// run at snapshot cadence, not per event.
+pub struct FlightRecorder {
+    enabled: bool,
+    capacity: usize,
+    dump_cap: usize,
+    rules: Vec<AnomalyRule>,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("enabled", &self.enabled)
+            .field("capacity", &self.capacity)
+            .field("dump_cap", &self.dump_cap)
+            .field("rules", &self.rules)
+            .finish_non_exhaustive()
+    }
+}
+
+impl FlightRecorder {
+    /// An enabled recorder with the given configuration.
+    pub fn new(config: RecorderConfig) -> Self {
+        Self::build(config, true)
+    }
+
+    /// The disabled recorder: [`record`](Self::record) is a single branch,
+    /// [`stats`](Self::stats) reports zeros. Pools built without
+    /// [`CoordinatorBuilder::recorder`](crate::coordinator::CoordinatorBuilder::recorder)
+    /// use this so the lean path carries no ring, no lock traffic and no
+    /// timestamp reads.
+    pub fn disabled() -> Self {
+        Self::build(
+            RecorderConfig { capacity: 1, dump_cap: 1, rules: Vec::new() },
+            false,
+        )
+    }
+
+    fn build(config: RecorderConfig, enabled: bool) -> Self {
+        let capacity = config.capacity.max(1);
+        FlightRecorder {
+            enabled,
+            capacity,
+            dump_cap: config.dump_cap.max(1),
+            rules: config.rules,
+            inner: Mutex::new(Inner {
+                ring: VecDeque::with_capacity(if enabled { capacity } else { 0 }),
+                seq: 0,
+                events: 0,
+                dumps: VecDeque::new(),
+                dumps_taken: 0,
+                dumps_dropped: 0,
+            }),
+        }
+    }
+
+    /// True when this recorder actually records. Callers use this to skip
+    /// probe construction / timestamp math entirely on the lean path.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event (no-op when disabled). Evicts the oldest event at
+    /// capacity, then evaluates the anomaly rules against the new event;
+    /// the first match freezes the ring into a [`FlightDump`].
+    pub fn record(&self, worker: u32, trace: TraceId, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let ev = Event { seq: g.seq, at_us: monotonic_us(), trace, worker, kind };
+        g.seq += 1;
+        g.events += 1;
+        if g.ring.len() == self.capacity {
+            g.ring.pop_front();
+        }
+        g.ring.push_back(ev);
+        if let Some(rule) = self.rules.iter().find(|r| rule_hits(r, &ev, &g.ring)).copied() {
+            if g.dumps.len() == self.dump_cap {
+                g.dumps.pop_front();
+                g.dumps_dropped += 1;
+            }
+            let events: Vec<Event> = g.ring.iter().copied().collect();
+            g.dumps.push_back(FlightDump { rule, trigger: ev, events });
+            g.dumps_taken += 1;
+        }
+    }
+
+    /// Drain the frozen dumps, oldest first.
+    pub fn take_dumps(&self) -> Vec<FlightDump> {
+        let mut g = self.inner.lock().unwrap();
+        g.dumps.drain(..).collect()
+    }
+
+    /// Totals for the metrics snapshot.
+    pub fn stats(&self) -> RecorderStats {
+        let g = self.inner.lock().unwrap();
+        RecorderStats {
+            events: g.events,
+            dumps_taken: g.dumps_taken,
+            dumps_dropped: g.dumps_dropped,
+            dumps_held: g.dumps.len() as u64,
+        }
+    }
+}
+
+fn rule_hits(rule: &AnomalyRule, ev: &Event, ring: &VecDeque<Event>) -> bool {
+    match *rule {
+        AnomalyRule::DecisionClass { class } => match ev.kind {
+            EventKind::Decision { class: c, .. } | EventKind::Detection { class: c } => {
+                c as usize == class
+            }
+            _ => false,
+        },
+        AnomalyRule::LatencyAboveUs { us } => {
+            matches!(ev.kind, EventKind::Decision { service_us, .. } if service_us > us)
+        }
+        AnomalyRule::BackpressureBurst { count, window_us } => {
+            if !matches!(ev.kind, EventKind::Backpressure) {
+                return false;
+            }
+            let horizon = ev.at_us.saturating_sub(window_us);
+            let recent = ring
+                .iter()
+                .rev()
+                .take_while(|e| e.at_us >= horizon)
+                .filter(|e| matches!(e.kind, EventKind::Backpressure))
+                .count();
+            recent >= count
+        }
+    }
+}
+
+/// The recorder's [`ChipProbe`]: folds per-frame hooks into
+/// [`CountingProbe`] counters and emits gate-edge events in real time; the
+/// accumulated counters become one [`EventKind::FrameBatch`] on
+/// [`flush_frame_batch`](Self::flush_frame_batch).
+///
+/// Gate state threads across probe instances (chunked stream pushes) via
+/// [`with_gate_state`](Self::with_gate_state) / [`gate_state`](Self::gate_state),
+/// so a gate edge spanning two audio chunks is still recorded exactly once.
+#[derive(Debug)]
+pub struct RecorderProbe<'a> {
+    rec: &'a FlightRecorder,
+    worker: u32,
+    trace: TraceId,
+    /// per-frame counters accumulated since the last flush
+    pub counters: CountingProbe,
+    last_gated: Option<bool>,
+}
+
+impl<'a> RecorderProbe<'a> {
+    /// A probe with unknown prior gate state (fresh utterance): the first
+    /// frame establishes the state and emits the corresponding edge event.
+    pub fn new(rec: &'a FlightRecorder, worker: u32, trace: TraceId) -> Self {
+        Self::with_gate_state(rec, worker, trace, None)
+    }
+
+    /// A probe resuming a session whose last-seen gate state is known.
+    pub fn with_gate_state(
+        rec: &'a FlightRecorder,
+        worker: u32,
+        trace: TraceId,
+        last_gated: Option<bool>,
+    ) -> Self {
+        RecorderProbe { rec, worker, trace, counters: CountingProbe::default(), last_gated }
+    }
+
+    /// Gate state after the frames seen so far (`Some(true)` = gated /
+    /// clock off), for threading into the next probe instance.
+    pub fn gate_state(&self) -> Option<bool> {
+        self.last_gated
+    }
+
+    /// Emit one [`EventKind::FrameBatch`] from the accumulated counters
+    /// and reset them. No event is emitted if no frame completed.
+    pub fn flush_frame_batch(&mut self) {
+        if self.counters.frames == 0 {
+            return;
+        }
+        let clamp = |v: u64| v.min(u32::MAX as u64) as u32;
+        self.rec.record(
+            self.worker,
+            self.trace,
+            EventKind::FrameBatch {
+                frames: clamp(self.counters.frames),
+                gated: clamp(self.counters.gated),
+                fired: clamp(self.counters.fired_x + self.counters.fired_h),
+            },
+        );
+        self.counters = CountingProbe::default();
+    }
+}
+
+impl ChipProbe for RecorderProbe<'_> {
+    #[inline]
+    fn frame_completed(&mut self, frame: &FrameOut) {
+        self.counters.frame_completed(frame);
+        if self.last_gated != Some(frame.gated) {
+            self.last_gated = Some(frame.gated);
+            let edge = if frame.gated { EventKind::GateClose } else { EventKind::GateOpen };
+            self.rec.record(self.worker, self.trace, edge);
+        }
+    }
+
+    #[inline]
+    fn lanes_fired(&mut self, fired_x: usize, fired_h: usize) {
+        self.counters.lanes_fired(fired_x, fired_h);
+    }
+
+    #[inline]
+    fn sram_row_read(&mut self, base_word: usize, words: usize) {
+        self.counters.sram_row_read(base_word, words);
+    }
+
+    #[inline]
+    fn gate_skipped(&mut self, index: u64) {
+        self.counters.gate_skipped(index);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fex::MAX_CHANNELS;
+
+    fn frame(index: u64, gated: bool) -> FrameOut {
+        FrameOut {
+            index,
+            feat: [0i64; MAX_CHANNELS],
+            logits: [0i64; crate::NUM_CLASSES],
+            fired: 2,
+            cycles: 10,
+            gated,
+        }
+    }
+
+    fn kinds(rec: &FlightRecorder) -> Vec<EventKind> {
+        let g = rec.inner.lock().unwrap();
+        g.ring.iter().map(|e| e.kind).collect()
+    }
+
+    #[test]
+    fn ring_bounded_and_seq_monotonic() {
+        let rec = FlightRecorder::new(RecorderConfig {
+            capacity: 4,
+            ..RecorderConfig::default()
+        });
+        for i in 0..10 {
+            rec.record(0, TraceId(i), EventKind::Submit);
+        }
+        let g = rec.inner.lock().unwrap();
+        assert_eq!(g.ring.len(), 4, "ring must stay at capacity");
+        let seqs: Vec<u64> = g.ring.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest evicted, seq never reused");
+        assert_eq!(g.events, 10, "events counts evictions too");
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let rec = FlightRecorder::disabled();
+        assert!(!rec.is_enabled());
+        rec.record(0, TraceId(1), EventKind::Submit);
+        assert_eq!(rec.stats(), RecorderStats::default());
+        assert!(rec.take_dumps().is_empty());
+    }
+
+    #[test]
+    fn decision_class_rule_freezes_ring() {
+        let rec = FlightRecorder::new(
+            RecorderConfig::default().dump_on(AnomalyRule::DecisionClass { class: 11 }),
+        );
+        let t = TraceId(7);
+        rec.record(0, t, EventKind::Submit);
+        rec.record(0, t, EventKind::Dequeue { queued_us: 5 });
+        rec.record(0, t, EventKind::Decision { class: 3, service_us: 10 });
+        assert!(rec.take_dumps().is_empty(), "class 3 must not trip a class-11 rule");
+        rec.record(0, t, EventKind::Decision { class: 11, service_us: 20 });
+        let dumps = rec.take_dumps();
+        assert_eq!(dumps.len(), 1);
+        let d = &dumps[0];
+        assert_eq!(d.rule, AnomalyRule::DecisionClass { class: 11 });
+        assert_eq!(d.trigger.kind, EventKind::Decision { class: 11, service_us: 20 });
+        assert_eq!(d.events.len(), 4, "dump holds the whole ring");
+        assert_eq!(*d.events.last().unwrap(), d.trigger);
+        assert_eq!(d.events_for(t).len(), 4);
+        assert!(d.events_for(TraceId(99)).is_empty());
+        assert!(rec.take_dumps().is_empty(), "take_dumps drains");
+    }
+
+    #[test]
+    fn detection_trips_decision_class_rule() {
+        let rec = FlightRecorder::new(
+            RecorderConfig::default().dump_on(AnomalyRule::DecisionClass { class: 11 }),
+        );
+        rec.record(0, TraceId(1), EventKind::Detection { class: 11 });
+        assert_eq!(rec.take_dumps().len(), 1, "wakeword fire must dump");
+    }
+
+    #[test]
+    fn latency_rule_is_strictly_above() {
+        let rec = FlightRecorder::new(
+            RecorderConfig::default().dump_on(AnomalyRule::LatencyAboveUs { us: 100 }),
+        );
+        rec.record(0, TraceId(1), EventKind::Decision { class: 0, service_us: 100 });
+        assert!(rec.take_dumps().is_empty());
+        rec.record(0, TraceId(2), EventKind::Decision { class: 0, service_us: 101 });
+        assert_eq!(rec.take_dumps().len(), 1);
+    }
+
+    #[test]
+    fn backpressure_burst_counts_window() {
+        let rec = FlightRecorder::new(RecorderConfig::default().dump_on(
+            AnomalyRule::BackpressureBurst { count: 3, window_us: u64::MAX },
+        ));
+        rec.record(0, TraceId::NONE, EventKind::Backpressure);
+        rec.record(0, TraceId::NONE, EventKind::Backpressure);
+        assert!(rec.take_dumps().is_empty(), "2 < count");
+        rec.record(0, TraceId::NONE, EventKind::Backpressure);
+        let dumps = rec.take_dumps();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].trigger.kind, EventKind::Backpressure);
+    }
+
+    #[test]
+    fn dump_cap_drops_oldest() {
+        let rec = FlightRecorder::new(RecorderConfig {
+            capacity: 8,
+            dump_cap: 2,
+            rules: vec![AnomalyRule::DecisionClass { class: 0 }],
+        });
+        for i in 0..3u64 {
+            rec.record(0, TraceId(i + 1), EventKind::Decision { class: 0, service_us: i });
+        }
+        let stats = rec.stats();
+        assert_eq!(stats.dumps_taken, 3);
+        assert_eq!(stats.dumps_dropped, 1);
+        assert_eq!(stats.dumps_held, 2);
+        let dumps = rec.take_dumps();
+        assert_eq!(dumps.len(), 2);
+        assert_eq!(
+            dumps[0].trigger.kind,
+            EventKind::Decision { class: 0, service_us: 1 },
+            "oldest dump was dropped"
+        );
+    }
+
+    #[test]
+    fn recorder_probe_emits_edges_and_one_batch() {
+        let rec = FlightRecorder::new(RecorderConfig::default());
+        let t = TraceId(5);
+        let mut p = RecorderProbe::new(&rec, 0, t);
+        // active, active, gated, gated, active: two edges + the initial one
+        p.frame_completed(&frame(0, false));
+        p.frame_completed(&frame(1, false));
+        p.gate_skipped(2);
+        p.frame_completed(&frame(2, true));
+        p.frame_completed(&frame(3, true));
+        p.frame_completed(&frame(4, false));
+        p.lanes_fired(3, 4);
+        assert_eq!(p.gate_state(), Some(false));
+        p.flush_frame_batch();
+        p.flush_frame_batch(); // second flush: empty counters, no event
+        assert_eq!(
+            kinds(&rec),
+            vec![
+                EventKind::GateOpen,
+                EventKind::GateClose,
+                EventKind::GateOpen,
+                EventKind::FrameBatch { frames: 5, gated: 1, fired: 7 },
+            ]
+        );
+        let g = rec.inner.lock().unwrap();
+        assert!(g.ring.iter().all(|e| e.trace == t));
+    }
+
+    #[test]
+    fn recorder_probe_threads_gate_state_across_chunks() {
+        let rec = FlightRecorder::new(RecorderConfig::default());
+        let mut p1 = RecorderProbe::new(&rec, 0, TraceId(1));
+        p1.frame_completed(&frame(0, true));
+        let carried = p1.gate_state();
+        p1.flush_frame_batch();
+        assert_eq!(carried, Some(true));
+        // same gate state in the next chunk: no spurious edge
+        let mut p2 = RecorderProbe::with_gate_state(&rec, 0, TraceId(1), carried);
+        p2.frame_completed(&frame(1, true));
+        p2.flush_frame_batch();
+        let edge_count = kinds(&rec)
+            .iter()
+            .filter(|k| matches!(k, EventKind::GateClose | EventKind::GateOpen))
+            .count();
+        assert_eq!(edge_count, 1, "one edge for the initial state, none for the resume");
+    }
+
+    #[test]
+    fn timestamps_monotonic_within_ring() {
+        let rec = FlightRecorder::new(RecorderConfig::default());
+        for i in 0..5 {
+            rec.record(0, TraceId(i), EventKind::Submit);
+        }
+        let g = rec.inner.lock().unwrap();
+        let ts: Vec<u64> = g.ring.iter().map(|e| e.at_us).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -30,6 +30,7 @@ use crate::accel::gru::QuantParams;
 use crate::chip::{ChipConfig, ChipReport, KwsChip};
 use crate::energy::ChipActivity;
 use crate::error::StreamPushError;
+use crate::probe::{ChipProbe, NoProbe};
 use detector::{Detector, DetectorConfig, DetectionEvent};
 use vad::{Vad, VadConfig};
 
@@ -106,6 +107,20 @@ impl StreamPipeline {
     /// pieces. The coordinator's worker does exactly that, so a hostile
     /// chunk can no longer kill a worker thread.
     pub fn push_audio(&mut self, audio12: &[i64]) -> Result<Vec<DetectionEvent>, StreamPushError> {
+        self.push_audio_probed(audio12, &mut NoProbe)
+    }
+
+    /// [`push_audio`](Self::push_audio) with an instrumentation probe
+    /// observing every consumed frame (polled *and* VAD-skipped). The
+    /// probe is generic, so `NoProbe` monomorphizes back to the lean
+    /// path — `push_audio` above is exactly that instantiation. The
+    /// coordinator's flight recorder rides this seam with a
+    /// [`RecorderProbe`](crate::obs::RecorderProbe) when enabled.
+    pub fn push_audio_probed<P: ChipProbe>(
+        &mut self,
+        audio12: &[i64],
+        probe: &mut P,
+    ) -> Result<Vec<DetectionEvent>, StreamPushError> {
         if self.chip.push_samples(audio12).is_err() {
             // the pipeline drains every frame below, so only an oversized
             // single chunk can trip the bound — hand it back intact. The
@@ -119,9 +134,9 @@ impl StreamPipeline {
         while let Some(&feat) = self.chip.peek_frame() {
             let open = self.vad.step(&feat);
             let out = if open {
-                self.chip.poll_frame()
+                self.chip.poll_frame_probed(probe)
             } else {
-                self.chip.skip_frame()
+                self.chip.skip_frame_probed(probe)
             }
             .expect("peeked frame must be consumable");
             if let Some(ev) = self.detector.step(out.index, &out.logits, out.gated) {

@@ -102,6 +102,11 @@ impl LogHistogram {
         self.sum
     }
 
+    /// Mean of the recorded values.
+    ///
+    /// **Empty histogram:** pinned to `0.0` (never `NaN` from a 0/0) — a
+    /// freshly-spawned pool's metrics snapshot reads as "no latency yet",
+    /// not as a formatting landmine for dashboards.
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -113,6 +118,10 @@ impl LogHistogram {
     /// Percentile by the exclusive nearest-rank rule with a round-half-up
     /// rank — identical to [`crate::coordinator::percentile`], answered as
     /// the midpoint of the bucket holding that order statistic.
+    ///
+    /// **Empty histogram:** pinned to `0` (no garbage bucket scan) — the
+    /// same answer [`crate::coordinator::percentile`] gives for an empty
+    /// sample, so exposition code never special-cases `count == 0`.
     pub fn percentile(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -129,6 +138,29 @@ impl LogHistogram {
         }
         // unreachable: cum reaches self.count
         bucket_mid(N_BUCKETS - 1)
+    }
+
+    /// Number of recorded values strictly below `threshold` — the
+    /// cumulative counter behind the metrics exposition's Prometheus-style
+    /// `le` buckets.
+    ///
+    /// Exact whenever `threshold` is a bucket boundary: any value `< 32`,
+    /// or `(32 + m) << k` — in particular **every power of two ≥ 32**,
+    /// which is why [`crate::obs::LATENCY_LE_US`] uses only those. For a
+    /// threshold inside a bucket the partial bucket is excluded, so the
+    /// answer under-counts by at most that one bucket's population
+    /// (≤ 1/32 relative width).
+    pub fn count_below(&self, threshold: u64) -> u64 {
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let (lo, hi) = bucket_bounds(i);
+            if hi < threshold {
+                cum += c;
+            } else if lo >= threshold {
+                break;
+            }
+        }
+        cum
     }
 
     /// Heap footprint of the bucket array — constant by construction; the
@@ -213,6 +245,57 @@ mod tests {
             let (lo, _) = bucket_bounds(i);
             assert_eq!(lo, prev_hi.wrapping_add(1), "gap/overlap at bucket {i}");
         }
+    }
+
+    #[test]
+    fn empty_histogram_pins_mean_and_percentiles() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0, "empty mean is pinned to 0.0, not NaN");
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), 0, "empty p{p} is pinned to 0");
+        }
+        assert_eq!(h.count_below(u64::MAX), 0);
+        let a = AtomicLogHistogram::new();
+        let snap = a.snapshot();
+        assert_eq!(snap.mean(), 0.0);
+        assert_eq!(snap.percentile(0.99), 0);
+    }
+
+    #[test]
+    fn single_sample_dominates_every_percentile() {
+        let mut h = LogHistogram::new();
+        h.record(300);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), 300.0);
+        // every percentile resolves to the one sample's bucket midpoint
+        let mid = bucket_mid(bucket_index(300));
+        for p in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), mid);
+        }
+        // sub-1/64 relative error vs the exact sample
+        assert!((mid as f64 - 300.0).abs() / 300.0 <= 1.0 / 64.0);
+        // exact small values stay exact
+        let mut e = LogHistogram::new();
+        e.record(7);
+        assert_eq!(e.percentile(0.5), 7);
+        assert_eq!(e.mean(), 7.0);
+    }
+
+    #[test]
+    fn count_below_is_exact_at_bucket_boundaries() {
+        let mut h = LogHistogram::new();
+        let vals = [0u64, 5, 31, 32, 100, 127, 128, 300, 5000, 1 << 20];
+        for v in vals {
+            h.record(v);
+        }
+        // powers of two ≥ 32 (and anything < 32) are exact boundaries
+        for t in [1u64, 16, 32, 64, 128, 512, 2048, 8192, 1 << 21] {
+            let exact = vals.iter().filter(|&&v| v < t).count() as u64;
+            assert_eq!(h.count_below(t), exact, "threshold {t}");
+        }
+        assert_eq!(h.count_below(0), 0);
+        assert_eq!(h.count_below(u64::MAX), vals.len() as u64);
     }
 
     #[test]

@@ -1,0 +1,341 @@
+//! Golden tests for the metrics exposition schema (PR 7).
+//!
+//! The Prometheus-style text and the JSON document emitted by
+//! [`MetricsSnapshot`] are a **stable schema** other tooling scrapes
+//! (`tools/bench_report.py --validate-metrics`, the CI soak smoke step,
+//! any dashboard pointed at the `main serve` dumps). These tests pin:
+//!
+//! * the full ordered `# TYPE` line sequence of the text form,
+//! * every integer-valued sample line byte-exact against a synthetic
+//!   [`Stats`] built from hand-computable counters,
+//! * the float gauges by parsed value (all chosen exactly representable:
+//!   accuracy 6/8, sparsity 1 − 100/400, duty cycle 1 − 155/620),
+//! * the JSON key sets at every level, the `le` bucket sequence, and a
+//!   parse → compare roundtrip through the crate's own JSON parser.
+//!
+//! Any change that breaks these tests is a schema break: bump
+//! [`METRICS_SCHEMA`], update `tools/bench_report.py`, then re-pin here.
+
+use deltakws::coordinator::{LaneStats, Stats};
+use deltakws::energy::ChipActivity;
+use deltakws::obs::recorder::RecorderStats;
+use deltakws::obs::{MetricsRegistry, MetricsSnapshot, LATENCY_LE_US, METRICS_SCHEMA};
+use deltakws::util::hist::LogHistogram;
+use deltakws::util::json::{parse, Json};
+
+/// Synthetic pool stats with every derived quantity exactly computable:
+/// latency samples 100/300/5000 µs split cleanly across the `le` bounds,
+/// and each float gauge is a dyadic-free but exactly-representable ratio.
+fn synthetic_stats() -> Stats {
+    let mut latency = LogHistogram::new();
+    latency.record(100);
+    latency.record(300);
+    latency.record(5_000);
+    let mut chunk_latency = LogHistogram::new();
+    chunk_latency.record(50);
+    Stats {
+        completed: 10,
+        correct: 6,
+        labelled: 8,
+        rejected_full: 2,
+        rejected_closed: 1,
+        spilled: 3,
+        latency,
+        chunk_latency,
+        activity: ChipActivity {
+            frames: 620,
+            gated_frames: 155,
+            mac_ops: 1_000,
+            sram_word_reads: 2_000,
+            rnn_cycles: 3_000,
+            fired_lanes: 100,
+            total_lanes: 400,
+            fired_x: 60,
+            total_x: 240,
+            fired_h: 40,
+            total_h: 160,
+            fex_visits: 500,
+        },
+        fused_batches: 1,
+        stream_events_dropped: 4,
+        session_bytes: 512,
+        per_worker: vec![
+            LaneStats { completed: 7, spilled_in: 1, pinned_full: 2, stream_chunks: 5 },
+            LaneStats { completed: 3, spilled_in: 2, pinned_full: 0, stream_chunks: 9 },
+        ],
+        captured_us: 1_000_000,
+    }
+}
+
+fn has_line(text: &str, line: &str) -> bool {
+    text.lines().any(|l| l == line)
+}
+
+/// Value of the unique sample line starting with `prefix` followed by a
+/// space (labels included in the prefix when present).
+fn prom_value(text: &str, prefix: &str) -> f64 {
+    let want = format!("{prefix} ");
+    let mut hits = text.lines().filter(|l| l.starts_with(&want));
+    let line = hits.next().unwrap_or_else(|| panic!("no sample line for {prefix}"));
+    assert!(hits.next().is_none(), "ambiguous sample line for {prefix}");
+    line[want.len()..].parse().unwrap_or_else(|_| panic!("unparseable value in {line:?}"))
+}
+
+#[test]
+fn prometheus_type_lines_are_pinned() {
+    let text = MetricsSnapshot::from_stats(&synthetic_stats()).to_prometheus();
+    let types: Vec<&str> = text.lines().filter(|l| l.starts_with("# TYPE ")).collect();
+    let expected = [
+        "# TYPE deltakws_metrics_seq gauge",
+        "# TYPE deltakws_metrics_captured_us gauge",
+        "# TYPE deltakws_completed_total counter",
+        "# TYPE deltakws_labelled_total counter",
+        "# TYPE deltakws_correct_total counter",
+        "# TYPE deltakws_accuracy gauge",
+        "# TYPE deltakws_rejected_total counter",
+        "# TYPE deltakws_spilled_total counter",
+        "# TYPE deltakws_fused_batches_total counter",
+        "# TYPE deltakws_stream_events_dropped_total counter",
+        "# TYPE deltakws_session_bytes gauge",
+        "# TYPE deltakws_chip_frames_total counter",
+        "# TYPE deltakws_chip_gated_frames_total counter",
+        "# TYPE deltakws_chip_mac_ops_total counter",
+        "# TYPE deltakws_chip_sram_word_reads_total counter",
+        "# TYPE deltakws_chip_rnn_cycles_total counter",
+        "# TYPE deltakws_chip_fired_lanes_total counter",
+        "# TYPE deltakws_chip_scanned_lanes_total counter",
+        "# TYPE deltakws_chip_fex_visits_total counter",
+        "# TYPE deltakws_chip_sparsity gauge",
+        "# TYPE deltakws_chip_duty_cycle gauge",
+        "# TYPE deltakws_worker_completed_total counter",
+        "# TYPE deltakws_worker_spilled_in_total counter",
+        "# TYPE deltakws_worker_pinned_full_total counter",
+        "# TYPE deltakws_worker_stream_chunks_total counter",
+        "# TYPE deltakws_latency_us histogram",
+        "# TYPE deltakws_chunk_latency_us histogram",
+    ];
+    assert_eq!(types, expected, "TYPE line set/order drifted — schema break");
+}
+
+#[test]
+fn prometheus_integer_samples_are_exact() {
+    let text = MetricsSnapshot::from_stats(&synthetic_stats()).to_prometheus();
+    for line in [
+        "deltakws_metrics_seq 0",
+        "deltakws_metrics_captured_us 1000000",
+        "deltakws_completed_total 10",
+        "deltakws_labelled_total 8",
+        "deltakws_correct_total 6",
+        "deltakws_rejected_total{cause=\"queue_full\"} 2",
+        "deltakws_rejected_total{cause=\"closed\"} 1",
+        "deltakws_spilled_total 3",
+        "deltakws_fused_batches_total 1",
+        "deltakws_stream_events_dropped_total 4",
+        "deltakws_session_bytes 512",
+        "deltakws_chip_frames_total 620",
+        "deltakws_chip_gated_frames_total 155",
+        "deltakws_chip_mac_ops_total 1000",
+        "deltakws_chip_sram_word_reads_total 2000",
+        "deltakws_chip_rnn_cycles_total 3000",
+        "deltakws_chip_fired_lanes_total 100",
+        "deltakws_chip_scanned_lanes_total 400",
+        "deltakws_chip_fex_visits_total 500",
+        "deltakws_worker_completed_total{worker=\"0\"} 7",
+        "deltakws_worker_completed_total{worker=\"1\"} 3",
+        "deltakws_worker_spilled_in_total{worker=\"0\"} 1",
+        "deltakws_worker_spilled_in_total{worker=\"1\"} 2",
+        "deltakws_worker_pinned_full_total{worker=\"0\"} 2",
+        "deltakws_worker_pinned_full_total{worker=\"1\"} 0",
+        "deltakws_worker_stream_chunks_total{worker=\"0\"} 5",
+        "deltakws_worker_stream_chunks_total{worker=\"1\"} 9",
+    ] {
+        assert!(has_line(&text, line), "missing exact sample line {line:?} in:\n{text}");
+    }
+}
+
+#[test]
+fn prometheus_float_gauges_parse_to_exact_ratios() {
+    let text = MetricsSnapshot::from_stats(&synthetic_stats()).to_prometheus();
+    assert_eq!(prom_value(&text, "deltakws_accuracy"), 0.75, "6/8 labelled correct");
+    assert_eq!(prom_value(&text, "deltakws_chip_sparsity"), 0.75, "1 - 100/400 lanes fired");
+    assert_eq!(prom_value(&text, "deltakws_chip_duty_cycle"), 0.75, "1 - 155/620 gated");
+}
+
+#[test]
+fn prometheus_histograms_cumulate_exactly() {
+    let text = MetricsSnapshot::from_stats(&synthetic_stats()).to_prometheus();
+    // samples 100/300/5000: 100 < 128; 300 < 512; 5000 < 8192 — and every
+    // `le` is an exact LogHistogram bucket boundary, so the cumulative
+    // counts are exact (strictly-below semantics, see LATENCY_LE_US docs)
+    for (le, want) in LATENCY_LE_US.iter().zip([1u64, 2, 2, 3, 3, 3, 3, 3]) {
+        let line = format!("deltakws_latency_us_bucket{{le=\"{le}\"}} {want}");
+        assert!(has_line(&text, &line), "missing {line:?}");
+    }
+    assert!(has_line(&text, "deltakws_latency_us_bucket{le=\"+Inf\"} 3"));
+    assert!(has_line(&text, "deltakws_latency_us_sum 5400"));
+    assert!(has_line(&text, "deltakws_latency_us_count 3"));
+    for le in LATENCY_LE_US {
+        let line = format!("deltakws_chunk_latency_us_bucket{{le=\"{le}\"}} 1");
+        assert!(has_line(&text, &line), "missing {line:?}");
+    }
+    assert!(has_line(&text, "deltakws_chunk_latency_us_bucket{le=\"+Inf\"} 1"));
+    assert!(has_line(&text, "deltakws_chunk_latency_us_sum 50"));
+    assert!(has_line(&text, "deltakws_chunk_latency_us_count 1"));
+}
+
+fn key_set(j: &Json) -> Vec<String> {
+    match j {
+        Json::Obj(m) => m.keys().cloned().collect(),
+        other => panic!("expected object, got {other}"),
+    }
+}
+
+#[test]
+fn json_key_sets_are_pinned() {
+    let doc = MetricsSnapshot::from_stats(&synthetic_stats()).to_json();
+    // BTreeMap keys come back sorted — pin the sorted sets
+    assert_eq!(
+        key_set(&doc),
+        [
+            "activity",
+            "captured_us",
+            "chunk_latency_us",
+            "counters",
+            "gauges",
+            "latency_us",
+            "per_worker",
+            "rates",
+            "recorder",
+            "schema",
+            "seq",
+        ]
+    );
+    assert_eq!(
+        key_set(doc.get("counters").unwrap()),
+        [
+            "completed",
+            "correct",
+            "fused_batches",
+            "labelled",
+            "rejected_closed",
+            "rejected_full",
+            "spilled",
+            "stream_events_dropped",
+        ]
+    );
+    assert_eq!(
+        key_set(doc.get("gauges").unwrap()),
+        ["accuracy", "session_bytes", "telemetry_bytes"]
+    );
+    assert_eq!(
+        key_set(doc.get("activity").unwrap()),
+        [
+            "duty_cycle",
+            "fex_visits",
+            "fired_h",
+            "fired_lanes",
+            "fired_x",
+            "frames",
+            "gated_frames",
+            "mac_ops",
+            "rnn_cycles",
+            "sparsity",
+            "sram_word_reads",
+            "total_h",
+            "total_lanes",
+            "total_x",
+        ]
+    );
+    for hist in ["latency_us", "chunk_latency_us"] {
+        assert_eq!(
+            key_set(doc.get(hist).unwrap()),
+            ["buckets", "count", "mean", "p50", "p90", "p99", "sum"],
+            "{hist} shape drifted"
+        );
+    }
+    let workers = doc.get("per_worker").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 2);
+    for w in workers {
+        assert_eq!(
+            key_set(w),
+            ["completed", "pinned_full", "spilled_in", "stream_chunks", "worker"]
+        );
+    }
+}
+
+#[test]
+fn json_values_and_le_sequence_are_exact() {
+    let doc = MetricsSnapshot::from_stats(&synthetic_stats()).to_json();
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
+    assert_eq!(doc.at(&["counters", "completed"]).unwrap().as_f64(), Some(10.0));
+    assert_eq!(doc.at(&["gauges", "accuracy"]).unwrap().as_f64(), Some(0.75));
+    assert_eq!(doc.at(&["activity", "sparsity"]).unwrap().as_f64(), Some(0.75));
+    assert_eq!(doc.at(&["activity", "duty_cycle"]).unwrap().as_f64(), Some(0.75));
+    // document shape is constant: absent sections serialize as null
+    assert_eq!(doc.get("recorder"), Some(&Json::Null));
+    assert_eq!(doc.get("rates"), Some(&Json::Null));
+
+    let buckets = doc.at(&["latency_us", "buckets"]).unwrap().as_arr().unwrap();
+    assert_eq!(buckets.len(), LATENCY_LE_US.len() + 1, "8 bounds + the +Inf bucket");
+    for (b, le) in buckets.iter().zip(LATENCY_LE_US) {
+        assert_eq!(b.get("le").unwrap().as_f64(), Some(le as f64));
+    }
+    assert_eq!(buckets.last().unwrap().get("le"), Some(&Json::Null), "+Inf is le:null");
+    let counts: Vec<u64> =
+        buckets.iter().map(|b| b.get("count").unwrap().as_f64().unwrap() as u64).collect();
+    assert_eq!(counts, [1, 2, 2, 3, 3, 3, 3, 3, 3]);
+
+    // percentile goldens pin the round-half-up rank rule through the
+    // exposition: p50 of {100, 300, 5000} is the 2nd order statistic's
+    // bucket midpoint ([296, 303] → 299); p90/p99 clamp to the 3rd
+    // ([4992, 5119] → 5055)
+    assert_eq!(doc.at(&["latency_us", "mean"]).unwrap().as_f64(), Some(1800.0));
+    assert_eq!(doc.at(&["latency_us", "p50"]).unwrap().as_f64(), Some(299.0));
+    assert_eq!(doc.at(&["latency_us", "p90"]).unwrap().as_f64(), Some(5055.0));
+    assert_eq!(doc.at(&["latency_us", "p99"]).unwrap().as_f64(), Some(5055.0));
+    assert_eq!(doc.at(&["chunk_latency_us", "p50"]).unwrap().as_f64(), Some(50.0));
+}
+
+#[test]
+fn json_roundtrips_through_the_crate_parser() {
+    let doc = MetricsSnapshot::from_stats(&synthetic_stats()).to_json();
+    let reparsed = parse(&doc.to_string()).expect("exposition emits valid JSON");
+    assert_eq!(reparsed, doc);
+}
+
+#[test]
+fn registry_fold_exposes_recorder_and_rates_sections() {
+    let mut reg = MetricsRegistry::new();
+    let first = reg.fold(synthetic_stats(), None);
+    assert_eq!(first.seq, 1);
+
+    let mut later = synthetic_stats();
+    later.captured_us = 3_000_000;
+    later.completed = 50;
+    later.rejected_full = 4;
+    later.activity.frames = 3_100;
+    later.per_worker[0].stream_chunks = 21; // 14 → 30 total chunks
+    let rec = RecorderStats { events: 7, dumps_taken: 2, dumps_dropped: 1, dumps_held: 1 };
+    let snap = reg.fold(later, Some(rec));
+    assert_eq!(snap.seq, 2);
+
+    let text = snap.to_prometheus();
+    assert!(has_line(&text, "deltakws_metrics_seq 2"));
+    assert!(has_line(&text, "deltakws_recorder_events_total 7"));
+    assert!(has_line(&text, "deltakws_flight_dumps_total 2"));
+    assert!(has_line(&text, "deltakws_flight_dumps_dropped_total 1"));
+    assert!(has_line(&text, "deltakws_flight_dumps_held 1"));
+    assert!(has_line(&text, "deltakws_rate_window_us 2000000"));
+    // 40 more decisions over a 2 s window
+    assert_eq!(prom_value(&text, "deltakws_decisions_per_sec"), 20.0);
+    // Δrejected_full 2 + Δrejected_closed 0 + Δdropped 0 over 2 s
+    assert_eq!(prom_value(&text, "deltakws_drops_per_sec"), 1.0);
+    // Δchunks (21 + 9) − (5 + 9) = 16 over 2 s
+    assert_eq!(prom_value(&text, "deltakws_stream_chunks_per_sec"), 8.0);
+    assert_eq!(prom_value(&text, "deltakws_chip_frames_per_sec"), 1240.0);
+
+    let doc = snap.to_json();
+    assert_eq!(doc.at(&["recorder", "events"]).unwrap().as_f64(), Some(7.0));
+    assert_eq!(doc.at(&["rates", "elapsed_us"]).unwrap().as_f64(), Some(2_000_000.0));
+    assert_eq!(doc.at(&["rates", "decisions_per_sec"]).unwrap().as_f64(), Some(20.0));
+}

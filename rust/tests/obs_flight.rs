@@ -1,0 +1,185 @@
+//! Flight-recorder + trace-propagation integration (PR 7).
+//!
+//! The acceptance surface of the observability tentpole:
+//! * every submission gets a unique, nonzero [`TraceId`], returned on the
+//!   [`Response`] and stamped on the recorder's events — a dump and the
+//!   response that triggered it correlate by id alone;
+//! * an [`AnomalyRule`] freezes a post-mortem [`FlightDump`] whose
+//!   trace-correlated timeline covers the request's whole life
+//!   (Submit → Dequeue → FrameBatch → Decision);
+//! * the recorder is an *observer*: a pool with the ring enabled produces
+//!   bit-identical decisions (class, logits, counted frames, chip cycles)
+//!   to a pool without one;
+//! * stream sessions carry their trace on every [`StreamEvent`];
+//! * [`Coordinator::metrics`] exposes the recorder section and sequences
+//!   its snapshots.
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::audio::track::{synth_track, TrackConfig};
+use deltakws::chip::ChipConfig;
+use deltakws::coordinator::{Coordinator, Request, StreamEvent};
+use deltakws::obs::recorder::{AnomalyRule, EventKind, RecorderConfig};
+use deltakws::util::prng::Pcg;
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+fn request(id: u64, stream: u64, seed: u64) -> Request {
+    let mut rng = Pcg::new(seed);
+    let label = (seed % 12) as usize;
+    let audio = deltakws::audio::synth_utterance(label, &mut rng);
+    Request {
+        id,
+        stream,
+        audio12: deltakws::audio::quantize_12b(&audio),
+        label: Some(label),
+        trace: false,
+    }
+}
+
+#[test]
+fn responses_carry_unique_nonzero_trace_ids() {
+    let coord = Coordinator::builder(rng_quant(1), ChipConfig::design_point())
+        .workers(2)
+        .build()
+        .expect("valid pool");
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..12u64 {
+        let resp = coord
+            .submit(request(i, i % 3, 100 + i))
+            .expect("pool accepts")
+            .wait()
+            .expect("pool alive");
+        assert!(!resp.trace_id.is_none(), "req {i}: trace id missing");
+        assert!(seen.insert(resp.trace_id.0), "req {i}: trace id {} reused", resp.trace_id);
+    }
+}
+
+#[test]
+fn anomaly_rule_freezes_a_trace_correlated_dump() {
+    // LatencyAboveUs { us: 0 } fires on any completed decision (a full
+    // utterance decode costs well over a microsecond), so one submission
+    // yields exactly one frozen dump whose trigger is that decision
+    let coord = Coordinator::builder(rng_quant(2), ChipConfig::design_point())
+        .workers(1)
+        .recorder(RecorderConfig::default().dump_on(AnomalyRule::LatencyAboveUs { us: 0 }))
+        .build()
+        .expect("valid pool");
+    let resp = coord
+        .submit(request(7, 0, 42))
+        .expect("pool accepts")
+        .wait()
+        .expect("pool alive");
+
+    let dumps = coord.flight_dumps();
+    assert_eq!(dumps.len(), 1, "one decision, one frozen dump");
+    let dump = &dumps[0];
+    assert!(
+        matches!(dump.rule, AnomalyRule::LatencyAboveUs { us: 0 }),
+        "wrong rule on the dump: {:?}",
+        dump.rule
+    );
+    assert!(
+        matches!(dump.trigger.kind, EventKind::Decision { .. }),
+        "trigger is not the decision: {:?}",
+        dump.trigger.kind
+    );
+    assert_eq!(dump.trigger.trace, resp.trace_id, "trigger not correlated to the response");
+
+    // the trace-correlated timeline covers the request's whole life
+    let timeline = dump.events_for(resp.trace_id);
+    let has = |pred: &dyn Fn(&EventKind) -> bool| timeline.iter().any(|e| pred(&e.kind));
+    assert!(has(&|k| matches!(k, EventKind::Submit)), "no Submit in {timeline:?}");
+    assert!(has(&|k| matches!(k, EventKind::Dequeue { .. })), "no Dequeue in {timeline:?}");
+    assert!(
+        has(&|k| matches!(k, EventKind::FrameBatch { frames, .. } if *frames > 0)),
+        "no FrameBatch in {timeline:?}"
+    );
+    assert!(has(&|k| matches!(k, EventKind::Decision { .. })), "no Decision in {timeline:?}");
+
+    // timestamps are monotonic within the frozen ring
+    for w in dump.events.windows(2) {
+        assert!(w[0].at_us <= w[1].at_us, "timeline not monotonic: {w:?}");
+    }
+    // drained once — a second take sees nothing
+    assert!(coord.flight_dumps().is_empty(), "dumps not drained");
+}
+
+#[test]
+fn recorder_pool_is_bit_identical_to_lean_pool() {
+    let run = |with_recorder: bool| {
+        let mut builder =
+            Coordinator::builder(rng_quant(3), ChipConfig::design_point()).workers(1);
+        if with_recorder {
+            builder = builder
+                .recorder(RecorderConfig::default().dump_on(AnomalyRule::LatencyAboveUs { us: 0 }));
+        }
+        let coord = builder.build().expect("valid pool");
+        let mut out = Vec::new();
+        for i in 0..8u64 {
+            // sequential submits on one worker: identical job order, so the
+            // chip twin sees the identical utterance sequence in both pools
+            let resp = coord
+                .submit(request(i, 0, 500 + i))
+                .expect("pool accepts")
+                .wait()
+                .expect("pool alive");
+            out.push((resp.class, resp.logits, resp.counted_frames, resp.chip_cycles));
+        }
+        out
+    };
+    assert_eq!(run(true), run(false), "flight recorder perturbed the datapath");
+}
+
+#[test]
+fn stream_events_carry_the_session_trace() {
+    let coord = Coordinator::builder(rng_quant(4), ChipConfig::design_point())
+        .workers(2)
+        .recorder(RecorderConfig::default())
+        .build()
+        .expect("valid pool");
+    let cfg = TrackConfig { duration_s: 3, keywords: 1, fillers: 0, noise: (0.001, 0.002) };
+    let (audio12, _) = synth_track(&cfg, 77);
+    let sess = coord.open_stream(5);
+    let session_trace = sess.trace_id();
+    assert!(!session_trace.is_none(), "session trace missing");
+    for c in audio12.chunks(640) {
+        sess.push_blocking(c.to_vec()).expect("pool alive");
+    }
+    let events = sess.close();
+    assert!(!events.is_empty(), "no events from the session");
+    for e in &events {
+        match e {
+            StreamEvent::Detection { trace, .. } | StreamEvent::Closed { trace, .. } => {
+                assert_eq!(*trace, session_trace, "event trace diverged: {e:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn metrics_expose_the_recorder_section_and_sequence() {
+    let coord = Coordinator::builder(rng_quant(5), ChipConfig::design_point())
+        .workers(1)
+        .recorder(RecorderConfig::default())
+        .build()
+        .expect("valid pool");
+    coord.submit(request(1, 0, 9)).expect("pool accepts").wait().expect("pool alive");
+
+    let first = coord.metrics();
+    assert_eq!(first.seq, 1);
+    assert!(first.rates.is_none(), "no rates window on the first fold");
+    let rec = first.recorder.expect("recorder-enabled pool must expose the section");
+    assert!(rec.events > 0, "submit/dequeue/decision never recorded");
+    assert_eq!(first.stats.completed, 1);
+
+    let second = coord.metrics();
+    assert_eq!(second.seq, 2, "snapshot sequence must advance");
+    assert!(second.rates.is_some(), "second fold carries a rates window");
+}

@@ -192,7 +192,7 @@ fn coordinator_sessions_detect_on_the_pinned_worker() {
     for sess in [s1, s2] {
         let events = sess.close();
         let closed = events.iter().find_map(|e| match e {
-            StreamEvent::Closed { frames, gated_frames } => Some((*frames, *gated_frames)),
+            StreamEvent::Closed { frames, gated_frames, .. } => Some((*frames, *gated_frames)),
             _ => None,
         });
         let (frames, gated) = closed.expect("no Closed marker");

@@ -16,9 +16,17 @@ folds the relevant numbers into one JSON artifact:
     "datapath_speedup_x": {"simd": ..., "batched": ...},
     "speedup_vs_sparsity": [{"sparsity_pct": 0, "simd_speedup_x": ...}, ...],
     "soak_decisions_per_sec": ...,
+    "metrics_snapshot": {...},                         # soak's obs snapshot
     "cases": {bench: {case: mean_ns}},
     "baseline": {"path": ..., "ratios": {...}}         # vs BENCH_<N-1>.json
   }
+
+Since PR 7 the report also ingests the soak run's metrics exposition
+(results/soak_metrics.json, written by examples/soak.rs) after validating
+it against the deltakws-metrics/1 schema, and tracks the flight-recorder
+overhead ratio (probe_overhead_x.utterance_decode_recorder) as a
+trajectory case. `--validate-metrics PATH` runs the schema check alone
+(exit 0/1) — the CI smoke step for the observability surface.
 
 The issue number is derived automatically (max N among existing
 BENCH_*.json in the working directory — i.e. refresh the newest point)
@@ -29,6 +37,7 @@ local use:
   python3 tools/bench_report.py                  # auto: BENCH_<N>.json
   python3 tools/bench_report.py --issue 6        # pin the trajectory point
   python3 tools/bench_report.py --skip-build     # parse an existing jsonl
+  python3 tools/bench_report.py --validate-metrics results/soak_metrics.json
 """
 
 import argparse
@@ -50,6 +59,15 @@ JSONL_CANDIDATES = [
 # first PR that committed a bench artifact (fallback when none exist yet;
 # PR 5's report only lived as a CI artifact)
 FIRST_ISSUE = 6
+# the soak example writes its metrics snapshot next to bench.jsonl — same
+# cwd ambiguity, same resolution (newest wins)
+METRICS_CANDIDATES = [
+    os.path.join("rust", "results", "soak_metrics.json"),
+    os.path.join("results", "soak_metrics.json"),
+]
+METRICS_SCHEMA = "deltakws-metrics/1"
+# the `le` sequence of both exposed histograms, null = +Inf
+METRICS_LE = [128, 512, 2048, 8192, 32768, 131072, 524288, 2097152, None]
 
 SPARSITY_RE = re.compile(r"step_frame (scalar|simd) @ s=(\d+)")
 BATCHED_RE = re.compile(r"step_frames_batched x(\d+) @ s=(\d+)")
@@ -142,6 +160,105 @@ def sparsity_curve(sweep_cases):
     return [points[k] for k in sorted(points)]
 
 
+def validate_metrics(doc):
+    """Check a metrics-snapshot JSON document against the pinned
+    deltakws-metrics/1 schema. Returns a list of problems (empty = valid)."""
+    problems = []
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    if doc.get("schema") != METRICS_SCHEMA:
+        problems.append(
+            f"schema tag {doc.get('schema')!r} != {METRICS_SCHEMA!r}"
+        )
+    for key in (
+        "seq",
+        "captured_us",
+        "counters",
+        "gauges",
+        "activity",
+        "latency_us",
+        "chunk_latency_us",
+        "per_worker",
+        "recorder",
+        "rates",
+    ):
+        if key not in doc:
+            problems.append(f"missing top-level key {key!r}")
+    counters = doc.get("counters", {})
+    if isinstance(counters, dict):
+        for key in (
+            "completed",
+            "correct",
+            "labelled",
+            "rejected_full",
+            "rejected_closed",
+            "spilled",
+            "fused_batches",
+            "stream_events_dropped",
+        ):
+            if key not in counters:
+                problems.append(f"missing counters.{key}")
+    else:
+        problems.append("counters is not an object")
+    activity = doc.get("activity", {})
+    if isinstance(activity, dict):
+        for key in ("frames", "gated_frames", "sparsity", "duty_cycle"):
+            if key not in activity:
+                problems.append(f"missing activity.{key}")
+    else:
+        problems.append("activity is not an object")
+    for hist in ("latency_us", "chunk_latency_us"):
+        h = doc.get(hist)
+        if not isinstance(h, dict):
+            problems.append(f"{hist} is not an object")
+            continue
+        for key in ("count", "sum", "mean", "p50", "p90", "p99", "buckets"):
+            if key not in h:
+                problems.append(f"missing {hist}.{key}")
+        buckets = h.get("buckets")
+        if isinstance(buckets, list):
+            les = [b.get("le") for b in buckets if isinstance(b, dict)]
+            if les != METRICS_LE:
+                problems.append(f"{hist} le sequence {les} != {METRICS_LE}")
+        else:
+            problems.append(f"{hist}.buckets is not a list")
+    if not isinstance(doc.get("per_worker"), list):
+        problems.append("per_worker is not a list")
+    return problems
+
+
+def find_metrics_snapshot():
+    existing = [p for p in METRICS_CANDIDATES if os.path.exists(p)]
+    if not existing:
+        return None
+    return max(existing, key=os.path.getmtime)
+
+
+def ingest_metrics_snapshot(report):
+    """Attach the soak run's metrics snapshot (validated) to the report.
+    Non-fatal: a missing snapshot just leaves the key out; an invalid one
+    is reported and skipped."""
+    path = find_metrics_snapshot()
+    if path is None:
+        print("no soak metrics snapshot found; skipping ingest")
+        return
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"metrics snapshot {path} unreadable ({e}); skipping ingest")
+        return
+    problems = validate_metrics(doc)
+    if problems:
+        print(f"metrics snapshot {path} failed validation; skipping ingest:")
+        for p in problems:
+            print(f"  - {p}")
+        return
+    report["metrics_snapshot"] = doc
+    print(f"ingested metrics snapshot {path} "
+          f"({doc['counters']['completed']} decisions)")
+
+
 def build_report(cases, issue):
     hot = cases.get("hotpath (probe A/B)", {})
     sweep = cases.get("delta_sweep (Fig. 12)", {})
@@ -171,10 +288,17 @@ def build_report(cases, issue):
             "traced": frames_per_sec(
                 hot.get("utterance decode, traced (TraceProbe)"), 62.0
             ),
+            "recorder": frames_per_sec(
+                hot.get("utterance decode, recorder (RecorderProbe+ring)"), 62.0
+            ),
         },
         "probe_overhead_x": {
             "utterance_decode": ratio(
                 "utterance decode, traced (TraceProbe)",
+                "utterance decode, lean (NoProbe)",
+            ),
+            "utterance_decode_recorder": ratio(
+                "utterance decode, recorder (RecorderProbe+ring)",
                 "utterance decode, lean (NoProbe)",
             ),
             "sparse_accel_frames": ratio(
@@ -238,6 +362,10 @@ def diff_baseline(report, baseline_path):
     tracked = {
         "frames_per_sec.lean": ("frames_per_sec", "lean"),
         "utterance_frames_per_sec.lean": ("utterance_frames_per_sec", "lean"),
+        "probe_overhead_x.utterance_decode_recorder": (
+            "probe_overhead_x",
+            "utterance_decode_recorder",
+        ),
         "soak_decisions_per_sec": ("soak_decisions_per_sec",),
     }
     ratios = {}
@@ -275,7 +403,32 @@ def main():
         action="store_true",
         help="parse an existing results/bench.jsonl instead of running cargo bench",
     )
+    ap.add_argument(
+        "--validate-metrics",
+        default=None,
+        metavar="PATH",
+        help="validate a metrics snapshot against the deltakws-metrics/1 "
+        "schema and exit (no benches run)",
+    )
     args = ap.parse_args()
+
+    if args.validate_metrics is not None:
+        try:
+            with open(args.validate_metrics, encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: {args.validate_metrics}: {e}", file=sys.stderr)
+            return 1
+        problems = validate_metrics(doc)
+        if problems:
+            print(f"{args.validate_metrics}: schema validation FAILED:")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        print(f"{args.validate_metrics}: valid {METRICS_SCHEMA} snapshot "
+              f"({doc['counters']['completed']} decisions, "
+              f"{doc['activity']['frames']} frames)")
+        return 0
 
     issue = resolve_issue(args.issue)
     out = args.out or f"BENCH_{issue}.json"
@@ -296,6 +449,7 @@ def main():
         return 1
 
     report = build_report(parse_jsonl(jsonl), issue)
+    ingest_metrics_snapshot(report)
 
     baseline = args.baseline
     if baseline == "auto":
