@@ -1,0 +1,105 @@
+//! Lint manifest: which files the scanner walks and which rule scopes
+//! each file falls in. Parsed from `rust/lint/lint.conf` (an INI subset:
+//! `[section]`, `key = comma, separated, values`, `#` comments). The
+//! committed manifest is embedded at compile time so the binary's default
+//! can never drift from the file on disk.
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LintConfig {
+    /// Directories to walk for `.rs` files, relative to the repo root.
+    pub roots: Vec<String>,
+    /// Hot-set path prefixes, relative to `rust/src/`.
+    pub hot_include: Vec<String>,
+    /// Exclusions carved out of the hot set (construction-time / post-hoc
+    /// modules), relative to `rust/src/`.
+    pub hot_exclude: Vec<String>,
+    /// Modules under narrowing-cast discipline, relative to `rust/src/`.
+    pub narrowing_include: Vec<String>,
+    /// The only `rust/src/` locations where wall-clock reads are allowed.
+    pub wallclock_allow: Vec<String>,
+}
+
+/// Rule scopes for one file, resolved from its repo-relative path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FileScope {
+    /// Frame-path file: alloc/lock/panic rules apply.
+    pub hot: bool,
+    /// Narrowing-cast discipline applies.
+    pub narrowing: bool,
+    /// Wall-clock reads are banned here.
+    pub wallclock_banned: bool,
+}
+
+impl LintConfig {
+    /// The committed manifest, embedded at compile time.
+    pub const MANIFEST: &'static str = include_str!("../lint.conf");
+
+    /// Built-in default: the embedded manifest. Panics only if the
+    /// committed `lint.conf` is syntactically invalid, which the selfcheck
+    /// test guards against.
+    pub fn builtin() -> Self {
+        Self::parse(Self::MANIFEST).expect("embedded lint.conf parses")
+    }
+
+    /// Parse a manifest. Unknown sections/keys are rejected so typos in
+    /// the config can't silently widen or narrow a rule's scope.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = LintConfig {
+            roots: Vec::new(),
+            hot_include: Vec::new(),
+            hot_exclude: Vec::new(),
+            narrowing_include: Vec::new(),
+            wallclock_allow: Vec::new(),
+        };
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(format!("lint.conf:{}: expected `key = values`", lineno + 1));
+            };
+            let values: Vec<String> = value
+                .split(',')
+                .map(|v| v.trim().to_string())
+                .filter(|v| !v.is_empty())
+                .collect();
+            let slot = match (section.as_str(), key.trim()) {
+                ("scan", "roots") => &mut cfg.roots,
+                ("hot-path", "include") => &mut cfg.hot_include,
+                ("hot-path", "exclude") => &mut cfg.hot_exclude,
+                ("narrowing", "include") => &mut cfg.narrowing_include,
+                ("wallclock", "allow") => &mut cfg.wallclock_allow,
+                (s, k) => {
+                    return Err(format!("lint.conf:{}: unknown key [{s}] {k}", lineno + 1));
+                }
+            };
+            *slot = values;
+        }
+        if cfg.roots.is_empty() {
+            return Err("lint.conf: [scan] roots must not be empty".into());
+        }
+        Ok(cfg)
+    }
+
+    /// Resolve the rule scopes for a repo-relative path (forward slashes).
+    /// Hot-path, narrowing, and wallclock rules only ever apply under
+    /// `rust/src/`; benches and examples are scanned for the global rules
+    /// (`bounded-channels`, `no-unsafe`) only.
+    pub fn scope_for(&self, rel_path: &str) -> FileScope {
+        let src = rel_path.strip_prefix("rust/src/");
+        let starts = |prefixes: &[String], s: &str| prefixes.iter().any(|p| s.starts_with(p.as_str()));
+        let hot = src.is_some_and(|s| {
+            starts(&self.hot_include, s) && !starts(&self.hot_exclude, s)
+        });
+        let narrowing = src.is_some_and(|s| starts(&self.narrowing_include, s));
+        let wallclock_banned = src.is_some_and(|s| !starts(&self.wallclock_allow, s));
+        FileScope { hot, narrowing, wallclock_banned }
+    }
+}

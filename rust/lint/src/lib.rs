@@ -1,0 +1,205 @@
+//! `deltakws-lint`: repo-native static analysis for the DeltaKWS twin.
+//!
+//! The chip's claims rest on *verified properties* — saturating Q-format
+//! datapaths, clock-gated idle blocks, bounded FIFOs — not conventions.
+//! This crate machine-checks the software analogs (DESIGN.md §13): an
+//! allocation-/lock-/panic-free frame path, saturating narrowing casts,
+//! bounded queues, wall-clock-free golden paths, and a 0-`unsafe` crate.
+//!
+//! It is a comment/string/`cfg(test)`-aware *token* scanner, not a type
+//! checker: rules are conservative textual checks, and every deliberate
+//! exception must carry an inline `// lint:allow(rule): <reason>` that the
+//! report records. An allow without a reason does not suppress.
+//!
+//! Pure `std`, zero dependencies — it must build in the offline authoring
+//! container and run as a blocking CI job in seconds.
+
+pub mod config;
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+pub use config::{FileScope, LintConfig};
+pub use report::{Finding, Report, SCHEMA};
+pub use rules::Rule;
+
+use std::collections::HashSet;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Parse every `lint:allow(rule): reason` in a comment. The reason is the
+/// text after `):` up to the next stacked `lint:allow(` or end of comment;
+/// it may legitimately be empty (which the engine then rejects).
+fn parse_allows(comment: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(p) = rest.find("lint:allow(") {
+        rest = &rest[p + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else { break };
+        let rule = rest[..close].trim().to_string();
+        rest = &rest[close + 1..];
+        let mut reason = String::new();
+        if let Some(stripped) = rest.trim_start().strip_prefix(':') {
+            let end = stripped.find("lint:allow(").unwrap_or(stripped.len());
+            reason = stripped[..end].trim().to_string();
+        }
+        out.push((rule, reason));
+    }
+    out
+}
+
+/// Lint one source file. `rel_path` (repo-relative, forward slashes)
+/// selects the rule scopes from the manifest; `source` is the file text.
+/// Returns every hit — suppressed and not — in line order. This is the
+/// entry point the selfcheck test drives with inline fixtures.
+pub fn scan_source(rel_path: &str, source: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let scope = cfg.scope_for(rel_path);
+    let lines = scan::clean_source(source);
+    let mask = scan::test_mask(&lines);
+    let raw_lines: Vec<&str> = source.lines().collect();
+
+    // Pass 1: identifiers proven to be Vec bindings (non-test lines only —
+    // a scratch Vec inside #[cfg(test)] must not taint shipping code).
+    let mut vec_idents = HashSet::new();
+    if scope.hot {
+        for (i, line) in lines.iter().enumerate() {
+            if !mask[i] {
+                rules::collect_vec_idents(&line.code, &mut vec_idents);
+            }
+        }
+    }
+
+    // Pass 2: rule hits + suppression resolution. Allows apply to the line
+    // they share (trailing comment) or, from comment-only lines, to the
+    // next code line below a contiguous comment run (a blank line breaks
+    // the run).
+    let mut findings = Vec::new();
+    let mut pending_allows: Vec<(String, String)> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let code_empty = line.code.trim().is_empty();
+        let comment_empty = line.comment.trim().is_empty();
+        if code_empty && comment_empty {
+            pending_allows.clear(); // blank line ends the comment run
+            continue;
+        }
+        if code_empty {
+            pending_allows.extend(parse_allows(&line.comment));
+            continue;
+        }
+        let mut allows = std::mem::take(&mut pending_allows);
+        allows.extend(parse_allows(&line.comment));
+        if mask[i] {
+            continue; // test code: hot-path rules don't apply
+        }
+        for rule in rules::check_line(&line.code, scope, &vec_idents) {
+            let matched = allows.iter().find(|(name, _)| name == rule.name());
+            let mut rationale = rule.rationale().to_string();
+            let suppressed = match matched {
+                Some((_, reason)) if !reason.is_empty() => Some(reason.clone()),
+                Some(_) => {
+                    rationale.push_str(" (lint:allow without a reason — suppression rejected)");
+                    None
+                }
+                None => None,
+            };
+            findings.push(Finding {
+                file: rel_path.to_string(),
+                line: i + 1,
+                rule,
+                snippet: raw_lines.get(i).map_or("", |s| s.trim()).to_string(),
+                rationale,
+                suppressed,
+            });
+        }
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under the manifest's scan roots, sorted
+/// for deterministic report order. Returns repo-relative paths with
+/// forward slashes.
+pub fn collect_files(root: &Path, cfg: &LintConfig) -> io::Result<Vec<String>> {
+    let mut files = Vec::new();
+    for scan_root in &cfg.roots {
+        let dir = root.join(scan_root);
+        if dir.is_dir() {
+            walk(&dir, &mut files)?;
+        }
+    }
+    let mut rels: Vec<String> = files
+        .iter()
+        .filter_map(|p| {
+            p.strip_prefix(root)
+                .ok()
+                .map(|r| r.components().map(|c| c.as_os_str().to_string_lossy()).collect::<Vec<_>>().join("/"))
+        })
+        .collect();
+    rels.sort();
+    Ok(rels)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full scan from a repo root. Errors only on I/O failures.
+pub fn run(root: &Path, cfg: &LintConfig) -> io::Result<Report> {
+    let rels = collect_files(root, cfg)?;
+    let mut report = Report::default();
+    for rel in &rels {
+        let source = std::fs::read_to_string(root.join(rel))?;
+        report.findings.extend(scan_source(rel, &source, cfg));
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_parsing_extracts_rule_and_reason() {
+        let allows = parse_allows(" lint:allow(no-unsafe): FFI signal registration");
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].0, "no-unsafe");
+        assert_eq!(allows[0].1, "FFI signal registration");
+    }
+
+    #[test]
+    fn allow_without_reason_is_kept_but_empty() {
+        let allows = parse_allows("lint:allow(no-panic-hot-path)");
+        assert_eq!(allows.len(), 1);
+        assert!(allows[0].1.is_empty());
+    }
+
+    #[test]
+    fn stacked_allows_parse_independently() {
+        let allows =
+            parse_allows("lint:allow(no-alloc-hot-path): opt-in trace lint:allow(no-panic-hot-path): guarded");
+        assert_eq!(allows.len(), 2);
+        assert_eq!(allows[0].1, "opt-in trace");
+        assert_eq!(allows[1].1, "guarded");
+    }
+
+    #[test]
+    fn builtin_manifest_parses() {
+        let cfg = LintConfig::builtin();
+        assert!(cfg.scope_for("rust/src/accel/mod.rs").hot);
+        assert!(!cfg.scope_for("rust/src/stream/metrics.rs").hot);
+        assert!(!cfg.scope_for("rust/src/obs/mod.rs").wallclock_banned);
+        assert!(cfg.scope_for("rust/src/coordinator/mod.rs").wallclock_banned);
+        assert!(!cfg.scope_for("rust/benches/hotpath_bench.rs").hot);
+    }
+}

@@ -1,0 +1,90 @@
+//! `deltakws-lint` CLI.
+//!
+//! ```text
+//! cargo run -p deltakws-lint                 # scan the repo, exit 1 on findings
+//! cargo run -p deltakws-lint -- --json out.json --verbose
+//! ```
+//!
+//! Exit codes: 0 clean, 1 unsuppressed findings, 2 usage/I/O error.
+
+use deltakws_lint::{run, LintConfig};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: deltakws-lint [--root DIR] [--config FILE] [--json FILE] [--verbose] [--list-rules]";
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut config_path: Option<PathBuf> = None;
+    let mut json_path: Option<PathBuf> = None;
+    let mut verbose = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--config" => config_path = args.next().map(PathBuf::from),
+            "--json" => json_path = args.next().map(PathBuf::from),
+            "--verbose" | "-v" => verbose = true,
+            "--list-rules" => {
+                for rule in deltakws_lint::Rule::ALL {
+                    println!("{:<28} {}", rule.name(), rule.rationale());
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("deltakws-lint: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    // Default root: the workspace root (two levels up from this crate),
+    // so `cargo run -p deltakws-lint` works from anywhere in the repo.
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("..")
+    });
+
+    let cfg = match config_path {
+        Some(path) => match std::fs::read_to_string(&path) {
+            Ok(text) => match LintConfig::parse(&text) {
+                Ok(cfg) => cfg,
+                Err(e) => {
+                    eprintln!("deltakws-lint: {e}");
+                    return ExitCode::from(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("deltakws-lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        },
+        None => LintConfig::builtin(),
+    };
+
+    let report = match run(&root, &cfg) {
+        Ok(report) => report,
+        Err(e) => {
+            eprintln!("deltakws-lint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    print!("{}", report.to_text(verbose));
+    if let Some(path) = json_path {
+        if let Err(e) = std::fs::write(&path, report.to_json()) {
+            eprintln!("deltakws-lint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if report.unsuppressed().next().is_some() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

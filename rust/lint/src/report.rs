@@ -1,0 +1,185 @@
+//! Finding/report types and the two serializations: human text for the
+//! terminal, versioned JSON (`deltakws-lint/1`) for the trajectory
+//! tooling (`tools/bench_report.py` ingests the counts into
+//! `BENCH_<N>.json`).
+
+use crate::rules::Rule;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Schema tag written into every JSON report.
+pub const SCHEMA: &str = "deltakws-lint/1";
+
+/// One rule hit at one source line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Which invariant fired.
+    pub rule: Rule,
+    /// The trimmed source line.
+    pub snippet: String,
+    /// Why this is a finding (rule rationale, plus suppression notes).
+    pub rationale: String,
+    /// `Some(reason)` when a `lint:allow(rule): reason` covers the line.
+    pub suppressed: Option<String>,
+}
+
+/// A full scan result.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Every hit, suppressed or not, in file/line order.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Hits that still block (no valid suppression).
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    /// Hits covered by a reasoned `lint:allow`.
+    pub fn suppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_some())
+    }
+
+    /// Per-rule `(unsuppressed, suppressed)` counts, keyed by rule name.
+    pub fn per_rule_counts(&self) -> BTreeMap<&'static str, (usize, usize)> {
+        let mut map: BTreeMap<&'static str, (usize, usize)> = BTreeMap::new();
+        for rule in Rule::ALL {
+            map.insert(rule.name(), (0, 0));
+        }
+        for f in &self.findings {
+            let slot = map.entry(f.rule.name()).or_insert((0, 0));
+            if f.suppressed.is_none() {
+                slot.0 += 1;
+            } else {
+                slot.1 += 1;
+            }
+        }
+        map
+    }
+
+    /// Human-readable report. `verbose` also lists the suppressions.
+    pub fn to_text(&self, verbose: bool) -> String {
+        let mut out = String::new();
+        for f in self.unsuppressed() {
+            let _ = writeln!(
+                out,
+                "{}:{}: [{}] {}\n    {}",
+                f.file,
+                f.line,
+                f.rule.name(),
+                f.rationale,
+                f.snippet
+            );
+        }
+        if verbose {
+            for f in self.suppressed() {
+                let _ = writeln!(
+                    out,
+                    "{}:{}: [{}] suppressed: {}",
+                    f.file,
+                    f.line,
+                    f.rule.name(),
+                    f.suppressed.as_deref().unwrap_or("")
+                );
+            }
+        }
+        let unsup = self.unsuppressed().count();
+        let sup = self.suppressed().count();
+        let _ = writeln!(
+            out,
+            "deltakws-lint: {} file(s) scanned, {} finding(s), {} reasoned suppression(s)",
+            self.files_scanned, unsup, sup
+        );
+        out
+    }
+
+    /// Versioned JSON report (`deltakws-lint/1`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
+        let _ = writeln!(out, "  \"files_scanned\": {},", self.files_scanned);
+        out.push_str("  \"rules\": [");
+        for (i, rule) in Rule::ALL.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "\"{}\"", rule.name());
+        }
+        out.push_str("],\n");
+        let unsup = self.unsuppressed().count();
+        let sup = self.suppressed().count();
+        out.push_str("  \"counts\": {\n");
+        let _ = writeln!(out, "    \"findings\": {unsup},");
+        let _ = writeln!(out, "    \"suppressed\": {sup},");
+        out.push_str("    \"per_rule\": {\n");
+        let per_rule = self.per_rule_counts();
+        let n = per_rule.len();
+        for (i, (name, (u, s))) in per_rule.into_iter().enumerate() {
+            let comma = if i + 1 < n { "," } else { "" };
+            let _ = writeln!(
+                out,
+                "      \"{name}\": {{\"findings\": {u}, \"suppressed\": {s}}}{comma}"
+            );
+        }
+        out.push_str("    }\n  },\n");
+        out.push_str("  \"findings\": [\n");
+        let unsup_list: Vec<&Finding> = self.unsuppressed().collect();
+        for (i, f) in unsup_list.iter().enumerate() {
+            let comma = if i + 1 < unsup_list.len() { "," } else { "" };
+            let _ = writeln!(
+                out,
+                "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"snippet\": {}, \"rationale\": {}}}{comma}",
+                json_str(&f.file),
+                f.line,
+                json_str(f.rule.name()),
+                json_str(&f.snippet),
+                json_str(&f.rationale)
+            );
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"suppressions\": [\n");
+        let sup_list: Vec<&Finding> = self.suppressed().collect();
+        for (i, f) in sup_list.iter().enumerate() {
+            let comma = if i + 1 < sup_list.len() { "," } else { "" };
+            let _ = writeln!(
+                out,
+                "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"reason\": {}}}{comma}",
+                json_str(&f.file),
+                f.line,
+                json_str(f.rule.name()),
+                json_str(f.suppressed.as_deref().unwrap_or(""))
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string encoder (quotes, backslashes, control chars).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}

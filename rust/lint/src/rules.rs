@@ -1,0 +1,326 @@
+//! The invariant catalog as named rules (DESIGN.md §13). Each rule is a
+//! token check over cleaned code lines; scopes come from the manifest.
+
+use crate::config::FileScope;
+use std::collections::HashSet;
+
+/// The seven checked invariants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// No heap allocation on the frame path.
+    NoAllocHotPath,
+    /// No locks/condvars on the frame path.
+    NoLockHotPath,
+    /// No panicking constructs on the frame path (debug_assert! is fine).
+    NoPanicHotPath,
+    /// Narrowing casts in fixed/ + accel/ route through fixed::sat helpers.
+    NarrowingCastDiscipline,
+    /// No unbounded mpsc channels anywhere.
+    BoundedChannels,
+    /// No wall-clock reads outside the observability allowlist.
+    NoWallclock,
+    /// The crate stays 0-unsafe.
+    NoUnsafe,
+}
+
+impl Rule {
+    /// All rules, in report order.
+    pub const ALL: [Rule; 7] = [
+        Rule::NoAllocHotPath,
+        Rule::NoLockHotPath,
+        Rule::NoPanicHotPath,
+        Rule::NarrowingCastDiscipline,
+        Rule::BoundedChannels,
+        Rule::NoWallclock,
+        Rule::NoUnsafe,
+    ];
+
+    /// Stable rule name — the key used in `lint:allow(name)` and the JSON
+    /// report.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::NoAllocHotPath => "no-alloc-hot-path",
+            Rule::NoLockHotPath => "no-lock-hot-path",
+            Rule::NoPanicHotPath => "no-panic-hot-path",
+            Rule::NarrowingCastDiscipline => "narrowing-cast-discipline",
+            Rule::BoundedChannels => "bounded-channels",
+            Rule::NoWallclock => "no-wallclock",
+            Rule::NoUnsafe => "no-unsafe",
+        }
+    }
+
+    /// Why the invariant holds — printed with every finding.
+    pub fn rationale(self) -> &'static str {
+        match self {
+            Rule::NoAllocHotPath => {
+                "the frame path is allocation-free: a 10ms audio frame must cost bounded work, like the chip's fixed datapath"
+            }
+            Rule::NoLockHotPath => {
+                "the frame path is lock-free: frame stepping never blocks on a lock, contention lives in the coordinator"
+            }
+            Rule::NoPanicHotPath => {
+                "the frame path is panic-free: invariant violations are debug_assert! + release clamp or typed errors, never aborts"
+            }
+            Rule::NarrowingCastDiscipline => {
+                "narrowing casts wrap silently; Q-format narrowing must saturate through fixed::sat/round_shift like the chip's datapath"
+            }
+            Rule::BoundedChannels => {
+                "every queue is bounded with typed backpressure; an unbounded channel hides memory growth under load"
+            }
+            Rule::NoWallclock => {
+                "golden decision paths are pure functions of the samples; wall-clock reads belong to observability only"
+            }
+            Rule::NoUnsafe => "the crate is 0-unsafe and stays that way",
+        }
+    }
+
+    /// Look up a rule by its stable name (for `lint:allow(...)` parsing).
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == name)
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Substring match with an identifier boundary *before* the token (so
+/// `assert!` never matches inside `debug_assert!`). Tokens starting with
+/// `.` or other punctuation get plain substring semantics.
+fn has_token(code: &str, tok: &str) -> bool {
+    let first = tok.chars().next().unwrap_or(' ');
+    let needs_boundary = is_ident_char(first);
+    let mut start = 0usize;
+    while let Some(p) = code[start..].find(tok) {
+        let at = start + p;
+        if !needs_boundary || at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap()) {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Word match with identifier boundaries on both sides (for keywords like
+/// `unsafe`).
+fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(p) = code[start..].find(word) {
+        let at = start + p;
+        let before_ok = at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap());
+        let after = code[at + word.len()..].chars().next();
+        let after_ok = after.is_none_or(|c| !is_ident_char(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Heap-allocating constructors. `.push(` is handled separately via the
+/// Vec-identifier tracker: the ΔFIFO ring also has a `push` method and is
+/// exactly the allocation-free structure the rule protects.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new(",
+    "Vec::with_capacity(",
+    "vec![",
+    "VecDeque::new(",
+    "VecDeque::with_capacity(",
+    "Box::new(",
+    "String::new(",
+    "String::with_capacity(",
+    "String::from(",
+    "format!",
+    ".collect(",
+    ".collect::<",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    ".push_str(",
+    "HashMap::new(",
+    "HashSet::new(",
+    "BTreeMap::new(",
+];
+
+/// Growth-method calls flagged on identifiers the tracker proved are
+/// Vec/VecDeque bindings.
+const VEC_GROW_METHODS: &[&str] = &[
+    ".push(",
+    ".push_back(",
+    ".push_front(",
+    ".extend(",
+    ".extend_from_slice(",
+    ".append(",
+    ".resize(",
+];
+
+const LOCK_TOKENS: &[&str] = &["Mutex", "RwLock", "Condvar", ".lock("];
+
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap(",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+    "assert!",
+    "assert_eq!",
+    "assert_ne!",
+];
+
+/// The three narrowing targets named by the invariant (Q-format lane
+/// widths: weights u8/i8, states i16, accumulators i32).
+const NARROWING_TOKENS: &[&str] = &["as i16", "as i32", "as u8"];
+
+/// A cast on the same line as one of these is routed through the
+/// saturating helpers and compliant.
+const SAT_ROUTED_TOKENS: &[&str] = &[
+    "sat(",
+    "sat32(",
+    "round_shift(",
+    "floor_shift(",
+    "mul_shift_sat(",
+    ".clamp(",
+    ".saturating_add(",
+];
+
+const CHANNEL_TOKENS: &[&str] = &["mpsc::channel(", "mpsc::channel::<"];
+
+const WALLCLOCK_TOKENS: &[&str] = &["Instant::now(", "SystemTime"];
+
+/// `as iN`/`as uN` followed by an identifier char is a different type
+/// (e.g. `as i64`), not a narrowing target.
+fn has_cast(code: &str, tok: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(p) = code[start..].find(tok) {
+        let at = start + p;
+        let before_ok = at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap());
+        let after = code[at + tok.len()..].chars().next();
+        let after_ok = after.is_none_or(|c| !is_ident_char(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Scan one cleaned line of non-test code. Returns at most one hit per
+/// rule (findings are keyed `file:line:rule`). `vec_idents` is the file's
+/// set of identifiers proven to be Vec bindings/params/fields.
+pub fn check_line(code: &str, scope: FileScope, vec_idents: &HashSet<String>) -> Vec<Rule> {
+    let mut hits = Vec::new();
+    if scope.hot {
+        if ALLOC_TOKENS.iter().any(|t| has_token(code, t))
+            || vec_grow_call(code, vec_idents)
+        {
+            hits.push(Rule::NoAllocHotPath);
+        }
+        if LOCK_TOKENS.iter().any(|t| has_token(code, t)) {
+            hits.push(Rule::NoLockHotPath);
+        }
+        if PANIC_TOKENS.iter().any(|t| has_token(code, t)) {
+            hits.push(Rule::NoPanicHotPath);
+        }
+    }
+    if scope.narrowing
+        && NARROWING_TOKENS.iter().any(|t| has_cast(code, t))
+        && !SAT_ROUTED_TOKENS.iter().any(|t| has_token(code, t))
+    {
+        hits.push(Rule::NarrowingCastDiscipline);
+    }
+    if CHANNEL_TOKENS.iter().any(|t| has_token(code, t)) {
+        hits.push(Rule::BoundedChannels);
+    }
+    if scope.wallclock_banned && WALLCLOCK_TOKENS.iter().any(|t| has_token(code, t)) {
+        hits.push(Rule::NoWallclock);
+    }
+    if has_word(code, "unsafe") {
+        hits.push(Rule::NoUnsafe);
+    }
+    hits
+}
+
+/// Does this line call a growth method on a tracked Vec identifier?
+fn vec_grow_call(code: &str, vec_idents: &HashSet<String>) -> bool {
+    for method in VEC_GROW_METHODS {
+        let mut start = 0usize;
+        while let Some(p) = code[start..].find(method) {
+            let at = start + p;
+            // Read the identifier immediately before the `.method(`.
+            let ident: String = code[..at]
+                .chars()
+                .rev()
+                .take_while(|c| is_ident_char(*c))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .rev()
+                .collect();
+            if !ident.is_empty() && vec_idents.contains(&ident) {
+                return true;
+            }
+            start = at + method.len();
+        }
+    }
+    false
+}
+
+/// Collect identifiers proven to be Vec bindings on a cleaned line:
+/// `let [mut] x: Vec<..>`, `x: &mut Vec<..>` (params), `x: Vec<..>`
+/// (struct fields), and `x = Vec::new()/Vec::with_capacity(..)/vec![..]`.
+pub fn collect_vec_idents(code: &str, idents: &mut HashSet<String>) {
+    // `NAME : [&mut] Vec<` / `VecDeque<`
+    for pat in [
+        ": Vec<",
+        ": &mut Vec<",
+        ":Vec<",
+        ": VecDeque<",
+        ": &mut VecDeque<",
+    ] {
+        let mut start = 0usize;
+        while let Some(p) = code[start..].find(pat) {
+            let at = start + p;
+            if let Some(name) = ident_before(code, at) {
+                idents.insert(name);
+            }
+            start = at + pat.len();
+        }
+    }
+    // `NAME = Vec::new(` / `= Vec::with_capacity(` / `= vec![` / VecDeque forms
+    for pat in [
+        "= Vec::new(",
+        "= Vec::with_capacity(",
+        "= vec![",
+        "= VecDeque::new(",
+        "= VecDeque::with_capacity(",
+    ] {
+        let mut start = 0usize;
+        while let Some(p) = code[start..].find(pat) {
+            let at = start + p;
+            if let Some(name) = ident_before(code, at) {
+                idents.insert(name);
+            }
+            start = at + pat.len();
+        }
+    }
+}
+
+/// The identifier ending just before position `at` (skipping trailing
+/// whitespace), if any.
+fn ident_before(code: &str, at: usize) -> Option<String> {
+    let head = code[..at].trim_end();
+    let name: String = head
+        .chars()
+        .rev()
+        .take_while(|c| is_ident_char(*c))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect();
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(name)
+    }
+}

@@ -1,0 +1,247 @@
+//! Comment/string/`cfg(test)`-aware source cleaning.
+//!
+//! The rule engine works on *cleaned* text, line by line: comment bodies
+//! and string/char-literal contents are blanked to spaces so token rules
+//! never fire inside prose or literals, while comment text is kept
+//! separately so `lint:allow(...)` suppressions can be read back from it.
+//! Line numbers are preserved exactly (one `CleanLine` per physical line).
+
+/// One physical source line after cleaning.
+#[derive(Debug, Clone, Default)]
+pub struct CleanLine {
+    /// Code with comments and string/char-literal contents blanked out.
+    /// The delimiting quotes survive so `format!("...")` still reads as
+    /// `format!(" ")` — token rules anchored on the macro name keep firing.
+    pub code: String,
+    /// Concatenated comment text on this line, without the `//` / `/* */`
+    /// markers. This is where `lint:allow(rule): reason` lives.
+    pub comment: String,
+}
+
+enum Mode {
+    Code,
+    /// Nested block comments: `/* /* */ */` is one comment in Rust.
+    Block(usize),
+    /// Normal `"..."` or byte `b"..."` string (may span lines).
+    Str,
+    /// Raw string `r##"..."##` with N hashes.
+    RawStr(usize),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Detects `r"`, `r#"`, `br"`, ... at position `i`. Returns
+/// `(hash_count, chars_consumed_through_opening_quote)`. Raw *identifiers*
+/// (`r#match`) don't match because no quote follows the hashes.
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return None; // identifier ending in `b`/`r`, not a literal prefix
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at position `i` close a raw string with `hashes` hashes?
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Length of a char literal starting at the `'` at position `i`, or `None`
+/// if this is a lifetime (`'a`, `'static`). Handles `'x'`, `'\n'`, `'\''`
+/// and `'\u{1F600}'`.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    let c1 = *chars.get(i + 1)?;
+    if c1 == '\\' {
+        let mut j = i + 2;
+        if chars.get(j) == Some(&'u') {
+            while j < chars.len() && chars[j] != '}' {
+                j += 1;
+            }
+        }
+        j += 1;
+        if chars.get(j) == Some(&'\'') {
+            Some(j + 1 - i)
+        } else {
+            None
+        }
+    } else if c1 != '\'' && chars.get(i + 2) == Some(&'\'') {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// Split `src` into cleaned lines. Total line count always equals the
+/// physical line count of the input.
+pub fn clean_source(src: &str) -> Vec<CleanLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut line = CleanLine::default();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && next == '/' {
+                    // Line comment (incl. `///` and `//!` doc forms): the
+                    // rest of the line is comment text.
+                    let mut j = i + 2;
+                    while j < chars.len() && (chars[j] == '/' || chars[j] == '!') {
+                        j += 1;
+                    }
+                    while j < chars.len() && chars[j] != '\n' {
+                        line.comment.push(chars[j]);
+                        j += 1;
+                    }
+                    line.code.push(' ');
+                    i = j;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::Block(1);
+                    line.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if let Some((hashes, consumed)) = raw_string_start(&chars, i) {
+                    line.code.push('"');
+                    mode = Mode::RawStr(hashes);
+                    i += consumed;
+                } else if c == '\'' {
+                    if let Some(len) = char_literal_len(&chars, i) {
+                        line.code.push('\'');
+                        line.code.push(' ');
+                        line.code.push('\'');
+                        i += len;
+                    } else {
+                        line.code.push(c); // lifetime marker
+                        i += 1;
+                    }
+                } else {
+                    line.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Block(depth) => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '*' && next == '/' {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '\\' && next != '\n' {
+                    line.code.push(' '); // skip the escaped char ("\"", "\\", ...)
+                    i += 2;
+                } else if c == '\\' {
+                    line.code.push(' '); // trailing `\`: string continues next line
+                    i += 1;
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    line.code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push(line);
+    out
+}
+
+/// Per-line "is test code" mask: `true` for lines inside a `#[cfg(test)]`
+/// or `#[test]` item (the attribute line, the body, and the closing brace).
+/// Test code is exempt from the hot-path rules — `unwrap` in a unit test
+/// is idiomatic, not a finding.
+pub fn test_mask(lines: &[CleanLine]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut depth: i32 = 0;
+    // Saw the attribute; waiting for the item's `{` (or `;` for bodyless
+    // forms like `#[cfg(test)] mod tests;`).
+    let mut pending = false;
+    // Brace depth *outside* the test item while inside one.
+    let mut floor: Option<i32> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if floor.is_none()
+            && (code.contains("#[test]")
+                || code.contains("cfg(test)")
+                || code.contains("cfg(all(test"))
+        {
+            pending = true;
+        }
+        let mut in_test = pending || floor.is_some();
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    if pending {
+                        floor = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(f) = floor {
+                        if depth <= f {
+                            floor = None;
+                            in_test = true; // the closing-brace line itself
+                        }
+                    }
+                }
+                ';' => {
+                    if pending && floor.is_none() {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        mask[idx] = in_test || pending || floor.is_some();
+    }
+    mask
+}

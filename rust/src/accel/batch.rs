@@ -104,8 +104,11 @@ impl DeltaRnnAccel {
             sess.fired_h = 0;
         }
 
-        // (session index, delta) pairs for the lane under the broadcast
-        let mut fired: Vec<(usize, i32)> = Vec::with_capacity(sessions.len());
+        // (session index, delta) pairs for the lane under the broadcast —
+        // the accelerator's amortized scratch, taken here and returned
+        // after the h pass so steady-state stepping never allocates
+        let mut fired = std::mem::take(&mut self.batch_scratch);
+        fired.clear();
         // the broadcast buffer: one physical row fetch serves every fired
         // session (copied out so the SRAM borrow doesn't pin `self`)
         let mut row = [0u16; WORDS_PER_LANE];
@@ -118,6 +121,7 @@ impl DeltaRnnAccel {
             fired.clear();
             for (s, sess) in sessions.iter_mut().enumerate() {
                 let Some(x) = sess.staged else { continue };
+                // lint:allow(narrowing-cast-discipline): widening i16 -> i32; the difference fits i17
                 let d = x[i] as i32 - sess.state.x_ref[i] as i32;
                 if d != 0 && d.unsigned_abs() >= th_x as u32 {
                     sess.state.x_ref[i] = x[i];
@@ -142,6 +146,7 @@ impl DeltaRnnAccel {
                 if sess.staged.is_none() {
                     continue;
                 }
+                // lint:allow(narrowing-cast-discipline): widening i16 -> i32; the difference fits i17
                 let d = sess.state.h[j] as i32 - sess.state.h_ref[j] as i32;
                 if d != 0 && d.unsigned_abs() >= th_h as u32 {
                     sess.state.h_ref[j] = sess.state.h[j];
@@ -157,6 +162,8 @@ impl DeltaRnnAccel {
                 }
             }
         }
+        // hand the scratch (and its grown capacity) back for the next frame
+        self.batch_scratch = fired;
 
         // one physical FC sweep serves the whole batch
         self.sram.record_row_read(gru::BASE_FC, H * WORDS_PER_FC_ROW);

@@ -31,8 +31,10 @@ pub fn encode(cur: &[Act], refs: &mut [Act], delta_th: Act, out: &mut Vec<DeltaE
     debug_assert!(delta_th >= 0);
     let mut fired = 0;
     for (lane, (&c, r)) in cur.iter().zip(refs.iter_mut()).enumerate() {
-        let d = c as i32 - *r as i32; // fits i17, no overflow
+        // lint:allow(narrowing-cast-discipline): widening i16 -> i32; fits i17, no overflow
+        let d = c as i32 - *r as i32;
         if d != 0 && d.unsigned_abs() >= delta_th as u32 {
+            // lint:allow(no-alloc-hot-path): caller-owned event buffer (baseline/offline encoder); the ΔRNN frame path uses the bounded ΔFIFO ring instead
             out.push(DeltaEvent { lane: lane as u16, delta: d });
             *r = c;
             fired += 1;
@@ -48,6 +50,8 @@ pub fn encode_dense(cur: &[Act], out: &mut Vec<DeltaEvent>) -> usize {
     let mut fired = 0;
     for (lane, &c) in cur.iter().enumerate() {
         if c != 0 {
+            // lint:allow(no-alloc-hot-path): caller-owned event buffer, dense baseline path only
+            // lint:allow(narrowing-cast-discipline): widening i16 -> i32, lossless
             out.push(DeltaEvent { lane: lane as u16, delta: c as i32 });
             fired += 1;
         }

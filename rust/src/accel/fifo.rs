@@ -24,8 +24,13 @@ pub struct Fifo<T> {
 
 impl<T> Fifo<T> {
     pub fn new(capacity: usize) -> Self {
-        assert!(capacity > 0);
+        // a zero-capacity ring is a config bug: assert in debug, clamp to
+        // the minimum viable ring in release (constructors on the frame
+        // path must not abort the twin)
+        debug_assert!(capacity > 0);
+        let capacity = capacity.max(1);
         Self {
+            // lint:allow(no-alloc-hot-path): construction-time ring allocation, capacity fixed for the FIFO's lifetime
             buf: std::collections::VecDeque::with_capacity(capacity),
             capacity,
             pushes: 0,

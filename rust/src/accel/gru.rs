@@ -76,10 +76,15 @@ pub struct FloatParams {
 impl FloatParams {
     pub fn zeros() -> Self {
         Self {
+            // lint:allow(no-alloc-hot-path): float reference model, training/golden generation only
             w_x: vec![vec![0.0; G]; C],
+            // lint:allow(no-alloc-hot-path): float reference model, training/golden generation only
             w_h: vec![vec![0.0; G]; H],
+            // lint:allow(no-alloc-hot-path): float reference model, training/golden generation only
             b: vec![0.0; G],
+            // lint:allow(no-alloc-hot-path): float reference model, training/golden generation only
             w_fc: vec![vec![0.0; K]; H],
+            // lint:allow(no-alloc-hot-path): float reference model, training/golden generation only
             b_fc: vec![0.0; K],
         }
     }
@@ -123,9 +128,12 @@ pub struct QuantParams {
 impl QuantParams {
     pub fn zeroed() -> Self {
         Self {
+            // lint:allow(no-alloc-hot-path): construction-time weight buffers, loaded once per model
             w_x: vec![[0; G]; C],
+            // lint:allow(no-alloc-hot-path): construction-time weight buffers, loaded once per model
             w_h: vec![[0; G]; H],
             b: [0; G],
+            // lint:allow(no-alloc-hot-path): construction-time weight buffers, loaded once per model
             w_fc: vec![[0; K]; H],
             b_fc: [0; K],
             w_frac: W_FRAC,
@@ -184,7 +192,9 @@ pub fn quantize_params(p: &FloatParams) -> QuantParams {
 /// above). The image is what `WeightSram::load_image` consumes and what
 /// the `deltakws` CLI stores as `weights.bin`.
 pub fn to_sram_image(q: &QuantParams) -> Vec<u16> {
+    // lint:allow(no-alloc-hot-path): weight-image serialisation at load/store time
     let mut img = vec![0u16; IMAGE_WORDS];
+    // lint:allow(narrowing-cast-discipline): lossless i8 -> u8 -> u16 bit-pack (round-tripped by from_sram_image)
     let pack = |lo: i8, hi: i8| (lo as u8 as u16) | ((hi as u8 as u16) << 8);
     for (i, row) in q.w_x.iter().enumerate() {
         for w in 0..WORDS_PER_LANE {
@@ -214,10 +224,12 @@ pub fn to_sram_image(q: &QuantParams) -> Vec<u16> {
 /// Parse an SRAM word image back into quantised parameters (round-trip of
 /// [`to_sram_image`]; used by the weight loader and tests).
 pub fn from_sram_image(img: &[u16]) -> QuantParams {
+    // lint:allow(no-panic-hot-path): weight-image validation at load time; a corrupt image must fail loudly, never reach the frame path
     assert!(img.len() >= IMAGE_WORDS, "short image: {}", img.len());
     let unpack = |w: u16| ((w & 0xff) as i8, (w >> 8) as i8);
     let mut q = QuantParams::zeroed();
     let w_frac = img[BASE_META] as u32;
+    // lint:allow(no-panic-hot-path): weight-image validation at load time; a corrupt image must fail loudly, never reach the frame path
     assert!((W_FRAC..=W_FRAC_MAX).contains(&w_frac), "bad w_frac {w_frac} in image");
     q.w_frac = w_frac;
     for (i, row) in q.w_x.iter_mut().enumerate() {
@@ -242,9 +254,11 @@ pub fn from_sram_image(img: &[u16]) -> QuantParams {
         }
     }
     for g in 0..G {
+        // lint:allow(narrowing-cast-discipline): bit-reinterpret u16 image word -> i16 bias (round-trip of to_sram_image)
         q.b[g] = img[BASE_B + g] as i16;
     }
     for k in 0..K {
+        // lint:allow(narrowing-cast-discipline): bit-reinterpret u16 image word -> i16 bias (round-trip of to_sram_image)
         q.b_fc[k] = img[BASE_B_FC + k] as i16;
     }
     q
@@ -346,12 +360,19 @@ pub struct FloatState {
 impl FloatState {
     pub fn new(c: usize) -> Self {
         Self {
+            // lint:allow(no-alloc-hot-path): float reference state, training/golden generation only
             x_ref: vec![0.0; c],
+            // lint:allow(no-alloc-hot-path): float reference state, training/golden generation only
             h_ref: vec![0.0; H],
+            // lint:allow(no-alloc-hot-path): float reference state, training/golden generation only
             h: vec![0.0; H],
+            // lint:allow(no-alloc-hot-path): float reference state, training/golden generation only
             m_r: vec![0.0; H],
+            // lint:allow(no-alloc-hot-path): float reference state, training/golden generation only
             m_u: vec![0.0; H],
+            // lint:allow(no-alloc-hot-path): float reference state, training/golden generation only
             m_xc: vec![0.0; H],
+            // lint:allow(no-alloc-hot-path): float reference state, training/golden generation only
             m_hc: vec![0.0; H],
         }
     }
@@ -371,6 +392,7 @@ pub fn float_delta_step(
 ) -> (Vec<f64>, usize) {
     let c = st.x_ref.len();
     let mut fired = 0;
+    // lint:allow(no-alloc-hot-path): float reference step, golden generation only — the integer twin is the frame path
     let mut dx = vec![0.0; c];
     for i in 0..c {
         let d = x[i] - st.x_ref[i];
@@ -380,6 +402,7 @@ pub fn float_delta_step(
             fired += 1;
         }
     }
+    // lint:allow(no-alloc-hot-path): float reference step, golden generation only — the integer twin is the frame path
     let mut dh = vec![0.0; H];
     for j in 0..H {
         let d = st.h[j] - st.h_ref[j];
@@ -407,6 +430,7 @@ pub fn float_delta_step(
             }
         }
     }
+    // lint:allow(no-alloc-hot-path): float reference step, golden generation only — the integer twin is the frame path
     let mut h_new = vec![0.0; H];
     for j in 0..H {
         let r = sigmoid(st.m_r[j] + p.b[j] as f64);

@@ -58,7 +58,8 @@ pub fn words_per_event(targets: usize) -> u64 {
 pub fn mac_row(delta: i32, weights: &[i8], acc: &mut [i32]) {
     debug_assert_eq!(weights.len(), acc.len());
     for (a, &w) in acc.iter_mut().zip(weights.iter()) {
-        let p = delta * w as i32; // Q8.8 x Q1.6 -> frac 14
+        // Q8.8 x Q1.6 -> frac 14; lint:allow(narrowing-cast-discipline): widening i8 weight -> i32, product fits 25 bits
+        let p = delta * w as i32;
         *a = fixed::sat(*a as i64 + p as i64, ACC_BITS) as i32;
     }
 }

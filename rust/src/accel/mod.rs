@@ -129,6 +129,11 @@ pub struct DeltaRnnAccel {
     /// charged elsewhere (the batched stepper advances the watermark past
     /// its amortized physical fetches and books per-session reads itself).
     sram_seen: u64,
+    /// Amortized (session, delta) scratch for the batched stepper: taken
+    /// at the top of `step_frames_batched` and returned before it exits,
+    /// so its capacity is reused across frames and steady-state batched
+    /// stepping allocates nothing.
+    pub(crate) batch_scratch: Vec<(usize, i32)>,
 }
 
 impl DeltaRnnAccel {
@@ -148,6 +153,8 @@ impl DeltaRnnAccel {
             fifo: fifo::Fifo::new(fifo_depth),
             activity: ChipActivity::default(),
             sram_seen: 0,
+            // lint:allow(no-alloc-hot-path): Vec::new allocates nothing; capacity grows once, at the first batched step
+            batch_scratch: Vec::new(),
         }
     }
 
@@ -205,6 +212,7 @@ impl DeltaRnnAccel {
             for w in 0..WORDS_PER_LANE {
                 let (lo, hi) = self.sram.read_weight_pair(base + w);
                 for wt in [lo, hi] {
+                    // lint:allow(narrowing-cast-discipline): widening i8 weight -> i32, lossless
                     let p = ev.delta * wt as i32;
                     let j = g % H;
                     match g / H {
@@ -239,10 +247,19 @@ impl DeltaRnnAccel {
         probe: &mut P,
     ) {
         if self.fifo.is_full() {
-            let oldest = self.fifo.pop().expect("full ring has a front");
-            *mac_cycles += self.mac_event(oldest, is_x, probe);
+            if let Some(oldest) = self.fifo.pop() {
+                *mac_cycles += self.mac_event(oldest, is_x, probe);
+            } else {
+                // unreachable: a full ring always has a front
+                debug_assert!(false, "full ring has a front");
+            }
         }
-        self.fifo.push(ev).expect("ring has space after drain");
+        if self.fifo.push(ev).is_err() {
+            // unreachable: the drain above freed a slot. Release builds
+            // drop the event (the ring's overflow counter records it)
+            // rather than abort the decision path.
+            debug_assert!(false, "ring has space after drain");
+        }
     }
 
     /// Drain every event buffered in the ΔFIFO through the MAC array.
@@ -272,6 +289,7 @@ impl DeltaRnnAccel {
                 continue;
             }
             enc_cycles += 1;
+            // lint:allow(narrowing-cast-discipline): widening i16 -> i32; the difference fits i17
             let d = x[i] as i32 - self.state.x_ref[i] as i32;
             if d != 0 && d.unsigned_abs() >= th_x as u32 {
                 self.state.x_ref[i] = x[i];
@@ -286,6 +304,7 @@ impl DeltaRnnAccel {
         let mut fired_h = 0usize;
         for j in 0..H {
             enc_cycles += 1;
+            // lint:allow(narrowing-cast-discipline): widening i16 -> i32; the difference fits i17
             let d = self.state.h[j] as i32 - self.state.h_ref[j] as i32;
             if d != 0 && d.unsigned_abs() >= th_h as u32 {
                 self.state.h_ref[j] = self.state.h[j];

@@ -32,7 +32,9 @@ impl Nlu {
         let mut tanh = [0i32; LUT_SIZE + 1];
         for i in 0..=LUT_SIZE {
             let x = (i as f64 - 128.0) / 16.0; // [-8, 8]
+            // lint:allow(narrowing-cast-discipline): LUT build at construction; rounded values are bounded in ±32768, exact in i32
             sigmoid[i] = ((1.0 / (1.0 + (-x).exp())) * 32768.0).round() as i32;
+            // lint:allow(narrowing-cast-discipline): LUT build at construction; rounded values are bounded in ±32767, exact in i32
             tanh[i] = (x.tanh() * 32767.0).round() as i32;
         }
         Self { sigmoid, tanh }

@@ -88,7 +88,9 @@ pub fn mac_row_packed(
 fn mac_segment(delta: i32, words: &[u16], acc: &mut [i32; H]) {
     debug_assert_eq!(words.len() * 2, acc.len());
     for (pair, &w) in acc.chunks_exact_mut(2).zip(words.iter()) {
+        // lint:allow(narrowing-cast-discipline): sign-extending unpack i8 -> i32, lossless; the accumulate below saturates
         let lo = (w & 0xff) as i8 as i32;
+        // lint:allow(narrowing-cast-discipline): sign-extending unpack i8 -> i32, lossless; the accumulate below saturates
         let hi = (w >> 8) as i8 as i32;
         pair[0] = pair[0].saturating_add(delta * lo);
         pair[1] = pair[1].saturating_add(delta * hi);

@@ -59,9 +59,7 @@ pub mod ticket;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{
-    sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
-};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -383,8 +381,10 @@ enum Job {
     /// close a session (flushes telemetry, emits [`StreamEvent::Closed`])
     StreamClose { session: u64 },
     /// publish a fresh chip-report snapshot into the telemetry shard and
-    /// acknowledge (the pull half of [`Coordinator::reports`])
-    PublishReport { ack: Sender<()> },
+    /// acknowledge (the pull half of [`Coordinator::reports`]; the ack
+    /// channel is bounded — capacity = lane count — and the worker side
+    /// uses `try_send`, so a slow or dead requester can never block a lane)
+    PublishReport { ack: SyncSender<()> },
 }
 
 /// Asynchronous output of a [`StreamSession`]. Every event carries the
@@ -490,6 +490,7 @@ impl Router {
         let stream = req.stream;
         mailbox.register(id);
         let reply = Arc::downgrade(mailbox);
+        // lint:allow(no-wallclock): queue-latency telemetry stamp, taken once per submit on the serving control path (not the frame path)
         let now = Instant::now();
         let pinned = self.pinned_lane(stream);
         let trace = self.mint_trace();
@@ -573,6 +574,7 @@ impl Router {
         }
         let meta: Vec<(u64, u64)> = reqs.iter().map(|r| (r.id, r.stream)).collect();
         let reply = Arc::downgrade(mailbox);
+        // lint:allow(no-wallclock): queue-latency telemetry stamp, taken once per batch submit on the serving control path
         let now = Instant::now();
         let mut order: Vec<usize> = (0..self.lanes.len()).collect();
         order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
@@ -785,6 +787,7 @@ impl StreamSession {
                 Job::StreamData {
                     session: self.session,
                     chunk: audio12,
+                    // lint:allow(no-wallclock): chunk enqueue stamp for stream-latency telemetry, taken on the caller's thread before the lane hop
                     enqueued: Instant::now(),
                 },
             )
@@ -817,6 +820,7 @@ impl StreamSession {
                 Job::StreamData {
                     session: self.session,
                     chunk: audio12,
+                    // lint:allow(no-wallclock): chunk enqueue stamp for stream-latency telemetry, taken on the caller's thread before the lane hop
                     enqueued: Instant::now(),
                 },
             )
@@ -1214,7 +1218,10 @@ impl Coordinator {
     /// reports are never computed on the per-utterance hot path.
     pub fn reports(&self) -> HashMap<usize, ChipReport> {
         let router = self.router();
-        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        // bounded (bounded-channels invariant): each reachable lane gets
+        // exactly one publish job and sends at most one ack, so capacity
+        // = lane count can never reject a worker's try_send
+        let (ack_tx, ack_rx) = sync_channel(router.lanes.len());
         let mut pending = 0usize;
         for lane in &router.lanes {
             if lane.tx.try_send(Job::PublishReport { ack: ack_tx.clone() }).is_ok() {
@@ -1223,8 +1230,10 @@ impl Coordinator {
             }
         }
         drop(ack_tx);
+        // lint:allow(no-wallclock): bounded wait deadline for report acks during publish — operator-facing control path
         let deadline = Instant::now() + Duration::from_secs(5);
         while pending > 0 {
+            // lint:allow(no-wallclock): remaining-budget computation for the ack wait above
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() || ack_rx.recv_timeout(remaining).is_err() {
                 break;
@@ -1677,7 +1686,9 @@ fn worker_loop(
             Job::PublishReport { ack } => {
                 publish_report(&shard, &chip);
                 jobs_since_report = 0;
-                let _ = ack.send(());
+                // non-blocking by construction: the requester sized the
+                // channel at one slot per lane (a gone receiver is fine)
+                let _ = ack.try_send(());
             }
         }
         // bound report staleness under sustained load (a lane that never

@@ -131,6 +131,7 @@ impl Mailbox {
     /// Drain up to `n` unclaimed responses, waiting at most `timeout`
     /// (the deprecated `collect` shim; default mailbox only).
     pub(crate) fn collect_unclaimed(&self, n: usize, timeout: Duration) -> Vec<Response> {
+        // lint:allow(no-wallclock): caller-supplied wait timeout; ticket waits are serving control flow, not the frame path
         let deadline = Instant::now() + timeout;
         let mut out = Vec::with_capacity(n);
         let mut s = self.state.lock().unwrap();
@@ -144,6 +145,7 @@ impl Mailbox {
             if out.len() >= n || s.closed {
                 return out;
             }
+            // lint:allow(no-wallclock): remaining-budget computation for the caller-supplied timeout above
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 return out;
@@ -211,6 +213,7 @@ impl Ticket {
     /// timeout the ticket rides back inside [`WaitError::Timeout`]: the
     /// request is still in flight and a later wait can still claim it.
     pub fn wait_timeout(self, timeout: Duration) -> Result<Response, WaitError> {
+        // lint:allow(no-wallclock): converts the caller's relative timeout to a deadline — blocking-wait API, off the frame path
         self.wait_deadline(Some(Instant::now() + timeout))
     }
 
@@ -220,6 +223,7 @@ impl Ticket {
     /// gone and the response can no longer arrive).
     pub fn try_take(self) -> Result<Response, WaitError> {
         // a deadline that is already due: one ready/closed check, no wait
+        // lint:allow(no-wallclock): an already-due deadline encodes "check once, never sleep"
         self.wait_deadline(Some(Instant::now()))
     }
 
@@ -239,6 +243,7 @@ impl Ticket {
             }
             match deadline {
                 Some(d) => {
+                    // lint:allow(no-wallclock): remaining-budget computation for the blocking ticket wait
                     let remaining = d.saturating_duration_since(Instant::now());
                     if remaining.is_zero() {
                         drop(s);
@@ -304,9 +309,11 @@ impl Batch {
     /// `collect(n, timeout)` had. Compare `len()` of input and output to
     /// detect shortfall.
     pub fn wait_all(self, timeout: Duration) -> Vec<Response> {
+        // lint:allow(no-wallclock): one shared deadline across the batch's blocking waits — serving control flow
         let deadline = Instant::now() + timeout;
         let mut out = Vec::with_capacity(self.tickets.len());
         for t in self.tickets {
+            // lint:allow(no-wallclock): remaining-budget computation for the shared batch deadline above
             let remaining = deadline.saturating_duration_since(Instant::now());
             // past the deadline this still claims already-delivered
             // responses (the ready check precedes the timeout check)

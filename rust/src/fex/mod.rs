@@ -75,10 +75,16 @@ impl FexConfig {
     /// 3..=0 — so n = 10 reproduces the design point exactly and n = 16
     /// enables everything.
     pub fn n_channels(arch: Arch, n: usize) -> Self {
-        assert!((1..=MAX_CHANNELS).contains(&n));
+        // out-of-range n is a config bug: assert in debug, clamp in
+        // release (frame-path constructors must not abort the twin)
+        debug_assert!((1..=MAX_CHANNELS).contains(&n));
+        let n = n.clamp(1, MAX_CHANNELS);
         let hi = design::DESIGN_CHANNEL_OFFSET + design::DESIGN_CHANNELS; // 14
+        // lint:allow(no-alloc-hot-path): construction-time channel ordering, never per sample
         let mut order: Vec<usize> = (design::DESIGN_CHANNEL_OFFSET..hi).rev().collect();
+        // lint:allow(no-alloc-hot-path): construction-time channel ordering, never per sample
         order.extend(hi..MAX_CHANNELS);
+        // lint:allow(no-alloc-hot-path): construction-time channel ordering, never per sample
         order.extend((0..design::DESIGN_CHANNEL_OFFSET).rev());
         let mut active = [false; MAX_CHANNELS];
         for &ch in order.iter().take(n) {
@@ -124,6 +130,7 @@ impl Fex {
         let bank = design_filterbank();
         let (qb, qa) = config.arch.formats();
         let quant = quantize_bank(&bank, qb, qa);
+        // lint:allow(no-alloc-hot-path): construction-time filter-bank build, once per Fex
         let cascades = quant.into_iter().map(Cascade::new).collect();
         Self {
             config,
@@ -212,6 +219,7 @@ impl Fex {
     pub fn process_into(&mut self, audio12: &[i64], out: &mut Vec<FeatureFrame>) {
         for &s in audio12 {
             if let Some(f) = self.push_sample(s) {
+                // lint:allow(no-alloc-hot-path): appends into caller-owned scratch whose capacity is reused across utterances — the documented allocation-free form
                 out.push(f);
             }
         }
@@ -222,6 +230,7 @@ impl Fex {
     /// [`process_into`](Self::process_into) (or the chip's incremental
     /// API) instead.
     pub fn process(&mut self, audio12: &[i64]) -> Vec<FeatureFrame> {
+        // lint:allow(no-alloc-hot-path): convenience wrapper documented as allocating; hot paths use process_into
         let mut out = Vec::with_capacity(audio12.len() / FRAME_SAMPLES + 1);
         self.process_into(audio12, &mut out);
         out

@@ -52,6 +52,7 @@ mod sigusr1 {
 
     /// Install the handler (idempotent; best-effort).
     pub fn install() {
+        // lint:allow(no-unsafe): FFI signal(2) registration is inherently unsafe; the handler only stores a relaxed atomic flag
         unsafe {
             signal(SIGUSR1, handler as extern "C" fn(i32) as usize);
         }

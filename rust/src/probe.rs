@@ -85,8 +85,11 @@ impl DecisionTrace {
     /// Append one consumed frame's diagnostics.
     #[inline]
     pub fn record(&mut self, frame: &FrameOut) {
+        // lint:allow(no-alloc-hot-path): opt-in TraceProbe diagnostic buffer — NoProbe monomorphizes this away from the lean path
         self.frame_cycles.push(frame.cycles);
+        // lint:allow(no-alloc-hot-path): opt-in TraceProbe diagnostic buffer — NoProbe monomorphizes this away from the lean path
         self.frame_fired.push(frame.fired);
+        // lint:allow(no-alloc-hot-path): opt-in TraceProbe diagnostic buffer — NoProbe monomorphizes this away from the lean path
         self.feat_trace.push(frame.feat);
     }
 
@@ -111,8 +114,11 @@ impl DecisionTrace {
     /// counterpart of [`Decision::from_frames`](crate::chip::Decision::from_frames)).
     pub fn from_frames(frames: &[FrameOut]) -> Self {
         let mut t = DecisionTrace {
+            // lint:allow(no-alloc-hot-path): opt-in trace reconstruction on request, off the lean decision path
             frame_cycles: Vec::with_capacity(frames.len()),
+            // lint:allow(no-alloc-hot-path): opt-in trace reconstruction on request, off the lean decision path
             frame_fired: Vec::with_capacity(frames.len()),
+            // lint:allow(no-alloc-hot-path): opt-in trace reconstruction on request, off the lean decision path
             feat_trace: Vec::with_capacity(frames.len()),
         };
         for f in frames {

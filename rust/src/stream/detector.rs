@@ -93,7 +93,14 @@ pub struct Detector {
 
 impl Detector {
     pub fn new(config: DetectorConfig) -> Self {
-        assert!(config.window > 0 && config.on_frames > 0);
+        // zero window/on_frames are config bugs: assert in debug, clamp
+        // to the minimum viable detector in release (frame-path
+        // constructors must not abort the twin)
+        debug_assert!(config.window > 0 && config.on_frames > 0);
+        let mut config = config;
+        config.window = config.window.max(1);
+        config.on_frames = config.on_frames.max(1);
+        // lint:allow(no-alloc-hot-path): construction-time window buffer; len stays within window + 1 = capacity
         let window = VecDeque::with_capacity(config.window + 1);
         Self {
             config,
@@ -135,14 +142,19 @@ impl Detector {
             return None;
         }
         // slide the window
+        // lint:allow(no-alloc-hot-path): bounded — pop_front below keeps len within window + 1, the construction capacity; never reallocates
         self.window.push_back(*logits);
         for (s, l) in self.sums.iter_mut().zip(logits.iter()) {
             *s += l;
         }
         if self.window.len() > self.config.window {
-            let old = self.window.pop_front().expect("window non-empty");
-            for (s, l) in self.sums.iter_mut().zip(old.iter()) {
-                *s -= l;
+            if let Some(old) = self.window.pop_front() {
+                for (s, l) in self.sums.iter_mut().zip(old.iter()) {
+                    *s -= l;
+                }
+            } else {
+                // unreachable: len > window ≥ 1 implies non-empty
+                debug_assert!(false, "window non-empty");
             }
         }
         if self.refractory > 0 {

@@ -57,7 +57,7 @@ impl TrackScore {
             return None;
         }
         let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        v.sort_by(|a, b| a.total_cmp(b));
         let mid = v.len() / 2;
         Some(if v.len() % 2 == 0 { (v[mid - 1] + v[mid]) / 2.0 } else { v[mid] })
     }

@@ -127,19 +127,27 @@ impl StreamPipeline {
             // clone is deliberate (and cold): it keeps the error uniform
             // with the session-push contract, where the payload rides the
             // error so a retry needs no second copy of the audio.
+            // lint:allow(no-alloc-hot-path): cold rejection path — the payload rides the typed error, by contract
             return Err(StreamPushError::Backpressure(audio12.to_vec()));
         }
         self.samples_in += audio12.len() as u64;
+        // lint:allow(no-alloc-hot-path): Vec::new allocates nothing; stays empty until a detection fires
         let mut events = Vec::new();
         while let Some(&feat) = self.chip.peek_frame() {
             let open = self.vad.step(&feat);
-            let out = if open {
+            let polled = if open {
                 self.chip.poll_frame_probed(probe)
             } else {
                 self.chip.skip_frame_probed(probe)
-            }
-            .expect("peeked frame must be consumable");
+            };
+            let Some(out) = polled else {
+                // unreachable: peek_frame just returned Some. Stop the
+                // drain in release rather than abort the stream.
+                debug_assert!(false, "peeked frame must be consumable");
+                break;
+            };
             if let Some(ev) = self.detector.step(out.index, &out.logits, out.gated) {
+                // lint:allow(no-alloc-hot-path): allocation only on the rare wakeword edge, not per frame
                 events.push(ev);
             }
         }

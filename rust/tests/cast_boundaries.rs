@@ -1,0 +1,123 @@
+//! Boundary regressions for the narrowing-cast audit (DESIGN.md §13).
+//!
+//! The `narrowing-cast-discipline` lint rule requires every narrowing
+//! `as i16` / `as i32` / `as u8` in `fixed/` and `accel/` to route through
+//! the saturating helpers (`fixed::sat`, `round_shift`, `mul_shift_sat`,
+//! `sat32`) or carry a written justification. These tests pin the exact
+//! boundary behaviour those helpers guarantee — the wrap-arounds a raw
+//! `as` cast would silently commit are spelled out next to the clamped
+//! result the datapath actually requires, so a future "simplification"
+//! back to a bare cast fails loudly here instead of corrupting logits.
+
+use deltakws::accel::mac::{mac_row, ACC_BITS};
+use deltakws::accel::simd::{mac_row_fast, sat32};
+use deltakws::fixed::{add_sat, max_val, min_val, mul_shift_sat, round_shift, sat};
+
+#[test]
+fn sat_clamps_where_raw_i16_cast_wraps() {
+    // one past i16::MAX: the raw cast wraps to the most negative value —
+    // in a feature pipeline that is a full-scale sign flip
+    assert_eq!(32_768i64 as i16, -32_768);
+    assert_eq!(sat(32_768, 16), 32_767);
+    assert_eq!(-32_769i64 as i16, 32_767);
+    assert_eq!(sat(-32_769, 16), -32_768);
+    // identity strictly inside the word
+    for v in [-32_768i64, -1, 0, 1, 32_767] {
+        assert_eq!(sat(v, 16), v);
+    }
+}
+
+#[test]
+fn sat_clamps_where_raw_i8_cast_wraps() {
+    assert_eq!(128i64 as i8, -128);
+    assert_eq!(sat(128, 8), 127);
+    assert_eq!(-129i64 as i8, 127);
+    assert_eq!(sat(-129, 8), -128);
+}
+
+#[test]
+fn sat32_pins_the_accumulator_boundary() {
+    let hi = i32::MAX as i64;
+    let lo = i32::MIN as i64;
+    // exactly representable values pass through untouched
+    assert_eq!(sat32(hi), i32::MAX);
+    assert_eq!(sat32(lo), i32::MIN);
+    // one past the rail clamps; the raw cast would wrap to the far rail
+    assert_eq!((hi + 1) as i32, i32::MIN);
+    assert_eq!(sat32(hi + 1), i32::MAX);
+    assert_eq!((lo - 1) as i32, i32::MAX);
+    assert_eq!(sat32(lo - 1), i32::MIN);
+    // and it agrees with the width-parametric primitive it shadows
+    for v in [lo - 7, lo, -1, 0, 1, hi, hi + 7] {
+        assert_eq!(sat32(v) as i64, sat(v, 32));
+    }
+}
+
+#[test]
+fn mac_row_saturates_instead_of_wrapping_at_the_rails() {
+    // accumulator one product below the positive rail: the next MAC must
+    // pin at the rail, not wrap negative
+    let w = [127i8, -128, 0];
+    let mut acc = [i32::MAX - 100, i32::MIN + 100, 5];
+    let mut acc_fast = acc;
+    let delta = 1_000; // products: 127_000 / -128_000 / 0 — all overflow the headroom
+    mac_row(delta, &w, &mut acc);
+    mac_row_fast(delta, &w, &mut acc_fast);
+    assert_eq!(acc, [i32::MAX, i32::MIN, 5]);
+    // the vectorized kernel is bit-exact with the scalar oracle at the rails
+    assert_eq!(acc, acc_fast);
+}
+
+#[test]
+fn mac_row_scalar_and_fast_agree_across_the_full_product_range() {
+    // extreme delta (Q8.8 full scale) x extreme weights, accumulators
+    // seeded near both rails and at zero
+    let w = [i8::MIN, -1, 0, 1, i8::MAX];
+    for delta in [i16::MIN as i32, -257, 0, 257, i16::MAX as i32] {
+        let mut a = [i32::MIN + 3, -1, 0, 1, i32::MAX - 3];
+        let mut b = a;
+        mac_row(delta, &w, &mut a);
+        mac_row_fast(delta, &w, &mut b);
+        assert_eq!(a, b, "delta={delta}");
+        for v in a {
+            assert!(
+                (min_val(ACC_BITS)..=max_val(ACC_BITS)).contains(&(v as i64)),
+                "accumulator escaped the {ACC_BITS}-bit word: {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mul_shift_sat_clamps_the_post_shift_product() {
+    // Q1.6 x Q1.6 full-scale square, renormalised by 6: overflows a
+    // 16-bit word and must pin at the rail
+    let full = max_val(16);
+    assert_eq!(mul_shift_sat(full, full, 6, 16), max_val(16));
+    assert_eq!(mul_shift_sat(full, -full, 6, 16), min_val(16));
+    // small products are exact (rounded, not truncated)
+    assert_eq!(mul_shift_sat(3, 5, 0, 16), 15);
+    assert_eq!(mul_shift_sat(3, 1, 1, 16), 2); // 1.5 rounds away from zero
+}
+
+#[test]
+fn add_sat_clamps_the_carry_out() {
+    assert_eq!(add_sat(max_val(16), 1, 16), max_val(16));
+    assert_eq!(add_sat(min_val(16), -1, 16), min_val(16));
+    assert_eq!(add_sat(100, -300, 16), -200);
+}
+
+#[test]
+fn round_shift_is_total_near_i64_min() {
+    // regression for the widened-magnitude negative branch: the naive
+    // `-((-v + half) >> sh)` overflows here and wraps in release builds
+    assert_eq!(round_shift(i64::MIN, 1), i64::MIN / 2);
+    // -(2^63 - 1)/2 = -(2^62 - 0.5) rounds away from zero to -(2^62)
+    assert_eq!(round_shift(i64::MIN + 1, 1), i64::MIN / 2);
+    assert_eq!(round_shift(i64::MAX, 1), i64::MAX / 2 + 1);
+    // rounding is half-away-from-zero in both directions
+    assert_eq!(round_shift(3, 1), 2);
+    assert_eq!(round_shift(-3, 1), -2);
+    assert_eq!(round_shift(5, 2), 1);
+    assert_eq!(round_shift(-5, 2), -1);
+}

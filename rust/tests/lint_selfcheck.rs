@@ -1,0 +1,297 @@
+//! Self-check for `deltakws-lint` (DESIGN.md §13): the analyzer holds the
+//! live tree clean, every rule demonstrably fires on a minimal fixture,
+//! the suppression protocol behaves (reasoned allows suppress, reasonless
+//! allows are rejected), and the JSON report parses against its schema.
+//!
+//! This is the test that keeps the lint honest in both directions: a rule
+//! that silently stopped firing fails the fixture half, and a regression
+//! that re-introduces a hot-path allocation fails the live-tree half.
+
+use deltakws::util::json;
+use deltakws_lint::{scan_source, LintConfig, Report, Rule, SCHEMA};
+use std::path::Path;
+
+fn cfg() -> LintConfig {
+    LintConfig::builtin()
+}
+
+/// Repo root: the deltakws crate lives at `<root>/rust`.
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate sits under the repo root")
+}
+
+// ---------------------------------------------------------------------------
+// Live tree
+// ---------------------------------------------------------------------------
+
+#[test]
+fn live_tree_has_zero_unsuppressed_findings() {
+    let report = deltakws_lint::run(repo_root(), &cfg()).expect("scan the live tree");
+    assert!(report.files_scanned > 50, "scan roots missing? only {} files", report.files_scanned);
+    let offenders: Vec<String> = report
+        .unsuppressed()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule.name(), f.snippet))
+        .collect();
+    assert!(
+        offenders.is_empty(),
+        "unsuppressed lint findings in the live tree:\n{}",
+        offenders.join("\n")
+    );
+}
+
+#[test]
+fn live_tree_suppressions_all_carry_reasons() {
+    let report = deltakws_lint::run(repo_root(), &cfg()).expect("scan the live tree");
+    // the engine only records a suppression when the reason is non-empty;
+    // this guards the *report* invariant the CI job and bench tooling rely on
+    for f in report.suppressed() {
+        let reason = f.suppressed.as_deref().unwrap_or("");
+        assert!(
+            !reason.trim().is_empty(),
+            "{}:{} [{}] suppressed without a reason",
+            f.file,
+            f.line,
+            f.rule.name()
+        );
+    }
+    assert!(report.suppressed().count() > 0, "the audited tree documents its exceptions");
+}
+
+// ---------------------------------------------------------------------------
+// Per-rule fixtures: every rule fires on a minimal inline source
+// ---------------------------------------------------------------------------
+
+fn rules_hit(path: &str, src: &str) -> Vec<Rule> {
+    scan_source(path, src, &cfg()).into_iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn no_alloc_hot_path_fires_on_constructor_and_tracked_push() {
+    let src = "fn f() {\n    let mut buf = Vec::with_capacity(4);\n    buf.push(1);\n}\n";
+    let findings = scan_source("rust/src/accel/fixture.rs", src, &cfg());
+    let lines: Vec<usize> = findings
+        .iter()
+        .filter(|f| f.rule == Rule::NoAllocHotPath)
+        .map(|f| f.line)
+        .collect();
+    assert_eq!(lines, vec![2, 3], "constructor line and tracked .push( line both fire");
+}
+
+#[test]
+fn no_alloc_does_not_flag_untracked_push() {
+    // the ΔFIFO ring also has `.push(` — only identifiers proven to be
+    // Vec/VecDeque bindings are flagged
+    let src = "fn f(ring: &mut Fifo) {\n    let _ = ring.push(ev);\n}\n";
+    assert!(rules_hit("rust/src/accel/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn no_lock_hot_path_fires_on_mutex() {
+    let src = "fn f() {\n    let m = std::sync::Mutex::new(0u32);\n    let _g = m.lock();\n}\n";
+    let hits = rules_hit("rust/src/fex/fixture.rs", src);
+    assert!(hits.contains(&Rule::NoLockHotPath), "hits: {hits:?}");
+}
+
+#[test]
+fn no_panic_hot_path_fires_on_unwrap_but_not_debug_assert() {
+    let src = "fn f(x: Option<u8>) -> u8 {\n    debug_assert!(x.is_some());\n    x.unwrap()\n}\n";
+    let findings = scan_source("rust/src/chip/fixture.rs", src, &cfg());
+    let lines: Vec<usize> = findings
+        .iter()
+        .filter(|f| f.rule == Rule::NoPanicHotPath)
+        .map(|f| f.line)
+        .collect();
+    assert_eq!(lines, vec![3], "debug_assert! passes, .unwrap( fires");
+}
+
+#[test]
+fn narrowing_cast_fires_bare_but_passes_sat_routed() {
+    let bare = "fn f(acc: i64) -> i16 {\n    acc as i16\n}\n";
+    assert!(rules_hit("rust/src/fixed/fixture.rs", bare)
+        .contains(&Rule::NarrowingCastDiscipline));
+    let routed = "fn f(acc: i64) -> i16 {\n    sat(acc, 16) as i16\n}\n";
+    assert!(
+        !rules_hit("rust/src/fixed/fixture.rs", routed)
+            .contains(&Rule::NarrowingCastDiscipline),
+        "a cast routed through fixed::sat on the same line is compliant"
+    );
+    // widening casts are not narrowing targets
+    let widen = "fn f(x: i16) -> i64 {\n    x as i64\n}\n";
+    assert!(rules_hit("rust/src/accel/fixture.rs", widen).is_empty());
+}
+
+#[test]
+fn narrowing_rule_is_scoped_to_fixed_and_accel() {
+    let bare = "fn f(acc: i64) -> i16 {\n    acc as i16\n}\n";
+    assert!(
+        rules_hit("rust/src/obs/fixture.rs", bare).is_empty(),
+        "outside fixed/ + accel/ the cast rule does not apply"
+    );
+}
+
+#[test]
+fn bounded_channels_fires_everywhere() {
+    let src = "fn f() {\n    let (tx, rx) = std::sync::mpsc::channel::<u32>();\n}\n";
+    // even in a module with no hot-path restrictions at all
+    let hits = rules_hit("rust/src/obs/fixture.rs", src);
+    assert!(hits.contains(&Rule::BoundedChannels), "hits: {hits:?}");
+    let bounded = "fn f() {\n    let (tx, rx) = std::sync::mpsc::sync_channel::<u32>(8);\n}\n";
+    assert!(!rules_hit("rust/src/obs/fixture.rs", bounded)
+        .contains(&Rule::BoundedChannels));
+}
+
+#[test]
+fn no_wallclock_fires_outside_the_allowlist_only() {
+    let src = "fn f() {\n    let t = std::time::Instant::now();\n}\n";
+    assert!(rules_hit("rust/src/stream/fixture.rs", src).contains(&Rule::NoWallclock));
+    assert!(
+        !rules_hit("rust/src/obs/fixture.rs", src).contains(&Rule::NoWallclock),
+        "obs/ owns the wall clock"
+    );
+    assert!(!rules_hit("rust/src/coordinator/soak.rs", src).contains(&Rule::NoWallclock));
+}
+
+#[test]
+fn no_unsafe_fires_on_the_keyword() {
+    let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    assert!(rules_hit("rust/src/util/fixture.rs", src).contains(&Rule::NoUnsafe));
+    // identifiers containing the word are not the keyword
+    let ident = "fn f() {\n    let unsafe_looking_name = 1;\n    let _ = unsafe_looking_name;\n}\n";
+    assert!(rules_hit("rust/src/util/fixture.rs", ident).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Comment/string/test-code awareness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn comments_strings_and_test_code_do_not_fire() {
+    let src = concat!(
+        "// Vec::new() in a comment is fine; so is .unwrap()\n",
+        "/* block comment: Mutex, Instant::now() */\n",
+        "fn f() -> &'static str {\n",
+        "    \"Vec::new() inside a string literal\"\n",
+        "}\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    #[test]\n",
+        "    fn t() {\n",
+        "        let v = vec![1, 2, 3];\n",
+        "        assert_eq!(v.len(), 3);\n",
+        "        let _ = v.iter().max().unwrap();\n",
+        "    }\n",
+        "}\n",
+    );
+    let hits = rules_hit("rust/src/accel/fixture.rs", src);
+    assert!(hits.is_empty(), "hits: {hits:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Suppression protocol
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reasoned_allow_suppresses_trailing_and_line_above() {
+    let src = concat!(
+        "fn f() {\n",
+        "    let a = Vec::new(); // lint:allow(no-alloc-hot-path): construction-time scratch\n",
+        "    // lint:allow(no-alloc-hot-path): one-time table build\n",
+        "    let b = Vec::with_capacity(8);\n",
+        "}\n",
+    );
+    let findings = scan_source("rust/src/accel/fixture.rs", src, &cfg());
+    assert_eq!(findings.len(), 2);
+    for f in &findings {
+        assert!(f.suppressed.is_some(), "{}:{} not suppressed", f.file, f.line);
+    }
+    assert_eq!(findings[0].suppressed.as_deref(), Some("construction-time scratch"));
+    assert_eq!(findings[1].suppressed.as_deref(), Some("one-time table build"));
+}
+
+#[test]
+fn reasonless_allow_is_rejected() {
+    let src = "fn f() {\n    let a = Vec::new(); // lint:allow(no-alloc-hot-path)\n}\n";
+    let findings = scan_source("rust/src/accel/fixture.rs", src, &cfg());
+    assert_eq!(findings.len(), 1);
+    assert!(findings[0].suppressed.is_none(), "an allow without a reason must not suppress");
+    assert!(
+        findings[0].rationale.contains("without a reason"),
+        "the rejection is called out in the rationale: {}",
+        findings[0].rationale
+    );
+}
+
+#[test]
+fn blank_line_breaks_the_allow_run() {
+    let src = concat!(
+        "fn f() {\n",
+        "    // lint:allow(no-alloc-hot-path): stale comment\n",
+        "\n",
+        "    let a = Vec::new();\n",
+        "}\n",
+    );
+    let findings = scan_source("rust/src/accel/fixture.rs", src, &cfg());
+    assert_eq!(findings.len(), 1);
+    assert!(findings[0].suppressed.is_none(), "an allow separated by a blank line must not apply");
+}
+
+#[test]
+fn allow_for_the_wrong_rule_does_not_suppress() {
+    let src = "fn f() {\n    let a = Vec::new(); // lint:allow(no-panic-hot-path): wrong rule named\n}\n";
+    let findings = scan_source("rust/src/accel/fixture.rs", src, &cfg());
+    assert_eq!(findings.len(), 1);
+    assert!(findings[0].suppressed.is_none());
+}
+
+// ---------------------------------------------------------------------------
+// JSON report schema
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_report_parses_and_matches_the_schema() {
+    let src = concat!(
+        "fn f() {\n",
+        "    let a = Vec::new();\n",
+        "    let b = Vec::with_capacity(4); // lint:allow(no-alloc-hot-path): fixture\n",
+        "}\n",
+    );
+    let report = Report {
+        findings: scan_source("rust/src/accel/fixture.rs", src, &cfg()),
+        files_scanned: 1,
+    };
+
+    let parsed = json::parse(&report.to_json()).expect("report JSON parses");
+    assert_eq!(parsed.at(&["schema"]).and_then(|j| j.as_str()), Some(SCHEMA));
+    assert_eq!(parsed.at(&["files_scanned"]).and_then(|j| j.as_usize()), Some(1));
+    assert_eq!(
+        parsed.at(&["rules"]).and_then(|j| j.as_arr()).map(|a| a.len()),
+        Some(Rule::ALL.len()),
+        "all rules are listed"
+    );
+    assert_eq!(parsed.at(&["counts", "findings"]).and_then(|j| j.as_usize()), Some(1));
+    assert_eq!(parsed.at(&["counts", "suppressed"]).and_then(|j| j.as_usize()), Some(1));
+    assert_eq!(
+        parsed
+            .at(&["counts", "per_rule", "no-alloc-hot-path", "findings"])
+            .and_then(|j| j.as_usize()),
+        Some(1)
+    );
+    let findings = parsed.at(&["findings"]).and_then(|j| j.as_arr()).expect("findings array");
+    assert_eq!(findings.len(), 1);
+    assert_eq!(
+        findings[0].get("rule").and_then(|j| j.as_str()),
+        Some("no-alloc-hot-path")
+    );
+    assert_eq!(findings[0].get("line").and_then(|j| j.as_usize()), Some(2));
+    let sups = parsed.at(&["suppressions"]).and_then(|j| j.as_arr()).expect("suppressions array");
+    assert_eq!(sups.len(), 1);
+    assert_eq!(sups[0].get("reason").and_then(|j| j.as_str()), Some("fixture"));
+}
+
+#[test]
+fn live_tree_json_report_parses() {
+    let report = deltakws_lint::run(repo_root(), &cfg()).expect("scan the live tree");
+    let parsed = json::parse(&report.to_json()).expect("live JSON parses");
+    assert_eq!(parsed.at(&["schema"]).and_then(|j| j.as_str()), Some(SCHEMA));
+    assert_eq!(parsed.at(&["counts", "findings"]).and_then(|j| j.as_usize()), Some(0));
+}

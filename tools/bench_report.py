@@ -28,6 +28,13 @@ overhead ratio (probe_overhead_x.utterance_decode_recorder) as a
 trajectory case. `--validate-metrics PATH` runs the schema check alone
 (exit 0/1) — the CI smoke step for the observability surface.
 
+Since PR 8 the report also ingests the static-analysis counts from
+deltakws-lint's JSON report (results/lint_report.json, schema
+deltakws-lint/1) as report["static_analysis"] — unsuppressed findings
+stay 0 (the blocking CI lint job guarantees it), and the reasoned
+suppression count is tracked against the baseline like any other
+trajectory metric.
+
 The issue number is derived automatically (max N among existing
 BENCH_*.json in the working directory — i.e. refresh the newest point)
 unless pinned with --issue; the baseline defaults to BENCH_<N-1>.json
@@ -68,6 +75,14 @@ METRICS_CANDIDATES = [
 METRICS_SCHEMA = "deltakws-metrics/1"
 # the `le` sequence of both exposed histograms, null = +Inf
 METRICS_LE = [128, 512, 2048, 8192, 32768, 131072, 524288, 2097152, None]
+# deltakws-lint writes its JSON report here in CI (`--json`); the counts
+# become trajectory metrics like throughput — "how many static-analysis
+# exceptions does the tree carry" is tracked per PR
+LINT_CANDIDATES = [
+    os.path.join("results", "lint_report.json"),
+    os.path.join("rust", "results", "lint_report.json"),
+]
+LINT_SCHEMA = "deltakws-lint/1"
 
 SPARSITY_RE = re.compile(r"step_frame (scalar|simd) @ s=(\d+)")
 BATCHED_RE = re.compile(r"step_frames_batched x(\d+) @ s=(\d+)")
@@ -259,6 +274,38 @@ def ingest_metrics_snapshot(report):
           f"({doc['counters']['completed']} decisions)")
 
 
+def ingest_lint_report(report):
+    """Attach the deltakws-lint counts to the report. Non-fatal: a missing
+    or mis-schema'd lint report just leaves the key out."""
+    existing = [p for p in LINT_CANDIDATES if os.path.exists(p)]
+    if not existing:
+        print("no lint report found; skipping ingest")
+        return
+    path = max(existing, key=os.path.getmtime)
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"lint report {path} unreadable ({e}); skipping ingest")
+        return
+    if doc.get("schema") != LINT_SCHEMA:
+        print(f"lint report {path} schema {doc.get('schema')!r} != "
+              f"{LINT_SCHEMA!r}; skipping ingest")
+        return
+    counts = doc.get("counts", {})
+    report["static_analysis"] = {
+        "schema": LINT_SCHEMA,
+        "files_scanned": doc.get("files_scanned"),
+        "findings": counts.get("findings"),
+        "suppressions": counts.get("suppressed"),
+        "per_rule": counts.get("per_rule", {}),
+    }
+    print(f"ingested lint report {path} "
+          f"({counts.get('findings')} findings, "
+          f"{counts.get('suppressed')} suppressions over "
+          f"{doc.get('files_scanned')} files)")
+
+
 def build_report(cases, issue):
     hot = cases.get("hotpath (probe A/B)", {})
     sweep = cases.get("delta_sweep (Fig. 12)", {})
@@ -367,6 +414,10 @@ def diff_baseline(report, baseline_path):
             "utterance_decode_recorder",
         ),
         "soak_decisions_per_sec": ("soak_decisions_per_sec",),
+        # suppression creep is a ratio worth watching (findings stay 0 —
+        # the blocking lint job guarantees that — so only the exception
+        # count moves)
+        "static_analysis.suppressions": ("static_analysis", "suppressions"),
     }
     ratios = {}
     for name, keys in tracked.items():
@@ -450,6 +501,7 @@ def main():
 
     report = build_report(parse_jsonl(jsonl), issue)
     ingest_metrics_snapshot(report)
+    ingest_lint_report(report)
 
     baseline = args.baseline
     if baseline == "auto":
