@@ -1,0 +1,158 @@
+//! Few-shot enrollment + mid-stream weight-swap smoke (PR 9).
+//!
+//! Exercises the whole customization surface end to end and emits the
+//! numbers `tools/bench_report.py` ingests into the BENCH_<n>.json
+//! trajectory (`results/enroll_metrics.json`, schema deltakws-enroll/1):
+//!
+//! * enroll a synthetic speaker against a deterministic-random base model
+//!   (FC head only, K ≤ 8 shots) and time it per optimisation step;
+//! * check the held-out effect: chip-twin accuracy on the speaker's
+//!   unseen clips of the target keyword, base vs enrolled;
+//! * open a live stream, install the enrolled version mid-stream through
+//!   the epoch fence, and confirm the `WeightsSwapped` acknowledgement
+//!   (timing the swap request — registry pin + fence submission);
+//! * print the registry state (resident versions, lineage).
+//!
+//! Run: `cargo run --release --example enroll -- [shots] [steps]`
+
+use std::time::Instant;
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::chip::{ChipConfig, KwsChip};
+use deltakws::coordinator::{Coordinator, StreamEvent};
+use deltakws::custom::{EnrollConfig, SpeakerVoice};
+use deltakws::util::json::Json;
+use deltakws::util::prng::Pcg;
+
+const SPEAKER: u64 = 7;
+const TARGET: usize = 11;
+const HOLDOUT: usize = 12;
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+/// Chip-twin accuracy on the speaker's held-out clips of the target
+/// keyword (indices disjoint from every enrollment shot).
+fn holdout_accuracy(params: &QuantParams, cfg: &ChipConfig, voice: &SpeakerVoice) -> f64 {
+    let mut chip = KwsChip::new(params.clone(), cfg.clone());
+    let hits = voice
+        .holdout(TARGET, HOLDOUT)
+        .iter()
+        .filter(|u| chip.process_utterance(&u.audio12).class == TARGET)
+        .count();
+    hits as f64 / HOLDOUT as f64
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = EnrollConfig::design_point(SPEAKER, TARGET);
+    if let Some(v) = args.first().and_then(|s| s.parse().ok()) {
+        cfg.shots = v;
+    }
+    if let Some(v) = args.get(1).and_then(|s| s.parse().ok()) {
+        cfg.steps = v;
+    }
+
+    let chip_cfg = ChipConfig::design_point();
+    let coord = Coordinator::builder(rng_quant(7), chip_cfg.clone())
+        .workers(2)
+        .build()
+        .expect("valid pool");
+    let voice = SpeakerVoice::new(SPEAKER);
+
+    // -- enroll ----------------------------------------------------------
+    println!(
+        "enrolling speaker {SPEAKER} on '{}': {} shots + {} counters, {} steps",
+        deltakws::CLASS_LABELS[TARGET],
+        cfg.shots,
+        cfg.counter_shots,
+        cfg.steps
+    );
+    let out = coord.enroll(None, cfg.clone()).expect("enrollment");
+    let us_per_step = out.latency_us as f64 / out.steps as f64;
+    println!(
+        "  version {} (parent {}), {} steps in {:.1} ms ({:.0} us/step), final loss {:.4}",
+        out.version,
+        out.parent,
+        out.steps,
+        out.latency_us as f64 / 1e3,
+        us_per_step,
+        out.final_loss
+    );
+
+    // -- held-out effect -------------------------------------------------
+    let base = coord.registry().get(coord.base_version()).expect("base resident");
+    let enrolled = coord.registry().get(out.version).expect("enrolled resident");
+    let base_acc = holdout_accuracy(&base, &chip_cfg, &voice);
+    let enrolled_acc = holdout_accuracy(&enrolled, &chip_cfg, &voice);
+    println!(
+        "  held-out '{}' accuracy ({} unseen clips): base {:.0}% -> enrolled {:.0}%",
+        deltakws::CLASS_LABELS[TARGET],
+        HOLDOUT,
+        base_acc * 100.0,
+        enrolled_acc * 100.0
+    );
+
+    // -- mid-stream swap through the epoch fence -------------------------
+    let utt = voice.utterance(TARGET, deltakws::custom::speaker::HOLDOUT_BASE + HOLDOUT);
+    let sess = coord.open_stream(1);
+    let half = utt.audio12.len() / 2;
+    sess.push_blocking(utt.audio12[..half].to_vec()).expect("pool alive");
+    let t_swap = Instant::now();
+    coord.swap_weights(&sess, out.version).expect("swap accepted");
+    let swap_latency_us = t_swap.elapsed().as_micros() as u64;
+    sess.push_blocking(utt.audio12[half..].to_vec()).expect("pool alive");
+    let events = sess.close();
+    let fence = events.iter().find_map(|e| match e {
+        StreamEvent::WeightsSwapped { version, frame, .. } => Some((*version, *frame)),
+        _ => None,
+    });
+    let (fence_version, fence_frame) = fence.expect("swap acknowledged");
+    assert_eq!(fence_version, out.version, "fence installed the wrong version");
+    let closed_frames = events
+        .iter()
+        .find_map(|e| match e {
+            StreamEvent::Closed { frames, .. } => Some(*frames),
+            _ => None,
+        })
+        .expect("close event");
+    println!(
+        "  mid-stream swap: request {swap_latency_us} us, fence at frame {fence_frame}/{closed_frames}, zero drops"
+    );
+
+    let stats = coord.stats();
+    println!(
+        "  registry: {} resident versions, {} swaps served, enroll p50 {:.1} ms",
+        stats.resident_versions,
+        stats.weight_swaps,
+        stats.enroll_latency.percentile(0.50) as f64 / 1e3
+    );
+
+    // -- artifact for bench_report.py ------------------------------------
+    let doc = Json::obj(vec![
+        ("schema", Json::str("deltakws-enroll/1")),
+        ("speaker", Json::num(SPEAKER as f64)),
+        ("target", Json::num(TARGET as f64)),
+        ("shots", Json::num(cfg.shots as f64)),
+        ("steps", Json::num(out.steps as f64)),
+        ("enroll_us", Json::num(out.latency_us as f64)),
+        ("us_per_step", Json::num(us_per_step)),
+        ("swap_latency_us", Json::num(swap_latency_us as f64)),
+        ("fence_frame", Json::num(fence_frame as f64)),
+        ("base_accuracy", Json::num(base_acc)),
+        ("enrolled_accuracy", Json::num(enrolled_acc)),
+        ("final_loss", Json::num(out.final_loss as f64)),
+        ("version", Json::str(out.version.to_string())),
+        ("parent", Json::str(out.parent.to_string())),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/enroll_metrics.json", format!("{doc}\n"))
+        .expect("write enroll metrics");
+    println!("enroll metrics -> results/enroll_metrics.json");
+}

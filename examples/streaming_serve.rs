@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
                     audio12: utt.audio12,
                     label: Some(utt.label),
                     trace: false,
+                    weights: None,
                 };
                 loop {
                     match client.submit(req) {
@@ -82,7 +83,7 @@ fn main() -> anyhow::Result<()> {
                             req = r;
                             std::thread::sleep(Duration::from_millis(2));
                         }
-                        Err(SubmitError::Closed(_)) => break 'submit,
+                        Err(_) => break 'submit,
                     }
                 }
             }

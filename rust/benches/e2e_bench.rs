@@ -51,6 +51,7 @@ fn main() {
                 audio12: utt.clone(),
                 label: None,
                 trace: false,
+                weights: None,
             })
             .collect();
         // v2 utterance-benchmark path: batch submission (blocking through

@@ -168,6 +168,32 @@ impl DeltaRnnAccel {
         &self.state
     }
 
+    /// Install a new weight set at a frame boundary (the epoch fence of
+    /// the customization subsystem, DESIGN.md §14). Replaces the
+    /// parameter mirror and reloads the SRAM image; recurrent state,
+    /// ΔFIFO, activity counters and the `sram_seen` watermark are all
+    /// untouched — `load_image` books writes, never reads, so per-frame
+    /// read accounting stays exact across the swap.
+    ///
+    /// Safety of the fence is structural: between frames the ΔFIFO is
+    /// empty and no MAC broadcast is in flight, so frame N ran entirely
+    /// on the old weights and frame N+1 runs entirely on the new ones.
+    /// Callers must never invoke this between `mac_event`s of one frame
+    /// (nothing in the public API allows it).
+    pub fn swap_params(&mut self, params: QuantParams) {
+        self.sram.load_image(&gru::to_sram_image(&params));
+        self.params = params;
+    }
+
+    /// Overwrite the recurrent state buffer (checkpoint-restore seam for
+    /// the swap bit-exactness tests and state migration; pairs with
+    /// [`state`](Self::state)). The ΔFIFO is cleared — a restored state
+    /// is only meaningful at a frame boundary, where the FIFO is empty.
+    pub fn set_state(&mut self, state: StateBuffer) {
+        self.state = state;
+        self.fifo.clear();
+    }
+
     /// Account one clock-gated frame (VAD idle): the frame clock advances
     /// for the energy model — so average power reflects the idle time — but
     /// no lanes are examined, no MACs run, no SRAM is read and the state

@@ -427,6 +427,21 @@ impl KwsChip {
         self.frame_index = 0;
     }
 
+    /// Epoch-fenced weight hot-swap (customization subsystem, DESIGN.md
+    /// §14): install a new weight set without disturbing *any* run state.
+    /// FEx biquads/envelopes, buffered frames, the ΔRNN recurrent state
+    /// and every counter are preserved — only the weight SRAM image and
+    /// the parameter mirror change, via
+    /// [`DeltaRnnAccel::swap_params`](crate::accel::DeltaRnnAccel::swap_params).
+    /// Because the chip steps weights only inside `poll_frame`/
+    /// `skip_frame`, calling this between frame polls is exactly the
+    /// frame-boundary fence: the last polled frame ran on the old
+    /// weights, the next polled frame runs on the new ones, and no frame
+    /// is dropped or duplicated.
+    pub fn swap_weights(&mut self, params: QuantParams) {
+        self.accel.swap_params(params);
+    }
+
     /// Feed 12-bit samples through the SPI front door. The FEx and the CDC
     /// FIFO run eagerly; completed feature frames are buffered until
     /// [`poll_frame`](Self::poll_frame) / [`skip_frame`](Self::skip_frame)

@@ -23,6 +23,11 @@ use super::Coordinator;
 /// scalability ceiling — raise it when a deployment genuinely needs to).
 pub const MAX_WORKERS: usize = 512;
 
+/// Default weight-registry capacity: resident versions beyond this are
+/// evicted least-recently-used (pinned versions — base weights and any
+/// version serving a live stream — are never evicted).
+pub const DEFAULT_REGISTRY_CAPACITY: usize = 32;
+
 /// Builder for [`Coordinator`]: worker count, queue depth, the default
 /// [`StreamConfig`] applied to sessions opened without an explicit one,
 /// and the chip-report publication epoch.
@@ -47,6 +52,7 @@ pub struct CoordinatorBuilder {
     default_stream: Option<StreamConfig>,
     report_epoch: u64,
     recorder: Option<RecorderConfig>,
+    registry_capacity: usize,
 }
 
 impl CoordinatorBuilder {
@@ -59,6 +65,7 @@ impl CoordinatorBuilder {
             default_stream: None,
             report_epoch: REPORT_EPOCH,
             recorder: None,
+            registry_capacity: DEFAULT_REGISTRY_CAPACITY,
         }
     }
 
@@ -103,6 +110,19 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Capacity of the pool's versioned weight registry (default
+    /// [`DEFAULT_REGISTRY_CAPACITY`]; validated ≥ 1): how many weight
+    /// tables — the base plus enrolled per-user heads — stay resident
+    /// before least-recently-used *unpinned* versions are evicted.
+    /// Versions pinned by live streaming sessions (and the base) never
+    /// evict, so a capacity smaller than the pinned set overflows rather
+    /// than breaking a live stream (see
+    /// [`WeightRegistry`](crate::custom::WeightRegistry)).
+    pub fn registry_capacity(mut self, versions: usize) -> Self {
+        self.registry_capacity = versions;
+        self
+    }
+
     /// Validate every knob and spawn the worker pool.
     ///
     /// # Errors
@@ -122,6 +142,9 @@ impl CoordinatorBuilder {
         }
         if self.report_epoch == 0 {
             return Err(Error::invalid_config("report_epoch", "must be >= 1"));
+        }
+        if self.registry_capacity == 0 {
+            return Err(Error::invalid_config("registry_capacity", "must be >= 1"));
         }
         if let Some(rec) = &self.recorder {
             if rec.capacity == 0 {
@@ -147,6 +170,7 @@ impl CoordinatorBuilder {
             default_stream,
             self.report_epoch,
             self.recorder,
+            self.registry_capacity,
         ))
     }
 }

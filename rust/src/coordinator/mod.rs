@@ -69,8 +69,10 @@ use crate::accel::gru::QuantParams;
 use crate::chip::{
     ChipConfig, ChipReport, DecisionAccum, FrameOut, KwsChip, SAFE_CHUNK_SAMPLES,
 };
+use crate::custom::{EnrollConfig, WeightRegistry, WeightVersion};
 use crate::energy::ChipActivity;
 use crate::error::{StreamPushError, SubmitError};
+use crate::runtime::NativeBackend;
 use crate::obs::metrics::{MetricsRegistry, MetricsSnapshot};
 use crate::obs::recorder::{
     EventKind, FlightDump, FlightRecorder, RecorderConfig, RecorderProbe, RecorderStats,
@@ -108,6 +110,13 @@ pub struct Request {
     /// [`NoProbe`](crate::probe::NoProbe) hot path and the response stays
     /// fixed-size.
     pub trace: bool,
+    /// serve this request with a specific registered
+    /// [`WeightVersion`] (e.g. a per-user enrolled head from
+    /// [`Coordinator::enroll`]). `None` = the pool's base weights. The
+    /// version is resolved against the registry at submit time —
+    /// an unknown or evicted version is rejected up front with
+    /// [`SubmitError::UnknownWeights`], never half-served.
+    pub weights: Option<WeightVersion>,
 }
 
 /// Inference result. Lean by default: summed logits, class, counted
@@ -140,6 +149,9 @@ pub struct Response {
     /// request-scoped trace id minted at submit — matches the flight
     /// recorder's events for this utterance (see [`crate::obs`])
     pub trace_id: TraceId,
+    /// the [`WeightVersion`] that actually served this request (the
+    /// pool's base version unless the request asked for another)
+    pub weights: WeightVersion,
 }
 
 /// Per-worker serving counters (the per-lane view of routing health:
@@ -196,6 +208,15 @@ pub struct Stats {
     /// (bounded by construction — frame staging buffer + detector window
     /// per session; 0 once every session is closed)
     pub session_bytes: u64,
+    /// epoch-fenced weight hot-swaps applied to live streaming sessions
+    /// ([`Coordinator::swap_weights`]), folded from the worker shards
+    pub weight_swaps: u64,
+    /// gauge: weight versions currently resident in the registry
+    /// (bounded by the registry's LRU capacity)
+    pub resident_versions: u64,
+    /// enrollment wall-clock latency distribution (µs), recorded once per
+    /// [`Coordinator::enroll`] call — control path, never per frame
+    pub enroll_latency: LogHistogram,
     /// per-worker routing/serving counters (indexed by worker; folded
     /// from lane atomics + telemetry shards by [`Coordinator::stats`])
     pub per_worker: Vec<LaneStats>,
@@ -234,6 +255,7 @@ impl Stats {
         std::mem::size_of::<Self>()
             + self.latency.heap_bytes()
             + self.chunk_latency.heap_bytes()
+            + self.enroll_latency.heap_bytes()
             + self.per_worker.len() * std::mem::size_of::<LaneStats>()
     }
 
@@ -354,6 +376,9 @@ enum Job {
         trace: TraceId,
         enqueued: Instant,
         reply: Weak<Mailbox>,
+        /// weights resolved (and touched) at submit — the Arc keeps the
+        /// table alive on this job even if the registry evicts it mid-queue
+        weights: (WeightVersion, Arc<QuantParams>),
     },
     /// a fused group of independent utterances served in lockstep through
     /// the batched-chip path (one weight-row fetch per fired lane per
@@ -364,6 +389,10 @@ enum Job {
         traces: Vec<TraceId>,
         enqueued: Instant,
         reply: Weak<Mailbox>,
+        /// per-member resolved weights, parallel to `reqs`: the worker
+        /// regroups the batch by version so each fused sub-group steps
+        /// against one coherent weight table (never a mixed fetch)
+        weights: Vec<(WeightVersion, Arc<QuantParams>)>,
     },
     /// open a streaming session pinned to this worker (`config`: per-
     /// session VAD/detector tuning, `None` = pool default; `alive` is
@@ -375,9 +404,17 @@ enum Job {
         config: Option<StreamConfig>,
         events: SyncSender<StreamEvent>,
         alive: Arc<AtomicBool>,
+        /// the session's weight version, resolved and *pinned* at open
+        /// (the worker unpins it when the session finishes)
+        weights: (WeightVersion, Arc<QuantParams>),
     },
     /// an audio chunk for an open session
     StreamData { session: u64, chunk: Vec<i64>, enqueued: Instant },
+    /// install `version` on an open session at the next frame boundary
+    /// (the epoch fence — see DESIGN.md §14). The new version was pinned
+    /// at submit; the worker unpins the outgoing one after the swap and
+    /// acknowledges with [`StreamEvent::WeightsSwapped`].
+    SwapWeights { session: u64, version: WeightVersion, params: Arc<QuantParams> },
     /// close a session (flushes telemetry, emits [`StreamEvent::Closed`])
     StreamClose { session: u64 },
     /// publish a fresh chip-report snapshot into the telemetry shard and
@@ -398,6 +435,22 @@ pub enum StreamEvent {
         trace: TraceId,
         /// the detection itself
         event: DetectionEvent,
+        /// the weight version active when the detection fired — after a
+        /// mid-stream [`Coordinator::swap_weights`] this flips to the new
+        /// version from the first post-fence frame onwards
+        weights: WeightVersion,
+    },
+    /// acknowledgement that [`Coordinator::swap_weights`] installed a new
+    /// weight version on this session at a frame boundary (the epoch
+    /// fence): every frame up to `frame` was decided by the old weights,
+    /// every later frame by `version`, none dropped or duplicated
+    WeightsSwapped {
+        /// the session's trace id
+        trace: TraceId,
+        /// the newly installed version
+        version: WeightVersion,
+        /// frames the session's chip had consumed when the fence closed
+        frame: u64,
     },
     /// final telemetry, emitted exactly once when the session closes
     Closed {
@@ -408,6 +461,23 @@ pub enum StreamEvent {
         /// frames consumed with the ΔRNN clock-gated
         gated_frames: u64,
     },
+}
+
+/// What [`Coordinator::enroll`] produced: the newly registered version,
+/// its lineage, and the training telemetry that also lands in
+/// [`Stats::enroll_latency`].
+#[derive(Debug, Clone, Copy)]
+pub struct EnrollOutcome {
+    /// the newly registered (content-hashed) weight version
+    pub version: WeightVersion,
+    /// the version enrollment started from (the new version's parent)
+    pub parent: WeightVersion,
+    /// fine-tuning steps taken
+    pub steps: usize,
+    /// cross-entropy loss after the last step
+    pub final_loss: f32,
+    /// wall-clock enrollment latency, µs
+    pub latency_us: u64,
 }
 
 /// Why one lane refused an utterance job (the request rides back).
@@ -429,6 +499,9 @@ enum StreamLaneError {
 enum FusedLaneError {
     Full(Vec<Request>),
     Disconnected(Vec<Request>),
+    /// a member named an unknown/evicted weight version: not retryable,
+    /// the whole group is handed back with the failed lookup
+    Weights(Vec<Request>, crate::custom::RegistryError),
 }
 
 /// One worker's request lane (the submit-side view).
@@ -468,6 +541,12 @@ struct Router {
     /// shutdown so blocked ticket waits resolve to `Closed`. Locked only
     /// on client creation and shutdown — never on the submit path.
     mailboxes: Mutex<Vec<Weak<Mailbox>>>,
+    /// the versioned weight registry (enrolled heads + the base weights);
+    /// shared with the workers, which pin/unpin per live session
+    registry: Arc<WeightRegistry>,
+    /// the pool's base weights: inserted and permanently pinned at spawn,
+    /// so resolving `weights: None` can never fail
+    base: (WeightVersion, Arc<QuantParams>),
 }
 
 impl Router {
@@ -479,12 +558,31 @@ impl Router {
         TraceId(self.next_trace.fetch_add(1, Ordering::Relaxed))
     }
 
+    /// Resolve a request's optional weight version against the registry
+    /// (touching its LRU slot). `None` is the pool base, which is
+    /// permanently pinned and therefore always resolvable.
+    fn resolve_weights(
+        &self,
+        version: Option<WeightVersion>,
+    ) -> Result<(WeightVersion, Arc<QuantParams>), crate::custom::RegistryError> {
+        match version {
+            Some(v) => Ok((v, self.registry.get(v)?)),
+            None => Ok((self.base.0, Arc::clone(&self.base.1))),
+        }
+    }
+
     /// Routing: the stream's pinned worker unless its queue is full, then
     /// least-loaded spill. The request id is registered with `mailbox`
     /// *before* enqueueing (a fast worker must find the id expected), and
     /// withdrawn again on rejection. `Err` distinguishes global
     /// backpressure (`QueueFull`, retryable) from a dead pool (`Closed`).
     fn submit(&self, mut req: Request, mailbox: &Arc<Mailbox>) -> Result<Ticket, SubmitError> {
+        // resolve the weight version first: an unknown/evicted version is
+        // a submit-time rejection, not a worker-side surprise
+        let weights = match self.resolve_weights(req.weights) {
+            Ok(w) => w,
+            Err(e) => return Err(SubmitError::UnknownWeights(req, e)),
+        };
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let id = req.id;
         let stream = req.stream;
@@ -496,7 +594,7 @@ impl Router {
         let trace = self.mint_trace();
         self.recorders[pinned].record(pinned as u32, trace, EventKind::Submit);
         let mut any_full = false;
-        let mut req = match self.try_lane(pinned, req, trace, now, &reply) {
+        let mut req = match self.try_lane(pinned, req, trace, now, &reply, &weights) {
             Ok(()) => return Ok(Ticket::new(id, stream, Arc::clone(mailbox))),
             Err(LaneError::Full(r)) => {
                 self.lanes[pinned].pinned_full.fetch_add(1, Ordering::Relaxed);
@@ -509,7 +607,7 @@ impl Router {
         let mut order: Vec<usize> = (0..self.lanes.len()).filter(|&w| w != pinned).collect();
         order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
         for w in order {
-            req = match self.try_lane(w, req, trace, now, &reply) {
+            req = match self.try_lane(w, req, trace, now, &reply, &weights) {
                 Ok(()) => {
                     self.lanes[w].spilled_in.fetch_add(1, Ordering::Relaxed);
                     return Ok(Ticket::new(id, stream, Arc::clone(mailbox)));
@@ -539,8 +637,15 @@ impl Router {
         trace: TraceId,
         t: Instant,
         reply: &Weak<Mailbox>,
+        weights: &(WeightVersion, Arc<QuantParams>),
     ) -> Result<(), LaneError> {
-        let job = Job::Utterance { req, trace, enqueued: t, reply: reply.clone() };
+        let job = Job::Utterance {
+            req,
+            trace,
+            enqueued: t,
+            reply: reply.clone(),
+            weights: (weights.0, Arc::clone(&weights.1)),
+        };
         match self.lanes[w].tx.try_send(job) {
             Ok(()) => {
                 self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
@@ -566,6 +671,15 @@ impl Router {
         mut reqs: Vec<Request>,
         mailbox: &Arc<Mailbox>,
     ) -> Result<Batch, FusedLaneError> {
+        // resolve every member's weights before minting any id: one bad
+        // version rejects the group whole, with nothing registered
+        let mut weights = Vec::with_capacity(reqs.len());
+        for req in reqs.iter() {
+            match self.resolve_weights(req.weights) {
+                Ok(w) => weights.push(w),
+                Err(e) => return Err(FusedLaneError::Weights(reqs, e)),
+            }
+        }
         let mut traces = Vec::with_capacity(reqs.len());
         for req in reqs.iter_mut() {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -585,6 +699,7 @@ impl Router {
                 traces: traces.clone(),
                 enqueued: now,
                 reply: reply.clone(),
+                weights: weights.clone(),
             };
             reqs = match self.lanes[w].tx.try_send(job) {
                 Ok(()) => {
@@ -691,7 +806,8 @@ impl Client {
                         req = r;
                         std::thread::sleep(Duration::from_micros(200));
                     }
-                    Err(e @ SubmitError::Closed(_)) => return Err(e),
+                    // Closed and UnknownWeights are both permanent
+                    Err(e) => return Err(e),
                 }
             }
         }
@@ -725,6 +841,9 @@ impl Client {
                 Err(FusedLaneError::Full(r)) => r,
                 Err(FusedLaneError::Disconnected(mut r)) => {
                     return Err(SubmitError::Closed(r.remove(0)));
+                }
+                Err(FusedLaneError::Weights(mut r, e)) => {
+                    return Err(SubmitError::UnknownWeights(r.remove(0), e));
                 }
             };
             std::thread::sleep(Duration::from_micros(200));
@@ -921,6 +1040,7 @@ impl Coordinator {
 
     /// Spawn `n_workers` chip twins, each with its own weight copy
     /// (validated entry point: [`CoordinatorBuilder::build`]).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn spawn(
         params: QuantParams,
         config: ChipConfig,
@@ -929,7 +1049,16 @@ impl Coordinator {
         default_stream: StreamConfig,
         report_epoch: u64,
         recorder: Option<RecorderConfig>,
+        registry_capacity: usize,
     ) -> Self {
+        // the base weights become registry version zero-generation: they
+        // are pinned once here and never unpinned, so `weights: None`
+        // submissions can always resolve
+        let registry = Arc::new(WeightRegistry::new(registry_capacity));
+        let base_version = registry.insert(params.clone(), None);
+        let base_params =
+            registry.pin(base_version).expect("base version resident at spawn");
+        let base = (base_version, base_params);
         let mut lanes = Vec::with_capacity(n_workers);
         let mut shards = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
@@ -944,19 +1073,20 @@ impl Coordinator {
                 None => FlightRecorder::disabled(),
             });
             let handle = {
-                let params = params.clone();
+                let base = (base.0, Arc::clone(&base.1));
                 let config = config.clone();
                 let default_stream = default_stream.clone();
                 let stalled = Arc::clone(&stalled);
                 let depth = Arc::clone(&depth);
                 let shard = Arc::clone(&shard);
                 let rec = Arc::clone(&rec);
+                let registry = Arc::clone(&registry);
                 std::thread::Builder::new()
                     .name(format!("chip-worker-{w}"))
                     .spawn(move || {
                         worker_loop(
                             w,
-                            params,
+                            base,
                             config,
                             default_stream,
                             report_epoch,
@@ -965,6 +1095,7 @@ impl Coordinator {
                             stalled,
                             depth,
                             rec,
+                            registry,
                         )
                     })
                     .expect("spawn worker")
@@ -990,6 +1121,8 @@ impl Coordinator {
             next_trace: AtomicU64::new(1),
             recorders,
             mailboxes: Mutex::new(Vec::new()),
+            registry,
+            base,
         });
         // the default mailbox retains unclaimed responses: that is the
         // queue the deprecated collect() shim drains
@@ -1067,7 +1200,7 @@ impl Coordinator {
     /// same recoverable contract as [`Client::submit`] after shutdown,
     /// instead of a panic.
     pub fn open_stream(&self, stream: u64) -> StreamSession {
-        self.open_stream_inner(stream, None)
+        self.open_stream_inner(stream, None, None)
     }
 
     /// [`open_stream`](Self::open_stream) with per-session VAD/detector
@@ -1085,21 +1218,68 @@ impl Coordinator {
         config: StreamConfig,
     ) -> Result<StreamSession, crate::error::Error> {
         config.chip.validate()?;
-        Ok(self.open_stream_inner(stream, Some(config)))
+        Ok(self.open_stream_inner(stream, Some(config), None))
     }
 
-    fn open_stream_inner(&self, stream: u64, config: Option<StreamConfig>) -> StreamSession {
+    /// [`open_stream`](Self::open_stream) on a specific registered
+    /// [`WeightVersion`] (e.g. a per-user enrolled head): the session's
+    /// pipeline is built from that version's weight table and the
+    /// version is *pinned* in the registry for the session's whole life —
+    /// the LRU can never evict the weights out from under a live stream.
+    /// The worker unpins it when the session closes. An optional
+    /// per-session [`StreamConfig`] rides along (`None` = pool default).
+    ///
+    /// Fails up front with [`Error::Registry`](crate::error::Error::Registry)
+    /// when `version` is unknown or was evicted, and with the usual
+    /// [`Error::InvalidConfig`](crate::error::Error::InvalidConfig) when
+    /// the session config is invalid.
+    pub fn open_stream_with_weights(
+        &self,
+        stream: u64,
+        config: Option<StreamConfig>,
+        version: WeightVersion,
+    ) -> Result<StreamSession, crate::error::Error> {
+        if let Some(cfg) = &config {
+            cfg.chip.validate()?;
+        }
+        let router = self.router();
+        let params = router.registry.pin(version)?;
+        Ok(self.open_stream_inner(stream, config, Some((version, params))))
+    }
+
+    fn open_stream_inner(
+        &self,
+        stream: u64,
+        config: Option<StreamConfig>,
+        weights: Option<(WeightVersion, Arc<QuantParams>)>,
+    ) -> StreamSession {
         // bounded: a client that never drains cannot grow worker memory
         let (tx, rx) = sync_channel(STREAM_EVENT_CAP);
         let router = self.router.as_ref().expect("router alive");
+        // sessions on the pool base still pin it: finish() unpins
+        // unconditionally, and the spawn-time pin keeps base resident
+        let weights = weights.unwrap_or_else(|| {
+            let params =
+                router.registry.pin(router.base.0).expect("base version pinned at spawn");
+            (router.base.0, params)
+        });
+        let version = weights.0;
         let session = router.next_session.fetch_add(1, Ordering::Relaxed);
         let trace = router.mint_trace();
         let lane = router.pinned_lane(stream);
         router.recorders[lane].record(lane as u32, trace, EventKind::Submit);
         let alive = Arc::new(AtomicBool::new(true));
-        let job =
-            Job::StreamOpen { session, trace, config, events: tx, alive: Arc::clone(&alive) };
+        let job = Job::StreamOpen {
+            session,
+            trace,
+            config,
+            events: tx,
+            alive: Arc::clone(&alive),
+            weights,
+        };
         if router.send_stream_job(stream, job).is_err() {
+            // the job never reached a worker: release its pin here
+            router.registry.unpin(version);
             return StreamSession {
                 stream,
                 session,
@@ -1119,6 +1299,90 @@ impl Coordinator {
             closed: false,
             alive,
         }
+    }
+
+    /// Install `version` on a live streaming session at its next frame
+    /// boundary — the epoch-fenced hot-swap (DESIGN.md §14). The stream
+    /// keeps running: no frame is dropped, duplicated, or decided by a
+    /// half-written weight table. The fence is the worker's job boundary —
+    /// every queued chunk ahead of the swap is fully decided by the old
+    /// weights; everything after it by `version`, against the recurrent
+    /// state the old weights left behind (bit-identical to a fresh chip
+    /// that was seeded with that state, see `rust/tests/customization.rs`).
+    ///
+    /// `version` is pinned here (submit side) and the outgoing version is
+    /// unpinned by the worker once the swap lands, so neither table can be
+    /// evicted mid-flight. The worker acknowledges with
+    /// [`StreamEvent::WeightsSwapped`] on the session's event channel;
+    /// subsequent [`StreamEvent::Detection`]s carry the new version.
+    ///
+    /// Fails with [`Error::Registry`](crate::error::Error::Registry) when
+    /// `version` is unknown/evicted, and with
+    /// [`Error::StreamPush`](crate::error::Error::StreamPush)
+    /// ([`StreamPushError::Closed`]) when the pool is gone. A swap raced
+    /// against session close is not an error: the worker drops it and
+    /// releases the pin.
+    pub fn swap_weights(
+        &self,
+        session: &StreamSession,
+        version: WeightVersion,
+    ) -> Result<(), crate::error::Error> {
+        let router = self.router();
+        let params = router.registry.pin(version)?;
+        let job = Job::SwapWeights { session: session.session, version, params };
+        if router.send_stream_job(session.stream, job).is_err() {
+            router.registry.unpin(version);
+            return Err(StreamPushError::Closed(Vec::new()).into());
+        }
+        Ok(())
+    }
+
+    /// Few-shot enroll a per-user keyword head: fine-tune ONLY the FC
+    /// output layer on K≤[`crate::custom::MAX_SHOTS`] synthetic speaker
+    /// utterances (recurrent weights frozen — the chip's temporal dynamics
+    /// are untouched), requantize through the chip's integer pipeline, and
+    /// register the result as a new [`WeightVersion`] with `parent` as its
+    /// lineage. Runs on the caller's thread through the native backend —
+    /// no worker lane is blocked. Deterministic: the same parent and
+    /// config always produce the byte-identical version.
+    ///
+    /// `parent: None` enrolls from the pool's base weights.
+    pub fn enroll(
+        &self,
+        parent: Option<WeightVersion>,
+        cfg: EnrollConfig,
+    ) -> crate::Result<EnrollOutcome> {
+        let router = self.router();
+        let parent_version = parent.unwrap_or(router.base.0);
+        let base = router.registry.get(parent_version).map_err(crate::error::Error::from)?;
+        // lint:allow(no-wallclock): enrollment-latency telemetry stamp on the control path (few-shot training, never per frame)
+        let t0 = Instant::now();
+        let backend = NativeBackend::new();
+        let out = crate::custom::few_shot(&backend, &base, &cfg)?;
+        let version = router.registry.insert(out.params, Some(parent_version));
+        let latency_us = t0.elapsed().as_micros() as u64;
+        router.registry.record_enroll_us(latency_us);
+        Ok(EnrollOutcome {
+            version,
+            parent: parent_version,
+            steps: out.steps,
+            final_loss: out.final_loss,
+            latency_us,
+        })
+    }
+
+    /// The pool's weight registry (shared with the workers). Exposed for
+    /// inspection — resident count, lineage, pin counts — and for
+    /// registering externally trained tables via
+    /// [`WeightRegistry::insert`].
+    pub fn registry(&self) -> &WeightRegistry {
+        &self.router().registry
+    }
+
+    /// The pool's base [`WeightVersion`] (the weights the builder was
+    /// given), permanently resident.
+    pub fn base_version(&self) -> WeightVersion {
+        self.router().base.0
     }
 
     /// Block until `n` responses have been collected from the default
@@ -1161,6 +1425,7 @@ impl Coordinator {
             s.fused_batches += shard.fused_batches.load(Ordering::Relaxed);
             s.stream_events_dropped += shard.events_dropped.load(Ordering::Relaxed);
             s.session_bytes += shard.session_bytes.load(Ordering::Relaxed);
+            s.weight_swaps += shard.weight_swaps.load(Ordering::Relaxed);
             let sp = lane.spilled_in.load(Ordering::Relaxed);
             spilled += sp;
             s.per_worker.push(LaneStats {
@@ -1173,6 +1438,8 @@ impl Coordinator {
         s.spilled = spilled;
         s.rejected_full = router.rejected_full.load(Ordering::Relaxed);
         s.rejected_closed = router.rejected_closed.load(Ordering::Relaxed);
+        s.resident_versions = router.registry.resident_count() as u64;
+        s.enroll_latency = router.registry.enroll_latency();
         s.captured_us = crate::obs::monotonic_us();
         s
     }
@@ -1295,6 +1562,10 @@ struct WorkerSession {
     /// last observed VAD gate state, threaded across chunks so the
     /// recorder emits gate open/close transitions (not per-frame noise)
     last_gated: Option<bool>,
+    /// the session's active weight version: pinned in the registry for as
+    /// long as the session lives (updated by [`Job::SwapWeights`], which
+    /// unpins the predecessor), unpinned by [`Self::finish`]
+    version: WeightVersion,
 }
 
 impl WorkerSession {
@@ -1314,7 +1585,16 @@ impl WorkerSession {
     /// explicit [`StreamSession::close`] is concurrently draining the
     /// channel, so space frees almost immediately; a dead or wedged client
     /// costs the worker at most the retry budget, never a hang.
-    fn finish(mut self, shard: &WorkerShard, recorder: &FlightRecorder, worker: u32) {
+    fn finish(
+        mut self,
+        shard: &WorkerShard,
+        recorder: &FlightRecorder,
+        worker: u32,
+        registry: &WeightRegistry,
+    ) {
+        // release the session's hold on its weight version (the registry
+        // may now evict it under LRU pressure)
+        registry.unpin(self.version);
         recorder.record(worker, self.trace, EventKind::SessionClose);
         shard.activity.add(&self.pipeline.take_activity_delta());
         let activity = self.pipeline.chip.activity();
@@ -1354,7 +1634,7 @@ fn publish_report(shard: &WorkerShard, chip: &KwsChip) {
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     index: usize,
-    params: QuantParams,
+    base: (WeightVersion, Arc<QuantParams>),
     config: ChipConfig,
     default_stream: StreamConfig,
     report_epoch: u64,
@@ -1363,8 +1643,13 @@ fn worker_loop(
     stalled: Arc<AtomicBool>,
     depth: Arc<AtomicU64>,
     recorder: Arc<FlightRecorder>,
+    registry: Arc<WeightRegistry>,
 ) {
-    let mut chip = KwsChip::new(params.clone(), config.clone());
+    let mut chip = KwsChip::new((*base.1).clone(), config.clone());
+    // the weight table currently loaded in this worker's utterance chip;
+    // a request on a different version swaps before processing (cheap —
+    // one SRAM image load — and utterances reset recurrent state anyway)
+    let mut chip_version = base.0;
     let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
     // chip activity is flushed into the shard as monotonic deltas — the
     // chip's own counters are never reset, so its cumulative report stays
@@ -1393,10 +1678,18 @@ fn worker_loop(
         }
         depth.fetch_sub(1, Ordering::Relaxed);
         match job {
-            Job::Utterance { req, trace, enqueued, reply } => {
+            Job::Utterance { req, trace, enqueued, reply, weights } => {
                 if recorder.is_enabled() {
                     let queued_us = enqueued.elapsed().as_micros() as u64;
                     recorder.record(index as u32, trace, EventKind::Dequeue { queued_us });
+                }
+                // serve on the requested weight version: swap the chip's
+                // table if a different one is loaded (process_utterance
+                // resets recurrent state, so the swap is invisible beyond
+                // the weights themselves)
+                if weights.0 != chip_version {
+                    chip.swap_weights((*weights.1).clone());
+                    chip_version = weights.0;
                 }
                 // default: the lean NoProbe hot path — no per-frame
                 // allocation, fixed-size Decision. A request that opted in
@@ -1432,6 +1725,7 @@ fn worker_loop(
                     worker_seq,
                     trace: diag,
                     trace_id: trace,
+                    weights: weights.0,
                 };
                 worker_seq += 1;
                 recorder.record(
@@ -1462,7 +1756,7 @@ fn worker_loop(
                     mailbox.deliver(resp);
                 }
             }
-            Job::UtteranceBatch { reqs, traces, enqueued, reply } => {
+            Job::UtteranceBatch { reqs, traces, enqueued, reply, weights } => {
                 shard.fused_batches.fetch_add(1, Ordering::Relaxed);
                 if recorder.is_enabled() {
                     let queued_us = enqueued.elapsed().as_micros() as u64;
@@ -1491,50 +1785,69 @@ fn worker_loop(
                     }
                     frames.push(fr);
                 }
-                // phase 2 — ΔRNN, batched: every request steps in
-                // lockstep against a single weight-row fetch per fired
-                // lane. Each session's decision and activity are
-                // bit-identical to a solo run (accel::batch module docs).
-                let mut sessions: Vec<BatchSession> =
-                    (0..reqs.len()).map(|_| BatchSession::new()).collect();
+                // phase 2 — ΔRNN, batched *per weight version*: the
+                // batched stepper reads the host accel's single weight
+                // table, so a mixed-version group is split into
+                // sub-groups (first-seen order) and the table is swapped
+                // between them. Members sharing a version still step in
+                // lockstep against one weight-row fetch per fired lane,
+                // and each member's decision stays bit-identical to a
+                // solo run on its version (accel::batch module docs).
+                let mut groups: Vec<(WeightVersion, Vec<usize>)> = Vec::new();
+                for (i, (v, _)) in weights.iter().enumerate() {
+                    match groups.iter_mut().find(|(gv, _)| *gv == *v) {
+                        Some((_, members)) => members.push(i),
+                        None => groups.push((*v, vec![i])),
+                    }
+                }
                 let mut accums: Vec<DecisionAccum> = (0..reqs.len())
                     .map(|_| DecisionAccum::new(chip.config.warmup))
                     .collect();
-                let max_t = frames.iter().map(|f| f.len()).max().unwrap_or(0);
-                for t in 0..max_t {
-                    for (sess, fr) in sessions.iter_mut().zip(frames.iter()) {
-                        if let Some(&q) = fr.get(t) {
-                            sess.stage(q);
+                let mut activities: Vec<ChipActivity> =
+                    vec![ChipActivity::default(); reqs.len()];
+                for (version, members) in &groups {
+                    if *version != chip_version {
+                        chip.swap_weights((*weights[members[0]].1).clone());
+                        chip_version = *version;
+                    }
+                    let mut sessions: Vec<BatchSession> =
+                        members.iter().map(|_| BatchSession::new()).collect();
+                    let max_t =
+                        members.iter().map(|&i| frames[i].len()).max().unwrap_or(0);
+                    for t in 0..max_t {
+                        for (sess, &i) in sessions.iter_mut().zip(members.iter()) {
+                            if let Some(&q) = frames[i].get(t) {
+                                sess.stage(q);
+                            }
+                        }
+                        chip.accel.step_frames_batched(&mut sessions);
+                        for (sess, &i) in sessions.iter().zip(members.iter()) {
+                            if t >= frames[i].len() {
+                                continue;
+                            }
+                            let r = sess.last.expect("staged session stepped");
+                            accums[i].push(&FrameOut {
+                                index: t as u64,
+                                feat: [0i64; crate::MAX_CHANNELS],
+                                logits: r.logits,
+                                fired: r.fired,
+                                cycles: r.cycles,
+                                gated: false,
+                            });
                         }
                     }
-                    chip.accel.step_frames_batched(&mut sessions);
-                    for ((sess, fr), acc) in
-                        sessions.iter().zip(frames.iter()).zip(accums.iter_mut())
-                    {
-                        if t >= fr.len() {
-                            continue;
-                        }
-                        let r = sess.last.expect("staged session stepped");
-                        acc.push(&FrameOut {
-                            index: t as u64,
-                            feat: [0i64; crate::MAX_CHANNELS],
-                            logits: r.logits,
-                            fired: r.fired,
-                            cycles: r.cycles,
-                            gated: false,
-                        });
+                    for (sess, &i) in sessions.iter().zip(members.iter()) {
+                        activities[i] = sess.activity;
                     }
                 }
                 // phase 3 — per-request responses and telemetry. The RNN
                 // side of the activity is booked from each session (the
                 // host accel's solo counters were untouched); the FEx
                 // side flushes through the usual chip-activity delta.
-                for ((req, trace), (sess, acc)) in reqs
-                    .into_iter()
-                    .zip(traces)
-                    .zip(sessions.iter().zip(accums.iter()))
+                for (i, ((req, trace), (version, _))) in
+                    reqs.into_iter().zip(traces).zip(weights).enumerate()
                 {
-                    let decision = acc.finish();
+                    let decision = accums[i].finish();
                     let lat_ms = decision.total_cycles as f64
                         / decision.frames.max(1) as f64
                         / crate::energy::calib::CLOCK_HZ
@@ -1554,6 +1867,7 @@ fn worker_loop(
                         worker_seq,
                         trace: None,
                         trace_id: trace,
+                        weights: version,
                     };
                     worker_seq += 1;
                     recorder.record(
@@ -1572,7 +1886,7 @@ fn worker_loop(
                         }
                     }
                     shard.latency.record(resp.service.as_micros() as u64);
-                    shard.activity.add(&sess.activity);
+                    shard.activity.add(&activities[i]);
                     if let Some(mailbox) = reply.upgrade() {
                         mailbox.deliver(resp);
                     }
@@ -1581,19 +1895,51 @@ fn worker_loop(
                 shard.activity.add(&act.delta_since(&flushed));
                 flushed = act;
             }
-            Job::StreamOpen { session, trace, config: stream_cfg, events, alive } => {
+            Job::StreamOpen { session, trace, config: stream_cfg, events, alive, weights } => {
                 let cfg = stream_cfg.unwrap_or_else(|| default_stream.clone());
-                let pipeline = StreamPipeline::new(params.clone(), cfg);
+                let pipeline = StreamPipeline::new((*weights.1).clone(), cfg);
                 recorder.record(index as u32, trace, EventKind::SessionOpen);
                 // session ids are unique; a collision would be a router bug,
                 // but never leak the old session's telemetry silently
                 if let Some(old) = sessions.insert(
                     session,
-                    WorkerSession { pipeline, events, alive, trace, last_gated: None },
+                    WorkerSession {
+                        pipeline,
+                        events,
+                        alive,
+                        trace,
+                        last_gated: None,
+                        version: weights.0,
+                    },
                 ) {
-                    old.finish(&shard, &recorder, index as u32);
+                    old.finish(&shard, &recorder, index as u32, &registry);
                 }
                 publish_session_bytes(&shard, &sessions);
+            }
+            Job::SwapWeights { session, version, params } => {
+                if let Some(sess) = sessions.get_mut(&session) {
+                    // the epoch fence: jobs on this lane serialize, and
+                    // every StreamData drains all its completed frames
+                    // before returning — so right here no frame is
+                    // half-stepped, the ΔFIFOs are empty, and installing
+                    // the new table is invisible to the frame pipeline
+                    sess.pipeline.swap_weights((*params).clone());
+                    let outgoing = sess.version;
+                    sess.version = version;
+                    registry.unpin(outgoing);
+                    shard.weight_swaps.fetch_add(1, Ordering::Relaxed);
+                    let frame = sess.pipeline.chip.activity().frames;
+                    if sess.deliver(
+                        StreamEvent::WeightsSwapped { trace: sess.trace, version, frame },
+                        &shard,
+                    ) {
+                        recorder.record(index as u32, sess.trace, EventKind::EventDropped);
+                    }
+                } else {
+                    // swap raced against close: the session is gone, so
+                    // release the pin taken at submit
+                    registry.unpin(version);
+                }
             }
             Job::StreamData { session, chunk, enqueued } => {
                 // chunks for unknown/closed sessions are dropped (a late
@@ -1662,7 +2008,11 @@ fn worker_loop(
                             EventKind::Detection { class: d.class as u8 },
                         );
                         if sess.deliver(
-                            StreamEvent::Detection { trace: sess.trace, event: d },
+                            StreamEvent::Detection {
+                                trace: sess.trace,
+                                event: d,
+                                weights: sess.version,
+                            },
                             &shard,
                         ) {
                             recorder.record(
@@ -1680,7 +2030,7 @@ fn worker_loop(
                     // waits on the Closed marker finish() delivers), the
                     // session-memory gauge is already consistent
                     publish_session_bytes(&shard, &sessions);
-                    sess.finish(&shard, &recorder, index as u32);
+                    sess.finish(&shard, &recorder, index as u32, &registry);
                 }
             }
             Job::PublishReport { ack } => {
@@ -1711,7 +2061,7 @@ fn worker_loop(
             if !dead.is_empty() {
                 for k in dead {
                     if let Some(sess) = sessions.remove(&k) {
-                        sess.finish(&shard, &recorder, index as u32);
+                        sess.finish(&shard, &recorder, index as u32, &registry);
                     }
                 }
                 publish_session_bytes(&shard, &sessions);
@@ -1720,7 +2070,7 @@ fn worker_loop(
     }
     // pool shutdown with sessions still open: flush their telemetry
     for (_, sess) in sessions.drain() {
-        sess.finish(&shard, &recorder, index as u32);
+        sess.finish(&shard, &recorder, index as u32, &registry);
     }
     publish_session_bytes(&shard, &sessions);
     publish_report(&shard, &chip);
@@ -1761,6 +2111,7 @@ mod tests {
             audio12: crate::audio::quantize_12b(&audio),
             label: Some(label),
             trace: false,
+            weights: None,
         }
     }
 
@@ -2345,5 +2696,119 @@ mod tests {
             }
             Ok(_) => panic!("submit into a dropped pool must fail"),
         }
+    }
+
+    #[test]
+    fn responses_carry_serving_version_and_unknown_is_rejected() {
+        let coord = pool(30, 2, 8);
+        let base = coord.base_version();
+        let resp = coord
+            .submit(request(0, 1))
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .expect("response");
+        assert_eq!(resp.weights, base, "default submission must serve the base version");
+        // an unregistered version is rejected at submit, payload intact
+        let mut req = request(0, 2);
+        let bogus = WeightVersion::of(&rng_quant(4096));
+        req.weights = Some(bogus);
+        let audio_len = req.audio12.len();
+        match coord.submit(req) {
+            Err(e) => {
+                assert!(e.is_unknown_weights(), "expected UnknownWeights: {e}");
+                assert!(!e.is_queue_full() && !e.is_closed());
+                assert_eq!(e.request().audio12.len(), audio_len);
+                assert_eq!(e.into_request().stream, 0);
+            }
+            Ok(_) => panic!("unknown weight version must be rejected at submit"),
+        }
+        // a registered version resolves and is echoed back
+        let v2 = coord.registry().insert(rng_quant(77), Some(base));
+        let mut req = request(0, 3);
+        req.weights = Some(v2);
+        let resp = coord
+            .submit(req)
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .expect("response");
+        assert_eq!(resp.weights, v2);
+        assert_eq!(coord.registry().parent(v2), Some(base));
+    }
+
+    #[test]
+    fn fused_mixed_versions_match_solo_per_tenant() {
+        // ISSUE-9 satellite: the fused lane used to assume one global
+        // weight table. A fused group mixing weight versions must now
+        // produce, per member, the bit-identical decision of a solo
+        // submission on that member's version.
+        let coord = pool(31, 2, 8);
+        let v2 = coord.registry().insert(rng_quant(78), None);
+        let mut reqs: Vec<Request> = (0..6).map(|i| request(i, 50 + i)).collect();
+        for (i, r) in reqs.iter_mut().enumerate() {
+            // interleave tenants: base, v2, base, v2, …
+            r.weights = if i % 2 == 0 { None } else { Some(v2) };
+        }
+        let solo = coord
+            .submit_batch(reqs.clone())
+            .expect("pool alive")
+            .wait_all(Duration::from_secs(60));
+        let fused = coord
+            .submit_fused_batch(reqs)
+            .expect("pool alive")
+            .wait_all(Duration::from_secs(60));
+        assert_eq!(solo.len(), 6);
+        assert_eq!(fused.len(), 6);
+        for (i, (a, b)) in solo.iter().zip(fused.iter()).enumerate() {
+            assert_eq!(a.class, b.class, "member {i} diverged");
+            assert_eq!(a.logits, b.logits, "member {i} logits diverged");
+            assert_eq!(a.counted_frames, b.counted_frames, "member {i}");
+            assert_eq!(a.chip_cycles, b.chip_cycles, "member {i}");
+            let expect = if i % 2 == 0 { coord.base_version() } else { v2 };
+            assert_eq!(a.weights, expect, "solo member {i} served wrong version");
+            assert_eq!(b.weights, expect, "fused member {i} served wrong version");
+        }
+        // still one fused job on one worker
+        let workers: std::collections::HashSet<usize> =
+            fused.iter().map(|r| r.worker).collect();
+        assert_eq!(workers.len(), 1, "fused group must stay on one worker");
+        assert_eq!(coord.stats().fused_batches, 1);
+    }
+
+    #[test]
+    fn stream_swap_keeps_every_frame_and_acknowledges() {
+        let coord = pool(32, 1, 8);
+        let v2 = coord.registry().insert(rng_quant(79), None);
+        let sess = coord.open_stream(0);
+        sess.push_blocking(vec![0i64; 1280]).unwrap(); // 10 frames on base
+        coord.swap_weights(&sess, v2).expect("swap on a live session");
+        sess.push_blocking(vec![0i64; 1280]).unwrap(); // 10 frames on v2
+        let events = sess.close();
+        let closed = events.iter().find_map(|e| match e {
+            StreamEvent::Closed { frames, .. } => Some(*frames),
+            _ => None,
+        });
+        assert_eq!(closed, Some(20), "hot-swap dropped or duplicated frames");
+        let swapped = events.iter().find_map(|e| match e {
+            StreamEvent::WeightsSwapped { version, frame, .. } => Some((*version, *frame)),
+            _ => None,
+        });
+        assert_eq!(
+            swapped,
+            Some((v2, 10)),
+            "swap must land exactly at the 10-frame fence"
+        );
+        let s = coord.stats();
+        assert_eq!(s.weight_swaps, 1);
+        assert!(s.resident_versions >= 2);
+        // the session is closed: its pin on v2 was released
+        assert_eq!(coord.registry().pins(v2), 0, "closed session leaked a pin");
+        // swapping to an unknown version is a typed registry error
+        let sess2 = coord.open_stream(0);
+        let bogus = WeightVersion::of(&rng_quant(4097));
+        match coord.swap_weights(&sess2, bogus) {
+            Err(crate::error::Error::Registry(e)) => assert_eq!(e.version(), bogus),
+            other => panic!("expected Registry error, got {other:?}"),
+        }
+        sess2.close();
     }
 }

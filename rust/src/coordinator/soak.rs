@@ -262,6 +262,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
                         audio12: audio12.clone(),
                         label: Some(*label),
                         trace: false,
+                        weights: None,
                     };
                     loop {
                         match client.submit(req) {
@@ -274,7 +275,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
                                 req = r;
                                 std::thread::sleep(Duration::from_micros(200));
                             }
-                            Err(SubmitError::Closed(_)) => panic!("pool died mid-soak"),
+                            Err(e) => panic!("pool died mid-soak: {e}"),
                         }
                     }
                     if window.len() >= window_cap {

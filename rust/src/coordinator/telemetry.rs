@@ -106,6 +106,9 @@ pub struct WorkerShard {
     /// was full (a client that never drains its receiver; detections are
     /// shed newest-first rather than growing worker-side memory)
     pub events_dropped: AtomicU64,
+    /// epoch-fenced weight swaps installed on this worker's live stream
+    /// sessions (see [`super::Coordinator::swap_weights`])
+    pub weight_swaps: AtomicU64,
     /// gauge: summed [`StreamPipeline::state_bytes`](crate::stream::StreamPipeline::state_bytes)
     /// over this worker's live sessions, refreshed after every session
     /// job — the soak harness asserts it stays bounded (and returns to 0

@@ -344,6 +344,7 @@ mod tests {
             worker_seq: 0,
             trace: None,
             trace_id: crate::obs::TraceId::NONE,
+            weights: crate::custom::WeightVersion::of(&crate::accel::gru::QuantParams::zeroed()),
         }
     }
 

@@ -1,0 +1,288 @@
+//! Few-shot per-user enrollment: FC-head fine-tuning over frozen
+//! recurrent weights.
+//!
+//! The enrollment flow takes a *quantised* base model, dequantises it into
+//! the float training ABI, runs a handful of [`Backend::train_step`]s over
+//! K ≤ [`MAX_SHOTS`] speaker recordings (plus silence/unknown
+//! counter-examples so the FC head keeps rejecting non-target audio), and
+//! requantises the result through the exact integer path the base trainer
+//! uses ([`gru::quantize_params`]). Only the FC output layer moves: the
+//! recurrent parameters (`w_x`, `w_h`, `b`) are restored — values *and*
+//! Adam moments — after every step, so the ΔGRU dynamics, and therefore
+//! the temporal-sparsity/energy profile the chip was characterised at,
+//! are untouched. Chiang et al. (PAPERS.md) motivate exactly this split
+//! for on-device KWS customization.
+//!
+//! Determinism: every input is derived from `(speaker seed, class,
+//! index)` via [`SpeakerVoice`], the native backend is bit-deterministic,
+//! and quantisation is integer — so enrolling twice from the same seed
+//! yields a byte-identical SRAM image and hence the same
+//! [`WeightVersion`](crate::custom::WeightVersion) (content addressing).
+//!
+//! This is control-plane code (allocates, runs float math); nothing here
+//! is on the per-frame serving path.
+
+use crate::accel::gru::{self, FloatParams, QuantParams};
+use crate::dataset::FeatSeq;
+use crate::error::Error;
+use crate::runtime::{Backend, IntTensor, Tensor, TrainState};
+use crate::train::float_params_from_tensors;
+
+use super::speaker::SpeakerVoice;
+
+/// Maximum number of enrollment shots (paper-scale few-shot budget).
+pub const MAX_SHOTS: usize = 8;
+
+/// Enrollment hyper-parameters. `design_point` gives the validated
+/// default; all fields are public for experiments.
+#[derive(Debug, Clone)]
+pub struct EnrollConfig {
+    /// Synthetic speaker identity (see [`SpeakerVoice`]).
+    pub speaker: u64,
+    /// Target keyword class (must be a keyword: `2..NUM_CLASSES`).
+    pub target: usize,
+    /// Number of target-keyword shots (1..=[`MAX_SHOTS`]).
+    pub shots: usize,
+    /// Number of silence/unknown counter-examples mixed into the batch.
+    pub counter_shots: usize,
+    /// Optimisation steps over the (fixed) enrollment batch.
+    pub steps: usize,
+    /// Adam learning rate for the FC head.
+    pub lr: f32,
+    /// Delta threshold used during the training forward pass.
+    pub delta_th: f32,
+}
+
+impl EnrollConfig {
+    /// Default enrollment recipe for `(speaker, target)`: 8 shots, 8
+    /// counter-examples, 24 steps at the base training rate.
+    pub fn design_point(speaker: u64, target: usize) -> Self {
+        Self {
+            speaker,
+            target,
+            shots: MAX_SHOTS,
+            counter_shots: MAX_SHOTS,
+            steps: 24,
+            lr: crate::train::BASE_LR,
+            delta_th: 0.0,
+        }
+    }
+
+    /// Validate ranges; surfaces [`crate::Error::InvalidConfig`] so the
+    /// serving layer rejects bad enrollments before any training runs.
+    pub fn validate(&self) -> Result<(), Error> {
+        if !(2..crate::NUM_CLASSES).contains(&self.target) {
+            return Err(Error::invalid_config(
+                "enroll.target",
+                format!("target {} must be a keyword class (2..{})", self.target, crate::NUM_CLASSES),
+            ));
+        }
+        if self.shots == 0 || self.shots > MAX_SHOTS {
+            return Err(Error::invalid_config(
+                "enroll.shots",
+                format!("shots {} outside 1..={MAX_SHOTS}", self.shots),
+            ));
+        }
+        if self.steps == 0 {
+            return Err(Error::invalid_config("enroll.steps", "steps must be > 0"));
+        }
+        if !(self.lr.is_finite() && self.lr > 0.0) {
+            return Err(Error::invalid_config("enroll.lr", format!("lr {} must be finite > 0", self.lr)));
+        }
+        Ok(())
+    }
+}
+
+/// Result of a few-shot enrollment run.
+#[derive(Debug, Clone)]
+pub struct Enrolled {
+    /// Candidate quantised weight set (register it to get a version id).
+    pub params: QuantParams,
+    /// Optimisation steps executed.
+    pub steps: usize,
+    /// Loss after the final step.
+    pub final_loss: f32,
+}
+
+/// Dequantise chip weights back into the float training ABI (weights at
+/// the model's `w_frac`, Q8.8 biases). Inverse of [`gru::quantize_params`]
+/// up to the original quantisation error.
+pub fn dequantize_params(q: &QuantParams) -> FloatParams {
+    let ws = (1u32 << q.w_frac) as f32;
+    let bs = 256.0; // Q8.8
+    let mut p = FloatParams::zeros();
+    for (dst, src) in p.w_x.iter_mut().zip(&q.w_x) {
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d = s as f32 / ws;
+        }
+    }
+    for (dst, src) in p.w_h.iter_mut().zip(&q.w_h) {
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d = s as f32 / ws;
+        }
+    }
+    for (d, &s) in p.b.iter_mut().zip(q.b.iter()) {
+        *d = s as f32 / bs;
+    }
+    for (dst, src) in p.w_fc.iter_mut().zip(&q.w_fc) {
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d = s as f32 / ws;
+        }
+    }
+    for (d, &s) in p.b_fc.iter_mut().zip(q.b_fc.iter()) {
+        *d = s as f32 / bs;
+    }
+    p
+}
+
+/// Build a fresh [`TrainState`] (zero Adam moments) from float parameters,
+/// flattened in the canonical `[w_x, w_h, b, w_fc, b_fc]` tensor order.
+pub fn train_state_from(p: &FloatParams) -> TrainState {
+    let c = crate::MAX_CHANNELS;
+    let h = crate::HIDDEN;
+    let k = crate::NUM_CLASSES;
+    let flat = |rows: &[Vec<f32>]| -> Vec<f32> { rows.iter().flatten().copied().collect() };
+    let params = vec![
+        Tensor::new(vec![c, 3 * h], flat(&p.w_x)),
+        Tensor::new(vec![h, 3 * h], flat(&p.w_h)),
+        Tensor::new(vec![3 * h], p.b.clone()),
+        Tensor::new(vec![h, k], flat(&p.w_fc)),
+        Tensor::new(vec![k], p.b_fc.clone()),
+    ];
+    let zeros: Vec<Tensor> = params.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    TrainState { params, m: zeros.clone(), v: zeros, step: 0.0 }
+}
+
+/// Stack feature sequences into the training tensors: feats
+/// `[batch, frames, channels]` (Q8.8 → float, same scaling as the base
+/// trainer) and labels `[batch]`.
+pub fn batch_tensors(seqs: &[FeatSeq]) -> (Tensor, IntTensor) {
+    let b = seqs.len();
+    let t = seqs.first().map_or(0, |s| s.feats.len());
+    let c = crate::MAX_CHANNELS;
+    let mut data = Vec::with_capacity(b * t * c);
+    for s in seqs {
+        debug_assert_eq!(s.feats.len(), t, "ragged enrollment batch");
+        for f in &s.feats {
+            for &v in f.iter() {
+                data.push(v as f32 / 256.0);
+            }
+        }
+    }
+    let labels: Vec<i32> = seqs.iter().map(|s| s.label as i32).collect();
+    (Tensor::new(vec![b, t, c], data), IntTensor::new(vec![b], labels))
+}
+
+/// Run few-shot enrollment: fine-tune the FC head of `base` on
+/// `cfg.shots` recordings of `cfg.target` by speaker `cfg.speaker`
+/// (plus counter-examples), freezing the recurrent weights, and
+/// requantise into a candidate weight set.
+pub fn few_shot(backend: &dyn Backend, base: &QuantParams, cfg: &EnrollConfig) -> crate::Result<Enrolled> {
+    cfg.validate()?;
+    let voice = SpeakerVoice::new(cfg.speaker);
+    let mut seqs = voice.features(&voice.enrollment_set(cfg.target, cfg.shots));
+    seqs.extend(voice.features(&voice.counter_set(cfg.counter_shots)));
+    let (feats, labels) = batch_tensors(&seqs);
+    let mut state = train_state_from(&dequantize_params(base));
+    // freeze w_x / w_h / b: snapshot once, restore values AND moments
+    // after every step so Adam never accumulates drift into them
+    let frozen: Vec<Tensor> = state.params[..3].to_vec();
+    let mut final_loss = 0.0;
+    for _ in 0..cfg.steps {
+        final_loss = backend.train_step(&mut state, &feats, &labels, cfg.delta_th, cfg.lr)?;
+        for (i, t) in frozen.iter().enumerate() {
+            state.params[i] = t.clone();
+            state.m[i] = Tensor::zeros(&t.shape);
+            state.v[i] = Tensor::zeros(&t.shape);
+        }
+    }
+    let params = gru::quantize_params(&float_params_from_tensors(&state.params));
+    Ok(Enrolled { params, steps: cfg.steps, final_loss })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::util::prng::Pcg;
+
+    fn rng_quant(seed: u64) -> QuantParams {
+        let mut rng = Pcg::new(seed);
+        let mut q = QuantParams::zeroed();
+        q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+        q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q
+    }
+
+    fn tiny_cfg() -> EnrollConfig {
+        EnrollConfig { shots: 2, counter_shots: 2, steps: 2, ..EnrollConfig::design_point(7, 11) }
+    }
+
+    #[test]
+    fn dequantize_quantize_round_trips_exactly() {
+        // integer → float → integer preserves every value exactly (each
+        // i8/2^w_frac and Q8.8/256 is representable in f32). quantize_params
+        // may re-select a finer w_frac for the same values, so compare in
+        // value space; the image is stable from the second trip onward.
+        let q = rng_quant(3);
+        let rt = gru::quantize_params(&dequantize_params(&q));
+        let (a, b) = (dequantize_params(&q), dequantize_params(&rt));
+        assert_eq!(a.w_x, b.w_x);
+        assert_eq!(a.w_h, b.w_h);
+        assert_eq!(a.b, b.b);
+        assert_eq!(a.w_fc, b.w_fc);
+        assert_eq!(a.b_fc, b.b_fc);
+        let rt2 = gru::quantize_params(&dequantize_params(&rt));
+        assert_eq!(gru::to_sram_image(&rt2), gru::to_sram_image(&rt));
+    }
+
+    #[test]
+    fn train_state_matches_canonical_abi() {
+        let st = train_state_from(&dequantize_params(&rng_quant(1)));
+        let m = crate::runtime::Manifest::native(1);
+        assert_eq!(st.params.len(), m.param_order.len());
+        for (t, (_, shape)) in st.params.iter().zip(&m.param_shapes) {
+            assert_eq!(&t.shape, shape);
+        }
+        assert_eq!(st.step, 0.0);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_ranges() {
+        assert!(EnrollConfig::design_point(1, 11).validate().is_ok());
+        assert!(EnrollConfig::design_point(1, 0).validate().is_err(), "silence not enrollable");
+        assert!(EnrollConfig::design_point(1, 12).validate().is_err());
+        let mut c = EnrollConfig::design_point(1, 11);
+        c.shots = MAX_SHOTS + 1;
+        assert!(c.validate().is_err());
+        c.shots = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn enrollment_freezes_recurrent_weights() {
+        let backend = NativeBackend::new();
+        let base = rng_quant(5);
+        let out = few_shot(&backend, &base, &tiny_cfg()).expect("enroll");
+        // recurrent params value-identical (w_frac may differ between the
+        // images — compare dequantised); FC head moved
+        let (a, b) = (dequantize_params(&out.params), dequantize_params(&base));
+        assert_eq!(a.w_x, b.w_x, "w_x must stay frozen");
+        assert_eq!(a.w_h, b.w_h, "w_h must stay frozen");
+        assert_eq!(a.b, b.b, "gate biases must stay frozen");
+        assert!(
+            a.w_fc != b.w_fc || a.b_fc != b.b_fc,
+            "FC head never moved — enrollment was a no-op"
+        );
+    }
+
+    #[test]
+    fn enrollment_is_deterministic_per_seed() {
+        let backend = NativeBackend::new();
+        let base = rng_quant(5);
+        let a = few_shot(&backend, &base, &tiny_cfg()).expect("enroll");
+        let b = few_shot(&backend, &base, &tiny_cfg()).expect("enroll");
+        assert_eq!(gru::to_sram_image(&a.params), gru::to_sram_image(&b.params));
+    }
+}

@@ -1,0 +1,38 @@
+//! Per-user customization: few-shot enrollment, versioned weights,
+//! epoch-fenced hot-swap.
+//!
+//! The paper's IC ships one fixed model; this subsystem turns the serving
+//! stack multi-tenant, following the on-chip-learning customization line
+//! of Chiang et al. (PAPERS.md). Three pieces:
+//!
+//! * [`enroll`] — few-shot enrollment: K ≤ 8 recordings of a synthetic
+//!   speaker ([`speaker::SpeakerVoice`]) fine-tune **only the FC output
+//!   layer** through [`Backend::train_step`](crate::runtime::Backend)
+//!   (recurrent weights frozen, Adam moments restored every step), then
+//!   requantise through the chip's integer path. Deterministic end to
+//!   end: same seed → byte-identical SRAM image.
+//! * [`registry`] — content-hashed [`WeightVersion`] ids over the SRAM
+//!   word image, parent lineage, a bounded LRU of resident versions with
+//!   live-session pinning, and typed [`RegistryError`]s that feed the
+//!   crate [`Error`](crate::Error) tree.
+//! * epoch-fenced hot-swap — sessions reference weights by version; the
+//!   [`Coordinator`](crate::coordinator::Coordinator) installs a new
+//!   version at a **frame boundary** without dropping the stream
+//!   ([`crate::coordinator::Coordinator::swap_weights`]). Old weights
+//!   drive frame N, new weights frame N+1; the ΔFIFO is empty and no MAC
+//!   is in flight between frames, so no torn read is possible (DESIGN.md
+//!   §14 explains why the saturating-arith evaluation order makes
+//!   *mid-frame* swaps unsafe).
+//!
+//! The registry and trainer are control-plane code; only the fence
+//! install ([`crate::chip::KwsChip::swap_weights`]) touches the frame
+//! path, and it runs strictly between frames.
+
+pub mod enroll;
+pub mod registry;
+pub mod speaker;
+
+pub use enroll::{batch_tensors, dequantize_params, few_shot, train_state_from};
+pub use enroll::{EnrollConfig, Enrolled, MAX_SHOTS};
+pub use registry::{RegistryError, WeightRegistry, WeightVersion};
+pub use speaker::SpeakerVoice;

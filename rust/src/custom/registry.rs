@@ -1,0 +1,433 @@
+//! Versioned, content-hashed weight registry.
+//!
+//! Every weight set the serving stack can run is identified by a
+//! [`WeightVersion`] — an FNV-1a hash over the *SRAM word image*
+//! ([`gru::to_sram_image`]), i.e. over exactly the bits the chip reads.
+//! Content addressing makes enrollment idempotent: re-enrolling the same
+//! speaker from the same seed reproduces the same image and therefore the
+//! same version id (see the round-trip determinism tests).
+//!
+//! The [`WeightRegistry`] keeps a bounded LRU of *resident* versions
+//! (deserialised [`QuantParams`] behind `Arc`s) plus tombstones for
+//! evicted ids, so lookups distinguish "never registered"
+//! ([`RegistryError::UnknownVersion`]) from "registered but evicted"
+//! ([`RegistryError::Evicted`]). Versions referenced by live stream
+//! sessions are *pinned* and never evicted — if every resident is pinned
+//! the registry temporarily overflows its capacity rather than pulling
+//! weights out from under a session (the bound is on *evictable* versions,
+//! documented in DESIGN.md §14).
+//!
+//! This module is control-plane code: it takes a `Mutex` and allocates.
+//! Nothing here runs on the per-frame hot path — the worker resolves a
+//! version to an `Arc<QuantParams>` *before* any frame is stepped, and the
+//! fence install itself ([`crate::chip::KwsChip::swap_weights`]) touches
+//! the registry not at all.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::accel::gru::{self, QuantParams};
+use crate::util::hist::{AtomicLogHistogram, LogHistogram};
+
+/// Content hash of a quantised weight set: FNV-1a over the little-endian
+/// bytes of the SRAM word image. Two parameter sets compare equal exactly
+/// when the chip would read identical weight bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WeightVersion(u64);
+
+impl WeightVersion {
+    /// Hash a parameter set into its version id (pure function of the
+    /// serialised image; independent of registry state).
+    pub fn of(params: &QuantParams) -> Self {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for word in gru::to_sram_image(params) {
+            for byte in word.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        Self(h)
+    }
+
+    /// The raw 64-bit hash (stable across runs; used in metrics labels).
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+}
+
+impl fmt::Display for WeightVersion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// Typed registry failures. Both variants carry the offending version so
+/// callers (and the crate [`Error`](crate::Error) tree) preserve the
+/// payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegistryError {
+    /// The version was never registered with this registry.
+    UnknownVersion(WeightVersion),
+    /// The version was registered but evicted from the resident set; the
+    /// caller must re-enroll (content addressing makes that reproduce the
+    /// same id).
+    Evicted(WeightVersion),
+}
+
+impl RegistryError {
+    /// The version the failed operation referenced.
+    pub fn version(&self) -> WeightVersion {
+        match self {
+            RegistryError::UnknownVersion(v) | RegistryError::Evicted(v) => *v,
+        }
+    }
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::UnknownVersion(v) => write!(f, "unknown weight version {v}"),
+            RegistryError::Evicted(v) => write!(f, "weight version {v} was evicted (re-enroll to restore)"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// One resident weight set.
+struct Resident {
+    params: Arc<QuantParams>,
+    parent: Option<WeightVersion>,
+    /// live-session pin count: > 0 blocks eviction
+    pins: u64,
+    /// LRU clock value at last touch (insert/get/pin)
+    seq: u64,
+}
+
+struct Inner {
+    residents: HashMap<WeightVersion, Resident>,
+    /// tombstones for evicted versions (value = recorded parent), so
+    /// lookups can answer `Evicted` instead of `UnknownVersion` and
+    /// lineage survives eviction
+    evicted: HashMap<WeightVersion, Option<WeightVersion>>,
+    clock: u64,
+}
+
+/// Bounded LRU of resident weight versions, shared between the
+/// [`Coordinator`](crate::coordinator::Coordinator), its router and its
+/// workers behind an `Arc`.
+pub struct WeightRegistry {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    /// end-to-end enrollment latency (µs), exposed through
+    /// [`Stats`](crate::coordinator::Stats) / `obs::metrics`
+    enroll_latency: AtomicLogHistogram,
+}
+
+impl WeightRegistry {
+    /// Registry bounded to `capacity` *evictable* resident versions
+    /// (clamped to ≥ 1). Pinned versions never count against an eviction
+    /// decision, so the resident set can transiently exceed `capacity`
+    /// when every version is pinned by a live session.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                residents: HashMap::new(),
+                evicted: HashMap::new(),
+                clock: 0,
+            }),
+            capacity: capacity.max(1),
+            enroll_latency: AtomicLogHistogram::new(),
+        }
+    }
+
+    /// Configured resident-set bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Register a weight set, returning its content hash. Idempotent: a
+    /// version already resident is just touched (its first-recorded parent
+    /// wins); an evicted version is resurrected from the new params. May
+    /// evict the least-recently-used *unpinned* resident to stay within
+    /// capacity; never fails.
+    pub fn insert(&self, params: QuantParams, parent: Option<WeightVersion>) -> WeightVersion {
+        let version = WeightVersion::of(&params);
+        let mut inner = self.inner.lock().expect("registry mutex poisoned");
+        inner.clock += 1;
+        let seq = inner.clock;
+        if let Some(r) = inner.residents.get_mut(&version) {
+            r.seq = seq;
+            return version;
+        }
+        // resurrecting an evicted id keeps the originally recorded parent
+        let parent = inner.evicted.remove(&version).unwrap_or(parent);
+        inner.residents.insert(
+            version,
+            Resident { params: Arc::new(params), parent, pins: 0, seq },
+        );
+        while inner.residents.len() > self.capacity {
+            // never evict the version being inserted: an enroll must hand
+            // back an id that is at least momentarily resident/pinnable
+            let victim = inner
+                .residents
+                .iter()
+                .filter(|(v, r)| r.pins == 0 && **v != version)
+                .min_by_key(|(_, r)| r.seq)
+                .map(|(v, _)| *v);
+            match victim {
+                Some(v) => {
+                    let r = inner.residents.remove(&v).expect("victim just found");
+                    inner.evicted.insert(v, r.parent);
+                }
+                // everything pinned: documented overflow, never pull
+                // weights out from under a live session
+                None => break,
+            }
+        }
+        version
+    }
+
+    /// Resolve a version to its parameters (touches the LRU clock).
+    pub fn get(&self, version: WeightVersion) -> Result<Arc<QuantParams>, RegistryError> {
+        let mut inner = self.inner.lock().expect("registry mutex poisoned");
+        inner.clock += 1;
+        let seq = inner.clock;
+        if let Some(r) = inner.residents.get_mut(&version) {
+            r.seq = seq;
+            return Ok(Arc::clone(&r.params));
+        }
+        if inner.evicted.contains_key(&version) {
+            return Err(RegistryError::Evicted(version));
+        }
+        Err(RegistryError::UnknownVersion(version))
+    }
+
+    /// Resolve *and* pin: the version is protected from eviction until a
+    /// matching [`unpin`](Self::unpin). Sessions pin the version they run.
+    pub fn pin(&self, version: WeightVersion) -> Result<Arc<QuantParams>, RegistryError> {
+        let mut inner = self.inner.lock().expect("registry mutex poisoned");
+        inner.clock += 1;
+        let seq = inner.clock;
+        if let Some(r) = inner.residents.get_mut(&version) {
+            r.pins += 1;
+            r.seq = seq;
+            return Ok(Arc::clone(&r.params));
+        }
+        if inner.evicted.contains_key(&version) {
+            return Err(RegistryError::Evicted(version));
+        }
+        Err(RegistryError::UnknownVersion(version))
+    }
+
+    /// Release one pin. Saturating and tolerant of an already-evicted or
+    /// unknown id — unpin runs on session-teardown paths that must not
+    /// fail.
+    pub fn unpin(&self, version: WeightVersion) {
+        let mut inner = self.inner.lock().expect("registry mutex poisoned");
+        if let Some(r) = inner.residents.get_mut(&version) {
+            r.pins = r.pins.saturating_sub(1);
+        }
+    }
+
+    /// Current pin count of a version (0 when absent).
+    pub fn pins(&self, version: WeightVersion) -> u64 {
+        let inner = self.inner.lock().expect("registry mutex poisoned");
+        inner.residents.get(&version).map_or(0, |r| r.pins)
+    }
+
+    /// Number of resident (immediately servable) versions — the
+    /// `deltakws_resident_weight_versions` gauge.
+    pub fn resident_count(&self) -> usize {
+        self.inner.lock().expect("registry mutex poisoned").residents.len()
+    }
+
+    /// Is `version` resident right now?
+    pub fn contains(&self, version: WeightVersion) -> bool {
+        self.inner.lock().expect("registry mutex poisoned").residents.contains_key(&version)
+    }
+
+    /// Recorded parent of a version (resident or evicted); `None` for a
+    /// root version or an id this registry has never seen.
+    pub fn parent(&self, version: WeightVersion) -> Option<WeightVersion> {
+        let inner = self.inner.lock().expect("registry mutex poisoned");
+        if let Some(r) = inner.residents.get(&version) {
+            return r.parent;
+        }
+        inner.evicted.get(&version).copied().flatten()
+    }
+
+    /// Ancestry chain starting at `version` (itself first, then parents up
+    /// to the root), following recorded lineage through tombstones.
+    pub fn lineage(&self, version: WeightVersion) -> Vec<WeightVersion> {
+        let inner = self.inner.lock().expect("registry mutex poisoned");
+        let mut chain = vec![version];
+        let bound = inner.residents.len() + inner.evicted.len() + 1;
+        let mut cur = version;
+        while chain.len() <= bound {
+            let parent = match inner.residents.get(&cur) {
+                Some(r) => r.parent,
+                None => inner.evicted.get(&cur).copied().flatten(),
+            };
+            match parent {
+                Some(p) => {
+                    chain.push(p);
+                    cur = p;
+                }
+                None => break,
+            }
+        }
+        chain
+    }
+
+    /// Record one end-to-end enrollment latency sample (µs).
+    pub fn record_enroll_us(&self, us: u64) {
+        self.enroll_latency.record(us);
+    }
+
+    /// Snapshot of the enrollment latency histogram.
+    pub fn enroll_latency(&self) -> LogHistogram {
+        self.enroll_latency.snapshot()
+    }
+}
+
+impl fmt::Debug for WeightRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WeightRegistry")
+            .field("capacity", &self.capacity)
+            .field("resident", &self.resident_count())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn rng_quant(seed: u64) -> QuantParams {
+        let mut rng = Pcg::new(seed);
+        let mut q = QuantParams::zeroed();
+        q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+        q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+        q
+    }
+
+    #[test]
+    fn version_is_content_addressed() {
+        let a = WeightVersion::of(&rng_quant(1));
+        let b = WeightVersion::of(&rng_quant(1));
+        let c = WeightVersion::of(&rng_quant(2));
+        assert_eq!(a, b, "same content must hash to the same version");
+        assert_ne!(a, c, "different content must not collide");
+        assert_eq!(format!("{a}").len(), 16, "display is 16 hex digits");
+    }
+
+    #[test]
+    fn insert_is_idempotent_and_preserves_lineage() {
+        let reg = WeightRegistry::new(4);
+        let base = reg.insert(rng_quant(1), None);
+        let child = reg.insert(rng_quant(2), Some(base));
+        let again = reg.insert(rng_quant(2), None);
+        assert_eq!(child, again, "content addressing: same params, same id");
+        assert_eq!(reg.parent(child), Some(base), "first-recorded parent wins");
+        assert_eq!(reg.lineage(child), vec![child, base]);
+        assert_eq!(reg.resident_count(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_unpinned() {
+        let reg = WeightRegistry::new(2);
+        let a = reg.insert(rng_quant(1), None);
+        let b = reg.insert(rng_quant(2), None);
+        reg.get(a).expect("a resident"); // touch a → b is now LRU
+        let c = reg.insert(rng_quant(3), None);
+        assert!(reg.contains(a) && reg.contains(c));
+        assert!(!reg.contains(b), "LRU victim must be the cold version");
+        match reg.get(b) {
+            Err(RegistryError::Evicted(v)) => assert_eq!(v, b, "payload preserved"),
+            other => panic!("expected Evicted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pinned_versions_survive_eviction_pressure() {
+        let reg = WeightRegistry::new(2);
+        let a = reg.insert(rng_quant(1), None);
+        let b = reg.insert(rng_quant(2), None);
+        reg.pin(a).expect("pin a");
+        reg.pin(b).expect("pin b");
+        // both residents pinned: capacity overflows rather than evicting
+        // (and the just-inserted version is never its own victim)
+        let c = reg.insert(rng_quant(3), None);
+        assert!(reg.contains(a) && reg.contains(b), "pinned versions evicted");
+        assert!(reg.contains(c), "fresh insert evicted itself under pin pressure");
+        assert_eq!(reg.resident_count(), 3, "documented overflow past capacity");
+        reg.unpin(a);
+        let d = reg.insert(rng_quant(4), None);
+        assert!(!reg.contains(a), "unpinned LRU version must now be evictable");
+        assert!(!reg.contains(c), "overflow drains once pins release");
+        assert!(reg.contains(b) && reg.contains(d));
+        assert_eq!(reg.resident_count(), 2);
+    }
+
+    #[test]
+    fn unknown_vs_evicted_are_distinct() {
+        let reg = WeightRegistry::new(1);
+        let ghost = WeightVersion::of(&rng_quant(99));
+        match reg.get(ghost) {
+            Err(RegistryError::UnknownVersion(v)) => assert_eq!(v, ghost),
+            other => panic!("expected UnknownVersion, got {other:?}"),
+        }
+        let a = reg.insert(rng_quant(1), None);
+        let _b = reg.insert(rng_quant(2), None); // evicts a (capacity 1)
+        match reg.pin(a) {
+            Err(RegistryError::Evicted(v)) => assert_eq!(v, a),
+            other => panic!("expected Evicted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resurrection_restores_recorded_parent() {
+        let reg = WeightRegistry::new(1);
+        let base_params = rng_quant(1);
+        let base = WeightVersion::of(&base_params);
+        let child_params = rng_quant(2);
+        reg.insert(base_params, None);
+        let child = reg.insert(child_params.clone(), Some(base)); // evicts base
+        let _ = reg.insert(rng_quant(3), None); // evicts child
+        assert!(!reg.contains(child));
+        let back = reg.insert(child_params, None); // parent arg lost — tombstone has it
+        assert_eq!(back, child);
+        assert_eq!(reg.parent(child), Some(base), "lineage must survive eviction");
+    }
+
+    #[test]
+    fn unpin_is_saturating_and_teardown_safe() {
+        let reg = WeightRegistry::new(2);
+        let a = reg.insert(rng_quant(1), None);
+        reg.unpin(a); // never pinned: no-op
+        assert_eq!(reg.pins(a), 0);
+        reg.unpin(WeightVersion::of(&rng_quant(7))); // unknown: no-op
+        reg.pin(a).expect("pin");
+        reg.pin(a).expect("pin");
+        assert_eq!(reg.pins(a), 2);
+        reg.unpin(a);
+        assert_eq!(reg.pins(a), 1);
+    }
+
+    #[test]
+    fn enroll_latency_histogram_accumulates() {
+        let reg = WeightRegistry::new(2);
+        assert_eq!(reg.enroll_latency().count(), 0);
+        reg.record_enroll_us(1200);
+        reg.record_enroll_us(3400);
+        let h = reg.enroll_latency();
+        assert_eq!(h.count(), 2);
+        assert!(h.mean() > 0.0);
+    }
+}

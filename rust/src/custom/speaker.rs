@@ -1,0 +1,151 @@
+//! Deterministic synthetic speakers for enrollment experiments.
+//!
+//! The crate's corpus ([`crate::dataset::Dataset`]) hashes `(split,
+//! index)` so train/test never overlap; a [`SpeakerVoice`] does the same
+//! trick one level up: it derives every utterance from `(speaker seed,
+//! class, index)` on a dedicated PRNG stream, giving each synthetic
+//! speaker a reproducible, corpus-disjoint set of recordings. Enrollment
+//! shots, held-out evaluation clips and counter-examples live in disjoint
+//! index ranges, so "train on K shots, evaluate on a held-out track"
+//! is deterministic and leak-free by construction.
+//!
+//! Featurization reuses [`Dataset::features_for`] — the fixed-point FEx
+//! twin — so enrollment sees exactly the Q8.8 activations the chip
+//! produces at inference (the same train/deploy-gap closure the base
+//! trainer relies on).
+
+use crate::audio::{quantize_12b, synth_utterance};
+use crate::dataset::{Dataset, FeatSeq, Utterance};
+use crate::fex::{Fex, FexConfig};
+use crate::util::prng::Pcg;
+
+/// PRNG stream id separating speaker synthesis from the train/test corpus
+/// streams (`"SPKR"`).
+const SPEAKER_STREAM: u64 = 0x5350_4b52;
+
+/// Index base for held-out evaluation clips (disjoint from enrollment
+/// shots at indices `0..k`).
+pub const HOLDOUT_BASE: usize = 0x1000;
+
+/// Index base for counter-example clips (silence/unknown fillers mixed
+/// into the enrollment batch to keep the FC head from collapsing onto the
+/// target class).
+pub const COUNTER_BASE: usize = 0x2000;
+
+/// One deterministic synthetic speaker, identified by a seed.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeakerVoice {
+    /// Speaker identity: same seed, same voice, same recordings.
+    pub seed: u64,
+}
+
+impl SpeakerVoice {
+    /// A speaker identified by `seed`.
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// The `index`-th recording of `class` by this speaker (12-bit audio).
+    /// Deterministic and disjoint across `(seed, class, index)`.
+    pub fn utterance(&self, class: usize, index: usize) -> Utterance {
+        let mix = (class as u64)
+            .wrapping_mul(0xA076_1D64_78BD_642F)
+            .wrapping_add((index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Pcg::with_stream(self.seed ^ mix, SPEAKER_STREAM);
+        let audio = synth_utterance(class, &mut rng);
+        Utterance { label: class, audio12: quantize_12b(&audio) }
+    }
+
+    /// The K enrollment shots for `class` (indices `0..k`).
+    pub fn enrollment_set(&self, class: usize, k: usize) -> Vec<Utterance> {
+        (0..k).map(|i| self.utterance(class, i)).collect()
+    }
+
+    /// `n` held-out evaluation clips for `class`, disjoint from every
+    /// enrollment shot (indices `HOLDOUT_BASE..`).
+    pub fn holdout(&self, class: usize, n: usize) -> Vec<Utterance> {
+        (0..n).map(|i| self.utterance(class, HOLDOUT_BASE + i)).collect()
+    }
+
+    /// `n` counter-example clips alternating silence (class 0) and the
+    /// unknown-word pool (class 1), indices `COUNTER_BASE..`.
+    pub fn counter_set(&self, n: usize) -> Vec<Utterance> {
+        (0..n).map(|i| self.utterance(i % 2, COUNTER_BASE + i)).collect()
+    }
+
+    /// Featurize recordings through the fixed-point FEx twin (fresh FEx,
+    /// reset between utterances by [`Dataset::features_for`]).
+    pub fn features(&self, utts: &[Utterance]) -> Vec<FeatSeq> {
+        let ds = Dataset::new(self.seed);
+        let mut fex = Fex::new(FexConfig::design_point());
+        utts.iter().map(|u| ds.features_for(&mut fex, u)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Split;
+
+    #[test]
+    fn speaker_is_deterministic() {
+        let a = SpeakerVoice::new(7).utterance(11, 3);
+        let b = SpeakerVoice::new(7).utterance(11, 3);
+        assert_eq!(a.audio12, b.audio12);
+        assert_eq!(a.label, 11);
+    }
+
+    #[test]
+    fn speakers_classes_and_indices_are_disjoint() {
+        let v = SpeakerVoice::new(7);
+        assert_ne!(v.utterance(11, 0).audio12, v.utterance(11, 1).audio12);
+        assert_ne!(v.utterance(11, 0).audio12, v.utterance(10, 0).audio12);
+        assert_ne!(
+            v.utterance(11, 0).audio12,
+            SpeakerVoice::new(8).utterance(11, 0).audio12
+        );
+    }
+
+    #[test]
+    fn shots_holdout_and_counters_do_not_overlap() {
+        let v = SpeakerVoice::new(3);
+        let shots = v.enrollment_set(11, 4);
+        let held = v.holdout(11, 4);
+        let counters = v.counter_set(4);
+        assert_eq!(shots.len(), 4);
+        assert_eq!(held.len(), 4);
+        for s in &shots {
+            for h in &held {
+                assert_ne!(s.audio12, h.audio12, "holdout leaked into enrollment");
+            }
+        }
+        assert!(counters.iter().all(|c| c.label <= 1), "counters are silence/unknown");
+    }
+
+    #[test]
+    fn speaker_clips_are_disjoint_from_the_corpus() {
+        let v = SpeakerVoice::new(42);
+        let ds = Dataset::new(42);
+        let speaker = v.utterance(11, 0);
+        for i in 0..24 {
+            let corpus = ds.utterance(Split::Train, i);
+            if corpus.label == speaker.label {
+                assert_ne!(corpus.audio12, speaker.audio12);
+            }
+        }
+    }
+
+    #[test]
+    fn features_match_chip_convention() {
+        let v = SpeakerVoice::new(5);
+        let feats = v.features(&v.enrollment_set(11, 1));
+        assert_eq!(feats.len(), 1);
+        assert_eq!(feats[0].label, 11);
+        assert_eq!(feats[0].feats.len(), crate::FRAMES_PER_DECISION);
+        for f in &feats[0].feats {
+            for &q in f.iter() {
+                assert!((0..512).contains(&(q as i64)), "Q8.8 activation {q} out of range");
+            }
+        }
+    }
+}

@@ -28,6 +28,7 @@
 use std::fmt;
 
 use crate::coordinator::{Request, Ticket};
+use crate::custom::RegistryError;
 
 /// Crate-wide error type: every typed failure the serving and
 /// construction APIs can report.
@@ -49,6 +50,10 @@ pub enum Error {
     Wait(WaitError),
     /// The chip twin refused input (see [`ChipError`]).
     Chip(ChipError),
+    /// A weight-version lookup failed (see
+    /// [`RegistryError`](crate::custom::RegistryError); the offending
+    /// version rides along).
+    Registry(RegistryError),
 }
 
 impl Error {
@@ -68,6 +73,7 @@ impl fmt::Display for Error {
             Error::StreamPush(e) => write!(f, "{e}"),
             Error::Wait(e) => write!(f, "{e}"),
             Error::Chip(e) => write!(f, "{e}"),
+            Error::Registry(e) => write!(f, "{e}"),
         }
     }
 }
@@ -80,7 +86,14 @@ impl std::error::Error for Error {
             Error::StreamPush(e) => Some(e),
             Error::Wait(e) => Some(e),
             Error::Chip(e) => Some(e),
+            Error::Registry(e) => Some(e),
         }
+    }
+}
+
+impl From<RegistryError> for Error {
+    fn from(e: RegistryError) -> Self {
+        Error::Registry(e)
     }
 }
 
@@ -120,20 +133,29 @@ pub enum SubmitError {
     /// The coordinator has shut down (or every worker lane is
     /// disconnected): permanent. Stop retrying.
     Closed(Request),
+    /// The request named a [`WeightVersion`](crate::custom::WeightVersion)
+    /// the registry cannot serve (never registered, or evicted under LRU
+    /// pressure — the [`RegistryError`] says which). Permanent for this
+    /// version: re-enroll or retarget, don't retry.
+    UnknownWeights(Request, RegistryError),
 }
 
 impl SubmitError {
     /// Recover the rejected request (e.g. to resubmit it).
     pub fn into_request(self) -> Request {
         match self {
-            SubmitError::QueueFull(r) | SubmitError::Closed(r) => r,
+            SubmitError::QueueFull(r)
+            | SubmitError::Closed(r)
+            | SubmitError::UnknownWeights(r, _) => r,
         }
     }
 
     /// Borrow the rejected request.
     pub fn request(&self) -> &Request {
         match self {
-            SubmitError::QueueFull(r) | SubmitError::Closed(r) => r,
+            SubmitError::QueueFull(r)
+            | SubmitError::Closed(r)
+            | SubmitError::UnknownWeights(r, _) => r,
         }
     }
 
@@ -146,6 +168,12 @@ impl SubmitError {
     pub fn is_closed(&self) -> bool {
         matches!(self, SubmitError::Closed(_))
     }
+
+    /// True when the request named an unresolvable weight version
+    /// (not retryable as-is; the cause is in the [`RegistryError`]).
+    pub fn is_unknown_weights(&self) -> bool {
+        matches!(self, SubmitError::UnknownWeights(_, _))
+    }
 }
 
 impl fmt::Display for SubmitError {
@@ -157,11 +185,21 @@ impl fmt::Display for SubmitError {
             SubmitError::Closed(r) => {
                 write!(f, "submit rejected: coordinator closed (request {}, stream {})", r.id, r.stream)
             }
+            SubmitError::UnknownWeights(r, e) => {
+                write!(f, "submit rejected: {e} (request {}, stream {})", r.id, r.stream)
+            }
         }
     }
 }
 
-impl std::error::Error for SubmitError {}
+impl std::error::Error for SubmitError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SubmitError::UnknownWeights(_, e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 /// Why a [`StreamSession`](crate::coordinator::StreamSession) chunk push
 /// failed. The chunk rides along in every variant.

@@ -52,6 +52,13 @@
 //!   fixed-size log-bucketed latency histograms, O(1) memory in request
 //!   count) and validated by the [`coordinator::soak`] sustained-load
 //!   harness.
+//! * [`custom`] — per-user customization: few-shot FC-head enrollment
+//!   over frozen recurrent weights ([`custom::enroll`]), a content-hashed
+//!   versioned weight registry with lineage, LRU bounds and live-session
+//!   pinning ([`custom::registry`]), and the epoch-fenced hot-swap that
+//!   installs a new [`custom::WeightVersion`] on a live stream at a frame
+//!   boundary without dropping a frame
+//!   ([`coordinator::Coordinator::swap_weights`]).
 //! * [`probe`] — zero-cost instrumentation layer: the datapath is generic
 //!   over a [`probe::ChipProbe`]; [`probe::NoProbe`] monomorphizes to the
 //!   lean allocation-free hot path and [`probe::TraceProbe`] reconstructs
@@ -81,6 +88,7 @@ pub mod baseline;
 pub mod chip;
 pub mod config;
 pub mod coordinator;
+pub mod custom;
 pub mod dataset;
 pub mod energy;
 pub mod error;

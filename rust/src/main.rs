@@ -8,6 +8,7 @@
 //! deltakws exp    <fig6|fig7|fig10|fig11|fig12|fig13|table1|table2|ablation|all>
 //! deltakws serve  [--workers N] [--requests N] [--metrics-out BASE]
 //!                 [--metrics-interval-s S]
+//! deltakws enroll [--speaker S] [--target K] [--shots N] [--steps N]
 //! deltakws info
 //! ```
 //!
@@ -182,6 +183,13 @@ fn run() -> anyhow::Result<()> {
             let metrics_interval_s = args.num::<u64>("metrics-interval-s")?.unwrap_or(0);
             cmd_serve(&cfg, requests, &metrics_out, metrics_interval_s)
         }
+        "enroll" => {
+            let speaker = args.num::<u64>("speaker")?.unwrap_or(7);
+            let target = args.num::<usize>("target")?.unwrap_or(11);
+            let shots = args.num::<usize>("shots")?;
+            let steps = args.num::<usize>("steps")?;
+            cmd_enroll(&cfg, speaker, target, shots, steps)
+        }
         "info" => cmd_info(&cfg),
         "help" | "--help" | "-h" => {
             print_help();
@@ -309,6 +317,7 @@ fn cmd_serve(
                 audio12: utt.audio12,
                 label: Some(utt.label),
                 trace: false,
+                weights: None,
             }
         });
         let r = coord
@@ -342,6 +351,69 @@ fn cmd_serve(
         "simulated chip: {:.1}% sparsity over {} frames",
         stats.activity.sparsity() * 100.0,
         stats.activity.frames
+    );
+    Ok(())
+}
+
+/// Few-shot per-user enrollment against the configured base weights:
+/// registers the fine-tuned FC head as a new version in the pool's
+/// registry and reports the held-out effect on the synthetic speaker.
+fn cmd_enroll(
+    cfg: &RunConfig,
+    speaker: u64,
+    target: usize,
+    shots: Option<usize>,
+    steps: Option<usize>,
+) -> anyhow::Result<()> {
+    let params = exp::ensure_weights(cfg)?;
+    let chip_cfg = cfg.chip_config_checked()?;
+    let coord = coordinator::Coordinator::builder(params, chip_cfg.clone())
+        .workers(cfg.workers.max(1))
+        .build()
+        .context("invalid serving configuration")?;
+    let mut ecfg = deltakws::custom::EnrollConfig::design_point(speaker, target);
+    if let Some(v) = shots {
+        ecfg.shots = v;
+    }
+    if let Some(v) = steps {
+        ecfg.steps = v;
+    }
+    println!(
+        "enrolling speaker {speaker} on '{}' ({} shots + {} counters, {} steps) ...",
+        deltakws::CLASS_LABELS[target],
+        ecfg.shots,
+        ecfg.counter_shots,
+        ecfg.steps
+    );
+    let out = coord.enroll(None, ecfg)?;
+    println!("  version    {}  (parent {})", out.version, out.parent);
+    println!(
+        "  trained    {} steps in {:.1} ms  (final loss {:.4})",
+        out.steps,
+        out.latency_us as f64 / 1e3,
+        out.final_loss
+    );
+    // held-out effect: chip-twin accuracy on the speaker's unseen clips
+    let voice = deltakws::custom::SpeakerVoice::new(speaker);
+    let held = voice.holdout(target, 12);
+    let acc = |p: &deltakws::accel::gru::QuantParams| {
+        let mut chip = KwsChip::new(p.clone(), chip_cfg.clone());
+        held.iter().filter(|u| chip.process_utterance(&u.audio12).class == target).count()
+    };
+    let base = coord.registry().get(coord.base_version())?;
+    let enrolled = coord.registry().get(out.version)?;
+    println!(
+        "  held-out   '{}' {}/{} base -> {}/{} enrolled",
+        deltakws::CLASS_LABELS[target],
+        acc(&base),
+        held.len(),
+        acc(&enrolled),
+        held.len()
+    );
+    println!(
+        "  registry   {} resident versions (lineage: {:?})",
+        coord.registry().resident_count(),
+        coord.registry().lineage(out.version)
     );
     Ok(())
 }
@@ -400,6 +472,7 @@ COMMANDS:
   exp       regenerate paper experiments: fig6 fig7 fig10 fig11 fig12 fig13
             table1 table2 ablation all
   serve     run the streaming coordinator demo
+  enroll    few-shot per-user enrollment (FC head only) into the registry
   info      print system/model/area info
 
 FLAGS (all commands):

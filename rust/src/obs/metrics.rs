@@ -24,7 +24,7 @@ use super::recorder::RecorderStats;
 
 /// Schema tag stamped on every snapshot (bump on any breaking change to
 /// field names, label sets or bucket layout).
-pub const METRICS_SCHEMA: &str = "deltakws-metrics/1";
+pub const METRICS_SCHEMA: &str = "deltakws-metrics/2";
 
 /// `le` bounds (µs) for the exposed latency histograms. All powers of two
 /// ≥ 32, i.e. exact [`LogHistogram`] bucket boundaries, so the cumulative
@@ -86,6 +86,13 @@ impl MetricsSnapshot {
             s.stream_events_dropped,
         );
         counter_u64(&mut out, "deltakws_session_bytes", "gauge", s.session_bytes);
+        counter_u64(&mut out, "deltakws_weight_swaps_total", "counter", s.weight_swaps);
+        counter_u64(
+            &mut out,
+            "deltakws_resident_weight_versions",
+            "gauge",
+            s.resident_versions,
+        );
 
         counter_u64(&mut out, "deltakws_chip_frames_total", "counter", a.frames);
         counter_u64(&mut out, "deltakws_chip_gated_frames_total", "counter", a.gated_frames);
@@ -122,6 +129,7 @@ impl MetricsSnapshot {
 
         histogram(&mut out, "deltakws_latency_us", &s.latency);
         histogram(&mut out, "deltakws_chunk_latency_us", &s.chunk_latency);
+        histogram(&mut out, "deltakws_enroll_latency_us", &s.enroll_latency);
 
         if let Some(r) = &self.recorder {
             counter_u64(&mut out, "deltakws_recorder_events_total", "counter", r.events);
@@ -166,6 +174,7 @@ impl MetricsSnapshot {
                     ("spilled", jnum(s.spilled)),
                     ("fused_batches", jnum(s.fused_batches)),
                     ("stream_events_dropped", jnum(s.stream_events_dropped)),
+                    ("weight_swaps", jnum(s.weight_swaps)),
                 ]),
             ),
             (
@@ -174,6 +183,7 @@ impl MetricsSnapshot {
                     ("accuracy", Json::num(s.accuracy())),
                     ("session_bytes", jnum(s.session_bytes)),
                     ("telemetry_bytes", jnum(s.telemetry_bytes() as u64)),
+                    ("resident_weight_versions", jnum(s.resident_versions)),
                 ]),
             ),
             (
@@ -197,6 +207,7 @@ impl MetricsSnapshot {
             ),
             ("latency_us", hist_json(&s.latency)),
             ("chunk_latency_us", hist_json(&s.chunk_latency)),
+            ("enroll_latency_us", hist_json(&s.enroll_latency)),
             (
                 "per_worker",
                 Json::arr(s.per_worker.iter().enumerate().map(|(w, lane)| {

@@ -162,6 +162,17 @@ impl StreamPipeline {
         self.chip.pending_bytes() + self.detector.window_bytes()
     }
 
+    /// Epoch-fenced weight hot-swap: install a new weight version on the
+    /// live pipeline without dropping a frame. [`push_audio`] drains every
+    /// completed frame before returning, so between pushes the chip sits
+    /// exactly at a frame boundary — this call is therefore always a
+    /// clean fence (old weights drove every polled frame, new weights
+    /// drive every following one). VAD and detector state persist: a
+    /// detection straddling the fence still resolves.
+    pub fn swap_weights(&mut self, params: QuantParams) {
+        self.chip.swap_weights(params);
+    }
+
     /// Restore power-on state (keeps weights/config; telemetry counters on
     /// the chip keep aggregating, VAD/detector telemetry clears).
     pub fn reset(&mut self) {

@@ -86,6 +86,7 @@ fn coordinator_under_load_conserves_requests() {
             audio12: utt.audio12,
             label: Some(utt.label),
             trace: false,
+            weights: None,
         };
         loop {
             match coord.submit(req) {
@@ -123,7 +124,14 @@ fn coordinator_survives_worker_stall_mid_run() {
     for i in 0..4 {
         let utt = ds.utterance(Split::Test, i);
         let t = coord
-            .submit(Request { id: 0, stream: i as u64, audio12: utt.audio12, label: None, trace: false })
+            .submit(Request {
+                id: 0,
+                stream: i as u64,
+                audio12: utt.audio12,
+                label: None,
+                trace: false,
+                weights: None,
+            })
             .unwrap();
         tickets.push(t);
     }
@@ -132,7 +140,14 @@ fn coordinator_survives_worker_stall_mid_run() {
     for i in 4..10 {
         let utt = ds.utterance(Split::Test, i);
         if let Ok(t) = coord
-            .submit(Request { id: 0, stream: i as u64, audio12: utt.audio12, label: None, trace: false })
+            .submit(Request {
+                id: 0,
+                stream: i as u64,
+                audio12: utt.audio12,
+                label: None,
+                trace: false,
+                weights: None,
+            })
         {
             tickets.push(t);
         }

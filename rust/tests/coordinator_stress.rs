@@ -47,6 +47,7 @@ fn short_request(stream: u64, seed: u64) -> Request {
         audio12: deltakws::audio::quantize_12b(&audio[..1024]),
         label: Some(label),
         trace: false,
+        weights: None,
     }
 }
 
@@ -197,7 +198,7 @@ fn stress_multi_client_ticket_isolation() {
                                 req = back;
                                 std::thread::sleep(Duration::from_millis(1));
                             }
-                            Err(SubmitError::Closed(_)) => panic!("pool died mid-run"),
+                            Err(e) => panic!("pool died mid-run: {e}"),
                         }
                     }
                 }

@@ -1,0 +1,267 @@
+//! Per-user customization integration (PR 9): few-shot enrollment, the
+//! versioned weight registry, and the epoch-fenced mid-stream hot-swap.
+//!
+//! The acceptance surface of the customization tentpole:
+//! * the epoch fence is *bit-exact*: after a mid-stream swap, every
+//!   post-fence frame is bit-identical to a fresh accelerator on the new
+//!   version seeded from the captured fence state — and no frame is
+//!   dropped or duplicated across the fence;
+//! * a coordinator stream survives the swap live: `Closed` accounts for
+//!   every pushed frame, `WeightsSwapped` acknowledges the fence, and
+//!   detections flip their `weights` tag at the fence;
+//! * enrollment is deterministic: two runs from the same seed produce a
+//!   byte-identical SRAM image and therefore the same content-hashed
+//!   [`WeightVersion`];
+//! * K ≤ 8 enrollment measurably improves held-out target-keyword
+//!   accuracy for the synthetic speaker vs the base model;
+//! * LRU pressure never evicts a pinned version (pool base, live
+//!   sessions), and eviction/unknown-version failures surface through the
+//!   typed error tree with the version payload preserved.
+
+use deltakws::accel::gru::QuantParams;
+use deltakws::chip::{ChipConfig, KwsChip};
+use deltakws::coordinator::{Coordinator, StreamEvent};
+use deltakws::custom::{few_shot, EnrollConfig, RegistryError, SpeakerVoice, WeightVersion};
+use deltakws::runtime::NativeBackend;
+use deltakws::util::prng::Pcg;
+use deltakws::Error;
+
+fn rng_quant(seed: u64) -> QuantParams {
+    let mut rng = Pcg::new(seed);
+    let mut q = QuantParams::zeroed();
+    q.w_x.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q.w_h.iter_mut().flatten().for_each(|w| *w = (rng.below(32) as i8) - 16);
+    q.w_fc.iter_mut().flatten().for_each(|w| *w = (rng.below(64) as i8) - 32);
+    q
+}
+
+/// Drain every buffered frame, returning the weight-dependent outputs.
+fn drain(chip: &mut KwsChip) -> Vec<([i64; deltakws::NUM_CLASSES], usize, u64)> {
+    let mut out = Vec::new();
+    while let Some(f) = chip.poll_frame() {
+        out.push((f.logits, f.fired, f.cycles));
+    }
+    out
+}
+
+#[test]
+fn mid_stream_swap_is_epoch_fenced_and_bit_exact() {
+    let base = rng_quant(1);
+    let next = rng_quant(2);
+    let cfg = ChipConfig::design_point();
+    let mut rng = Pcg::new(77);
+    let audio = deltakws::audio::quantize_12b(&deltakws::audio::synth_utterance(11, &mut rng));
+    let half = audio.len() / 2;
+
+    // chip A: run the first half on the base weights, swap at the frame
+    // boundary, run the second half on the new weights
+    let mut a = KwsChip::new(base, cfg.clone());
+    a.push_samples(&audio[..half]).expect("first half fits");
+    let pre_fence = drain(&mut a);
+    let fence_state = a.accel.state().clone();
+    a.swap_weights(next.clone());
+    a.push_samples(&audio[half..]).expect("second half fits");
+    let post_a = drain(&mut a);
+
+    // chip B: a fresh session on the new version, seeded with the fence
+    // state. The same audio runs through its FEx first (feature
+    // extraction is weight-independent, so the filter state matches),
+    // then the captured recurrent state replaces whatever B computed.
+    let mut b = KwsChip::new(next, cfg);
+    b.push_samples(&audio[..half]).expect("first half fits");
+    let discard = drain(&mut b);
+    assert_eq!(discard.len(), pre_fence.len(), "frame framing diverged before the fence");
+    b.accel.set_state(fence_state);
+    b.push_samples(&audio[half..]).expect("second half fits");
+    let post_b = drain(&mut b);
+
+    // zero dropped or duplicated frames across the fence ...
+    assert_eq!(
+        pre_fence.len() + post_a.len(),
+        deltakws::FRAMES_PER_DECISION,
+        "frames lost or duplicated across the swap"
+    );
+    // ... and bit-identical post-fence outputs and final recurrent state
+    assert_eq!(post_a, post_b, "post-fence frames diverged from the fresh session");
+    assert_eq!(a.accel.state(), b.accel.state(), "final recurrent state diverged");
+}
+
+#[test]
+fn coordinator_stream_survives_the_swap_with_full_accounting() {
+    let coord = Coordinator::builder(rng_quant(3), ChipConfig::design_point())
+        .workers(1)
+        .build()
+        .expect("valid pool");
+    let v2 = coord.registry().insert(rng_quant(4), Some(coord.base_version()));
+    let base_version = coord.base_version();
+
+    let mut rng = Pcg::new(9);
+    let audio = deltakws::audio::quantize_12b(&deltakws::audio::synth_utterance(5, &mut rng));
+    let half = audio.len() / 2;
+
+    let sess = coord.open_stream(0);
+    sess.push_blocking(audio[..half].to_vec()).expect("pool alive");
+    coord.swap_weights(&sess, v2).expect("swap accepted");
+    sess.push_blocking(audio[half..].to_vec()).expect("pool alive");
+    let events = sess.close();
+
+    let mut fence_frame = None;
+    let mut closed_frames = None;
+    for e in &events {
+        match e {
+            StreamEvent::WeightsSwapped { version, frame, .. } => {
+                assert_eq!(*version, v2, "fence installed the wrong version");
+                fence_frame = Some(*frame);
+            }
+            StreamEvent::Closed { frames, .. } => closed_frames = Some(*frames),
+            StreamEvent::Detection { weights, .. } => {
+                // the serving tag flips exactly at the fence
+                let expect = if fence_frame.is_none() { base_version } else { v2 };
+                assert_eq!(*weights, expect, "detection served by the wrong version");
+            }
+        }
+    }
+    let fence = fence_frame.expect("swap never acknowledged");
+    let total = closed_frames.expect("no close event");
+    assert_eq!(
+        total,
+        deltakws::FRAMES_PER_DECISION as u64,
+        "frames dropped or duplicated across the live swap"
+    );
+    assert!(fence <= total, "fence frame beyond the stream");
+
+    let stats = coord.stats();
+    assert_eq!(stats.weight_swaps, 1, "swap not counted");
+    assert!(stats.resident_versions >= 2);
+    assert_eq!(coord.registry().pins(v2), 0, "session pin leaked after close");
+}
+
+#[test]
+fn enrolling_twice_from_the_same_seed_is_byte_identical() {
+    let backend = NativeBackend::new();
+    let base = rng_quant(5);
+    let mut cfg = EnrollConfig::design_point(9, 10);
+    cfg.steps = 6; // determinism is step-count independent; keep it quick
+    let a = few_shot(&backend, &base, &cfg).expect("enrollment");
+    let b = few_shot(&backend, &base, &cfg).expect("enrollment");
+    assert_eq!(
+        deltakws::accel::gru::to_sram_image(&a.params),
+        deltakws::accel::gru::to_sram_image(&b.params),
+        "same seed, different SRAM image"
+    );
+    assert_eq!(
+        WeightVersion::of(&a.params),
+        WeightVersion::of(&b.params),
+        "content addressing broke"
+    );
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.final_loss, b.final_loss);
+}
+
+#[test]
+fn enrollment_improves_heldout_target_accuracy() {
+    let backend = NativeBackend::new();
+    let base = rng_quant(6);
+    let cfg = EnrollConfig::design_point(9, 11);
+    let enrolled = few_shot(&backend, &base, &cfg).expect("enrollment");
+
+    let chip_cfg = ChipConfig::design_point();
+    let voice = SpeakerVoice::new(9);
+    let held = voice.holdout(11, 16);
+    let hits = |p: &QuantParams| {
+        let mut chip = KwsChip::new(p.clone(), chip_cfg.clone());
+        held.iter().filter(|u| chip.process_utterance(&u.audio12).class == 11).count()
+    };
+    let (before, after) = (hits(&base), hits(&enrolled.params));
+    assert!(
+        after > before,
+        "enrollment did not improve held-out accuracy: {before}/16 -> {after}/16"
+    );
+    assert!(
+        enrolled.final_loss.is_finite() && enrolled.final_loss >= 0.0,
+        "bad final loss {}",
+        enrolled.final_loss
+    );
+}
+
+#[test]
+fn coordinator_enroll_registers_lineage_and_is_idempotent() {
+    let coord = Coordinator::builder(rng_quant(7), ChipConfig::design_point())
+        .workers(1)
+        .build()
+        .expect("valid pool");
+    let mut cfg = EnrollConfig::design_point(4, 9);
+    cfg.steps = 4;
+    let first = coord.enroll(None, cfg.clone()).expect("enrollment");
+    assert_eq!(first.parent, coord.base_version());
+    assert_eq!(
+        coord.registry().lineage(first.version),
+        vec![first.version, coord.base_version()],
+        "lineage broken"
+    );
+    // deterministic: enrolling again lands on the very same version id
+    let second = coord.enroll(None, cfg).expect("enrollment");
+    assert_eq!(second.version, first.version, "same seed minted a new version");
+    let stats = coord.stats();
+    assert_eq!(stats.enroll_latency.count(), 2, "enrollment latency not recorded");
+    assert!(stats.resident_versions >= 2);
+
+    // unknown parent: typed Error::Registry with the payload preserved
+    let bogus = WeightVersion::of(&rng_quant(404));
+    match coord.enroll(Some(bogus), EnrollConfig::design_point(4, 9)) {
+        Err(e) => match e.downcast_ref::<Error>() {
+            Some(Error::Registry(r)) => {
+                assert!(matches!(r, RegistryError::UnknownVersion(_)));
+                assert_eq!(r.version(), bogus, "version payload lost");
+            }
+            other => panic!("expected Error::Registry, got {other:?}"),
+        },
+        Ok(_) => panic!("unknown parent accepted"),
+    }
+}
+
+#[test]
+fn lru_pressure_never_evicts_pinned_versions() {
+    let coord = Coordinator::builder(rng_quant(8), ChipConfig::design_point())
+        .workers(1)
+        .registry_capacity(2)
+        .build()
+        .expect("valid pool");
+    let reg = coord.registry();
+    let v2 = reg.insert(rng_quant(20), Some(coord.base_version()));
+    let sess = coord.open_stream_with_weights(0, None, v2).expect("v2 resident");
+    assert!(reg.pins(v2) >= 1, "open_stream_with_weights must pin");
+
+    // churn far past capacity: only unpinned versions may be evicted
+    let churn: Vec<WeightVersion> = (0..6).map(|i| reg.insert(rng_quant(100 + i), None)).collect();
+    assert!(reg.contains(coord.base_version()), "pool base evicted");
+    assert!(reg.contains(v2), "live session's pinned version evicted");
+    assert!(reg.get(v2).is_ok());
+
+    // the oldest churn version is gone — Evicted, with the id preserved
+    let evicted = churn[0];
+    assert!(!reg.contains(evicted), "LRU never evicted under pressure");
+    let err = reg.get(evicted).expect_err("evicted version still resident");
+    assert!(matches!(err, RegistryError::Evicted(_)), "wrong error: {err}");
+    assert_eq!(err.version(), evicted, "version payload lost");
+
+    // ... and through the serving surface as the typed Error tree
+    match coord.swap_weights(&sess, evicted) {
+        Err(Error::Registry(e)) => assert_eq!(e.version(), evicted),
+        other => panic!("expected Error::Registry(Evicted), got {other:?}"),
+    }
+    let bogus = WeightVersion::of(&rng_quant(500));
+    match coord.swap_weights(&sess, bogus) {
+        Err(Error::Registry(RegistryError::UnknownVersion(v))) => assert_eq!(v, bogus),
+        other => panic!("expected UnknownVersion, got {other:?}"),
+    }
+
+    // re-registering an evicted version resurrects it (content hash and
+    // lineage unchanged)
+    let back = reg.insert(rng_quant(100), None);
+    assert_eq!(back, evicted, "resurrection changed the content hash");
+    assert!(reg.get(evicted).is_ok());
+
+    sess.close();
+    assert_eq!(reg.pins(v2), 0, "session pin leaked after close");
+}

@@ -33,6 +33,8 @@ fn synthetic_stats() -> Stats {
     latency.record(5_000);
     let mut chunk_latency = LogHistogram::new();
     chunk_latency.record(50);
+    let mut enroll_latency = LogHistogram::new();
+    enroll_latency.record(200_000);
     Stats {
         completed: 10,
         correct: 6,
@@ -59,6 +61,9 @@ fn synthetic_stats() -> Stats {
         fused_batches: 1,
         stream_events_dropped: 4,
         session_bytes: 512,
+        weight_swaps: 5,
+        resident_versions: 2,
+        enroll_latency,
         per_worker: vec![
             LaneStats { completed: 7, spilled_in: 1, pinned_full: 2, stream_chunks: 5 },
             LaneStats { completed: 3, spilled_in: 2, pinned_full: 0, stream_chunks: 9 },
@@ -97,6 +102,8 @@ fn prometheus_type_lines_are_pinned() {
         "# TYPE deltakws_fused_batches_total counter",
         "# TYPE deltakws_stream_events_dropped_total counter",
         "# TYPE deltakws_session_bytes gauge",
+        "# TYPE deltakws_weight_swaps_total counter",
+        "# TYPE deltakws_resident_weight_versions gauge",
         "# TYPE deltakws_chip_frames_total counter",
         "# TYPE deltakws_chip_gated_frames_total counter",
         "# TYPE deltakws_chip_mac_ops_total counter",
@@ -113,6 +120,7 @@ fn prometheus_type_lines_are_pinned() {
         "# TYPE deltakws_worker_stream_chunks_total counter",
         "# TYPE deltakws_latency_us histogram",
         "# TYPE deltakws_chunk_latency_us histogram",
+        "# TYPE deltakws_enroll_latency_us histogram",
     ];
     assert_eq!(types, expected, "TYPE line set/order drifted — schema break");
 }
@@ -132,6 +140,8 @@ fn prometheus_integer_samples_are_exact() {
         "deltakws_fused_batches_total 1",
         "deltakws_stream_events_dropped_total 4",
         "deltakws_session_bytes 512",
+        "deltakws_weight_swaps_total 5",
+        "deltakws_resident_weight_versions 2",
         "deltakws_chip_frames_total 620",
         "deltakws_chip_gated_frames_total 155",
         "deltakws_chip_mac_ops_total 1000",
@@ -181,6 +191,12 @@ fn prometheus_histograms_cumulate_exactly() {
     assert!(has_line(&text, "deltakws_chunk_latency_us_bucket{le=\"+Inf\"} 1"));
     assert!(has_line(&text, "deltakws_chunk_latency_us_sum 50"));
     assert!(has_line(&text, "deltakws_chunk_latency_us_count 1"));
+    // enrollment sample 200_000 µs: above 131072, below 524288
+    assert!(has_line(&text, "deltakws_enroll_latency_us_bucket{le=\"131072\"} 0"));
+    assert!(has_line(&text, "deltakws_enroll_latency_us_bucket{le=\"524288\"} 1"));
+    assert!(has_line(&text, "deltakws_enroll_latency_us_bucket{le=\"+Inf\"} 1"));
+    assert!(has_line(&text, "deltakws_enroll_latency_us_sum 200000"));
+    assert!(has_line(&text, "deltakws_enroll_latency_us_count 1"));
 }
 
 fn key_set(j: &Json) -> Vec<String> {
@@ -201,6 +217,7 @@ fn json_key_sets_are_pinned() {
             "captured_us",
             "chunk_latency_us",
             "counters",
+            "enroll_latency_us",
             "gauges",
             "latency_us",
             "per_worker",
@@ -221,11 +238,12 @@ fn json_key_sets_are_pinned() {
             "rejected_full",
             "spilled",
             "stream_events_dropped",
+            "weight_swaps",
         ]
     );
     assert_eq!(
         key_set(doc.get("gauges").unwrap()),
-        ["accuracy", "session_bytes", "telemetry_bytes"]
+        ["accuracy", "resident_weight_versions", "session_bytes", "telemetry_bytes"]
     );
     assert_eq!(
         key_set(doc.get("activity").unwrap()),
@@ -246,7 +264,7 @@ fn json_key_sets_are_pinned() {
             "total_x",
         ]
     );
-    for hist in ["latency_us", "chunk_latency_us"] {
+    for hist in ["latency_us", "chunk_latency_us", "enroll_latency_us"] {
         assert_eq!(
             key_set(doc.get(hist).unwrap()),
             ["buckets", "count", "mean", "p50", "p90", "p99", "sum"],
@@ -268,6 +286,11 @@ fn json_values_and_le_sequence_are_exact() {
     let doc = MetricsSnapshot::from_stats(&synthetic_stats()).to_json();
     assert_eq!(doc.get("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
     assert_eq!(doc.at(&["counters", "completed"]).unwrap().as_f64(), Some(10.0));
+    assert_eq!(doc.at(&["counters", "weight_swaps"]).unwrap().as_f64(), Some(5.0));
+    assert_eq!(
+        doc.at(&["gauges", "resident_weight_versions"]).unwrap().as_f64(),
+        Some(2.0)
+    );
     assert_eq!(doc.at(&["gauges", "accuracy"]).unwrap().as_f64(), Some(0.75));
     assert_eq!(doc.at(&["activity", "sparsity"]).unwrap().as_f64(), Some(0.75));
     assert_eq!(doc.at(&["activity", "duty_cycle"]).unwrap().as_f64(), Some(0.75));

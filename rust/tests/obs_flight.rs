@@ -40,6 +40,7 @@ fn request(id: u64, stream: u64, seed: u64) -> Request {
         audio12: deltakws::audio::quantize_12b(&audio),
         label: Some(label),
         trace: false,
+        weights: None,
     }
 }
 
@@ -156,7 +157,9 @@ fn stream_events_carry_the_session_trace() {
     assert!(!events.is_empty(), "no events from the session");
     for e in &events {
         match e {
-            StreamEvent::Detection { trace, .. } | StreamEvent::Closed { trace, .. } => {
+            StreamEvent::Detection { trace, .. }
+            | StreamEvent::WeightsSwapped { trace, .. }
+            | StreamEvent::Closed { trace, .. } => {
                 assert_eq!(*trace, session_trace, "event trace diverged: {e:?}");
             }
         }

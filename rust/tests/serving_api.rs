@@ -40,6 +40,7 @@ fn short_request(stream: u64, seed: u64) -> Request {
         audio12: deltakws::audio::quantize_12b(&audio[..1024]),
         label: Some(label),
         trace: false,
+        weights: None,
     }
 }
 
@@ -183,7 +184,7 @@ fn post_shutdown_submit_reports_closed_and_tickets_resolve() {
     let audio = original.audio12.clone();
     match client.submit(original) {
         Err(SubmitError::Closed(back)) => assert_eq!(back.audio12, audio),
-        Err(SubmitError::QueueFull(_)) => panic!("dead pool reported as backpressure"),
+        Err(e) => panic!("dead pool must report Closed, got {e}"),
         Ok(_) => panic!("submit into a dropped pool succeeded"),
     }
 }

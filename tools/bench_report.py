@@ -23,7 +23,7 @@ folds the relevant numbers into one JSON artifact:
 
 Since PR 7 the report also ingests the soak run's metrics exposition
 (results/soak_metrics.json, written by examples/soak.rs) after validating
-it against the deltakws-metrics/1 schema, and tracks the flight-recorder
+it against the deltakws-metrics/2 schema, and tracks the flight-recorder
 overhead ratio (probe_overhead_x.utterance_decode_recorder) as a
 trajectory case. `--validate-metrics PATH` runs the schema check alone
 (exit 0/1) — the CI smoke step for the observability surface.
@@ -34,6 +34,11 @@ deltakws-lint/1) as report["static_analysis"] — unsuppressed findings
 stay 0 (the blocking CI lint job guarantees it), and the reasoned
 suppression count is tracked against the baseline like any other
 trajectory metric.
+
+Since PR 9 the report also ingests the few-shot customization numbers
+(results/enroll_metrics.json, written by examples/enroll.rs): enrollment
+latency per step and the mid-stream weight-swap service latency become
+report["customization"] and are tracked against the baseline.
 
 The issue number is derived automatically (max N among existing
 BENCH_*.json in the working directory — i.e. refresh the newest point)
@@ -72,7 +77,7 @@ METRICS_CANDIDATES = [
     os.path.join("rust", "results", "soak_metrics.json"),
     os.path.join("results", "soak_metrics.json"),
 ]
-METRICS_SCHEMA = "deltakws-metrics/1"
+METRICS_SCHEMA = "deltakws-metrics/2"
 # the `le` sequence of both exposed histograms, null = +Inf
 METRICS_LE = [128, 512, 2048, 8192, 32768, 131072, 524288, 2097152, None]
 # deltakws-lint writes its JSON report here in CI (`--json`); the counts
@@ -83,6 +88,13 @@ LINT_CANDIDATES = [
     os.path.join("rust", "results", "lint_report.json"),
 ]
 LINT_SCHEMA = "deltakws-lint/1"
+# examples/enroll.rs writes its customization numbers here — same cwd
+# ambiguity as the soak snapshot, same resolution (newest wins)
+ENROLL_CANDIDATES = [
+    os.path.join("results", "enroll_metrics.json"),
+    os.path.join("rust", "results", "enroll_metrics.json"),
+]
+ENROLL_SCHEMA = "deltakws-enroll/1"
 
 SPARSITY_RE = re.compile(r"step_frame (scalar|simd) @ s=(\d+)")
 BATCHED_RE = re.compile(r"step_frames_batched x(\d+) @ s=(\d+)")
@@ -177,7 +189,7 @@ def sparsity_curve(sweep_cases):
 
 def validate_metrics(doc):
     """Check a metrics-snapshot JSON document against the pinned
-    deltakws-metrics/1 schema. Returns a list of problems (empty = valid)."""
+    deltakws-metrics/2 schema. Returns a list of problems (empty = valid)."""
     problems = []
     if not isinstance(doc, dict):
         return ["document is not a JSON object"]
@@ -193,6 +205,7 @@ def validate_metrics(doc):
         "activity",
         "latency_us",
         "chunk_latency_us",
+        "enroll_latency_us",
         "per_worker",
         "recorder",
         "rates",
@@ -210,11 +223,24 @@ def validate_metrics(doc):
             "spilled",
             "fused_batches",
             "stream_events_dropped",
+            "weight_swaps",
         ):
             if key not in counters:
                 problems.append(f"missing counters.{key}")
     else:
         problems.append("counters is not an object")
+    gauges = doc.get("gauges", {})
+    if isinstance(gauges, dict):
+        for key in (
+            "accuracy",
+            "session_bytes",
+            "telemetry_bytes",
+            "resident_weight_versions",
+        ):
+            if key not in gauges:
+                problems.append(f"missing gauges.{key}")
+    else:
+        problems.append("gauges is not an object")
     activity = doc.get("activity", {})
     if isinstance(activity, dict):
         for key in ("frames", "gated_frames", "sparsity", "duty_cycle"):
@@ -222,7 +248,7 @@ def validate_metrics(doc):
                 problems.append(f"missing activity.{key}")
     else:
         problems.append("activity is not an object")
-    for hist in ("latency_us", "chunk_latency_us"):
+    for hist in ("latency_us", "chunk_latency_us", "enroll_latency_us"):
         h = doc.get(hist)
         if not isinstance(h, dict):
             problems.append(f"{hist} is not an object")
@@ -304,6 +330,30 @@ def ingest_lint_report(report):
           f"({counts.get('findings')} findings, "
           f"{counts.get('suppressed')} suppressions over "
           f"{doc.get('files_scanned')} files)")
+
+
+def ingest_enroll_metrics(report):
+    """Attach the customization numbers from examples/enroll.rs to the
+    report. Non-fatal: missing or mis-schema'd files leave the key out."""
+    existing = [p for p in ENROLL_CANDIDATES if os.path.exists(p)]
+    if not existing:
+        print("no enroll metrics found; skipping ingest")
+        return
+    path = max(existing, key=os.path.getmtime)
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"enroll metrics {path} unreadable ({e}); skipping ingest")
+        return
+    if doc.get("schema") != ENROLL_SCHEMA:
+        print(f"enroll metrics {path} schema {doc.get('schema')!r} != "
+              f"{ENROLL_SCHEMA!r}; skipping ingest")
+        return
+    report["customization"] = doc
+    print(f"ingested enroll metrics {path} "
+          f"({doc.get('steps')} steps in {doc.get('enroll_us')} us, "
+          f"swap {doc.get('swap_latency_us')} us)")
 
 
 def build_report(cases, issue):
@@ -418,6 +468,10 @@ def diff_baseline(report, baseline_path):
         # the blocking lint job guarantees that — so only the exception
         # count moves)
         "static_analysis.suppressions": ("static_analysis", "suppressions"),
+        # per-step enrollment cost and the mid-stream swap latency are the
+        # two customization numbers worth a trajectory
+        "customization.us_per_step": ("customization", "us_per_step"),
+        "customization.swap_latency_us": ("customization", "swap_latency_us"),
     }
     ratios = {}
     for name, keys in tracked.items():
@@ -458,7 +512,7 @@ def main():
         "--validate-metrics",
         default=None,
         metavar="PATH",
-        help="validate a metrics snapshot against the deltakws-metrics/1 "
+        help="validate a metrics snapshot against the deltakws-metrics/2 "
         "schema and exit (no benches run)",
     )
     args = ap.parse_args()
@@ -502,6 +556,7 @@ def main():
     report = build_report(parse_jsonl(jsonl), issue)
     ingest_metrics_snapshot(report)
     ingest_lint_report(report)
+    ingest_enroll_metrics(report)
 
     baseline = args.baseline
     if baseline == "auto":
