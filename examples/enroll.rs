@@ -101,7 +101,7 @@ fn main() {
 
     // -- mid-stream swap through the epoch fence -------------------------
     let utt = voice.utterance(TARGET, deltakws::custom::speaker::HOLDOUT_BASE + HOLDOUT);
-    let sess = coord.open_stream(1);
+    let sess = coord.open_stream(1).expect("under the high-water mark");
     let half = utt.audio12.len() / 2;
     sess.push_blocking(utt.audio12[..half].to_vec()).expect("pool alive");
     let t_swap = Instant::now();

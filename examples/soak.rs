@@ -18,11 +18,22 @@
 //! cycle counts, queueing) do not depend on model quality.
 //!
 //! Run: `cargo run --release --example soak -- [workers] [utterances] [producers] [streams]`
+//!
+//! Scale mode (the v3 scheduler's 10k–100k-session proof):
+//!   `cargo run --release --example soak -- scale smoke`     — CI cell (2k sessions)
+//!   `cargo run --release --example soak -- scale matrix`    — 10k / 50k / 100k cells
+//!   `cargo run --release --example soak -- scale <sessions>`— one custom cell
+//! Each cell asserts flat memory, parking coverage, typed shedding and
+//! bit-exactness internally; the results land in `results/soak_scale.json`
+//! for `tools/bench_report.py` to baseline-diff as the `scheduler` block.
 
 use deltakws::accel::gru::QuantParams;
 use deltakws::chip::ChipConfig;
-use deltakws::coordinator::soak::{run_soak, SoakConfig, SoakReport};
+use deltakws::coordinator::soak::{
+    run_scale_soak, run_soak, ScaleSoakConfig, ScaleSoakReport, SoakConfig, SoakReport,
+};
 use deltakws::obs::MetricsSnapshot;
+use deltakws::util::json::Json;
 use deltakws::util::prng::Pcg;
 
 fn rng_quant(seed: u64) -> QuantParams {
@@ -54,11 +65,11 @@ fn print_report(label: &str, r: &SoakReport) {
     );
     println!(
         "telemetry  : {} B at 10% of run, {} B at end (flat ✓); {} producer retries; \
-         {} spills; {} backpressure rejections",
+         {} steals; {} backpressure rejections",
         r.telemetry_bytes_early,
         r.telemetry_bytes_final,
         r.producer_retries,
-        r.final_stats.spilled,
+        r.final_stats.steals,
         r.final_stats.rejected_full
     );
     println!(
@@ -79,8 +90,106 @@ fn print_report(label: &str, r: &SoakReport) {
     );
 }
 
+fn print_scale_report(r: &ScaleSoakReport) {
+    println!("\n== scale soak: {} sessions ==", r.sessions);
+    println!(
+        "shape      : {} workers, {} active sessions ({:.0} sessions/core), \
+         {} rounds x {} chunks in {:.2} s wall",
+        r.workers,
+        r.active_sessions,
+        r.sessions_per_core,
+        r.rounds,
+        r.chunks_done,
+        r.wall.as_secs_f64()
+    );
+    println!(
+        "parking    : {} parked at the quiesced checkpoint; {} park transitions; {} steals",
+        r.parked_at_checkpoint, r.park_transitions, r.steals
+    );
+    println!(
+        "memory     : {} B session state early vs {} B late (flat ✓); {} B telemetry",
+        r.session_bytes_early, r.session_bytes_late, r.telemetry_bytes
+    );
+    println!(
+        "latency    : chunk p50 {:.2} ms / p99 {:.2} ms; sched p50 {} µs / p99 {} µs",
+        r.chunk_p50_us as f64 / 1e3,
+        r.chunk_p99_us as f64 / 1e3,
+        r.sched_p50_us,
+        r.sched_p99_us
+    );
+    println!(
+        "contracts  : {} typed Overloaded sheds; {} oracle utterances bit-exact; \
+         {} witness detections bit-exact",
+        r.shed_overloaded, r.oracle_checked, r.witness_detections
+    );
+}
+
+fn scale_cell_json(r: &ScaleSoakReport) -> Json {
+    Json::obj(vec![
+        ("sessions", Json::num(r.sessions as f64)),
+        ("active_sessions", Json::num(r.active_sessions as f64)),
+        ("workers", Json::num(r.workers as f64)),
+        ("sessions_per_core", Json::num(r.sessions_per_core)),
+        ("chunks_done", Json::num(r.chunks_done as f64)),
+        ("wall_s", Json::num(r.wall.as_secs_f64())),
+        ("parked_at_checkpoint", Json::num(r.parked_at_checkpoint as f64)),
+        ("session_bytes_early", Json::num(r.session_bytes_early as f64)),
+        ("session_bytes_late", Json::num(r.session_bytes_late as f64)),
+        ("chunk_p50_us", Json::num(r.chunk_p50_us as f64)),
+        ("chunk_p99_us", Json::num(r.chunk_p99_us as f64)),
+        ("sched_p50_us", Json::num(r.sched_p50_us as f64)),
+        ("sched_p99_us", Json::num(r.sched_p99_us as f64)),
+        ("steals", Json::num(r.steals as f64)),
+        ("park_transitions", Json::num(r.park_transitions as f64)),
+        ("shed_overloaded", Json::num(r.shed_overloaded as f64)),
+        ("oracle_checked", Json::num(r.oracle_checked as f64)),
+        ("witness_detections", Json::num(r.witness_detections as f64)),
+        (
+            "chunks_per_sec",
+            Json::num(r.chunks_done as f64 / r.wall.as_secs_f64().max(1e-9)),
+        ),
+    ])
+}
+
+/// `soak -- scale [smoke|matrix|<sessions>]`: run scale-soak cells and
+/// write the machine-readable artifact CI and bench_report.py consume.
+fn run_scale_mode(arg: Option<&str>) {
+    let cells: Vec<ScaleSoakConfig> = match arg {
+        None | Some("smoke") => vec![ScaleSoakConfig::smoke()],
+        Some("matrix") => ScaleSoakConfig::matrix().to_vec(),
+        Some(n) => {
+            let sessions: usize = n.parse().unwrap_or_else(|_| {
+                panic!("scale mode takes `smoke`, `matrix` or a session count, got {n:?}")
+            });
+            vec![ScaleSoakConfig::with_sessions(sessions)]
+        }
+    };
+    let mut reports = Vec::with_capacity(cells.len());
+    for cfg in &cells {
+        println!(
+            "scale soak: {} sessions ({}% idle), {} workers, {} rounds",
+            cfg.sessions, cfg.idle_pct, cfg.workers, cfg.rounds
+        );
+        let r = run_scale_soak(rng_quant(7), ChipConfig::design_point(), cfg);
+        print_scale_report(&r);
+        reports.push(r);
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("deltakws-soak-scale/1")),
+        ("cells", Json::arr(reports.iter().map(scale_cell_json))),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/soak_scale.json", format!("{doc}\n"))
+        .expect("write scale soak json");
+    println!("\nscale soak results -> results/soak_scale.json");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some("scale") {
+        run_scale_mode(args.get(1).map(String::as_str));
+        return;
+    }
     let mut cfg = SoakConfig::acceptance();
     if let Some(v) = args.first().and_then(|s| s.parse().ok()) {
         cfg.workers = v;

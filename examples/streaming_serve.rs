@@ -6,12 +6,14 @@
 //! its own completion mailbox — exercising the v2 ticket surface
 //! end-to-end: every producer claims exactly its own responses (routed by
 //! request id), with zero cross-producer interleaving by construction.
-//! The router pins streams to workers (state locality), spills around
-//! stalls, and applies backpressure when saturated; producers retry on
-//! typed [`SubmitError::QueueFull`] and stop cleanly on
-//! [`SubmitError::Closed`]. Prints throughput, wall-clock latency
-//! percentiles, online accuracy, spill/retry/rejection counts (global and
-//! per worker) and aggregated chip telemetry.
+//! The v3 scheduler runs every stream's utterances as chained runnables
+//! on a work-stealing pool — any worker may serve any request, yet each
+//! stream's chain keeps its requests in submission order (`stream_seq`).
+//! Saturation applies backpressure; producers retry on typed
+//! [`SubmitError::QueueFull`] and stop cleanly on [`SubmitError::Closed`].
+//! Prints throughput, wall-clock latency percentiles, online accuracy,
+//! steal/retry/rejection counts (global and per worker) and aggregated
+//! chip telemetry.
 //!
 //! Run: `cargo run --release --example streaming_serve -- [workers] [requests] [producers]`
 
@@ -126,9 +128,9 @@ fn main() -> anyhow::Result<()> {
     // `rejected_full` counts saturated submit *attempts*; the producers
     // retried every one of them, so none of these are dropped requests
     println!(
-        "routing    : {} spills; {} submit attempts hit global backpressure \
+        "routing    : {} steals; {} submit attempts hit global backpressure \
          ({retries} producer retries, all eventually accepted); {} shutdown rejections",
-        stats.spilled, stats.rejected_full, stats.rejected_closed
+        stats.steals, stats.rejected_full, stats.rejected_closed
     );
     println!(
         "latency    : p50 {:.1} ms   p99 {:.1} ms  (wall-clock, queue + simulation)",
@@ -156,29 +158,23 @@ fn main() -> anyhow::Result<()> {
             })
             .unwrap_or_else(|| "idle".into());
         println!(
-            "worker {w}: {} completed, {} spilled-in, {} pinned-full, {chip}",
-            lane.completed, lane.spilled_in, lane.pinned_full
+            "worker {w}: {} completed, {} stolen, {} stream chunks, {chip}",
+            lane.completed, lane.steals, lane.stream_chunks
         );
     }
-    // per-stream ordering check (ids are assigned at submission; spills
-    // can reorder service, pinned streams stay ordered). Each worker's
-    // completion order is its `worker_seq`; a stream served entirely by
-    // one worker must complete in ascending id order.
+    // per-stream ordering check: the v3 chain serializes each stream's
+    // requests with a dense `stream_seq`, so service order must match
+    // submission order (ascending ids) no matter which workers — or how
+    // many — ended up serving the chain.
     let mut by_stream: std::collections::HashMap<u64, Vec<&Response>> = Default::default();
     for r in &responses {
         by_stream.entry(r.stream).or_default().push(r);
     }
     let ordered = by_stream.values_mut().all(|rs| {
-        let workers: std::collections::HashSet<usize> = rs.iter().map(|r| r.worker).collect();
-        if workers.len() > 1 {
-            return true; // spilled: ordering intentionally traded away
-        }
-        rs.sort_by_key(|r| r.worker_seq);
+        rs.sort_by_key(|r| r.stream_seq);
         rs.windows(2).all(|w| w[0].id < w[1].id)
     });
-    println!(
-        "stream ordering preserved: {ordered}{}",
-        if stats.spilled > 0 { "  (spills may reorder)" } else { "" }
-    );
+    assert!(ordered, "stream_seq order diverged from submission order");
+    println!("stream ordering preserved: {ordered}  (holds across worker migration)");
     Ok(())
 }

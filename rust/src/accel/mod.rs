@@ -22,6 +22,8 @@ pub mod mac;
 pub mod nlu;
 pub mod simd;
 
+use std::sync::Arc;
+
 use crate::energy::ChipActivity;
 use crate::probe::{ChipProbe, NoProbe};
 use crate::sram::WeightSram;
@@ -112,7 +114,10 @@ pub struct FrameResult {
 /// The ΔRNN accelerator twin.
 pub struct DeltaRnnAccel {
     pub config: AccelConfig,
-    params: QuantParams,
+    /// Quantised parameter mirror, reference-counted so every twin
+    /// serving the same weight version shares one table (the arithmetic
+    /// only ever reads it; swaps install a new pointer, never mutate).
+    params: Arc<QuantParams>,
     pub sram: WeightSram,
     state: StateBuffer,
     nlu: Nlu,
@@ -137,11 +142,30 @@ pub struct DeltaRnnAccel {
 }
 
 impl DeltaRnnAccel {
-    /// Build from quantised parameters; loads the weight image into the
-    /// SRAM twin (write energy not counted toward inference).
+    /// Build from quantised parameters; serialises and loads the weight
+    /// image into the SRAM twin (write energy not counted toward
+    /// inference). Convenience wrapper over
+    /// [`new_shared`](Self::new_shared) for callers that own a single
+    /// twin; pools sharing one weight table across many twins build the
+    /// `Arc`s once and call `new_shared` directly.
     pub fn new(params: QuantParams, config: AccelConfig, kind: crate::energy::SramKind) -> Self {
+        let image = crate::sram::shared_image(&gru::to_sram_image(&params));
+        Self::new_shared(Arc::new(params), image, config, kind)
+    }
+
+    /// Build from a shared parameter table and its pre-serialised SRAM
+    /// image: O(1) per twin — the image is installed by pointer (see
+    /// [`WeightSram::load_shared_image`]), so a thousand accelerators on
+    /// the same weight version hold one parameter table and one 24 kB
+    /// image between them.
+    pub fn new_shared(
+        params: Arc<QuantParams>,
+        image: Arc<Vec<u16>>,
+        config: AccelConfig,
+        kind: crate::energy::SramKind,
+    ) -> Self {
         let mut sram = WeightSram::new(kind);
-        sram.load_image(&gru::to_sram_image(&params));
+        sram.load_shared_image(&image);
         sram.reset_counters();
         let fifo_depth = config.fifo_depth;
         Self {
@@ -181,7 +205,16 @@ impl DeltaRnnAccel {
     /// Callers must never invoke this between `mac_event`s of one frame
     /// (nothing in the public API allows it).
     pub fn swap_params(&mut self, params: QuantParams) {
-        self.sram.load_image(&gru::to_sram_image(&params));
+        let image = crate::sram::shared_image(&gru::to_sram_image(&params));
+        self.swap_params_shared(Arc::new(params), &image);
+    }
+
+    /// Shared-table variant of [`swap_params`](Self::swap_params): the
+    /// same epoch-fence semantics, but the parameter mirror and SRAM
+    /// image are installed by pointer — O(1) regardless of model size,
+    /// and the table stays shared with every other twin on the version.
+    pub fn swap_params_shared(&mut self, params: Arc<QuantParams>, image: &Arc<Vec<u16>>) {
+        self.sram.load_shared_image(image);
         self.params = params;
     }
 
@@ -660,6 +693,62 @@ mod tests {
         // the shallow one stalls at depth 1
         assert!(deep.fifo.high_water > 1, "deep ring never buffered a burst");
         assert_eq!(shallow.fifo.high_water, 1);
+    }
+
+    #[test]
+    fn shared_construction_is_bit_exact_with_owned() {
+        // one Arc'd parameter table + image behind two twins must match
+        // the by-value constructor frame for frame, including SRAM read
+        // accounting — the sharing is invisible to the arithmetic
+        let q = rng_quant(21);
+        let image = crate::sram::shared_image(&gru::to_sram_image(&q));
+        let params = Arc::new(q.clone());
+        let mut owned = DeltaRnnAccel::new(q, AccelConfig::design_point(), SramKind::NearVth);
+        let mut a = DeltaRnnAccel::new_shared(
+            Arc::clone(&params),
+            Arc::clone(&image),
+            AccelConfig::design_point(),
+            SramKind::NearVth,
+        );
+        let mut b = DeltaRnnAccel::new_shared(
+            params,
+            image,
+            AccelConfig::design_point(),
+            SramKind::NearVth,
+        );
+        for t in 0..20i32 {
+            let f = frame(&[(5, (t * 37 % 180) as i16), (8, (t * 13 % 90) as i16)]);
+            let r0 = owned.step_frame(&f);
+            let r1 = a.step_frame(&f);
+            let r2 = b.step_frame(&f);
+            assert_eq!(r0.logits, r1.logits, "t={t}");
+            assert_eq!(r0.logits, r2.logits, "t={t}");
+            assert_eq!(r0.cycles, r1.cycles, "t={t}");
+        }
+        assert_eq!(owned.sram.reads, a.sram.reads);
+        assert_eq!(owned.activity, a.activity);
+    }
+
+    #[test]
+    fn shared_swap_matches_owned_swap() {
+        let q1 = rng_quant(22);
+        let q2 = rng_quant(23);
+        let mut owned = DeltaRnnAccel::new(q1.clone(), AccelConfig::design_point(), SramKind::NearVth);
+        let mut shared =
+            DeltaRnnAccel::new(q1, AccelConfig::design_point(), SramKind::NearVth);
+        let f = frame(&[(6, 120)]);
+        owned.step_frame(&f);
+        shared.step_frame(&f);
+        owned.swap_params(q2.clone());
+        let image = crate::sram::shared_image(&gru::to_sram_image(&q2));
+        shared.swap_params_shared(Arc::new(q2), &image);
+        for t in 0..10i32 {
+            let f = frame(&[(6, (t * 41 % 200) as i16)]);
+            let a = owned.step_frame(&f);
+            let b = shared.step_frame(&f);
+            assert_eq!(a.logits, b.logits, "t={t}");
+            assert_eq!(a.cycles, b.cycles, "t={t}");
+        }
     }
 
     #[test]

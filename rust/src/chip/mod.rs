@@ -22,6 +22,7 @@
 //! and energy/decision vs Δ_TH (Fig. 12), and the Table II row.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::accel::fifo::AsyncFifo;
 use crate::accel::gru::QuantParams;
@@ -403,16 +404,30 @@ pub struct KwsChip {
 
 impl KwsChip {
     pub fn new(params: QuantParams, config: ChipConfig) -> Self {
+        let image = crate::sram::shared_image(&crate::accel::gru::to_sram_image(&params));
+        Self::new_shared(Arc::new(params), image, config)
+    }
+
+    /// Build against a shared parameter table and pre-serialised SRAM
+    /// image (see [`DeltaRnnAccel::new_shared`]): O(1) weight cost per
+    /// chip, so a pool can stamp out one twin per session or worker
+    /// without multiplying the model's memory. Behaviour is bit-exact
+    /// with [`new`](Self::new) on the same parameters.
+    pub fn new_shared(
+        params: Arc<QuantParams>,
+        image: Arc<Vec<u16>>,
+        config: ChipConfig,
+    ) -> Self {
         let fex = Fex::new(config.fex.clone());
-        let accel = DeltaRnnAccel::new(params, config.accel.clone(), config.sram);
+        let accel = DeltaRnnAccel::new_shared(params, image, config.accel.clone(), config.sram);
         Self {
             config,
             fex,
             accel,
             fifo: AsyncFifo::new(4),
             now: 0,
-            // lint:allow(no-alloc-hot-path): construction-time staging buffer; push_samples bounds its length by PENDING_FRAME_CAP
-            pending: VecDeque::with_capacity(PENDING_FRAME_CAP),
+            // lint:allow(no-alloc-hot-path): empty at construction — an idle or parked session's chip holds no staging memory; the deque grows with the first buffered frames and push_samples bounds its length by PENDING_FRAME_CAP
+            pending: VecDeque::new(),
             frame_index: 0,
         }
     }
@@ -440,6 +455,14 @@ impl KwsChip {
     /// is dropped or duplicated.
     pub fn swap_weights(&mut self, params: QuantParams) {
         self.accel.swap_params(params);
+    }
+
+    /// Shared-table variant of [`swap_weights`](Self::swap_weights):
+    /// identical fence semantics, but the table and image install by
+    /// pointer (see [`DeltaRnnAccel::swap_params_shared`]) and stay
+    /// shared with every other chip on the same weight version.
+    pub fn swap_weights_shared(&mut self, params: Arc<QuantParams>, image: Arc<Vec<u16>>) {
+        self.accel.swap_params_shared(params, &image);
     }
 
     /// Feed 12-bit samples through the SPI front door. The FEx and the CDC

@@ -53,6 +53,7 @@ pub struct CoordinatorBuilder {
     report_epoch: u64,
     recorder: Option<RecorderConfig>,
     registry_capacity: usize,
+    max_sessions: Option<usize>,
 }
 
 impl CoordinatorBuilder {
@@ -66,6 +67,7 @@ impl CoordinatorBuilder {
             report_epoch: REPORT_EPOCH,
             recorder: None,
             registry_capacity: DEFAULT_REGISTRY_CAPACITY,
+            max_sessions: None,
         }
     }
 
@@ -123,6 +125,21 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Admission-control high-water mark: the maximum number of live
+    /// streaming sessions the pool accepts (default: unlimited; validated
+    /// ≥ 1 when set). Beyond it,
+    /// [`Coordinator::open_stream`](super::Coordinator::open_stream)
+    /// sheds with
+    /// [`SubmitError::Overloaded`](crate::error::SubmitError::Overloaded)
+    /// — typed load-shedding that keeps already-admitted sessions inside
+    /// their latency budget instead of degrading everyone. Parked
+    /// sessions count: the mark bounds pool-side session *memory*, not
+    /// just scheduler load.
+    pub fn max_sessions(mut self, sessions: usize) -> Self {
+        self.max_sessions = Some(sessions);
+        self
+    }
+
     /// Validate every knob and spawn the worker pool.
     ///
     /// # Errors
@@ -145,6 +162,9 @@ impl CoordinatorBuilder {
         }
         if self.registry_capacity == 0 {
             return Err(Error::invalid_config("registry_capacity", "must be >= 1"));
+        }
+        if self.max_sessions == Some(0) {
+            return Err(Error::invalid_config("max_sessions", "must be >= 1 when set"));
         }
         if let Some(rec) = &self.recorder {
             if rec.capacity == 0 {
@@ -171,6 +191,7 @@ impl CoordinatorBuilder {
             self.report_epoch,
             self.recorder,
             self.registry_capacity,
+            self.max_sessions,
         ))
     }
 }

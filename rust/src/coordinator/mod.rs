@@ -1,66 +1,71 @@
-//! Streaming serving coordinator: the "host side" of the system.
+//! Event-driven serving coordinator: the "host side" of the system.
 //!
 //! The paper's chip sits behind an SPI link fed by a host (their MiniZed
 //! FPGA). This module is that host, generalised into a small serving
-//! runtime a deployment would actually use: audio streams are routed to a
-//! pool of chip-twin workers over bounded queues (backpressure = the SPI
-//! handshake), results and chip telemetry aggregate centrally, and the
-//! router tolerates slow/stalled workers by spilling to the least-loaded
-//! healthy queue.
+//! runtime a deployment would actually use: audio streams, utterance
+//! requests and fused batches are all *runnables* on one work-stealing
+//! pool of chip-twin workers, results and chip telemetry aggregate
+//! centrally, and idle streams cost nothing.
 //!
-//! **Serving API v2** (see DESIGN.md §9): construction goes through the
-//! validating [`Coordinator::builder`], submission returns a completion
-//! [`Ticket`] delivered through the submitting client's own mailbox
-//! (responses are routed by request id — two concurrent producers can
-//! never steal each other's results), and every failure is a typed error
-//! that still hands the payload back ([`crate::SubmitError`],
-//! [`crate::StreamPushError`], [`crate::WaitError`]). The v1 global
-//! response FIFO survives only as the deprecated
-//! [`Coordinator::collect`] shim over the coordinator's default mailbox.
+//! **Scheduler v3** (see DESIGN.md §15): the v2 thread-per-worker,
+//! session-pinned model is gone. Each [`StreamSession`] is a small
+//! state machine (`parked ⇄ queued ⇄ running → closed`) driven by
+//! whichever worker pops it next:
 //!
-//! Threading: std threads + mpsc (the vendored dependency set has no
-//! tokio); one thread per worker, one router, callers submit through the
-//! [`Coordinator`] directly or concurrently through cloneable [`Client`]
-//! handles. Ordering within a stream is preserved by pinning each stream id
-//! to a worker (consistent hashing), which also keeps the per-utterance
-//! recurrent state meaningful; the spill path trades that ordering for
-//! availability when the pinned queue is saturated.
+//! * a session whose VAD gate is closed and whose inbox is empty is
+//!   **parked** — a heap entry, not a runnable. Parking is the
+//!   serving-layer analog of the chip's ΔRNN clock gate: silence costs
+//!   no scheduler attention, so capacity scales with *active* sessions,
+//!   not open ones;
+//! * the next [`StreamSession::push`] re-arms it: the session becomes a
+//!   runnable on the shared injector queue and any worker may run it.
+//!   Frames migrate freely across workers — the recurrent state lives in
+//!   the session cell, not in a worker;
+//! * per-utterance requests on one stream form a FIFO *chain* (one
+//!   runnable per stream, re-enqueued while work remains), preserving
+//!   the v2 per-stream completion-order contract without pinning;
+//! * admission control bounds the hot set: beyond the builder's
+//!   [`max_sessions`](CoordinatorBuilder::max_sessions) high-water mark,
+//!   `open_stream` sheds with [`SubmitError::Overloaded`] instead of
+//!   degrading every admitted session.
 //!
-//! Three kinds of work share the worker lanes:
+//! The pool itself ([`sched`]) is std-only: per-worker `VecDeque` run
+//! queues with a mutex-guarded Chase–Lev-style steal path (owners pop
+//! the front of their own queue, thieves pop the back of a victim's).
 //!
-//! * per-utterance [`Request`]s — stateless between requests, spillable;
-//! * *fused* request groups ([`Client::submit_fused`]) — a whole batch of
-//!   independent utterances routed to ONE worker as a single job, served
-//!   through the batched-chip path
-//!   ([`crate::accel::DeltaRnnAccel::step_frames_batched`]): every fired
-//!   weight row is fetched once per frame for the whole group instead of
-//!   once per request. Deliberately ignores stream pinning — co-locating
-//!   the group is the point — and always runs the lean (untraced) path;
-//! * long-lived [`StreamSession`]s — open a stream, push audio chunks of
-//!   any size, receive [`StreamEvent`]s asynchronously. A session's
-//!   [`crate::stream::StreamPipeline`] (chip + VAD + wakeword state
-//!   machine) lives on the stream's *pinned* worker for its whole life:
-//!   chunks never spill (the recurrent state is there), so a full pinned
-//!   queue surfaces as backpressure to the producer instead.
+//! **Serving API v2 surface is kept** (DESIGN.md §9): construction goes
+//! through the validating [`Coordinator::builder`], submission returns a
+//! completion [`Ticket`] delivered through the submitting client's own
+//! mailbox (responses are routed by request id — two concurrent
+//! producers can never steal each other's results), and every failure is
+//! a typed error that still hands the payload back
+//! ([`crate::SubmitError`], [`crate::StreamPushError`],
+//! [`crate::WaitError`]). The PR 9 weight-swap fence semantics are
+//! bit-exact: a [`Coordinator::swap_weights`] is a message on the
+//! session's inbox, processed only between fully-drained chunks, so the
+//! fence lands at a frame boundary regardless of which worker runs the
+//! frame.
 //!
 //! Telemetry is contention-free and bounded: the worker hot loop records
-//! only into its own [`telemetry::WorkerShard`] (relaxed counters + a
-//! fixed-size log-bucketed latency histogram — no locks, no allocation,
-//! O(1) memory in the request count), [`Coordinator::stats`] folds the
-//! shards on demand, and chip power/energy reports are published per
-//! epoch / on [`Coordinator::reports`] pull, never per utterance. The
-//! [`soak`] harness drives sustained mixed load against exactly these
-//! guarantees.
+//! only into its own [`telemetry::WorkerShard`] (relaxed counters + fixed
+//! log-bucketed histograms — no report rollup per decision),
+//! [`Coordinator::stats`] folds the shards on demand, and chip
+//! power/energy reports are published per epoch / on
+//! [`Coordinator::reports`] pull, never per utterance. The [`soak`]
+//! harness drives sustained mixed load — including the 10k/50k/100k
+//! parked-session scale matrix ([`soak::run_scale_soak`]) — against
+//! exactly these guarantees.
 
 pub mod builder;
+mod sched;
 pub mod soak;
 pub mod telemetry;
 pub mod ticket;
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
-use std::sync::{Arc, Mutex, Weak};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -72,23 +77,25 @@ use crate::chip::{
 use crate::custom::{EnrollConfig, WeightRegistry, WeightVersion};
 use crate::energy::ChipActivity;
 use crate::error::{StreamPushError, SubmitError};
-use crate::runtime::NativeBackend;
 use crate::obs::metrics::{MetricsRegistry, MetricsSnapshot};
+use crate::obs::monotonic_us;
 use crate::obs::recorder::{
     EventKind, FlightDump, FlightRecorder, RecorderConfig, RecorderProbe, RecorderStats,
 };
 use crate::obs::TraceId;
 use crate::probe::DecisionTrace;
+use crate::runtime::NativeBackend;
 use crate::stream::detector::DetectionEvent;
 use crate::stream::{StreamConfig, StreamPipeline};
 use crate::util::hist::LogHistogram;
+use sched::{Popped, WorkQueue};
 use telemetry::WorkerShard;
 use ticket::Mailbox;
 
 /// Bound on each stream session's event channel (detections + the final
 /// `Closed` marker). A client that never drains its receiver sheds the
 /// newest detections (counted in [`Stats::stream_events_dropped`]) instead
-/// of growing worker-side memory without limit.
+/// of growing session-side memory without limit.
 pub const STREAM_EVENT_CAP: usize = 256;
 
 pub use builder::CoordinatorBuilder;
@@ -98,7 +105,7 @@ pub use ticket::{Batch, Ticket};
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// logical stream (microphone); pins the request to a worker
+    /// logical stream (microphone); requests on one stream serve FIFO
     pub stream: u64,
     pub audio12: Vec<i64>,
     /// optional ground truth for online accuracy accounting
@@ -139,11 +146,19 @@ pub struct Response {
     pub chip_latency_ms: f64,
     /// wall-clock service time (queue + simulation)
     pub service: Duration,
+    /// the worker that executed the request (informational under v3:
+    /// frames and utterances migrate across workers)
     pub worker: usize,
     /// per-worker completion sequence number: two responses from the
-    /// same worker completed in `worker_seq` order (lets callers verify
-    /// pinned-stream FIFO ordering without a global collection point)
+    /// same worker completed in `worker_seq` order
     pub worker_seq: u64,
+    /// per-stream submission sequence number: [`Coordinator::submit`]
+    /// requests on one stream execute FIFO through the stream's chain,
+    /// so their responses complete in `stream_seq` order even though the
+    /// executing worker varies (the v3 replacement for the v2 "pinned
+    /// worker" ordering witness). Fused members are sequenced at submit
+    /// but run co-located as one group, unordered vs. solo requests.
+    pub stream_seq: u64,
     /// per-frame diagnostics, present only for `Request { trace: true, … }`
     pub trace: Option<DecisionTrace>,
     /// request-scoped trace id minted at submit — matches the flight
@@ -154,24 +169,20 @@ pub struct Response {
     pub weights: WeightVersion,
 }
 
-/// Per-worker serving counters (the per-lane view of routing health:
-/// a worker with high `pinned_full` is a stall hot-spot; high `spilled_in`
-/// means it absorbs other lanes' overflow).
+/// Per-worker serving counters (the per-worker view of scheduler health:
+/// high `steals` means this worker drains other workers' backlogs).
 #[derive(Debug, Default, Clone, Copy)]
-pub struct LaneStats {
+pub struct WorkerStats {
     /// utterance requests this worker completed
     pub completed: u64,
-    /// requests that arrived here by spilling off a full pinned lane
-    pub spilled_in: u64,
-    /// submissions that found this worker's queue full while it was the
-    /// pinned target (each one either spilled elsewhere or was rejected)
-    pub pinned_full: u64,
-    /// streaming audio chunks processed by this worker's sessions
+    /// runnables this worker stole from another worker's local queue
+    pub steals: u64,
+    /// streaming audio chunks processed by this worker
     pub stream_chunks: u64,
 }
 
 /// Aggregate serving statistics: a point-in-time fold of the per-worker
-/// telemetry shards and the lock-free routing counters. Every field is
+/// telemetry shards and the lock-free scheduler counters. Every field is
 /// fixed-size — the snapshot's memory footprint is independent of how many
 /// requests the pool has served (see [`Stats::telemetry_bytes`]).
 #[derive(Debug, Clone, Default)]
@@ -179,23 +190,37 @@ pub struct Stats {
     pub completed: u64,
     pub correct: u64,
     pub labelled: u64,
-    /// submissions rejected with every queue saturated (transient
-    /// backpressure — the producer saw [`SubmitError::QueueFull`] and
-    /// can retry)
+    /// submissions rejected with the utterance admission window full
+    /// (transient backpressure — the producer saw
+    /// [`SubmitError::QueueFull`] and can retry)
     pub rejected_full: u64,
-    /// submissions rejected with every reachable lane disconnected
-    /// (shutdown race — the producer saw [`SubmitError::Closed`]).
+    /// submissions rejected against a shut-down pool (shutdown race).
     /// Post-shutdown rejections from [`Client`] handles outliving the
-    /// pool are only observable by the caller: there is no router left
-    /// to count them.
+    /// pool are only observable by the caller: there is no shared state
+    /// left to count them.
     pub rejected_closed: u64,
-    /// requests accepted by a non-pinned worker (pinned queue was full);
-    /// folded from per-lane atomics by [`Coordinator::stats`]
-    pub spilled: u64,
+    /// runnables executed by a worker other than the one whose local
+    /// queue held them (the work-stealing path; folded from the shards)
+    pub steals: u64,
+    /// runnable → parked transitions (a session drained its inbox and
+    /// left the hot set; the serving-layer clock-gate closing)
+    pub park_transitions: u64,
+    /// gauge: sessions currently parked (gate closed, inbox empty —
+    /// costing no scheduler attention)
+    pub sessions_parked: u64,
+    /// gauge: sessions currently queued or running on the pool
+    pub sessions_runnable: u64,
+    /// `open_stream` calls shed with [`SubmitError::Overloaded`] at the
+    /// admission high-water mark
+    pub shed_overloaded: u64,
     /// wall-clock utterance service-time distribution (µs), log-bucketed
     pub latency: LogHistogram,
     /// wall-clock stream-chunk service-time distribution (µs)
     pub chunk_latency: LogHistogram,
+    /// wake-to-poll scheduling latency distribution (µs): time from a
+    /// push re-arming a parked session to a worker polling its first
+    /// frame of the wake
+    pub sched_latency: LogHistogram,
     /// merged chip activity across workers
     pub activity: ChipActivity,
     /// fused request groups served through the batched-chip path
@@ -204,7 +229,7 @@ pub struct Stats {
     /// stream events shed on full session event channels (clients that
     /// never drain their receivers; see [`STREAM_EVENT_CAP`])
     pub stream_events_dropped: u64,
-    /// gauge: live per-session pipeline state across all workers, bytes
+    /// gauge: live per-session pipeline state across all sessions, bytes
     /// (bounded by construction — frame staging buffer + detector window
     /// per session; 0 once every session is closed)
     pub session_bytes: u64,
@@ -217,9 +242,9 @@ pub struct Stats {
     /// enrollment wall-clock latency distribution (µs), recorded once per
     /// [`Coordinator::enroll`] call — control path, never per frame
     pub enroll_latency: LogHistogram,
-    /// per-worker routing/serving counters (indexed by worker; folded
-    /// from lane atomics + telemetry shards by [`Coordinator::stats`])
-    pub per_worker: Vec<LaneStats>,
+    /// per-worker scheduler/serving counters (indexed by worker; folded
+    /// from the telemetry shards by [`Coordinator::stats`])
+    pub per_worker: Vec<WorkerStats>,
     /// monotonic capture timestamp ([`crate::obs::monotonic_us`]), stamped
     /// by [`Coordinator::stats`]; what makes two snapshots comparable via
     /// [`Stats::delta_since`]
@@ -249,18 +274,19 @@ impl Stats {
     }
 
     /// Heap footprint of this telemetry snapshot — constant in the request
-    /// count by construction (histogram bucket arrays + per-worker lane
+    /// count by construction (histogram bucket arrays + per-worker
     /// table). The soak harness asserts it stays flat under load.
     pub fn telemetry_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
             + self.latency.heap_bytes()
             + self.chunk_latency.heap_bytes()
+            + self.sched_latency.heap_bytes()
             + self.enroll_latency.heap_bytes()
-            + self.per_worker.len() * std::mem::size_of::<LaneStats>()
+            + self.per_worker.len() * std::mem::size_of::<WorkerStats>()
     }
 
     /// Streaming audio chunks processed pool-wide (folded from the
-    /// per-worker lanes).
+    /// per-worker shards).
     pub fn stream_chunks(&self) -> u64 {
         self.per_worker.iter().map(|w| w.stream_chunks).sum()
     }
@@ -276,7 +302,10 @@ impl Stats {
             completed: self.completed.saturating_sub(prev.completed),
             rejected_full: self.rejected_full.saturating_sub(prev.rejected_full),
             rejected_closed: self.rejected_closed.saturating_sub(prev.rejected_closed),
-            spilled: self.spilled.saturating_sub(prev.spilled),
+            steals: self.steals.saturating_sub(prev.steals),
+            park_transitions: self
+                .park_transitions
+                .saturating_sub(prev.park_transitions),
             fused_batches: self.fused_batches.saturating_sub(prev.fused_batches),
             stream_events_dropped: self
                 .stream_events_dropped
@@ -301,8 +330,10 @@ pub struct StatsDelta {
     pub rejected_full: u64,
     /// closed-pool rejections in the window
     pub rejected_closed: u64,
-    /// spilled submissions in the window
-    pub spilled: u64,
+    /// work-steals in the window
+    pub steals: u64,
+    /// runnable → parked transitions in the window
+    pub park_transitions: u64,
     /// fused batches served in the window
     pub fused_batches: u64,
     /// stream events shed in the window
@@ -344,6 +375,12 @@ impl StatsDelta {
     pub fn frames_per_sec(&self) -> f64 {
         Self::per_sec(self.frames, self.elapsed_us)
     }
+
+    /// Work-steals per second over the window (scheduler-health rate for
+    /// the soak-scale trajectory block).
+    pub fn steals_per_sec(&self) -> f64 {
+        Self::per_sec(self.steals, self.elapsed_us)
+    }
 }
 
 /// Exact percentile of a sample by the exclusive nearest-rank rule with a
@@ -363,65 +400,151 @@ pub fn percentile(xs: &[u64], p: f64) -> u64 {
     v[rank.clamp(1, n) - 1]
 }
 
-/// One unit of work on a worker lane. Stream jobs are keyed by a unique
-/// *session* id (the stream id only picks the pinned lane), so two
-/// sessions opened on the same stream id coexist instead of clobbering
-/// each other's worker state.
-enum Job {
-    /// a per-utterance inference request (spillable); `reply` is the
-    /// submitting client's mailbox — the completion path delivers there,
-    /// routed by request id, never to a global queue
-    Utterance {
-        req: Request,
-        trace: TraceId,
-        enqueued: Instant,
-        reply: Weak<Mailbox>,
-        /// weights resolved (and touched) at submit — the Arc keeps the
-        /// table alive on this job even if the registry evicts it mid-queue
-        weights: (WeightVersion, Arc<QuantParams>),
-    },
-    /// a fused group of independent utterances served in lockstep through
-    /// the batched-chip path (one weight-row fetch per fired lane per
-    /// frame for the whole group); routed as one unit to one worker,
-    /// lean-only (`Request::trace` is ignored); `traces` parallels `reqs`
-    UtteranceBatch {
-        reqs: Vec<Request>,
-        traces: Vec<TraceId>,
-        enqueued: Instant,
-        reply: Weak<Mailbox>,
-        /// per-member resolved weights, parallel to `reqs`: the worker
-        /// regroups the batch by version so each fused sub-group steps
-        /// against one coherent weight table (never a mixed fetch)
-        weights: Vec<(WeightVersion, Arc<QuantParams>)>,
-    },
-    /// open a streaming session pinned to this worker (`config`: per-
-    /// session VAD/detector tuning, `None` = pool default; `alive` is
-    /// cleared by the client handle so the worker can GC sessions whose
-    /// Close was never deliverable)
-    StreamOpen {
-        session: u64,
-        trace: TraceId,
-        config: Option<StreamConfig>,
-        events: SyncSender<StreamEvent>,
-        alive: Arc<AtomicBool>,
-        /// the session's weight version, resolved and *pinned* at open
-        /// (the worker unpins it when the session finishes)
-        weights: (WeightVersion, Arc<QuantParams>),
-    },
-    /// an audio chunk for an open session
-    StreamData { session: u64, chunk: Vec<i64>, enqueued: Instant },
-    /// install `version` on an open session at the next frame boundary
-    /// (the epoch fence — see DESIGN.md §14). The new version was pinned
-    /// at submit; the worker unpins the outgoing one after the swap and
-    /// acknowledges with [`StreamEvent::WeightsSwapped`].
-    SwapWeights { session: u64, version: WeightVersion, params: Arc<QuantParams> },
-    /// close a session (flushes telemetry, emits [`StreamEvent::Closed`])
-    StreamClose { session: u64 },
-    /// publish a fresh chip-report snapshot into the telemetry shard and
-    /// acknowledge (the pull half of [`Coordinator::reports`]; the ack
-    /// channel is bounded — capacity = lane count — and the worker side
-    /// uses `try_send`, so a slow or dead requester can never block a lane)
-    PublishReport { ack: SyncSender<()> },
+/// A message on a session's inbox. Chunks are capped at the pool's
+/// `queue_depth` (backpressure); control messages (`Swap`, `Close`)
+/// always enqueue, so a flooded session can still be swapped or closed.
+enum SessionMsg {
+    /// an audio chunk (`enq_us`: monotonic enqueue stamp for the
+    /// chunk-latency histogram)
+    Chunk { audio: Vec<i64>, enq_us: u64 },
+    /// install a new weight version at the next frame boundary (the
+    /// epoch fence — see DESIGN.md §14). Pinned at submit; the worker
+    /// unpins the outgoing version after the swap and acknowledges with
+    /// [`StreamEvent::WeightsSwapped`].
+    Swap { version: WeightVersion, params: Arc<QuantParams>, image: Arc<Vec<u16>> },
+    /// close the session (flushes telemetry, emits
+    /// [`StreamEvent::Closed`] exactly once)
+    Close,
+}
+
+/// Scheduler state of one session (DESIGN.md §15 lifecycle diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SessState {
+    /// gate closed, inbox empty: a heap entry, not a runnable — the
+    /// serving-layer clock-gate. The next push re-arms the session.
+    Parked,
+    /// inbox non-empty and a `Runnable::Session` for this cell is on the
+    /// pool (exactly one: the single-runnable invariant)
+    Queued,
+    /// a worker is processing one inbox message right now
+    Running,
+    /// terminal: `Closed` was delivered; pushes fail with
+    /// [`StreamPushError::Closed`]
+    Closed,
+}
+
+/// The push-side half of a session cell: message queue + scheduler state,
+/// under one short-held lock (producers and the scheduler touch this;
+/// the pipeline itself is behind the separate `core` lock so pushes
+/// never wait out a frame computation).
+struct Inbox {
+    msgs: VecDeque<SessionMsg>,
+    /// chunks currently queued (control messages are exempt from the cap)
+    chunks: usize,
+    state: SessState,
+    /// monotonic stamp of the park → queued transition, consumed by the
+    /// first poll after the wake ([`Stats::sched_latency`])
+    wake_us: u64,
+    wake_pending: bool,
+}
+
+/// The worker-side half: the detection pipeline and swap bookkeeping.
+/// Locked by exactly one worker at a time (the single-runnable
+/// invariant), so in practice uncontended.
+struct SessionCore {
+    pipeline: StreamPipeline,
+    /// last observed VAD gate state, threaded across chunks so the
+    /// recorder emits gate open/close transitions (not per-frame noise)
+    last_gated: Option<bool>,
+    /// the session's active weight version: pinned in the registry for as
+    /// long as the session lives (updated by [`SessionMsg::Swap`], which
+    /// unpins the predecessor), unpinned when the session finishes
+    version: WeightVersion,
+    /// bytes this session currently books against the pool-wide
+    /// `session_bytes` gauge (kept exact so the gauge returns to zero
+    /// when every session closes)
+    booked: u64,
+}
+
+/// One streaming session: a runnable state machine shared between the
+/// client handle ([`StreamSession`]), the sessions map, and in-flight
+/// runnables.
+struct SessionCell {
+    /// unique id keying [`Shared::sessions`] (stream ids may repeat)
+    session: u64,
+    stream: u64,
+    /// session-scoped trace id, stamped on every recorder event and
+    /// every [`StreamEvent`] this session emits
+    trace: TraceId,
+    /// bounded event channel to the client ([`STREAM_EVENT_CAP`])
+    events: SyncSender<StreamEvent>,
+    inbox: Mutex<Inbox>,
+    core: Mutex<SessionCore>,
+}
+
+/// One queued utterance: the unit of work on a stream's FIFO chain.
+struct UttWork {
+    req: Request,
+    trace: TraceId,
+    /// monotonic enqueue stamp (service time + Dequeue telemetry)
+    enq_us: u64,
+    /// the submitting client's mailbox — the completion path delivers
+    /// there, routed by request id, never to a global queue
+    reply: Weak<Mailbox>,
+    /// weights resolved at submit — the Arcs keep the table alive on
+    /// this job even if the registry evicts it mid-queue
+    weights: (WeightVersion, Arc<QuantParams>, Arc<Vec<u16>>),
+    /// per-stream submission sequence (see [`Response::stream_seq`])
+    stream_seq: u64,
+}
+
+/// Per-stream utterance FIFO: requests on one stream execute in
+/// submission order through exactly one in-flight `Runnable::Chain`
+/// (`scheduled`), re-enqueued with worker affinity while work remains.
+struct ChainState {
+    q: VecDeque<UttWork>,
+    /// true while a `Runnable::Chain` for this cell is queued or running
+    scheduled: bool,
+    /// next [`Response::stream_seq`] to mint for this stream
+    next_seq: u64,
+}
+
+struct ChainCell {
+    stream: u64,
+    state: Mutex<ChainState>,
+}
+
+/// A fused group of independent utterances served in lockstep through
+/// the batched-chip path (one weight-row fetch per fired lane per frame
+/// for the whole group); scheduled as ONE runnable so the group stays
+/// co-located on one worker, lean-only (`Request::trace` is ignored).
+struct FusedWork {
+    reqs: Vec<Request>,
+    /// parallel to `reqs`
+    traces: Vec<TraceId>,
+    enq_us: u64,
+    reply: Weak<Mailbox>,
+    /// per-member resolved weights, parallel to `reqs`: the worker
+    /// regroups the batch by version so each fused sub-group steps
+    /// against one coherent weight table (never a mixed fetch)
+    weights: Vec<(WeightVersion, Arc<QuantParams>, Arc<Vec<u16>>)>,
+    /// parallel to `reqs` (minted from each member's stream chain)
+    stream_seqs: Vec<u64>,
+}
+
+/// One unit of schedulable work on the pool. Everything — stream wakes,
+/// utterance chains, fused groups — competes for the same workers, so a
+/// worker stalled on one hot session no longer starves anyone.
+enum Runnable {
+    /// a woken session: the worker polls ONE inbox message, then
+    /// re-enqueues (inbox non-empty) or parks (empty) — round-robin
+    /// fairness across hot sessions
+    Session(Arc<SessionCell>),
+    /// a stream's utterance FIFO: the worker pops ONE request, then
+    /// re-enqueues with affinity while the chain has work
+    Chain(Arc<ChainCell>),
+    /// a fused utterance group (runs to completion as one unit)
+    Fused(Box<FusedWork>),
 }
 
 /// Asynchronous output of a [`StreamSession`]. Every event carries the
@@ -480,78 +603,97 @@ pub struct EnrollOutcome {
     pub latency_us: u64,
 }
 
-/// Why one lane refused an utterance job (the request rides back).
-enum LaneError {
-    /// lane queue full — another lane (or a later retry) may accept
-    Full(Request),
-    /// lane disconnected — its worker is gone for good
-    Disconnected(Request),
-}
-
-/// Why the pinned lane refused a stream job (the job rides back).
-enum StreamLaneError {
-    Full(Job),
-    Disconnected(Job),
-}
-
-/// Why every lane refused a fused request group (the group rides back
+/// Why the pool refused a fused request group (the group rides back
 /// intact so [`Client::submit_fused`] can retry it whole).
-enum FusedLaneError {
+enum FusedError {
+    /// admission window full — retryable
     Full(Vec<Request>),
-    Disconnected(Vec<Request>),
     /// a member named an unknown/evicted weight version: not retryable,
     /// the whole group is handed back with the failed lookup
     Weights(Vec<Request>, crate::custom::RegistryError),
 }
 
-/// One worker's request lane (the submit-side view).
-struct Lane {
-    tx: SyncSender<Job>,
-    depth: Arc<AtomicU64>,
-    /// failure-injection: worker refuses work while true (tests)
-    stalled: Arc<AtomicBool>,
-    /// lock-free routing counters, folded into [`Stats::per_worker`] at
-    /// read time — the submit hot path must not take any lock
-    pinned_full: AtomicU64,
-    spilled_in: AtomicU64,
+/// Poison-tolerant lock: a panicked holder's state is still consistent
+/// enough to read (the scheduler never leaves half-applied transitions
+/// behind an early return), and the serving layer must not cascade one
+/// worker's panic into every client.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poison| poison.into_inner())
 }
 
-/// Shared routing state: what [`Coordinator::submit`] and every [`Client`]
-/// operate on. Dropping the coordinator drops the lanes' senders, which is
-/// what tells workers to drain and exit.
-struct Router {
-    lanes: Vec<Lane>,
-    /// per-worker telemetry shards (worker w writes shards[w] only)
-    shards: Vec<Arc<WorkerShard>>,
-    /// submissions rejected with every queue saturated (lock-free)
+/// Shared pool state: what every [`Client`], [`StreamSession`] and worker
+/// operate on. Dropping the coordinator shuts the pool down: workers
+/// drain every queued runnable, then exit.
+struct Shared {
+    /// the work-stealing run queue (see [`sched`])
+    pool: WorkQueue<Runnable>,
+    /// every live session, keyed by unique session id. Parked sessions
+    /// live ONLY here — that is what makes them cheap.
+    sessions: Mutex<HashMap<u64, Arc<SessionCell>>>,
+    /// per-stream utterance FIFOs. Never GC'd: bounded by distinct
+    /// stream ids ever submitted, and a chain is two words plus its
+    /// (usually empty) queue.
+    chains: Mutex<HashMap<u64, Arc<ChainCell>>>,
+    /// utterances admitted but not yet completed, bounded by
+    /// `max_inflight` (the v2 `workers × queue_depth` total capacity)
+    inflight: AtomicUsize,
+    max_inflight: usize,
+    /// live-session high-water mark ([`CoordinatorBuilder::max_sessions`];
+    /// `usize::MAX` = unlimited)
+    max_sessions: usize,
+    /// per-session chunk backpressure cap (the v2 lane-depth contract)
+    queue_depth: usize,
+    /// gauges (see [`Stats`])
+    sessions_parked: AtomicU64,
+    sessions_runnable: AtomicU64,
+    session_bytes: AtomicU64,
+    shed_overloaded: AtomicU64,
     rejected_full: AtomicU64,
-    /// submissions rejected with every reachable lane disconnected
     rejected_closed: AtomicU64,
     next_id: AtomicU64,
     /// unique ids for [`StreamSession`]s (stream ids may repeat)
     next_session: AtomicU64,
     /// request-scoped trace ids (starts at 1; 0 is [`TraceId::NONE`])
     next_trace: AtomicU64,
+    /// per-worker telemetry shards (worker w writes shards[w] only)
+    shards: Vec<Arc<WorkerShard>>,
+    /// failure-injection: worker w refuses to pop work while stalled[w]
+    /// (tests); queued work waits or is stolen by healthy workers
+    stalled: Vec<AtomicBool>,
+    /// pull-based report protocol: [`Coordinator::reports`] raises every
+    /// flag, each worker publishes + lowers its own, the condvar counts
+    /// them down (bounded wait — no channel, no per-report allocation)
+    report_req: Vec<AtomicBool>,
+    report_left: Mutex<usize>,
+    report_cv: Condvar,
+    /// serializes concurrent [`Coordinator::reports`] callers
+    report_gate: Mutex<()>,
     /// per-worker flight recorders (disabled singletons unless the pool
     /// was built with [`CoordinatorBuilder::recorder`]). Submit-side
-    /// events land on the *pinned* lane's ring; worker-side events on the
-    /// executing lane's.
+    /// events land on the home shard's ring (`stream % workers`);
+    /// worker-side events on the executing worker's.
     recorders: Vec<Arc<FlightRecorder>>,
     /// every mailbox handed out (default + per client), closed at pool
     /// shutdown so blocked ticket waits resolve to `Closed`. Locked only
     /// on client creation and shutdown — never on the submit path.
     mailboxes: Mutex<Vec<Weak<Mailbox>>>,
     /// the versioned weight registry (enrolled heads + the base weights);
-    /// shared with the workers, which pin/unpin per live session
+    /// sessions pin/unpin their active version against it
     registry: Arc<WeightRegistry>,
-    /// the pool's base weights: inserted and permanently pinned at spawn,
-    /// so resolving `weights: None` can never fail
-    base: (WeightVersion, Arc<QuantParams>),
+    /// the pool's base weights (+ shared SRAM image): inserted and
+    /// permanently pinned at spawn, so resolving `weights: None` can
+    /// never fail — and every base-version chip shares ONE image
+    base: (WeightVersion, Arc<QuantParams>, Arc<Vec<u16>>),
+    default_stream: StreamConfig,
+    chip_config: ChipConfig,
+    report_epoch: u64,
 }
 
-impl Router {
-    fn pinned_lane(&self, stream: u64) -> usize {
-        (stream as usize) % self.lanes.len()
+impl Shared {
+    /// The "home" shard for submit-side recorder events (the v2 pinned
+    /// lane, kept as a stable trace-correlation convention).
+    fn home(&self, stream: u64) -> usize {
+        (stream as usize) % self.shards.len()
     }
 
     fn mint_trace(&self) -> TraceId {
@@ -559,23 +701,55 @@ impl Router {
     }
 
     /// Resolve a request's optional weight version against the registry
-    /// (touching its LRU slot). `None` is the pool base, which is
+    /// (touching its LRU slot) to the (version, params, SRAM image)
+    /// triple a chip twin serves from. `None` is the pool base, which is
     /// permanently pinned and therefore always resolvable.
     fn resolve_weights(
         &self,
         version: Option<WeightVersion>,
-    ) -> Result<(WeightVersion, Arc<QuantParams>), crate::custom::RegistryError> {
+    ) -> Result<
+        (WeightVersion, Arc<QuantParams>, Arc<Vec<u16>>),
+        crate::custom::RegistryError,
+    > {
         match version {
-            Some(v) => Ok((v, self.registry.get(v)?)),
-            None => Ok((self.base.0, Arc::clone(&self.base.1))),
+            Some(v) => {
+                let params = self.registry.get(v)?;
+                let image = self.registry.image(v)?;
+                Ok((v, params, image))
+            }
+            None => Ok((self.base.0, Arc::clone(&self.base.1), Arc::clone(&self.base.2))),
         }
     }
 
-    /// Routing: the stream's pinned worker unless its queue is full, then
-    /// least-loaded spill. The request id is registered with `mailbox`
-    /// *before* enqueueing (a fast worker must find the id expected), and
-    /// withdrawn again on rejection. `Err` distinguishes global
-    /// backpressure (`QueueFull`, retryable) from a dead pool (`Closed`).
+    /// Reserve `n` utterance-admission slots. `false` = window full (the
+    /// caller rejects with [`SubmitError::QueueFull`]).
+    fn admit(&self, n: usize) -> bool {
+        let prev = self.inflight.fetch_add(n, Ordering::Relaxed);
+        if prev + n > self.max_inflight {
+            self.inflight.fetch_sub(n, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Get-or-create the utterance chain for `stream`.
+    fn chain(&self, stream: u64) -> Arc<ChainCell> {
+        let mut chains = plock(&self.chains);
+        Arc::clone(chains.entry(stream).or_insert_with(|| {
+            Arc::new(ChainCell {
+                stream,
+                state: Mutex::new(ChainState {
+                    q: VecDeque::new(),
+                    scheduled: false,
+                    next_seq: 0,
+                }),
+            })
+        }))
+    }
+
+    /// Admission + FIFO enqueue: the request id is registered with
+    /// `mailbox` *before* enqueueing (a fast worker must find the id
+    /// expected). `Err` is typed backpressure with the payload back.
     fn submit(&self, mut req: Request, mailbox: &Arc<Mailbox>) -> Result<Ticket, SubmitError> {
         // resolve the weight version first: an unknown/evicted version is
         // a submit-time rejection, not a worker-side surprise
@@ -583,203 +757,133 @@ impl Router {
             Ok(w) => w,
             Err(e) => return Err(SubmitError::UnknownWeights(req, e)),
         };
+        let home = self.home(req.stream);
+        let trace = self.mint_trace();
+        if !self.admit(1) {
+            self.rejected_full.fetch_add(1, Ordering::Relaxed);
+            self.recorders[home].record(home as u32, trace, EventKind::Backpressure);
+            return Err(SubmitError::QueueFull(req));
+        }
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let id = req.id;
         let stream = req.stream;
         mailbox.register(id);
-        let reply = Arc::downgrade(mailbox);
-        // lint:allow(no-wallclock): queue-latency telemetry stamp, taken once per submit on the serving control path (not the frame path)
-        let now = Instant::now();
-        let pinned = self.pinned_lane(stream);
-        let trace = self.mint_trace();
-        self.recorders[pinned].record(pinned as u32, trace, EventKind::Submit);
-        let mut any_full = false;
-        let mut req = match self.try_lane(pinned, req, trace, now, &reply, &weights) {
-            Ok(()) => return Ok(Ticket::new(id, stream, Arc::clone(mailbox))),
-            Err(LaneError::Full(r)) => {
-                self.lanes[pinned].pinned_full.fetch_add(1, Ordering::Relaxed);
-                any_full = true;
-                r
-            }
-            Err(LaneError::Disconnected(r)) => r,
-        };
-        // spill: least-loaded first
-        let mut order: Vec<usize> = (0..self.lanes.len()).filter(|&w| w != pinned).collect();
-        order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
-        for w in order {
-            req = match self.try_lane(w, req, trace, now, &reply, &weights) {
-                Ok(()) => {
-                    self.lanes[w].spilled_in.fetch_add(1, Ordering::Relaxed);
-                    return Ok(Ticket::new(id, stream, Arc::clone(mailbox)));
-                }
-                Err(LaneError::Full(r)) => {
-                    any_full = true;
-                    r
-                }
-                Err(LaneError::Disconnected(r)) => r,
-            };
-        }
-        mailbox.unregister(id);
-        if any_full {
-            self.rejected_full.fetch_add(1, Ordering::Relaxed);
-            self.recorders[pinned].record(pinned as u32, trace, EventKind::Backpressure);
-            Err(SubmitError::QueueFull(req))
-        } else {
-            self.rejected_closed.fetch_add(1, Ordering::Relaxed);
-            Err(SubmitError::Closed(req))
-        }
-    }
-
-    fn try_lane(
-        &self,
-        w: usize,
-        req: Request,
-        trace: TraceId,
-        t: Instant,
-        reply: &Weak<Mailbox>,
-        weights: &(WeightVersion, Arc<QuantParams>),
-    ) -> Result<(), LaneError> {
-        let job = Job::Utterance {
+        self.recorders[home].record(home as u32, trace, EventKind::Submit);
+        let work = UttWork {
             req,
             trace,
-            enqueued: t,
-            reply: reply.clone(),
-            weights: (weights.0, Arc::clone(&weights.1)),
+            enq_us: monotonic_us(),
+            reply: Arc::downgrade(mailbox),
+            weights,
+            stream_seq: 0,
         };
-        match self.lanes[w].tx.try_send(job) {
-            Ok(()) => {
-                self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
-                Ok(())
+        let chain = self.chain(stream);
+        let need_sched = {
+            let mut st = plock(&chain.state);
+            let mut work = work;
+            work.stream_seq = st.next_seq;
+            st.next_seq += 1;
+            st.q.push_back(work);
+            if st.scheduled {
+                false
+            } else {
+                st.scheduled = true;
+                true
             }
-            Err(TrySendError::Full(Job::Utterance { req, .. })) => Err(LaneError::Full(req)),
-            Err(TrySendError::Disconnected(Job::Utterance { req, .. })) => {
-                Err(LaneError::Disconnected(req))
-            }
-            Err(_) => unreachable!("utterance job came back as a different variant"),
+        };
+        if need_sched {
+            self.pool.push(Runnable::Chain(chain));
         }
+        Ok(Ticket::new(id, stream, Arc::clone(mailbox)))
     }
 
-    /// Route a whole request group to ONE lane as a single fused job.
-    /// Ids are assigned and registered with `mailbox` before enqueueing
-    /// (same invariant as [`submit`](Self::submit)); rejection withdraws
-    /// every id and hands the group back intact. Lane choice is
-    /// least-loaded first: a fused group deliberately ignores per-stream
-    /// pinning, since amortizing the weight fetch requires co-locating
-    /// the whole group on one worker.
+    /// Route a whole request group as a single fused runnable. Ids are
+    /// assigned and registered with `mailbox` before enqueueing (same
+    /// invariant as [`submit`](Self::submit)); rejection hands the group
+    /// back intact with nothing registered.
     fn submit_fused(
         &self,
         mut reqs: Vec<Request>,
         mailbox: &Arc<Mailbox>,
-    ) -> Result<Batch, FusedLaneError> {
+    ) -> Result<Batch, FusedError> {
         // resolve every member's weights before minting any id: one bad
         // version rejects the group whole, with nothing registered
         let mut weights = Vec::with_capacity(reqs.len());
         for req in reqs.iter() {
             match self.resolve_weights(req.weights) {
                 Ok(w) => weights.push(w),
-                Err(e) => return Err(FusedLaneError::Weights(reqs, e)),
+                Err(e) => return Err(FusedError::Weights(reqs, e)),
             }
         }
+        if !self.admit(reqs.len()) {
+            self.rejected_full.fetch_add(1, Ordering::Relaxed);
+            return Err(FusedError::Full(reqs));
+        }
         let mut traces = Vec::with_capacity(reqs.len());
+        let mut stream_seqs = Vec::with_capacity(reqs.len());
         for req in reqs.iter_mut() {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
             mailbox.register(req.id);
             traces.push(self.mint_trace());
+            // sequence fused members on their stream chains (without
+            // scheduling the chain — the group runs as one unit)
+            let chain = self.chain(req.stream);
+            let mut st = plock(&chain.state);
+            stream_seqs.push(st.next_seq);
+            st.next_seq += 1;
         }
-        let meta: Vec<(u64, u64)> = reqs.iter().map(|r| (r.id, r.stream)).collect();
-        let reply = Arc::downgrade(mailbox);
-        // lint:allow(no-wallclock): queue-latency telemetry stamp, taken once per batch submit on the serving control path
-        let now = Instant::now();
-        let mut order: Vec<usize> = (0..self.lanes.len()).collect();
-        order.sort_by_key(|&w| self.lanes[w].depth.load(Ordering::Relaxed));
-        let mut any_full = false;
-        for w in order {
-            let job = Job::UtteranceBatch {
-                reqs,
-                traces: traces.clone(),
-                enqueued: now,
-                reply: reply.clone(),
-                weights: weights.clone(),
-            };
-            reqs = match self.lanes[w].tx.try_send(job) {
-                Ok(()) => {
-                    self.lanes[w].depth.fetch_add(1, Ordering::Relaxed);
-                    let tickets = meta
-                        .iter()
-                        .map(|&(id, stream)| Ticket::new(id, stream, Arc::clone(mailbox)))
-                        .collect();
-                    return Ok(Batch::new(tickets));
-                }
-                Err(TrySendError::Full(Job::UtteranceBatch { reqs, .. })) => {
-                    any_full = true;
-                    reqs
-                }
-                Err(TrySendError::Disconnected(Job::UtteranceBatch { reqs, .. })) => reqs,
-                Err(_) => unreachable!("fused job came back as a different variant"),
-            };
-        }
-        for &(id, _) in &meta {
-            mailbox.unregister(id);
-        }
-        if any_full {
-            self.rejected_full.fetch_add(1, Ordering::Relaxed);
-            Err(FusedLaneError::Full(reqs))
-        } else {
-            self.rejected_closed.fetch_add(1, Ordering::Relaxed);
-            Err(FusedLaneError::Disconnected(reqs))
-        }
+        let tickets = reqs
+            .iter()
+            .map(|r| Ticket::new(r.id, r.stream, Arc::clone(mailbox)))
+            .collect();
+        self.pool.push(Runnable::Fused(Box::new(FusedWork {
+            reqs,
+            traces,
+            enq_us: monotonic_us(),
+            reply: Arc::downgrade(mailbox),
+            weights,
+            stream_seqs,
+        })));
+        Ok(Batch::new(tickets))
     }
 
-    /// Non-blocking stream-job delivery to the stream's pinned lane (no
-    /// spill: the session state lives there). `Err` hands the job back
-    /// with the cause.
-    fn try_stream_job(&self, stream: u64, job: Job) -> Result<(), StreamLaneError> {
-        let lane = self.pinned_lane(stream);
-        match self.lanes[lane].tx.try_send(job) {
-            Ok(()) => {
-                self.lanes[lane].depth.fetch_add(1, Ordering::Relaxed);
-                Ok(())
-            }
-            Err(TrySendError::Full(j)) => Err(StreamLaneError::Full(j)),
-            Err(TrySendError::Disconnected(j)) => Err(StreamLaneError::Disconnected(j)),
+    /// Wake a session whose inbox just went non-empty: park → queued,
+    /// gauge movement, and the runnable onto the shared injector. The
+    /// caller holds the inbox lock and has already pushed the message.
+    fn wake(&self, cell: &Arc<SessionCell>, inbox: &mut Inbox) {
+        if inbox.state != SessState::Parked {
+            return;
         }
-    }
-
-    /// Blocking stream-job delivery (control messages: open/close). `Err`
-    /// only when the worker pool is gone.
-    fn send_stream_job(&self, stream: u64, job: Job) -> Result<(), Job> {
-        let lane = self.pinned_lane(stream);
-        match self.lanes[lane].tx.send(job) {
-            Ok(()) => {
-                self.lanes[lane].depth.fetch_add(1, Ordering::Relaxed);
-                Ok(())
-            }
-            Err(e) => Err(e.0),
-        }
+        inbox.state = SessState::Queued;
+        inbox.wake_us = monotonic_us();
+        inbox.wake_pending = true;
+        self.sessions_parked.fetch_sub(1, Ordering::Relaxed);
+        self.sessions_runnable.fetch_add(1, Ordering::Relaxed);
+        self.pool.push(Runnable::Session(Arc::clone(cell)));
     }
 }
 
 /// Cloneable, thread-safe submission handle with its own completion
 /// mailbox: responses to requests submitted through this handle (or its
 /// clones, which share the mailbox) are delivered here only, claimed via
-/// the returned [`Ticket`]s. Holds only a weak reference to the router:
+/// the returned [`Ticket`]s. Holds only a weak reference to the pool:
 /// once the owning [`Coordinator`] is dropped, submissions fail cleanly
 /// with [`SubmitError::Closed`] instead of keeping dead workers alive.
 #[derive(Clone)]
 pub struct Client {
-    router: Weak<Router>,
+    shared: Weak<Shared>,
     mailbox: Arc<Mailbox>,
 }
 
 impl Client {
-    /// Submit a request (same routing/backpressure contract as
+    /// Submit a request (same admission/backpressure contract as
     /// [`Coordinator::submit`]). `Ok` returns the completion [`Ticket`];
     /// `Err` hands the request back and names the cause —
     /// [`SubmitError::QueueFull`] is transient backpressure (retry),
     /// [`SubmitError::Closed`] is permanent (stop).
     pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
-        match self.router.upgrade() {
-            Some(router) => router.submit(req, &self.mailbox),
+        match self.shared.upgrade() {
+            Some(shared) => shared.submit(req, &self.mailbox),
             None => Err(SubmitError::Closed(req)),
         }
     }
@@ -814,16 +918,16 @@ impl Client {
         Ok(Batch::new(tickets))
     }
 
-    /// Submit a whole request group as ONE fused job: a single worker
-    /// steps every utterance in lockstep through the batched-chip path
-    /// ([`crate::accel::DeltaRnnAccel::step_frames_batched`]), fetching
-    /// each fired weight row once per frame for the whole group. Each
-    /// request still gets its own [`Response`] (bit-identical decision to
-    /// a solo submit), claimed through the returned [`Batch`] of tickets
-    /// in submission order.
+    /// Submit a whole request group as ONE fused runnable: a single
+    /// worker steps every utterance in lockstep through the batched-chip
+    /// path ([`crate::accel::DeltaRnnAccel::step_frames_batched`]),
+    /// fetching each fired weight row once per frame for the whole
+    /// group. Each request still gets its own [`Response`]
+    /// (bit-identical decision to a solo submit), claimed through the
+    /// returned [`Batch`] of tickets in submission order.
     ///
     /// Contract differences from [`submit_batch`](Self::submit_batch):
-    /// the group ignores per-stream worker pinning (co-location is the
+    /// the group runs co-located on one worker (co-location is the
     /// point) and always runs lean — [`Request::trace`] is ignored and
     /// [`Response::trace`] is `None`. Blocks through transient
     /// backpressure (the whole group retries as a unit); on a dead pool
@@ -833,16 +937,13 @@ impl Client {
             return Ok(Batch::new(Vec::new()));
         }
         loop {
-            let Some(router) = self.router.upgrade() else {
+            let Some(shared) = self.shared.upgrade() else {
                 return Err(SubmitError::Closed(reqs.remove(0)));
             };
-            reqs = match router.submit_fused(reqs, &self.mailbox) {
+            reqs = match shared.submit_fused(reqs, &self.mailbox) {
                 Ok(batch) => return Ok(batch),
-                Err(FusedLaneError::Full(r)) => r,
-                Err(FusedLaneError::Disconnected(mut r)) => {
-                    return Err(SubmitError::Closed(r.remove(0)));
-                }
-                Err(FusedLaneError::Weights(mut r, e)) => {
+                Err(FusedError::Full(r)) => r,
+                Err(FusedError::Weights(mut r, e)) => {
                     return Err(SubmitError::UnknownWeights(r.remove(0), e));
                 }
             };
@@ -854,99 +955,85 @@ impl Client {
     /// submit will fail with [`SubmitError::Closed`], so a retrying
     /// producer should stop.
     pub fn is_closed(&self) -> bool {
-        self.router.strong_count() == 0
+        self.shared.strong_count() == 0
     }
 }
 
 /// A long-lived streaming session: the client half of one always-on
-/// detection pipeline living on the stream's pinned worker.
+/// detection pipeline scheduled as a parkable runnable on the pool.
 ///
 /// Push 12-bit audio chunks of any size with [`push`](Self::push)
 /// (non-blocking, backpressured) or [`push_blocking`](Self::push_blocking);
-/// detections arrive asynchronously on [`events`](Self::events). Dropping
-/// the session (or calling [`close`](Self::close)) tears down the worker
-/// state and flushes its chip telemetry into the pool [`Stats`].
+/// detections arrive asynchronously on [`events`](Self::events). A push
+/// onto a parked (VAD-idle) session re-arms it on the scheduler — idle
+/// sessions cost nothing until audio wakes them. Dropping the session
+/// (or calling [`close`](Self::close)) tears down the pool-side state
+/// and flushes its chip telemetry into the pool [`Stats`].
 pub struct StreamSession {
-    stream: u64,
-    /// unique id keying the worker-side state (stream ids may repeat)
-    session: u64,
-    /// trace id minted at open; stamped on every event this session emits
-    trace: TraceId,
-    router: Weak<Router>,
+    cell: Arc<SessionCell>,
+    shared: Weak<Shared>,
     /// asynchronous session output ([`StreamEvent`])
     pub events: Receiver<StreamEvent>,
     closed: bool,
-    /// cleared on close/drop; the worker GCs sessions with a dead flag
-    alive: Arc<AtomicBool>,
 }
 
 impl StreamSession {
     pub fn stream_id(&self) -> u64 {
-        self.stream
+        self.cell.stream
     }
 
     /// The session's [`TraceId`] (minted at open): matches the `trace`
     /// field on every [`StreamEvent`] it emits and on the flight
     /// recorder's events for this session.
     pub fn trace_id(&self) -> TraceId {
-        self.trace
+        self.cell.trace
     }
 
     /// Submit an audio chunk (non-blocking). `Err` hands the chunk back:
-    /// [`StreamPushError::Backpressure`] when the pinned worker's queue
-    /// is full (pace the producer and retry),
-    /// [`StreamPushError::Closed`] when the pool is gone.
+    /// [`StreamPushError::Backpressure`] when the session already has
+    /// `queue_depth` chunks queued (pace the producer and retry),
+    /// [`StreamPushError::Closed`] when the session or pool is gone.
+    /// An accepted chunk on a parked session wakes it (the park →
+    /// runnable transition lands in [`Stats::sched_latency`]).
     pub fn push(&self, audio12: Vec<i64>) -> Result<(), StreamPushError> {
-        let Some(router) = self.router.upgrade() else {
+        let Some(shared) = self.shared.upgrade() else {
             return Err(StreamPushError::Closed(audio12));
         };
-        router
-            .try_stream_job(
-                self.stream,
-                Job::StreamData {
-                    session: self.session,
-                    chunk: audio12,
-                    // lint:allow(no-wallclock): chunk enqueue stamp for stream-latency telemetry, taken on the caller's thread before the lane hop
-                    enqueued: Instant::now(),
-                },
-            )
-            .map_err(|e| match e {
-                StreamLaneError::Full(Job::StreamData { chunk, .. }) => {
-                    let lane = router.pinned_lane(self.stream);
-                    router.recorders[lane].record(
-                        lane as u32,
-                        self.trace,
-                        EventKind::Backpressure,
-                    );
-                    StreamPushError::Backpressure(chunk)
-                }
-                StreamLaneError::Disconnected(Job::StreamData { chunk, .. }) => {
-                    StreamPushError::Closed(chunk)
-                }
-                _ => unreachable!("data job came back as a different variant"),
-            })
+        let mut inbox = plock(&self.cell.inbox);
+        if inbox.state == SessState::Closed {
+            return Err(StreamPushError::Closed(audio12));
+        }
+        if inbox.chunks >= shared.queue_depth {
+            drop(inbox);
+            let home = shared.home(self.cell.stream);
+            shared.recorders[home].record(
+                home as u32,
+                self.cell.trace,
+                EventKind::Backpressure,
+            );
+            return Err(StreamPushError::Backpressure(audio12));
+        }
+        inbox.chunks += 1;
+        inbox
+            .msgs
+            .push_back(SessionMsg::Chunk { audio: audio12, enq_us: monotonic_us() });
+        shared.wake(&self.cell, &mut inbox);
+        Ok(())
     }
 
-    /// Submit an audio chunk, blocking while the pinned queue is full.
-    /// `Err` is always [`StreamPushError::Closed`] (the pool is gone).
+    /// Submit an audio chunk, blocking while the session's chunk window
+    /// is full. `Err` is always [`StreamPushError::Closed`] (the session
+    /// or pool is gone).
     pub fn push_blocking(&self, audio12: Vec<i64>) -> Result<(), StreamPushError> {
-        let Some(router) = self.router.upgrade() else {
-            return Err(StreamPushError::Closed(audio12));
-        };
-        router
-            .send_stream_job(
-                self.stream,
-                Job::StreamData {
-                    session: self.session,
-                    chunk: audio12,
-                    // lint:allow(no-wallclock): chunk enqueue stamp for stream-latency telemetry, taken on the caller's thread before the lane hop
-                    enqueued: Instant::now(),
-                },
-            )
-            .map_err(|j| match j {
-                Job::StreamData { chunk, .. } => StreamPushError::Closed(chunk),
-                _ => unreachable!("data job came back as a different variant"),
-            })
+        let mut chunk = audio12;
+        loop {
+            chunk = match self.push(chunk) {
+                Ok(()) => return Ok(()),
+                Err(StreamPushError::Backpressure(c)) => c,
+                Err(e) => return Err(e),
+            };
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     /// Collect whatever events have arrived so far (non-blocking).
@@ -956,9 +1043,9 @@ impl StreamSession {
 
     /// Close the session and collect every remaining event, including the
     /// final [`StreamEvent::Closed`] telemetry marker. Waits (bounded) for
-    /// the worker to acknowledge; use `drop` for a fire-and-forget close.
+    /// a worker to acknowledge; use `drop` for a fire-and-forget close.
     pub fn close(mut self) -> Vec<StreamEvent> {
-        self.send_close(true);
+        self.send_close();
         let mut out = Vec::new();
         while let Ok(ev) = self.events.recv_timeout(Duration::from_secs(60)) {
             let done = matches!(ev, StreamEvent::Closed { .. });
@@ -970,47 +1057,36 @@ impl StreamSession {
         out
     }
 
-    /// `blocking` = wait for lane space (explicit [`close`](Self::close));
-    /// the Drop path must never hang, so it retries briefly and then gives
-    /// up — the worker GCs the session when it notices the event channel
-    /// is disconnected (or at pool shutdown).
-    fn send_close(&mut self, blocking: bool) {
+    /// Enqueue the Close control message (exempt from the chunk cap, so
+    /// a flooded session still closes). Idempotent; never blocks. An
+    /// unreachable pool means shutdown already delivered (or will
+    /// deliver) the `Closed` marker.
+    fn send_close(&mut self) {
         if self.closed {
             return;
         }
         self.closed = true;
-        // even if the Close below cannot be delivered, the cleared flag
-        // lets the worker GC the session on a later job
-        self.alive.store(false, Ordering::Relaxed);
-        let Some(router) = self.router.upgrade() else {
+        let Some(shared) = self.shared.upgrade() else {
             return;
         };
-        let mut job = Job::StreamClose { session: self.session };
-        if blocking {
-            let _ = router.send_stream_job(self.stream, job);
+        let mut inbox = plock(&self.cell.inbox);
+        if inbox.state == SessState::Closed {
             return;
         }
-        for _ in 0..20 {
-            job = match router.try_stream_job(self.stream, job) {
-                Ok(()) => return,
-                // the pinned worker is gone: nothing left to close
-                Err(StreamLaneError::Disconnected(_)) => return,
-                Err(StreamLaneError::Full(j)) => j,
-            };
-            std::thread::sleep(Duration::from_millis(1));
-        }
+        inbox.msgs.push_back(SessionMsg::Close);
+        shared.wake(&self.cell, &mut inbox);
     }
 }
 
 impl Drop for StreamSession {
     fn drop(&mut self) {
-        // non-blocking: a wedged lane must not hang a destructor; an
-        // undelivered Close is flushed by the worker's shutdown drain
-        self.send_close(false);
+        // non-blocking: enqueueing Close never waits; the pool's
+        // shutdown sweep covers a session whose Close was unreachable
+        self.send_close();
     }
 }
 
-/// The coordinator: worker pool + router state + telemetry shards.
+/// The coordinator: worker pool + scheduler state + telemetry shards.
 ///
 /// Construct with [`Coordinator::builder`]; submit through
 /// [`submit`](Self::submit) / [`submit_batch`](Self::submit_batch) (which
@@ -1018,8 +1094,9 @@ impl Drop for StreamSession {
 /// [`client`](Self::client) handles, and claim responses via the returned
 /// [`Ticket`]s.
 pub struct Coordinator {
-    /// `Some` until drop; taken first so lane senders close before joining
-    router: Option<Arc<Router>>,
+    /// `Some` until drop; taken first so the pool shuts down (workers
+    /// drain and exit) before the shutdown sweep and the joins
+    shared: Option<Arc<Shared>>,
     handles: Vec<JoinHandle<()>>,
     /// backs [`Coordinator::submit`] and the deprecated
     /// [`Coordinator::collect`] shim (its mailbox retains unclaimed
@@ -1038,7 +1115,7 @@ impl Coordinator {
         CoordinatorBuilder::new(params, config)
     }
 
-    /// Spawn `n_workers` chip twins, each with its own weight copy
+    /// Spawn `n_workers` chip twins over one work-stealing run queue
     /// (validated entry point: [`CoordinatorBuilder::build`]).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn spawn(
@@ -1050,103 +1127,96 @@ impl Coordinator {
         report_epoch: u64,
         recorder: Option<RecorderConfig>,
         registry_capacity: usize,
+        max_sessions: Option<usize>,
     ) -> Self {
         // the base weights become registry version zero-generation: they
         // are pinned once here and never unpinned, so `weights: None`
-        // submissions can always resolve
+        // submissions can always resolve — and every base chip shares
+        // ONE SRAM image (flat memory at parked-session scale)
         let registry = Arc::new(WeightRegistry::new(registry_capacity));
         let base_version = registry.insert(params.clone(), None);
         let base_params =
             registry.pin(base_version).expect("base version resident at spawn");
-        let base = (base_version, base_params);
-        let mut lanes = Vec::with_capacity(n_workers);
+        let base_image =
+            registry.image(base_version).expect("base image resident at spawn");
+        let base = (base_version, base_params, base_image);
         let mut shards = Vec::with_capacity(n_workers);
-        let mut handles = Vec::with_capacity(n_workers);
+        let mut stalled = Vec::with_capacity(n_workers);
+        let mut report_req = Vec::with_capacity(n_workers);
         let mut recorders = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
-            let (tx, rx) = sync_channel::<Job>(queue_depth);
-            let stalled = Arc::new(AtomicBool::new(false));
-            let depth = Arc::new(AtomicU64::new(0));
-            let shard = Arc::new(WorkerShard::default());
-            let rec = Arc::new(match &recorder {
+        for _ in 0..n_workers {
+            shards.push(Arc::new(WorkerShard::default()));
+            stalled.push(AtomicBool::new(false));
+            report_req.push(AtomicBool::new(false));
+            recorders.push(Arc::new(match &recorder {
                 Some(cfg) => FlightRecorder::new(cfg.clone()),
                 None => FlightRecorder::disabled(),
-            });
-            let handle = {
-                let base = (base.0, Arc::clone(&base.1));
-                let config = config.clone();
-                let default_stream = default_stream.clone();
-                let stalled = Arc::clone(&stalled);
-                let depth = Arc::clone(&depth);
-                let shard = Arc::clone(&shard);
-                let rec = Arc::clone(&rec);
-                let registry = Arc::clone(&registry);
-                std::thread::Builder::new()
-                    .name(format!("chip-worker-{w}"))
-                    .spawn(move || {
-                        worker_loop(
-                            w,
-                            base,
-                            config,
-                            default_stream,
-                            report_epoch,
-                            rx,
-                            shard,
-                            stalled,
-                            depth,
-                            rec,
-                            registry,
-                        )
-                    })
-                    .expect("spawn worker")
-            };
-            lanes.push(Lane {
-                tx,
-                depth,
-                stalled,
-                pinned_full: AtomicU64::new(0),
-                spilled_in: AtomicU64::new(0),
-            });
-            shards.push(shard);
-            handles.push(handle);
-            recorders.push(rec);
+            }));
         }
-        let router = Arc::new(Router {
-            lanes,
-            shards,
+        let shared = Arc::new(Shared {
+            pool: WorkQueue::new(n_workers),
+            sessions: Mutex::new(HashMap::new()),
+            chains: Mutex::new(HashMap::new()),
+            inflight: AtomicUsize::new(0),
+            max_inflight: n_workers * queue_depth,
+            max_sessions: max_sessions.unwrap_or(usize::MAX),
+            queue_depth,
+            sessions_parked: AtomicU64::new(0),
+            sessions_runnable: AtomicU64::new(0),
+            session_bytes: AtomicU64::new(0),
+            shed_overloaded: AtomicU64::new(0),
             rejected_full: AtomicU64::new(0),
             rejected_closed: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
             next_trace: AtomicU64::new(1),
+            shards,
+            stalled,
+            report_req,
+            report_left: Mutex::new(0),
+            report_cv: Condvar::new(),
+            report_gate: Mutex::new(()),
             recorders,
             mailboxes: Mutex::new(Vec::new()),
             registry,
             base,
+            default_stream,
+            chip_config: config,
+            report_epoch,
         });
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let shared = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("chip-worker-{w}"))
+                    .spawn(move || worker_loop(w, shared))
+                    .expect("spawn worker"),
+            );
+        }
         // the default mailbox retains unclaimed responses: that is the
         // queue the deprecated collect() shim drains
         let default_mailbox = Mailbox::new(true);
-        router.mailboxes.lock().unwrap().push(Arc::downgrade(&default_mailbox));
+        plock(&shared.mailboxes).push(Arc::downgrade(&default_mailbox));
         let default_client =
-            Client { router: Arc::downgrade(&router), mailbox: default_mailbox };
+            Client { shared: Arc::downgrade(&shared), mailbox: default_mailbox };
         Self {
-            router: Some(router),
+            shared: Some(shared),
             handles,
             default_client,
             registry: Mutex::new(MetricsRegistry::new()),
         }
     }
 
-    fn router(&self) -> &Router {
-        self.router.as_ref().expect("router alive until drop")
+    fn shared(&self) -> &Arc<Shared> {
+        self.shared.as_ref().expect("pool alive until drop")
     }
 
     /// Submit a request through the coordinator's default client.
-    /// Routing: the stream's pinned worker unless its queue is full, then
-    /// least-loaded healthy spill; [`SubmitError::QueueFull`] when every
-    /// queue is saturated (global backpressure — retry/shed). The
-    /// returned [`Ticket`] claims exactly this request's [`Response`].
+    /// Admission: a bounded in-flight window (`workers × queue_depth`);
+    /// [`SubmitError::QueueFull`] when it is saturated (global
+    /// backpressure — retry/shed). The returned [`Ticket`] claims
+    /// exactly this request's [`Response`].
     pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
         self.default_client.submit(req)
     }
@@ -1172,34 +1242,36 @@ impl Coordinator {
     /// own completion mailbox (clones share it; separate `client()`
     /// calls get isolated mailboxes — responses never cross).
     pub fn client(&self) -> Client {
-        let router = self.router.as_ref().expect("router alive");
+        let shared = self.shared();
         let mailbox = Mailbox::new(false);
-        let mut mailboxes = router.mailboxes.lock().unwrap();
+        let mut mailboxes = plock(&shared.mailboxes);
         // prune entries whose client (and all its tickets) are gone, so a
         // long-lived pool creating short-lived clients stays bounded
         mailboxes.retain(|mb| mb.strong_count() > 0);
         mailboxes.push(Arc::downgrade(&mailbox));
         drop(mailboxes);
-        Client { router: Arc::downgrade(router), mailbox }
+        Client { shared: Arc::downgrade(shared), mailbox }
     }
 
-    /// Open a long-lived streaming session on `stream`'s pinned worker:
-    /// an always-on detection pipeline (chip + VAD + wakeword state
-    /// machine) whose recurrent state persists until the session closes.
-    /// Stream ids may be reused — each call creates an independent
-    /// session (internally keyed by a unique session id). Sessions
-    /// opened without an explicit config use the pool's default
-    /// [`StreamConfig`] (a [`CoordinatorBuilder::default_stream`] knob).
+    /// Open a long-lived streaming session: an always-on detection
+    /// pipeline (chip + VAD + wakeword state machine) whose recurrent
+    /// state persists until the session closes. Stream ids may be reused
+    /// — each call creates an independent session (internally keyed by a
+    /// unique session id). Sessions opened without an explicit config
+    /// use the pool's default [`StreamConfig`]
+    /// (a [`CoordinatorBuilder::default_stream`] knob).
     ///
-    /// Delivery of the open is a control message on the pinned lane: if
-    /// that worker's queue is momentarily full, this call blocks until
-    /// space frees (it does not fail on transient backpressure). If the
-    /// pinned worker has *died* (its lane is disconnected), the returned
-    /// session is already dead: pushes hand the chunk back inside
-    /// [`StreamPushError::Closed`] and the event channel is empty — the
-    /// same recoverable contract as [`Client::submit`] after shutdown,
-    /// instead of a panic.
-    pub fn open_stream(&self, stream: u64) -> StreamSession {
+    /// The session starts *parked*: it costs no scheduler attention
+    /// until the first [`StreamSession::push`] wakes it, and it parks
+    /// again whenever its inbox drains — the serving-layer analog of the
+    /// chip's VAD clock gate.
+    ///
+    /// Admission control: beyond the builder's
+    /// [`max_sessions`](CoordinatorBuilder::max_sessions) high-water
+    /// mark this returns [`SubmitError::Overloaded`] (typed load-shed)
+    /// instead of degrading every admitted session; close a session (or
+    /// raise the mark) and retry.
+    pub fn open_stream(&self, stream: u64) -> Result<StreamSession, SubmitError> {
         self.open_stream_inner(stream, None, None)
     }
 
@@ -1208,17 +1280,21 @@ impl Coordinator {
     /// energy A/B stream, or per-microphone detector thresholds).
     ///
     /// The session config's chip settings are validated
-    /// ([`ChipConfig::validate`]) before any worker state is created —
+    /// ([`ChipConfig::validate`]) before any session state is created —
     /// [`Error::InvalidConfig`](crate::error::Error::InvalidConfig)
     /// instead of a session that silently computes nothing, the same
     /// contract [`CoordinatorBuilder`] applies to the pool default.
+    /// Admission overload surfaces as
+    /// [`Error::Submit`](crate::error::Error::Submit) wrapping
+    /// [`SubmitError::Overloaded`].
     pub fn open_stream_with(
         &self,
         stream: u64,
         config: StreamConfig,
     ) -> Result<StreamSession, crate::error::Error> {
         config.chip.validate()?;
-        Ok(self.open_stream_inner(stream, Some(config), None))
+        self.open_stream_inner(stream, Some(config), None)
+            .map_err(crate::error::Error::from)
     }
 
     /// [`open_stream`](Self::open_stream) on a specific registered
@@ -1226,13 +1302,15 @@ impl Coordinator {
     /// pipeline is built from that version's weight table and the
     /// version is *pinned* in the registry for the session's whole life —
     /// the LRU can never evict the weights out from under a live stream.
-    /// The worker unpins it when the session closes. An optional
+    /// The pin is released when the session closes. An optional
     /// per-session [`StreamConfig`] rides along (`None` = pool default).
     ///
     /// Fails up front with [`Error::Registry`](crate::error::Error::Registry)
-    /// when `version` is unknown or was evicted, and with the usual
+    /// when `version` is unknown or was evicted, with the usual
     /// [`Error::InvalidConfig`](crate::error::Error::InvalidConfig) when
-    /// the session config is invalid.
+    /// the session config is invalid, and with
+    /// [`Error::Submit`](crate::error::Error::Submit) wrapping
+    /// [`SubmitError::Overloaded`] at the admission high-water mark.
     pub fn open_stream_with_weights(
         &self,
         stream: u64,
@@ -1242,77 +1320,104 @@ impl Coordinator {
         if let Some(cfg) = &config {
             cfg.chip.validate()?;
         }
-        let router = self.router();
-        let params = router.registry.pin(version)?;
-        Ok(self.open_stream_inner(stream, config, Some((version, params))))
+        let shared = self.shared();
+        let params = shared.registry.pin(version)?;
+        let image = shared.registry.image(version)?;
+        self.open_stream_inner(stream, config, Some((version, params, image)))
+            .map_err(crate::error::Error::from)
     }
 
     fn open_stream_inner(
         &self,
         stream: u64,
         config: Option<StreamConfig>,
-        weights: Option<(WeightVersion, Arc<QuantParams>)>,
-    ) -> StreamSession {
-        // bounded: a client that never drains cannot grow worker memory
-        let (tx, rx) = sync_channel(STREAM_EVENT_CAP);
-        let router = self.router.as_ref().expect("router alive");
-        // sessions on the pool base still pin it: finish() unpins
+        weights: Option<(WeightVersion, Arc<QuantParams>, Arc<Vec<u16>>)>,
+    ) -> Result<StreamSession, SubmitError> {
+        let shared = self.shared();
+        // admission: the live-session high-water mark. Checked under the
+        // sessions lock so two racing opens cannot both slip under it.
+        let mut sessions = plock(&shared.sessions);
+        if sessions.len() >= shared.max_sessions {
+            drop(sessions);
+            shared.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+            if let Some((v, _, _)) = weights {
+                shared.registry.unpin(v);
+            }
+            return Err(SubmitError::Overloaded {
+                live: shared.sessions.lock().map(|s| s.len() as u64).unwrap_or(0),
+                high_water: shared.max_sessions as u64,
+            });
+        }
+        // sessions on the pool base still pin it: finish unpins
         // unconditionally, and the spawn-time pin keeps base resident
         let weights = weights.unwrap_or_else(|| {
             let params =
-                router.registry.pin(router.base.0).expect("base version pinned at spawn");
-            (router.base.0, params)
+                shared.registry.pin(shared.base.0).expect("base version pinned at spawn");
+            (shared.base.0, params, Arc::clone(&shared.base.2))
         });
-        let version = weights.0;
-        let session = router.next_session.fetch_add(1, Ordering::Relaxed);
-        let trace = router.mint_trace();
-        let lane = router.pinned_lane(stream);
-        router.recorders[lane].record(lane as u32, trace, EventKind::Submit);
-        let alive = Arc::new(AtomicBool::new(true));
-        let job = Job::StreamOpen {
+        // the pipeline is built on the caller's thread (open is a
+        // control-path operation) against the SHARED SRAM image: an idle
+        // session's weight table costs pointer-size, not a copy
+        let cfg = config.unwrap_or_else(|| shared.default_stream.clone());
+        let pipeline = StreamPipeline::new_shared(
+            Arc::clone(&weights.1),
+            Arc::clone(&weights.2),
+            cfg,
+        );
+        let booked = pipeline.state_bytes() as u64;
+        let session = shared.next_session.fetch_add(1, Ordering::Relaxed);
+        let trace = shared.mint_trace();
+        let home = shared.home(stream);
+        shared.recorders[home].record(home as u32, trace, EventKind::Submit);
+        shared.recorders[home].record(home as u32, trace, EventKind::SessionOpen);
+        // bounded: a client that never drains cannot grow session memory
+        let (tx, rx) = sync_channel(STREAM_EVENT_CAP);
+        let cell = Arc::new(SessionCell {
             session,
-            trace,
-            config,
-            events: tx,
-            alive: Arc::clone(&alive),
-            weights,
-        };
-        if router.send_stream_job(stream, job).is_err() {
-            // the job never reached a worker: release its pin here
-            router.registry.unpin(version);
-            return StreamSession {
-                stream,
-                session,
-                trace,
-                router: Weak::new(),
-                events: rx,
-                closed: true,
-                alive,
-            };
-        }
-        StreamSession {
             stream,
-            session,
             trace,
-            router: Arc::downgrade(router),
+            events: tx,
+            inbox: Mutex::new(Inbox {
+                msgs: VecDeque::new(),
+                chunks: 0,
+                state: SessState::Parked,
+                wake_us: 0,
+                wake_pending: false,
+            }),
+            core: Mutex::new(SessionCore {
+                pipeline,
+                last_gated: None,
+                version: weights.0,
+                booked,
+            }),
+        });
+        sessions.insert(session, Arc::clone(&cell));
+        drop(sessions);
+        shared.sessions_parked.fetch_add(1, Ordering::Relaxed);
+        shared.session_bytes.fetch_add(booked, Ordering::Relaxed);
+        Ok(StreamSession {
+            cell,
+            shared: Arc::downgrade(shared),
             events: rx,
             closed: false,
-            alive,
-        }
+        })
     }
 
     /// Install `version` on a live streaming session at its next frame
     /// boundary — the epoch-fenced hot-swap (DESIGN.md §14). The stream
     /// keeps running: no frame is dropped, duplicated, or decided by a
-    /// half-written weight table. The fence is the worker's job boundary —
-    /// every queued chunk ahead of the swap is fully decided by the old
-    /// weights; everything after it by `version`, against the recurrent
-    /// state the old weights left behind (bit-identical to a fresh chip
-    /// that was seeded with that state, see `rust/tests/customization.rs`).
+    /// half-written weight table. The fence is the session's message
+    /// boundary — every chunk queued ahead of the swap is fully decided
+    /// by the old weights; everything after it by `version`, against the
+    /// recurrent state the old weights left behind (bit-identical to a
+    /// fresh chip seeded with that state, see
+    /// `rust/tests/customization.rs`). Because the fence is a property
+    /// of the session cell, it holds regardless of WHICH worker runs the
+    /// neighbouring frames.
     ///
     /// `version` is pinned here (submit side) and the outgoing version is
-    /// unpinned by the worker once the swap lands, so neither table can be
-    /// evicted mid-flight. The worker acknowledges with
+    /// unpinned once the swap lands, so neither table can be evicted
+    /// mid-flight. The swap is acknowledged with
     /// [`StreamEvent::WeightsSwapped`] on the session's event channel;
     /// subsequent [`StreamEvent::Detection`]s carry the new version.
     ///
@@ -1320,20 +1425,36 @@ impl Coordinator {
     /// `version` is unknown/evicted, and with
     /// [`Error::StreamPush`](crate::error::Error::StreamPush)
     /// ([`StreamPushError::Closed`]) when the pool is gone. A swap raced
-    /// against session close is not an error: the worker drops it and
-    /// releases the pin.
+    /// against session close is not an error: it is dropped and the pin
+    /// released.
     pub fn swap_weights(
         &self,
         session: &StreamSession,
         version: WeightVersion,
     ) -> Result<(), crate::error::Error> {
-        let router = self.router();
-        let params = router.registry.pin(version)?;
-        let job = Job::SwapWeights { session: session.session, version, params };
-        if router.send_stream_job(session.stream, job).is_err() {
-            router.registry.unpin(version);
+        let shared = self.shared();
+        let params = shared.registry.pin(version)?;
+        let image = match shared.registry.image(version) {
+            Ok(i) => i,
+            Err(e) => {
+                shared.registry.unpin(version);
+                return Err(e.into());
+            }
+        };
+        let Some(sess_shared) = session.shared.upgrade() else {
+            shared.registry.unpin(version);
             return Err(StreamPushError::Closed(Vec::new()).into());
+        };
+        let mut inbox = plock(&session.cell.inbox);
+        if inbox.state == SessState::Closed {
+            // swap raced against close: the session is gone, release
+            // the pin taken above
+            drop(inbox);
+            shared.registry.unpin(version);
+            return Ok(());
         }
+        inbox.msgs.push_back(SessionMsg::Swap { version, params, image });
+        sess_shared.wake(&session.cell, &mut inbox);
         Ok(())
     }
 
@@ -1343,7 +1464,7 @@ impl Coordinator {
     /// are untouched), requantize through the chip's integer pipeline, and
     /// register the result as a new [`WeightVersion`] with `parent` as its
     /// lineage. Runs on the caller's thread through the native backend —
-    /// no worker lane is blocked. Deterministic: the same parent and
+    /// no worker is blocked. Deterministic: the same parent and
     /// config always produce the byte-identical version.
     ///
     /// `parent: None` enrolls from the pool's base weights.
@@ -1352,16 +1473,16 @@ impl Coordinator {
         parent: Option<WeightVersion>,
         cfg: EnrollConfig,
     ) -> crate::Result<EnrollOutcome> {
-        let router = self.router();
-        let parent_version = parent.unwrap_or(router.base.0);
-        let base = router.registry.get(parent_version).map_err(crate::error::Error::from)?;
+        let shared = self.shared();
+        let parent_version = parent.unwrap_or(shared.base.0);
+        let base = shared.registry.get(parent_version).map_err(crate::error::Error::from)?;
         // lint:allow(no-wallclock): enrollment-latency telemetry stamp on the control path (few-shot training, never per frame)
         let t0 = Instant::now();
         let backend = NativeBackend::new();
         let out = crate::custom::few_shot(&backend, &base, &cfg)?;
-        let version = router.registry.insert(out.params, Some(parent_version));
+        let version = shared.registry.insert(out.params, Some(parent_version));
         let latency_us = t0.elapsed().as_micros() as u64;
-        router.registry.record_enroll_us(latency_us);
+        shared.registry.record_enroll_us(latency_us);
         Ok(EnrollOutcome {
             version,
             parent: parent_version,
@@ -1376,13 +1497,13 @@ impl Coordinator {
     /// registering externally trained tables via
     /// [`WeightRegistry::insert`].
     pub fn registry(&self) -> &WeightRegistry {
-        &self.router().registry
+        &self.shared().registry
     }
 
     /// The pool's base [`WeightVersion`] (the weights the builder was
     /// given), permanently resident.
     pub fn base_version(&self) -> WeightVersion {
-        self.router().base.0
+        self.shared().base.0
     }
 
     /// Block until `n` responses have been collected from the default
@@ -1405,42 +1526,44 @@ impl Coordinator {
 
     /// Aggregate statistics snapshot: folds the per-worker telemetry
     /// shards (counters, latency histograms, chip activity) and the
-    /// lock-free routing counters. Pure read — no worker is interrupted
-    /// and no lock on any hot path is taken.
+    /// lock-free scheduler counters. Pure read — no worker is
+    /// interrupted and no lock on any hot path is taken.
     pub fn stats(&self) -> Stats {
-        let router = self.router();
+        let shared = self.shared();
         let mut s = Stats {
-            per_worker: Vec::with_capacity(router.lanes.len()),
+            per_worker: Vec::with_capacity(shared.shards.len()),
             ..Stats::default()
         };
-        let mut spilled = 0;
-        for (lane, shard) in router.lanes.iter().zip(router.shards.iter()) {
+        for shard in shared.shards.iter() {
             let completed = shard.completed.load(Ordering::Relaxed);
+            let steals = shard.steals.load(Ordering::Relaxed);
             s.completed += completed;
             s.labelled += shard.labelled.load(Ordering::Relaxed);
             s.correct += shard.correct.load(Ordering::Relaxed);
+            s.steals += steals;
+            s.park_transitions += shard.park_transitions.load(Ordering::Relaxed);
             s.latency.merge(&shard.latency.snapshot());
             s.chunk_latency.merge(&shard.chunk_latency.snapshot());
+            s.sched_latency.merge(&shard.sched_latency.snapshot());
             s.activity.merge(&shard.activity.snapshot());
             s.fused_batches += shard.fused_batches.load(Ordering::Relaxed);
             s.stream_events_dropped += shard.events_dropped.load(Ordering::Relaxed);
-            s.session_bytes += shard.session_bytes.load(Ordering::Relaxed);
             s.weight_swaps += shard.weight_swaps.load(Ordering::Relaxed);
-            let sp = lane.spilled_in.load(Ordering::Relaxed);
-            spilled += sp;
-            s.per_worker.push(LaneStats {
+            s.per_worker.push(WorkerStats {
                 completed,
-                spilled_in: sp,
-                pinned_full: lane.pinned_full.load(Ordering::Relaxed),
+                steals,
                 stream_chunks: shard.stream_chunks.load(Ordering::Relaxed),
             });
         }
-        s.spilled = spilled;
-        s.rejected_full = router.rejected_full.load(Ordering::Relaxed);
-        s.rejected_closed = router.rejected_closed.load(Ordering::Relaxed);
-        s.resident_versions = router.registry.resident_count() as u64;
-        s.enroll_latency = router.registry.enroll_latency();
-        s.captured_us = crate::obs::monotonic_us();
+        s.rejected_full = shared.rejected_full.load(Ordering::Relaxed);
+        s.rejected_closed = shared.rejected_closed.load(Ordering::Relaxed);
+        s.sessions_parked = shared.sessions_parked.load(Ordering::Relaxed);
+        s.sessions_runnable = shared.sessions_runnable.load(Ordering::Relaxed);
+        s.shed_overloaded = shared.shed_overloaded.load(Ordering::Relaxed);
+        s.session_bytes = shared.session_bytes.load(Ordering::Relaxed);
+        s.resident_versions = shared.registry.resident_count() as u64;
+        s.enroll_latency = shared.registry.enroll_latency();
+        s.captured_us = monotonic_us();
         s
     }
 
@@ -1453,16 +1576,16 @@ impl Coordinator {
     pub fn metrics(&self) -> MetricsSnapshot {
         let stats = self.stats();
         let rec = self.recorder_stats();
-        self.registry.lock().unwrap().fold(stats, rec)
+        plock(&self.registry).fold(stats, rec)
     }
 
     /// Aggregate flight-recorder counters across workers, or `None` when the
     /// pool was built without a recorder (the lean default).
     pub fn recorder_stats(&self) -> Option<RecorderStats> {
-        let router = self.router();
+        let shared = self.shared();
         let mut merged = RecorderStats::default();
         let mut any = false;
-        for rec in &router.recorders {
+        for rec in &shared.recorders {
             if rec.is_enabled() {
                 merged.merge(&rec.stats());
                 any = true;
@@ -1475,73 +1598,93 @@ impl Coordinator {
     /// first per worker). Empty when no anomaly rule has fired since the
     /// last drain, or when the pool has no recorder.
     pub fn flight_dumps(&self) -> Vec<FlightDump> {
-        self.router().recorders.iter().flat_map(|r| r.take_dumps()).collect()
+        self.shared().recorders.iter().flat_map(|r| r.take_dumps()).collect()
     }
 
     /// Latest per-worker chip reports (power/energy telemetry),
-    /// *pull-based*: a publish request is enqueued on every reachable lane
-    /// and acknowledged snapshots are read back (bounded wait). Lanes that
-    /// are full or stalled fall back to their last epoch/idle snapshot —
-    /// reports are never computed on the per-utterance hot path.
+    /// *pull-based*: a publish flag is raised for every worker and the
+    /// acknowledged snapshots are read back (bounded wait). Workers
+    /// notice the flag between runnables, inside the stall loop, and on
+    /// every idle rescan ([`sched::IDLE_RESCAN`]) — reports are never
+    /// computed on the per-utterance hot path.
     pub fn reports(&self) -> HashMap<usize, ChipReport> {
-        let router = self.router();
-        // bounded (bounded-channels invariant): each reachable lane gets
-        // exactly one publish job and sends at most one ack, so capacity
-        // = lane count can never reject a worker's try_send
-        let (ack_tx, ack_rx) = sync_channel(router.lanes.len());
-        let mut pending = 0usize;
-        for lane in &router.lanes {
-            if lane.tx.try_send(Job::PublishReport { ack: ack_tx.clone() }).is_ok() {
-                lane.depth.fetch_add(1, Ordering::Relaxed);
-                pending += 1;
+        let shared = self.shared();
+        // serialize concurrent pullers: the countdown below is pool-wide
+        let _gate = plock(&shared.report_gate);
+        {
+            let mut left = plock(&shared.report_left);
+            *left = shared.report_req.len();
+            for flag in &shared.report_req {
+                flag.store(true, Ordering::SeqCst);
             }
         }
-        drop(ack_tx);
         // lint:allow(no-wallclock): bounded wait deadline for report acks during publish — operator-facing control path
         let deadline = Instant::now() + Duration::from_secs(5);
-        while pending > 0 {
+        let mut left = plock(&shared.report_left);
+        while *left > 0 {
             // lint:allow(no-wallclock): remaining-budget computation for the ack wait above
             let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() || ack_rx.recv_timeout(remaining).is_err() {
+            if remaining.is_zero() {
                 break;
             }
-            pending -= 1;
+            left = match shared.report_cv.wait_timeout(left, remaining) {
+                Ok((g, _)) => g,
+                Err(poison) => poison.into_inner().0,
+            };
         }
+        drop(left);
         let mut out = HashMap::new();
-        for (w, shard) in router.shards.iter().enumerate() {
-            if let Some(r) = *shard.report.lock().unwrap() {
+        for (w, shard) in shared.shards.iter().enumerate() {
+            if let Some(r) = *plock(&shard.report) {
                 out.insert(w, r);
             }
         }
         out
     }
 
-    /// Failure injection: stall/unstall a worker (its queue still accepts
-    /// work until full; the router then spills around it).
+    /// Failure injection: stall/unstall a worker (it stops popping
+    /// runnables; queued work waits in the injector or is stolen by
+    /// healthy workers).
     pub fn set_stalled(&self, worker: usize, stalled: bool) {
-        self.router().lanes[worker].stalled.store(stalled, Ordering::SeqCst);
+        self.shared().stalled[worker].store(stalled, Ordering::SeqCst);
     }
 
     pub fn n_workers(&self) -> usize {
-        self.router().lanes.len()
+        self.shared().shards.len()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // close request queues (clients only hold weak refs); workers drain
-        // their queues and exit, then join. The mailbox registry is taken
-        // out first: after the joins no further delivery can happen, so
-        // closing the mailboxes then wakes every blocked ticket wait with
-        // a definitive `Closed` (already-delivered responses stay
-        // claimable).
-        let mailboxes = match self.router.take() {
-            Some(router) => std::mem::take(&mut *router.mailboxes.lock().unwrap()),
-            None => Vec::new(),
+        // Shutdown ordering (satellite: parked sessions must still get
+        // their Closed marker exactly once):
+        //  1. shut the pool down — workers drain every queued runnable
+        //     (pending utterances complete, queued Closes are processed)
+        //     and exit; joins make the drain visible;
+        //  2. sweep the sessions map: anything still live (typically
+        //     parked, gate-closed sessions that never saw a Close) gets
+        //     its telemetry flushed and its Closed event delivered here,
+        //     single-threaded, so delivery is exactly-once by
+        //     construction (workers removed finished sessions already);
+        //  3. close the mailboxes so blocked ticket waits resolve to a
+        //     definitive `Closed` (already-delivered responses stay
+        //     claimable).
+        let Some(shared) = self.shared.take() else {
+            return;
         };
+        shared.pool.shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        let cells: Vec<Arc<SessionCell>> =
+            plock(&shared.sessions).drain().map(|(_, c)| c).collect();
+        for cell in cells {
+            finish_cell(&cell, &shared, &shared.shards[0], &shared.recorders[0], 0);
+        }
+        // gauges: nothing is parked or runnable on a dead pool
+        shared.sessions_parked.store(0, Ordering::Relaxed);
+        shared.sessions_runnable.store(0, Ordering::Relaxed);
+        let mailboxes = std::mem::take(&mut *plock(&shared.mailboxes));
         for mb in mailboxes {
             if let Some(mb) = mb.upgrade() {
                 mb.close();
@@ -1550,76 +1693,88 @@ impl Drop for Coordinator {
     }
 }
 
-/// Worker-side state of one open streaming session.
-struct WorkerSession {
-    pipeline: StreamPipeline,
-    events: SyncSender<StreamEvent>,
-    /// cleared by the client handle on close/drop
-    alive: Arc<AtomicBool>,
-    /// session-scoped trace id, stamped on every recorder event and
-    /// every [`StreamEvent`] this session emits
-    trace: TraceId,
-    /// last observed VAD gate state, threaded across chunks so the
-    /// recorder emits gate open/close transitions (not per-frame noise)
-    last_gated: Option<bool>,
-    /// the session's active weight version: pinned in the registry for as
-    /// long as the session lives (updated by [`Job::SwapWeights`], which
-    /// unpins the predecessor), unpinned by [`Self::finish`]
-    version: WeightVersion,
-}
-
-impl WorkerSession {
-    /// Deliver one event without ever blocking the worker: a full channel
-    /// sheds the event (counted), a disconnected one is a vanished client.
-    /// Returns `true` when the event was shed.
-    fn deliver(&self, ev: StreamEvent, shard: &WorkerShard) -> bool {
-        if let Err(TrySendError::Full(_)) = self.events.try_send(ev) {
-            shard.events_dropped.fetch_add(1, Ordering::Relaxed);
-            return true;
-        }
-        false
-    }
-
-    /// Flush final telemetry into the worker's shard and notify the client.
-    /// The `Closed` marker is delivered with a short bounded retry: an
-    /// explicit [`StreamSession::close`] is concurrently draining the
-    /// channel, so space frees almost immediately; a dead or wedged client
-    /// costs the worker at most the retry budget, never a hang.
-    fn finish(
-        mut self,
-        shard: &WorkerShard,
-        recorder: &FlightRecorder,
-        worker: u32,
-        registry: &WeightRegistry,
-    ) {
-        // release the session's hold on its weight version (the registry
-        // may now evict it under LRU pressure)
-        registry.unpin(self.version);
-        recorder.record(worker, self.trace, EventKind::SessionClose);
-        shard.activity.add(&self.pipeline.take_activity_delta());
-        let activity = self.pipeline.chip.activity();
-        let mut ev = StreamEvent::Closed {
-            trace: self.trace,
-            frames: activity.frames,
-            gated_frames: activity.gated_frames,
-        };
-        for _ in 0..50 {
-            ev = match self.events.try_send(ev) {
-                Ok(()) => return,
-                Err(TrySendError::Disconnected(_)) => return,
-                Err(TrySendError::Full(e)) => e,
-            };
-            std::thread::sleep(Duration::from_millis(1));
-        }
+/// Deliver one session event without ever blocking a worker: a full
+/// channel sheds the event (counted), a disconnected one is a vanished
+/// client. Returns `true` when the event was shed.
+fn deliver_event(cell: &SessionCell, ev: StreamEvent, shard: &WorkerShard) -> bool {
+    if let Err(TrySendError::Full(_)) = cell.events.try_send(ev) {
         shard.events_dropped.fetch_add(1, Ordering::Relaxed);
+        return true;
     }
+    false
 }
 
-/// Refresh the worker's live-session memory gauge (bounded by
-/// construction: each pipeline's state is O(1) in the audio consumed).
-fn publish_session_bytes(shard: &WorkerShard, sessions: &HashMap<u64, WorkerSession>) {
-    let bytes: usize = sessions.values().map(|s| s.pipeline.state_bytes()).sum();
-    shard.session_bytes.store(bytes as u64, Ordering::Relaxed);
+/// Close one session cell, exactly once: flip it to `Closed` (dropping
+/// any messages queued behind the close and releasing their pins), flush
+/// its telemetry, release its registry pin and memory booking, and
+/// deliver the final [`StreamEvent::Closed`] marker.
+///
+/// Called from exactly two places — a worker processing the session's
+/// `Close` message, and the shutdown sweep in `Coordinator::drop` (which
+/// runs single-threaded after every worker has joined). The `Closed`
+/// state check under the inbox lock is what makes delivery exactly-once
+/// even when a client closes explicitly AND the pool shuts down.
+///
+/// The marker is delivered with a short bounded retry: an explicit
+/// [`StreamSession::close`] is concurrently draining the channel, so
+/// space frees almost immediately; a dead or wedged client costs at most
+/// the retry budget, never a hang.
+fn finish_cell(
+    cell: &SessionCell,
+    shared: &Shared,
+    shard: &WorkerShard,
+    recorder: &FlightRecorder,
+    worker: u32,
+) {
+    {
+        let mut inbox = plock(&cell.inbox);
+        if inbox.state == SessState::Closed {
+            return;
+        }
+        let prev = inbox.state;
+        inbox.state = SessState::Closed;
+        match prev {
+            SessState::Parked => {
+                shared.sessions_parked.fetch_sub(1, Ordering::Relaxed);
+            }
+            _ => {
+                shared.sessions_runnable.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        // messages queued behind the Close are dropped (a late push after
+        // close is not an error) — but a dropped Swap must release the
+        // pin its submit took
+        inbox.chunks = 0;
+        for msg in inbox.msgs.drain(..) {
+            if let SessionMsg::Swap { version, .. } = msg {
+                shared.registry.unpin(version);
+            }
+        }
+    }
+    let mut core = plock(&cell.core);
+    // release the session's hold on its weight version (the registry
+    // may now evict it under LRU pressure)
+    shared.registry.unpin(core.version);
+    recorder.record(worker, cell.trace, EventKind::SessionClose);
+    shard.activity.add(&core.pipeline.take_activity_delta());
+    shared.session_bytes.fetch_sub(core.booked, Ordering::Relaxed);
+    core.booked = 0;
+    let activity = core.pipeline.chip.activity();
+    drop(core);
+    let mut ev = StreamEvent::Closed {
+        trace: cell.trace,
+        frames: activity.frames,
+        gated_frames: activity.gated_frames,
+    };
+    for _ in 0..50 {
+        ev = match cell.events.try_send(ev) {
+            Ok(()) => return,
+            Err(TrySendError::Disconnected(_)) => return,
+            Err(TrySendError::Full(e)) => e,
+        };
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    shard.events_dropped.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Publish a fresh cumulative chip report into the shard's pull slot
@@ -1627,453 +1782,549 @@ fn publish_session_bytes(shard: &WorkerShard, sessions: &HashMap<u64, WorkerSess
 /// stays absent from [`Coordinator::reports`], as before).
 fn publish_report(shard: &WorkerShard, chip: &KwsChip) {
     if chip.activity().frames > 0 {
-        *shard.report.lock().unwrap() = Some(chip.report());
+        *plock(&shard.report) = Some(chip.report());
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
+/// One worker's execution context: its telemetry shard, recorder, and
+/// the utterance chip twin (streaming sessions carry their own pipelines
+/// in their cells; the worker chip serves only solo/fused utterances).
+struct WorkerCtx {
     index: usize,
-    base: (WeightVersion, Arc<QuantParams>),
-    config: ChipConfig,
-    default_stream: StreamConfig,
-    report_epoch: u64,
-    rx: Receiver<Job>,
+    shared: Arc<Shared>,
     shard: Arc<WorkerShard>,
-    stalled: Arc<AtomicBool>,
-    depth: Arc<AtomicU64>,
     recorder: Arc<FlightRecorder>,
-    registry: Arc<WeightRegistry>,
-) {
-    let mut chip = KwsChip::new((*base.1).clone(), config.clone());
-    // the weight table currently loaded in this worker's utterance chip;
-    // a request on a different version swaps before processing (cheap —
-    // one SRAM image load — and utterances reset recurrent state anyway)
-    let mut chip_version = base.0;
-    let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
-    // chip activity is flushed into the shard as monotonic deltas — the
-    // chip's own counters are never reset, so its cumulative report stays
-    // meaningful and nothing is double-counted
-    let mut flushed = ChipActivity::default();
-    let mut jobs_since_report = 0u64;
-    // per-worker completion sequence (Response::worker_seq)
-    let mut worker_seq = 0u64;
-    'outer: loop {
-        let job = match rx.try_recv() {
-            Ok(j) => j,
-            Err(TryRecvError::Empty) => {
-                // lane drained: publish a fresh report before blocking, so
-                // pull-side reads are never staler than the last idle moment
-                publish_report(&shard, &chip);
-                jobs_since_report = 0;
-                match rx.recv() {
-                    Ok(j) => j,
-                    Err(_) => break 'outer,
+    chip: KwsChip,
+    /// the weight table currently loaded in this worker's utterance chip;
+    /// a request on a different version swaps before processing (cheap —
+    /// an Arc image install — and utterances reset recurrent state anyway)
+    chip_version: WeightVersion,
+    /// chip activity is flushed into the shard as monotonic deltas — the
+    /// chip's own counters are never reset, so its cumulative report
+    /// stays meaningful and nothing is double-counted
+    flushed: ChipActivity,
+    /// per-worker completion sequence ([`Response::worker_seq`])
+    worker_seq: u64,
+}
+
+impl WorkerCtx {
+    /// Answer a pending [`Coordinator::reports`] pull: publish a fresh
+    /// snapshot and count this worker down. Checked between runnables,
+    /// inside the stall loop, and on every idle rescan — never inside an
+    /// utterance.
+    fn service_report(&self) {
+        if self.shared.report_req[self.index].swap(false, Ordering::SeqCst) {
+            publish_report(&self.shard, &self.chip);
+            let mut left = plock(&self.shared.report_left);
+            *left = left.saturating_sub(1);
+            self.shared.report_cv.notify_all();
+        }
+    }
+
+    /// Run a woken session for ONE inbox message, then re-enqueue (inbox
+    /// non-empty) or park (empty). One message per scheduling round is
+    /// the fairness choice: ten thousand woken sessions round-robin
+    /// instead of the first one monopolizing a worker.
+    fn run_session(&mut self, cell: Arc<SessionCell>) {
+        let msg = {
+            let mut inbox = plock(&cell.inbox);
+            if inbox.state == SessState::Closed {
+                return;
+            }
+            inbox.state = SessState::Running;
+            if inbox.wake_pending {
+                inbox.wake_pending = false;
+                self.shard
+                    .sched_latency
+                    .record(monotonic_us().saturating_sub(inbox.wake_us));
+            }
+            let msg = inbox.msgs.pop_front();
+            if matches!(msg, Some(SessionMsg::Chunk { .. })) {
+                inbox.chunks -= 1;
+            }
+            msg
+        };
+        match msg {
+            Some(SessionMsg::Chunk { audio, enq_us }) => {
+                self.process_chunk(&cell, audio, enq_us);
+            }
+            Some(SessionMsg::Swap { version, params, image }) => {
+                self.process_swap(&cell, version, params, image);
+            }
+            Some(SessionMsg::Close) => {
+                plock(&self.shared.sessions).remove(&cell.session);
+                finish_cell(
+                    &cell,
+                    &self.shared,
+                    &self.shard,
+                    &self.recorder,
+                    self.index as u32,
+                );
+                return;
+            }
+            None => {}
+        }
+        let mut inbox = plock(&cell.inbox);
+        if inbox.state == SessState::Closed {
+            return;
+        }
+        if inbox.msgs.is_empty() {
+            // park: the session leaves the hot set (gauges move under the
+            // inbox lock so a racing push that immediately re-wakes it
+            // always sees consistent parked/runnable counts)
+            inbox.state = SessState::Parked;
+            self.shared.sessions_runnable.fetch_sub(1, Ordering::Relaxed);
+            self.shared.sessions_parked.fetch_add(1, Ordering::Relaxed);
+            self.shard.park_transitions.fetch_add(1, Ordering::Relaxed);
+        } else {
+            inbox.state = SessState::Queued;
+            drop(inbox);
+            // affinity: the session's warm cache state favours this worker,
+            // but the runnable stays stealable if we fall behind
+            self.shared.pool.push_local(self.index, Runnable::Session(cell));
+        }
+    }
+
+    /// One streaming audio chunk through the session's own pipeline.
+    fn process_chunk(&mut self, cell: &SessionCell, audio: Vec<i64>, enq_us: u64) {
+        let mut core = plock(&cell.core);
+        if self.recorder.is_enabled() {
+            let queued_us = monotonic_us().saturating_sub(enq_us);
+            self.recorder.record(
+                self.index as u32,
+                cell.trace,
+                EventKind::Dequeue { queued_us },
+            );
+        }
+        // slice hostile oversized chunks so the pipeline's bounded frame
+        // buffer can never reject (and the old panic path can never kill
+        // this worker thread)
+        let mut detections = Vec::new();
+        if self.recorder.is_enabled() {
+            // recorder path: ride the probe seam so frame batches and
+            // gate transitions land in the ring
+            let mut rp = RecorderProbe::with_gate_state(
+                &self.recorder,
+                self.index as u32,
+                cell.trace,
+                core.last_gated,
+            );
+            for piece in audio.chunks(SAFE_CHUNK_SAMPLES) {
+                detections.extend(
+                    core.pipeline
+                        .push_audio_probed(piece, &mut rp)
+                        .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
+                );
+            }
+            core.last_gated = rp.gate_state();
+            rp.flush_frame_batch();
+        } else {
+            for piece in audio.chunks(SAFE_CHUNK_SAMPLES) {
+                detections.extend(
+                    core.pipeline
+                        .push_audio(piece)
+                        .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
+                );
+            }
+        }
+        self.shard.stream_chunks.fetch_add(1, Ordering::Relaxed);
+        self.shard.chunk_latency.record(monotonic_us().saturating_sub(enq_us));
+        self.shard.activity.add(&core.pipeline.take_activity_delta());
+        // memory gauge: adjust by this session's booking delta (O(1) per
+        // chunk, exact — the gauge returns to zero when sessions close)
+        let bytes = core.pipeline.state_bytes() as u64;
+        if bytes >= core.booked {
+            self.shared.session_bytes.fetch_add(bytes - core.booked, Ordering::Relaxed);
+        } else {
+            self.shared.session_bytes.fetch_sub(core.booked - bytes, Ordering::Relaxed);
+        }
+        core.booked = bytes;
+        let version = core.version;
+        drop(core);
+        for d in detections {
+            self.recorder.record(
+                self.index as u32,
+                cell.trace,
+                EventKind::Detection { class: d.class as u8 },
+            );
+            let shed = deliver_event(
+                cell,
+                StreamEvent::Detection { trace: cell.trace, event: d, weights: version },
+                &self.shard,
+            );
+            if shed {
+                self.recorder.record(self.index as u32, cell.trace, EventKind::EventDropped);
+            }
+        }
+    }
+
+    /// Install a new weight version on a session — the epoch fence.
+    fn process_swap(
+        &mut self,
+        cell: &SessionCell,
+        version: WeightVersion,
+        params: Arc<QuantParams>,
+        image: Arc<Vec<u16>>,
+    ) {
+        let mut core = plock(&cell.core);
+        // the fence: session messages serialize through this cell, and
+        // every chunk drains all its completed frames before returning —
+        // so right here no frame is half-stepped, the ΔFIFOs are empty,
+        // and installing the new table is invisible to the frame
+        // pipeline, regardless of which worker ran the neighbouring
+        // chunks
+        core.pipeline.swap_weights_shared(params, image);
+        let outgoing = core.version;
+        core.version = version;
+        self.shared.registry.unpin(outgoing);
+        self.shard.weight_swaps.fetch_add(1, Ordering::Relaxed);
+        let frame = core.pipeline.chip.activity().frames;
+        drop(core);
+        let shed = deliver_event(
+            cell,
+            StreamEvent::WeightsSwapped { trace: cell.trace, version, frame },
+            &self.shard,
+        );
+        if shed {
+            self.recorder.record(self.index as u32, cell.trace, EventKind::EventDropped);
+        }
+    }
+
+    /// Run a stream's utterance chain for ONE request, then re-enqueue
+    /// with affinity while the chain has work (FIFO per stream — the
+    /// [`Response::stream_seq`] ordering witness).
+    fn run_chain(&mut self, chain: Arc<ChainCell>) {
+        let work = {
+            let mut st = plock(&chain.state);
+            match st.q.pop_front() {
+                Some(w) => w,
+                None => {
+                    // drained by a previous round: retire the runnable
+                    // UNDER the lock, so a submit racing this sees either
+                    // `scheduled` still true (we kept the runnable) or
+                    // false (it must schedule) — never a lost chain
+                    st.scheduled = false;
+                    return;
                 }
             }
-            Err(TryRecvError::Disconnected) => break 'outer,
         };
-        while stalled.load(Ordering::SeqCst) {
+        self.run_utterance(work);
+        let mut st = plock(&chain.state);
+        if st.q.is_empty() {
+            st.scheduled = false;
+        } else {
+            drop(st);
+            // affinity: the next request keeps this worker's warm chip
+            self.shared.pool.push_local(self.index, Runnable::Chain(chain));
+        }
+    }
+
+    /// One solo utterance on this worker's chip twin.
+    fn run_utterance(&mut self, work: UttWork) {
+        let UttWork { req, trace, enq_us, reply, weights, stream_seq } = work;
+        if self.recorder.is_enabled() {
+            let queued_us = monotonic_us().saturating_sub(enq_us);
+            self.recorder
+                .record(self.index as u32, trace, EventKind::Dequeue { queued_us });
+        }
+        // serve on the requested weight version: swap the chip's table if
+        // a different one is loaded (cheap — the resolved Arc image is
+        // installed, not copied — and process_utterance resets recurrent
+        // state, so the swap is invisible beyond the weights themselves)
+        if weights.0 != self.chip_version {
+            self.chip
+                .swap_weights_shared(Arc::clone(&weights.1), Arc::clone(&weights.2));
+            self.chip_version = weights.0;
+        }
+        // default: the lean NoProbe hot path — no per-frame allocation,
+        // fixed-size Decision. A request that opted in (`trace: true`)
+        // pays for the TraceProbe reconstruction; an enabled flight
+        // recorder rides the same probe seam.
+        let (decision, diag) = if req.trace {
+            let (d, t) = self.chip.process_utterance_traced(&req.audio12);
+            (d, Some(t))
+        } else if self.recorder.is_enabled() {
+            let mut rp = RecorderProbe::new(&self.recorder, self.index as u32, trace);
+            let d = self.chip.process_utterance_probed(&req.audio12, &mut rp);
+            rp.flush_frame_batch();
+            (d, None)
+        } else {
+            (self.chip.process_utterance(&req.audio12), None)
+        };
+        let lat_ms = decision.total_cycles as f64
+            / decision.frames.max(1) as f64
+            / crate::energy::calib::CLOCK_HZ
+            * 1e3;
+        let correct = req.label.map(|l| l == decision.class);
+        let service = Duration::from_micros(monotonic_us().saturating_sub(enq_us));
+        let resp = Response {
+            id: req.id,
+            stream: req.stream,
+            class: decision.class,
+            correct,
+            logits: decision.logits,
+            counted_frames: decision.counted_frames,
+            chip_cycles: decision.total_cycles,
+            chip_latency_ms: lat_ms,
+            service,
+            worker: self.index,
+            worker_seq: self.worker_seq,
+            stream_seq,
+            trace: diag,
+            trace_id: trace,
+            weights: weights.0,
+        };
+        self.worker_seq += 1;
+        self.recorder.record(
+            self.index as u32,
+            trace,
+            EventKind::Decision {
+                class: decision.class as u8,
+                service_us: service.as_micros() as u64,
+            },
+        );
+        // hot path: relaxed adds on this worker's own shard — no lock,
+        // no allocation, no report rollup
+        self.shard.completed.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = correct {
+            self.shard.labelled.fetch_add(1, Ordering::Relaxed);
+            if c {
+                self.shard.correct.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.shard.latency.record(service.as_micros() as u64);
+        let act = self.chip.activity();
+        self.shard.activity.add(&act.delta_since(&self.flushed));
+        self.flushed = act;
+        // release the admission slot before delivery: a producer blocked
+        // on QueueFull can re-admit as soon as the work is done
+        self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
+        // completion routing: deliver to the submitting client's mailbox,
+        // keyed by request id. A vanished client (all tickets and handles
+        // dropped) just discards the response.
+        if let Some(mailbox) = reply.upgrade() {
+            mailbox.deliver(resp);
+        }
+    }
+
+    /// A fused utterance group through the batched-chip path.
+    fn run_fused(&mut self, work: FusedWork) {
+        let FusedWork { reqs, traces, enq_us, reply, weights, stream_seqs } = work;
+        let n = reqs.len();
+        self.shard.fused_batches.fetch_add(1, Ordering::Relaxed);
+        if self.recorder.is_enabled() {
+            let queued_us = monotonic_us().saturating_sub(enq_us);
+            self.recorder.record(
+                self.index as u32,
+                traces.first().copied().unwrap_or(TraceId::NONE),
+                EventKind::Dequeue { queued_us },
+            );
+        }
+        // phase 1 — FEx, per request: the feature front end is recurrent
+        // per utterance, so each request's audio runs through this
+        // worker's chip solo. Frames are popped as raw Q8.8 activations
+        // (`pop_frame_activations`) instead of being stepped, leaving the
+        // ΔRNN work for phase 2.
+        let mut frames: Vec<Vec<[i16; crate::MAX_CHANNELS]>> = Vec::with_capacity(n);
+        for req in &reqs {
+            self.chip.reset();
+            let mut fr = Vec::new();
+            for piece in req.audio12.chunks(SAFE_CHUNK_SAMPLES) {
+                self.chip
+                    .push_samples(piece)
+                    .expect("SAFE_CHUNK_SAMPLES fits the frame buffer");
+                while let Some(q) = self.chip.pop_frame_activations() {
+                    fr.push(q);
+                }
+            }
+            frames.push(fr);
+        }
+        // phase 2 — ΔRNN, batched *per weight version*: the batched
+        // stepper reads the host accel's single weight table, so a
+        // mixed-version group is split into sub-groups (first-seen order)
+        // and the table is swapped between them. Members sharing a
+        // version still step in lockstep against one weight-row fetch per
+        // fired lane, and each member's decision stays bit-identical to a
+        // solo run on its version (accel::batch module docs).
+        let mut groups: Vec<(WeightVersion, Vec<usize>)> = Vec::new();
+        for (i, (v, _, _)) in weights.iter().enumerate() {
+            match groups.iter_mut().find(|(gv, _)| *gv == *v) {
+                Some((_, members)) => members.push(i),
+                None => groups.push((*v, vec![i])),
+            }
+        }
+        let mut accums: Vec<DecisionAccum> =
+            (0..n).map(|_| DecisionAccum::new(self.chip.config.warmup)).collect();
+        let mut activities: Vec<ChipActivity> = vec![ChipActivity::default(); n];
+        for (version, members) in &groups {
+            if *version != self.chip_version {
+                let (_, p, im) = &weights[members[0]];
+                self.chip.swap_weights_shared(Arc::clone(p), Arc::clone(im));
+                self.chip_version = *version;
+            }
+            let mut sessions: Vec<BatchSession> =
+                members.iter().map(|_| BatchSession::new()).collect();
+            let max_t = members.iter().map(|&i| frames[i].len()).max().unwrap_or(0);
+            for t in 0..max_t {
+                for (sess, &i) in sessions.iter_mut().zip(members.iter()) {
+                    if let Some(&q) = frames[i].get(t) {
+                        sess.stage(q);
+                    }
+                }
+                self.chip.accel.step_frames_batched(&mut sessions);
+                for (sess, &i) in sessions.iter().zip(members.iter()) {
+                    if t >= frames[i].len() {
+                        continue;
+                    }
+                    let r = sess.last.expect("staged session stepped");
+                    accums[i].push(&FrameOut {
+                        index: t as u64,
+                        feat: [0i64; crate::MAX_CHANNELS],
+                        logits: r.logits,
+                        fired: r.fired,
+                        cycles: r.cycles,
+                        gated: false,
+                    });
+                }
+            }
+            for (sess, &i) in sessions.iter().zip(members.iter()) {
+                activities[i] = sess.activity;
+            }
+        }
+        // phase 3 — per-request responses and telemetry. The RNN side of
+        // the activity is booked from each session (the host accel's solo
+        // counters were untouched); the FEx side flushes through the
+        // usual chip-activity delta.
+        let service = Duration::from_micros(monotonic_us().saturating_sub(enq_us));
+        for (i, ((req, trace), (version, _, _))) in
+            reqs.into_iter().zip(traces).zip(weights).enumerate()
+        {
+            let decision = accums[i].finish();
+            let lat_ms = decision.total_cycles as f64
+                / decision.frames.max(1) as f64
+                / crate::energy::calib::CLOCK_HZ
+                * 1e3;
+            let correct = req.label.map(|l| l == decision.class);
+            let resp = Response {
+                id: req.id,
+                stream: req.stream,
+                class: decision.class,
+                correct,
+                logits: decision.logits,
+                counted_frames: decision.counted_frames,
+                chip_cycles: decision.total_cycles,
+                chip_latency_ms: lat_ms,
+                service,
+                worker: self.index,
+                worker_seq: self.worker_seq,
+                stream_seq: stream_seqs[i],
+                trace: None,
+                trace_id: trace,
+                weights: version,
+            };
+            self.worker_seq += 1;
+            self.recorder.record(
+                self.index as u32,
+                trace,
+                EventKind::Decision {
+                    class: decision.class as u8,
+                    service_us: service.as_micros() as u64,
+                },
+            );
+            self.shard.completed.fetch_add(1, Ordering::Relaxed);
+            if let Some(c) = correct {
+                self.shard.labelled.fetch_add(1, Ordering::Relaxed);
+                if c {
+                    self.shard.correct.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            self.shard.latency.record(service.as_micros() as u64);
+            self.shard.activity.add(&activities[i]);
+            if let Some(mailbox) = reply.upgrade() {
+                mailbox.deliver(resp);
+            }
+        }
+        let act = self.chip.activity();
+        self.shard.activity.add(&act.delta_since(&self.flushed));
+        self.flushed = act;
+        self.shared.inflight.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// One worker thread: pop runnables off the work-stealing pool, run
+/// them, publish chip reports on idle/epoch/pull. Exits when the pool
+/// reports shutdown (which it does only after a full drain — queued
+/// utterances complete and queued session closes are delivered before
+/// any worker leaves).
+fn worker_loop(index: usize, shared: Arc<Shared>) {
+    let chip = KwsChip::new_shared(
+        Arc::clone(&shared.base.1),
+        Arc::clone(&shared.base.2),
+        shared.chip_config.clone(),
+    );
+    let mut ctx = WorkerCtx {
+        index,
+        shard: Arc::clone(&shared.shards[index]),
+        recorder: Arc::clone(&shared.recorders[index]),
+        chip,
+        chip_version: shared.base.0,
+        flushed: ChipActivity::default(),
+        worker_seq: 0,
+        shared,
+    };
+    let mut since_report = 0u64;
+    // publish once per idle period, not once per 5 ms rescan
+    let mut idle_published = false;
+    loop {
+        // failure injection: a stalled worker holds NO runnable — queued
+        // work waits in the injector or is stolen by healthy workers
+        // (report pulls are still serviced so reports() never hangs)
+        while ctx.shared.stalled[ctx.index].load(Ordering::SeqCst) {
+            ctx.service_report();
             std::thread::sleep(Duration::from_millis(1));
         }
-        depth.fetch_sub(1, Ordering::Relaxed);
-        match job {
-            Job::Utterance { req, trace, enqueued, reply, weights } => {
-                if recorder.is_enabled() {
-                    let queued_us = enqueued.elapsed().as_micros() as u64;
-                    recorder.record(index as u32, trace, EventKind::Dequeue { queued_us });
+        ctx.service_report();
+        match ctx.shared.pool.pop_wait(ctx.index) {
+            Popped::Item(run, stolen) => {
+                // a stall raced the pop (the flag flipped while this
+                // worker was blocked inside pop_wait): hand the runnable
+                // back untouched so a healthy worker serves it — failure
+                // injection means the stalled worker holds NOTHING
+                if ctx.shared.stalled[ctx.index].load(Ordering::SeqCst) {
+                    ctx.shared.pool.push(run);
+                    continue;
                 }
-                // serve on the requested weight version: swap the chip's
-                // table if a different one is loaded (process_utterance
-                // resets recurrent state, so the swap is invisible beyond
-                // the weights themselves)
-                if weights.0 != chip_version {
-                    chip.swap_weights((*weights.1).clone());
-                    chip_version = weights.0;
+                idle_published = false;
+                if stolen {
+                    ctx.shard.steals.fetch_add(1, Ordering::Relaxed);
                 }
-                // default: the lean NoProbe hot path — no per-frame
-                // allocation, fixed-size Decision. A request that opted in
-                // (`trace: true`) pays for the TraceProbe reconstruction;
-                // an enabled flight recorder rides the same probe seam.
-                let (decision, diag) = if req.trace {
-                    let (d, t) = chip.process_utterance_traced(&req.audio12);
-                    (d, Some(t))
-                } else if recorder.is_enabled() {
-                    let mut rp = RecorderProbe::new(&recorder, index as u32, trace);
-                    let d = chip.process_utterance_probed(&req.audio12, &mut rp);
-                    rp.flush_frame_batch();
-                    (d, None)
-                } else {
-                    (chip.process_utterance(&req.audio12), None)
-                };
-                let lat_ms = decision.total_cycles as f64
-                    / decision.frames.max(1) as f64
-                    / crate::energy::calib::CLOCK_HZ
-                    * 1e3;
-                let correct = req.label.map(|l| l == decision.class);
-                let resp = Response {
-                    id: req.id,
-                    stream: req.stream,
-                    class: decision.class,
-                    correct,
-                    logits: decision.logits,
-                    counted_frames: decision.counted_frames,
-                    chip_cycles: decision.total_cycles,
-                    chip_latency_ms: lat_ms,
-                    service: enqueued.elapsed(),
-                    worker: index,
-                    worker_seq,
-                    trace: diag,
-                    trace_id: trace,
-                    weights: weights.0,
-                };
-                worker_seq += 1;
-                recorder.record(
-                    index as u32,
-                    trace,
-                    EventKind::Decision {
-                        class: decision.class as u8,
-                        service_us: resp.service.as_micros() as u64,
-                    },
-                );
-                // hot path: relaxed adds on this worker's own shard — no
-                // lock, no allocation, no report rollup
-                shard.completed.fetch_add(1, Ordering::Relaxed);
-                if let Some(c) = correct {
-                    shard.labelled.fetch_add(1, Ordering::Relaxed);
-                    if c {
-                        shard.correct.fetch_add(1, Ordering::Relaxed);
-                    }
+                match run {
+                    Runnable::Session(cell) => ctx.run_session(cell),
+                    Runnable::Chain(chain) => ctx.run_chain(chain),
+                    Runnable::Fused(work) => ctx.run_fused(*work),
                 }
-                shard.latency.record(resp.service.as_micros() as u64);
-                let act = chip.activity();
-                shard.activity.add(&act.delta_since(&flushed));
-                flushed = act;
-                // completion routing: deliver to the submitting client's
-                // mailbox, keyed by request id. A vanished client (all
-                // tickets and handles dropped) just discards the response.
-                if let Some(mailbox) = reply.upgrade() {
-                    mailbox.deliver(resp);
+                // bound report staleness under sustained load (a worker
+                // that never goes idle still publishes every epoch)
+                since_report += 1;
+                if since_report >= ctx.shared.report_epoch {
+                    publish_report(&ctx.shard, &ctx.chip);
+                    since_report = 0;
                 }
             }
-            Job::UtteranceBatch { reqs, traces, enqueued, reply, weights } => {
-                shard.fused_batches.fetch_add(1, Ordering::Relaxed);
-                if recorder.is_enabled() {
-                    let queued_us = enqueued.elapsed().as_micros() as u64;
-                    recorder.record(
-                        index as u32,
-                        traces.first().copied().unwrap_or(TraceId::NONE),
-                        EventKind::Dequeue { queued_us },
-                    );
-                }
-                // phase 1 — FEx, per request: the feature front end is
-                // recurrent per utterance, so each request's audio runs
-                // through this worker's chip solo. Frames are popped as
-                // raw Q8.8 activations (`pop_frame_activations`) instead
-                // of being stepped, leaving the ΔRNN work for phase 2.
-                let mut frames: Vec<Vec<[i16; crate::MAX_CHANNELS]>> =
-                    Vec::with_capacity(reqs.len());
-                for req in &reqs {
-                    chip.reset();
-                    let mut fr = Vec::new();
-                    for piece in req.audio12.chunks(SAFE_CHUNK_SAMPLES) {
-                        chip.push_samples(piece)
-                            .expect("SAFE_CHUNK_SAMPLES fits the frame buffer");
-                        while let Some(q) = chip.pop_frame_activations() {
-                            fr.push(q);
-                        }
-                    }
-                    frames.push(fr);
-                }
-                // phase 2 — ΔRNN, batched *per weight version*: the
-                // batched stepper reads the host accel's single weight
-                // table, so a mixed-version group is split into
-                // sub-groups (first-seen order) and the table is swapped
-                // between them. Members sharing a version still step in
-                // lockstep against one weight-row fetch per fired lane,
-                // and each member's decision stays bit-identical to a
-                // solo run on its version (accel::batch module docs).
-                let mut groups: Vec<(WeightVersion, Vec<usize>)> = Vec::new();
-                for (i, (v, _)) in weights.iter().enumerate() {
-                    match groups.iter_mut().find(|(gv, _)| *gv == *v) {
-                        Some((_, members)) => members.push(i),
-                        None => groups.push((*v, vec![i])),
-                    }
-                }
-                let mut accums: Vec<DecisionAccum> = (0..reqs.len())
-                    .map(|_| DecisionAccum::new(chip.config.warmup))
-                    .collect();
-                let mut activities: Vec<ChipActivity> =
-                    vec![ChipActivity::default(); reqs.len()];
-                for (version, members) in &groups {
-                    if *version != chip_version {
-                        chip.swap_weights((*weights[members[0]].1).clone());
-                        chip_version = *version;
-                    }
-                    let mut sessions: Vec<BatchSession> =
-                        members.iter().map(|_| BatchSession::new()).collect();
-                    let max_t =
-                        members.iter().map(|&i| frames[i].len()).max().unwrap_or(0);
-                    for t in 0..max_t {
-                        for (sess, &i) in sessions.iter_mut().zip(members.iter()) {
-                            if let Some(&q) = frames[i].get(t) {
-                                sess.stage(q);
-                            }
-                        }
-                        chip.accel.step_frames_batched(&mut sessions);
-                        for (sess, &i) in sessions.iter().zip(members.iter()) {
-                            if t >= frames[i].len() {
-                                continue;
-                            }
-                            let r = sess.last.expect("staged session stepped");
-                            accums[i].push(&FrameOut {
-                                index: t as u64,
-                                feat: [0i64; crate::MAX_CHANNELS],
-                                logits: r.logits,
-                                fired: r.fired,
-                                cycles: r.cycles,
-                                gated: false,
-                            });
-                        }
-                    }
-                    for (sess, &i) in sessions.iter().zip(members.iter()) {
-                        activities[i] = sess.activity;
-                    }
-                }
-                // phase 3 — per-request responses and telemetry. The RNN
-                // side of the activity is booked from each session (the
-                // host accel's solo counters were untouched); the FEx
-                // side flushes through the usual chip-activity delta.
-                for (i, ((req, trace), (version, _))) in
-                    reqs.into_iter().zip(traces).zip(weights).enumerate()
-                {
-                    let decision = accums[i].finish();
-                    let lat_ms = decision.total_cycles as f64
-                        / decision.frames.max(1) as f64
-                        / crate::energy::calib::CLOCK_HZ
-                        * 1e3;
-                    let correct = req.label.map(|l| l == decision.class);
-                    let resp = Response {
-                        id: req.id,
-                        stream: req.stream,
-                        class: decision.class,
-                        correct,
-                        logits: decision.logits,
-                        counted_frames: decision.counted_frames,
-                        chip_cycles: decision.total_cycles,
-                        chip_latency_ms: lat_ms,
-                        service: enqueued.elapsed(),
-                        worker: index,
-                        worker_seq,
-                        trace: None,
-                        trace_id: trace,
-                        weights: version,
-                    };
-                    worker_seq += 1;
-                    recorder.record(
-                        index as u32,
-                        trace,
-                        EventKind::Decision {
-                            class: decision.class as u8,
-                            service_us: resp.service.as_micros() as u64,
-                        },
-                    );
-                    shard.completed.fetch_add(1, Ordering::Relaxed);
-                    if let Some(c) = correct {
-                        shard.labelled.fetch_add(1, Ordering::Relaxed);
-                        if c {
-                            shard.correct.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                    shard.latency.record(resp.service.as_micros() as u64);
-                    shard.activity.add(&activities[i]);
-                    if let Some(mailbox) = reply.upgrade() {
-                        mailbox.deliver(resp);
-                    }
-                }
-                let act = chip.activity();
-                shard.activity.add(&act.delta_since(&flushed));
-                flushed = act;
-            }
-            Job::StreamOpen { session, trace, config: stream_cfg, events, alive, weights } => {
-                let cfg = stream_cfg.unwrap_or_else(|| default_stream.clone());
-                let pipeline = StreamPipeline::new((*weights.1).clone(), cfg);
-                recorder.record(index as u32, trace, EventKind::SessionOpen);
-                // session ids are unique; a collision would be a router bug,
-                // but never leak the old session's telemetry silently
-                if let Some(old) = sessions.insert(
-                    session,
-                    WorkerSession {
-                        pipeline,
-                        events,
-                        alive,
-                        trace,
-                        last_gated: None,
-                        version: weights.0,
-                    },
-                ) {
-                    old.finish(&shard, &recorder, index as u32, &registry);
-                }
-                publish_session_bytes(&shard, &sessions);
-            }
-            Job::SwapWeights { session, version, params } => {
-                if let Some(sess) = sessions.get_mut(&session) {
-                    // the epoch fence: jobs on this lane serialize, and
-                    // every StreamData drains all its completed frames
-                    // before returning — so right here no frame is
-                    // half-stepped, the ΔFIFOs are empty, and installing
-                    // the new table is invisible to the frame pipeline
-                    sess.pipeline.swap_weights((*params).clone());
-                    let outgoing = sess.version;
-                    sess.version = version;
-                    registry.unpin(outgoing);
-                    shard.weight_swaps.fetch_add(1, Ordering::Relaxed);
-                    let frame = sess.pipeline.chip.activity().frames;
-                    if sess.deliver(
-                        StreamEvent::WeightsSwapped { trace: sess.trace, version, frame },
-                        &shard,
-                    ) {
-                        recorder.record(index as u32, sess.trace, EventKind::EventDropped);
-                    }
-                } else {
-                    // swap raced against close: the session is gone, so
-                    // release the pin taken at submit
-                    registry.unpin(version);
+            Popped::Empty => {
+                if !idle_published {
+                    // pool drained under us: publish a fresh report so
+                    // pull-side reads are never staler than the last
+                    // idle moment
+                    publish_report(&ctx.shard, &ctx.chip);
+                    since_report = 0;
+                    idle_published = true;
                 }
             }
-            Job::StreamData { session, chunk, enqueued } => {
-                // chunks for unknown/closed sessions are dropped (a late
-                // push after close is not an error)
-                if let Some(sess) = sessions.get_mut(&session) {
-                    if recorder.is_enabled() {
-                        let queued_us = enqueued.elapsed().as_micros() as u64;
-                        recorder.record(
-                            index as u32,
-                            sess.trace,
-                            EventKind::Dequeue { queued_us },
-                        );
-                    }
-                    // slice hostile oversized chunks so the pipeline's
-                    // bounded frame buffer can never reject (and the old
-                    // panic path can never kill this worker thread)
-                    let bytes_before = sess.pipeline.state_bytes();
-                    let mut detections = Vec::new();
-                    if recorder.is_enabled() {
-                        // recorder path: ride the probe seam so frame
-                        // batches and gate transitions land in the ring
-                        let mut rp = RecorderProbe::with_gate_state(
-                            &recorder,
-                            index as u32,
-                            sess.trace,
-                            sess.last_gated,
-                        );
-                        for piece in chunk.chunks(crate::chip::SAFE_CHUNK_SAMPLES) {
-                            detections.extend(
-                                sess.pipeline
-                                    .push_audio_probed(piece, &mut rp)
-                                    .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
-                            );
-                        }
-                        sess.last_gated = rp.gate_state();
-                        rp.flush_frame_batch();
-                    } else {
-                        for piece in chunk.chunks(crate::chip::SAFE_CHUNK_SAMPLES) {
-                            detections.extend(
-                                sess.pipeline
-                                    .push_audio(piece)
-                                    .expect("SAFE_CHUNK_SAMPLES fits the frame buffer"),
-                            );
-                        }
-                    }
-                    shard.stream_chunks.fetch_add(1, Ordering::Relaxed);
-                    shard.chunk_latency.record(enqueued.elapsed().as_micros() as u64);
-                    shard.activity.add(&sess.pipeline.take_activity_delta());
-                    // hot path: update the memory gauge incrementally for
-                    // just this session (O(1), not O(live sessions) — the
-                    // full re-sum runs only on open/close/GC)
-                    let bytes_after = sess.pipeline.state_bytes();
-                    if bytes_after >= bytes_before {
-                        shard
-                            .session_bytes
-                            .fetch_add((bytes_after - bytes_before) as u64, Ordering::Relaxed);
-                    } else {
-                        shard
-                            .session_bytes
-                            .fetch_sub((bytes_before - bytes_after) as u64, Ordering::Relaxed);
-                    }
-                    for d in detections {
-                        recorder.record(
-                            index as u32,
-                            sess.trace,
-                            EventKind::Detection { class: d.class as u8 },
-                        );
-                        if sess.deliver(
-                            StreamEvent::Detection {
-                                trace: sess.trace,
-                                event: d,
-                                weights: sess.version,
-                            },
-                            &shard,
-                        ) {
-                            recorder.record(
-                                index as u32,
-                                sess.trace,
-                                EventKind::EventDropped,
-                            );
-                        }
-                    }
-                }
-            }
-            Job::StreamClose { session } => {
-                if let Some(sess) = sessions.remove(&session) {
-                    // gauge first: when the client's close() returns (it
-                    // waits on the Closed marker finish() delivers), the
-                    // session-memory gauge is already consistent
-                    publish_session_bytes(&shard, &sessions);
-                    sess.finish(&shard, &recorder, index as u32, &registry);
-                }
-            }
-            Job::PublishReport { ack } => {
-                publish_report(&shard, &chip);
-                jobs_since_report = 0;
-                // non-blocking by construction: the requester sized the
-                // channel at one slot per lane (a gone receiver is fine)
-                let _ = ack.try_send(());
-            }
-        }
-        // bound report staleness under sustained load (a lane that never
-        // drains still publishes every `report_epoch` jobs)
-        jobs_since_report += 1;
-        if jobs_since_report >= report_epoch {
-            publish_report(&shard, &chip);
-            jobs_since_report = 0;
-        }
-        // GC sessions whose client vanished without a deliverable Close
-        // (StreamSession::drop on a saturated lane clears `alive` and
-        // gives up) — otherwise their pipelines would live until pool
-        // shutdown
-        if !sessions.is_empty() {
-            let dead: Vec<u64> = sessions
-                .iter()
-                .filter(|(_, s)| !s.alive.load(Ordering::Relaxed))
-                .map(|(&k, _)| k)
-                .collect();
-            if !dead.is_empty() {
-                for k in dead {
-                    if let Some(sess) = sessions.remove(&k) {
-                        sess.finish(&shard, &recorder, index as u32, &registry);
-                    }
-                }
-                publish_session_bytes(&shard, &sessions);
-            }
+            Popped::Shutdown => break,
         }
     }
-    // pool shutdown with sessions still open: flush their telemetry
-    for (_, sess) in sessions.drain() {
-        sess.finish(&shard, &recorder, index as u32, &registry);
-    }
-    publish_session_bytes(&shard, &sessions);
-    publish_report(&shard, &chip);
+    publish_report(&ctx.shard, &ctx.chip);
 }
 
 #[cfg(test)]
@@ -2092,7 +2343,7 @@ mod tests {
         q
     }
 
-    /// Test pool via the v2 builder.
+    /// Test pool via the builder.
     fn pool(seed: u64, workers: usize, queue_depth: usize) -> Coordinator {
         Coordinator::builder(rng_quant(seed), ChipConfig::design_point())
             .workers(workers)
@@ -2127,6 +2378,19 @@ mod tests {
                 r
             })
             .collect()
+    }
+
+    /// Poll `stats()` until `cond` holds or the deadline passes.
+    fn wait_stats<F: Fn(&Stats) -> bool>(coord: &Coordinator, cond: F) -> Stats {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let s = coord.stats();
+            if cond(&s) {
+                return s;
+            }
+            assert!(Instant::now() < deadline, "stats condition never held");
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     #[test]
@@ -2229,7 +2493,7 @@ mod tests {
             assert_eq!(a.correct, b.correct);
             assert!(b.trace.is_none(), "fused path is lean-only");
         }
-        // one fused group, on one worker, every member counted
+        // one fused runnable, executed whole by one worker
         let workers: std::collections::HashSet<usize> =
             fused.iter().map(|r| r.worker).collect();
         assert_eq!(workers.len(), 1, "fused group must stay on one worker");
@@ -2256,23 +2520,32 @@ mod tests {
     }
 
     #[test]
-    fn stream_pinning_is_stable() {
+    fn stream_requests_complete_in_stream_seq_order() {
+        // v3 drops worker pinning: a stream's requests may run on ANY
+        // worker (the chain runnable migrates), but the per-stream FIFO
+        // chain keeps completion in submission order — witnessed by the
+        // dense stream_seq on each response
         let coord = pool(2, 3, 8);
         let mut tickets = Vec::new();
         for _ in 0..4 {
             tickets.push(coord.submit(request(7, 1)).unwrap());
         }
         let responses = wait_all(tickets);
-        let workers: std::collections::HashSet<usize> =
-            responses.iter().map(|r| r.worker).collect();
-        assert_eq!(workers.len(), 1, "stream 7 must stay on its pinned worker");
+        let seqs: Vec<u64> = responses.iter().map(|r| r.stream_seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3], "stream 7 completed out of order");
+        // identical audio through bit-exact chip twins: every response
+        // agrees on the decision regardless of which worker served it
+        let classes: std::collections::HashSet<usize> =
+            responses.iter().map(|r| r.class).collect();
+        assert_eq!(classes.len(), 1, "chip twins diverged");
     }
 
     #[test]
-    fn spills_around_stalled_worker() {
+    fn work_migrates_around_stalled_worker() {
         let coord = pool(3, 2, 1);
-        // stall worker 0 (stream 0 pins there), saturate its queue of 1,
-        // further submissions must spill to worker 1 and still complete
+        // stall worker 0, keep submitting: admitted work must migrate to
+        // the healthy worker and complete WHILE worker 0 is down (the
+        // work-stealing replacement for the v2 spill path)
         coord.set_stalled(0, true);
         let mut tickets = Vec::new();
         for i in 0..4 {
@@ -2280,11 +2553,14 @@ mod tests {
                 tickets.push(t);
             }
         }
-        assert!(tickets.len() >= 2, "spill path dead: {}", tickets.len());
-        coord.set_stalled(0, false);
+        assert!(tickets.len() >= 2, "admission window dead: {}", tickets.len());
         let accepted = tickets.len();
         let responses = wait_all(tickets);
         assert_eq!(responses.len(), accepted);
+        for r in &responses {
+            assert_eq!(r.worker, 1, "a stalled worker served a request");
+        }
+        coord.set_stalled(0, false);
     }
 
     #[test]
@@ -2301,8 +2577,11 @@ mod tests {
                 Err(e) => {
                     // typed cause + payload handed back intact
                     assert!(e.is_queue_full(), "saturation must be QueueFull: {e}");
-                    assert_eq!(e.request().audio12.len(), audio_len);
-                    assert_eq!(e.into_request().stream, i);
+                    assert_eq!(
+                        e.request().expect("payload rides the error").audio12.len(),
+                        audio_len
+                    );
+                    assert_eq!(e.into_request().expect("payload").stream, i);
                     rejected += 1;
                 }
             }
@@ -2366,9 +2645,15 @@ mod tests {
     }
 
     #[test]
-    fn per_worker_counters_track_spill_and_rejection() {
-        let coord = pool(7, 2, 1);
+    fn per_worker_counters_fold_consistently() {
+        // mixed workload (solo utterances + a streaming session) on a
+        // stalled-then-healed pool: the per-worker shards must fold
+        // exactly into the aggregate, and the scheduler gauges must
+        // return to zero once every session is closed
+        let coord = pool(7, 2, 2);
         coord.set_stalled(0, true);
+        let sess = coord.open_stream(3).expect("session");
+        sess.push(vec![0i64; 256]).expect("window open");
         let mut tickets = Vec::new();
         for i in 0..6 {
             if let Ok(t) = coord.submit(request(0, 40 + i)) {
@@ -2379,13 +2664,100 @@ mod tests {
         let accepted = tickets.len();
         let responses = wait_all(tickets);
         assert_eq!(responses.len(), accepted);
+        sess.close();
         let s = coord.stats();
         assert_eq!(s.per_worker.len(), 2);
-        assert!(s.per_worker[0].pinned_full >= 1, "pinned-full stalls not visible");
-        assert!(s.spilled >= 1, "no spill counted");
-        assert_eq!(s.spilled, s.per_worker[1].spilled_in, "spill target mismatch");
         let done: u64 = s.per_worker.iter().map(|w| w.completed).sum();
         assert_eq!(done, s.completed, "per-worker completions don't sum up");
+        let steals: u64 = s.per_worker.iter().map(|w| w.steals).sum();
+        assert_eq!(steals, s.steals, "per-worker steals don't sum up");
+        let chunks: u64 = s.per_worker.iter().map(|w| w.stream_chunks).sum();
+        assert_eq!(chunks, 1, "the session's chunk went missing");
+        assert_eq!(s.sessions_parked, 0, "closed sessions left the parked gauge up");
+        assert_eq!(s.sessions_runnable, 0, "closed sessions left the runnable gauge up");
+        assert_eq!(s.session_bytes, 0, "closed sessions left memory booked");
+    }
+
+    #[test]
+    fn sessions_park_when_idle_and_wake_on_push() {
+        let coord = pool(23, 2, 4);
+        // a fresh session starts parked: zero scheduler attention
+        let sess = coord.open_stream(0).expect("session");
+        let s = coord.stats();
+        assert_eq!(s.sessions_parked, 1, "fresh session must start parked");
+        assert_eq!(s.sessions_runnable, 0);
+        assert_eq!(s.park_transitions, 0, "no work yet, no transitions");
+        // a push wakes it (parked → runnable), the drained inbox parks it
+        // again (runnable → parked, counted), and the wake-to-dispatch
+        // interval lands in sched_latency
+        sess.push(vec![0i64; 256]).expect("window open");
+        let s = wait_stats(&coord, |s| {
+            s.park_transitions >= 1 && s.sessions_parked == 1 && s.sessions_runnable == 0
+        });
+        assert!(s.sched_latency.count() >= 1, "wake latency not recorded");
+        sess.close();
+        let s = coord.stats();
+        assert_eq!(s.sessions_parked, 0);
+        assert_eq!(s.sessions_runnable, 0);
+    }
+
+    #[test]
+    fn dropping_pool_with_parked_sessions_delivers_closed_exactly_once() {
+        // shutdown-ordering satellite: parked sessions (never explicitly
+        // closed) must each get their Closed marker exactly once from the
+        // drop-time sweep
+        let coord = pool(24, 2, 4);
+        let mut sessions = Vec::new();
+        for i in 0..8 {
+            let sess = coord.open_stream(i).expect("session");
+            sess.push(vec![0i64; 256]).expect("window open");
+            sessions.push(sess);
+        }
+        // let every session drain its chunk and park again
+        wait_stats(&coord, |s| {
+            s.sessions_parked == 8 && s.sessions_runnable == 0 && s.stream_chunks() == 8
+        });
+        drop(coord);
+        for sess in &sessions {
+            let closed = sess
+                .events
+                .try_iter()
+                .filter(|e| matches!(e, StreamEvent::Closed { .. }))
+                .count();
+            assert_eq!(closed, 1, "parked session got {closed} Closed markers");
+        }
+    }
+
+    #[test]
+    fn open_stream_sheds_overloaded_at_high_water_mark() {
+        let coord = Coordinator::builder(rng_quant(25), ChipConfig::design_point())
+            .workers(1)
+            .queue_depth(4)
+            .max_sessions(2)
+            .build()
+            .expect("valid pool");
+        let a = coord.open_stream(0).expect("under the mark");
+        let _b = coord.open_stream(1).expect("at the mark");
+        // beyond the high-water mark: typed load-shed, not degradation
+        match coord.open_stream(2) {
+            Err(e) => {
+                assert!(e.is_overloaded(), "expected Overloaded: {e}");
+                assert!(e.request().is_none(), "open_stream carries no request payload");
+                match e {
+                    SubmitError::Overloaded { live, high_water } => {
+                        assert_eq!(live, 2);
+                        assert_eq!(high_water, 2);
+                    }
+                    other => panic!("expected Overloaded, got {other}"),
+                }
+            }
+            Ok(_) => panic!("third session must be shed at max_sessions=2"),
+        }
+        assert!(coord.stats().shed_overloaded >= 1, "shed not counted");
+        // closing a session frees a slot: admission recovers
+        a.close();
+        let c = coord.open_stream(3).expect("slot freed by close");
+        c.close();
     }
 
     #[test]
@@ -2457,8 +2829,9 @@ mod tests {
         let trace = traced.trace.expect("traced request lost its trace");
         assert_eq!(trace.frame_cycles.len(), 62);
         assert_eq!(trace.frame_cycles.iter().sum::<u64>(), traced.chip_cycles);
-        // identical audio on the same pinned worker chip: the lean and
-        // traced submissions agree on everything but the trace
+        // identical audio through bit-exact chip twins: the lean and
+        // traced submissions agree on everything but the trace, whichever
+        // workers served them
         assert_eq!(traced.class, lean.class);
         assert_eq!(traced.logits, lean.logits);
         assert_eq!(traced.counted_frames, lean.counted_frames);
@@ -2468,13 +2841,13 @@ mod tests {
     fn flooded_session_backpressures_and_worker_survives() {
         // ISSUE-5 regression: flooding a session without the worker
         // polling used to be able to kill the worker thread through the
-        // CDC-FIFO expect. Now the lane applies typed Backpressure, a
+        // CDC-FIFO expect. Now the session applies typed Backpressure, a
         // hostile oversized chunk is sliced worker-side, and the worker
         // stays alive for subsequent work.
         let coord = pool(21, 1, 2);
-        let sess = coord.open_stream(0);
+        let sess = coord.open_stream(0).expect("session");
         coord.set_stalled(0, true);
-        // flood the pinned lane without anything draining
+        // flood the session's chunk window without anything draining
         let mut backpressured = 0;
         for _ in 0..64 {
             match sess.push(vec![0i64; 256]) {
@@ -2514,7 +2887,7 @@ mod tests {
     #[test]
     fn stream_session_lifecycle_and_telemetry() {
         let coord = pool(8, 2, 8);
-        let sess = coord.open_stream(3);
+        let sess = coord.open_stream(3).expect("session");
         let cfg = crate::audio::track::TrackConfig {
             duration_s: 4,
             keywords: 2,
@@ -2537,8 +2910,7 @@ mod tests {
             "session lost frames"
         );
         let s = coord.stats();
-        let chunks: u64 = s.per_worker.iter().map(|w| w.stream_chunks).sum();
-        assert_eq!(chunks, n_chunks);
+        assert_eq!(s.stream_chunks(), n_chunks);
         assert_eq!(s.chunk_latency.count(), n_chunks);
         assert!(s.activity.frames >= (audio12.len() / crate::FRAME_SAMPLES) as u64);
     }
@@ -2546,7 +2918,7 @@ mod tests {
     #[test]
     fn sessions_and_requests_share_the_pool() {
         let coord = pool(9, 2, 8);
-        let sess = coord.open_stream(0);
+        let sess = coord.open_stream(0).expect("session");
         let mut tickets = Vec::new();
         for i in 0..4 {
             tickets.push(coord.submit(request(i, i)).unwrap());
@@ -2600,7 +2972,7 @@ mod tests {
             )
             .build()
             .expect("valid pool");
-        let sess = coord.open_stream(2);
+        let sess = coord.open_stream(2).expect("session");
         sess.push_blocking(vec![0i64; 1280]).unwrap();
         let events = sess.close();
         let closed = events.iter().find_map(|e| match e {
@@ -2623,6 +2995,10 @@ mod tests {
             .report_epoch(0)
             .build()
             .is_err());
+        assert!(Coordinator::builder(q.clone(), cfg.clone())
+            .max_sessions(0)
+            .build()
+            .is_err());
         let err = Coordinator::builder(q, cfg)
             .workers(builder::MAX_WORKERS + 1)
             .build()
@@ -2634,12 +3010,12 @@ mod tests {
     #[test]
     fn duplicate_stream_ids_are_independent_sessions() {
         let coord = pool(11, 2, 8);
-        let a = coord.open_stream(5);
-        let b = coord.open_stream(5);
+        let a = coord.open_stream(5).expect("session");
+        let b = coord.open_stream(5).expect("session");
         a.push_blocking(vec![0i64; 256]).unwrap();
         b.push_blocking(vec![0i64; 512]).unwrap();
         let ea = a.close();
-        // closing `a` must not tear down `b`'s worker state
+        // closing `a` must not tear down `b`'s scheduler state
         b.push_blocking(vec![0i64; 256]).unwrap();
         let eb = b.close();
         let frames = |evs: &[StreamEvent]| {
@@ -2655,7 +3031,7 @@ mod tests {
     #[test]
     fn session_outlives_coordinator_safely() {
         let coord = pool(10, 1, 4);
-        let sess = coord.open_stream(1);
+        let sess = coord.open_stream(1).expect("session");
         sess.push_blocking(vec![0i64; 256]).unwrap();
         drop(coord);
         // pool gone: pushes fail cleanly, typed Closed, chunk handed back
@@ -2664,7 +3040,7 @@ mod tests {
             Err(StreamPushError::Closed(c)) => assert_eq!(c, chunk),
             other => panic!("expected Closed with the chunk back, got {other:?}"),
         }
-        // the worker flushed a Closed marker during shutdown
+        // the shutdown sweep flushed a Closed marker
         let events: Vec<StreamEvent> = sess.events.try_iter().collect();
         assert!(events.iter().any(|e| matches!(e, StreamEvent::Closed { .. })));
     }
@@ -2692,7 +3068,7 @@ mod tests {
         match client.submit(request(1, 2)) {
             Err(e) => {
                 assert!(e.is_closed());
-                assert_eq!(e.into_request().stream, 1);
+                assert_eq!(e.into_request().expect("payload").stream, 1);
             }
             Ok(_) => panic!("submit into a dropped pool must fail"),
         }
@@ -2716,9 +3092,12 @@ mod tests {
         match coord.submit(req) {
             Err(e) => {
                 assert!(e.is_unknown_weights(), "expected UnknownWeights: {e}");
-                assert!(!e.is_queue_full() && !e.is_closed());
-                assert_eq!(e.request().audio12.len(), audio_len);
-                assert_eq!(e.into_request().stream, 0);
+                assert!(!e.is_queue_full() && !e.is_closed() && !e.is_overloaded());
+                assert_eq!(
+                    e.request().expect("payload rides the error").audio12.len(),
+                    audio_len
+                );
+                assert_eq!(e.into_request().expect("payload").stream, 0);
             }
             Ok(_) => panic!("unknown weight version must be rejected at submit"),
         }
@@ -2778,7 +3157,7 @@ mod tests {
     fn stream_swap_keeps_every_frame_and_acknowledges() {
         let coord = pool(32, 1, 8);
         let v2 = coord.registry().insert(rng_quant(79), None);
-        let sess = coord.open_stream(0);
+        let sess = coord.open_stream(0).expect("session");
         sess.push_blocking(vec![0i64; 1280]).unwrap(); // 10 frames on base
         coord.swap_weights(&sess, v2).expect("swap on a live session");
         sess.push_blocking(vec![0i64; 1280]).unwrap(); // 10 frames on v2
@@ -2803,7 +3182,7 @@ mod tests {
         // the session is closed: its pin on v2 was released
         assert_eq!(coord.registry().pins(v2), 0, "closed session leaked a pin");
         // swapping to an unknown version is a typed registry error
-        let sess2 = coord.open_stream(0);
+        let sess2 = coord.open_stream(0).expect("session");
         let bogus = WeightVersion::of(&rng_quant(4097));
         match coord.swap_weights(&sess2, bogus) {
             Err(crate::error::Error::Registry(e)) => assert_eq!(e.version(), bogus),
@@ -2812,3 +3191,6 @@ mod tests {
         sess2.close();
     }
 }
+
+
+

@@ -1,0 +1,311 @@
+//! Work-stealing run queue for the v3 event-driven scheduler (DESIGN.md §15).
+//!
+//! The v2 coordinator gave every worker a private bounded `sync_channel`
+//! lane and pinned each streaming session to one lane; a worker stalled on
+//! one hot session starved every stream pinned behind it. v3 replaces the
+//! lanes with one [`WorkQueue`]: a shared *injector* deque plus one *local*
+//! deque per worker. New and freshly-woken runnables land in the injector;
+//! a worker that still has work for a runnable it just ran re-queues it on
+//! its own local deque (cache affinity for the session's recurrent state).
+//! An idle worker pops its own local front, then the injector front, and
+//! finally *steals from the back* of another worker's local deque — the
+//! Chase–Lev discipline (owner and thief touch opposite ends) expressed
+//! with mutex-guarded `VecDeque`s instead of atomics, the std-only
+//! mechanism the lint manifest exempts (see `rust/lint/lint.conf`).
+//!
+//! Why a lock is acceptable here: each deque's critical section is a
+//! push/pop of one pointer-sized runnable — no chip work, no allocation in
+//! steady state (deque capacity is retained) — and the queues are the
+//! *boundary* of the hot path, not the per-frame inner loop. The per-frame
+//! code (accel/, fex/, chip/, stream/) stays lock-free; this module is in
+//! the lint hot set so every lock site below carries a reasoned exemption.
+//!
+//! Parking is the scheduler's whole point: a parked session is *not here*.
+//! It is a heap entry owned by the coordinator's session table; it costs no
+//! queue slot, no wakeups, no scan time until a `push_audio` re-arms it —
+//! the serving-layer analog of the chip's VAD clock gate.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+// lint:allow(no-lock-hot-path): the mutex-guarded deque IS the chosen std-only steal mechanism (see module docs)
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// How long an idle worker sleeps before rescanning for stealable work.
+/// Local re-queues deliberately skip the condvar (the owner is awake and
+/// will pop its own front), so sleepers must rescan: a worker stalled
+/// mid-runnable leaves its local backlog visible to thieves within this
+/// bound. 5 ms is far below the session chunk cadence and costs an idle
+/// 16-worker pool ~3k wakeups/s total.
+pub(crate) const IDLE_RESCAN: Duration = Duration::from_millis(5);
+
+/// Result of one blocking pop attempt.
+pub(crate) enum Popped<T> {
+    /// A runnable, plus whether it was stolen from another worker's local
+    /// deque (the caller's shard counts steals).
+    Item(T, bool),
+    /// Nothing available within the wait bound; the caller re-checks its
+    /// control flags (report requests, stall injection) and loops.
+    Empty,
+    /// Shutdown was signalled and every queue is drained. The worker exits.
+    Shutdown,
+}
+
+/// The shared run queue: one injector + per-worker locals.
+///
+/// Generic over the runnable type so the queue stays a pure scheduling
+/// structure; the coordinator instantiates it with its `Runnable` enum.
+pub(crate) struct WorkQueue<T> {
+    /// Global submission queue: new work, woken sessions, fused batches.
+    // lint:allow(no-lock-hot-path): injector deque is the std-only steal mechanism (module docs)
+    injector: Mutex<VecDeque<T>>,
+    /// Idle workers sleep here (paired with the injector mutex).
+    // lint:allow(no-lock-hot-path): condvar pairs with the injector mutex; idle-only, never per frame
+    idle: Condvar,
+    /// Per-worker local deques: owner pops the front, thieves the back.
+    // lint:allow(no-lock-hot-path): per-worker local deques are the std-only steal mechanism (module docs)
+    locals: Vec<Mutex<VecDeque<T>>>,
+    shutdown: AtomicBool,
+}
+
+/// Take a deque guard without poisoning semantics: a panicking worker must
+/// not wedge the scheduler, so a poisoned lock hands back the inner guard.
+/// (`into_inner` on the poison error is lossless — the deque itself is
+/// always in a consistent state between push/pop calls.)
+// lint:allow(no-lock-hot-path): single lock helper for the mutex-guarded steal queues (module docs)
+fn lock<'a, T>(m: &'a Mutex<VecDeque<T>>) -> MutexGuard<'a, VecDeque<T>> {
+    m.lock().unwrap_or_else(|poison| poison.into_inner()) // lint:allow(no-lock-hot-path): the single acquire site for the mutex-guarded steal queues (module docs)
+}
+
+impl<T> WorkQueue<T> {
+    pub(crate) fn new(workers: usize) -> Self {
+        Self {
+            // lint:allow(no-alloc-hot-path): construction-time only — queues are built once per pool
+            // lint:allow(no-lock-hot-path): construction-time mutex wrapping of the steal queues
+            injector: Mutex::new(VecDeque::new()),
+            idle: Condvar::new(), // lint:allow(no-lock-hot-path): construction-time condvar init; waits are idle-only
+            // lint:allow(no-alloc-hot-path): construction-time only — one local deque per worker
+            // lint:allow(no-lock-hot-path): construction-time mutex wrapping of the steal queues
+            locals: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    pub(crate) fn n_workers(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Submit a runnable to the injector and wake one sleeper.
+    pub(crate) fn push(&self, item: T) {
+        lock(&self.injector).push_back(item);
+        self.idle.notify_one();
+    }
+
+    /// Re-queue a runnable on `worker`'s own local deque (affinity: the
+    /// session's recurrent state is hot in that worker's cache). Only the
+    /// owning worker calls this, from its run loop, so no wakeup is needed
+    /// — the owner pops its own front next iteration. Thieves find it via
+    /// the [`IDLE_RESCAN`] sweep.
+    pub(crate) fn push_local(&self, worker: usize, item: T) {
+        lock(&self.locals[worker]).push_back(item);
+    }
+
+    /// Non-blocking pop for `worker`: own local front, then injector
+    /// front, then steal another worker's local *back*. Returns the item
+    /// and whether it was stolen.
+    pub(crate) fn pop(&self, worker: usize) -> Option<(T, bool)> {
+        if let Some(item) = lock(&self.locals[worker]).pop_front() {
+            return Some((item, false));
+        }
+        if let Some(item) = lock(&self.injector).pop_front() {
+            return Some((item, false));
+        }
+        let n = self.locals.len();
+        for k in 1..n {
+            let victim = (worker + k) % n;
+            if let Some(item) = lock(&self.locals[victim]).pop_back() {
+                return Some((item, true));
+            }
+        }
+        None
+    }
+
+    /// Blocking pop with a bounded wait. Drains remaining work even after
+    /// shutdown is signalled (pending utterances complete, queued session
+    /// messages — including `Close` — are processed); only an *empty*
+    /// shut-down queue returns [`Popped::Shutdown`].
+    pub(crate) fn pop_wait(&self, worker: usize) -> Popped<T> {
+        if let Some((item, stolen)) = self.pop(worker) {
+            return Popped::Item(item, stolen);
+        }
+        if self.shutdown.load(Ordering::Acquire) {
+            // Re-check after observing the flag: a push racing the flag
+            // store is ordered by the injector mutex, so one more scan
+            // sees anything submitted before shutdown().
+            return match self.pop(worker) {
+                Some((item, stolen)) => Popped::Item(item, stolen),
+                None => Popped::Shutdown,
+            };
+        }
+        let guard = lock(&self.injector);
+        if !guard.is_empty() {
+            // A push landed between the scan above and taking this lock;
+            // consume it here rather than sleeping through the wakeup.
+            let mut guard = guard;
+            return match guard.pop_front() {
+                Some(item) => Popped::Item(item, false),
+                None => Popped::Empty,
+            };
+        }
+        // Bounded sleep: local re-queues and stall-recovery don't signal
+        // the condvar, so sleepers wake on IDLE_RESCAN to re-scan steals.
+        let (_guard, _timeout) = self
+            .idle
+            .wait_timeout(guard, IDLE_RESCAN)
+            .unwrap_or_else(|poison| poison.into_inner());
+        Popped::Empty
+    }
+
+    /// Signal shutdown and wake every sleeper. Workers drain remaining
+    /// queued work, then exit.
+    pub(crate) fn shutdown(&self) {
+        // Hold the injector lock across the store so a sleeper can't miss
+        // the flag between its empty-check and its wait.
+        let _guard = lock(&self.injector);
+        self.shutdown.store(true, Ordering::Release);
+        self.idle.notify_all();
+    }
+
+    pub(crate) fn is_shut_down(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn owner_pops_fifo_from_injector() {
+        let q: WorkQueue<u32> = WorkQueue::new(2);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(0), Some((1, false)));
+        assert_eq!(q.pop(1), Some((2, false)));
+        assert_eq!(q.pop(0), Some((3, false)));
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn local_queue_has_priority_over_injector() {
+        let q: WorkQueue<u32> = WorkQueue::new(2);
+        q.push(10); // injector
+        q.push_local(0, 20);
+        assert_eq!(q.pop(0), Some((20, false)), "own local front comes first");
+        assert_eq!(q.pop(0), Some((10, false)));
+    }
+
+    #[test]
+    fn steal_takes_the_back_of_a_victim_local() {
+        let q: WorkQueue<u32> = WorkQueue::new(3);
+        q.push_local(0, 1);
+        q.push_local(0, 2);
+        q.push_local(0, 3);
+        // worker 2 steals from worker 0's local: opposite end (the back)
+        assert_eq!(q.pop(2), Some((3, true)), "thief takes the back");
+        // the owner still sees its own front
+        assert_eq!(q.pop(0), Some((1, false)));
+        assert_eq!(q.pop(1), Some((2, true)));
+        assert_eq!(q.pop(1), None);
+    }
+
+    #[test]
+    fn single_worker_pool_never_reports_steals() {
+        let q: WorkQueue<u32> = WorkQueue::new(1);
+        q.push(7);
+        q.push_local(0, 8);
+        assert_eq!(q.pop(0), Some((8, false)));
+        assert_eq!(q.pop(0), Some((7, false)));
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn shutdown_drains_before_reporting_exit() {
+        let q: WorkQueue<u32> = WorkQueue::new(2);
+        q.push(1);
+        q.push_local(1, 2);
+        q.shutdown();
+        assert!(q.is_shut_down());
+        match q.pop_wait(0) {
+            Popped::Item(1, false) => {}
+            _ => panic!("expected the injector item before shutdown"),
+        }
+        match q.pop_wait(0) {
+            Popped::Item(2, true) => {}
+            _ => panic!("expected the stolen local item before shutdown"),
+        }
+        assert!(matches!(q.pop_wait(0), Popped::Shutdown));
+        assert!(matches!(q.pop_wait(1), Popped::Shutdown));
+    }
+
+    #[test]
+    fn pop_wait_bounded_when_empty() {
+        let q: WorkQueue<u32> = WorkQueue::new(1);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_wait(0), Popped::Empty));
+        assert!(t0.elapsed() < Duration::from_secs(2), "wait must be bounded");
+    }
+
+    #[test]
+    fn sleeping_worker_wakes_on_push() {
+        let q: Arc<WorkQueue<u32>> = Arc::new(WorkQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || loop {
+            match q2.pop_wait(0) {
+                Popped::Item(v, _) => return v,
+                Popped::Empty => continue,
+                Popped::Shutdown => return 0,
+            }
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42);
+        assert_eq!(h.join().expect("worker thread"), 42);
+    }
+
+    #[test]
+    fn concurrent_producers_and_stealers_lose_nothing() {
+        let q: Arc<WorkQueue<u64>> = Arc::new(WorkQueue::new(4));
+        let total: u64 = 4_000;
+        let consumed = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for w in 0..4usize {
+            let q = Arc::clone(&q);
+            let consumed = Arc::clone(&consumed);
+            handles.push(std::thread::spawn(move || loop {
+                match q.pop_wait(w) {
+                    Popped::Item(v, _) => consumed.lock().unwrap().push(v),
+                    Popped::Empty => continue,
+                    Popped::Shutdown => break,
+                }
+            }));
+        }
+        for v in 0..total {
+            if v % 3 == 0 {
+                q.push_local((v % 4) as usize, v);
+            } else {
+                q.push(v);
+            }
+        }
+        q.shutdown();
+        for h in handles {
+            h.join().expect("consumer");
+        }
+        let mut got = consumed.lock().unwrap().clone();
+        got.sort_unstable();
+        let want: Vec<u64> = (0..total).collect();
+        assert_eq!(got, want, "every item consumed exactly once");
+    }
+}

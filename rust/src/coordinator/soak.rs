@@ -31,11 +31,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::{percentile, Coordinator, Request, Stats, StatsDelta, Ticket};
+use super::{percentile, Coordinator, Request, Stats, StatsDelta, StreamEvent, Ticket};
 use crate::accel::gru::QuantParams;
 use crate::audio::track::{synth_track, TrackConfig};
-use crate::chip::ChipConfig;
+use crate::chip::{ChipConfig, KwsChip};
 use crate::error::{SubmitError, WaitError};
+use crate::stream::detector::DetectionEvent;
+use crate::stream::{StreamConfig, StreamPipeline};
 use crate::util::prng::Pcg;
 
 /// Soak-run shape. `acceptance()` is the ISSUE-3 acceptance workload;
@@ -219,7 +221,7 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
     std::thread::scope(|s| {
         // stream sessions: one pusher thread per session
         for st in 0..cfg.streams {
-            let sess = coord.open_stream(st as u64);
+            let sess = coord.open_stream(st as u64).expect("soak opens under the high-water mark");
             let track = &track_audio;
             let chunks_done = &chunks_done;
             let n = cfg.chunks_per_stream;
@@ -397,6 +399,311 @@ pub fn run_soak(params: QuantParams, chip: ChipConfig, cfg: &SoakConfig) -> Soak
 /// `VecDeque` growth slack) plus the detector window, rounded way up.
 pub const MAX_SESSION_STATE_BYTES: u64 = 256 * 1024;
 
+/// Shape of one [`run_scale_soak`] cell: N live sessions, most of them
+/// VAD-idle (parked), a small active set pushing audio in rounds, plus a
+/// bit-exactness oracle on both the utterance and the streaming path.
+#[derive(Debug, Clone)]
+pub struct ScaleSoakConfig {
+    pub workers: usize,
+    /// live sessions to open (also the admission high-water mark)
+    pub sessions: usize,
+    /// percentage of sessions that never receive audio — they sit parked
+    /// for the whole run, the serving-layer analog of VAD clock-gating
+    pub idle_pct: u8,
+    /// push rounds over the active set (one chunk per active session per
+    /// round); the flat-memory checkpoint lands after the first ~10%
+    pub rounds: u64,
+    /// samples per pushed chunk
+    pub chunk_samples: usize,
+    pub queue_depth: usize,
+    pub seed: u64,
+    /// solo utterances cross-checked bit-for-bit against a direct
+    /// [`KwsChip`] oracle after the streaming rounds
+    pub oracle_utterances: usize,
+}
+
+impl ScaleSoakConfig {
+    /// One acceptance-matrix cell at `sessions` scale (90% idle).
+    pub fn with_sessions(sessions: usize) -> Self {
+        Self {
+            workers: 4,
+            sessions,
+            idle_pct: 90,
+            rounds: 10,
+            chunk_samples: 256,
+            queue_depth: 16,
+            seed: 0x5CA1E,
+            oracle_utterances: 100,
+        }
+    }
+
+    /// The CI `soak-scale` smoke cell: 2k sessions, 90% idle — small
+    /// enough to be a blocking gate, big enough that parking is load-
+    /// bearing (200 runnable sessions over 4 workers).
+    pub fn smoke() -> Self {
+        Self { rounds: 4, oracle_utterances: 16, ..Self::with_sessions(2_000) }
+    }
+
+    /// The 10k / 50k / 100k acceptance matrix (README scaling table).
+    pub fn matrix() -> [Self; 3] {
+        [
+            Self::with_sessions(10_000),
+            Self::with_sessions(50_000),
+            Self::with_sessions(100_000),
+        ]
+    }
+}
+
+/// Everything one scale-soak cell measured and proved.
+#[derive(Debug)]
+pub struct ScaleSoakReport {
+    pub sessions: usize,
+    pub active_sessions: usize,
+    pub workers: usize,
+    pub sessions_per_core: f64,
+    pub rounds: u64,
+    pub chunks_done: u64,
+    pub wall: Duration,
+    /// parked-session gauge at the quiesced ~10% checkpoint (must cover
+    /// every session — the whole point of parking)
+    pub parked_at_checkpoint: u64,
+    /// session memory at the quiesced ~10% checkpoint vs the end:
+    /// asserted equal (flat memory at scale)
+    pub session_bytes_early: u64,
+    pub session_bytes_late: u64,
+    pub telemetry_bytes: usize,
+    pub chunk_p50_us: u64,
+    pub chunk_p99_us: u64,
+    pub sched_p50_us: u64,
+    pub sched_p99_us: u64,
+    pub steals: u64,
+    pub park_transitions: u64,
+    /// typed admission rejections observed (the harness provokes one)
+    pub shed_overloaded: u64,
+    /// solo utterances that matched the direct-chip oracle bit-for-bit
+    pub oracle_checked: u64,
+    /// witness-stream detections that matched the single-threaded
+    /// [`StreamPipeline`] oracle bit-for-bit
+    pub witness_detections: u64,
+    pub final_stats: Stats,
+}
+
+/// Poll until the pool has fully drained: every session parked, nothing
+/// runnable, and exactly `chunks` stream chunks processed.
+fn quiesce(coord: &Coordinator, total_sessions: u64, chunks: u64) -> Stats {
+    let deadline = Instant::now() + Duration::from_secs(1800);
+    loop {
+        let s = coord.stats();
+        if s.sessions_parked == total_sessions
+            && s.sessions_runnable == 0
+            && s.stream_chunks() == chunks
+        {
+            return s;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "scale soak stalled: parked {}/{total_sessions}, chunks {}/{chunks}",
+            s.sessions_parked,
+            s.stream_chunks()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Run one scale-soak cell: open `sessions` streams (90% of which stay
+/// parked), push audio rounds over the active set, and prove the v3
+/// scheduler claims — flat memory between quiesced checkpoints, parked
+/// gauge covering the idle mass, typed `Overloaded` shedding past the
+/// high-water mark, and per-decision bit-exactness against single-
+/// threaded oracles on both the utterance and the streaming path.
+/// Panics (harness contract) on any violated invariant.
+pub fn run_scale_soak(
+    params: QuantParams,
+    chip: ChipConfig,
+    cfg: &ScaleSoakConfig,
+) -> ScaleSoakReport {
+    assert!(cfg.workers > 0 && cfg.sessions > 1 && cfg.rounds > 0);
+    assert!(cfg.idle_pct < 100, "at least one session must be active");
+    let coord = Coordinator::builder(params.clone(), chip.clone())
+        .workers(cfg.workers)
+        .queue_depth(cfg.queue_depth)
+        .max_sessions(cfg.sessions)
+        .build()
+        .expect("valid scale-soak pool");
+    let active = (cfg.sessions * (100 - cfg.idle_pct as usize) / 100).max(1);
+
+    let t0 = Instant::now();
+    // open the whole population; every session starts parked
+    let mut sessions = Vec::with_capacity(cfg.sessions);
+    for i in 0..cfg.sessions {
+        sessions.push(coord.open_stream(i as u64).expect("under the high-water mark"));
+    }
+    // admission control: one past the mark is a typed load-shed
+    match coord.open_stream(cfg.sessions as u64) {
+        Err(SubmitError::Overloaded { live, high_water }) => {
+            assert_eq!(live, cfg.sessions as u64);
+            assert_eq!(high_water, cfg.sessions as u64);
+        }
+        Err(e) => panic!("expected Overloaded past the mark, got {e}"),
+        Ok(_) => panic!("admission let a session past the high-water mark"),
+    }
+
+    // keyword-bearing track the active set loops over
+    let track_cfg =
+        TrackConfig { duration_s: 4, keywords: 2, fillers: 1, noise: (0.001, 0.002) };
+    let (track, _) = synth_track(&track_cfg, cfg.seed);
+    // session 0 is the witness: its exact chunk sequence is re-run
+    // single-threaded afterwards and must detect identically
+    let mut witness_chunks: Vec<Vec<i64>> = Vec::new();
+    let mut witness_events: Vec<DetectionEvent> = Vec::new();
+
+    let checkpoint_round = (cfg.rounds / 10).max(1);
+    let mut early: Option<Stats> = None;
+    let mut chunks_pushed = 0u64;
+    for round in 0..cfg.rounds {
+        for (i, sess) in sessions[..active].iter().enumerate() {
+            // per-session offset pattern so neighbours don't run in
+            // lockstep through the same samples
+            let off = ((i as u64 * 1_031 + round * cfg.chunk_samples as u64) as usize)
+                % (track.len() - cfg.chunk_samples);
+            let chunk = track[off..off + cfg.chunk_samples].to_vec();
+            if i == 0 {
+                witness_chunks.push(chunk.clone());
+            }
+            sess.push_blocking(chunk).expect("pool alive");
+            chunks_pushed += 1;
+        }
+        // drain the witness's event channel every round (bounded channel;
+        // the oracle comparison needs every event)
+        witness_events.extend(sessions[0].try_events().into_iter().filter_map(|e| match e {
+            StreamEvent::Detection { event, .. } => Some(event),
+            _ => None,
+        }));
+        if round + 1 == checkpoint_round {
+            early = Some(quiesce(&coord, cfg.sessions as u64, chunks_pushed));
+        }
+    }
+    let late = quiesce(&coord, cfg.sessions as u64, chunks_pushed);
+    let early = early.expect("checkpoint round ran");
+
+    // flat memory: the quiesced ~10% checkpoint and the quiesced end of
+    // the run book identical session memory AND identical telemetry
+    assert_eq!(
+        early.session_bytes, late.session_bytes,
+        "session memory grew between quiesced checkpoints"
+    );
+    assert_eq!(
+        early.telemetry_bytes(),
+        late.telemetry_bytes(),
+        "telemetry memory grew with chunk count"
+    );
+    assert_eq!(
+        early.sessions_parked, cfg.sessions as u64,
+        "parking must cover every drained session"
+    );
+    // every active session has drained and re-parked at least once (a
+    // fast producer can coalesce rounds, so ≥ active is the firm floor)
+    assert!(
+        late.park_transitions >= active as u64,
+        "active sessions never re-parked: {} transitions",
+        late.park_transitions
+    );
+    // bounded scheduling: wake → dispatch p99 under a generous ceiling
+    // (the gate is against runaway queueing, not a wall-clock benchmark)
+    let sched_p99 = late.sched_latency.percentile(0.99);
+    assert!(sched_p99 < 10_000_000, "sched p99 unbounded: {sched_p99} µs");
+
+    // utterance oracle: the pool's decisions vs a direct chip, bit for bit
+    let utter_pool: Vec<(Vec<i64>, usize)> = (0..16u64)
+        .map(|i| {
+            let label = (i % crate::NUM_CLASSES as u64) as usize;
+            let mut rng = Pcg::with_stream(cfg.seed, 100 + i);
+            let wave = crate::audio::synth_utterance(label, &mut rng);
+            (crate::audio::quantize_12b(&wave), label)
+        })
+        .collect();
+    let mut oracle_chip = KwsChip::new(params.clone(), chip.clone());
+    let mut oracle_checked = 0u64;
+    for k in 0..cfg.oracle_utterances {
+        let (audio12, label) = &utter_pool[k % 16];
+        let resp = coord
+            .submit(Request {
+                id: 0,
+                stream: k as u64,
+                audio12: audio12.clone(),
+                label: Some(*label),
+                trace: false,
+                weights: None,
+            })
+            .expect("oracle submit")
+            .wait_timeout(Duration::from_secs(1800))
+            .expect("oracle response");
+        let want = oracle_chip.process_utterance(audio12);
+        assert_eq!(resp.class, want.class, "oracle {k}: class diverged");
+        assert_eq!(resp.logits, want.logits, "oracle {k}: logits diverged");
+        assert_eq!(resp.counted_frames, want.counted_frames, "oracle {k}");
+        assert_eq!(resp.chip_cycles, want.total_cycles, "oracle {k}: cycles diverged");
+        oracle_checked += 1;
+    }
+
+    // close the witness first and fold its remaining events
+    let mut sessions = sessions.into_iter();
+    let witness = sessions.next().expect("witness session");
+    witness_events.extend(witness.close().into_iter().filter_map(|e| match e {
+        StreamEvent::Detection { event, .. } => Some(event),
+        _ => None,
+    }));
+    // streaming oracle: the same chunks through a fresh single-threaded
+    // pipeline must produce the identical detection sequence
+    let mut oracle_pipe =
+        StreamPipeline::new(params.clone(), StreamConfig::for_chip(chip.clone()));
+    let mut oracle_events: Vec<DetectionEvent> = Vec::new();
+    for chunk in &witness_chunks {
+        oracle_events
+            .extend(oracle_pipe.push_audio(chunk).expect("oracle pipeline accepts chunks"));
+    }
+    assert_eq!(
+        witness_events, oracle_events,
+        "scheduled witness stream diverged from the single-threaded oracle"
+    );
+
+    // graceful teardown: close the rest (mostly parked) and verify every
+    // gauge lands on zero
+    for sess in sessions {
+        sess.close();
+    }
+    let final_stats = coord.stats();
+    assert_eq!(final_stats.session_bytes, 0, "closed sessions left memory booked");
+    assert_eq!(final_stats.sessions_parked, 0);
+    assert_eq!(final_stats.sessions_runnable, 0);
+    assert!(final_stats.shed_overloaded >= 1, "the provoked shed went uncounted");
+    let wall = t0.elapsed();
+
+    ScaleSoakReport {
+        sessions: cfg.sessions,
+        active_sessions: active,
+        workers: cfg.workers,
+        sessions_per_core: cfg.sessions as f64 / cfg.workers as f64,
+        rounds: cfg.rounds,
+        chunks_done: final_stats.stream_chunks(),
+        wall,
+        parked_at_checkpoint: early.sessions_parked,
+        session_bytes_early: early.session_bytes,
+        session_bytes_late: late.session_bytes,
+        telemetry_bytes: late.telemetry_bytes(),
+        chunk_p50_us: late.chunk_latency.percentile(0.50),
+        chunk_p99_us: late.chunk_latency.percentile(0.99),
+        sched_p50_us: late.sched_latency.percentile(0.50),
+        sched_p99_us: late.sched_latency.percentile(0.99),
+        steals: final_stats.steals,
+        park_transitions: final_stats.park_transitions,
+        shed_overloaded: final_stats.shed_overloaded,
+        oracle_checked,
+        witness_detections: witness_events.len() as u64,
+        final_stats,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,5 +738,27 @@ mod tests {
         assert!(report.session_bytes_early <= MAX_SESSION_STATE_BYTES);
         assert_eq!(report.session_bytes_final, 0);
         assert!(report.simulated_audio_s > 15.0);
+    }
+
+    #[test]
+    fn tiny_scale_soak_parks_sheds_and_stays_bit_exact() {
+        let cfg = ScaleSoakConfig {
+            workers: 2,
+            sessions: 48,
+            idle_pct: 75,
+            rounds: 3,
+            oracle_utterances: 4,
+            ..ScaleSoakConfig::smoke()
+        };
+        let report = run_scale_soak(rng_quant(2), ChipConfig::design_point(), &cfg);
+        assert_eq!(report.sessions, 48);
+        assert_eq!(report.active_sessions, 12);
+        assert_eq!(report.parked_at_checkpoint, 48);
+        assert_eq!(report.session_bytes_early, report.session_bytes_late);
+        assert_eq!(report.chunks_done, 12 * 3);
+        assert_eq!(report.oracle_checked, 4);
+        assert!(report.shed_overloaded >= 1);
+        assert!(report.park_transitions >= 12);
+        assert_eq!(report.final_stats.sessions_parked, 0);
     }
 }

@@ -15,10 +15,11 @@
 //!
 //! Chip reports (power/energy rollups — float math) are *pull-based*: each
 //! worker publishes a [`ChipReport`] snapshot into its shard's report slot
-//! when its lane goes idle, every [`REPORT_EPOCH`] jobs under sustained
-//! load, and on an explicit [`super::Coordinator::reports`] request — never
-//! per utterance. The slot is a `Mutex`, but it is taken once per epoch,
-//! not once per request, and only ever contended by a concurrent reader.
+//! when the pool goes idle under it, every [`REPORT_EPOCH`] runnables under
+//! sustained load, and on an explicit [`super::Coordinator::reports`]
+//! request — never per utterance. The slot is a `Mutex`, but it is taken
+//! once per epoch, not once per request, and only ever contended by a
+//! concurrent reader.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -109,15 +110,21 @@ pub struct WorkerShard {
     /// epoch-fenced weight swaps installed on this worker's live stream
     /// sessions (see [`super::Coordinator::swap_weights`])
     pub weight_swaps: AtomicU64,
-    /// gauge: summed [`StreamPipeline::state_bytes`](crate::stream::StreamPipeline::state_bytes)
-    /// over this worker's live sessions, refreshed after every session
-    /// job — the soak harness asserts it stays bounded (and returns to 0
-    /// once sessions close)
-    pub session_bytes: AtomicU64,
+    /// runnables this worker popped from another worker's local queue
+    /// (the work-stealing path — scheduler-health signal: a high rate
+    /// means load is imbalanced and thieves are draining backlogs)
+    pub steals: AtomicU64,
+    /// runnable → parked transitions this worker performed (a session
+    /// drained its inbox and left the hot set: the serving-layer
+    /// clock-gate closing)
+    pub park_transitions: AtomicU64,
     /// wall-clock utterance service time (queue + simulation), µs
     pub latency: AtomicLogHistogram,
     /// wall-clock stream-chunk service time (queue + simulation), µs
     pub chunk_latency: AtomicLogHistogram,
+    /// wake-to-poll scheduling latency, µs: from a push re-arming a
+    /// parked session to a worker polling its first message of the wake
+    pub sched_latency: AtomicLogHistogram,
     /// chip activity folded in as monotonic deltas (utterances + sessions)
     pub activity: AtomicActivity,
     /// epoch-published chip report snapshot (utterance chip, cumulative);
@@ -128,8 +135,8 @@ pub struct WorkerShard {
 impl WorkerShard {
     /// Fixed heap footprint of this shard's telemetry (histogram buckets).
     pub fn heap_bytes(&self) -> usize {
-        // both histograms have the same constant bucket-array size
-        2 * crate::util::hist::N_BUCKETS * std::mem::size_of::<u64>()
+        // all three histograms have the same constant bucket-array size
+        3 * crate::util::hist::N_BUCKETS * std::mem::size_of::<u64>()
     }
 }
 

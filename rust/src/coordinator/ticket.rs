@@ -342,6 +342,7 @@ mod tests {
             service: Duration::ZERO,
             worker: 0,
             worker_seq: 0,
+            stream_seq: 0,
             trace: None,
             trace_id: crate::obs::TraceId::NONE,
             weights: crate::custom::WeightVersion::of(&crate::accel::gru::QuantParams::zeroed()),

@@ -100,6 +100,13 @@ impl std::error::Error for RegistryError {}
 /// One resident weight set.
 struct Resident {
     params: Arc<QuantParams>,
+    /// lazily serialised full-length SRAM image (see
+    /// [`crate::sram::shared_image`]), built on the first
+    /// [`WeightRegistry::image`] request and shared from then on: every
+    /// session and worker chip on this version installs this one
+    /// allocation by pointer. Dropped with the resident on eviction;
+    /// resurrection rebuilds it on demand.
+    image: Option<Arc<Vec<u16>>>,
     parent: Option<WeightVersion>,
     /// live-session pin count: > 0 blocks eviction
     pins: u64,
@@ -167,7 +174,7 @@ impl WeightRegistry {
         let parent = inner.evicted.remove(&version).unwrap_or(parent);
         inner.residents.insert(
             version,
-            Resident { params: Arc::new(params), parent, pins: 0, seq },
+            Resident { params: Arc::new(params), image: None, parent, pins: 0, seq },
         );
         while inner.residents.len() > self.capacity {
             // never evict the version being inserted: an enroll must hand
@@ -199,6 +206,28 @@ impl WeightRegistry {
         if let Some(r) = inner.residents.get_mut(&version) {
             r.seq = seq;
             return Ok(Arc::clone(&r.params));
+        }
+        if inner.evicted.contains_key(&version) {
+            return Err(RegistryError::Evicted(version));
+        }
+        Err(RegistryError::UnknownVersion(version))
+    }
+
+    /// Resolve a version to its shared full-length SRAM image, serialising
+    /// and caching it on first request (touches the LRU clock). Every
+    /// caller gets the same `Arc`, so the image exists once per resident
+    /// version however many chips serve it — the allocation the v3
+    /// scheduler's 10k-session memory budget leans on.
+    pub fn image(&self, version: WeightVersion) -> Result<Arc<Vec<u16>>, RegistryError> {
+        let mut inner = self.inner.lock().expect("registry mutex poisoned");
+        inner.clock += 1;
+        let seq = inner.clock;
+        if let Some(r) = inner.residents.get_mut(&version) {
+            r.seq = seq;
+            let image = r
+                .image
+                .get_or_insert_with(|| crate::sram::shared_image(&gru::to_sram_image(&r.params)));
+            return Ok(Arc::clone(image));
         }
         if inner.evicted.contains_key(&version) {
             return Err(RegistryError::Evicted(version));
@@ -418,6 +447,22 @@ mod tests {
         assert_eq!(reg.pins(a), 2);
         reg.unpin(a);
         assert_eq!(reg.pins(a), 1);
+    }
+
+    #[test]
+    fn image_is_cached_and_shared() {
+        let reg = WeightRegistry::new(2);
+        let params = rng_quant(5);
+        let want = gru::to_sram_image(&params);
+        let v = reg.insert(params, None);
+        let a = reg.image(v).expect("resident");
+        let b = reg.image(v).expect("resident");
+        assert!(Arc::ptr_eq(&a, &b), "image must serialise once and be shared");
+        assert_eq!(a.len(), crate::sram::WORDS, "full-length padded image");
+        assert_eq!(&a[..want.len()], &want[..], "image bits match the serialiser");
+        assert!(a[want.len()..].iter().all(|&w| w == 0), "zero tail");
+        let ghost = WeightVersion::of(&rng_quant(77));
+        assert!(matches!(reg.image(ghost), Err(RegistryError::UnknownVersion(_))));
     }
 
     #[test]

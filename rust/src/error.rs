@@ -138,24 +138,42 @@ pub enum SubmitError {
     /// pressure — the [`RegistryError`] says which). Permanent for this
     /// version: re-enroll or retarget, don't retry.
     UnknownWeights(Request, RegistryError),
+    /// Admission control shed an `open_stream` call: the pool already
+    /// serves `live` sessions, at (or beyond) its configured `high_water`
+    /// mark
+    /// ([`CoordinatorBuilder::max_sessions`](crate::coordinator::CoordinatorBuilder::max_sessions)).
+    /// Typed load-shedding: already-admitted sessions keep their latency
+    /// budget instead of everyone degrading. Close a session (or raise
+    /// the mark) and retry. No request payload — the rejected operation
+    /// was a session open, not a submission.
+    Overloaded {
+        /// sessions live when the open was shed
+        live: u64,
+        /// the pool's configured high-water mark
+        high_water: u64,
+    },
 }
 
 impl SubmitError {
-    /// Recover the rejected request (e.g. to resubmit it).
-    pub fn into_request(self) -> Request {
+    /// Recover the rejected request (e.g. to resubmit it). `None` for
+    /// [`SubmitError::Overloaded`], which carries no request.
+    pub fn into_request(self) -> Option<Request> {
         match self {
             SubmitError::QueueFull(r)
             | SubmitError::Closed(r)
-            | SubmitError::UnknownWeights(r, _) => r,
+            | SubmitError::UnknownWeights(r, _) => Some(r),
+            SubmitError::Overloaded { .. } => None,
         }
     }
 
-    /// Borrow the rejected request.
-    pub fn request(&self) -> &Request {
+    /// Borrow the rejected request (`None` for
+    /// [`SubmitError::Overloaded`]).
+    pub fn request(&self) -> Option<&Request> {
         match self {
             SubmitError::QueueFull(r)
             | SubmitError::Closed(r)
-            | SubmitError::UnknownWeights(r, _) => r,
+            | SubmitError::UnknownWeights(r, _) => Some(r),
+            SubmitError::Overloaded { .. } => None,
         }
     }
 
@@ -174,6 +192,12 @@ impl SubmitError {
     pub fn is_unknown_weights(&self) -> bool {
         matches!(self, SubmitError::UnknownWeights(_, _))
     }
+
+    /// True when admission control shed a session open at the live-session
+    /// high-water mark (retryable once a session closes).
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, SubmitError::Overloaded { .. })
+    }
 }
 
 impl fmt::Display for SubmitError {
@@ -187,6 +211,12 @@ impl fmt::Display for SubmitError {
             }
             SubmitError::UnknownWeights(r, e) => {
                 write!(f, "submit rejected: {e} (request {}, stream {})", r.id, r.stream)
+            }
+            SubmitError::Overloaded { live, high_water } => {
+                write!(
+                    f,
+                    "open_stream shed: {live} live sessions at high-water mark {high_water}"
+                )
             }
         }
     }
@@ -205,12 +235,11 @@ impl std::error::Error for SubmitError {
 /// failed. The chunk rides along in every variant.
 #[derive(Debug)]
 pub enum StreamPushError {
-    /// The session's pinned worker queue is full (stream jobs never
-    /// spill — the recurrent state lives on that worker). Pace the
-    /// producer and retry.
+    /// The session's chunk window is full (`queue_depth` chunks already
+    /// queued on its inbox). Pace the producer and retry.
     Backpressure(Vec<i64>),
-    /// The worker pool is gone (coordinator dropped or pinned worker
-    /// lane disconnected). The session is dead; stop pushing.
+    /// The worker pool is gone (coordinator dropped) or the session is
+    /// closed. The session is dead; stop pushing.
     Closed(Vec<i64>),
 }
 
@@ -229,12 +258,12 @@ impl StreamPushError {
         }
     }
 
-    /// True for transient pinned-lane backpressure (retryable).
+    /// True for transient session-window backpressure (retryable).
     pub fn is_backpressure(&self) -> bool {
         matches!(self, StreamPushError::Backpressure(_))
     }
 
-    /// True once the pool (or the pinned worker) is gone.
+    /// True once the pool (or the session) is gone.
     pub fn is_closed(&self) -> bool {
         matches!(self, StreamPushError::Closed(_))
     }
@@ -244,7 +273,7 @@ impl fmt::Display for StreamPushError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             StreamPushError::Backpressure(c) => {
-                write!(f, "stream push rejected: pinned worker queue full ({} samples)", c.len())
+                write!(f, "stream push rejected: session chunk window full ({} samples)", c.len())
             }
             StreamPushError::Closed(c) => {
                 write!(f, "stream push rejected: worker pool closed ({} samples)", c.len())

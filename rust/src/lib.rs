@@ -40,10 +40,13 @@
 //!   utterances), posterior smoothing + wakeword state machine, and
 //!   continuous-detection metrics (miss rate, false-accepts/hour,
 //!   latency).
-//! * [`coordinator`] — streaming serving runtime: routes audio streams to a
-//!   pool of chip-twin workers with dynamic batching and backpressure;
-//!   long-lived [`coordinator::StreamSession`]s run the always-on pipeline
-//!   per stream with pinned-worker state locality. The serving API (v2)
+//! * [`coordinator`] — streaming serving runtime: an event-driven
+//!   work-stealing scheduler (v3) runs utterances, fused batches, and
+//!   long-lived [`coordinator::StreamSession`]s as runnables on one
+//!   worker pool; VAD-idle sessions park off the hot set entirely (a
+//!   parked session is a heap entry, not a thread's attention) and the
+//!   next `push_audio` re-arms them, with admission control shedding
+//!   typed `Overloaded` past the high-water mark. The serving API (v2)
 //!   is ticket-based: construction goes through the validating
 //!   [`coordinator::Coordinator::builder`], submission returns a
 //!   completion [`coordinator::Ticket`] routed through per-client

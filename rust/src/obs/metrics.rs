@@ -24,7 +24,7 @@ use super::recorder::RecorderStats;
 
 /// Schema tag stamped on every snapshot (bump on any breaking change to
 /// field names, label sets or bucket layout).
-pub const METRICS_SCHEMA: &str = "deltakws-metrics/2";
+pub const METRICS_SCHEMA: &str = "deltakws-metrics/3";
 
 /// `le` bounds (µs) for the exposed latency histograms. All powers of two
 /// ≥ 32, i.e. exact [`LogHistogram`] bucket boundaries, so the cumulative
@@ -77,7 +77,16 @@ impl MetricsSnapshot {
         labeled_u64(&mut out, "deltakws_rejected_total", "cause", "queue_full", s.rejected_full);
         labeled_u64(&mut out, "deltakws_rejected_total", "cause", "closed", s.rejected_closed);
 
-        counter_u64(&mut out, "deltakws_spilled_total", "counter", s.spilled);
+        counter_u64(&mut out, "deltakws_steals_total", "counter", s.steals);
+        counter_u64(
+            &mut out,
+            "deltakws_park_transitions_total",
+            "counter",
+            s.park_transitions,
+        );
+        counter_u64(&mut out, "deltakws_shed_overloaded_total", "counter", s.shed_overloaded);
+        counter_u64(&mut out, "deltakws_sessions_parked", "gauge", s.sessions_parked);
+        counter_u64(&mut out, "deltakws_sessions_runnable", "gauge", s.sessions_runnable);
         counter_u64(&mut out, "deltakws_fused_batches_total", "counter", s.fused_batches);
         counter_u64(
             &mut out,
@@ -114,13 +123,9 @@ impl MetricsSnapshot {
         for (w, lane) in s.per_worker.iter().enumerate() {
             labeled_worker(&mut out, "deltakws_worker_completed_total", w, lane.completed);
         }
-        type_line(&mut out, "deltakws_worker_spilled_in_total", "counter");
+        type_line(&mut out, "deltakws_worker_steals_total", "counter");
         for (w, lane) in s.per_worker.iter().enumerate() {
-            labeled_worker(&mut out, "deltakws_worker_spilled_in_total", w, lane.spilled_in);
-        }
-        type_line(&mut out, "deltakws_worker_pinned_full_total", "counter");
-        for (w, lane) in s.per_worker.iter().enumerate() {
-            labeled_worker(&mut out, "deltakws_worker_pinned_full_total", w, lane.pinned_full);
+            labeled_worker(&mut out, "deltakws_worker_steals_total", w, lane.steals);
         }
         type_line(&mut out, "deltakws_worker_stream_chunks_total", "counter");
         for (w, lane) in s.per_worker.iter().enumerate() {
@@ -129,6 +134,7 @@ impl MetricsSnapshot {
 
         histogram(&mut out, "deltakws_latency_us", &s.latency);
         histogram(&mut out, "deltakws_chunk_latency_us", &s.chunk_latency);
+        histogram(&mut out, "deltakws_sched_latency_us", &s.sched_latency);
         histogram(&mut out, "deltakws_enroll_latency_us", &s.enroll_latency);
 
         if let Some(r) = &self.recorder {
@@ -149,6 +155,7 @@ impl MetricsSnapshot {
             gauge_f64(&mut out, "deltakws_drops_per_sec", d.drops_per_sec());
             gauge_f64(&mut out, "deltakws_stream_chunks_per_sec", d.chunks_per_sec());
             gauge_f64(&mut out, "deltakws_chip_frames_per_sec", d.frames_per_sec());
+            gauge_f64(&mut out, "deltakws_steals_per_sec", d.steals_per_sec());
         }
         out
     }
@@ -171,7 +178,9 @@ impl MetricsSnapshot {
                     ("labelled", jnum(s.labelled)),
                     ("rejected_full", jnum(s.rejected_full)),
                     ("rejected_closed", jnum(s.rejected_closed)),
-                    ("spilled", jnum(s.spilled)),
+                    ("shed_overloaded", jnum(s.shed_overloaded)),
+                    ("steals", jnum(s.steals)),
+                    ("park_transitions", jnum(s.park_transitions)),
                     ("fused_batches", jnum(s.fused_batches)),
                     ("stream_events_dropped", jnum(s.stream_events_dropped)),
                     ("weight_swaps", jnum(s.weight_swaps)),
@@ -181,6 +190,8 @@ impl MetricsSnapshot {
                 "gauges",
                 Json::obj(vec![
                     ("accuracy", Json::num(s.accuracy())),
+                    ("sessions_parked", jnum(s.sessions_parked)),
+                    ("sessions_runnable", jnum(s.sessions_runnable)),
                     ("session_bytes", jnum(s.session_bytes)),
                     ("telemetry_bytes", jnum(s.telemetry_bytes() as u64)),
                     ("resident_weight_versions", jnum(s.resident_versions)),
@@ -207,6 +218,7 @@ impl MetricsSnapshot {
             ),
             ("latency_us", hist_json(&s.latency)),
             ("chunk_latency_us", hist_json(&s.chunk_latency)),
+            ("sched_latency_us", hist_json(&s.sched_latency)),
             ("enroll_latency_us", hist_json(&s.enroll_latency)),
             (
                 "per_worker",
@@ -214,8 +226,7 @@ impl MetricsSnapshot {
                     Json::obj(vec![
                         ("worker", jnum(w as u64)),
                         ("completed", jnum(lane.completed)),
-                        ("spilled_in", jnum(lane.spilled_in)),
-                        ("pinned_full", jnum(lane.pinned_full)),
+                        ("steals", jnum(lane.steals)),
                         ("stream_chunks", jnum(lane.stream_chunks)),
                     ])
                 })),
@@ -241,6 +252,7 @@ impl MetricsSnapshot {
                         ("drops_per_sec", Json::num(d.drops_per_sec())),
                         ("chunks_per_sec", Json::num(d.chunks_per_sec())),
                         ("frames_per_sec", Json::num(d.frames_per_sec())),
+                        ("steals_per_sec", Json::num(d.steals_per_sec())),
                     ]),
                     None => Json::Null,
                 },

@@ -10,6 +10,8 @@
 
 pub mod timing;
 
+use std::sync::Arc;
+
 use crate::energy::SramKind;
 
 /// Total capacity: 24 kB = 12,288 16-bit words.
@@ -42,10 +44,33 @@ pub fn foundry_area_mm2() -> f64 {
     (WORDS * 16) as f64 * FOUNDRY_BIT_UM2 * 1e-6
 }
 
+/// Build a full-length, reference-counted SRAM image from a (possibly
+/// shorter) serialised weight image: the tail beyond `words.len()` is
+/// zero, exactly the state a freshly constructed [`WeightSram`] holds
+/// after [`load_image`](WeightSram::load_image). One shared image backs
+/// every chip twin serving the same weight version — at 10k+ parked
+/// sessions this is the difference between 24 kB and 24 MB-per-thousand
+/// of resident weight memory.
+pub fn shared_image(words: &[u16]) -> Arc<Vec<u16>> {
+    assert!(words.len() <= WORDS, "image larger than SRAM");
+    let mut full = vec![0u16; WORDS];
+    full[..words.len()].copy_from_slice(words);
+    Arc::new(full)
+}
+
 /// The weight SRAM twin.
+///
+/// The data array is reference-counted with copy-on-write semantics:
+/// [`load_shared_image`](Self::load_shared_image) installs a shared
+/// pointer (O(1), no copy), and any subsequent [`write_word`]
+/// (Self::write_word) detaches a private copy first. Cloning a
+/// `WeightSram` therefore shares the word array until either side
+/// writes — observable behaviour is identical to the old deep-copy
+/// model, but a thousand idle sessions on the same weight version hold
+/// one 24 kB image, not a thousand.
 #[derive(Debug, Clone)]
 pub struct WeightSram {
-    data: Vec<u16>,
+    data: Arc<Vec<u16>>,
     pub kind: SramKind,
     /// total word reads / writes
     pub reads: u64,
@@ -56,7 +81,13 @@ pub struct WeightSram {
 
 impl WeightSram {
     pub fn new(kind: SramKind) -> Self {
-        Self { data: vec![0; WORDS], kind, reads: 0, writes: 0, bank_reads: [0; BANKS] }
+        Self {
+            data: Arc::new(vec![0; WORDS]),
+            kind,
+            reads: 0,
+            writes: 0,
+            bank_reads: [0; BANKS],
+        }
     }
 
     /// Bank index of a word address.
@@ -108,11 +139,12 @@ impl WeightSram {
         &self.data[base..base + words]
     }
 
-    /// Write one word (counted; used by the weight loader).
+    /// Write one word (counted; used by the weight loader). Detaches a
+    /// private copy first if the word array is currently shared.
     pub fn write_word(&mut self, addr: usize, v: u16) {
         assert!(addr < WORDS, "SRAM write OOB: {addr}");
         self.writes += 1;
-        self.data[addr] = v;
+        Arc::make_mut(&mut self.data)[addr] = v;
     }
 
     /// Pack two int8 weights into a word and write it.
@@ -126,6 +158,17 @@ impl WeightSram {
         for (addr, &w) in words.iter().enumerate() {
             self.write_word(addr, w);
         }
+    }
+
+    /// Install a pre-built full-length image by pointer (see
+    /// [`shared_image`]): O(1), no word copy, the array is shared with
+    /// every other SRAM serving the same image until one of them writes.
+    /// Write accounting matches the per-word loader — the macro "wrote"
+    /// the whole array, however the functional model got the bits in.
+    pub fn load_shared_image(&mut self, image: &Arc<Vec<u16>>) {
+        assert!(image.len() == WORDS, "shared image must span the full SRAM");
+        self.writes += WORDS as u64;
+        self.data = Arc::clone(image);
     }
 
     /// Read energy consumed so far (nJ), by SRAM flavour.
@@ -245,5 +288,45 @@ mod tests {
     fn oob_write_panics() {
         let mut s = WeightSram::new(SramKind::NearVth);
         s.write_word(WORDS, 0);
+    }
+
+    #[test]
+    fn shared_image_installs_by_pointer_and_pads_tail() {
+        let img = shared_image(&[7, 8, 9]);
+        let mut a = WeightSram::new(SramKind::NearVth);
+        let mut b = WeightSram::new(SramKind::NearVth);
+        a.load_shared_image(&img);
+        b.load_shared_image(&img);
+        assert!(Arc::ptr_eq(&a.data, &b.data), "twins must share one image");
+        assert_eq!(a.peek(1), 8);
+        assert_eq!(a.peek(3), 0, "tail beyond the image is zero");
+        assert_eq!(a.peek(WORDS - 1), 0);
+        assert_eq!(a.writes, WORDS as u64);
+    }
+
+    #[test]
+    fn shared_image_is_copy_on_write() {
+        let img = shared_image(&[1, 2, 3]);
+        let mut a = WeightSram::new(SramKind::NearVth);
+        let mut b = WeightSram::new(SramKind::NearVth);
+        a.load_shared_image(&img);
+        b.load_shared_image(&img);
+        a.write_word(0, 0xDEAD);
+        assert_eq!(a.peek(0), 0xDEAD);
+        assert_eq!(b.peek(0), 1, "write detached a private copy, peer unchanged");
+        assert_eq!(img[0], 1, "the shared image itself is immutable");
+        assert!(!Arc::ptr_eq(&a.data, &b.data));
+    }
+
+    #[test]
+    fn shared_matches_per_word_load_bit_for_bit() {
+        let words: Vec<u16> = (0..500u16).map(|i| i.wrapping_mul(31)).collect();
+        let mut shared = WeightSram::new(SramKind::NearVth);
+        let mut plain = WeightSram::new(SramKind::NearVth);
+        shared.load_shared_image(&shared_image(&words));
+        plain.load_image(&words);
+        for addr in 0..WORDS {
+            assert_eq!(shared.peek(addr), plain.peek(addr), "word {addr}");
+        }
     }
 }

@@ -26,6 +26,8 @@ pub mod detector;
 pub mod metrics;
 pub mod vad;
 
+use std::sync::Arc;
+
 use crate::accel::gru::QuantParams;
 use crate::chip::{ChipConfig, ChipReport, KwsChip};
 use crate::energy::ChipActivity;
@@ -82,9 +84,22 @@ pub struct StreamPipeline {
 
 impl StreamPipeline {
     pub fn new(params: QuantParams, config: StreamConfig) -> Self {
+        let image = crate::sram::shared_image(&crate::accel::gru::to_sram_image(&params));
+        Self::new_shared(Arc::new(params), image, config)
+    }
+
+    /// Build against a shared weight table + SRAM image (see
+    /// [`KwsChip::new_shared`]): the per-session weight cost is two
+    /// pointers, which is what lets a pool park tens of thousands of
+    /// idle sessions on the same model without multiplying its memory.
+    pub fn new_shared(
+        params: Arc<QuantParams>,
+        image: Arc<Vec<u16>>,
+        config: StreamConfig,
+    ) -> Self {
         let StreamConfig { chip, vad, detector } = config;
         Self {
-            chip: KwsChip::new(params, chip),
+            chip: KwsChip::new_shared(params, image, chip),
             vad: Vad::new(vad),
             detector: Detector::new(detector),
             samples_in: 0,
@@ -171,6 +186,13 @@ impl StreamPipeline {
     /// detection straddling the fence still resolves.
     pub fn swap_weights(&mut self, params: QuantParams) {
         self.chip.swap_weights(params);
+    }
+
+    /// Shared-table variant of [`swap_weights`](Self::swap_weights):
+    /// the same frame-boundary fence, installing the version's shared
+    /// parameter table and SRAM image by pointer.
+    pub fn swap_weights_shared(&mut self, params: Arc<QuantParams>, image: Arc<Vec<u16>>) {
+        self.chip.swap_weights_shared(params, image);
     }
 
     /// Restore power-on state (keeps weights/config; telemetry counters on

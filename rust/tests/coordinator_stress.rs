@@ -3,18 +3,21 @@
 //! Asserts the serving contract under concurrency and injected failures:
 //! request conservation (every accepted ticket resolves exactly its own
 //! request id, and accepted + rejected == attempts), per-client mailbox
-//! isolation (no cross-producer response theft), per-stream ordering on
-//! the pinned path, and typed backpressure (bounded `QueueFull`
+//! isolation (no cross-producer response theft), per-stream `stream_seq`
+//! ordering (the v3 chain serializes a stream's requests no matter which
+//! workers serve them), typed backpressure (bounded `QueueFull`
 //! rejections with the request handed back, no loss) under a stalled
-//! worker. Audio is pre-rendered so the submission phase itself is tight.
+//! worker, and session churn (open/push/park/wake/swap/close interleaved
+//! from concurrent clients). Audio is pre-rendered so the submission
+//! phase itself is tight.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use deltakws::accel::gru::QuantParams;
 use deltakws::chip::ChipConfig;
-use deltakws::coordinator::{Coordinator, Request, Response};
+use deltakws::coordinator::{Coordinator, Request, Response, StreamEvent};
 use deltakws::util::prng::Pcg;
 use deltakws::SubmitError;
 
@@ -96,7 +99,7 @@ fn stress_concurrent_producers_conserve_requests() {
                             }
                             Err(e) => {
                                 assert!(e.is_queue_full(), "pool died mid-run");
-                                req = e.into_request();
+                                req = e.into_request().expect("QueueFull keeps the request");
                                 std::thread::sleep(Duration::from_millis(2));
                             }
                         }
@@ -146,26 +149,21 @@ fn stress_concurrent_producers_conserve_requests() {
         stats.rejected_full
     );
 
-    // per-stream ordering: a stream served entirely by one worker went
-    // through a single FIFO, so its ids must complete in submission order
-    // — visible through the per-worker completion sequence numbers (the
-    // spill path intentionally trades ordering for availability)
-    let mut by_stream: HashMap<u64, Vec<(u64, usize, u64)>> = HashMap::new();
+    // per-stream ordering: each stream here has a single submitting
+    // thread, so its requests enter the chain in ascending-id order and
+    // the v3 chain must serve them in that order — dense `stream_seq`,
+    // ids ascending along it, regardless of which workers ran the chain
+    let mut by_stream: HashMap<u64, Vec<(u64, u64)>> = HashMap::new();
     for r in &responses {
-        by_stream.entry(r.stream).or_default().push((r.id, r.worker, r.worker_seq));
+        by_stream.entry(r.stream).or_default().push((r.stream_seq, r.id));
     }
-    let mut pinned_streams = 0;
     for (stream, seq) in by_stream.iter_mut() {
-        let workers: std::collections::HashSet<usize> =
-            seq.iter().map(|&(_, w, _)| w).collect();
-        if workers.len() == 1 {
-            pinned_streams += 1;
-            seq.sort_by_key(|&(_, _, ws)| ws);
-            let ordered = seq.windows(2).all(|w| w[0].0 < w[1].0);
-            assert!(ordered, "stream {stream} reordered on its pinned worker: {seq:?}");
-        }
+        seq.sort();
+        let dense = seq.iter().enumerate().all(|(i, &(s, _))| s == i as u64);
+        assert!(dense, "stream {stream} has gaps in stream_seq: {seq:?}");
+        let ordered = seq.windows(2).all(|w| w[0].1 < w[1].1);
+        assert!(ordered, "stream {stream} served out of submission order: {seq:?}");
     }
-    assert!(pinned_streams >= 1, "no stream stayed pinned — ordering never exercised");
 }
 
 #[test]
@@ -220,9 +218,9 @@ fn stress_multi_client_ticket_isolation() {
 
 #[test]
 fn stress_backpressure_under_stalled_worker() {
-    // one of two workers stalls mid-run: the router must spill, then shed
-    // with clean typed rejections once both queues are full — and complete
-    // every accepted request after recovery
+    // one of two workers stalls mid-run: the healthy worker keeps pulling
+    // from the shared pool, and saturation sheds with clean typed
+    // rejections — every accepted request completes after recovery
     let coord = pool(2, 2, 2);
     coord.set_stalled(0, true);
 
@@ -236,14 +234,14 @@ fn stress_backpressure_under_stalled_worker() {
                 // typed cause: saturation of a live pool is QueueFull,
                 // and the request comes back intact for the retry path
                 assert!(e.is_queue_full(), "live pool reported Closed");
-                assert_eq!(e.request().stream, 0);
+                assert_eq!(e.request().expect("request handed back").stream, 0);
                 rejected += 1;
             }
         }
     }
     let accepted = tickets.len() as u64;
     assert!(rejected > 0, "saturating a stalled pool must reject");
-    assert!(accepted >= 2, "spill around the stalled worker is dead");
+    assert!(accepted >= 2, "migration around the stalled worker is dead");
     assert_eq!(coord.stats().rejected_full, rejected);
     assert_eq!(coord.stats().rejected_closed, 0);
 
@@ -308,7 +306,7 @@ fn stress_many_streams_land_on_all_workers() {
                         }
                         Err(e) => {
                             assert!(e.is_queue_full(), "pool died mid-run");
-                            req = e.into_request();
+                            req = e.into_request().expect("QueueFull keeps the request");
                             std::thread::sleep(Duration::from_millis(2));
                         }
                     }
@@ -320,7 +318,115 @@ fn stress_many_streams_land_on_all_workers() {
         }
     });
     assert_eq!(responses.len(), n);
+    // 9 concurrent chains against 3 pop-and-steal workers: the load must
+    // spread (work stealing makes exact placement nondeterministic, so
+    // ask for coverage, not a pinning map)
     let workers: std::collections::HashSet<usize> =
         responses.iter().map(|r| r.worker).collect();
-    assert_eq!(workers.len(), 3, "9 distinct streams must cover all 3 workers");
+    assert!(workers.len() >= 2, "9 concurrent streams served by a single worker");
+}
+
+#[test]
+fn stress_churn_open_push_park_wake_swap_close_from_concurrent_clients() {
+    // satellite: 4 client threads random-interleaving the whole session
+    // lifecycle — open, push (wakes a parked session), idle-wait (lets it
+    // re-park), swap_weights, close — with utterance tickets mixed in on
+    // *shared* stream ids. Every ticket must resolve to its submitter's
+    // mailbox, each client's submissions on a stream must serve in
+    // submission order (ascending `stream_seq`), and the pool must end
+    // with zero live sessions and zero session bytes.
+    const CLIENTS: usize = 4;
+    const ROUNDS: usize = 5;
+    let coord = pool(11, 3, 8);
+    let alt = coord.registry().insert(rng_quant(99), Some(coord.base_version()));
+
+    // one pre-rendered chunk shared by every session push
+    let chunk: Vec<i64> = {
+        let mut rng = Pcg::new(77);
+        let audio = deltakws::audio::synth_utterance(3, &mut rng);
+        deltakws::audio::quantize_12b(&audio[..512])
+    };
+
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let coord = &coord;
+            let chunk = &chunk;
+            scope.spawn(move || {
+                let client = coord.client();
+                let mut rng = Pcg::new(0xC0FFEE + c as u64);
+                let mut seq_by_stream: HashMap<u64, Vec<u64>> = HashMap::new();
+                for round in 0..ROUNDS {
+                    // sessions use per-client ids; utterances share ids
+                    // across clients so their chains interleave
+                    let sess_id = (1000 + c * ROUNDS + round) as u64;
+                    let sess = coord.open_stream(sess_id).expect("under high-water mark");
+                    sess.push_blocking(chunk.clone()).expect("pool alive");
+                    if rng.below(2) == 0 {
+                        // idle long enough for the session to drain and
+                        // re-park, so the next push exercises the wake
+                        // path (bounded, best-effort — no assert: other
+                        // clients keep the pool busy)
+                        let deadline = Instant::now() + Duration::from_millis(50);
+                        while coord.stats().sessions_runnable > 0
+                            && Instant::now() < deadline
+                        {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                    }
+                    if rng.below(2) == 0 {
+                        coord.swap_weights(&sess, alt).expect("swap accepted");
+                    }
+                    sess.push_blocking(chunk.clone()).expect("pool alive");
+
+                    // interleaved utterance on a stream id shared by all
+                    // clients — chains migrate freely across workers
+                    let shared = (round % 2) as u64;
+                    let mut req = short_request(shared, (c * 1000 + round) as u64 + 1);
+                    let ticket = loop {
+                        match client.submit(req) {
+                            Ok(t) => break t,
+                            Err(e) => {
+                                assert!(e.is_queue_full(), "pool died mid-run");
+                                req = e.into_request().expect("request kept");
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                        }
+                    };
+                    let id = ticket.id();
+                    let resp = ticket
+                        .wait_timeout(Duration::from_secs(300))
+                        .expect("ticket starved: response lost or stolen");
+                    assert_eq!(resp.id, id, "ticket resolved a foreign response");
+                    assert_eq!(resp.stream, shared, "response for a foreign stream");
+                    seq_by_stream.entry(shared).or_default().push(resp.stream_seq);
+
+                    let events = sess.close();
+                    assert!(
+                        matches!(events.last(), Some(StreamEvent::Closed { .. })),
+                        "churned session closed without its Closed marker"
+                    );
+                }
+                // this client's submissions on a shared stream happened
+                // in program order, so their chain positions must ascend
+                // even though other clients' requests interleave between
+                for (stream, seqs) in seq_by_stream {
+                    assert!(
+                        seqs.windows(2).all(|w| w[0] < w[1]),
+                        "client {c} saw stream {stream} out of order: {seqs:?}"
+                    );
+                }
+            });
+        }
+    });
+
+    let stats = coord.stats();
+    assert_eq!(stats.completed, (CLIENTS * ROUNDS) as u64);
+    assert_eq!(stats.sessions_parked, 0, "closed sessions still parked");
+    assert_eq!(stats.sessions_runnable, 0, "closed sessions still runnable");
+    assert_eq!(stats.session_bytes, 0, "session memory leaked after churn");
+    // most sessions drain and re-park while their client blocks on the
+    // interleaved ticket; a session closed mid-drain legitimately never
+    // re-parks, so ask for evidence of parking, not a per-session count
+    assert!(stats.park_transitions >= 1, "churned sessions never parked");
+    assert!(stats.weight_swaps <= (CLIENTS * ROUNDS) as u64);
 }

@@ -99,7 +99,7 @@ fn coordinator_stream_survives_the_swap_with_full_accounting() {
     let audio = deltakws::audio::quantize_12b(&deltakws::audio::synth_utterance(5, &mut rng));
     let half = audio.len() / 2;
 
-    let sess = coord.open_stream(0);
+    let sess = coord.open_stream(0).expect("under the high-water mark");
     sess.push_blocking(audio[..half].to_vec()).expect("pool alive");
     coord.swap_weights(&sess, v2).expect("swap accepted");
     sess.push_blocking(audio[half..].to_vec()).expect("pool alive");

@@ -1,4 +1,5 @@
-//! Golden tests for the metrics exposition schema (PR 7).
+//! Golden tests for the metrics exposition schema (PR 7, re-pinned for
+//! the `deltakws-metrics/3` scheduler schema in PR 10).
 //!
 //! The Prometheus-style text and the JSON document emitted by
 //! [`MetricsSnapshot`] are a **stable schema** other tooling scrapes
@@ -16,7 +17,7 @@
 //! Any change that breaks these tests is a schema break: bump
 //! [`METRICS_SCHEMA`], update `tools/bench_report.py`, then re-pin here.
 
-use deltakws::coordinator::{LaneStats, Stats};
+use deltakws::coordinator::{Stats, WorkerStats};
 use deltakws::energy::ChipActivity;
 use deltakws::obs::recorder::RecorderStats;
 use deltakws::obs::{MetricsRegistry, MetricsSnapshot, LATENCY_LE_US, METRICS_SCHEMA};
@@ -33,6 +34,8 @@ fn synthetic_stats() -> Stats {
     latency.record(5_000);
     let mut chunk_latency = LogHistogram::new();
     chunk_latency.record(50);
+    let mut sched_latency = LogHistogram::new();
+    sched_latency.record(80);
     let mut enroll_latency = LogHistogram::new();
     enroll_latency.record(200_000);
     Stats {
@@ -41,9 +44,14 @@ fn synthetic_stats() -> Stats {
         labelled: 8,
         rejected_full: 2,
         rejected_closed: 1,
-        spilled: 3,
+        steals: 4,
+        park_transitions: 9,
+        sessions_parked: 7,
+        sessions_runnable: 2,
+        shed_overloaded: 3,
         latency,
         chunk_latency,
+        sched_latency,
         activity: ChipActivity {
             frames: 620,
             gated_frames: 155,
@@ -65,8 +73,8 @@ fn synthetic_stats() -> Stats {
         resident_versions: 2,
         enroll_latency,
         per_worker: vec![
-            LaneStats { completed: 7, spilled_in: 1, pinned_full: 2, stream_chunks: 5 },
-            LaneStats { completed: 3, spilled_in: 2, pinned_full: 0, stream_chunks: 9 },
+            WorkerStats { completed: 7, steals: 1, stream_chunks: 5 },
+            WorkerStats { completed: 3, steals: 3, stream_chunks: 9 },
         ],
         captured_us: 1_000_000,
     }
@@ -98,7 +106,11 @@ fn prometheus_type_lines_are_pinned() {
         "# TYPE deltakws_correct_total counter",
         "# TYPE deltakws_accuracy gauge",
         "# TYPE deltakws_rejected_total counter",
-        "# TYPE deltakws_spilled_total counter",
+        "# TYPE deltakws_steals_total counter",
+        "# TYPE deltakws_park_transitions_total counter",
+        "# TYPE deltakws_shed_overloaded_total counter",
+        "# TYPE deltakws_sessions_parked gauge",
+        "# TYPE deltakws_sessions_runnable gauge",
         "# TYPE deltakws_fused_batches_total counter",
         "# TYPE deltakws_stream_events_dropped_total counter",
         "# TYPE deltakws_session_bytes gauge",
@@ -115,11 +127,11 @@ fn prometheus_type_lines_are_pinned() {
         "# TYPE deltakws_chip_sparsity gauge",
         "# TYPE deltakws_chip_duty_cycle gauge",
         "# TYPE deltakws_worker_completed_total counter",
-        "# TYPE deltakws_worker_spilled_in_total counter",
-        "# TYPE deltakws_worker_pinned_full_total counter",
+        "# TYPE deltakws_worker_steals_total counter",
         "# TYPE deltakws_worker_stream_chunks_total counter",
         "# TYPE deltakws_latency_us histogram",
         "# TYPE deltakws_chunk_latency_us histogram",
+        "# TYPE deltakws_sched_latency_us histogram",
         "# TYPE deltakws_enroll_latency_us histogram",
     ];
     assert_eq!(types, expected, "TYPE line set/order drifted — schema break");
@@ -136,7 +148,11 @@ fn prometheus_integer_samples_are_exact() {
         "deltakws_correct_total 6",
         "deltakws_rejected_total{cause=\"queue_full\"} 2",
         "deltakws_rejected_total{cause=\"closed\"} 1",
-        "deltakws_spilled_total 3",
+        "deltakws_steals_total 4",
+        "deltakws_park_transitions_total 9",
+        "deltakws_shed_overloaded_total 3",
+        "deltakws_sessions_parked 7",
+        "deltakws_sessions_runnable 2",
         "deltakws_fused_batches_total 1",
         "deltakws_stream_events_dropped_total 4",
         "deltakws_session_bytes 512",
@@ -152,10 +168,8 @@ fn prometheus_integer_samples_are_exact() {
         "deltakws_chip_fex_visits_total 500",
         "deltakws_worker_completed_total{worker=\"0\"} 7",
         "deltakws_worker_completed_total{worker=\"1\"} 3",
-        "deltakws_worker_spilled_in_total{worker=\"0\"} 1",
-        "deltakws_worker_spilled_in_total{worker=\"1\"} 2",
-        "deltakws_worker_pinned_full_total{worker=\"0\"} 2",
-        "deltakws_worker_pinned_full_total{worker=\"1\"} 0",
+        "deltakws_worker_steals_total{worker=\"0\"} 1",
+        "deltakws_worker_steals_total{worker=\"1\"} 3",
         "deltakws_worker_stream_chunks_total{worker=\"0\"} 5",
         "deltakws_worker_stream_chunks_total{worker=\"1\"} 9",
     ] {
@@ -191,6 +205,11 @@ fn prometheus_histograms_cumulate_exactly() {
     assert!(has_line(&text, "deltakws_chunk_latency_us_bucket{le=\"+Inf\"} 1"));
     assert!(has_line(&text, "deltakws_chunk_latency_us_sum 50"));
     assert!(has_line(&text, "deltakws_chunk_latency_us_count 1"));
+    // scheduling-latency sample 80 µs: below the first bound already
+    assert!(has_line(&text, "deltakws_sched_latency_us_bucket{le=\"128\"} 1"));
+    assert!(has_line(&text, "deltakws_sched_latency_us_bucket{le=\"+Inf\"} 1"));
+    assert!(has_line(&text, "deltakws_sched_latency_us_sum 80"));
+    assert!(has_line(&text, "deltakws_sched_latency_us_count 1"));
     // enrollment sample 200_000 µs: above 131072, below 524288
     assert!(has_line(&text, "deltakws_enroll_latency_us_bucket{le=\"131072\"} 0"));
     assert!(has_line(&text, "deltakws_enroll_latency_us_bucket{le=\"524288\"} 1"));
@@ -223,6 +242,7 @@ fn json_key_sets_are_pinned() {
             "per_worker",
             "rates",
             "recorder",
+            "sched_latency_us",
             "schema",
             "seq",
         ]
@@ -234,16 +254,25 @@ fn json_key_sets_are_pinned() {
             "correct",
             "fused_batches",
             "labelled",
+            "park_transitions",
             "rejected_closed",
             "rejected_full",
-            "spilled",
+            "shed_overloaded",
+            "steals",
             "stream_events_dropped",
             "weight_swaps",
         ]
     );
     assert_eq!(
         key_set(doc.get("gauges").unwrap()),
-        ["accuracy", "resident_weight_versions", "session_bytes", "telemetry_bytes"]
+        [
+            "accuracy",
+            "resident_weight_versions",
+            "session_bytes",
+            "sessions_parked",
+            "sessions_runnable",
+            "telemetry_bytes",
+        ]
     );
     assert_eq!(
         key_set(doc.get("activity").unwrap()),
@@ -264,7 +293,7 @@ fn json_key_sets_are_pinned() {
             "total_x",
         ]
     );
-    for hist in ["latency_us", "chunk_latency_us", "enroll_latency_us"] {
+    for hist in ["latency_us", "chunk_latency_us", "sched_latency_us", "enroll_latency_us"] {
         assert_eq!(
             key_set(doc.get(hist).unwrap()),
             ["buckets", "count", "mean", "p50", "p90", "p99", "sum"],
@@ -274,10 +303,7 @@ fn json_key_sets_are_pinned() {
     let workers = doc.get("per_worker").unwrap().as_arr().unwrap();
     assert_eq!(workers.len(), 2);
     for w in workers {
-        assert_eq!(
-            key_set(w),
-            ["completed", "pinned_full", "spilled_in", "stream_chunks", "worker"]
-        );
+        assert_eq!(key_set(w), ["completed", "steals", "stream_chunks", "worker"]);
     }
 }
 
@@ -287,6 +313,11 @@ fn json_values_and_le_sequence_are_exact() {
     assert_eq!(doc.get("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
     assert_eq!(doc.at(&["counters", "completed"]).unwrap().as_f64(), Some(10.0));
     assert_eq!(doc.at(&["counters", "weight_swaps"]).unwrap().as_f64(), Some(5.0));
+    assert_eq!(doc.at(&["counters", "steals"]).unwrap().as_f64(), Some(4.0));
+    assert_eq!(doc.at(&["counters", "park_transitions"]).unwrap().as_f64(), Some(9.0));
+    assert_eq!(doc.at(&["counters", "shed_overloaded"]).unwrap().as_f64(), Some(3.0));
+    assert_eq!(doc.at(&["gauges", "sessions_parked"]).unwrap().as_f64(), Some(7.0));
+    assert_eq!(doc.at(&["gauges", "sessions_runnable"]).unwrap().as_f64(), Some(2.0));
     assert_eq!(
         doc.at(&["gauges", "resident_weight_versions"]).unwrap().as_f64(),
         Some(2.0)
@@ -336,6 +367,7 @@ fn registry_fold_exposes_recorder_and_rates_sections() {
     later.captured_us = 3_000_000;
     later.completed = 50;
     later.rejected_full = 4;
+    later.steals = 12;
     later.activity.frames = 3_100;
     later.per_worker[0].stream_chunks = 21; // 14 → 30 total chunks
     let rec = RecorderStats { events: 7, dumps_taken: 2, dumps_dropped: 1, dumps_held: 1 };
@@ -356,9 +388,12 @@ fn registry_fold_exposes_recorder_and_rates_sections() {
     // Δchunks (21 + 9) − (5 + 9) = 16 over 2 s
     assert_eq!(prom_value(&text, "deltakws_stream_chunks_per_sec"), 8.0);
     assert_eq!(prom_value(&text, "deltakws_chip_frames_per_sec"), 1240.0);
+    // Δsteals 12 − 4 = 8 over 2 s
+    assert_eq!(prom_value(&text, "deltakws_steals_per_sec"), 4.0);
 
     let doc = snap.to_json();
     assert_eq!(doc.at(&["recorder", "events"]).unwrap().as_f64(), Some(7.0));
     assert_eq!(doc.at(&["rates", "elapsed_us"]).unwrap().as_f64(), Some(2_000_000.0));
     assert_eq!(doc.at(&["rates", "decisions_per_sec"]).unwrap().as_f64(), Some(20.0));
+    assert_eq!(doc.at(&["rates", "steals_per_sec"]).unwrap().as_f64(), Some(4.0));
 }

@@ -147,7 +147,7 @@ fn stream_events_carry_the_session_trace() {
         .expect("valid pool");
     let cfg = TrackConfig { duration_s: 3, keywords: 1, fillers: 0, noise: (0.001, 0.002) };
     let (audio12, _) = synth_track(&cfg, 77);
-    let sess = coord.open_stream(5);
+    let sess = coord.open_stream(5).expect("under the high-water mark");
     let session_trace = sess.trace_id();
     assert!(!session_trace.is_none(), "session trace missing");
     for c in audio12.chunks(640) {

@@ -141,7 +141,7 @@ fn queue_full_hands_the_request_back_intact() {
             Err(e) => {
                 assert!(e.is_queue_full());
                 assert!(!e.is_closed());
-                let back = e.into_request();
+                let back = e.into_request().expect("QueueFull hands the request back");
                 assert_eq!(back.audio12, audio, "payload mutated in rejection");
                 assert_eq!(back.label, label);
                 rejections += 1;

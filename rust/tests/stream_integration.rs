@@ -8,7 +8,7 @@
 //! * VAD gating is free of functional side effects (gated frames never
 //!   touch the ΔRNN) and strictly cheaper on the energy model;
 //! * coordinator stream sessions conserve audio and deliver detections
-//!   from the pinned worker.
+//!   in order, whichever workers end up running the session's chain.
 
 use deltakws::accel::gru::QuantParams;
 use deltakws::accel::{AccelConfig, DeltaRnnAccel};
@@ -171,10 +171,11 @@ fn vad_cold_start_reopens_after_real_silence() {
 }
 
 #[test]
-fn coordinator_sessions_detect_on_the_pinned_worker() {
+fn coordinator_sessions_conserve_frames_wherever_the_chain_runs() {
     // two sessions on a 3-worker pool, interleaved with batch requests:
     // every chunk of a stream must be processed (frame conservation) and
-    // events must flow back asynchronously
+    // events must flow back asynchronously, regardless of which workers
+    // the v3 scheduler lands each chunk chain on
     let coord = Coordinator::builder(rng_quant(7), ChipConfig::design_point())
         .workers(3)
         .queue_depth(8)
@@ -182,8 +183,8 @@ fn coordinator_sessions_detect_on_the_pinned_worker() {
         .expect("valid pool");
     let cfg = TrackConfig { duration_s: 4, keywords: 2, fillers: 0, noise: (0.001, 0.002) };
     let (audio12, _) = synth_track(&cfg, 31);
-    let s1 = coord.open_stream(10);
-    let s2 = coord.open_stream(11);
+    let s1 = coord.open_stream(10).expect("under the high-water mark");
+    let s2 = coord.open_stream(11).expect("under the high-water mark");
     for c in audio12.chunks(640) {
         s1.push_blocking(c.to_vec()).expect("pool alive");
         s2.push_blocking(c.to_vec()).expect("pool alive");

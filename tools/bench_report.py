@@ -23,10 +23,12 @@ folds the relevant numbers into one JSON artifact:
 
 Since PR 7 the report also ingests the soak run's metrics exposition
 (results/soak_metrics.json, written by examples/soak.rs) after validating
-it against the deltakws-metrics/2 schema, and tracks the flight-recorder
-overhead ratio (probe_overhead_x.utterance_decode_recorder) as a
-trajectory case. `--validate-metrics PATH` runs the schema check alone
-(exit 0/1) — the CI smoke step for the observability surface.
+it against the pinned metrics schema (deltakws-metrics/3 since PR 10:
+steal/parking counters, scheduler gauges, sched_latency_us histogram),
+and tracks the flight-recorder overhead ratio
+(probe_overhead_x.utterance_decode_recorder) as a trajectory case.
+`--validate-metrics PATH` runs the schema check alone (exit 0/1) — the
+CI smoke step for the observability surface.
 
 Since PR 8 the report also ingests the static-analysis counts from
 deltakws-lint's JSON report (results/lint_report.json, schema
@@ -39,6 +41,12 @@ Since PR 9 the report also ingests the few-shot customization numbers
 (results/enroll_metrics.json, written by examples/enroll.rs): enrollment
 latency per step and the mid-stream weight-swap service latency become
 report["customization"] and are tracked against the baseline.
+
+Since PR 10 the report also ingests the scale-soak artifact
+(results/soak_scale.json, written by `examples/soak.rs -- scale`):
+sessions/core, chunk and scheduling p99, steal and park counts become
+report["scheduler"] — the v3 work-stealing scheduler's trajectory block,
+baseline-diffed like every other tracked number.
 
 The issue number is derived automatically (max N among existing
 BENCH_*.json in the working directory — i.e. refresh the newest point)
@@ -77,7 +85,7 @@ METRICS_CANDIDATES = [
     os.path.join("rust", "results", "soak_metrics.json"),
     os.path.join("results", "soak_metrics.json"),
 ]
-METRICS_SCHEMA = "deltakws-metrics/2"
+METRICS_SCHEMA = "deltakws-metrics/3"
 # the `le` sequence of both exposed histograms, null = +Inf
 METRICS_LE = [128, 512, 2048, 8192, 32768, 131072, 524288, 2097152, None]
 # deltakws-lint writes its JSON report here in CI (`--json`); the counts
@@ -95,6 +103,13 @@ ENROLL_CANDIDATES = [
     os.path.join("rust", "results", "enroll_metrics.json"),
 ]
 ENROLL_SCHEMA = "deltakws-enroll/1"
+# `examples/soak.rs -- scale` writes the scale-soak cells here — same cwd
+# ambiguity as the soak snapshot, same resolution (newest wins)
+SOAK_SCALE_CANDIDATES = [
+    os.path.join("results", "soak_scale.json"),
+    os.path.join("rust", "results", "soak_scale.json"),
+]
+SOAK_SCALE_SCHEMA = "deltakws-soak-scale/1"
 
 SPARSITY_RE = re.compile(r"step_frame (scalar|simd) @ s=(\d+)")
 BATCHED_RE = re.compile(r"step_frames_batched x(\d+) @ s=(\d+)")
@@ -189,7 +204,7 @@ def sparsity_curve(sweep_cases):
 
 def validate_metrics(doc):
     """Check a metrics-snapshot JSON document against the pinned
-    deltakws-metrics/2 schema. Returns a list of problems (empty = valid)."""
+    deltakws-metrics/3 schema. Returns a list of problems (empty = valid)."""
     problems = []
     if not isinstance(doc, dict):
         return ["document is not a JSON object"]
@@ -205,6 +220,7 @@ def validate_metrics(doc):
         "activity",
         "latency_us",
         "chunk_latency_us",
+        "sched_latency_us",
         "enroll_latency_us",
         "per_worker",
         "recorder",
@@ -220,7 +236,9 @@ def validate_metrics(doc):
             "labelled",
             "rejected_full",
             "rejected_closed",
-            "spilled",
+            "steals",
+            "park_transitions",
+            "shed_overloaded",
             "fused_batches",
             "stream_events_dropped",
             "weight_swaps",
@@ -234,6 +252,8 @@ def validate_metrics(doc):
         for key in (
             "accuracy",
             "session_bytes",
+            "sessions_parked",
+            "sessions_runnable",
             "telemetry_bytes",
             "resident_weight_versions",
         ):
@@ -248,7 +268,12 @@ def validate_metrics(doc):
                 problems.append(f"missing activity.{key}")
     else:
         problems.append("activity is not an object")
-    for hist in ("latency_us", "chunk_latency_us", "enroll_latency_us"):
+    for hist in (
+        "latency_us",
+        "chunk_latency_us",
+        "sched_latency_us",
+        "enroll_latency_us",
+    ):
         h = doc.get(hist)
         if not isinstance(h, dict):
             problems.append(f"{hist} is not an object")
@@ -354,6 +379,49 @@ def ingest_enroll_metrics(report):
     print(f"ingested enroll metrics {path} "
           f"({doc.get('steps')} steps in {doc.get('enroll_us')} us, "
           f"swap {doc.get('swap_latency_us')} us)")
+
+
+def ingest_soak_scale(report):
+    """Attach the scale-soak cells from `examples/soak.rs -- scale` as
+    report["scheduler"]. The largest cell's headline numbers are
+    flattened next to the raw cells so diff_baseline can track them as
+    scalars. Non-fatal: missing or mis-schema'd files leave the key out."""
+    existing = [p for p in SOAK_SCALE_CANDIDATES if os.path.exists(p)]
+    if not existing:
+        print("no scale-soak artifact found; skipping ingest")
+        return
+    path = max(existing, key=os.path.getmtime)
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"scale-soak artifact {path} unreadable ({e}); skipping ingest")
+        return
+    if doc.get("schema") != SOAK_SCALE_SCHEMA:
+        print(f"scale-soak artifact {path} schema {doc.get('schema')!r} != "
+              f"{SOAK_SCALE_SCHEMA!r}; skipping ingest")
+        return
+    cells = doc.get("cells", [])
+    if not cells:
+        print(f"scale-soak artifact {path} has no cells; skipping ingest")
+        return
+    head = max(cells, key=lambda c: c.get("sessions", 0))
+    report["scheduler"] = {
+        "schema": SOAK_SCALE_SCHEMA,
+        "cells": cells,
+        # headline scalars from the largest cell, tracked vs baseline
+        "sessions": head.get("sessions"),
+        "sessions_per_core": head.get("sessions_per_core"),
+        "chunk_p99_us": head.get("chunk_p99_us"),
+        "sched_p99_us": head.get("sched_p99_us"),
+        "chunks_per_sec": head.get("chunks_per_sec"),
+        "steals": head.get("steals"),
+        "park_transitions": head.get("park_transitions"),
+    }
+    print(f"ingested scale-soak artifact {path} "
+          f"({len(cells)} cell(s), largest {head.get('sessions')} sessions: "
+          f"chunk p99 {head.get('chunk_p99_us')} us, "
+          f"sched p99 {head.get('sched_p99_us')} us)")
 
 
 def build_report(cases, issue):
@@ -472,6 +540,12 @@ def diff_baseline(report, baseline_path):
         # two customization numbers worth a trajectory
         "customization.us_per_step": ("customization", "us_per_step"),
         "customization.swap_latency_us": ("customization", "swap_latency_us"),
+        # the v3 scheduler's headline numbers: tail latency under the
+        # parked-session mass, and how far one core's attention stretches
+        "scheduler.chunk_p99_us": ("scheduler", "chunk_p99_us"),
+        "scheduler.sched_p99_us": ("scheduler", "sched_p99_us"),
+        "scheduler.sessions_per_core": ("scheduler", "sessions_per_core"),
+        "scheduler.chunks_per_sec": ("scheduler", "chunks_per_sec"),
     }
     ratios = {}
     for name, keys in tracked.items():
@@ -512,7 +586,7 @@ def main():
         "--validate-metrics",
         default=None,
         metavar="PATH",
-        help="validate a metrics snapshot against the deltakws-metrics/2 "
+        help="validate a metrics snapshot against the deltakws-metrics/3 "
         "schema and exit (no benches run)",
     )
     args = ap.parse_args()
@@ -557,6 +631,7 @@ def main():
     ingest_metrics_snapshot(report)
     ingest_lint_report(report)
     ingest_enroll_metrics(report)
+    ingest_soak_scale(report)
 
     baseline = args.baseline
     if baseline == "auto":
@@ -587,6 +662,12 @@ def main():
         print(f"simd speedup vs sparsity: {pts}")
     if "soak_decisions_per_sec" in report:
         print(f"soak decisions/sec: {report['soak_decisions_per_sec']}")
+    sched = report.get("scheduler")
+    if sched:
+        print(f"scheduler: {sched.get('sessions')} sessions "
+              f"({sched.get('sessions_per_core')}/core), "
+              f"chunk p99 {sched.get('chunk_p99_us')} us, "
+              f"sched p99 {sched.get('sched_p99_us')} us")
     return 0
 
 
